@@ -1,0 +1,260 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): batched CNN
+//! inference through the full three-layer stack.
+//!
+//! The graph is the layer-wise MNIST CNN; conv/FC layers are weight-fixed
+//! FPGA roles (the paper's "fix layer weights to have more efficient
+//! hardware"), relu/pool stay on the CPU. A synthetic MNIST-like dataset
+//! (blob-per-class) is classified; because the network is random-weight,
+//! the interesting outputs are latency/throughput, reconfiguration
+//! behaviour, and the cross-check that FPGA-path logits equal the
+//! CPU-baseline logits and (when artifacts exist) the AOT PJRT module.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example mnist_e2e
+//! ```
+
+use tf_fpga::hsa::agent::DeviceType;
+use tf_fpga::tf::dtype::DType;
+use tf_fpga::tf::graph::{Graph, NodeId, OpKind};
+use tf_fpga::tf::session::{Session, SessionOptions};
+use tf_fpga::tf::tensor::Tensor;
+use tf_fpga::util::prng::Rng;
+use tf_fpga::util::stats::Summary;
+
+const BATCH: usize = 32;
+const BATCHES: usize = 32;
+
+/// Layer-wise CNN over one image (the multi-dispatch path the paper's
+/// toolflow produces: one registered kernel per layer).
+fn cnn_graph() -> anyhow::Result<(Graph, NodeId)> {
+    let mut g = Graph::new();
+    let x = g.placeholder("x", &[1, 28, 28], DType::F32).map_err(ae)?;
+    let c1 = g
+        .add(
+            "conv1",
+            OpKind::ConvFixedF32 {
+                weights: "cnn/conv1".into(),
+                filters: 2,
+                cin: 1,
+                kh: 3,
+                kw: 3,
+            },
+            &[x],
+        )
+        .map_err(ae)?;
+    let r1 = g.add("relu1", OpKind::Relu, &[c1]).map_err(ae)?;
+    let p1 = g.add("pool1", OpKind::MaxPool2, &[r1]).map_err(ae)?;
+    let c2 = g
+        .add(
+            "conv2",
+            OpKind::ConvFixedF32 {
+                weights: "cnn/conv2".into(),
+                filters: 4,
+                cin: 2,
+                kh: 5,
+                kw: 5,
+            },
+            &[p1],
+        )
+        .map_err(ae)?;
+    let r2 = g.add("relu2", OpKind::Relu, &[c2]).map_err(ae)?;
+    let p2 = g.add("pool2", OpKind::MaxPool2, &[r2]).map_err(ae)?;
+    let fl = g
+        .add("flat", OpKind::Reshape { shape: vec![1, 64] }, &[p2])
+        .map_err(ae)?;
+    let f1 = g
+        .add(
+            "fc1",
+            OpKind::FcFixed {
+                weights_w: "cnn/fc1_w".into(),
+                weights_b: "cnn/fc1_b".into(),
+                out_width: 32,
+            },
+            &[fl],
+        )
+        .map_err(ae)?;
+    let r3 = g.add("relu3", OpKind::Relu, &[f1]).map_err(ae)?;
+    let f2 = g
+        .add(
+            "logits",
+            OpKind::FcFixed {
+                weights_w: "cnn/fc2_w".into(),
+                weights_b: "cnn/fc2_b".into(),
+                out_width: 10,
+            },
+            &[r3],
+        )
+        .map_err(ae)?;
+    Ok((g, f2))
+}
+
+/// Synthetic MNIST-like data: class k = a Gaussian blob centred at one of
+/// 10 fixed positions plus noise. Real pixels, deterministic labels.
+fn synthetic_digit(rng: &mut Rng, class: usize) -> Vec<f32> {
+    let centers = [
+        (7.0, 7.0), (7.0, 14.0), (7.0, 21.0), (14.0, 7.0), (14.0, 14.0),
+        (14.0, 21.0), (21.0, 7.0), (21.0, 14.0), (21.0, 21.0), (10.0, 18.0),
+    ];
+    let (cy, cx) = centers[class];
+    let mut img = vec![0f32; 784];
+    for y in 0..28 {
+        for x in 0..28 {
+            let d2 = (y as f32 - cy).powi(2) + (x as f32 - cx).powi(2);
+            img[y * 28 + x] =
+                (-d2 / 18.0).exp() * 2.0 + rng.normal() as f32 * 0.05;
+        }
+    }
+    img
+}
+
+fn ae(e: tf_fpga::hsa::error::HsaError) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== MNIST end-to-end driver (full stack) ===\n");
+
+    // --- sessions: FPGA-placed and CPU baseline, identical graphs ---
+    // 4 PR regions so the CNN's four weight-fixed roles stay resident (the
+    // 2-region default would LRU-thrash: conv1->conv2->fc1->fc2 cycles; we
+    // show that contrast at the end).
+    let (g, _) = cnn_graph()?;
+    let t0 = std::time::Instant::now();
+    let fpga_sess = Session::new(
+        g.clone(),
+        SessionOptions { num_regions: 4, ..SessionOptions::default() },
+    )
+    .map_err(ae)?;
+    println!("FPGA session setup: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    let cpu_sess = Session::new(g.clone(), SessionOptions::cpu_baseline()).map_err(ae)?;
+
+    // Per-layer placement report.
+    println!("\nplacement:");
+    for node in fpga_sess.graph().nodes() {
+        if let Some(dev) = fpga_sess.placement().device_of(node.id) {
+            println!("  {:8} -> {dev}", node.name);
+        }
+    }
+
+    // --- batched inference (layer-wise graph, image at a time) ---
+    let mut rng = Rng::new(2026);
+    let mut lat_us = Vec::new();
+    let mut correct_consistency = 0usize;
+    let mut total = 0usize;
+    let mut class_hits = vec![0usize; 10];
+
+    let t_run = std::time::Instant::now();
+    for _ in 0..BATCHES {
+        for _ in 0..BATCH {
+            let class = (rng.below(10)) as usize;
+            let img = synthetic_digit(&mut rng, class);
+            let x = Tensor::from_f32(&[1, 28, 28], img).unwrap();
+            let t1 = std::time::Instant::now();
+            let out = fpga_sess.run(&[("x", x.clone())], &["logits"]).map_err(ae)?;
+            lat_us.push(t1.elapsed().as_secs_f64() * 1e6);
+            let cpu_out = cpu_sess.run(&[("x", x)], &["logits"]).map_err(ae)?;
+            // FPGA numerics must equal the CPU oracle bit-for-bit (same
+            // kernels, different devices).
+            let diff = out[0].max_abs_diff(&cpu_out[0]).map_err(|e| anyhow::anyhow!("{e}"))?;
+            assert!(diff < 1e-4, "FPGA/CPU divergence {diff}");
+            correct_consistency += 1;
+            let logits = out[0].as_f32().map_err(|e| anyhow::anyhow!("{e}"))?;
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            class_hits[pred] += 1;
+            total += 1;
+        }
+    }
+    let wall = t_run.elapsed().as_secs_f64();
+
+    let s = Summary::from_values(&lat_us);
+    println!("\n--- results ({} images) ---", total);
+    println!(
+        "latency/image: mean {:.2} ms  p50 {:.2}  p99 {:.2}  max {:.2} ms",
+        s.mean / 1e3,
+        s.p50 / 1e3,
+        s.p99 / 1e3,
+        s.max / 1e3
+    );
+    println!("throughput: {:.0} img/s (wall {:.1} s)", total as f64 / wall, wall);
+    println!("FPGA==CPU consistency: {}/{}", correct_consistency, total);
+    println!("prediction distribution: {class_hits:?}");
+
+    let rs = fpga_sess.reconfig_stats();
+    println!(
+        "\nreconfiguration: {} dispatches, hit rate {:.2}%, {} reconfigs, {:.1} ms modeled PCAP time",
+        rs.dispatches,
+        100.0 * rs.hit_rate(),
+        rs.misses,
+        rs.reconfig_us_total as f64 / 1e3
+    );
+    println!(
+        "fpga virtual time: {:.1} ms; cpu(A53 model) virtual time: {:.1} ms",
+        agent_ms(fpga_sess.fpga_agent().as_ref()),
+        agent_ms(cpu_sess.cpu_agent().as_ref()),
+    );
+
+    // --- the paper's region trade-off: same graph on 2 regions thrashes ---
+    let thrash_sess = Session::new(
+        g,
+        SessionOptions { num_regions: 2, use_pjrt: false, ..SessionOptions::default() },
+    )
+    .map_err(ae)?;
+    let mut v = vec![0f32; 784];
+    rng.fill_f32_normal(&mut v, 0.0, 1.0);
+    let x = Tensor::from_f32(&[1, 28, 28], v).unwrap();
+    for _ in 0..16 {
+        thrash_sess.run(&[("x", x.clone())], &["logits"]).map_err(ae)?;
+    }
+    let ts = thrash_sess.reconfig_stats();
+    println!(
+        "\n2-region contrast (paper's role-count trade-off): hit rate {:.1}% vs {:.1}% with 4 regions",
+        100.0 * ts.hit_rate(),
+        100.0 * rs.hit_rate()
+    );
+    thrash_sess.shutdown();
+
+    // --- whole-model dispatch path (one role per batch, PJRT-backed) ---
+    println!("\n--- whole-model role (mnist_cnn, batch {BATCH}) ---");
+    let mut g2 = Graph::new();
+    let x2 = g2.placeholder("x", &[BATCH, 1, 28, 28], DType::F32).map_err(ae)?;
+    g2.add("logits", OpKind::MnistCnn, &[x2]).map_err(ae)?;
+    let batch_sess = Session::new(g2, SessionOptions::default()).map_err(ae)?;
+    let mut batch_lat = Vec::new();
+    for _ in 0..BATCHES {
+        let mut imgs = Vec::with_capacity(BATCH * 784);
+        for _ in 0..BATCH {
+            let class = (rng.below(10)) as usize;
+            imgs.extend(synthetic_digit(&mut rng, class));
+        }
+        let x = Tensor::from_f32(&[BATCH, 1, 28, 28], imgs).unwrap();
+        let t1 = std::time::Instant::now();
+        let _ = batch_sess.run(&[("x", x)], &["logits"]).map_err(ae)?;
+        batch_lat.push(t1.elapsed().as_secs_f64() * 1e6);
+    }
+    let bs = Summary::from_values(&batch_lat);
+    println!(
+        "batch latency: mean {:.2} ms  p99 {:.2} ms  throughput {:.0} img/s",
+        bs.mean / 1e3,
+        bs.p99 / 1e3,
+        BATCH as f64 / (bs.mean / 1e6)
+    );
+    println!(
+        "whole-model path used PJRT artifact: {}",
+        batch_sess.weights().from_artifacts
+    );
+
+    fpga_sess.shutdown();
+    cpu_sess.shutdown();
+    batch_sess.shutdown();
+    println!("\nOK");
+    Ok(())
+}
+
+fn agent_ms(a: &dyn tf_fpga::hsa::agent::Agent) -> f64 {
+    a.virtual_time_ns() as f64 / 1e6
+}

@@ -1,0 +1,69 @@
+//! Quickstart: build a small graph, let the placer put the FC on the FPGA,
+//! run it, and inspect the reconfiguration stats.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use tf_fpga::hsa::agent::DeviceType;
+use tf_fpga::tf::dtype::DType;
+use tf_fpga::tf::graph::{Graph, OpKind};
+use tf_fpga::tf::session::{Session, SessionOptions};
+use tf_fpga::tf::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Build a graph the way a TF user would: x -> FC -> relu.
+    let mut g = Graph::new();
+    let x = g.placeholder("x", &[2, 4], DType::F32).map_err(err)?;
+    let w = g
+        .constant(
+            "w",
+            Tensor::from_f32(&[4, 3], (0..12).map(|i| 0.1 * i as f32).collect())
+                .map_err(terr)?,
+        )
+        .map_err(err)?;
+    let b = g
+        .constant("b", Tensor::from_f32(&[3], vec![0.5, 0.0, -0.5]).map_err(terr)?)
+        .map_err(err)?;
+    let y = g.add("y", OpKind::FullyConnected, &[x, w, b]).map_err(err)?;
+    g.add("out", OpKind::Relu, &[y]).map_err(err)?;
+
+    // Optional: pin the FC to the FPGA explicitly (the paper's
+    // `with tf.device(...)` annotation). Without this the placer would
+    // pick the FPGA anyway because an FPGA kernel is registered.
+    g.set_device(y, DeviceType::Fpga);
+
+    // 2. One Session bring-up = the paper's "device/kernel setup".
+    let sess = Session::new(g, SessionOptions::default()).map_err(err)?;
+    println!(
+        "session ready in {:.1} ms (PJRT compile {:.1} ms)",
+        sess.setup_timing().total_us as f64 / 1000.0,
+        sess.setup_timing().pjrt_compile_us as f64 / 1000.0,
+    );
+
+    // 3. Run. First dispatch partially reconfigures an FPGA region with the
+    //    FC role; later dispatches hit the resident role.
+    let input = Tensor::from_f32(&[2, 4], vec![1.0, 2.0, 3.0, 4.0, -1.0, -2.0, -3.0, -4.0])
+        .map_err(terr)?;
+    for i in 0..3 {
+        let out = sess.run(&[("x", input.clone())], &["out"]).map_err(err)?;
+        println!("run {i}: out = {:?}", out[0].as_f32().map_err(terr)?);
+    }
+
+    let s = sess.reconfig_stats();
+    println!(
+        "fpga stats: {} dispatches, {} hits, {} misses, {} µs reconfiguration (modeled)",
+        s.dispatches, s.hits, s.misses, s.reconfig_us_total
+    );
+    assert_eq!(s.misses, 1, "role loads once, then stays resident");
+    sess.shutdown();
+    Ok(())
+}
+
+fn err(e: tf_fpga::hsa::error::HsaError) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}
+
+fn terr(e: tf_fpga::tf::tensor::TensorError) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}

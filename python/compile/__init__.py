@@ -1,0 +1,6 @@
+"""Build-time compile package: L2 jax model + L1 Pallas kernels + AOT driver.
+
+Nothing in here runs on the request path; ``make artifacts`` invokes
+``python -m compile.aot`` once and the Rust binary consumes the HLO text
+files it produces.
+"""

@@ -1,0 +1,103 @@
+"""AOT driver: lower every L2 entry point to HLO *text* + write a manifest.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the Rust ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+Outputs:
+    artifacts/<name>.hlo.txt     one per entry point
+    artifacts/weights/<name>.bin raw little-endian weight blobs (for the
+                                 Rust native CPU baseline)
+    artifacts/manifest.json      shapes/dtypes/files, read by rust runtime
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+_DTYPES = {
+    "f32": np.float32,
+    "i16": np.int16,
+    "i32": np.int32,
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is essential: the default elides big dense
+    # constants as `constant({...})`, which the 0.5.1 text parser silently
+    # reads back as zeros — fixed weights baked into a model would vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_entry(name: str):
+    spec = model.ROLE_SHAPES[name]
+    fn = model.ENTRY_POINTS[name]
+    args = [
+        jax.ShapeDtypeStruct(shape, _DTYPES[dt]) for _, shape, dt in spec["inputs"]
+    ]
+    return jax.jit(fn).lower(*args)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", nargs="*", default=None, help="subset of entry points"
+    )
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+    wdir = os.path.join(ns.out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+
+    names = ns.only or list(model.ENTRY_POINTS)
+    manifest = {"version": 1, "seed": model.SEED, "modules": {}, "weights": {}}
+
+    for name in names:
+        spec = model.ROLE_SHAPES[name]
+        hlo = to_hlo_text(lower_entry(name))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(ns.out_dir, fname), "w") as f:
+            f.write(hlo)
+        out_shape, out_dt = spec["output"]
+        manifest["modules"][name] = {
+            "file": fname,
+            "inputs": [
+                {"name": n, "shape": list(s), "dtype": d}
+                for n, s, d in spec["inputs"]
+            ],
+            "output": {"shape": list(out_shape), "dtype": out_dt},
+            # return_tuple=True => rust must unwrap a 1-tuple
+            "tuple_output": True,
+        }
+        print(f"lowered {name:18s} -> {fname} ({len(hlo)} chars)")
+
+    for key, arr in model.role_weights().items():
+        fname = key.replace("/", "_") + ".bin"
+        arr.tofile(os.path.join(wdir, fname))
+        manifest["weights"][key] = {
+            "file": f"weights/{fname}",
+            "shape": list(arr.shape),
+            "dtype": {"float32": "f32", "int16": "i16"}[str(arr.dtype)],
+        }
+
+    manifest["conv_shift"] = model.CONV_SHIFT
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['modules'])} modules")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for the four paper roles (+ generic variants).
+
+Role 1  fc            - fully connected, float32
+Role 2  fc_barrier    - fully connected with an explicit barrier phase, float32
+Role 3  conv 5x5      - 1 filter, fixed weights, int16
+Role 4  conv 3x3      - 2 filters, fixed weights, int16
+
+All kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); the BlockSpecs still express the HBM<->VMEM schedule a
+real TPU lowering would use — see DESIGN.md "Hardware adaptation".
+"""
+
+from .fc import fc, fc_barrier
+from .conv import make_fixed_conv, conv_fixed_i16, conv_fixed_f32
+
+__all__ = [
+    "fc",
+    "fc_barrier",
+    "make_fixed_conv",
+    "conv_fixed_i16",
+    "conv_fixed_f32",
+]

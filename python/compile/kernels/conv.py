@@ -1,0 +1,123 @@
+"""Pallas fixed-weight convolution kernels (paper roles 3 and 4).
+
+The paper's conv roles bake the filter weights into the bitstream
+("fixed weights" — constant multipliers become shift/add LUT logic, which
+is why Table I shows so few DSPs for a 25-tap filter). We mirror that: the
+weights are *compile-time constants* closed over by the kernel, so they
+lower into the HLO as literals, exactly like a weight-fixed datapath.
+
+Layout: x is (C, H, W); the kernel produces (F, OH, OW) with
+OH = H - KH + 1, OW = W - KW + 1 ("valid" convolution, cross-correlation
+orientation like TF). int16 inputs accumulate in int32 and are rescaled by
+an arithmetic right shift, then saturated back to int16 — the standard
+fixed-point pipeline of an FPGA MAC tree.
+
+The grid runs over output-row bands so each step works on a (C, band+KH-1, W)
+input window in VMEM — the Pallas analogue of the FPGA role's line buffer
+(the BlockSpec index_map implements the sliding window the AXI burst
+scheduler would perform).
+"""
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_I16_MIN = -32768
+_I16_MAX = 32767
+
+
+def _conv_band_kernel(x_ref, o_ref, *, weights, acc_dtype, out_dtype, shift):
+    """One output band: direct-form conv as KH*KW shifted tensordots."""
+    x = x_ref[...].astype(acc_dtype)  # (C, band + KH - 1, W)
+    f, c, kh, kw = weights.shape
+    oh = o_ref.shape[1]
+    ow = o_ref.shape[2]
+    # Fully unrolled tap loop with *Python-scalar* taps: Pallas forbids the
+    # kernel from closing over array constants, and scalar immediates are
+    # exactly what fixed weights become on the FPGA — each tap is its own
+    # constant multiplier (zero taps are elided outright, the same dead
+    # logic the synthesizer would trim). One tap == one MAC-tree stage.
+    planes = []
+    for fi in range(f):
+        acc = jnp.zeros((oh, ow), acc_dtype)
+        for ci in range(c):
+            xc = x[ci]
+            for a in range(kh):
+                for b in range(kw):
+                    tap = weights[fi, ci, a, b].item()
+                    if tap == 0:
+                        continue
+                    acc = acc + xc[a : a + oh, b : b + ow] * tap
+        planes.append(acc)
+    acc = jnp.stack(planes)
+    if shift:
+        acc = jnp.right_shift(acc, shift)
+    if out_dtype == jnp.int16:
+        acc = jnp.clip(acc, _I16_MIN, _I16_MAX)
+    o_ref[...] = acc.astype(out_dtype)
+
+
+def make_fixed_conv(weights, *, in_dtype, acc_dtype, out_dtype, shift=0,
+                    band=8):
+    """Build a fixed-weight conv: ``x (C,H,W) -> (F, H-KH+1, W-KW+1)``.
+
+    weights: numpy/jnp array (F, C, KH, KW), baked as HLO constants.
+    shift:   arithmetic right shift applied to the accumulator (fixed-point
+             rescale); 0 for float.
+    band:    output rows computed per grid step (line-buffer height).
+    """
+    weights = np.asarray(weights)
+    f, c, kh, kw = weights.shape
+
+    kernel = functools.partial(
+        _conv_band_kernel,
+        weights=weights,
+        acc_dtype=acc_dtype,
+        out_dtype=out_dtype,
+        shift=shift,
+    )
+
+    def conv(x):
+        cc, h, w = x.shape
+        assert cc == c, f"expected {c} input channels, got {cc}"
+        assert x.dtype == in_dtype, f"expected {in_dtype}, got {x.dtype}"
+        oh, ow = h - kh + 1, w - kw + 1
+        assert oh > 0 and ow > 0, "input smaller than the filter"
+        # Whole image per call: (C,H,W) fits VMEM for the paper's sizes
+        # (28x28 int16 = 1.5 KiB; even 224x224x3 f32 = 588 KiB < 16 MiB VMEM).
+        # Overlapping line-buffer banding (the FPGA schedule) is documented
+        # in DESIGN.md; BlockSpec windows must not overlap, so banding would
+        # use a halo-exchange scratch — unnecessary at these sizes.
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((f, oh, ow), out_dtype),
+            interpret=True,
+        )(x)
+
+    return conv
+
+
+def conv_fixed_i16(weights, shift=8):
+    """Fixed-weight int16 conv (roles 3 and 4): i32 accumulate, >>shift,
+    saturate to int16."""
+    return make_fixed_conv(
+        weights,
+        in_dtype=jnp.int16,
+        acc_dtype=jnp.int32,
+        out_dtype=jnp.int16,
+        shift=shift,
+    )
+
+
+def conv_fixed_f32(weights):
+    """Float32 variant of the fixed-weight conv (used by the MNIST CNN)."""
+    return make_fixed_conv(
+        weights,
+        in_dtype=jnp.float32,
+        acc_dtype=jnp.float32,
+        out_dtype=jnp.float32,
+        shift=0,
+    )

@@ -1,0 +1,128 @@
+"""Pallas fully-connected kernels (paper roles 1 and 2).
+
+Role 1 (``fc``) is a blocked matmul + bias: the grid iterates over
+(M/bm, N/bn, K/bk) tiles, accumulating partial products directly into the
+output block. This mirrors the FPGA role's MAC array streaming K.
+
+Role 2 (``fc_barrier``) is the same computation with an explicit *barrier*
+between the accumulation phase and the write-back phase: partial sums live
+in a VMEM scratch accumulator and only after the final K step (the barrier
+point, where every PE's partial product must have arrived) is the biased
+result committed to HBM. On the paper's FPGA datapath this barrier is the
+synchronization stage of the multi-PE reduction tree; on TPU it is the
+``@pl.when(last_k)`` gated write-back from VMEM scratch.
+
+Tiling: blocks are MXU-shaped (up to 128x128). Dimensions smaller than the
+block take the full dimension; larger dimensions must be multiples of the
+block (asserted) so no masked partial tiles are needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-flavored scratch memory spaces work under interpret=True too
+    from jax.experimental.pallas import tpu as pltpu
+
+    _HAVE_PLTPU = True
+except ImportError:  # pragma: no cover
+    _HAVE_PLTPU = False
+
+_MAX_BLOCK = 128
+
+
+def _block(dim: int, cap: int = _MAX_BLOCK) -> int:
+    """Pick a tile size: the whole dim if small, else the cap (must divide)."""
+    if dim <= cap:
+        return dim
+    if dim % cap != 0:
+        raise ValueError(
+            f"dimension {dim} must be a multiple of the {cap} tile; "
+            "pad inputs at the caller"
+        )
+    return cap
+
+
+def _fc_kernel(x_ref, w_ref, b_ref, o_ref):
+    """Role 1: accumulate x@w tiles into o, seeding with the bias."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _seed():
+        o_ref[...] = jnp.broadcast_to(b_ref[...], o_ref.shape)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _fc_barrier_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref):
+    """Role 2: accumulate into VMEM scratch; barrier, then write back."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    # ---- barrier: every partial product for this (i, j) tile has landed ----
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _commit():
+        o_ref[...] = acc_ref[...] + b_ref[...][None, :]
+
+
+def _fc_call(kernel, x, w, b, *, barrier: bool):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm, bk, bn = _block(m), _block(k), _block(n)
+    grid = (m // bm, n // bn, k // bk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+    ]
+    out_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    scratch = []
+    if barrier:
+        if _HAVE_PLTPU:
+            scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+        else:  # pragma: no cover
+            scratch = [pl.ANY((bm, bn), jnp.float32)]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=scratch,
+        interpret=True,
+    )(x, w, b)
+
+
+@jax.jit
+def fc(x, w, b):
+    """Role 1 — fully connected, float32: ``x @ w + b``.
+
+    x: (M, K) f32, w: (K, N) f32, b: (N,) f32 -> (M, N) f32.
+    """
+    return _fc_call(_fc_kernel, x, w, b, barrier=False)
+
+
+@jax.jit
+def fc_barrier(x, w, b):
+    """Role 2 — fully connected with barrier, float32 (same math as role 1).
+
+    Numerically identical to :func:`fc`; structurally the accumulation is
+    staged in VMEM scratch and committed only after the barrier (last K
+    step), matching the paper's barrier-synchronized FC datapath.
+    """
+    return _fc_call(_fc_barrier_kernel, x, w, b, barrier=True)

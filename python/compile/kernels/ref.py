@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references by
+``python/tests/``; the same semantics are re-implemented natively in Rust
+(``rust/src/ops/``) so the request path can cross-check PJRT numerics.
+"""
+
+import jax.numpy as jnp
+
+_I16_MIN = -32768
+_I16_MAX = 32767
+
+
+def fc_ref(x, w, b):
+    """x (M,K) f32, w (K,N) f32, b (N,) f32 -> (M,N) f32."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+
+
+def conv_fixed_ref(x, weights, *, acc_dtype, out_dtype, shift=0):
+    """Direct-form valid cross-correlation with fixed weights.
+
+    x (C,H,W), weights (F,C,KH,KW) -> (F, H-KH+1, W-KW+1); accumulate in
+    ``acc_dtype``, arithmetic right shift by ``shift``, saturate when the
+    output type is int16.
+    """
+    x = jnp.asarray(x)
+    weights = jnp.asarray(weights)
+    f, c, kh, kw = weights.shape
+    _, h, w = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    xa = x.astype(acc_dtype)
+    acc = jnp.zeros((f, oh, ow), acc_dtype)
+    for a in range(kh):
+        for b in range(kw):
+            window = xa[:, a : a + oh, b : b + ow]
+            tap = weights[:, :, a, b].astype(acc_dtype)
+            acc = acc + jnp.tensordot(tap, window, axes=((1,), (0,)))
+    if shift:
+        acc = jnp.right_shift(acc, shift)
+    if out_dtype == jnp.int16:
+        acc = jnp.clip(acc, _I16_MIN, _I16_MAX)
+    return acc.astype(out_dtype)
+
+
+def conv_i16_ref(x, weights, shift=8):
+    return conv_fixed_ref(
+        x, weights, acc_dtype=jnp.int32, out_dtype=jnp.int16, shift=shift
+    )
+
+
+def conv_f32_ref(x, weights):
+    return conv_fixed_ref(
+        x, weights, acc_dtype=jnp.float32, out_dtype=jnp.float32, shift=0
+    )
+
+
+def relu_ref(x):
+    return jnp.maximum(x, 0)
+
+
+def maxpool2_ref(x):
+    """2x2 max pool, stride 2, over (C,H,W); trailing odd row/col dropped."""
+    c, h, w = x.shape
+    h2, w2 = h // 2, w // 2
+    x = x[:, : h2 * 2, : w2 * 2]
+    x = x.reshape(c, h2, 2, w2, 2)
+    return x.max(axis=(2, 4))

@@ -1,0 +1,189 @@
+"""Layer-2 jax model: the four paper roles as entry points + an MNIST CNN.
+
+Each entry point is a plain jax function built on the L1 Pallas kernels;
+``aot.py`` lowers them to HLO text that the Rust runtime loads via PJRT.
+
+Weights are *fixed* (paper: "fix layer weights to have more efficient
+hardware"): generated from a deterministic seed, baked into the HLO as
+constants, and also exported as raw binaries so the Rust CPU baseline can
+run the identical network natively.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import fc, fc_barrier, conv_fixed_i16, conv_fixed_f32
+from .kernels import ref
+
+SEED = 0x5EED_1027  # project number 16ES1027, per the paper's acknowledgment
+
+# ---------------------------------------------------------------------------
+# Deterministic fixed weights
+# ---------------------------------------------------------------------------
+
+
+def _rng(tag: str) -> np.random.Generator:
+    return np.random.default_rng([SEED, abs(hash(tag)) % (2**31)])
+
+
+def _rng_stable(tag: str) -> np.random.Generator:
+    # hash() is salted per-process for str; use a stable digest instead.
+    import zlib
+
+    return np.random.default_rng([SEED, zlib.crc32(tag.encode())])
+
+
+def role_weights():
+    """All fixed weights, keyed by name (numpy arrays, deterministic)."""
+    w = {}
+    g = _rng_stable("role1_fc")
+    w["role1/w"] = g.normal(0, 0.1, (64, 64)).astype(np.float32)
+    w["role1/b"] = g.normal(0, 0.1, (64,)).astype(np.float32)
+    g = _rng_stable("role2_fc_barrier")
+    w["role2/w"] = g.normal(0, 0.1, (64, 64)).astype(np.float32)
+    w["role2/b"] = g.normal(0, 0.1, (64,)).astype(np.float32)
+    g = _rng_stable("role3_conv5x5")
+    w["role3/w"] = g.integers(-128, 128, (1, 1, 5, 5)).astype(np.int16)
+    g = _rng_stable("role4_conv3x3")
+    w["role4/w"] = g.integers(-128, 128, (2, 1, 3, 3)).astype(np.int16)
+    # MNIST CNN (f32): conv3x3 x2f -> pool -> conv5x5 2c->4f -> pool -> fc -> fc
+    g = _rng_stable("mnist_cnn")
+    w["cnn/conv1"] = g.normal(0, 0.2, (2, 1, 3, 3)).astype(np.float32)
+    w["cnn/conv2"] = g.normal(0, 0.15, (4, 2, 5, 5)).astype(np.float32)
+    w["cnn/fc1_w"] = g.normal(0, 0.1, (64, 32)).astype(np.float32)
+    w["cnn/fc1_b"] = np.zeros(32, np.float32)
+    w["cnn/fc2_w"] = g.normal(0, 0.1, (32, 10)).astype(np.float32)
+    w["cnn/fc2_b"] = np.zeros(10, np.float32)
+    return w
+
+
+_W = role_weights()
+
+# Paper role workload shapes (see DESIGN.md §6): FC is 64x64x64; the conv
+# roles process a 28x28 feature map — the MNIST-scale workload the paper's
+# mobile use case targets.
+ROLE_SHAPES = {
+    # Roles 1/2 are *generic* FC datapaths (weights streamed at run time;
+    # the paper marks only the conv roles as weight-fixed).
+    "role1_fc": dict(
+        inputs=[
+            ("x", (64, 64), "f32"),
+            ("w", (64, 64), "f32"),
+            ("b", (64,), "f32"),
+        ],
+        output=((64, 64), "f32"),
+    ),
+    "role2_fc_barrier": dict(
+        inputs=[
+            ("x", (64, 64), "f32"),
+            ("w", (64, 64), "f32"),
+            ("b", (64,), "f32"),
+        ],
+        output=((64, 64), "f32"),
+    ),
+    "role3_conv5x5": dict(
+        inputs=[("x", (1, 28, 28), "i16")], output=((1, 24, 24), "i16")
+    ),
+    "role4_conv3x3": dict(
+        inputs=[("x", (1, 28, 28), "i16")], output=((2, 26, 26), "i16")
+    ),
+    "mnist_cnn": dict(
+        inputs=[("x", (32, 1, 28, 28), "f32")], output=((32, 10), "f32")
+    ),
+}
+
+CONV_SHIFT = 8  # fixed-point rescale of the int16 conv accumulator
+
+# ---------------------------------------------------------------------------
+# Role entry points (what gets AOT-lowered; weights are baked constants)
+# ---------------------------------------------------------------------------
+
+
+def role1_fc(x, w, b):
+    """Role 1: generic FC float32. x (64,64), w (64,64), b (64,) -> (64,64)."""
+    return fc(x, w, b)
+
+
+def role2_fc_barrier(x, w, b):
+    """Role 2: FC float32 with barrier-synchronized datapath (same math)."""
+    return fc_barrier(x, w, b)
+
+
+_conv3 = None
+_conv5 = None
+
+
+def _convs():
+    global _conv3, _conv5
+    if _conv3 is None:
+        _conv5 = conv_fixed_i16(_W["role3/w"], shift=CONV_SHIFT)
+        _conv3 = conv_fixed_i16(_W["role4/w"], shift=CONV_SHIFT)
+    return _conv3, _conv5
+
+
+def role3_conv5x5(x):
+    """Role 3: conv 5x5, 1 filter, fixed weights, int16. (1,28,28)->(1,24,24)."""
+    _, c5 = _convs()
+    return c5(x)
+
+
+def role4_conv3x3(x):
+    """Role 4: conv 3x3, 2 filters, fixed weights, int16. (1,28,28)->(2,26,26)."""
+    c3, _ = _convs()
+    return c3(x)
+
+
+# ---------------------------------------------------------------------------
+# MNIST-style CNN (the end-to-end workload): all compute via Pallas kernels
+# ---------------------------------------------------------------------------
+
+
+def _cnn_single(x):
+    """x (1,28,28) f32 -> logits (10,) f32."""
+    conv1 = conv_fixed_f32(_W["cnn/conv1"])  # (2,26,26)
+    conv2 = conv_fixed_f32(_W["cnn/conv2"])  # (4,9,9)
+    h = conv1(x)
+    h = ref.relu_ref(h)
+    h = ref.maxpool2_ref(h)  # (2,13,13)
+    h = conv2(h)
+    h = ref.relu_ref(h)
+    h = ref.maxpool2_ref(h)  # (4,4,4)
+    h = h.reshape(1, 64)
+    h = fc(h, jnp.asarray(_W["cnn/fc1_w"]), jnp.asarray(_W["cnn/fc1_b"]))
+    h = ref.relu_ref(h)
+    h = fc(h, jnp.asarray(_W["cnn/fc2_w"]), jnp.asarray(_W["cnn/fc2_b"]))
+    return h[0]
+
+
+def mnist_cnn(x):
+    """Batched CNN inference. x (B,1,28,28) f32 -> (B,10) f32 logits."""
+    return jax.vmap(_cnn_single)(x)
+
+
+# Reference (pure-jnp, no Pallas) for the full CNN — the L2-level oracle.
+
+
+def _cnn_single_ref(x):
+    h = ref.conv_f32_ref(x, _W["cnn/conv1"])
+    h = ref.maxpool2_ref(ref.relu_ref(h))
+    h = ref.conv_f32_ref(h, _W["cnn/conv2"])
+    h = ref.maxpool2_ref(ref.relu_ref(h))
+    h = h.reshape(1, 64)
+    h = ref.fc_ref(h, _W["cnn/fc1_w"], _W["cnn/fc1_b"])
+    h = ref.relu_ref(h)
+    h = ref.fc_ref(h, _W["cnn/fc2_w"], _W["cnn/fc2_b"])
+    return h[0]
+
+
+def mnist_cnn_ref(x):
+    return jax.vmap(_cnn_single_ref)(x)
+
+
+ENTRY_POINTS = {
+    "role1_fc": role1_fc,
+    "role2_fc_barrier": role2_fc_barrier,
+    "role3_conv5x5": role3_conv5x5,
+    "role4_conv3x3": role4_conv3x3,
+    "mnist_cnn": mnist_cnn,
+}

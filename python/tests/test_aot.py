@@ -1,0 +1,63 @@
+"""AOT lowering regression tests.
+
+The critical one: HLO text must embed large constants verbatim.
+`as_hlo_text()`'s default elides them as `constant({...})`, which the Rust
+side's xla_extension 0.5.1 text parser silently reads back as *zeros* —
+baked weights would vanish (this bit us; see aot.py).
+"""
+
+import sys, os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_hlo_text_embeds_large_constants():
+    w = np.random.default_rng(0).normal(0, 1, (64, 32)).astype(np.float32)
+
+    def fn(x):
+        return (x @ jnp.asarray(w),)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((1, 64), jnp.float32))
+    txt = aot.to_hlo_text(lowered)
+    assert "constant({...})" not in txt, "elided constants would decode as zeros"
+    # A distinctive weight value must appear literally in the text.
+    assert f"f32[64,32]" in txt
+
+
+def test_all_entry_points_lower_without_elision():
+    for name in model.ENTRY_POINTS:
+        txt = aot.to_hlo_text(aot.lower_entry(name))
+        assert "{...}" not in txt, f"{name}: elided constant in HLO text"
+        assert "ENTRY" in txt, f"{name}: not HLO text?"
+
+
+def test_entry_point_shapes_match_manifest_decl():
+    _DT = {"f32": np.float32, "i16": np.int16, "i32": np.int32}
+    for name, spec in model.ROLE_SHAPES.items():
+        fn = model.ENTRY_POINTS[name]
+        args = [
+            np.zeros(shape, _DT[dt]) for _, shape, dt in spec["inputs"]
+        ]
+        out = fn(*args)
+        out_shape, out_dt = spec["output"]
+        assert tuple(out.shape) == tuple(out_shape), f"{name}: {out.shape}"
+        assert out.dtype == _DT[out_dt], f"{name}: {out.dtype}"
+
+
+def test_conv_roles_bake_weights_as_constants():
+    """Conv roles take only the activation: weights must be baked."""
+    for name in ["role3_conv5x5", "role4_conv3x3"]:
+        spec = model.ROLE_SHAPES[name]
+        assert len(spec["inputs"]) == 1, f"{name} must be weight-fixed"
+
+
+def test_fc_roles_stream_weights_at_runtime():
+    for name in ["role1_fc", "role2_fc_barrier"]:
+        spec = model.ROLE_SHAPES[name]
+        assert len(spec["inputs"]) == 3, f"{name} is a generic FC datapath"

@@ -1,0 +1,136 @@
+"""L1 correctness: fixed-weight Pallas conv kernels vs the jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import sys, os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.kernels import conv_fixed_i16, conv_fixed_f32, make_fixed_conv
+from compile.kernels.ref import conv_i16_ref, conv_f32_ref
+
+
+def _w_i16(f, c, kh, kw, seed):
+    return (
+        np.random.default_rng(seed).integers(-128, 128, (f, c, kh, kw))
+        .astype(np.int16)
+    )
+
+
+def _x_i16(c, h, w, seed):
+    return (
+        np.random.default_rng(seed).integers(-256, 256, (c, h, w))
+        .astype(np.int16)
+    )
+
+
+class TestConvFixedI16:
+    def test_role3_shape(self):
+        w = _w_i16(1, 1, 5, 5, 0)
+        out = conv_fixed_i16(w)(_x_i16(1, 28, 28, 1))
+        assert out.shape == (1, 24, 24)
+        assert out.dtype == jnp.int16
+
+    def test_role3_matches_ref(self):
+        w = _w_i16(1, 1, 5, 5, 2)
+        x = _x_i16(1, 28, 28, 3)
+        np.testing.assert_array_equal(conv_fixed_i16(w)(x), conv_i16_ref(x, w))
+
+    def test_role4_shape(self):
+        w = _w_i16(2, 1, 3, 3, 4)
+        out = conv_fixed_i16(w)(_x_i16(1, 28, 28, 5))
+        assert out.shape == (2, 26, 26)
+
+    def test_role4_matches_ref(self):
+        w = _w_i16(2, 1, 3, 3, 6)
+        x = _x_i16(1, 28, 28, 7)
+        np.testing.assert_array_equal(conv_fixed_i16(w)(x), conv_i16_ref(x, w))
+
+    def test_saturation(self):
+        """Large inputs with shift=0 must clip to int16, not wrap."""
+        w = np.full((1, 1, 3, 3), 127, np.int16)
+        x = np.full((1, 8, 8), 32000, np.int16)
+        out = np.asarray(conv_fixed_i16(w, shift=0)(x))
+        assert (out == 32767).all()
+        out_neg = np.asarray(conv_fixed_i16(w, shift=0)(-x))
+        assert (out_neg == -32768).all()
+
+    def test_shift_rescale(self):
+        w = np.zeros((1, 1, 3, 3), np.int16)
+        w[0, 0, 1, 1] = 64  # identity tap * 64
+        x = _x_i16(1, 10, 10, 8)
+        out = np.asarray(conv_fixed_i16(w, shift=6)(x))  # *64 >> 6 == id
+        np.testing.assert_array_equal(out, x[:, 1:9, 1:9])
+
+    def test_wrong_channels_raises(self):
+        w = _w_i16(1, 2, 3, 3, 9)
+        with pytest.raises(AssertionError, match="channels"):
+            conv_fixed_i16(w)(_x_i16(1, 8, 8, 10))
+
+    def test_wrong_dtype_raises(self):
+        w = _w_i16(1, 1, 3, 3, 11)
+        with pytest.raises(AssertionError, match="expected"):
+            conv_fixed_i16(w)(np.zeros((1, 8, 8), np.float32))
+
+    def test_too_small_input_raises(self):
+        w = _w_i16(1, 1, 5, 5, 12)
+        with pytest.raises(AssertionError, match="smaller"):
+            conv_fixed_i16(w)(_x_i16(1, 4, 4, 13))
+
+
+class TestConvFixedF32:
+    def test_matches_ref(self):
+        g = np.random.default_rng(20)
+        w = g.normal(0, 1, (4, 2, 5, 5)).astype(np.float32)
+        x = g.normal(0, 1, (2, 13, 13)).astype(np.float32)
+        np.testing.assert_allclose(
+            conv_fixed_f32(w)(x), conv_f32_ref(x, w), rtol=1e-5, atol=1e-5
+        )
+
+    def test_identity_kernel(self):
+        w = np.zeros((1, 1, 1, 1), np.float32)
+        w[0, 0, 0, 0] = 1.0
+        x = np.random.default_rng(21).normal(0, 1, (1, 6, 6)).astype(np.float32)
+        np.testing.assert_allclose(conv_fixed_f32(w)(x), x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    f=st.integers(1, 3),
+    c=st.integers(1, 3),
+    kh=st.sampled_from([1, 3, 5]),
+    kw=st.sampled_from([1, 3, 5]),
+    h=st.integers(5, 20),
+    w=st.integers(5, 20),
+    shift=st.integers(0, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_i16_property(f, c, kh, kw, h, w, shift, seed):
+    weights = _w_i16(f, c, kh, kw, seed)
+    x = _x_i16(c, h, w, seed + 1)
+    got = conv_fixed_i16(weights, shift=shift)(x)
+    want = conv_i16_ref(x, weights, shift=shift)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    f=st.integers(1, 4),
+    c=st.integers(1, 3),
+    k=st.sampled_from([1, 3, 5]),
+    h=st.integers(6, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_f32_property(f, c, k, h, seed):
+    g = np.random.default_rng(seed)
+    weights = g.normal(0, 1, (f, c, k, k)).astype(np.float32)
+    x = g.normal(0, 1, (c, h, h)).astype(np.float32)
+    np.testing.assert_allclose(
+        conv_fixed_f32(weights)(x),
+        conv_f32_ref(x, weights),
+        rtol=1e-4,
+        atol=1e-4,
+    )

@@ -1,0 +1,99 @@
+"""L1 correctness: Pallas FC kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes; fixed cases pin the paper's role-1/2 workload.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import sys, os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.kernels import fc, fc_barrier
+from compile.kernels.ref import fc_ref
+
+# Dims: small arbitrary (<=128, taken whole as one block) or 128-multiples.
+_dim = st.one_of(
+    st.integers(1, 48),
+    st.sampled_from([64, 96, 128, 256]),
+)
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).normal(0, 1, shape).astype(np.float32)
+
+
+class TestFcFixed:
+    def test_role1_shape(self):
+        x, w, b = _rand((64, 64), 1), _rand((64, 64), 2), _rand(64, 3)
+        out = fc(x, w, b)
+        assert out.shape == (64, 64)
+        assert out.dtype == jnp.float32
+
+    def test_role1_matches_ref(self):
+        x, w, b = _rand((64, 64), 4), _rand((64, 64), 5), _rand(64, 6)
+        np.testing.assert_allclose(fc(x, w, b), fc_ref(x, w, b), rtol=1e-5)
+
+    def test_role2_matches_ref(self):
+        x, w, b = _rand((64, 64), 7), _rand((64, 64), 8), _rand(64, 9)
+        np.testing.assert_allclose(
+            fc_barrier(x, w, b), fc_ref(x, w, b), rtol=1e-5
+        )
+
+    def test_role1_role2_identical(self):
+        """Roles 1 and 2 are numerically the same computation."""
+        x, w, b = _rand((64, 64), 10), _rand((64, 64), 11), _rand(64, 12)
+        np.testing.assert_allclose(fc(x, w, b), fc_barrier(x, w, b), rtol=1e-6)
+
+    def test_multiblock_k_accumulation(self):
+        """K > 128 exercises the multi-step accumulation (grid k dim)."""
+        x, w, b = _rand((16, 256), 13), _rand((256, 8), 14), _rand(8, 15)
+        np.testing.assert_allclose(
+            fc(x, w, b), fc_ref(x, w, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_multiblock_mn(self):
+        x, w, b = _rand((256, 64), 16), _rand((64, 256), 17), _rand(256, 18)
+        np.testing.assert_allclose(
+            fc(x, w, b), fc_ref(x, w, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_bias_broadcast(self):
+        x = np.zeros((4, 4), np.float32)
+        w = np.zeros((4, 4), np.float32)
+        b = np.arange(4, dtype=np.float32)
+        out = np.asarray(fc(x, w, b))
+        for row in out:
+            np.testing.assert_array_equal(row, b)
+
+    def test_indivisible_large_dim_raises(self):
+        x, w, b = _rand((130, 4), 19), _rand((4, 4), 20), _rand(4, 21)
+        with pytest.raises(ValueError, match="multiple"):
+            fc(x, w, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=_dim, k=_dim, n=_dim, seed=st.integers(0, 2**31 - 1))
+def test_fc_property(m, k, n, seed):
+    g = np.random.default_rng(seed)
+    x = g.normal(0, 1, (m, k)).astype(np.float32)
+    w = g.normal(0, 1, (k, n)).astype(np.float32)
+    b = g.normal(0, 1, (n,)).astype(np.float32)
+    np.testing.assert_allclose(
+        fc(x, w, b), fc_ref(x, w, b), rtol=2e-4, atol=2e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=_dim, k=_dim, n=_dim, seed=st.integers(0, 2**31 - 1))
+def test_fc_barrier_property(m, k, n, seed):
+    g = np.random.default_rng(seed)
+    x = g.normal(0, 1, (m, k)).astype(np.float32)
+    w = g.normal(0, 1, (k, n)).astype(np.float32)
+    b = g.normal(0, 1, (n,)).astype(np.float32)
+    np.testing.assert_allclose(
+        fc_barrier(x, w, b), fc_ref(x, w, b), rtol=2e-4, atol=2e-4
+    )

@@ -1,0 +1,85 @@
+"""L2 correctness: role entry points + the MNIST CNN vs pure-jnp refs."""
+
+import numpy as np
+import jax.numpy as jnp
+
+import sys, os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import model
+from compile.kernels.ref import fc_ref, conv_i16_ref
+
+
+def test_weights_deterministic():
+    w1 = model.role_weights()
+    w2 = model.role_weights()
+    assert set(w1) == set(w2)
+    for k in w1:
+        np.testing.assert_array_equal(w1[k], w2[k])
+
+
+def test_role1_matches_ref():
+    x = np.random.default_rng(0).normal(0, 1, (64, 64)).astype(np.float32)
+    w = model.role_weights()
+    np.testing.assert_allclose(
+        model.role1_fc(x, w["role1/w"], w["role1/b"]),
+        fc_ref(x, w["role1/w"], w["role1/b"]),
+        rtol=1e-4,
+    )
+
+
+def test_role2_matches_ref():
+    x = np.random.default_rng(1).normal(0, 1, (64, 64)).astype(np.float32)
+    w = model.role_weights()
+    np.testing.assert_allclose(
+        model.role2_fc_barrier(x, w["role2/w"], w["role2/b"]),
+        fc_ref(x, w["role2/w"], w["role2/b"]),
+        rtol=1e-4,
+    )
+
+
+def test_role3_matches_ref():
+    x = np.random.default_rng(2).integers(-256, 256, (1, 28, 28)).astype(np.int16)
+    w = model.role_weights()
+    np.testing.assert_array_equal(
+        model.role3_conv5x5(x),
+        conv_i16_ref(x, w["role3/w"], shift=model.CONV_SHIFT),
+    )
+
+
+def test_role4_matches_ref():
+    x = np.random.default_rng(3).integers(-256, 256, (1, 28, 28)).astype(np.int16)
+    w = model.role_weights()
+    np.testing.assert_array_equal(
+        model.role4_conv3x3(x),
+        conv_i16_ref(x, w["role4/w"], shift=model.CONV_SHIFT),
+    )
+
+
+def test_cnn_shapes():
+    x = np.random.default_rng(4).normal(0, 1, (4, 1, 28, 28)).astype(np.float32)
+    out = model.mnist_cnn(x)
+    assert out.shape == (4, 10)
+    assert out.dtype == jnp.float32
+
+
+def test_cnn_matches_ref():
+    x = np.random.default_rng(5).normal(0, 1, (8, 1, 28, 28)).astype(np.float32)
+    np.testing.assert_allclose(
+        model.mnist_cnn(x), model.mnist_cnn_ref(x), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_cnn_batch_independence():
+    """Each batch element is independent (vmap correctness)."""
+    g = np.random.default_rng(6)
+    x = g.normal(0, 1, (3, 1, 28, 28)).astype(np.float32)
+    full = np.asarray(model.mnist_cnn(x))
+    for i in range(3):
+        single = np.asarray(model.mnist_cnn(x[i : i + 1]))
+        np.testing.assert_allclose(full[i], single[0], rtol=1e-5, atol=1e-5)
+
+
+def test_entry_point_table_consistent():
+    assert set(model.ENTRY_POINTS) == set(model.ROLE_SHAPES)

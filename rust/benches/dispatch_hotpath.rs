@@ -1,0 +1,119 @@
+//! Microbenchmark of the dispatch hot path (the §Perf target): queue
+//! enqueue → packet processor → kernel → completion signal, for both the
+//! raw HSA path and the TF session path, plus component costs.
+//! `cargo bench --bench dispatch_hotpath`.
+
+use std::sync::Arc;
+use tf_fpga::bench::harness::time_n;
+use tf_fpga::fpga::device::{ComputeBinding, FpgaAgent, FpgaConfig};
+use tf_fpga::fpga::roles;
+use tf_fpga::hsa::agent::DeviceType;
+use tf_fpga::hsa::packet::AqlPacket;
+use tf_fpga::hsa::runtime::HsaRuntime;
+use tf_fpga::hsa::signal::Signal;
+use tf_fpga::reconfig::policy::PolicyKind;
+use tf_fpga::tf::dtype::DType;
+use tf_fpga::tf::graph::{Graph, OpKind};
+use tf_fpga::tf::session::{Session, SessionOptions};
+use tf_fpga::tf::tensor::Tensor;
+
+fn main() {
+    let n = std::env::var("HOTPATH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000);
+
+    // --- component: signal round trip between two threads ---
+    {
+        let sig = Signal::new(0);
+        let stop = Signal::new(0);
+        let (s2, st2) = (sig.clone(), stop.clone());
+        let peer = std::thread::spawn(move || {
+            // Echo thread: for value v = odd, respond v+1.
+            let mut last = 0;
+            loop {
+                let v = s2.wait_until(None, |x| x > last || st2.load() != 0).unwrap();
+                if st2.load() != 0 {
+                    break;
+                }
+                last = v + 1;
+                s2.store(last);
+            }
+        });
+        let mut v = 0i64;
+        let r = time_n("signal ping-pong", 100, n, || {
+            v += 2;
+            sig.store(v - 1);
+            sig.wait_until(None, |x| x == v).unwrap();
+        });
+        println!("{}", r.report());
+        stop.store(1);
+        sig.store(v + 1);
+        peer.join().unwrap();
+    }
+
+    // --- component: queue enqueue/dequeue (no kernel) ---
+    {
+        let q = tf_fpga::hsa::queue::Queue::new(64);
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || {
+            while let Some(pkt) = q2.dequeue_blocking() {
+                if let AqlPacket::BarrierAnd(b) = pkt {
+                    b.completion_signal.subtract(1);
+                }
+            }
+        });
+        let r = time_n("queue round-trip (barrier pkt)", 100, n, || {
+            let done = Signal::new(1);
+            q.enqueue(AqlPacket::barrier(vec![], done.clone())).unwrap();
+            done.wait_eq(0, None).unwrap();
+        });
+        println!("{}", r.report());
+        q.shutdown();
+        consumer.join().unwrap();
+    }
+
+    // --- raw HSA dispatch on a warm FPGA role (echo kernel) ---
+    {
+        let fpga = FpgaAgent::new(FpgaConfig {
+            num_regions: 2,
+            policy: PolicyKind::Lru.build(0),
+            realtime: false,
+            realtime_scale: 1.0,
+            trace: None,
+        });
+        let role = roles::paper_roles().remove(0);
+        let id = fpga.register_role(
+            role,
+            ComputeBinding::Native(Arc::new(|ins: &[Tensor]| Ok(ins.to_vec()))),
+        );
+        let rt = HsaRuntime::builder().with_agent(fpga).build();
+        let q = rt.create_queue(rt.agent_by_type(DeviceType::Fpga).unwrap(), 64);
+        let x = Tensor::from_f32(&[4, 4], vec![1.0; 16]).unwrap();
+        let r = time_n("raw HSA dispatch (warm role)", 100, n, || {
+            rt.dispatch_sync(&q, id, vec![x.clone()]).unwrap();
+        });
+        println!("{}", r.report());
+        rt.shutdown();
+    }
+
+    // --- TF session dispatch (single-FC graph) ---
+    {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[4, 4], DType::F32).unwrap();
+        let w = g
+            .constant("w", Tensor::from_f32(&[4, 4], vec![0.5; 16]).unwrap())
+            .unwrap();
+        let b = g.constant("b", Tensor::from_f32(&[4], vec![0.0; 4]).unwrap()).unwrap();
+        g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
+        let sess = Session::new(g, SessionOptions::native_only()).unwrap();
+        let feed = Tensor::from_f32(&[4, 4], vec![1.0; 16]).unwrap();
+        let r = time_n("TF session.run (1 FC node)", 100, n, || {
+            sess.run(&[("x", feed.clone())], &["y"]).unwrap();
+        });
+        println!("{}", r.report());
+        sess.shutdown();
+    }
+
+    println!("dispatch_hotpath: OK");
+}

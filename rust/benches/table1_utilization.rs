@@ -1,0 +1,45 @@
+//! Bench: regenerate Table I (PL utilization) and verify every row against
+//! the published numbers. `cargo bench --bench table1_utilization`.
+
+use tf_fpga::bench::tables::{table1, table1_rows};
+use tf_fpga::fpga::resources::ResourceVector;
+
+fn main() {
+    let t = table1();
+    println!("{t}");
+
+    // Published rows (Role 1 only has the LUT column).
+    let expected: &[(&str, Option<ResourceVector>, Option<u32>)] = &[
+        ("Shell", Some(ResourceVector::new(9915, 8544, 10, 0)), None),
+        ("Role 1", None, Some(9984)),
+        ("Role 2", Some(ResourceVector::new(9501, 7851, 23, 8)), None),
+        ("Role 3", Some(ResourceVector::new(5091, 4935, 21, 6)), None),
+        ("Role 4", Some(ResourceVector::new(7881, 7926, 21, 12)), None),
+    ];
+    let rows = table1_rows();
+    let mut ok = true;
+    for ((label, got, _est), (elabel, want, want_luts)) in rows.iter().zip(expected) {
+        assert_eq!(label, elabel);
+        if let Some(want) = want {
+            let delta = (got.luts as i64 - want.luts as i64).abs();
+            let exact = got.ffs == want.ffs && got.bram36 == want.bram36 && got.dsps == want.dsps;
+            let row_ok = delta <= 1 && exact;
+            println!(
+                "{label}: estimator {got} vs paper {want} -> {}",
+                if row_ok { "MATCH" } else { "MISMATCH" }
+            );
+            ok &= row_ok;
+        }
+        if let Some(want_luts) = want_luts {
+            let row_ok = got.luts == *want_luts;
+            println!(
+                "{label}: estimator {} LUTs vs paper {want_luts} -> {}",
+                got.luts,
+                if row_ok { "MATCH" } else { "MISMATCH" }
+            );
+            ok &= row_ok;
+        }
+    }
+    assert!(ok, "Table I reproduction failed");
+    println!("\ntable1_utilization: OK");
+}

@@ -1,0 +1,36 @@
+//! Bench: regenerate Table II (overheads, µs, n=1000) on the live stack.
+//! `cargo bench --bench table2_overhead`.
+//!
+//! Absolute numbers differ from the paper's Ultra96/A53 host; the
+//! reproduction target is the *shape*: setup ≫ reconfiguration ≫ dispatch,
+//! TF-path ≥ HSA-path in each row, reconfiguration ≈ 7.4 ms (modeled PCAP).
+
+use tf_fpga::bench::tables::table2;
+
+fn main() {
+    let n = std::env::var("TABLE2_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000);
+    // PJRT setup included when artifacts exist (the shipped configuration).
+    let use_pjrt = tf_fpga::runtime::artifact::ArtifactStore::open_default().is_ok();
+    let (t, m) = table2(n, use_pjrt);
+    println!("{t}");
+
+    assert!(m.tf_setup_us > m.hsa_setup_us, "setup ordering: {m:?}");
+    assert!(
+        (m.reconfig_us - 7424.0).abs() < 100.0,
+        "reconfiguration off the paper's 7424 µs: {m:?}"
+    );
+    assert!(m.tf_setup_us > m.reconfig_us || !use_pjrt,
+        "with PJRT compile included, setup dominates reconfiguration");
+    assert!(m.tf_dispatch_us < 1000.0 && m.hsa_dispatch_us < 1000.0);
+    // Ratio context vs the paper.
+    println!(
+        "paper ratios: setup 4.0x (156230/39032), dispatch 2.7x (27/10); \
+         measured: setup {:.1}x, dispatch {:.2}x",
+        m.tf_setup_us / m.hsa_setup_us,
+        m.tf_dispatch_us / m.hsa_dispatch_us
+    );
+    println!("\ntable2_overhead: OK");
+}

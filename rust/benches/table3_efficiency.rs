@@ -1,0 +1,25 @@
+//! Bench: regenerate Table III (OP/cycle increase over the A53) from real
+//! dispatches, n=1000. `cargo bench --bench table3_efficiency`.
+
+use tf_fpga::bench::tables::table3;
+
+fn main() {
+    let n = std::env::var("TABLE3_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000);
+    let (t, rows) = table3(n);
+    println!("{t}");
+    for r in &rows {
+        let err = (r.increase - r.paper_increase).abs() / r.paper_increase;
+        println!(
+            "{}: {:.2}x vs paper {:.2}x ({:+.2}%)",
+            r.role,
+            r.increase,
+            r.paper_increase,
+            100.0 * (r.increase - r.paper_increase) / r.paper_increase
+        );
+        assert!(err < 0.03, "{} off by {:.1}%", r.role, err * 100.0);
+    }
+    println!("\ntable3_efficiency: OK");
+}

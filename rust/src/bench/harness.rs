@@ -1,0 +1,64 @@
+//! Minimal timing harness (criterion is not in the offline vendor set; the
+//! paper's tables are n-iteration means anyway, n=1000).
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time summary in µs.
+    pub us: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<32} n={:<5} mean={:>9.2}µs p50={:>9.2}µs p99={:>9.2}µs max={:>9.2}µs",
+            self.name, self.us.n, self.us.mean, self.us.p50, self.us.p99, self.us.max
+        )
+    }
+}
+
+/// Time `f` for `n` iterations after `warmup` unmeasured ones.
+pub fn time_n(name: &str, warmup: usize, n: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    BenchResult { name: name.to_string(), us: Summary::from_values(&samples) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_produces_n_samples() {
+        let r = time_n("noop", 2, 25, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.us.n, 25);
+        assert!(r.us.mean >= 0.0);
+    }
+
+    #[test]
+    fn sleep_is_measured() {
+        let r = time_n("sleep", 0, 3, || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        assert!(r.us.mean >= 1900.0, "mean {}", r.us.mean);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let r = time_n("abc", 0, 1, || {});
+        assert!(r.report().contains("abc"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Benchmark support: timing harness + the paper's table generators
+//! (shared by `rust/benches/*`, the CLI and the integration tests).
+
+pub mod harness;
+pub mod tables;
+
+pub use harness::{time_n, BenchResult};
+pub use tables::{table1, table2, table3, Table2Measurement, Table3Row};

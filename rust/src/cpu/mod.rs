@@ -1,0 +1,11 @@
+//! CPU substrate: the ARM Cortex-A53 baseline of Table III.
+//!
+//! [`a53`] is the cycle model (how many cycles the A53 needs for a given
+//! kernel workload); [`device`] is the HSA agent executing kernels natively
+//! (real numerics) while charging virtual time from the model.
+
+pub mod a53;
+pub mod device;
+
+pub use a53::{A53Model, CpuKernelClass};
+pub use device::{CpuAgent, CpuKernel};

@@ -1,0 +1,89 @@
+//! Pre-synthesized partial bitstreams ("roles").
+//!
+//! In the paper, a TF kernel registered for the FPGA device *is* a
+//! pre-synthesized bitstream. Our bitstream object carries everything its
+//! binary counterpart determines: identity, byte size (reconfiguration
+//! cost), resource usage (Table I row), and the datapath spec (timing).
+
+use crate::fpga::datapath::DatapathSpec;
+use crate::fpga::resources::ResourceVector;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Unique role/bitstream identity (the `kernel_object` of dispatch packets
+/// targeting the FPGA agent).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RoleId(pub u64);
+
+static NEXT_ROLE_ID: AtomicU64 = AtomicU64::new(1);
+
+impl RoleId {
+    pub fn fresh() -> RoleId {
+        RoleId(NEXT_ROLE_ID.fetch_add(1, Ordering::Relaxed))
+    }
+}
+
+/// A pre-synthesized role bitstream.
+#[derive(Debug, Clone)]
+pub struct Bitstream {
+    pub id: RoleId,
+    pub name: String,
+    /// Partial bitstream size in bytes (drives reconfiguration latency).
+    pub bytes: u64,
+    /// Synthesis result (one Table I row).
+    pub resources: ResourceVector,
+    /// Timing/structure model of the synthesized datapath.
+    pub spec: Arc<DatapathSpec>,
+}
+
+impl Bitstream {
+    pub fn new(
+        name: impl Into<String>,
+        bytes: u64,
+        resources: ResourceVector,
+        spec: DatapathSpec,
+    ) -> Bitstream {
+        Bitstream {
+            id: RoleId::fresh(),
+            name: name.into(),
+            bytes,
+            resources,
+            spec: Arc::new(spec),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::datapath::RoleOp;
+
+    fn spec() -> DatapathSpec {
+        DatapathSpec {
+            name: "t",
+            op: RoleOp::Stream { elements: 1, ops_per_element: 2 },
+            macs_per_cycle: 1,
+            ii: 1,
+            pipeline_depth: 1,
+            burst_bytes: 64,
+            burst_overhead_cycles: 1,
+            barriers_per_pass: 0,
+            barrier_stall_cycles: 0,
+            clock_mhz: 100,
+        }
+    }
+
+    #[test]
+    fn role_ids_are_unique() {
+        let a = Bitstream::new("a", 1, ResourceVector::ZERO, spec());
+        let b = Bitstream::new("b", 1, ResourceVector::ZERO, spec());
+        assert_ne!(a.id, b.id);
+    }
+
+    #[test]
+    fn fresh_ids_monotonic() {
+        let a = RoleId::fresh();
+        let b = RoleId::fresh();
+        assert!(b.0 > a.0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Role datapath cycle models — Table III's FPGA-side numbers.
+//!
+//! A role is a fixed-function streaming datapath: an AXI front-end feeds a
+//! MAC array; results drain through an output FIFO. Cycle counts follow the
+//! standard pipelined-accelerator formula
+//!
+//! ```text
+//! cycles = ceil(total_macs / (macs_per_cycle / ii))
+//!        + pipeline_depth                      (fill/drain)
+//!        + bursts * burst_overhead             (AXI handshakes)
+//!        + barriers * barrier_stall            (role 2 only)
+//! ```
+//!
+//! The per-role parallelism (`macs_per_cycle`) comes from the datapath
+//! structure (tap count, PE count); stall parameters are calibrated against
+//! the paper's Table III and documented in DESIGN.md §6.
+
+use crate::tf::tensor::Tensor;
+
+/// Compute shape of a role. Dimensions that the paper fixes (filter sizes,
+/// weight constants) are part of the variant, not the workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoleOp {
+    /// Dense `x(M,K) @ w(K,N) + b`; weights fixed at synthesis.
+    FcF32 { m: usize, k: usize, n: usize },
+    /// Valid 2-D convolution with fixed weights, int16 in / int16 out.
+    ConvI16 { cin: usize, h: usize, w: usize, kh: usize, kw: usize, filters: usize },
+    /// Generic streaming op (used by the OpenCL-style multi-tenant clients):
+    /// `ops_per_element` operations over `elements` stream elements.
+    Stream { elements: usize, ops_per_element: usize },
+}
+
+impl RoleOp {
+    /// Multiply-accumulate count of the workload.
+    pub fn macs(&self) -> u64 {
+        match *self {
+            RoleOp::FcF32 { m, k, n } => (m * k * n) as u64,
+            RoleOp::ConvI16 { cin, h, w, kh, kw, filters } => {
+                let oh = h - kh + 1;
+                let ow = w - kw + 1;
+                (filters * cin * oh * ow * kh * kw) as u64
+            }
+            RoleOp::Stream { elements, ops_per_element } => {
+                (elements * ops_per_element) as u64 / 2
+            }
+        }
+    }
+
+    /// Total arithmetic operations (1 MAC = 2 OPs: multiply + add); Table
+    /// III counts operations.
+    pub fn ops(&self) -> u64 {
+        self.macs() * 2
+    }
+
+    /// Bytes streamed in + out (for AXI burst accounting).
+    pub fn stream_bytes(&self) -> u64 {
+        match *self {
+            RoleOp::FcF32 { m, k, n } => ((m * k + m * n) * 4) as u64,
+            RoleOp::ConvI16 { cin, h, w, kh, kw, filters } => {
+                let oh = h - kh + 1;
+                let ow = w - kw + 1;
+                ((cin * h * w + filters * oh * ow) * 2) as u64
+            }
+            RoleOp::Stream { elements, .. } => (elements * 8) as u64,
+        }
+    }
+
+    /// Derive the workload from dispatch inputs, keeping the variant's
+    /// fixed structure. Returns `None` if the input rank is incompatible.
+    pub fn with_input_shape(&self, inputs: &[Tensor]) -> Option<RoleOp> {
+        let first = inputs.first()?;
+        match *self {
+            RoleOp::FcF32 { k, n, .. } => {
+                let s = first.shape();
+                if s.len() == 2 && s[1] == k {
+                    Some(RoleOp::FcF32 { m: s[0], k, n })
+                } else {
+                    None
+                }
+            }
+            RoleOp::ConvI16 { kh, kw, filters, .. } => {
+                let s = first.shape();
+                if s.len() == 3 && s[1] >= kh && s[2] >= kw {
+                    Some(RoleOp::ConvI16 {
+                        cin: s[0],
+                        h: s[1],
+                        w: s[2],
+                        kh,
+                        kw,
+                        filters,
+                    })
+                } else {
+                    None
+                }
+            }
+            RoleOp::Stream { ops_per_element, .. } => Some(RoleOp::Stream {
+                elements: first.len(),
+                ops_per_element,
+            }),
+        }
+    }
+}
+
+/// Structural + timing description of a role's datapath.
+#[derive(Debug, Clone)]
+pub struct DatapathSpec {
+    pub name: &'static str,
+    /// Nominal workload (the paper's benchmark shape for this role).
+    pub op: RoleOp,
+    /// Parallel MAC units physically instantiated.
+    pub macs_per_cycle: u32,
+    /// Initiation interval (cycles between accepted inputs).
+    pub ii: u32,
+    /// Pipeline fill/drain latency in cycles.
+    pub pipeline_depth: u32,
+    /// AXI burst length in bytes and fixed handshake cost per burst.
+    pub burst_bytes: u32,
+    pub burst_overhead_cycles: u32,
+    /// Role-2 style barrier: number of synchronization points per pass and
+    /// the stall each one costs (0 for barrier-free roles).
+    pub barriers_per_pass: u32,
+    pub barrier_stall_cycles: u32,
+    /// PL clock this role closes timing at.
+    pub clock_mhz: u32,
+}
+
+impl DatapathSpec {
+    /// Total datapath cycles for `op` on this role.
+    pub fn cycles(&self, op: &RoleOp) -> u64 {
+        let throughput_macs_per_cycle = self.macs_per_cycle as u64;
+        let compute =
+            (op.macs() * self.ii as u64).div_ceil(throughput_macs_per_cycle.max(1));
+        let bursts = op.stream_bytes().div_ceil(self.burst_bytes.max(1) as u64);
+        compute
+            + self.pipeline_depth as u64
+            + bursts * self.burst_overhead_cycles as u64
+            + self.barriers_per_pass as u64 * self.barrier_stall_cycles as u64
+    }
+
+    /// Nanoseconds for `op` at the role's clock.
+    pub fn exec_ns(&self, op: &RoleOp) -> u64 {
+        let cycles = self.cycles(op);
+        // ns = cycles / (MHz) * 1000
+        cycles * 1000 / self.clock_mhz.max(1) as u64
+    }
+
+    /// Achieved operations per cycle for `op` (Table III's metric).
+    pub fn ops_per_cycle(&self, op: &RoleOp) -> f64 {
+        op.ops() as f64 / self.cycles(op) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fc_spec() -> DatapathSpec {
+        DatapathSpec {
+            name: "fc",
+            op: RoleOp::FcF32 { m: 64, k: 64, n: 64 },
+            macs_per_cycle: 4,
+            ii: 1,
+            pipeline_depth: 32,
+            burst_bytes: 4096,
+            burst_overhead_cycles: 8,
+            barriers_per_pass: 0,
+            barrier_stall_cycles: 0,
+            clock_mhz: 150,
+        }
+    }
+
+    #[test]
+    fn fc_mac_count() {
+        let op = RoleOp::FcF32 { m: 64, k: 64, n: 64 };
+        assert_eq!(op.macs(), 64 * 64 * 64);
+        assert_eq!(op.ops(), 2 * 64 * 64 * 64);
+    }
+
+    #[test]
+    fn conv_mac_count() {
+        let op = RoleOp::ConvI16 { cin: 1, h: 28, w: 28, kh: 5, kw: 5, filters: 1 };
+        assert_eq!(op.macs(), 24 * 24 * 25);
+    }
+
+    #[test]
+    fn cycles_dominated_by_compute() {
+        let s = fc_spec();
+        let c = s.cycles(&s.op);
+        let compute = 64u64 * 64 * 64 / 4;
+        assert!(c >= compute && c < compute + compute / 4, "cycles {c}");
+    }
+
+    #[test]
+    fn barrier_adds_stalls() {
+        let mut s = fc_spec();
+        let base = s.cycles(&s.op);
+        s.barriers_per_pass = 64;
+        s.barrier_stall_cycles = 100;
+        assert_eq!(s.cycles(&s.op), base + 6400);
+    }
+
+    #[test]
+    fn ops_per_cycle_bounded_by_peak() {
+        let s = fc_spec();
+        let opc = s.ops_per_cycle(&s.op);
+        assert!(opc > 0.0 && opc <= (2 * s.macs_per_cycle) as f64, "{opc}");
+    }
+
+    #[test]
+    fn workload_rescales_with_input_shape() {
+        let s = fc_spec();
+        let t = Tensor::zeros(&[128, 64], crate::tf::dtype::DType::F32);
+        let op = s.op.with_input_shape(std::slice::from_ref(&t)).unwrap();
+        assert_eq!(op, RoleOp::FcF32 { m: 128, k: 64, n: 64 });
+        // Incompatible contraction dim is rejected.
+        let bad = Tensor::zeros(&[128, 63], crate::tf::dtype::DType::F32);
+        assert!(s.op.with_input_shape(std::slice::from_ref(&bad)).is_none());
+    }
+
+    #[test]
+    fn exec_ns_scales_with_clock() {
+        let mut s = fc_spec();
+        let t150 = s.exec_ns(&s.op);
+        s.clock_mhz = 300;
+        assert!(s.exec_ns(&s.op) < t150);
+    }
+}

@@ -1,0 +1,341 @@
+//! The FPGA HSA agent: dispatch → residency check → (partial
+//! reconfiguration) → datapath execution.
+//!
+//! This is where the paper's pieces meet: a kernel-dispatch packet names a
+//! pre-synthesized bitstream (the registered TF kernel); the reconfiguration
+//! manager ensures it is resident (LRU-evicting if the working set exceeds
+//! the PR regions); numerics run through the role's *compute binding* —
+//! the AOT-compiled PJRT artifact (the functional stand-in for the real
+//! datapath) or a native kernel — while timing comes from the datapath
+//! cycle model and the ICAP transfer model.
+
+use crate::fpga::bitstream::Bitstream;
+use crate::fpga::shell::Shell;
+use crate::hsa::agent::{Agent, AgentInfo, DeviceType};
+use crate::hsa::error::{HsaError, Result};
+use crate::hsa::packet::KernelDispatchPacket;
+use crate::reconfig::manager::{LoadOutcome, ReconfigManager, ReconfigStats};
+use crate::reconfig::policy::EvictionPolicy;
+use crate::runtime::pjrt::PjrtHandle;
+use crate::tf::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// How a role's numerics are computed when it executes.
+#[derive(Clone)]
+pub enum ComputeBinding {
+    /// Execute the AOT-compiled HLO module of this kernel via PJRT — the
+    /// functional model of the synthesized bitstream (the default).
+    Pjrt { handle: PjrtHandle, module: String },
+    /// Native Rust kernel (used by substrate tests and the extra roles that
+    /// have no Python counterpart).
+    Native(Arc<dyn Fn(&[Tensor]) -> Result<Vec<Tensor>> + Send + Sync>),
+    /// PJRT when the dispatch matches the artifact's (shape-locked)
+    /// signature — real bitstreams are shape-locked too — otherwise the
+    /// generic native datapath.
+    PjrtOrNative {
+        handle: PjrtHandle,
+        module: String,
+        signature: Vec<crate::runtime::artifact::TensorMeta>,
+        native: Arc<dyn Fn(&[Tensor]) -> Result<Vec<Tensor>> + Send + Sync>,
+    },
+}
+
+impl ComputeBinding {
+    fn signature_matches(
+        signature: &[crate::runtime::artifact::TensorMeta],
+        inputs: &[Tensor],
+    ) -> bool {
+        signature.len() == inputs.len()
+            && signature
+                .iter()
+                .zip(inputs)
+                .all(|(m, t)| m.shape == t.shape() && m.dtype == t.dtype())
+    }
+}
+
+struct FpgaRole {
+    bitstream: Bitstream,
+    binding: ComputeBinding,
+    dispatches: AtomicU64,
+}
+
+/// Configuration of the simulated FPGA.
+pub struct FpgaConfig {
+    pub num_regions: usize,
+    pub policy: Box<dyn EvictionPolicy>,
+    /// If true, modeled durations (reconfig, datapath) are also slept in
+    /// wall-clock (scaled by `realtime_scale`) so end-to-end latencies feel
+    /// like the device. Benches keep this off and read virtual time.
+    pub realtime: bool,
+    pub realtime_scale: f64,
+    /// Optional event trace (reconfigurations + kernel executions land on
+    /// the "fpga" track, lane = PR region).
+    pub trace: Option<crate::trace::recorder::TraceRecorder>,
+}
+
+impl Default for FpgaConfig {
+    fn default() -> Self {
+        FpgaConfig {
+            num_regions: 2,
+            policy: Box::new(crate::reconfig::policy::Lru),
+            realtime: false,
+            realtime_scale: 1.0,
+            trace: None,
+        }
+    }
+}
+
+/// The simulated Ultra96 FPGA agent.
+pub struct FpgaAgent {
+    info: AgentInfo,
+    manager: Mutex<ReconfigManager>,
+    roles: RwLock<HashMap<u64, Arc<FpgaRole>>>,
+    virtual_ns: AtomicU64,
+    realtime: bool,
+    realtime_scale: f64,
+    trace: Option<crate::trace::recorder::TraceRecorder>,
+}
+
+impl FpgaAgent {
+    pub fn new(config: FpgaConfig) -> Arc<FpgaAgent> {
+        let shell = Shell::ultra96(config.num_regions);
+        let manager = ReconfigManager::new(shell.regions, config.policy, shell.icap);
+        Arc::new(FpgaAgent {
+            info: AgentInfo {
+                name: "ultra96-pl".into(),
+                vendor: "xilinx zu3eg (simulated)".into(),
+                device_type: DeviceType::Fpga,
+                queue_max_size: 1024,
+                isa: "zu3eg-pr".into(),
+                clock_mhz: crate::fpga::roles::PL_CLOCK_MHZ,
+                compute_units: config.num_regions as u32,
+            },
+            manager: Mutex::new(manager),
+            roles: RwLock::new(HashMap::new()),
+            virtual_ns: AtomicU64::new(0),
+            realtime: config.realtime,
+            realtime_scale: config.realtime_scale,
+            trace: config.trace,
+        })
+    }
+
+    pub fn with_defaults() -> Arc<FpgaAgent> {
+        FpgaAgent::new(FpgaConfig::default())
+    }
+
+    /// Register a pre-synthesized bitstream as a dispatchable kernel.
+    /// Returns the kernel-object handle (== the role id).
+    pub fn register_role(&self, bitstream: Bitstream, binding: ComputeBinding) -> u64 {
+        let id = bitstream.id.0;
+        self.roles.write().unwrap().insert(
+            id,
+            Arc::new(FpgaRole { bitstream, binding, dispatches: AtomicU64::new(0) }),
+        );
+        id
+    }
+
+    pub fn reconfig_stats(&self) -> ReconfigStats {
+        self.manager.lock().unwrap().stats()
+    }
+
+    pub fn num_regions(&self) -> usize {
+        self.manager.lock().unwrap().num_regions()
+    }
+
+    /// Dispatch counts per registered role (diagnostics).
+    pub fn role_dispatches(&self) -> Vec<(String, u64)> {
+        self.roles
+            .read()
+            .unwrap()
+            .values()
+            .map(|r| (r.bitstream.name.clone(), r.dispatches.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    fn sleep_scaled(&self, us: u64) {
+        if self.realtime && us > 0 {
+            let dur = std::time::Duration::from_micros(
+                (us as f64 * self.realtime_scale) as u64,
+            );
+            std::thread::sleep(dur);
+        }
+    }
+}
+
+impl Agent for FpgaAgent {
+    fn info(&self) -> &AgentInfo {
+        &self.info
+    }
+
+    fn execute(&self, packet: &KernelDispatchPacket) -> Result<()> {
+        let role = {
+            let map = self.roles.read().unwrap();
+            map.get(&packet.kernel_object)
+                .cloned()
+                .ok_or(HsaError::UnknownKernel(packet.kernel_object))?
+        };
+
+        // Residency / partial reconfiguration (paper: "happens every time
+        // when a kernel that is not currently loaded on the FPGA is
+        // executed").
+        let outcome: LoadOutcome = {
+            let mut mgr = self.manager.lock().unwrap();
+            mgr.ensure_loaded(&role.bitstream)?
+        };
+        let reconfig_us = outcome.reconfig_us();
+        if reconfig_us > 0 {
+            self.virtual_ns.fetch_add(reconfig_us * 1000, Ordering::Relaxed);
+            self.sleep_scaled(reconfig_us);
+            if let Some(tr) = &self.trace {
+                tr.record_ending_now(
+                    crate::trace::recorder::EventKind::Reconfig,
+                    format!("reconfig:{}", role.bitstream.name),
+                    "fpga-pl",
+                    outcome.region() as u32,
+                    reconfig_us,
+                );
+            }
+        }
+
+        // Numerics.
+        let outputs = match &role.binding {
+            ComputeBinding::Pjrt { handle, module } => {
+                handle.execute(module, packet.args.inputs.clone())?
+            }
+            ComputeBinding::Native(f) => f(&packet.args.inputs)?,
+            ComputeBinding::PjrtOrNative { handle, module, signature, native } => {
+                if ComputeBinding::signature_matches(signature, &packet.args.inputs) {
+                    handle.execute(module, packet.args.inputs.clone())?
+                } else {
+                    native(&packet.args.inputs)?
+                }
+            }
+        };
+
+        // Datapath timing for the actual workload shape.
+        let spec = &role.bitstream.spec;
+        let op = spec
+            .op
+            .with_input_shape(&packet.args.inputs)
+            .unwrap_or(spec.op);
+        let exec_ns = spec.exec_ns(&op);
+        self.virtual_ns.fetch_add(exec_ns, Ordering::Relaxed);
+        self.sleep_scaled(exec_ns / 1000);
+        if let Some(tr) = &self.trace {
+            tr.record_ending_now(
+                crate::trace::recorder::EventKind::KernelExec,
+                role.bitstream.name.clone(),
+                "fpga-pl",
+                outcome.region() as u32,
+                (exec_ns / 1000).max(1),
+            );
+        }
+
+        role.dispatches.fetch_add(1, Ordering::Relaxed);
+        *packet.args.output.lock().unwrap() = Some(Ok(outputs));
+        Ok(())
+    }
+
+    fn virtual_time_ns(&self) -> u128 {
+        self.virtual_ns.load(Ordering::Relaxed) as u128
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::roles::paper_roles;
+    use crate::hsa::packet::AqlPacket;
+    use crate::hsa::signal::Signal;
+    use crate::ops;
+
+    fn native_fc() -> ComputeBinding {
+        ComputeBinding::Native(Arc::new(|ins: &[Tensor]| {
+            Ok(vec![ops::fc_f32(&ins[0], &ins[1], &ins[2])?])
+        }))
+    }
+
+    fn echo() -> ComputeBinding {
+        ComputeBinding::Native(Arc::new(|ins: &[Tensor]| Ok(ins.to_vec())))
+    }
+
+    fn dispatch(agent: &FpgaAgent, obj: u64, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (pkt, args) = AqlPacket::dispatch(obj, inputs, Signal::new(1));
+        match pkt {
+            AqlPacket::KernelDispatch(d) => {
+                agent.execute(&d)?;
+                Ok(args.take_output().unwrap().map_err(HsaError::KernelFailed)?)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn role_dispatch_reconfigures_once_then_hits() {
+        let agent = FpgaAgent::with_defaults();
+        let roles = paper_roles();
+        let id = agent.register_role(roles[0].clone(), native_fc());
+        let x = Tensor::zeros(&[64, 64], crate::tf::dtype::DType::F32);
+        let w = Tensor::zeros(&[64, 64], crate::tf::dtype::DType::F32);
+        let b = Tensor::zeros(&[64], crate::tf::dtype::DType::F32);
+        dispatch(&agent, id, vec![x.clone(), w.clone(), b.clone()]).unwrap();
+        dispatch(&agent, id, vec![x, w, b]).unwrap();
+        let s = agent.reconfig_stats();
+        assert_eq!((s.misses, s.hits), (1, 1));
+        assert!(s.reconfig_us_total > 7000, "one full reconfig charged");
+    }
+
+    #[test]
+    fn lru_thrash_across_three_roles_two_regions() {
+        let agent = FpgaAgent::with_defaults(); // 2 regions
+        let roles = paper_roles();
+        let ids: Vec<u64> = roles[..3]
+            .iter()
+            .map(|r| agent.register_role(r.clone(), echo()))
+            .collect();
+        let t = Tensor::zeros(&[1, 28, 28], crate::tf::dtype::DType::I16);
+        for _ in 0..2 {
+            for &id in &ids {
+                dispatch(&agent, id, vec![t.clone()]).unwrap();
+            }
+        }
+        let s = agent.reconfig_stats();
+        assert_eq!(s.dispatches, 6);
+        assert_eq!(s.misses, 6, "cyclic 3-over-2 LRU never hits");
+        assert!(s.evictions >= 4);
+    }
+
+    #[test]
+    fn unknown_role_errors() {
+        let agent = FpgaAgent::with_defaults();
+        assert!(dispatch(&agent, 0xdead, vec![]).is_err());
+    }
+
+    #[test]
+    fn virtual_time_includes_reconfig_and_exec() {
+        let agent = FpgaAgent::with_defaults();
+        let roles = paper_roles();
+        let id = agent.register_role(roles[2].clone(), echo());
+        let t = Tensor::zeros(&[1, 28, 28], crate::tf::dtype::DType::I16);
+        dispatch(&agent, id, vec![t.clone()]).unwrap();
+        let after_first = agent.virtual_time_ns();
+        assert!(after_first >= 7_000_000, "first dispatch pays ~7.4ms reconfig");
+        dispatch(&agent, id, vec![t]).unwrap();
+        let delta = agent.virtual_time_ns() - after_first;
+        assert!(delta < 100_000, "hit dispatch only pays datapath time, got {delta}");
+    }
+
+    #[test]
+    fn numerics_flow_through_binding() {
+        let agent = FpgaAgent::with_defaults();
+        let roles = paper_roles();
+        let id = agent.register_role(roles[0].clone(), native_fc());
+        let x = Tensor::from_f32(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let w = Tensor::from_f32(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let b = Tensor::from_f32(&[2], vec![0.5, -0.5]).unwrap();
+        let out = dispatch(&agent, id, vec![x, w, b]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[1.5, 1.5]);
+    }
+}

@@ -1,0 +1,196 @@
+//! Online-synthesis ("OpenCL kernel") flow — the paper's rejected
+//! alternative (§III): *"The simple and most flexible solution would be an
+//! OpenCL implementation … After a runtime synthesis the device specific
+//! bitstream is generated and deployed … this approach leads to a
+//! significant increase in runtime and energy costs."*
+//!
+//! We model that flow so the trade-off is quantifiable: an OpenCL-style
+//! kernel description goes through HLS scheduling + logic synthesis +
+//! place&route *at dispatch time* (on the embedded A53, which is what makes
+//! it so expensive), then the resulting bitstream follows the normal
+//! partial-reconfiguration path. The cost model is calibrated to
+//! small-design Vivado runs on embedded-class hosts (tens of minutes) —
+//! see DESIGN.md §8.
+
+use crate::fpga::bitstream::Bitstream;
+use crate::fpga::datapath::DatapathSpec;
+use crate::fpga::resources::ResourceVector;
+use crate::fpga::roles::ROLE_BITSTREAM_BYTES;
+use crate::fpga::synthesis::{estimate, Component};
+
+/// Cost model of on-device synthesis.
+#[derive(Debug, Clone)]
+pub struct HlsCostModel {
+    /// Fixed front-end cost (OpenCL -> RTL scheduling/binding), seconds.
+    pub hls_base_s: f64,
+    /// Logic synthesis seconds per kLUT.
+    pub synth_s_per_klut: f64,
+    /// Place&route seconds per kLUT (dominant; embedded-class host).
+    pub pnr_s_per_klut: f64,
+    /// Bitgen fixed cost, seconds.
+    pub bitgen_s: f64,
+    /// Host (A53 cluster) active power during synthesis, watts.
+    pub host_active_w: f64,
+    /// PL static+config power during reconfiguration, watts.
+    pub reconfig_w: f64,
+}
+
+impl Default for HlsCostModel {
+    fn default() -> Self {
+        HlsCostModel {
+            hls_base_s: 95.0,
+            synth_s_per_klut: 28.0,
+            pnr_s_per_klut: 55.0,
+            bitgen_s: 40.0,
+            host_active_w: 4.2,
+            reconfig_w: 0.35,
+        }
+    }
+}
+
+/// Result of an online synthesis run.
+#[derive(Debug, Clone)]
+pub struct SynthesisRun {
+    pub bitstream: Bitstream,
+    pub synthesis_s: f64,
+    pub synthesis_energy_j: f64,
+}
+
+/// Aggregate comparison of the two flows over a deployment of `dispatches`
+/// kernel invocations (the paper's argument, quantified).
+#[derive(Debug, Clone)]
+pub struct FlowComparison {
+    pub dispatches: u64,
+    /// Pre-synthesized flow: reconfiguration only.
+    pub presynth_total_s: f64,
+    pub presynth_energy_j: f64,
+    /// Online flow: synthesis once + the same reconfiguration.
+    pub online_total_s: f64,
+    pub online_energy_j: f64,
+}
+
+impl FlowComparison {
+    pub fn overhead_factor(&self) -> f64 {
+        self.online_total_s / self.presynth_total_s.max(1e-12)
+    }
+    pub fn energy_factor(&self) -> f64 {
+        self.online_energy_j / self.presynth_energy_j.max(1e-12)
+    }
+}
+
+/// The online-synthesis flow.
+#[derive(Debug, Clone, Default)]
+pub struct HlsFlow {
+    pub model: HlsCostModel,
+}
+
+impl HlsFlow {
+    pub fn new(model: HlsCostModel) -> HlsFlow {
+        HlsFlow { model }
+    }
+
+    /// Synthesize a kernel described by `components` + `spec` into a
+    /// deployable bitstream, modeling the on-device cost.
+    pub fn synthesize(
+        &self,
+        name: &str,
+        components: &[Component],
+        spec: DatapathSpec,
+    ) -> SynthesisRun {
+        let resources = estimate(components);
+        let s = self.synthesis_seconds(&resources);
+        SynthesisRun {
+            bitstream: Bitstream::new(name, ROLE_BITSTREAM_BYTES, resources, spec),
+            synthesis_s: s,
+            synthesis_energy_j: s * self.model.host_active_w,
+        }
+    }
+
+    /// Seconds of on-device HLS + synthesis + P&R + bitgen.
+    pub fn synthesis_seconds(&self, resources: &ResourceVector) -> f64 {
+        let kluts = resources.luts as f64 / 1000.0;
+        self.model.hls_base_s
+            + kluts * (self.model.synth_s_per_klut + self.model.pnr_s_per_klut)
+            + self.model.bitgen_s
+    }
+
+    /// Compare pre-synthesized vs online flows for a role that is
+    /// dispatched `dispatches` times with `reconfigs` actual PCAP loads
+    /// (the rest are residency hits).
+    pub fn compare(
+        &self,
+        resources: &ResourceVector,
+        reconfig_us: u64,
+        dispatches: u64,
+        reconfigs: u64,
+    ) -> FlowComparison {
+        let reconfig_s = reconfigs as f64 * reconfig_us as f64 / 1e6;
+        let reconfig_j = reconfig_s * self.model.reconfig_w;
+        let synth_s = self.synthesis_seconds(resources);
+        FlowComparison {
+            dispatches,
+            presynth_total_s: reconfig_s,
+            presynth_energy_j: reconfig_j,
+            online_total_s: synth_s + reconfig_s,
+            online_energy_j: synth_s * self.model.host_active_w + reconfig_j,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::roles;
+
+    #[test]
+    fn synthesis_time_scales_with_design_size() {
+        let flow = HlsFlow::default();
+        let small = flow.synthesis_seconds(&ResourceVector::new(1000, 1000, 2, 1));
+        let big = flow.synthesis_seconds(&ResourceVector::new(10000, 9000, 20, 10));
+        assert!(big > small);
+        // Minutes, not milliseconds: that's the paper's point.
+        assert!(small > 100.0, "even a tiny kernel takes minutes: {small}");
+    }
+
+    #[test]
+    fn synthesize_produces_deployable_bitstream() {
+        let flow = HlsFlow::default();
+        let run = flow.synthesize(
+            "opencl_preproc",
+            &roles::role3_components(),
+            roles::role3_spec(),
+        );
+        assert_eq!(run.bitstream.resources, estimate(&roles::role3_components()));
+        assert!(run.synthesis_s > 0.0);
+        assert!(run.synthesis_energy_j > run.synthesis_s, "4.2 W host power");
+    }
+
+    #[test]
+    fn online_flow_dominated_by_synthesis() {
+        // The paper's claim: online synthesis costs orders of magnitude
+        // more time and energy than deploying a pre-synthesized bitstream.
+        let flow = HlsFlow::default();
+        let res = estimate(&roles::role3_components());
+        let cmp = flow.compare(&res, 7425, 1000, 1);
+        assert!(
+            cmp.overhead_factor() > 1000.0,
+            "online/presynth time factor {}",
+            cmp.overhead_factor()
+        );
+        assert!(
+            cmp.energy_factor() > 10_000.0,
+            "energy factor {}",
+            cmp.energy_factor()
+        );
+    }
+
+    #[test]
+    fn amortization_shrinks_with_reuse_but_stays_dominant() {
+        let flow = HlsFlow::default();
+        let res = estimate(&roles::role1_components());
+        let few = flow.compare(&res, 7425, 10, 10);
+        let many = flow.compare(&res, 7425, 100_000, 100_000);
+        assert!(many.overhead_factor() < few.overhead_factor());
+        assert!(many.overhead_factor() > 1.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! FPGA substrate: a simulator of the paper's Ultra96 programmable logic.
+//!
+//! The paper's testbed is a Zynq UltraScale+ ZU3EG whose PL carries a
+//! static *shell* plus partially-reconfigurable *regions*; pre-synthesized
+//! *role* bitstreams are loaded into regions at dispatch time. This module
+//! models exactly those pieces:
+//!
+//! * [`resources`] — LUT/FF/BRAM/DSP vectors and the ZU3EG inventory
+//!   (Table I's denominators);
+//! * [`datapath`] — per-role cycle models (Table III's numerators);
+//! * [`synthesis`] — a resource estimator over datapath descriptions
+//!   (regenerates Table I);
+//! * [`bitstream`] / [`region`] / [`shell`] — partial-reconfiguration
+//!   objects; [`icap`] — the PCAP/ICAP configuration-port timing model
+//!   (Table II's reconfiguration row);
+//! * [`roles`] — the paper's four roles as built-in bitstreams;
+//! * [`device`] — [`device::FpgaAgent`], the HSA agent wired to all of the
+//!   above, with numerics delegated to PJRT artifacts or native kernels.
+
+pub mod bitstream;
+pub mod datapath;
+pub mod device;
+pub mod hls;
+pub mod icap;
+pub mod region;
+pub mod resources;
+pub mod roles;
+pub mod shell;
+pub mod synthesis;
+
+pub use bitstream::Bitstream;
+pub use datapath::{DatapathSpec, RoleOp};
+pub use device::{ComputeBinding, FpgaAgent, FpgaConfig};
+pub use icap::Icap;
+pub use region::{PrRegion, RegionState};
+pub use resources::{ResourceVector, ZU3EG};
+pub use shell::Shell;

@@ -1,0 +1,104 @@
+//! Partial-reconfiguration regions.
+
+use crate::fpga::bitstream::RoleId;
+use crate::fpga::resources::ResourceVector;
+
+/// Lifecycle of a PR region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegionState {
+    /// Nothing loaded since power-up (grey box).
+    Empty,
+    /// PCAP transfer in progress.
+    Configuring,
+    /// A role is resident and idle.
+    Ready,
+    /// A role is resident and executing a dispatch.
+    Busy,
+}
+
+/// One reconfigurable partition of the shell floorplan.
+#[derive(Debug, Clone)]
+pub struct PrRegion {
+    pub id: usize,
+    /// Resources the floorplan grants this partition (an incoming role must
+    /// fit; the shell validates on load).
+    pub capacity: ResourceVector,
+    pub state: RegionState,
+    /// Resident role, if any.
+    pub loaded: Option<RoleId>,
+    /// Monotonic ticks for replacement policies.
+    pub loaded_at_tick: u64,
+    pub last_used_tick: u64,
+    /// Lifetime counters.
+    pub loads: u64,
+    pub dispatches: u64,
+}
+
+impl PrRegion {
+    pub fn new(id: usize, capacity: ResourceVector) -> PrRegion {
+        PrRegion {
+            id,
+            capacity,
+            state: RegionState::Empty,
+            loaded: None,
+            loaded_at_tick: 0,
+            last_used_tick: 0,
+            loads: 0,
+            dispatches: 0,
+        }
+    }
+
+    pub fn is_free(&self) -> bool {
+        self.loaded.is_none()
+    }
+
+    /// Install a role (the shell has already modeled the PCAP time).
+    pub fn load(&mut self, role: RoleId, tick: u64) {
+        self.loaded = Some(role);
+        self.state = RegionState::Ready;
+        self.loaded_at_tick = tick;
+        self.last_used_tick = tick;
+        self.loads += 1;
+    }
+
+    pub fn evict(&mut self) -> Option<RoleId> {
+        self.state = RegionState::Empty;
+        self.loaded.take()
+    }
+
+    pub fn touch(&mut self, tick: u64) {
+        self.last_used_tick = tick;
+        self.dispatches += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut r = PrRegion::new(0, ResourceVector::new(100, 100, 10, 10));
+        assert!(r.is_free());
+        assert_eq!(r.state, RegionState::Empty);
+        let role = RoleId(7);
+        r.load(role, 5);
+        assert_eq!(r.loaded, Some(role));
+        assert_eq!(r.state, RegionState::Ready);
+        assert_eq!(r.loaded_at_tick, 5);
+        r.touch(9);
+        assert_eq!(r.last_used_tick, 9);
+        assert_eq!(r.dispatches, 1);
+        assert_eq!(r.evict(), Some(role));
+        assert!(r.is_free());
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut r = PrRegion::new(0, ResourceVector::ZERO);
+        r.load(RoleId(1), 0);
+        r.evict();
+        r.load(RoleId(2), 1);
+        assert_eq!(r.loads, 2);
+    }
+}

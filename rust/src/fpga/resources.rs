@@ -1,0 +1,142 @@
+//! Programmable-logic resource vectors (LUT / FF / BRAM36 / DSP48E2).
+
+use std::fmt;
+use std::ops::{Add, AddAssign};
+
+/// A bundle of PL resources — one row of Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ResourceVector {
+    pub luts: u32,
+    pub ffs: u32,
+    pub bram36: u32,
+    pub dsps: u32,
+}
+
+/// The Zynq UltraScale+ ZU3EG device on the Ultra96 board. The paper's
+/// Table I percentages confirm these totals exactly (9915 LUT = 14.1 %,
+/// 8544 FF = 6.1 %, 10 BRAM = 4.6 %, 8 DSP = 2.2 %).
+pub const ZU3EG: ResourceVector = ResourceVector {
+    luts: 70_560,
+    ffs: 141_120,
+    bram36: 216,
+    dsps: 360,
+};
+
+impl ResourceVector {
+    pub const fn new(luts: u32, ffs: u32, bram36: u32, dsps: u32) -> Self {
+        ResourceVector { luts, ffs, bram36, dsps }
+    }
+
+    pub const ZERO: ResourceVector = ResourceVector::new(0, 0, 0, 0);
+
+    /// Component-wise `self <= other`.
+    pub fn fits_in(&self, other: &ResourceVector) -> bool {
+        self.luts <= other.luts
+            && self.ffs <= other.ffs
+            && self.bram36 <= other.bram36
+            && self.dsps <= other.dsps
+    }
+
+    /// Component-wise saturating subtraction (remaining capacity).
+    pub fn saturating_sub(&self, other: &ResourceVector) -> ResourceVector {
+        ResourceVector {
+            luts: self.luts.saturating_sub(other.luts),
+            ffs: self.ffs.saturating_sub(other.ffs),
+            bram36: self.bram36.saturating_sub(other.bram36),
+            dsps: self.dsps.saturating_sub(other.dsps),
+        }
+    }
+
+    /// Utilization of each component against a device, in percent.
+    pub fn utilization_pct(&self, device: &ResourceVector) -> [f64; 4] {
+        let pct = |a: u32, b: u32| if b == 0 { 0.0 } else { 100.0 * a as f64 / b as f64 };
+        [
+            pct(self.luts, device.luts),
+            pct(self.ffs, device.ffs),
+            pct(self.bram36, device.bram36),
+            pct(self.dsps, device.dsps),
+        ]
+    }
+
+    /// Format one Table-I-style row: `9915 (14.1%)  8544 (6.1%) ...`.
+    pub fn table_row(&self, device: &ResourceVector) -> String {
+        let u = self.utilization_pct(device);
+        format!(
+            "{:>6} ({:>4.1}%) | {:>6} ({:>4.1}%) | {:>4} ({:>4.1}%) | {:>4} ({:>4.1}%)",
+            self.luts, u[0], self.ffs, u[1], self.bram36, u[2], self.dsps, u[3]
+        )
+    }
+}
+
+impl Add for ResourceVector {
+    type Output = ResourceVector;
+    fn add(self, rhs: ResourceVector) -> ResourceVector {
+        ResourceVector {
+            luts: self.luts + rhs.luts,
+            ffs: self.ffs + rhs.ffs,
+            bram36: self.bram36 + rhs.bram36,
+            dsps: self.dsps + rhs.dsps,
+        }
+    }
+}
+
+impl AddAssign for ResourceVector {
+    fn add_assign(&mut self, rhs: ResourceVector) {
+        *self = *self + rhs;
+    }
+}
+
+impl fmt::Display for ResourceVector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} LUT / {} FF / {} BRAM / {} DSP",
+            self.luts, self.ffs, self.bram36, self.dsps
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_percentages_confirm_zu3eg() {
+        // Shell row of Table I.
+        let shell = ResourceVector::new(9915, 8544, 10, 0);
+        let u = shell.utilization_pct(&ZU3EG);
+        assert!((u[0] - 14.1).abs() < 0.1, "LUT% {}", u[0]);
+        assert!((u[1] - 6.1).abs() < 0.1, "FF% {}", u[1]);
+        assert!((u[2] - 4.6).abs() < 0.1, "BRAM% {}", u[2]);
+        // Role 2 row.
+        let r2 = ResourceVector::new(9501, 7851, 23, 8);
+        let u2 = r2.utilization_pct(&ZU3EG);
+        assert!((u2[0] - 13.5).abs() < 0.1);
+        assert!((u2[1] - 5.6).abs() < 0.1);
+        assert!((u2[2] - 10.6).abs() < 0.1);
+        assert!((u2[3] - 2.2).abs() < 0.1);
+    }
+
+    #[test]
+    fn fits_and_subtract() {
+        let a = ResourceVector::new(10, 10, 1, 1);
+        let b = ResourceVector::new(20, 10, 2, 1);
+        assert!(a.fits_in(&b));
+        assert!(!b.fits_in(&a));
+        assert_eq!(b.saturating_sub(&a), ResourceVector::new(10, 0, 1, 0));
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut v = ResourceVector::ZERO;
+        v += ResourceVector::new(1, 2, 3, 4);
+        v += ResourceVector::new(10, 20, 30, 40);
+        assert_eq!(v, ResourceVector::new(11, 22, 33, 44));
+    }
+
+    #[test]
+    fn zero_device_is_zero_pct() {
+        let v = ResourceVector::new(1, 1, 1, 1);
+        assert_eq!(v.utilization_pct(&ResourceVector::ZERO), [0.0; 4]);
+    }
+}

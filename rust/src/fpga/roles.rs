@@ -1,0 +1,364 @@
+//! The paper's four roles (§IV) as built-in pre-synthesized bitstreams,
+//! plus the shell netlist and extra roles used by the examples.
+//!
+//! Component lists and datapath parameters are calibrated against Table I
+//! (resources) and Table III (OP/cycle) — see DESIGN.md §6 for the
+//! derivations. Role 1's FF/BRAM/DSP columns are garbled in the published
+//! table; ours are estimates from the role-2 structure (double buffer
+//! instead of barrier logic) and are labeled `(est.)` in bench output.
+
+use crate::fpga::bitstream::Bitstream;
+use crate::fpga::datapath::{DatapathSpec, RoleOp};
+use crate::fpga::resources::ResourceVector;
+use crate::fpga::synthesis::{estimate, Component};
+
+/// PL clock all roles close timing at (conservative for ZU3EG speedgrade-1).
+pub const PL_CLOCK_MHZ: u32 = 150;
+
+/// Partial bitstream size for one PR region of the Ultra96 floorplan
+/// (~quarter-device partition). Chosen so the default PCAP model lands on
+/// the paper's 7424 µs reconfiguration time: 7424 µs ≈ 350 µs setup +
+/// bytes / 134.22 B/µs  =>  bytes ≈ 949 639 ≈ 928 KiB.
+pub const ROLE_BITSTREAM_BYTES: u64 = 949_632;
+
+fn fc_nominal() -> RoleOp {
+    RoleOp::FcF32 { m: 64, k: 64, n: 64 }
+}
+
+fn conv5_nominal() -> RoleOp {
+    RoleOp::ConvI16 { cin: 1, h: 28, w: 28, kh: 5, kw: 5, filters: 1 }
+}
+
+fn conv3_nominal() -> RoleOp {
+    RoleOp::ConvI16 { cin: 1, h: 28, w: 28, kh: 3, kw: 3, filters: 2 }
+}
+
+/// Shell netlist (static logic: interconnect, 2 DMA engines, PCAP/PR
+/// controller, queue-doorbell MMIO block).
+pub fn shell_components() -> Vec<Component> {
+    vec![
+        Component::AxiInterconnect,
+        Component::DmaEngine,
+        Component::DmaEngine,
+        Component::PcapController,
+        Component::DoorbellMmio,
+    ]
+}
+
+/// Shell synthesis estimate (Table I row 1: 9915 LUT / 8544 FF / 10 BRAM).
+pub fn shell_resources() -> ResourceVector {
+    estimate(&shell_components())
+}
+
+/// Role 1 — fully connected, float32 (4 f32 MACs, double-buffered output
+/// for barrier-free full pipelining).
+pub fn role1_components() -> Vec<Component> {
+    vec![
+        Component::ControlFsm,
+        Component::AxiStreamIf,
+        Component::AxiStreamIf,
+        Component::F32Mac,
+        Component::F32Mac,
+        Component::F32Mac,
+        Component::F32Mac,
+        Component::DoubleBuffer,
+        Component::WeightBuffer { kb: 32 },
+        Component::StreamFifo { kb: 20 },
+        Component::StreamFifo { kb: 20 },
+    ]
+}
+
+pub fn role1_spec() -> DatapathSpec {
+    DatapathSpec {
+        name: "role1_fc",
+        op: fc_nominal(),
+        macs_per_cycle: 4,
+        ii: 1,
+        pipeline_depth: 32,
+        burst_bytes: 4096,
+        burst_overhead_cycles: 8,
+        barriers_per_pass: 0,
+        barrier_stall_cycles: 0,
+        clock_mhz: PL_CLOCK_MHZ,
+    }
+}
+
+/// Role 2 — fully connected with barrier, float32 (same MAC array; the
+/// barrier serializes accumulate/writeback so the double buffer is
+/// replaced by synchronization logic).
+pub fn role2_components() -> Vec<Component> {
+    vec![
+        Component::ControlFsm,
+        Component::AxiStreamIf,
+        Component::AxiStreamIf,
+        Component::F32Mac,
+        Component::F32Mac,
+        Component::F32Mac,
+        Component::F32Mac,
+        Component::BarrierSync,
+        Component::WeightBuffer { kb: 32 },
+        Component::StreamFifo { kb: 20 },
+        Component::StreamFifo { kb: 20 },
+    ]
+}
+
+pub fn role2_spec() -> DatapathSpec {
+    DatapathSpec {
+        name: "role2_fc_barrier",
+        op: fc_nominal(),
+        macs_per_cycle: 4,
+        ii: 1,
+        pipeline_depth: 32,
+        burst_bytes: 4096,
+        burst_overhead_cycles: 8,
+        // One barrier per output row: the PE partial sums must all arrive
+        // before the row is committed (paper: "fully connected with
+        // barrier"). Stall = pipeline drain + handshake, calibrated to the
+        // Table III 3.03x ratio.
+        barriers_per_pass: 64,
+        barrier_stall_cycles: 1178,
+        clock_mhz: PL_CLOCK_MHZ,
+    }
+}
+
+/// Role 3 — conv 5×5, 1 filter, fixed weights, int16. 25 constant taps:
+/// CSD-cheap ones become LUT shift/add chains, hard ones keep DSP48s
+/// (6 DSPs, matching Table I).
+pub fn role3_components() -> Vec<Component> {
+    let mut c = vec![
+        Component::ControlFsm,
+        Component::AxiStreamIf,
+        Component::AxiStreamIf,
+        Component::LineBuffer { rows: 4 },
+        Component::QuantSat,
+        Component::StreamFifo { kb: 25 },
+        Component::StreamFifo { kb: 25 },
+    ];
+    // 25 taps: 19 LUT-mapped + 6 DSP-mapped.
+    for _ in 0..19 {
+        c.push(Component::I16TapLut);
+    }
+    for _ in 0..6 {
+        c.push(Component::I16TapDsp);
+    }
+    // 24-node accumulation tree.
+    for _ in 0..24 {
+        c.push(Component::AdderTreeNode);
+    }
+    c
+}
+
+pub fn role3_spec() -> DatapathSpec {
+    DatapathSpec {
+        name: "role3_conv5x5",
+        op: conv5_nominal(),
+        macs_per_cycle: 25, // all taps fire each cycle (line-buffered window)
+        ii: 1,
+        pipeline_depth: 40,
+        burst_bytes: 4096,
+        burst_overhead_cycles: 8,
+        barriers_per_pass: 0,
+        barrier_stall_cycles: 0,
+        clock_mhz: PL_CLOCK_MHZ,
+    }
+}
+
+/// Role 4 — conv 3×3, 2 filters, fixed weights, int16. 18 taps (12 DSP,
+/// 6 LUT) + two filter pipelines + a 2-way output mux.
+pub fn role4_components() -> Vec<Component> {
+    let mut c = vec![
+        Component::ControlFsm,
+        Component::AxiStreamIf,
+        Component::AxiStreamIf,
+        Component::LineBuffer { rows: 2 },
+        Component::QuantSat,
+        Component::QuantSat,
+        Component::FilterPipeline,
+        Component::FilterPipeline,
+        Component::OutputMux { ways: 2 },
+        Component::StreamFifo { kb: 29 },
+        Component::StreamFifo { kb: 29 },
+    ];
+    for _ in 0..6 {
+        c.push(Component::I16TapLut);
+    }
+    for _ in 0..12 {
+        c.push(Component::I16TapDsp);
+    }
+    for _ in 0..16 {
+        c.push(Component::AdderTreeNode);
+    }
+    c
+}
+
+pub fn role4_spec() -> DatapathSpec {
+    DatapathSpec {
+        name: "role4_conv3x3",
+        op: conv3_nominal(),
+        macs_per_cycle: 18, // 2 filters x 9 taps in parallel
+        ii: 1,
+        pipeline_depth: 28,
+        burst_bytes: 4096,
+        burst_overhead_cycles: 8,
+        barriers_per_pass: 0,
+        barrier_stall_cycles: 0,
+        clock_mhz: PL_CLOCK_MHZ,
+    }
+}
+
+/// Build the four paper bitstreams (ids are fresh per call).
+pub fn paper_roles() -> Vec<Bitstream> {
+    vec![
+        Bitstream::new(
+            "role1_fc",
+            ROLE_BITSTREAM_BYTES,
+            estimate(&role1_components()),
+            role1_spec(),
+        ),
+        Bitstream::new(
+            "role2_fc_barrier",
+            ROLE_BITSTREAM_BYTES,
+            estimate(&role2_components()),
+            role2_spec(),
+        ),
+        Bitstream::new(
+            "role3_conv5x5",
+            ROLE_BITSTREAM_BYTES,
+            estimate(&role3_components()),
+            role3_spec(),
+        ),
+        Bitstream::new(
+            "role4_conv3x3",
+            ROLE_BITSTREAM_BYTES,
+            estimate(&role4_components()),
+            role4_spec(),
+        ),
+    ]
+}
+
+/// An extra "preprocessing" role for the multi-tenant example (the paper's
+/// pre/post-processing sharing story): a generic streaming op.
+pub fn preprocess_role() -> Bitstream {
+    let spec = DatapathSpec {
+        name: "preprocess_stream",
+        op: RoleOp::Stream { elements: 784, ops_per_element: 8 },
+        macs_per_cycle: 4,
+        ii: 1,
+        pipeline_depth: 16,
+        burst_bytes: 4096,
+        burst_overhead_cycles: 8,
+        barriers_per_pass: 0,
+        barrier_stall_cycles: 0,
+        clock_mhz: PL_CLOCK_MHZ,
+    };
+    let comps = vec![
+        Component::ControlFsm,
+        Component::AxiStreamIf,
+        Component::AxiStreamIf,
+        Component::QuantSat,
+        Component::StreamFifo { kb: 16 },
+        Component::StreamFifo { kb: 16 },
+    ];
+    Bitstream::new("preprocess_stream", ROLE_BITSTREAM_BYTES, estimate(&comps), spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table I, shell row: 9915 (14.1%) | 8544 (6.1%) | 10 (4.6%) | 0.
+    #[test]
+    fn shell_matches_table1() {
+        let r = shell_resources();
+        assert_eq!(r, ResourceVector::new(9915, 8544, 10, 0));
+    }
+
+    /// Table I, role 1 row: LUTs published as 9984 (14.1%); other columns
+    /// estimated.
+    #[test]
+    fn role1_luts_match_table1() {
+        let r = estimate(&role1_components());
+        assert_eq!(r.luts, 9984);
+        assert_eq!(r.dsps, 8, "4 f32 MACs x 2 DSP48E2");
+    }
+
+    /// Table I, role 2 row: 9501 | 7851 | 23 | 8.
+    #[test]
+    fn role2_matches_table1() {
+        let r = estimate(&role2_components());
+        assert_eq!(r, ResourceVector::new(9501, 7851, 23, 8));
+    }
+
+    /// Table I, role 3 row: 5091 | 4935 | 21 | 6.
+    #[test]
+    fn role3_matches_table1() {
+        let r = estimate(&role3_components());
+        assert_eq!(r, ResourceVector::new(5091, 4935, 21, 6));
+    }
+
+    /// Table I, role 4 row: 7881 | 7926 | 21 | 12. The LUT column is ±1 of
+    /// the paper (no integer component decomposition hits 7881 exactly
+    /// given the shared components' parities); the printed percentage
+    /// (11.2 %) is identical.
+    #[test]
+    fn role4_matches_table1() {
+        let r = estimate(&role4_components());
+        assert!((r.luts as i64 - 7881).abs() <= 1, "role4 LUTs {}", r.luts);
+        assert_eq!(r.ffs, 7926);
+        assert_eq!(r.bram36, 21);
+        assert_eq!(r.dsps, 12);
+        let pct = r.utilization_pct(&crate::fpga::resources::ZU3EG);
+        assert!((pct[0] - 11.2).abs() < 0.05, "LUT% {}", pct[0]);
+    }
+
+    #[test]
+    fn reconfig_time_matches_table2() {
+        let icap = crate::fpga::icap::Icap::default();
+        let us = icap.reconfig_time_us(ROLE_BITSTREAM_BYTES);
+        // Paper: 7424 µs.
+        assert!((us as i64 - 7424).abs() < 100, "reconfig {us} µs");
+    }
+
+    #[test]
+    fn all_roles_have_distinct_ids_and_names() {
+        let roles = paper_roles();
+        let mut names: Vec<&str> = roles.iter().map(|r| r.name.as_str()).collect();
+        names.dedup();
+        assert_eq!(names.len(), 4);
+        let mut ids: Vec<u64> = roles.iter().map(|r| r.id.0).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 4);
+    }
+
+    #[test]
+    fn role_ops_per_cycle_land_on_table3_numerators() {
+        // FPGA-side achieved OP/cycle; Table III ratios divide by the A53
+        // model (see cpu::a53 tests for the end-to-end ratio check).
+        let r1 = role1_spec();
+        let opc1 = r1.ops_per_cycle(&r1.op);
+        assert!((opc1 - 7.99).abs() < 0.05, "role1 {opc1}");
+        let r2 = role2_spec();
+        let opc2 = r2.ops_per_cycle(&r2.op);
+        assert!((opc2 - 3.72).abs() < 0.05, "role2 {opc2}");
+        let r3 = role3_spec();
+        let opc3 = r3.ops_per_cycle(&r3.op);
+        assert!((opc3 - 46.2).abs() < 0.5, "role3 {opc3}");
+        let r4 = role4_spec();
+        let opc4 = r4.ops_per_cycle(&r4.op);
+        assert!((opc4 - 33.8).abs() < 0.5, "role4 {opc4}");
+    }
+
+    #[test]
+    fn roles_fit_in_a_quarter_device_region() {
+        let cap = ResourceVector::new(
+            crate::fpga::resources::ZU3EG.luts / 4,
+            crate::fpga::resources::ZU3EG.ffs / 4,
+            crate::fpga::resources::ZU3EG.bram36 / 4,
+            crate::fpga::resources::ZU3EG.dsps / 4,
+        );
+        for r in paper_roles() {
+            assert!(r.resources.fits_in(&cap), "{} does not fit: {}", r.name, r.resources);
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! The static shell: floorplan, PR region partitions, configuration port.
+//!
+//! The shell is the always-resident part of the PL design (Table I row 1):
+//! AXI interconnect, DMA engines, the PCAP/PR controller and the queue
+//! doorbell block. It owns the floorplan — how many PR regions exist and
+//! how much of the device each one gets.
+
+use crate::fpga::icap::Icap;
+use crate::fpga::region::PrRegion;
+use crate::fpga::resources::{ResourceVector, ZU3EG};
+use crate::fpga::roles::shell_resources;
+
+/// Floorplan + static logic of the FPGA design.
+#[derive(Debug)]
+pub struct Shell {
+    pub device: ResourceVector,
+    pub static_resources: ResourceVector,
+    pub regions: Vec<PrRegion>,
+    pub icap: Icap,
+}
+
+impl Shell {
+    /// The paper's Ultra96 shell with `num_regions` equal PR partitions
+    /// carved out of the device resources left after the static logic.
+    pub fn ultra96(num_regions: usize) -> Shell {
+        assert!(num_regions >= 1, "at least one PR region");
+        let stat = shell_resources();
+        let remaining = ZU3EG.saturating_sub(&stat);
+        let per_region = ResourceVector {
+            luts: remaining.luts / num_regions as u32,
+            ffs: remaining.ffs / num_regions as u32,
+            bram36: remaining.bram36 / num_regions as u32,
+            dsps: remaining.dsps / num_regions as u32,
+        };
+        let regions = (0..num_regions)
+            .map(|i| PrRegion::new(i, per_region))
+            .collect();
+        Shell {
+            device: ZU3EG,
+            static_resources: stat,
+            regions,
+            icap: Icap::default(),
+        }
+    }
+
+    /// Total resources currently accounted (static + capacity granted to
+    /// regions) — must never exceed the device.
+    pub fn budget_consistent(&self) -> bool {
+        let mut total = self.static_resources;
+        for r in &self.regions {
+            total += r.capacity;
+        }
+        total.fits_in(&self.device)
+    }
+
+    pub fn num_regions(&self) -> usize {
+        self.regions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::roles::paper_roles;
+
+    #[test]
+    fn default_floorplan_is_consistent() {
+        for n in 1..=4 {
+            let s = Shell::ultra96(n);
+            assert!(s.budget_consistent(), "{n} regions over budget");
+            assert_eq!(s.num_regions(), n);
+        }
+    }
+
+    #[test]
+    fn two_region_floorplan_fits_all_paper_roles() {
+        let s = Shell::ultra96(2);
+        for role in paper_roles() {
+            assert!(
+                role.resources.fits_in(&s.regions[0].capacity),
+                "{} does not fit half-device region",
+                role.name
+            );
+        }
+    }
+
+    #[test]
+    fn four_region_floorplan_fits_all_paper_roles() {
+        let s = Shell::ultra96(4);
+        for role in paper_roles() {
+            assert!(
+                role.resources.fits_in(&s.regions[0].capacity),
+                "{} does not fit quarter-device region",
+                role.name
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one")]
+    fn zero_regions_rejected() {
+        Shell::ultra96(0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Resource estimation — regenerates Table I.
+//!
+//! A role netlist is modeled as a bag of datapath *components* with
+//! per-component LUT/FF/BRAM/DSP costs. The cost table is calibrated
+//! against the paper's Vivado results (Table I) so that the shell and the
+//! four roles reproduce the published rows; the estimator then extrapolates
+//! sensibly when roles are modified (more taps, more filters, wider MACs),
+//! which the ablation benches exercise.
+//!
+//! Fixed-weight multipliers are classified LUT-vs-DSP the way a synthesizer
+//! would: a constant multiplier whose canonical-signed-digit (CSD) form has
+//! few nonzero digits becomes a short shift/add chain in LUTs; "hard"
+//! constants keep a DSP48. See [`csd_terms`].
+
+use crate::fpga::resources::ResourceVector;
+
+/// Datapath building blocks with calibrated synthesis costs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Component {
+    /// Role control FSM + microcode store.
+    ControlFsm,
+    /// One AXI4-Stream endpoint (in or out).
+    AxiStreamIf,
+    /// One float32 multiply-accumulate unit (mantissa mult in DSPs,
+    /// alignment/normalization in LUTs).
+    F32Mac,
+    /// Barrier synchronization stage (role 2).
+    BarrierSync,
+    /// LUTRAM ping-pong output buffer (role 1's full pipelining).
+    DoubleBuffer,
+    /// On-chip weight store of `kb` kibibytes.
+    WeightBuffer { kb: u32 },
+    /// Stream FIFO of `kb` kibibytes.
+    StreamFifo { kb: u32 },
+    /// One fixed-weight int16 tap mapped to LUT shift/add logic.
+    I16TapLut,
+    /// One fixed-weight int16 tap kept on a DSP48.
+    I16TapDsp,
+    /// One node of the accumulation adder tree.
+    AdderTreeNode,
+    /// Convolution line buffer holding `rows` image rows.
+    LineBuffer { rows: u32 },
+    /// Requantize + saturate stage (int16 output).
+    QuantSat,
+    /// Per-filter replication overhead: private accumulator pipeline,
+    /// writeback DMA descriptor generator (multi-filter conv roles).
+    FilterPipeline,
+    /// N-way output stream multiplexer.
+    OutputMux { ways: u32 },
+    /// Shell parts (static logic, not inside any role).
+    AxiInterconnect,
+    DmaEngine,
+    PcapController,
+    DoorbellMmio,
+}
+
+/// Bytes per BRAM36 (36 Kib = 4.5 KiB).
+const BRAM36_KIB: f64 = 4.5;
+
+fn brams_for_kib(kb: u32) -> u32 {
+    (kb as f64 / BRAM36_KIB).ceil() as u32
+}
+
+impl Component {
+    /// Calibrated synthesis cost of this component.
+    pub fn cost(&self) -> ResourceVector {
+        use Component::*;
+        match *self {
+            ControlFsm => ResourceVector::new(890, 580, 1, 0),
+            AxiStreamIf => ResourceVector::new(650, 580, 2, 0),
+            F32Mac => ResourceVector::new(1560, 1300, 0, 2),
+            BarrierSync => ResourceVector::new(501, 451, 0, 0),
+            DoubleBuffer => ResourceVector::new(984, 704, 0, 0),
+            WeightBuffer { kb } => ResourceVector::new(210, 180, brams_for_kib(kb), 0),
+            StreamFifo { kb } => ResourceVector::new(180, 140, brams_for_kib(kb), 0),
+            I16TapLut => ResourceVector::new(60, 68, 0, 0),
+            I16TapDsp => ResourceVector::new(25, 40, 0, 1),
+            AdderTreeNode => ResourceVector::new(40, 47, 0, 0),
+            LineBuffer { rows } => ResourceVector::new(120, 130, rows, 0),
+            QuantSat => ResourceVector::new(171, 125, 0, 0),
+            FilterPipeline => ResourceVector::new(1474, 1653, 0, 0),
+            OutputMux { ways } => ResourceVector::new(310 * ways, 290 * ways, 0, 0),
+            AxiInterconnect => ResourceVector::new(3200, 2800, 2, 0),
+            DmaEngine => ResourceVector::new(2200, 1900, 3, 0),
+            PcapController => ResourceVector::new(1317, 1144, 0, 0),
+            DoorbellMmio => ResourceVector::new(998, 800, 2, 0),
+        }
+    }
+}
+
+/// Estimate the synthesis result of a netlist (bag of components).
+pub fn estimate(components: &[Component]) -> ResourceVector {
+    components
+        .iter()
+        .fold(ResourceVector::ZERO, |acc, c| acc + c.cost())
+}
+
+/// Number of nonzero digits in the canonical signed-digit representation of
+/// `w` — the cost metric for constant multipliers. CSD recoding guarantees
+/// no two adjacent nonzero digits; a constant with `t` nonzero digits costs
+/// `t-1` adders as LUT logic.
+pub fn csd_terms(w: i32) -> u32 {
+    let mut v: i64 = (w as i64).abs();
+    let mut terms = 0u32;
+    while v != 0 {
+        if v & 1 != 0 {
+            // Round to the nearest multiple of 4 (standard CSD recoding):
+            // ±1 chosen so the next two bits are clear.
+            if v & 3 == 3 {
+                v += 1; // digit -1
+            } else {
+                v -= 1; // digit +1
+            }
+            terms += 1;
+        }
+        v >>= 1;
+    }
+    terms
+}
+
+/// Split fixed taps between LUT shift/add chains and DSP48s. Taps with at
+/// most `lut_threshold` CSD terms synthesize to adders; the rest keep DSPs.
+pub fn classify_taps(weights: &[i32], lut_threshold: u32) -> (usize, usize) {
+    let mut lut = 0;
+    let mut dsp = 0;
+    for &w in weights {
+        if csd_terms(w) <= lut_threshold {
+            lut += 1;
+        } else {
+            dsp += 1;
+        }
+    }
+    (lut, dsp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csd_of_powers_of_two_is_one_term() {
+        for sh in 0..14 {
+            assert_eq!(csd_terms(1 << sh), 1, "2^{sh}");
+        }
+    }
+
+    #[test]
+    fn csd_of_zero_is_zero() {
+        assert_eq!(csd_terms(0), 0);
+    }
+
+    #[test]
+    fn csd_uses_signed_digits() {
+        // 15 = 16 - 1 -> 2 terms (binary would need 4).
+        assert_eq!(csd_terms(15), 2);
+        // 7 = 8 - 1.
+        assert_eq!(csd_terms(7), 2);
+        // 5 = 4 + 1.
+        assert_eq!(csd_terms(5), 2);
+        // 11 = 8 + 2 + 1 or 16-4-1 -> 3 terms.
+        assert_eq!(csd_terms(11), 3);
+    }
+
+    #[test]
+    fn csd_symmetric_in_sign() {
+        for w in [-127, -64, -11, -1, 1, 11, 64, 127] {
+            assert_eq!(csd_terms(w), csd_terms(-w));
+        }
+    }
+
+    #[test]
+    fn classify_splits_all_taps() {
+        let ws: Vec<i32> = (-12..13).collect();
+        let (l, d) = classify_taps(&ws, 2);
+        assert_eq!(l + d, ws.len());
+        assert!(l > 0);
+    }
+
+    #[test]
+    fn estimate_sums_components() {
+        let est = estimate(&[Component::ControlFsm, Component::F32Mac]);
+        assert_eq!(est, Component::ControlFsm.cost() + Component::F32Mac.cost());
+    }
+
+    #[test]
+    fn bram_rounding_up() {
+        assert_eq!(brams_for_kib(1), 1);
+        assert_eq!(brams_for_kib(5), 2);
+        assert_eq!(brams_for_kib(9), 2);
+        assert_eq!(brams_for_kib(10), 3);
+    }
+}

@@ -1,0 +1,71 @@
+//! The HSA agent abstraction: anything that consumes kernel-dispatch
+//! packets (CPU cores, the FPGA's PR-region fabric, GPUs...).
+
+use crate::hsa::error::Result;
+use crate::hsa::packet::KernelDispatchPacket;
+use std::fmt;
+
+/// Device classes the runtime can discover (paper Fig. 1: CPU, GPU, FPGA,
+/// DSP all behind the same runtime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DeviceType {
+    Cpu,
+    Fpga,
+    Gpu,
+    Dsp,
+}
+
+impl fmt::Display for DeviceType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// Static agent properties (subset of `hsa_agent_get_info`).
+#[derive(Debug, Clone)]
+pub struct AgentInfo {
+    pub name: String,
+    pub vendor: String,
+    pub device_type: DeviceType,
+    /// Maximum AQL queue size in packets.
+    pub queue_max_size: usize,
+    /// ISA string, e.g. "armv8-a53" or "zu3eg-pr".
+    pub isa: String,
+    /// Peak clock in MHz (used by the timing models).
+    pub clock_mhz: u32,
+    /// Number of compute units (CPU cores / PR regions).
+    pub compute_units: u32,
+}
+
+/// An agent executes kernel-dispatch packets. Implementations:
+/// [`crate::cpu::CpuAgent`], [`crate::fpga::FpgaAgent`].
+pub trait Agent: Send + Sync {
+    fn info(&self) -> &AgentInfo;
+
+    /// Execute one kernel dispatch synchronously (the packet processor
+    /// thread calls this; concurrency across agents comes from each agent
+    /// having its own queue + processor thread).
+    fn execute(&self, packet: &KernelDispatchPacket) -> Result<()>;
+
+    /// Virtual nanoseconds this agent's device clock has advanced (timing
+    /// model output; wall-clock-independent).
+    fn virtual_time_ns(&self) -> u128 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_type_display() {
+        assert_eq!(DeviceType::Fpga.to_string(), "Fpga");
+        assert_eq!(DeviceType::Cpu.to_string(), "Cpu");
+    }
+
+    #[test]
+    fn device_type_ordering_stable() {
+        assert!(DeviceType::Cpu < DeviceType::Fpga);
+    }
+}

@@ -1,0 +1,32 @@
+//! Error type shared by the HSA runtime layers.
+
+use crate::tf::tensor::TensorError;
+
+#[derive(Debug, thiserror::Error)]
+pub enum HsaError {
+    #[error("no agent of type {0} found")]
+    NoSuchAgent(String),
+
+    #[error("unknown kernel object {0:#x}")]
+    UnknownKernel(u64),
+
+    #[error("queue is shut down")]
+    QueueShutDown,
+
+    #[error("signal wait timed out after {0:?}")]
+    SignalTimeout(std::time::Duration),
+
+    #[error("kernel execution failed: {0}")]
+    KernelFailed(String),
+
+    #[error("tensor error: {0}")]
+    Tensor(#[from] TensorError),
+
+    #[error("memory error: {0}")]
+    Memory(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+}
+
+pub type Result<T> = std::result::Result<T, HsaError>;

@@ -1,0 +1,203 @@
+//! HSA memory regions and a tracking allocator.
+//!
+//! Tensors live in ordinary Rust `Vec`s; what this module models is the
+//! *accounting* the HSA runtime performs — region discovery
+//! (`hsa_agent_iterate_regions`) and allocation limits — so the coordinator
+//! can enforce device memory budgets (the Ultra96 shares 2 GiB LPDDR4
+//! between the A53s and the PL) and the tests can assert no leaks.
+
+use crate::hsa::error::{HsaError, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// HSA memory segment kinds (PPS §2.8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Segment {
+    /// System-visible global memory.
+    Global,
+    /// Kernel argument segment.
+    KernArg,
+    /// Group (scratch/local) memory — the FPGA's BRAM-backed buffers.
+    Group,
+}
+
+/// A discoverable memory region.
+#[derive(Debug, Clone)]
+pub struct RegionInfo {
+    pub name: String,
+    pub segment: Segment,
+    pub size_bytes: u64,
+    /// Smallest allocation granule.
+    pub granule: u64,
+}
+
+/// Handle to an allocation (freeing is explicit; `Drop` is intentionally
+/// not used so tests can detect leaks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AllocId(u64);
+
+#[derive(Debug)]
+struct PoolState {
+    live: BTreeMap<u64, u64>, // id -> size
+    used: u64,
+    peak: u64,
+}
+
+/// A tracking allocator over one region.
+#[derive(Debug, Clone)]
+pub struct MemoryPool {
+    info: RegionInfo,
+    state: Arc<Mutex<PoolState>>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl MemoryPool {
+    pub fn new(info: RegionInfo) -> MemoryPool {
+        MemoryPool {
+            info,
+            state: Arc::new(Mutex::new(PoolState {
+                live: BTreeMap::new(),
+                used: 0,
+                peak: 0,
+            })),
+            next_id: Arc::new(AtomicU64::new(1)),
+        }
+    }
+
+    pub fn info(&self) -> &RegionInfo {
+        &self.info
+    }
+
+    /// Allocate `size` bytes (rounded up to the granule).
+    pub fn alloc(&self, size: u64) -> Result<AllocId> {
+        let granule = self.info.granule.max(1);
+        let rounded = size.div_ceil(granule) * granule;
+        let mut st = self.state.lock().unwrap();
+        if st.used + rounded > self.info.size_bytes {
+            return Err(HsaError::Memory(format!(
+                "region '{}' exhausted: used {} + req {} > {}",
+                self.info.name, st.used, rounded, self.info.size_bytes
+            )));
+        }
+        let id = AllocId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        st.used += rounded;
+        st.peak = st.peak.max(st.used);
+        st.live.insert(id.0, rounded);
+        Ok(id)
+    }
+
+    pub fn free(&self, id: AllocId) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        match st.live.remove(&id.0) {
+            Some(sz) => {
+                st.used -= sz;
+                Ok(())
+            }
+            None => Err(HsaError::Memory(format!("double free / unknown alloc {id:?}"))),
+        }
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.state.lock().unwrap().used
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.state.lock().unwrap().peak
+    }
+
+    pub fn live_allocations(&self) -> usize {
+        self.state.lock().unwrap().live.len()
+    }
+}
+
+/// Standard regions for the simulated Ultra96 (2 GiB LPDDR4 shared; 512 KiB
+/// of role-local BRAM treated as group memory; a small kernarg segment).
+pub fn ultra96_regions() -> Vec<MemoryPool> {
+    vec![
+        MemoryPool::new(RegionInfo {
+            name: "lpddr4-global".into(),
+            segment: Segment::Global,
+            size_bytes: 2 << 30,
+            granule: 4096,
+        }),
+        MemoryPool::new(RegionInfo {
+            name: "kernarg".into(),
+            segment: Segment::KernArg,
+            size_bytes: 16 << 20,
+            granule: 64,
+        }),
+        MemoryPool::new(RegionInfo {
+            name: "pl-bram-group".into(),
+            segment: Segment::Group,
+            size_bytes: 512 << 10,
+            granule: 32,
+        }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(size: u64, granule: u64) -> MemoryPool {
+        MemoryPool::new(RegionInfo {
+            name: "t".into(),
+            segment: Segment::Global,
+            size_bytes: size,
+            granule,
+        })
+    }
+
+    #[test]
+    fn alloc_free_cycle() {
+        let p = pool(1024, 1);
+        let a = p.alloc(100).unwrap();
+        assert_eq!(p.used_bytes(), 100);
+        p.free(a).unwrap();
+        assert_eq!(p.used_bytes(), 0);
+        assert_eq!(p.peak_bytes(), 100);
+    }
+
+    #[test]
+    fn granule_rounding() {
+        let p = pool(1024, 64);
+        let _ = p.alloc(1).unwrap();
+        assert_eq!(p.used_bytes(), 64);
+    }
+
+    #[test]
+    fn exhaustion_fails_cleanly() {
+        let p = pool(128, 1);
+        let _a = p.alloc(100).unwrap();
+        assert!(p.alloc(29).is_err());
+        assert_eq!(p.used_bytes(), 100, "failed alloc must not leak");
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let p = pool(128, 1);
+        let a = p.alloc(8).unwrap();
+        p.free(a).unwrap();
+        assert!(p.free(a).is_err());
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let p = pool(1000, 1);
+        let a = p.alloc(600).unwrap();
+        p.free(a).unwrap();
+        let _b = p.alloc(100).unwrap();
+        assert_eq!(p.peak_bytes(), 600);
+        assert_eq!(p.used_bytes(), 100);
+    }
+
+    #[test]
+    fn ultra96_regions_all_segments() {
+        let pools = ultra96_regions();
+        let segs: Vec<Segment> = pools.iter().map(|p| p.info().segment).collect();
+        assert!(segs.contains(&Segment::Global));
+        assert!(segs.contains(&Segment::KernArg));
+        assert!(segs.contains(&Segment::Group));
+    }
+}

@@ -1,0 +1,31 @@
+//! HSA-Foundation-style runtime (the paper's §III substrate).
+//!
+//! The paper dispatches TensorFlow kernels through "HSA runtime calls" so
+//! that FPGAs, CPUs and GPUs share one queue/signal/memory model. This
+//! module implements that runtime shape in userspace Rust:
+//!
+//! * [`signal::Signal`] — HSA signals (relaxed/blocking waits, doorbells,
+//!   completion counters);
+//! * [`packet::AqlPacket`] — Architected Queuing Language packets
+//!   (kernel-dispatch and barrier-AND, with the standard header fields);
+//! * [`queue::Queue`] — user-mode ring-buffer queues with a write-index /
+//!   doorbell protocol and a packet-processor thread per queue;
+//! * [`agent::Agent`] — the device abstraction the packet processor calls
+//!   into (implemented by `cpu::CpuAgent` and `fpga::FpgaAgent`);
+//! * [`memory`] — region descriptors and a tracking allocator;
+//! * [`runtime::HsaRuntime`] — discovery, queue creation, shutdown.
+
+pub mod agent;
+pub mod error;
+pub mod memory;
+pub mod packet;
+pub mod queue;
+pub mod runtime;
+pub mod signal;
+
+pub use agent::{Agent, AgentInfo, DeviceType};
+pub use error::HsaError;
+pub use packet::{AqlPacket, BarrierAndPacket, KernelArgs, KernelDispatchPacket};
+pub use queue::Queue;
+pub use runtime::HsaRuntime;
+pub use signal::Signal;

@@ -1,0 +1,234 @@
+//! AQL (Architected Queuing Language) packets.
+//!
+//! The packet layout follows HSA PPS §2.9: a 16-bit header (packet type,
+//! acquire/release fence scopes, barrier bit) followed by a type-specific
+//! body. We keep the header encoding bit-exact (it is cheap and lets the
+//! tests assert protocol conformance) while the body carries Rust-native
+//! payloads (tensors instead of raw GPU pointers).
+
+use crate::hsa::signal::Signal;
+use crate::tf::tensor::Tensor;
+use std::sync::{Arc, Mutex};
+
+/// HSA packet type field values (PPS Table 2-4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum PacketType {
+    VendorSpecific = 0,
+    Invalid = 1,
+    KernelDispatch = 2,
+    BarrierAnd = 3,
+    AgentDispatch = 4,
+    BarrierOr = 5,
+}
+
+/// Memory fence scope for acquire/release (PPS §2.9.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FenceScope {
+    None = 0,
+    Agent = 1,
+    System = 2,
+}
+
+/// The 16-bit AQL packet header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub packet_type: PacketType,
+    pub barrier: bool,
+    pub acquire: FenceScope,
+    pub release: FenceScope,
+}
+
+impl Header {
+    /// Encode per HSA PPS: type[7:0], barrier[8], acquire[10:9], release[12:11].
+    pub fn encode(self) -> u16 {
+        (self.packet_type as u16)
+            | ((self.barrier as u16) << 8)
+            | ((self.acquire as u16) << 9)
+            | ((self.release as u16) << 11)
+    }
+
+    pub fn decode(bits: u16) -> Option<Header> {
+        let packet_type = match bits & 0xff {
+            0 => PacketType::VendorSpecific,
+            1 => PacketType::Invalid,
+            2 => PacketType::KernelDispatch,
+            3 => PacketType::BarrierAnd,
+            4 => PacketType::AgentDispatch,
+            5 => PacketType::BarrierOr,
+            _ => return None,
+        };
+        let scope = |v: u16| match v {
+            0 => Some(FenceScope::None),
+            1 => Some(FenceScope::Agent),
+            2 => Some(FenceScope::System),
+            _ => None,
+        };
+        Some(Header {
+            packet_type,
+            barrier: bits & (1 << 8) != 0,
+            acquire: scope((bits >> 9) & 0b11)?,
+            release: scope((bits >> 11) & 0b11)?,
+        })
+    }
+
+    pub fn dispatch() -> Header {
+        Header {
+            packet_type: PacketType::KernelDispatch,
+            barrier: false,
+            acquire: FenceScope::System,
+            release: FenceScope::System,
+        }
+    }
+
+    pub fn barrier_and() -> Header {
+        Header {
+            packet_type: PacketType::BarrierAnd,
+            barrier: true,
+            acquire: FenceScope::System,
+            release: FenceScope::System,
+        }
+    }
+}
+
+/// Kernel arguments: input tensors in, output tensors out through a slot
+/// the dispatcher can read after the completion signal fires (the software
+/// stand-in for the kernarg segment + output buffers).
+#[derive(Debug, Clone)]
+pub struct KernelArgs {
+    pub inputs: Vec<Tensor>,
+    /// Filled by the packet processor on retire.
+    pub output: Arc<Mutex<Option<std::result::Result<Vec<Tensor>, String>>>>,
+}
+
+impl KernelArgs {
+    pub fn new(inputs: Vec<Tensor>) -> KernelArgs {
+        KernelArgs { inputs, output: Arc::new(Mutex::new(None)) }
+    }
+
+    /// Take the result after completion (None if the kernel never retired).
+    pub fn take_output(&self) -> Option<std::result::Result<Vec<Tensor>, String>> {
+        self.output.lock().unwrap().take()
+    }
+}
+
+/// Kernel-dispatch packet body.
+#[derive(Debug, Clone)]
+pub struct KernelDispatchPacket {
+    pub header: Header,
+    /// Opaque kernel object handle (registry id of the registered kernel —
+    /// for FPGA agents this names a pre-synthesized bitstream / role).
+    pub kernel_object: u64,
+    /// Grid/workgroup sizes are kept for protocol fidelity; the simulated
+    /// devices derive their own parallelism from the kernel workload.
+    pub grid_size: [u32; 3],
+    pub workgroup_size: [u16; 3],
+    pub args: KernelArgs,
+    /// Decremented to 0 when the kernel retires.
+    pub completion_signal: Signal,
+}
+
+/// Barrier-AND packet body: the packet processor stalls until all
+/// dependency signals are 0, then decrements the completion signal.
+#[derive(Debug, Clone)]
+pub struct BarrierAndPacket {
+    pub header: Header,
+    /// Up to 5 dependencies, per the HSA packet layout.
+    pub dep_signals: Vec<Signal>,
+    pub completion_signal: Signal,
+}
+
+/// A queue slot.
+#[derive(Debug, Clone)]
+pub enum AqlPacket {
+    KernelDispatch(KernelDispatchPacket),
+    BarrierAnd(BarrierAndPacket),
+    /// Ends the packet-processor thread (runtime-internal, not part of AQL).
+    Shutdown,
+}
+
+impl AqlPacket {
+    pub fn dispatch(
+        kernel_object: u64,
+        inputs: Vec<Tensor>,
+        completion_signal: Signal,
+    ) -> (AqlPacket, KernelArgs) {
+        let args = KernelArgs::new(inputs);
+        let pkt = AqlPacket::KernelDispatch(KernelDispatchPacket {
+            header: Header::dispatch(),
+            kernel_object,
+            grid_size: [1, 1, 1],
+            workgroup_size: [1, 1, 1],
+            args: args.clone(),
+            completion_signal,
+        });
+        (pkt, args)
+    }
+
+    pub fn barrier(dep_signals: Vec<Signal>, completion_signal: Signal) -> AqlPacket {
+        assert!(dep_signals.len() <= 5, "barrier-AND carries at most 5 deps");
+        AqlPacket::BarrierAnd(BarrierAndPacket {
+            header: Header::barrier_and(),
+            dep_signals,
+            completion_signal,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_encodes_dispatch_per_spec() {
+        let h = Header::dispatch();
+        let bits = h.encode();
+        assert_eq!(bits & 0xff, 2); // KernelDispatch
+        assert_eq!((bits >> 9) & 0b11, 2); // acquire system
+        assert_eq!((bits >> 11) & 0b11, 2); // release system
+        assert_eq!(bits & (1 << 8), 0); // no barrier bit
+    }
+
+    #[test]
+    fn header_round_trips() {
+        for pt in [
+            PacketType::VendorSpecific,
+            PacketType::KernelDispatch,
+            PacketType::BarrierAnd,
+            PacketType::BarrierOr,
+            PacketType::AgentDispatch,
+        ] {
+            for barrier in [false, true] {
+                let h = Header {
+                    packet_type: pt,
+                    barrier,
+                    acquire: FenceScope::Agent,
+                    release: FenceScope::System,
+                };
+                assert_eq!(Header::decode(h.encode()), Some(h));
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_type() {
+        assert_eq!(Header::decode(200), None);
+    }
+
+    #[test]
+    fn kernel_args_output_slot() {
+        let args = KernelArgs::new(vec![]);
+        assert!(args.take_output().is_none());
+        *args.output.lock().unwrap() = Some(Ok(vec![]));
+        assert!(matches!(args.take_output(), Some(Ok(v)) if v.is_empty()));
+        assert!(args.take_output().is_none(), "take consumes");
+    }
+
+    #[test]
+    #[should_panic(expected = "at most 5")]
+    fn barrier_rejects_too_many_deps() {
+        let sigs: Vec<Signal> = (0..6).map(|_| Signal::new(0)).collect();
+        AqlPacket::barrier(sigs, Signal::new(1));
+    }
+}

@@ -1,0 +1,289 @@
+//! User-mode AQL queues with the HSA write-index/doorbell protocol.
+//!
+//! A producer reserves a slot by bumping the write index, fills the slot,
+//! then rings the doorbell signal with the new index. The packet processor
+//! consumes slots in order (read index chases write index). We realize the
+//! ring as a fixed-capacity `Vec<Mutex<Option<AqlPacket>>>` — one mutex per
+//! slot keeps producers on distinct slots contention-free, as on hardware.
+
+use crate::hsa::error::{HsaError, Result};
+use crate::hsa::packet::AqlPacket;
+use crate::hsa::signal::Signal;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cloneable handle to a queue.
+#[derive(Debug, Clone)]
+pub struct Queue {
+    inner: Arc<QueueInner>,
+}
+
+#[derive(Debug)]
+struct QueueInner {
+    /// Ring storage; capacity is a power of two (HSA requirement).
+    slots: Vec<Mutex<Option<AqlPacket>>>,
+    capacity_mask: u64,
+    /// Next slot a producer will write.
+    write_index: AtomicU64,
+    /// Next slot the packet processor will read.
+    read_index: AtomicU64,
+    /// Doorbell: stores the latest published write index.
+    doorbell: Signal,
+    shut_down: AtomicBool,
+    id: u64,
+}
+
+static NEXT_QUEUE_ID: AtomicU64 = AtomicU64::new(1);
+
+impl Queue {
+    /// Create a queue with `capacity` slots (rounded up to a power of two).
+    pub fn new(capacity: usize) -> Queue {
+        let cap = capacity.next_power_of_two().max(2);
+        let slots = (0..cap).map(|_| Mutex::new(None)).collect();
+        Queue {
+            inner: Arc::new(QueueInner {
+                slots,
+                capacity_mask: (cap - 1) as u64,
+                write_index: AtomicU64::new(0),
+                read_index: AtomicU64::new(0),
+                doorbell: Signal::new(-1),
+                shut_down: AtomicBool::new(false),
+                id: NEXT_QUEUE_ID.fetch_add(1, Ordering::Relaxed),
+            }),
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.inner.id
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.slots.len()
+    }
+
+    /// Packets currently in flight (enqueued, not yet consumed).
+    pub fn depth(&self) -> u64 {
+        let w = self.inner.write_index.load(Ordering::Acquire);
+        let r = self.inner.read_index.load(Ordering::Acquire);
+        w.saturating_sub(r)
+    }
+
+    /// Producer side: reserve a slot, store the packet, ring the doorbell.
+    /// Blocks (spin+yield) while the ring is full — AQL backpressure.
+    pub fn enqueue(&self, packet: AqlPacket) -> Result<u64> {
+        if self.inner.shut_down.load(Ordering::Acquire) {
+            return Err(HsaError::QueueShutDown);
+        }
+        // Reserve.
+        let idx = self.inner.write_index.fetch_add(1, Ordering::AcqRel);
+        // Backpressure: wait until the slot is free (reader caught up to
+        // within one lap).
+        loop {
+            let r = self.inner.read_index.load(Ordering::Acquire);
+            if idx - r <= self.inner.capacity_mask {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        // Publish payload.
+        let slot = &self.inner.slots[(idx & self.inner.capacity_mask) as usize];
+        *slot.lock().unwrap() = Some(packet);
+        // Ring the doorbell with the newest visible index. Monotonic max:
+        // concurrent producers may race; the processor only needs "some
+        // index >= mine" to wake.
+        self.ring_doorbell(idx as i64);
+        Ok(idx)
+    }
+
+    fn ring_doorbell(&self, idx: i64) {
+        // store-max: keep the doorbell monotonic.
+        // (Signal has no compare-exchange; emulate under its lock via add.)
+        let cur = self.inner.doorbell.load();
+        if idx > cur {
+            self.inner.doorbell.store(idx);
+        } else {
+            // Still notify waiters; a later producer may have published a
+            // slot an earlier doorbell already covers.
+            self.inner.doorbell.store(cur);
+        }
+    }
+
+    /// Consumer side (packet processor): block until a packet is available,
+    /// then take it. Returns `None` after shutdown once drained.
+    pub fn dequeue_blocking(&self) -> Option<AqlPacket> {
+        loop {
+            let r = self.inner.read_index.load(Ordering::Acquire);
+            let w = self.inner.write_index.load(Ordering::Acquire);
+            if r < w {
+                let slot = &self.inner.slots[(r & self.inner.capacity_mask) as usize];
+                let mut guard = slot.lock().unwrap();
+                if let Some(pkt) = guard.take() {
+                    drop(guard);
+                    self.inner.read_index.store(r + 1, Ordering::Release);
+                    return Some(pkt);
+                }
+                // Producer reserved the slot but hasn't stored yet: spin.
+                drop(guard);
+                std::thread::yield_now();
+                continue;
+            }
+            if self.inner.shut_down.load(Ordering::Acquire) {
+                return None;
+            }
+            // Spin-poll briefly (hot dispatch path: the producer usually
+            // publishes within a few µs), then sleep on the doorbell until
+            // a producer publishes index >= r. No spinning on single-core
+            // hosts (see util::spin_enabled).
+            let spin_start = std::time::Instant::now();
+            let mut published = false;
+            while crate::util::spin_enabled()
+                && spin_start.elapsed() < std::time::Duration::from_micros(20)
+            {
+                if self.inner.write_index.load(Ordering::Acquire) > r
+                    || self.inner.shut_down.load(Ordering::Acquire)
+                {
+                    published = true;
+                    break;
+                }
+                std::hint::spin_loop();
+            }
+            if !published {
+                let _ = self.inner.doorbell.wait_until(
+                    Some(std::time::Duration::from_millis(50)),
+                    |db| db >= r as i64,
+                );
+            }
+        }
+    }
+
+    /// Mark the queue for shutdown and wake the processor.
+    pub fn shutdown(&self) {
+        self.inner.shut_down.store(true, Ordering::Release);
+        // Wake any sleeping consumer.
+        let cur = self.inner.doorbell.load();
+        self.inner.doorbell.store(cur);
+    }
+
+    pub fn is_shut_down(&self) -> bool {
+        self.inner.shut_down.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hsa::packet::AqlPacket;
+    use crate::hsa::signal::Signal;
+    use std::thread;
+
+    fn noop_packet() -> AqlPacket {
+        AqlPacket::barrier(vec![], Signal::new(1))
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        assert_eq!(Queue::new(3).capacity(), 4);
+        assert_eq!(Queue::new(16).capacity(), 16);
+        assert_eq!(Queue::new(0).capacity(), 2);
+    }
+
+    #[test]
+    fn fifo_order_single_producer() {
+        let q = Queue::new(8);
+        for i in 0..5 {
+            let (pkt, _) = AqlPacket::dispatch(i, vec![], Signal::new(1));
+            q.enqueue(pkt).unwrap();
+        }
+        for i in 0..5 {
+            match q.dequeue_blocking().unwrap() {
+                AqlPacket::KernelDispatch(d) => assert_eq!(d.kernel_object, i),
+                _ => panic!("wrong packet type"),
+            }
+        }
+    }
+
+    #[test]
+    fn depth_tracks_in_flight() {
+        let q = Queue::new(8);
+        assert_eq!(q.depth(), 0);
+        q.enqueue(noop_packet()).unwrap();
+        q.enqueue(noop_packet()).unwrap();
+        assert_eq!(q.depth(), 2);
+        q.dequeue_blocking().unwrap();
+        assert_eq!(q.depth(), 1);
+    }
+
+    #[test]
+    fn enqueue_after_shutdown_fails() {
+        let q = Queue::new(4);
+        q.shutdown();
+        assert!(matches!(q.enqueue(noop_packet()), Err(HsaError::QueueShutDown)));
+    }
+
+    #[test]
+    fn dequeue_returns_none_when_drained_after_shutdown() {
+        let q = Queue::new(4);
+        q.enqueue(noop_packet()).unwrap();
+        q.shutdown();
+        assert!(q.dequeue_blocking().is_some());
+        assert!(q.dequeue_blocking().is_none());
+    }
+
+    #[test]
+    fn consumer_wakes_on_doorbell() {
+        let q = Queue::new(4);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.dequeue_blocking());
+        thread::sleep(std::time::Duration::from_millis(20));
+        q.enqueue(noop_packet()).unwrap();
+        assert!(h.join().unwrap().is_some());
+    }
+
+    #[test]
+    fn backpressure_blocks_then_releases() {
+        let q = Queue::new(2); // capacity 2
+        q.enqueue(noop_packet()).unwrap();
+        q.enqueue(noop_packet()).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.enqueue(noop_packet()));
+        thread::sleep(std::time::Duration::from_millis(20));
+        // Third producer has reserved its index but is blocked on the full
+        // ring (depth counts reservations).
+        assert_eq!(q.depth(), 3);
+        q.dequeue_blocking().unwrap();
+        h.join().unwrap().unwrap();
+        assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn multi_producer_packets_all_arrive() {
+        let q = Queue::new(64);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    for i in 0..50u64 {
+                        let (pkt, _) =
+                            AqlPacket::dispatch(p * 1000 + i, vec![], Signal::new(1));
+                        q.enqueue(pkt).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let mut seen = Vec::new();
+        for _ in 0..200 {
+            match q.dequeue_blocking().unwrap() {
+                AqlPacket::KernelDispatch(d) => seen.push(d.kernel_object),
+                _ => panic!(),
+            }
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        seen.sort();
+        let mut expect: Vec<u64> =
+            (0..4).flat_map(|p| (0..50).map(move |i| p * 1000 + i)).collect();
+        expect.sort();
+        assert_eq!(seen, expect);
+    }
+}

@@ -1,0 +1,320 @@
+//! The HSA runtime: agent discovery, queue creation, packet processors.
+//!
+//! Mirrors the lifecycle of the real runtime: `hsa_init` (here:
+//! [`HsaRuntime::builder`] + agents), `hsa_queue_create` (spawns a packet
+//! processor thread per queue, the software analogue of the hardware queue
+//! scheduler), kernel dispatch via AQL packets + doorbell, and
+//! `hsa_shut_down` (drain + join).
+
+use crate::hsa::agent::{Agent, DeviceType};
+use crate::hsa::error::{HsaError, Result};
+use crate::hsa::memory::{ultra96_regions, MemoryPool};
+use crate::hsa::packet::{AqlPacket, KernelArgs};
+use crate::hsa::queue::Queue;
+use crate::hsa::signal::Signal;
+use crate::tf::tensor::Tensor;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Default timeout for synchronous dispatches (generous: includes PJRT
+/// first-run compilation on the kernel's executor).
+pub const DISPATCH_TIMEOUT: Duration = Duration::from_secs(120);
+
+pub struct HsaRuntimeBuilder {
+    agents: Vec<Arc<dyn Agent>>,
+}
+
+impl HsaRuntimeBuilder {
+    pub fn with_agent(mut self, agent: Arc<dyn Agent>) -> Self {
+        self.agents.push(agent);
+        self
+    }
+
+    pub fn build(self) -> HsaRuntime {
+        HsaRuntime {
+            agents: self.agents,
+            queues: Mutex::new(Vec::new()),
+            regions: ultra96_regions(),
+        }
+    }
+}
+
+struct QueueRecord {
+    queue: Queue,
+    processor: Option<JoinHandle<()>>,
+    agent_name: String,
+}
+
+/// The runtime instance (one per process in HSA; plain struct here so tests
+/// can create as many as they like).
+pub struct HsaRuntime {
+    agents: Vec<Arc<dyn Agent>>,
+    queues: Mutex<Vec<QueueRecord>>,
+    regions: Vec<MemoryPool>,
+}
+
+impl HsaRuntime {
+    pub fn builder() -> HsaRuntimeBuilder {
+        HsaRuntimeBuilder { agents: Vec::new() }
+    }
+
+    /// All discovered agents.
+    pub fn agents(&self) -> &[Arc<dyn Agent>] {
+        &self.agents
+    }
+
+    /// First agent of the requested device type (`hsa_iterate_agents` +
+    /// filter, the common pattern).
+    pub fn agent_by_type(&self, ty: DeviceType) -> Result<Arc<dyn Agent>> {
+        self.agents
+            .iter()
+            .find(|a| a.info().device_type == ty)
+            .cloned()
+            .ok_or_else(|| HsaError::NoSuchAgent(ty.to_string()))
+    }
+
+    /// Discoverable memory regions.
+    pub fn regions(&self) -> &[MemoryPool] {
+        &self.regions
+    }
+
+    /// Create a queue bound to `agent` and spawn its packet processor.
+    pub fn create_queue(&self, agent: Arc<dyn Agent>, size: usize) -> Queue {
+        let size = size.min(agent.info().queue_max_size);
+        let queue = Queue::new(size);
+        let q2 = queue.clone();
+        let a2 = Arc::clone(&agent);
+        let name = agent.info().name.clone();
+        let processor = std::thread::Builder::new()
+            .name(format!("pktproc-{name}"))
+            .spawn(move || packet_processor(q2, a2))
+            .expect("spawn packet processor");
+        self.queues.lock().unwrap().push(QueueRecord {
+            queue: queue.clone(),
+            processor: Some(processor),
+            agent_name: name,
+        });
+        queue
+    }
+
+    /// Asynchronous dispatch: enqueue a kernel packet, return the
+    /// completion signal and the output slot.
+    pub fn dispatch_async(
+        &self,
+        queue: &Queue,
+        kernel_object: u64,
+        inputs: Vec<Tensor>,
+    ) -> Result<(Signal, KernelArgs)> {
+        let completion = Signal::new(1);
+        let (pkt, args) = AqlPacket::dispatch(kernel_object, inputs, completion.clone());
+        queue.enqueue(pkt)?;
+        Ok((completion, args))
+    }
+
+    /// Synchronous dispatch: enqueue, wait for retire, return outputs.
+    pub fn dispatch_sync(
+        &self,
+        queue: &Queue,
+        kernel_object: u64,
+        inputs: Vec<Tensor>,
+    ) -> Result<Vec<Tensor>> {
+        let (completion, args) = self.dispatch_async(queue, kernel_object, inputs)?;
+        completion.wait_eq(0, Some(DISPATCH_TIMEOUT))?;
+        match args.take_output() {
+            Some(Ok(outs)) => Ok(outs),
+            Some(Err(msg)) => Err(HsaError::KernelFailed(msg)),
+            None => Err(HsaError::KernelFailed(
+                "kernel retired without writing outputs".into(),
+            )),
+        }
+    }
+
+    /// Enqueue a barrier-AND packet over `deps`.
+    pub fn barrier(&self, queue: &Queue, deps: Vec<Signal>) -> Result<Signal> {
+        let completion = Signal::new(1);
+        queue.enqueue(AqlPacket::barrier(deps, completion.clone()))?;
+        Ok(completion)
+    }
+
+    /// Shut down all queues and join their processors.
+    pub fn shutdown(&self) {
+        let mut queues = self.queues.lock().unwrap();
+        for rec in queues.iter() {
+            rec.queue.shutdown();
+        }
+        for rec in queues.iter_mut() {
+            if let Some(h) = rec.processor.take() {
+                if h.join().is_err() {
+                    eprintln!("packet processor for {} panicked", rec.agent_name);
+                }
+            }
+        }
+        queues.clear();
+    }
+}
+
+impl Drop for HsaRuntime {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The per-queue packet processor loop (what the hardware queue scheduler
+/// or kernel-mode driver does on a real HSA system).
+fn packet_processor(queue: Queue, agent: Arc<dyn Agent>) {
+    while let Some(pkt) = queue.dequeue_blocking() {
+        match pkt {
+            AqlPacket::KernelDispatch(d) => {
+                let res = agent.execute(&d);
+                if let Err(e) = res {
+                    let mut slot = d.args.output.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(Err(e.to_string()));
+                    }
+                }
+                d.completion_signal.subtract(1);
+            }
+            AqlPacket::BarrierAnd(b) => {
+                for dep in &b.dep_signals {
+                    // Barrier-AND blocks the *queue* until deps clear.
+                    let _ = dep.wait_eq(0, None);
+                }
+                b.completion_signal.subtract(1);
+            }
+            AqlPacket::Shutdown => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hsa::agent::AgentInfo;
+    use crate::hsa::packet::KernelDispatchPacket;
+
+    /// Trivial test agent: kernel 0 echoes inputs; kernel 1 fails; kernel 2
+    /// sleeps briefly (for barrier ordering tests).
+    struct EchoAgent {
+        info: AgentInfo,
+    }
+
+    impl EchoAgent {
+        fn new() -> Arc<Self> {
+            Arc::new(EchoAgent {
+                info: AgentInfo {
+                    name: "echo".into(),
+                    vendor: "test".into(),
+                    device_type: DeviceType::Cpu,
+                    queue_max_size: 64,
+                    isa: "test".into(),
+                    clock_mhz: 1000,
+                    compute_units: 1,
+                },
+            })
+        }
+    }
+
+    impl Agent for EchoAgent {
+        fn info(&self) -> &AgentInfo {
+            &self.info
+        }
+
+        fn execute(&self, packet: &KernelDispatchPacket) -> Result<()> {
+            match packet.kernel_object {
+                0 => {
+                    *packet.args.output.lock().unwrap() =
+                        Some(Ok(packet.args.inputs.clone()));
+                    Ok(())
+                }
+                1 => Err(HsaError::KernelFailed("injected failure".into())),
+                2 => {
+                    std::thread::sleep(Duration::from_millis(30));
+                    *packet.args.output.lock().unwrap() = Some(Ok(vec![]));
+                    Ok(())
+                }
+                k => Err(HsaError::UnknownKernel(k)),
+            }
+        }
+    }
+
+    fn runtime() -> HsaRuntime {
+        HsaRuntime::builder().with_agent(EchoAgent::new()).build()
+    }
+
+    #[test]
+    fn discovery_by_type() {
+        let rt = runtime();
+        assert!(rt.agent_by_type(DeviceType::Cpu).is_ok());
+        assert!(matches!(
+            rt.agent_by_type(DeviceType::Fpga),
+            Err(HsaError::NoSuchAgent(_))
+        ));
+    }
+
+    #[test]
+    fn sync_dispatch_round_trip() {
+        let rt = runtime();
+        let agent = rt.agent_by_type(DeviceType::Cpu).unwrap();
+        let q = rt.create_queue(agent, 16);
+        let t = Tensor::from_f32(&[2], vec![1.0, 2.0]).unwrap();
+        let out = rt.dispatch_sync(&q, 0, vec![t.clone()]).unwrap();
+        assert_eq!(out, vec![t]);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn failed_kernel_propagates_error() {
+        let rt = runtime();
+        let agent = rt.agent_by_type(DeviceType::Cpu).unwrap();
+        let q = rt.create_queue(agent, 16);
+        let err = rt.dispatch_sync(&q, 1, vec![]).unwrap_err();
+        assert!(matches!(err, HsaError::KernelFailed(_)), "{err}");
+    }
+
+    #[test]
+    fn unknown_kernel_object_errors() {
+        let rt = runtime();
+        let agent = rt.agent_by_type(DeviceType::Cpu).unwrap();
+        let q = rt.create_queue(agent, 16);
+        assert!(rt.dispatch_sync(&q, 99, vec![]).is_err());
+    }
+
+    #[test]
+    fn async_dispatch_and_signal() {
+        let rt = runtime();
+        let agent = rt.agent_by_type(DeviceType::Cpu).unwrap();
+        let q = rt.create_queue(agent, 16);
+        let (sig, args) = rt.dispatch_async(&q, 0, vec![]).unwrap();
+        sig.wait_eq(0, Some(Duration::from_secs(5))).unwrap();
+        assert!(matches!(args.take_output(), Some(Ok(_))));
+    }
+
+    #[test]
+    fn barrier_waits_for_dependencies() {
+        let rt = runtime();
+        let agent = rt.agent_by_type(DeviceType::Cpu).unwrap();
+        let q = rt.create_queue(agent.clone(), 16);
+        let q2 = rt.create_queue(agent, 16);
+        // Slow kernel on q, barrier on q2 depending on it.
+        let (slow_sig, _args) = rt.dispatch_async(&q, 2, vec![]).unwrap();
+        let barrier_done = rt.barrier(&q2, vec![slow_sig.clone()]).unwrap();
+        barrier_done.wait_eq(0, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(slow_sig.load(), 0, "barrier retired before its dep");
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_drops_clean() {
+        let rt = runtime();
+        let agent = rt.agent_by_type(DeviceType::Cpu).unwrap();
+        let _q = rt.create_queue(agent, 16);
+        rt.shutdown();
+        rt.shutdown();
+    }
+
+    #[test]
+    fn regions_exposed() {
+        let rt = runtime();
+        assert_eq!(rt.regions().len(), 3);
+    }
+}

@@ -1,0 +1,47 @@
+//! # tf-fpga — Transparent FPGA Acceleration with TensorFlow (reproduction)
+//!
+//! A Rust + JAX + Pallas reproduction of Pfenning, Holzinger & Reichenbach,
+//! *"Transparent FPGA Acceleration with TensorFlow"* (2021): a
+//! TensorFlow-like frontend whose kernels dispatch through an
+//! HSA-Foundation-style runtime onto an FPGA managed by partial
+//! reconfiguration with LRU role eviction.
+//!
+//! Three-layer architecture (Python never on the request path):
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas kernels for the paper's
+//!   four roles, validated against pure-jnp oracles;
+//! * **L2** (`python/compile/model.py`) — jax entry points AOT-lowered to
+//!   HLO text artifacts (`make artifacts`);
+//! * **L3** (this crate) — the coordinator: [`tf`] frontend (graph, placer,
+//!   session), [`hsa`] runtime (queues, signals, packet processors),
+//!   [`fpga`] substrate (shell, PR regions, ICAP, datapath models, roles),
+//!   [`reconfig`] (LRU & friends), [`cpu`] (A53 baseline), [`runtime`]
+//!   (PJRT executor service for the AOT artifacts), [`ops`] (native
+//!   oracle kernels), [`bench`] (Table I–III generators).
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use tf_fpga::tf::{Graph, OpKind, Session, SessionOptions, Tensor, DType};
+//!
+//! let mut g = Graph::new();
+//! let x = g.placeholder("x", &[4, 8], DType::F32).unwrap();
+//! let w = g.constant("w", Tensor::zeros(&[8, 2], DType::F32)).unwrap();
+//! let b = g.constant("b", Tensor::zeros(&[2], DType::F32)).unwrap();
+//! g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
+//! let sess = Session::new(g, SessionOptions::default()).unwrap();
+//! let out = sess.run(&[("x", Tensor::zeros(&[4, 8], DType::F32))], &["y"]).unwrap();
+//! ```
+
+pub mod bench;
+pub mod cpu;
+pub mod fpga;
+pub mod hsa;
+pub mod metrics;
+pub mod ops;
+pub mod reconfig;
+pub mod runtime;
+pub mod serve;
+pub mod tf;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,520 @@
+//! `tf-fpga` CLI: reproduce the paper's tables, run the ablations, drive
+//! the end-to-end workloads.
+//!
+//! ```text
+//! tf-fpga info                      # stack / device / artifact summary
+//! tf-fpga table1                    # Table I  (PL utilization)
+//! tf-fpga table2 [--n 1000]         # Table II (overheads, µs)
+//! tf-fpga table3 [--n 1000]         # Table III (OP/cycle increase)
+//! tf-fpga tables                    # all three
+//! tf-fpga ablate-eviction [...]     # LRU/FIFO/Random/MRU/Belady sweep
+//! tf-fpga ablate-regions [...]      # PR-region-count sweep
+//! tf-fpga crossover                 # reconfiguration amortization point
+//! tf-fpga run-mnist [--batches 32]  # end-to-end CNN inference
+//! ```
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, flags) = parse(&args)?;
+    match cmd.as_str() {
+        "info" => info(),
+        "table1" => {
+            println!("{}", tf_fpga::bench::tables::table1());
+            Ok(())
+        }
+        "table2" => {
+            let n = flag_usize(&flags, "n", 1000);
+            let use_pjrt = !flags.contains_key("no-pjrt");
+            let (t, _) = tf_fpga::bench::tables::table2(n, use_pjrt);
+            println!("{t}");
+            Ok(())
+        }
+        "table3" => {
+            let n = flag_usize(&flags, "n", 1000);
+            let (t, _) = tf_fpga::bench::tables::table3(n);
+            println!("{t}");
+            Ok(())
+        }
+        "tables" => {
+            println!("{}", tf_fpga::bench::tables::table1());
+            let n = flag_usize(&flags, "n", 1000);
+            let (t2, _) = tf_fpga::bench::tables::table2(n, !flags.contains_key("no-pjrt"));
+            println!("{t2}");
+            let (t3, _) = tf_fpga::bench::tables::table3(n);
+            println!("{t3}");
+            Ok(())
+        }
+        "ablate-eviction" => ablate_eviction(
+            flag_usize(&flags, "regions", 2),
+            flag_usize(&flags, "roles", 4),
+            flag_usize(&flags, "n", 2000),
+        ),
+        "ablate-regions" => ablate_regions(flag_usize(&flags, "n", 2000)),
+        "crossover" => crossover(),
+        "run-mnist" => run_mnist(
+            flag_usize(&flags, "batches", 8),
+            flag_usize(&flags, "batch-size", 32),
+            session_opts_from_flags(&flags)?,
+        ),
+        "serve" => serve(
+            flag_usize(&flags, "requests", 512),
+            flag_usize(&flags, "clients", 4),
+            flag_usize(&flags, "max-batch", 16),
+            flag_usize(&flags, "max-delay-ms", 3),
+            flags.get("trace-out").cloned(),
+        ),
+        "ablate-hls" => ablate_hls(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `tf-fpga help`)"),
+    }
+}
+
+const HELP: &str = "tf-fpga — Transparent FPGA Acceleration with TensorFlow (reproduction)
+
+commands:
+  info                     stack / device / artifact summary
+  table1                   Table I: PL utilization
+  table2 [--n N]           Table II: overheads [µs] (--no-pjrt to skip PJRT setup)
+  table3 [--n N]           Table III: OP/cycle increase over the A53
+  tables [--n N]           all three tables
+  ablate-eviction [--regions R --roles K --n N]
+                           eviction-policy ablation (LRU/FIFO/Random/MRU/Belady)
+  ablate-regions [--n N]   PR-region-count sweep
+  crossover                dispatches needed for the FPGA to amortize reconfiguration
+  run-mnist [--batches B --batch-size S]
+                           end-to-end CNN inference through the full stack
+  serve [--requests N --clients C --max-batch B --max-delay-ms D --trace-out F]
+                           dynamic-batching inference service + latency report
+  ablate-hls               pre-synthesized vs online-synthesis (OpenCL) flow costs
+";
+
+fn parse(args: &[String]) -> Result<(String, HashMap<String, String>)> {
+    if args.is_empty() {
+        return Ok(("help".into(), HashMap::new()));
+    }
+    let cmd = args[0].clone();
+    let mut flags = HashMap::new();
+    let mut i = 1;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let value = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), value);
+        } else {
+            bail!("unexpected argument '{a}'");
+        }
+        i += 1;
+    }
+    Ok((cmd, flags))
+}
+
+fn flag_usize(flags: &HashMap<String, String>, name: &str, default: usize) -> usize {
+    flags
+        .get(name)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// `--config <file>` loads `[session]` options (see util::config); other
+/// flags still win where both are given.
+fn session_opts_from_flags(
+    flags: &HashMap<String, String>,
+) -> Result<tf_fpga::tf::session::SessionOptions> {
+    let mut opts = match flags.get("config") {
+        Some(path) => tf_fpga::util::config::Config::load(path)
+            .and_then(|c| c.session_options())
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        None => tf_fpga::tf::session::SessionOptions::default(),
+    };
+    if let Some(r) = flags.get("regions").and_then(|v| v.parse().ok()) {
+        opts.num_regions = r;
+    }
+    Ok(opts)
+}
+
+fn info() -> Result<()> {
+    use tf_fpga::fpga::resources::ZU3EG;
+    println!("tf-fpga: Transparent FPGA Acceleration with TensorFlow (reproduction)");
+    println!();
+    println!("device model : Ultra96 / Zynq UltraScale+ ZU3EG (simulated)");
+    println!("  PL         : {ZU3EG}");
+    println!("  shell      : {}", tf_fpga::fpga::roles::shell_resources());
+    println!(
+        "  reconfig   : {} µs per role ({} B @ PCAP)",
+        tf_fpga::fpga::icap::Icap::default()
+            .reconfig_time_us(tf_fpga::fpga::roles::ROLE_BITSTREAM_BYTES),
+        tf_fpga::fpga::roles::ROLE_BITSTREAM_BYTES
+    );
+    println!("cpu baseline : ARM Cortex-A53 model @ 1200 MHz");
+    match tf_fpga::runtime::artifact::ArtifactStore::open_default() {
+        Ok(store) => {
+            println!("artifacts    : {} ({} modules)", store.dir.display(), store.modules.len());
+            for (name, m) in &store.modules {
+                println!(
+                    "  {name:18} {:>10}  in={:?}",
+                    m.hlo_path.file_name().unwrap().to_string_lossy(),
+                    m.inputs.iter().map(|i| format!("{:?}:{}", i.shape, i.dtype)).collect::<Vec<_>>()
+                );
+            }
+        }
+        Err(e) => println!("artifacts    : not available ({e})"),
+    }
+    Ok(())
+}
+
+fn ablate_eviction(regions: usize, roles: usize, n: usize) -> Result<()> {
+    use tf_fpga::fpga::bitstream::Bitstream;
+    use tf_fpga::fpga::icap::Icap;
+    use tf_fpga::fpga::resources::ResourceVector;
+    use tf_fpga::fpga::roles::role3_spec;
+    use tf_fpga::metrics::report::Table;
+    use tf_fpga::reconfig::manager::ReconfigManager;
+    use tf_fpga::reconfig::policy::{BeladyOracle, EvictionPolicy, PolicyKind};
+    use tf_fpga::util::prng::Rng;
+
+    let mk_roles = || -> Vec<Bitstream> {
+        (0..roles)
+            .map(|i| {
+                Bitstream::new(
+                    format!("role{i}"),
+                    tf_fpga::fpga::roles::ROLE_BITSTREAM_BYTES,
+                    ResourceVector::new(100, 100, 10, 10),
+                    role3_spec(),
+                )
+            })
+            .collect()
+    };
+
+    // Workloads: cyclic (LRU-pathological), zipf-skewed, uniform random.
+    let traces: Vec<(&str, Vec<usize>)> = {
+        let mut rng = Rng::new(7);
+        let cyclic: Vec<usize> = (0..n).map(|i| i % roles).collect();
+        let zipf: Vec<usize> = (0..n).map(|_| rng.zipf(roles, 1.2)).collect();
+        let uniform: Vec<usize> = (0..n).map(|_| rng.below(roles as u64) as usize).collect();
+        vec![("cyclic", cyclic), ("zipf(1.2)", zipf), ("uniform", uniform)]
+    };
+
+    let mut table = Table::new(
+        format!("Eviction-policy ablation: {roles} roles, {regions} regions, n={n}"),
+        &["Trace", "Policy", "Hit rate", "Reconfig time [ms]"],
+    );
+    for (trace_name, trace) in &traces {
+        let mut run = |name: &str, mut policy: Box<dyn EvictionPolicy>| {
+            let bitstreams = mk_roles();
+            // Belady needs the trace up front.
+            if name == "belady" {
+                policy = Box::new(BeladyOracle::new(
+                    trace.iter().map(|&i| bitstreams[i].id).collect(),
+                ));
+            }
+            let mut mgr = ReconfigManager::with_uniform_regions(
+                regions,
+                ResourceVector::new(1000, 1000, 100, 100),
+                policy,
+                Icap::default(),
+            );
+            for &i in trace {
+                mgr.ensure_loaded(&bitstreams[i]).unwrap();
+            }
+            let s = mgr.stats();
+            table.row(&[
+                trace_name.to_string(),
+                name.to_string(),
+                format!("{:.1}%", 100.0 * s.hit_rate()),
+                format!("{:.1}", s.reconfig_us_total as f64 / 1000.0),
+            ]);
+        };
+        for kind in PolicyKind::ALL {
+            run(kind.build(1).name(), kind.build(1));
+        }
+        run("belady", PolicyKind::Lru.build(0) /* replaced above */);
+    }
+    println!("{table}");
+    Ok(())
+}
+
+fn ablate_regions(n: usize) -> Result<()> {
+    use tf_fpga::fpga::bitstream::Bitstream;
+    use tf_fpga::fpga::icap::Icap;
+    use tf_fpga::fpga::resources::ResourceVector;
+    use tf_fpga::fpga::roles::role3_spec;
+    use tf_fpga::metrics::report::Table;
+    use tf_fpga::reconfig::manager::ReconfigManager;
+    use tf_fpga::reconfig::policy::Lru;
+    use tf_fpga::util::prng::Rng;
+
+    let roles = 4;
+    let mut table = Table::new(
+        format!("PR-region-count sweep (LRU, {roles} roles, zipf(1.2), n={n})"),
+        &["Regions", "Hit rate", "Reconfigs", "Reconfig time [ms]"],
+    );
+    for regions in 1..=roles {
+        let bitstreams: Vec<Bitstream> = (0..roles)
+            .map(|i| {
+                Bitstream::new(
+                    format!("role{i}"),
+                    tf_fpga::fpga::roles::ROLE_BITSTREAM_BYTES,
+                    ResourceVector::new(100, 100, 10, 10),
+                    role3_spec(),
+                )
+            })
+            .collect();
+        let mut mgr = ReconfigManager::with_uniform_regions(
+            regions,
+            ResourceVector::new(1000, 1000, 100, 100),
+            Box::new(Lru),
+            Icap::default(),
+        );
+        let mut rng = Rng::new(11);
+        for _ in 0..n {
+            let i = rng.zipf(roles, 1.2);
+            mgr.ensure_loaded(&bitstreams[i]).unwrap();
+        }
+        let s = mgr.stats();
+        table.row(&[
+            regions.to_string(),
+            format!("{:.1}%", 100.0 * s.hit_rate()),
+            s.misses.to_string(),
+            format!("{:.1}", s.reconfig_us_total as f64 / 1000.0),
+        ]);
+    }
+    println!("{table}");
+    Ok(())
+}
+
+fn crossover() -> Result<()> {
+    use tf_fpga::cpu::a53::A53Model;
+    use tf_fpga::fpga::icap::Icap;
+    use tf_fpga::fpga::roles;
+    use tf_fpga::metrics::report::Table;
+
+    let icap = Icap::default();
+    let reconfig_us = icap.reconfig_time_us(roles::ROLE_BITSTREAM_BYTES) as f64;
+    let cpu = A53Model::default();
+    let mut table = Table::new(
+        "Reconfiguration amortization: dispatches for FPGA (reconfig + exec) to beat the A53",
+        &["Role", "FPGA exec [µs]", "A53 exec [µs]", "OP/cycle win", "Latency break-even"],
+    );
+    for spec in [
+        roles::role1_spec(),
+        roles::role2_spec(),
+        roles::role3_spec(),
+        roles::role4_spec(),
+    ] {
+        let fpga_us = spec.exec_ns(&spec.op) as f64 / 1000.0;
+        let cpu_us = cpu.exec_ns(&spec.op) as f64 / 1000.0;
+        let opc_win = spec.ops_per_cycle(&spec.op) / cpu.achieved_ops_per_cycle(&spec.op);
+        let be = if cpu_us > fpga_us {
+            format!("{:.0}", (reconfig_us / (cpu_us - fpga_us)).ceil())
+        } else {
+            "never (A53 clock 8x)".to_string()
+        };
+        table.row(&[
+            spec.name.to_string(),
+            format!("{fpga_us:.1}"),
+            format!("{cpu_us:.1}"),
+            format!("{opc_win:.2}x"),
+            be,
+        ]);
+    }
+    table.footnote(format!(
+        "reconfig = {reconfig_us:.0} µs (modeled PCAP); break-even = reconfig / (A53 - FPGA time)"
+    ));
+    table.footnote(
+        "the paper claims OP/cycle (energy) efficiency: the 150 MHz FC roles win per cycle \
+         but not wall-clock vs the 1200 MHz A53; the conv roles win both",
+    );
+    println!("{table}");
+    Ok(())
+}
+
+fn serve(
+    requests: usize,
+    clients: usize,
+    max_batch: usize,
+    max_delay_ms: usize,
+    trace_out: Option<String>,
+) -> Result<()> {
+    use std::sync::Arc;
+    use tf_fpga::serve::{BatchPolicy, InferenceServer, ServerConfig};
+    use tf_fpga::tf::session::SessionOptions;
+    use tf_fpga::trace::recorder::TraceRecorder;
+    use tf_fpga::util::prng::Rng;
+
+    let trace = trace_out.as_ref().map(|_| TraceRecorder::new());
+    let srv = InferenceServer::start(ServerConfig {
+        batch: BatchPolicy {
+            max_batch,
+            max_delay: std::time::Duration::from_millis(max_delay_ms as u64),
+        },
+        session: SessionOptions { trace: trace.clone(), ..SessionOptions::default() },
+    })
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "serving mnist_cnn: max_batch={max_batch} max_delay={max_delay_ms}ms, {clients} clients, {requests} requests"
+    );
+
+    let srv = Arc::new(srv);
+    let per_client = requests / clients.max(1);
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let srv = Arc::clone(&srv);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(c as u64 + 1);
+                for _ in 0..per_client {
+                    let mut img = vec![0f32; 784];
+                    rng.fill_f32_normal(&mut img, 0.0, 1.0);
+                    let logits = srv.infer(img).expect("infer");
+                    assert_eq!(logits.len(), 10);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let rep = srv.report();
+    println!("\n--- serve report ---");
+    println!("requests      : {}", rep.requests);
+    println!("batches       : {} (mean fill {:.1}/{max_batch})", rep.batches, rep.mean_batch_fill);
+    println!(
+        "latency       : mean {:.2} ms  p50 {:.2} ms  p99 {:.2} ms",
+        rep.latency_us_mean / 1e3,
+        rep.latency_us_p50 as f64 / 1e3,
+        rep.latency_us_p99 as f64 / 1e3
+    );
+    println!("throughput    : {:.0} req/s", rep.requests as f64 / wall);
+    println!(
+        "fpga          : hit rate {:.1}%, {} reconfigs",
+        100.0 * rep.reconfig.hit_rate(),
+        rep.reconfig.misses
+    );
+    if let (Some(tr), Some(path)) = (&trace, &trace_out) {
+        tr.write_to(std::path::Path::new(path))?;
+        println!("trace         : wrote {} events to {path}", tr.len());
+    }
+    drop(srv); // Drop stops the batcher and shuts the session down.
+    Ok(())
+}
+
+fn ablate_hls() -> Result<()> {
+    use tf_fpga::fpga::hls::HlsFlow;
+    use tf_fpga::fpga::icap::Icap;
+    use tf_fpga::fpga::roles;
+    use tf_fpga::fpga::synthesis::estimate;
+    use tf_fpga::metrics::report::Table;
+
+    let flow = HlsFlow::default();
+    let icap = Icap::default();
+    let reconfig_us = icap.reconfig_time_us(roles::ROLE_BITSTREAM_BYTES);
+    let mut table = Table::new(
+        "Pre-synthesized bitstreams vs online OpenCL synthesis (paper §III trade-off)",
+        &["Role", "Synthesis [s]", "Presynth flow [s]", "Online flow [s]", "Time x", "Energy x"],
+    );
+    let role_sets = [
+        ("role1_fc", roles::role1_components()),
+        ("role2_fc_barrier", roles::role2_components()),
+        ("role3_conv5x5", roles::role3_components()),
+        ("role4_conv3x3", roles::role4_components()),
+    ];
+    for (name, comps) in role_sets {
+        let res = estimate(&comps);
+        // A representative deployment: 1000 dispatches, 20 reconfigurations
+        // (LRU keeps the role mostly resident).
+        let cmp = flow.compare(&res, reconfig_us, 1000, 20);
+        table.row(&[
+            name.to_string(),
+            format!("{:.0}", flow.synthesis_seconds(&res)),
+            format!("{:.2}", cmp.presynth_total_s),
+            format!("{:.0}", cmp.online_total_s),
+            format!("{:.0}x", cmp.overhead_factor()),
+            format!("{:.0}x", cmp.energy_factor()),
+        ]);
+    }
+    table.footnote("online = on-device HLS+synthesis+P&R once, then the same reconfigurations");
+    table.footnote("the paper rejects the online flow for mobile use exactly because of these factors");
+    println!("{table}");
+    Ok(())
+}
+
+fn run_mnist(
+    batches: usize,
+    batch_size: usize,
+    opts: tf_fpga::tf::session::SessionOptions,
+) -> Result<()> {
+    use tf_fpga::tf::dtype::DType;
+    use tf_fpga::tf::graph::{Graph, OpKind};
+    use tf_fpga::tf::session::Session;
+    use tf_fpga::tf::tensor::Tensor;
+    use tf_fpga::util::prng::Rng;
+    use tf_fpga::util::stats::Summary;
+
+    let mut g = Graph::new();
+    let x = g
+        .placeholder("x", &[batch_size, 1, 28, 28], DType::F32)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    g.add("logits", OpKind::MnistCnn, &[x])
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let sess = Session::new(g, opts).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "session up in {:.1} ms (pjrt client {:.1} ms, compile {:.1} ms)",
+        sess.setup_timing().total_us as f64 / 1000.0,
+        sess.setup_timing().pjrt_client_us as f64 / 1000.0,
+        sess.setup_timing().pjrt_compile_us as f64 / 1000.0
+    );
+
+    let mut rng = Rng::new(99);
+    let mut lat = Vec::new();
+    let mut pred_hist = [0usize; 10];
+    for _ in 0..batches {
+        let mut img = vec![0f32; batch_size * 784];
+        rng.fill_f32_normal(&mut img, 0.0, 1.0);
+        let t = Tensor::from_f32(&[batch_size, 1, 28, 28], img).unwrap();
+        let t0 = std::time::Instant::now();
+        let out = sess.run(&[("x", t)], &["logits"]).map_err(|e| anyhow::anyhow!("{e}"))?;
+        lat.push(t0.elapsed().as_secs_f64() * 1e6);
+        for row in out[0].as_f32().unwrap().chunks(10) {
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            pred_hist[argmax] += 1;
+        }
+    }
+    let s = Summary::from_values(&lat);
+    println!(
+        "ran {} batches x {} images: mean {:.1} ms, p99 {:.1} ms, throughput {:.0} img/s",
+        batches,
+        batch_size,
+        s.mean / 1000.0,
+        s.p99 / 1000.0,
+        batch_size as f64 / (s.mean / 1e6)
+    );
+    println!("prediction histogram: {pred_hist:?}");
+    let rs = sess.reconfig_stats();
+    println!(
+        "fpga: {} dispatches, {} reconfigs ({} ms modeled), hit rate {:.1}%",
+        rs.dispatches,
+        rs.misses,
+        rs.reconfig_us_total / 1000,
+        100.0 * rs.hit_rate()
+    );
+    sess.shutdown();
+    Ok(())
+}

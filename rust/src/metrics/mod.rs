@@ -1,0 +1,7 @@
+//! Measurement and reporting utilities for the paper-style tables.
+
+pub mod histogram;
+pub mod report;
+
+pub use histogram::Histogram;
+pub use report::Table;

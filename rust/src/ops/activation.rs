@@ -1,0 +1,92 @@
+//! Activation functions.
+
+use crate::hsa::error::Result;
+use crate::tf::tensor::Tensor;
+
+pub fn relu_f32(x: &Tensor) -> Result<Tensor> {
+    let d = x.as_f32()?;
+    let out: Vec<f32> = d.iter().map(|&v| v.max(0.0)).collect();
+    Ok(Tensor::from_f32(x.shape(), out)?)
+}
+
+pub fn relu_i16(x: &Tensor) -> Result<Tensor> {
+    let d = x.as_i16()?;
+    let out: Vec<i16> = d.iter().map(|&v| v.max(0)).collect();
+    Ok(Tensor::from_i16(x.shape(), out)?)
+}
+
+/// Numerically-stable softmax over the last axis of a rank-2 f32 tensor.
+pub fn softmax_f32(x: &Tensor) -> Result<Tensor> {
+    use crate::hsa::error::HsaError;
+    let s = x.shape();
+    if s.len() != 2 {
+        return Err(HsaError::KernelFailed(format!("softmax rank {} != 2", s.len())));
+    }
+    let (m, n) = (s[0], s[1]);
+    let d = x.as_f32()?;
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let row = &d[i * n..(i + 1) * n];
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0f32;
+        for (j, &v) in row.iter().enumerate() {
+            let e = (v - max).exp();
+            out[i * n + j] = e;
+            sum += e;
+        }
+        for j in 0..n {
+            out[i * n + j] /= sum;
+        }
+    }
+    Ok(Tensor::from_f32(s, out)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_f32_clamps_negatives() {
+        let x = Tensor::from_f32(&[4], vec![-1.0, 0.0, 2.5, -0.1]).unwrap();
+        assert_eq!(relu_f32(&x).unwrap().as_f32().unwrap(), &[0.0, 0.0, 2.5, 0.0]);
+    }
+
+    #[test]
+    fn relu_i16_clamps_negatives() {
+        let x = Tensor::from_i16(&[3], vec![-5, 0, 7]).unwrap();
+        assert_eq!(relu_i16(&x).unwrap().as_i16().unwrap(), &[0, 0, 7]);
+    }
+
+    #[test]
+    fn relu_preserves_shape() {
+        let x = Tensor::zeros(&[2, 3, 4], crate::tf::dtype::DType::F32);
+        assert_eq!(relu_f32(&x).unwrap().shape(), &[2, 3, 4]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Tensor::from_f32(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]).unwrap();
+        let y = softmax_f32(&x).unwrap();
+        for row in y.as_f32().unwrap().chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "{row:?}");
+            assert!(row.windows(2).all(|w| w[0] < w[1]), "monotone logits");
+        }
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let x = Tensor::from_f32(&[1, 3], vec![1000.0, 1001.0, 1002.0]).unwrap();
+        let y = softmax_f32(&x).unwrap();
+        assert!(y.as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn softmax_uniform_for_equal_logits() {
+        let x = Tensor::from_f32(&[1, 4], vec![5.0; 4]).unwrap();
+        let y = softmax_f32(&x).unwrap();
+        for &v in y.as_f32().unwrap() {
+            assert!((v - 0.25).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Fixed-weight valid convolutions (roles 3 and 4), int16 and float32.
+//!
+//! Same semantics as `python/compile/kernels/ref.py::conv_fixed_ref`:
+//! cross-correlation orientation, int32 accumulation for int16 inputs,
+//! arithmetic right shift, saturation to int16.
+
+use crate::hsa::error::{HsaError, Result};
+use crate::tf::tensor::Tensor;
+
+fn out_dims(
+    x: &Tensor,
+    f: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+) -> Result<(usize, usize, usize)> {
+    let s = x.shape();
+    if s.len() != 3 {
+        return Err(HsaError::KernelFailed(format!("conv input rank {} != 3", s.len())));
+    }
+    if s[0] != c {
+        return Err(HsaError::KernelFailed(format!(
+            "conv expects {c} channels, got {}",
+            s[0]
+        )));
+    }
+    if s[1] < kh || s[2] < kw {
+        return Err(HsaError::KernelFailed(format!(
+            "input {:?} smaller than filter {kh}x{kw}",
+            &s[1..]
+        )));
+    }
+    let _ = f;
+    Ok((s[1] - kh + 1, s[2] - kw + 1, s[2]))
+}
+
+/// int16 fixed-weight conv: `x (C,H,W) i16`, `weights (F,C,KH,KW) i16`
+/// → `(F,OH,OW) i16` with i32 accumulate, `>> shift`, saturate.
+pub fn conv2d_fixed_i16(
+    x: &Tensor,
+    weights: &[i16],
+    f: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    shift: u32,
+) -> Result<Tensor> {
+    if weights.len() != f * c * kh * kw {
+        return Err(HsaError::KernelFailed("weight length mismatch".into()));
+    }
+    let (oh, ow, w_dim) = out_dims(x, f, c, kh, kw)?;
+    let xd = x.as_i16()?;
+    let h = x.shape()[1];
+    let _ = h;
+    let mut out = vec![0i16; f * oh * ow];
+    for fi in 0..f {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc: i32 = 0;
+                for ci in 0..c {
+                    for a in 0..kh {
+                        let xrow = &xd[ci * x.shape()[1] * w_dim + (oy + a) * w_dim + ox..];
+                        let wrow = &weights[((fi * c + ci) * kh + a) * kw..];
+                        for b in 0..kw {
+                            acc += xrow[b] as i32 * wrow[b] as i32;
+                        }
+                    }
+                }
+                let v = (acc >> shift).clamp(i16::MIN as i32, i16::MAX as i32);
+                out[fi * oh * ow + oy * ow + ox] = v as i16;
+            }
+        }
+    }
+    Ok(Tensor::from_i16(&[f, oh, ow], out)?)
+}
+
+/// float32 fixed-weight conv (the MNIST CNN's layers).
+pub fn conv2d_fixed_f32(
+    x: &Tensor,
+    weights: &[f32],
+    f: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+) -> Result<Tensor> {
+    if weights.len() != f * c * kh * kw {
+        return Err(HsaError::KernelFailed("weight length mismatch".into()));
+    }
+    let (oh, ow, w_dim) = out_dims(x, f, c, kh, kw)?;
+    let xd = x.as_f32()?;
+    let mut out = vec![0f32; f * oh * ow];
+    for fi in 0..f {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0f32;
+                for ci in 0..c {
+                    for a in 0..kh {
+                        let xbase = ci * x.shape()[1] * w_dim + (oy + a) * w_dim + ox;
+                        let wbase = ((fi * c + ci) * kh + a) * kw;
+                        for b in 0..kw {
+                            acc += xd[xbase + b] * weights[wbase + b];
+                        }
+                    }
+                }
+                out[fi * oh * ow + oy * ow + ox] = acc;
+            }
+        }
+    }
+    Ok(Tensor::from_f32(&[f, oh, ow], out)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_tap_i16() {
+        // 1x1 filter with weight 1<<shift reproduces the input.
+        let x = Tensor::from_i16(&[1, 3, 3], (1..=9).collect()).unwrap();
+        let w = vec![1i16 << 4];
+        let y = conv2d_fixed_i16(&x, &w, 1, 1, 1, 1, 4).unwrap();
+        assert_eq!(y.as_i16().unwrap(), x.as_i16().unwrap());
+    }
+
+    #[test]
+    fn box_filter_i16() {
+        // 2x2 all-ones over a constant image: each output = 4*v >> 0.
+        let x = Tensor::from_i16(&[1, 3, 3], vec![3; 9]).unwrap();
+        let w = vec![1i16; 4];
+        let y = conv2d_fixed_i16(&x, &w, 1, 1, 2, 2, 0).unwrap();
+        assert_eq!(y.shape(), &[1, 2, 2]);
+        assert!(y.as_i16().unwrap().iter().all(|&v| v == 12));
+    }
+
+    #[test]
+    fn saturation_clamps() {
+        let x = Tensor::from_i16(&[1, 2, 2], vec![32000; 4]).unwrap();
+        let w = vec![127i16; 4];
+        let y = conv2d_fixed_i16(&x, &w, 1, 1, 2, 2, 0).unwrap();
+        assert_eq!(y.as_i16().unwrap(), &[32767]);
+        let xn = Tensor::from_i16(&[1, 2, 2], vec![-32000; 4]).unwrap();
+        let yn = conv2d_fixed_i16(&xn, &w, 1, 1, 2, 2, 0).unwrap();
+        assert_eq!(yn.as_i16().unwrap(), &[-32768]);
+    }
+
+    #[test]
+    fn multi_filter_multi_channel_f32() {
+        // 2 channels, 2 filters of 1x1: filter0 = ch0 + ch1, filter1 = ch0 - ch1.
+        let x = Tensor::from_f32(&[2, 2, 2], vec![1., 2., 3., 4., 10., 20., 30., 40.])
+            .unwrap();
+        let w = vec![1., 1., 1., -1.];
+        let y = conv2d_fixed_f32(&x, &w, 2, 2, 1, 1).unwrap();
+        assert_eq!(y.shape(), &[2, 2, 2]);
+        assert_eq!(&y.as_f32().unwrap()[..4], &[11., 22., 33., 44.]);
+        assert_eq!(&y.as_f32().unwrap()[4..], &[-9., -18., -27., -36.]);
+    }
+
+    #[test]
+    fn arithmetic_shift_preserves_sign() {
+        let x = Tensor::from_i16(&[1, 1, 1], vec![-100]).unwrap();
+        let w = vec![1i16];
+        let y = conv2d_fixed_i16(&x, &w, 1, 1, 1, 1, 2).unwrap();
+        // -100 >> 2 (arithmetic) = -25.
+        assert_eq!(y.as_i16().unwrap(), &[-25]);
+    }
+
+    #[test]
+    fn wrong_channel_count_rejected() {
+        let x = Tensor::zeros(&[2, 4, 4], crate::tf::dtype::DType::I16);
+        assert!(conv2d_fixed_i16(&x, &[0; 9], 1, 1, 3, 3, 0).is_err());
+    }
+
+    #[test]
+    fn too_small_input_rejected() {
+        let x = Tensor::zeros(&[1, 2, 2], crate::tf::dtype::DType::I16);
+        assert!(conv2d_fixed_i16(&x, &[0; 9], 1, 1, 3, 3, 0).is_err());
+    }
+}

@@ -1,0 +1,69 @@
+//! Elementwise ops.
+
+use crate::hsa::error::{HsaError, Result};
+use crate::tf::tensor::Tensor;
+
+/// Elementwise f32 add (shapes must match).
+pub fn add_f32(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.shape() != b.shape() {
+        return Err(HsaError::KernelFailed(format!(
+            "add shape mismatch {:?} vs {:?}",
+            a.shape(),
+            b.shape()
+        )));
+    }
+    let av = a.as_f32()?;
+    let bv = b.as_f32()?;
+    let out: Vec<f32> = av.iter().zip(bv).map(|(x, y)| x + y).collect();
+    Ok(Tensor::from_f32(a.shape(), out)?)
+}
+
+/// `x (.., N) + b (N,)` — broadcast bias over the last axis.
+pub fn bias_add_f32(x: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let n = *x.shape().last().ok_or_else(|| {
+        HsaError::KernelFailed("bias_add on rank-0 tensor".into())
+    })?;
+    if b.shape() != [n] {
+        return Err(HsaError::KernelFailed(format!(
+            "bias shape {:?} != [{n}]",
+            b.shape()
+        )));
+    }
+    let xd = x.as_f32()?;
+    let bd = b.as_f32()?;
+    let out: Vec<f32> = xd
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| v + bd[i % n])
+        .collect();
+    Ok(Tensor::from_f32(x.shape(), out)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_elementwise() {
+        let a = Tensor::from_f32(&[3], vec![1., 2., 3.]).unwrap();
+        let b = Tensor::from_f32(&[3], vec![10., 20., 30.]).unwrap();
+        assert_eq!(add_f32(&a, &b).unwrap().as_f32().unwrap(), &[11., 22., 33.]);
+    }
+
+    #[test]
+    fn add_shape_mismatch() {
+        let a = Tensor::zeros(&[3], crate::tf::dtype::DType::F32);
+        let b = Tensor::zeros(&[4], crate::tf::dtype::DType::F32);
+        assert!(add_f32(&a, &b).is_err());
+    }
+
+    #[test]
+    fn bias_broadcasts_last_axis() {
+        let x = Tensor::from_f32(&[2, 2], vec![0., 0., 1., 1.]).unwrap();
+        let b = Tensor::from_f32(&[2], vec![5., -5.]).unwrap();
+        assert_eq!(
+            bias_add_f32(&x, &b).unwrap().as_f32().unwrap(),
+            &[5., -5., 6., -4.]
+        );
+    }
+}

@@ -1,0 +1,110 @@
+//! Dense float32 matmul / fully-connected kernels.
+
+use crate::hsa::error::{HsaError, Result};
+use crate::tf::tensor::Tensor;
+
+/// `x (M,K) @ w (K,N) -> (M,N)`, ikj loop order (row-major friendly).
+pub fn matmul_f32(x: &Tensor, w: &Tensor) -> Result<Tensor> {
+    let (xs, ws) = (x.shape(), w.shape());
+    if xs.len() != 2 || ws.len() != 2 || xs[1] != ws[0] {
+        return Err(HsaError::KernelFailed(format!(
+            "matmul shape mismatch: {xs:?} @ {ws:?}"
+        )));
+    }
+    let (m, k, n) = (xs[0], xs[1], ws[1]);
+    let xd = x.as_f32()?;
+    let wd = w.as_f32()?;
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let xik = xd[i * k + kk];
+            if xik == 0.0 {
+                continue;
+            }
+            let wrow = &wd[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += xik * wrow[j];
+            }
+        }
+    }
+    Ok(Tensor::from_f32(&[m, n], out)?)
+}
+
+/// Fully connected: `x @ w + b` (roles 1 and 2 — numerically identical;
+/// the barrier changes timing, not values).
+pub fn fc_f32(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let y = matmul_f32(x, w)?;
+    let n = w.shape()[1];
+    if b.shape() != [n] {
+        return Err(HsaError::KernelFailed(format!(
+            "fc bias shape {:?} != [{n}]",
+            b.shape()
+        )));
+    }
+    let bd = b.as_f32()?;
+    let yd = y.as_f32()?;
+    let m = y.shape()[0];
+    let mut out = Vec::with_capacity(m * n);
+    for i in 0..m {
+        for j in 0..n {
+            out.push(yd[i * n + j] + bd[j]);
+        }
+    }
+    Ok(Tensor::from_f32(&[m, n], out)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matmul() {
+        let x = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let eye = Tensor::from_f32(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let y = matmul_f32(&x, &eye).unwrap();
+        assert_eq!(y.as_f32().unwrap(), x.as_f32().unwrap());
+    }
+
+    #[test]
+    fn known_product() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let x = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let w = Tensor::from_f32(&[2, 2], vec![1.0; 4]).unwrap();
+        let y = matmul_f32(&x, &w).unwrap();
+        assert_eq!(y.as_f32().unwrap(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        let x = Tensor::from_f32(&[1, 3], vec![1.0, 2.0, 3.0]).unwrap();
+        let w = Tensor::from_f32(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap();
+        let y = matmul_f32(&x, &w).unwrap();
+        assert_eq!(y.shape(), &[1, 2]);
+        assert_eq!(y.as_f32().unwrap(), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let x = Tensor::zeros(&[2, 3], crate::tf::dtype::DType::F32);
+        let w = Tensor::zeros(&[4, 2], crate::tf::dtype::DType::F32);
+        assert!(matmul_f32(&x, &w).is_err());
+    }
+
+    #[test]
+    fn fc_adds_bias_per_column() {
+        let x = Tensor::from_f32(&[2, 2], vec![0.0; 4]).unwrap();
+        let w = Tensor::from_f32(&[2, 2], vec![0.0; 4]).unwrap();
+        let b = Tensor::from_f32(&[2], vec![1.5, -2.5]).unwrap();
+        let y = fc_f32(&x, &w, &b).unwrap();
+        assert_eq!(y.as_f32().unwrap(), &[1.5, -2.5, 1.5, -2.5]);
+    }
+
+    #[test]
+    fn fc_bad_bias_rejected() {
+        let x = Tensor::zeros(&[2, 2], crate::tf::dtype::DType::F32);
+        let w = Tensor::zeros(&[2, 2], crate::tf::dtype::DType::F32);
+        let b = Tensor::zeros(&[3], crate::tf::dtype::DType::F32);
+        assert!(fc_f32(&x, &w, &b).is_err());
+    }
+}

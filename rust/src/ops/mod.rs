@@ -1,0 +1,18 @@
+//! Native Rust kernels: the CPU agent's numerics and the oracle the FPGA
+//! path is cross-checked against. Semantics mirror
+//! `python/compile/kernels/ref.py` exactly (same accumulation order
+//! concerns do not arise: f32 sums are short; int16 paths are exact).
+
+pub mod activation;
+pub mod conv2d;
+pub mod elementwise;
+pub mod matmul;
+pub mod pool;
+pub mod quant;
+
+pub use activation::{relu_f32, relu_i16, softmax_f32};
+pub use conv2d::{conv2d_fixed_i16, conv2d_fixed_f32};
+pub use elementwise::{add_f32, bias_add_f32};
+pub use matmul::{fc_f32, matmul_f32};
+pub use pool::maxpool2_f32;
+pub use quant::{dequantize_i16_to_f32, quantize_f32_to_i16};

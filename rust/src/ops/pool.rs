@@ -1,0 +1,68 @@
+//! Pooling ops.
+
+use crate::hsa::error::{HsaError, Result};
+use crate::tf::tensor::Tensor;
+
+/// 2×2 max pool, stride 2, over `(C,H,W)` f32; trailing odd row/col dropped
+/// (matches `ref.py::maxpool2_ref`).
+pub fn maxpool2_f32(x: &Tensor) -> Result<Tensor> {
+    let s = x.shape();
+    if s.len() != 3 {
+        return Err(HsaError::KernelFailed(format!("maxpool rank {} != 3", s.len())));
+    }
+    let (c, h, w) = (s[0], s[1], s[2]);
+    let (h2, w2) = (h / 2, w / 2);
+    let d = x.as_f32()?;
+    let mut out = vec![0f32; c * h2 * w2];
+    for ci in 0..c {
+        for y in 0..h2 {
+            for xx in 0..w2 {
+                let base = ci * h * w + 2 * y * w + 2 * xx;
+                let m = d[base]
+                    .max(d[base + 1])
+                    .max(d[base + w])
+                    .max(d[base + w + 1]);
+                out[ci * h2 * w2 + y * w2 + xx] = m;
+            }
+        }
+    }
+    Ok(Tensor::from_f32(&[c, h2, w2], out)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pools_max_of_each_window() {
+        let x = Tensor::from_f32(
+            &[1, 2, 4],
+            vec![1., 5., 2., 0., 3., 4., 1., 9.],
+        )
+        .unwrap();
+        let y = maxpool2_f32(&x).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 2]);
+        assert_eq!(y.as_f32().unwrap(), &[5., 9.]);
+    }
+
+    #[test]
+    fn odd_dims_drop_trailing() {
+        let x = Tensor::from_f32(&[1, 3, 3], (0..9).map(|v| v as f32).collect()).unwrap();
+        let y = maxpool2_f32(&x).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 1]);
+        assert_eq!(y.as_f32().unwrap(), &[4.0]); // max of [[0,1],[3,4]]
+    }
+
+    #[test]
+    fn multi_channel_independent() {
+        let x = Tensor::from_f32(&[2, 2, 2], vec![1., 2., 3., 4., 8., 7., 6., 5.]).unwrap();
+        let y = maxpool2_f32(&x).unwrap();
+        assert_eq!(y.as_f32().unwrap(), &[4.0, 8.0]);
+    }
+
+    #[test]
+    fn wrong_rank_rejected() {
+        let x = Tensor::zeros(&[4, 4], crate::tf::dtype::DType::F32);
+        assert!(maxpool2_f32(&x).is_err());
+    }
+}

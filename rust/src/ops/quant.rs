@@ -1,0 +1,59 @@
+//! Fixed-point conversion between the f32 frontend and the int16 conv roles.
+//!
+//! The int16 roles use a Qm.n-style scale: `q = round(x * 2^frac_bits)`,
+//! saturated; dequantization divides back. `frac_bits` pairs with the conv
+//! roles' accumulator shift.
+
+use crate::hsa::error::Result;
+use crate::tf::tensor::Tensor;
+
+pub fn quantize_f32_to_i16(x: &Tensor, frac_bits: u32) -> Result<Tensor> {
+    let scale = (1i64 << frac_bits) as f32;
+    let d = x.as_f32()?;
+    let out: Vec<i16> = d
+        .iter()
+        .map(|&v| {
+            (v * scale)
+                .round()
+                .clamp(i16::MIN as f32, i16::MAX as f32) as i16
+        })
+        .collect();
+    Ok(Tensor::from_i16(x.shape(), out)?)
+}
+
+pub fn dequantize_i16_to_f32(x: &Tensor, frac_bits: u32) -> Result<Tensor> {
+    let scale = (1i64 << frac_bits) as f32;
+    let d = x.as_i16()?;
+    let out: Vec<f32> = d.iter().map(|&v| v as f32 / scale).collect();
+    Ok(Tensor::from_f32(x.shape(), out)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_small_values() {
+        let x = Tensor::from_f32(&[4], vec![0.5, -0.25, 1.0, 0.0]).unwrap();
+        let q = quantize_f32_to_i16(&x, 8).unwrap();
+        let d = dequantize_i16_to_f32(&q, 8).unwrap();
+        for (a, b) in x.as_f32().unwrap().iter().zip(d.as_f32().unwrap()) {
+            assert!((a - b).abs() < 1.0 / 256.0, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn saturates_out_of_range() {
+        let x = Tensor::from_f32(&[2], vec![1e6, -1e6]).unwrap();
+        let q = quantize_f32_to_i16(&x, 8).unwrap();
+        assert_eq!(q.as_i16().unwrap(), &[32767, -32768]);
+    }
+
+    #[test]
+    fn quantization_is_rounding_not_truncating() {
+        // 2.5/256 is exact in binary: quantizes to 2.5, rounds away to 3.
+        let x = Tensor::from_f32(&[1], vec![2.5 / 256.0]).unwrap();
+        let q = quantize_f32_to_i16(&x, 8).unwrap();
+        assert_eq!(q.as_i16().unwrap(), &[3]);
+    }
+}

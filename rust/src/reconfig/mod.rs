@@ -1,0 +1,16 @@
+//! Partial-reconfiguration management — the paper's runtime core:
+//! "Reconfiguration … happens every time when a kernel that is not
+//! currently loaded on the FPGA is executed. In this process a LRU
+//! eviction scheme is used if more roles than available regions need to be
+//! handled."
+//!
+//! [`policy`] provides the eviction schemes (LRU as shipped in the paper,
+//! plus FIFO / Random / MRU / a Belady oracle for the ablation study);
+//! [`manager`] binds roles to regions, accounts hits/misses/evictions and
+//! reconfiguration time.
+
+pub mod manager;
+pub mod policy;
+
+pub use manager::{LoadOutcome, ReconfigManager, ReconfigStats};
+pub use policy::{BeladyOracle, EvictionPolicy, Fifo, Lru, Mru, PolicyKind, RandomEvict};

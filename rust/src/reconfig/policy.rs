@@ -1,0 +1,263 @@
+//! Eviction policies for PR regions.
+//!
+//! The policy sees a read-only view of every *occupied* region (metadata
+//! only — resident role, load tick, last-use tick) and picks the victim.
+//! LRU is the paper's scheme; the others exist for the ablation bench
+//! (`cargo bench --bench ablations`).
+
+use crate::fpga::bitstream::RoleId;
+use crate::util::prng::Rng;
+
+/// Metadata the policy may inspect per candidate region.
+#[derive(Debug, Clone, Copy)]
+pub struct RegionView {
+    pub region_id: usize,
+    pub role: RoleId,
+    pub loaded_at_tick: u64,
+    pub last_used_tick: u64,
+}
+
+/// An eviction policy picks the index (into `candidates`) of the victim.
+pub trait EvictionPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn pick_victim(&mut self, candidates: &[RegionView]) -> usize;
+    /// Observation hook: a role was dispatched (Belady consumes its trace).
+    fn on_access(&mut self, _role: RoleId) {}
+}
+
+/// Least-recently-used — the paper's shipped policy.
+#[derive(Debug, Default)]
+pub struct Lru;
+
+impl EvictionPolicy for Lru {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+    fn pick_victim(&mut self, candidates: &[RegionView]) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, c)| c.last_used_tick)
+            .map(|(i, _)| i)
+            .expect("pick_victim on empty candidate set")
+    }
+}
+
+/// Most-recently-used (pathological counterpoint for cyclic traces).
+#[derive(Debug, Default)]
+pub struct Mru;
+
+impl EvictionPolicy for Mru {
+    fn name(&self) -> &'static str {
+        "mru"
+    }
+    fn pick_victim(&mut self, candidates: &[RegionView]) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, c)| c.last_used_tick)
+            .map(|(i, _)| i)
+            .expect("pick_victim on empty candidate set")
+    }
+}
+
+/// First-in-first-out over load ticks.
+#[derive(Debug, Default)]
+pub struct Fifo;
+
+impl EvictionPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+    fn pick_victim(&mut self, candidates: &[RegionView]) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, c)| c.loaded_at_tick)
+            .map(|(i, _)| i)
+            .expect("pick_victim on empty candidate set")
+    }
+}
+
+/// Uniform random victim.
+#[derive(Debug)]
+pub struct RandomEvict {
+    rng: Rng,
+}
+
+impl RandomEvict {
+    pub fn new(seed: u64) -> RandomEvict {
+        RandomEvict { rng: Rng::new(seed) }
+    }
+}
+
+impl EvictionPolicy for RandomEvict {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+    fn pick_victim(&mut self, candidates: &[RegionView]) -> usize {
+        self.rng.below(candidates.len() as u64) as usize
+    }
+}
+
+/// Belady's optimal offline policy: evict the role whose next use lies
+/// furthest in the future. Requires the full dispatch trace up front —
+/// usable only in the ablation harness, as the upper bound.
+#[derive(Debug)]
+pub struct BeladyOracle {
+    trace: Vec<RoleId>,
+    pos: usize,
+}
+
+impl BeladyOracle {
+    pub fn new(trace: Vec<RoleId>) -> BeladyOracle {
+        BeladyOracle { trace, pos: 0 }
+    }
+
+    fn next_use(&self, role: RoleId) -> Option<usize> {
+        self.trace[self.pos..].iter().position(|r| *r == role)
+    }
+}
+
+impl EvictionPolicy for BeladyOracle {
+    fn name(&self) -> &'static str {
+        "belady"
+    }
+
+    fn on_access(&mut self, role: RoleId) {
+        // Advance past this access so next_use looks strictly ahead.
+        debug_assert!(
+            self.pos >= self.trace.len() || self.trace[self.pos] == role,
+            "trace divergence: expected {:?} at {}, saw {:?}",
+            self.trace.get(self.pos),
+            self.pos,
+            role
+        );
+        self.pos = (self.pos + 1).min(self.trace.len());
+    }
+
+    fn pick_victim(&mut self, candidates: &[RegionView]) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, c)| self.next_use(c.role).unwrap_or(usize::MAX))
+            .map(|(i, _)| i)
+            .expect("pick_victim on empty candidate set")
+    }
+}
+
+/// Name-indexed construction for CLI/bench parameter sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Lru,
+    Mru,
+    Fifo,
+    Random,
+}
+
+impl PolicyKind {
+    pub fn build(self, seed: u64) -> Box<dyn EvictionPolicy> {
+        match self {
+            PolicyKind::Lru => Box::new(Lru),
+            PolicyKind::Mru => Box::new(Mru),
+            PolicyKind::Fifo => Box::new(Fifo),
+            PolicyKind::Random => Box::new(RandomEvict::new(seed)),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "lru" => Some(PolicyKind::Lru),
+            "mru" => Some(PolicyKind::Mru),
+            "fifo" => Some(PolicyKind::Fifo),
+            "random" => Some(PolicyKind::Random),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [PolicyKind; 4] =
+        [PolicyKind::Lru, PolicyKind::Mru, PolicyKind::Fifo, PolicyKind::Random];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(region_id: usize, role: u64, loaded: u64, used: u64) -> RegionView {
+        RegionView {
+            region_id,
+            role: RoleId(role),
+            loaded_at_tick: loaded,
+            last_used_tick: used,
+        }
+    }
+
+    #[test]
+    fn lru_picks_least_recently_used() {
+        let mut p = Lru;
+        let c = [view(0, 1, 0, 9), view(1, 2, 0, 3), view(2, 3, 0, 7)];
+        assert_eq!(p.pick_victim(&c), 1);
+    }
+
+    #[test]
+    fn mru_picks_most_recently_used() {
+        let mut p = Mru;
+        let c = [view(0, 1, 0, 9), view(1, 2, 0, 3)];
+        assert_eq!(p.pick_victim(&c), 0);
+    }
+
+    #[test]
+    fn fifo_picks_oldest_load() {
+        let mut p = Fifo;
+        let c = [view(0, 1, 5, 100), view(1, 2, 2, 200), view(2, 3, 8, 1)];
+        assert_eq!(p.pick_victim(&c), 1);
+    }
+
+    #[test]
+    fn random_is_in_bounds_and_deterministic_per_seed() {
+        let c = [view(0, 1, 0, 0), view(1, 2, 0, 0), view(2, 3, 0, 0)];
+        let picks_a: Vec<usize> =
+            (0..20).map(|_| RandomEvict::new(1).pick_victim(&c)).collect();
+        let picks_b: Vec<usize> =
+            (0..20).map(|_| RandomEvict::new(1).pick_victim(&c)).collect();
+        assert_eq!(picks_a, picks_b);
+        let mut p = RandomEvict::new(2);
+        for _ in 0..50 {
+            assert!(p.pick_victim(&c) < 3);
+        }
+    }
+
+    #[test]
+    fn belady_evicts_furthest_future_use() {
+        // Trace: A B C A B ... with A,B resident and C incoming, victim
+        // should be the one used furthest ahead.
+        let (a, b, c) = (RoleId(1), RoleId(2), RoleId(3));
+        let mut p = BeladyOracle::new(vec![a, b, c, b, a]);
+        p.on_access(a);
+        p.on_access(b);
+        // now at trace[2] = c (miss): candidates a (next at 4), b (next 3).
+        p.on_access(c);
+        let cands = [view(0, 1, 0, 0), view(1, 2, 0, 1)];
+        assert_eq!(p.pick_victim(&cands), 0, "a is used later than b");
+    }
+
+    #[test]
+    fn belady_prefers_never_used_again() {
+        let (a, b) = (RoleId(1), RoleId(2));
+        let mut p = BeladyOracle::new(vec![a, b, a]);
+        p.on_access(a);
+        p.on_access(b);
+        // a recurs, b never does.
+        let cands = [view(0, 1, 0, 0), view(1, 2, 0, 1)];
+        assert_eq!(p.pick_victim(&cands), 1);
+    }
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for k in PolicyKind::ALL {
+            let name = k.build(0).name();
+            assert_eq!(PolicyKind::parse(name), Some(k));
+        }
+        assert_eq!(PolicyKind::parse("belady"), None, "belady needs a trace");
+    }
+}

@@ -1,0 +1,268 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. See the manifest schema in aot.py.
+
+use crate::hsa::error::{HsaError, Result};
+use crate::tf::dtype::DType;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor in a module signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One AOT-lowered module.
+#[derive(Debug, Clone)]
+pub struct ModuleMeta {
+    pub name: String,
+    /// Path of the HLO text file, absolute.
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorMeta>,
+    pub output: TensorMeta,
+    /// Lowered with `return_tuple=True` → unwrap a 1-tuple on execute.
+    pub tuple_output: bool,
+}
+
+/// Raw weight blob descriptor (for the native CPU baseline).
+#[derive(Debug, Clone)]
+pub struct WeightMeta {
+    pub path: PathBuf,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// Parsed artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub modules: BTreeMap<String, ModuleMeta>,
+    pub weights: BTreeMap<String, WeightMeta>,
+    pub conv_shift: u32,
+    pub seed: u64,
+}
+
+fn tensor_meta(name: &str, v: &Json) -> Result<TensorMeta> {
+    let shape = v
+        .get("shape")
+        .as_arr()
+        .ok_or_else(|| HsaError::Runtime(format!("{name}: missing shape")))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| HsaError::Runtime("bad dim".into())))
+        .collect::<Result<Vec<usize>>>()?;
+    let dt = v
+        .get("dtype")
+        .as_str()
+        .and_then(DType::from_manifest)
+        .ok_or_else(|| HsaError::Runtime(format!("{name}: bad dtype")))?;
+    Ok(TensorMeta {
+        name: v.get("name").as_str().unwrap_or(name).to_string(),
+        shape,
+        dtype: dt,
+    })
+}
+
+impl ArtifactStore {
+    /// Parse `<dir>/manifest.json`. Fails with a readable error if the
+    /// artifacts have not been built (`make artifacts`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactStore> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            HsaError::Runtime(format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                manifest_path.display()
+            ))
+        })?;
+        let doc = Json::parse(&text)
+            .map_err(|e| HsaError::Runtime(format!("manifest: {e}")))?;
+
+        let mut modules = BTreeMap::new();
+        if let Some(mods) = doc.get("modules").as_obj() {
+            for (name, m) in mods {
+                let file = m
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| HsaError::Runtime(format!("{name}: no file")))?;
+                let inputs = m
+                    .get("inputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|v| tensor_meta(name, v))
+                    .collect::<Result<Vec<_>>>()?;
+                let output = tensor_meta(name, m.get("output"))?;
+                modules.insert(
+                    name.clone(),
+                    ModuleMeta {
+                        name: name.clone(),
+                        hlo_path: dir.join(file),
+                        inputs,
+                        output,
+                        tuple_output: matches!(m.get("tuple_output"), Json::Bool(true)),
+                    },
+                );
+            }
+        }
+
+        let mut weights = BTreeMap::new();
+        if let Some(ws) = doc.get("weights").as_obj() {
+            for (name, w) in ws {
+                let meta = tensor_meta(name, w)?;
+                let file = w
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| HsaError::Runtime(format!("{name}: no file")))?;
+                weights.insert(
+                    name.clone(),
+                    WeightMeta {
+                        path: dir.join(file),
+                        shape: meta.shape,
+                        dtype: meta.dtype,
+                    },
+                );
+            }
+        }
+
+        Ok(ArtifactStore {
+            dir,
+            modules,
+            weights,
+            conv_shift: doc.get("conv_shift").as_usize().unwrap_or(8) as u32,
+            seed: doc.get("seed").as_f64().unwrap_or(0.0) as u64,
+        })
+    }
+
+    /// Default location: `$TF_FPGA_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<ArtifactStore> {
+        let dir = std::env::var("TF_FPGA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        ArtifactStore::open(dir)
+    }
+
+    pub fn module(&self, name: &str) -> Result<&ModuleMeta> {
+        self.modules
+            .get(name)
+            .ok_or_else(|| HsaError::Runtime(format!("no module '{name}' in manifest")))
+    }
+
+    /// Load a raw little-endian weight blob as f32 (shape from manifest).
+    pub fn load_weight_f32(&self, name: &str) -> Result<(Vec<usize>, Vec<f32>)> {
+        let w = self
+            .weights
+            .get(name)
+            .ok_or_else(|| HsaError::Runtime(format!("no weight '{name}'")))?;
+        if w.dtype != DType::F32 {
+            return Err(HsaError::Runtime(format!("{name} is {}", w.dtype)));
+        }
+        let bytes = std::fs::read(&w.path)
+            .map_err(|e| HsaError::Runtime(format!("read {}: {e}", w.path.display())))?;
+        let vals = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok((w.shape.clone(), vals))
+    }
+
+    /// Load a raw little-endian weight blob as i16.
+    pub fn load_weight_i16(&self, name: &str) -> Result<(Vec<usize>, Vec<i16>)> {
+        let w = self
+            .weights
+            .get(name)
+            .ok_or_else(|| HsaError::Runtime(format!("no weight '{name}'")))?;
+        if w.dtype != DType::I16 {
+            return Err(HsaError::Runtime(format!("{name} is {}", w.dtype)));
+        }
+        let bytes = std::fs::read(&w.path)
+            .map_err(|e| HsaError::Runtime(format!("read {}: {e}", w.path.display())))?;
+        let vals = bytes
+            .chunks_exact(2)
+            .map(|c| i16::from_le_bytes([c[0], c[1]]))
+            .collect();
+        Ok((w.shape.clone(), vals))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tf_fpga_artifact_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let d = tmpdir("min");
+        write_manifest(
+            &d,
+            r#"{"version":1,"seed":7,"conv_shift":8,"modules":{
+                "m":{"file":"m.hlo.txt",
+                     "inputs":[{"name":"x","shape":[2,3],"dtype":"f32"}],
+                     "output":{"shape":[2],"dtype":"i16"},
+                     "tuple_output":true}},
+                "weights":{}}"#,
+        );
+        let store = ArtifactStore::open(&d).unwrap();
+        let m = store.module("m").unwrap();
+        assert_eq!(m.inputs[0].shape, vec![2, 3]);
+        assert_eq!(m.inputs[0].dtype, DType::F32);
+        assert_eq!(m.output.dtype, DType::I16);
+        assert!(m.tuple_output);
+        assert_eq!(store.seed, 7);
+        assert!(store.module("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_friendly_error() {
+        let err = ArtifactStore::open("/definitely/not/here").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn weight_blob_round_trip() {
+        let d = tmpdir("w");
+        std::fs::create_dir_all(d.join("weights")).unwrap();
+        let vals: Vec<f32> = vec![1.5, -2.0, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(d.join("weights/a.bin"), bytes).unwrap();
+        write_manifest(
+            &d,
+            r#"{"modules":{},"weights":{
+                "a":{"file":"weights/a.bin","shape":[3],"dtype":"f32"}}}"#,
+        );
+        let store = ArtifactStore::open(&d).unwrap();
+        let (shape, data) = store.load_weight_f32("a").unwrap();
+        assert_eq!(shape, vec![3]);
+        assert_eq!(data, vals);
+        assert!(store.load_weight_i16("a").is_err(), "dtype enforced");
+    }
+
+    #[test]
+    fn i16_weight_blob() {
+        let d = tmpdir("wi16");
+        std::fs::create_dir_all(d.join("weights")).unwrap();
+        let vals: Vec<i16> = vec![-5, 7, 32767];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(d.join("weights/b.bin"), bytes).unwrap();
+        write_manifest(
+            &d,
+            r#"{"modules":{},"weights":{
+                "b":{"file":"weights/b.bin","shape":[3],"dtype":"i16"}}}"#,
+        );
+        let store = ArtifactStore::open(&d).unwrap();
+        let (_, data) = store.load_weight_i16("b").unwrap();
+        assert_eq!(data, vals);
+    }
+}

@@ -1,0 +1,14 @@
+//! Runtime: loads AOT-compiled HLO artifacts and executes them via PJRT.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-backed (not `Send`/`Sync`), so
+//! all PJRT objects live on one dedicated *executor service thread*
+//! ([`pjrt::PjrtService`]); agents talk to it through a cloneable,
+//! thread-safe [`pjrt::PjrtHandle`]. [`artifact`] reads the
+//! `artifacts/manifest.json` the Python AOT step writes and loads each
+//! module's HLO text.
+
+pub mod artifact;
+pub mod pjrt;
+
+pub use artifact::{ArtifactStore, ModuleMeta, TensorMeta};
+pub use pjrt::{PjrtHandle, PjrtService};

@@ -1,0 +1,119 @@
+//! Dynamic batching: collect requests until the batch is full or the
+//! oldest request has waited `max_delay` (vLLM-router-style policy,
+//! simplified for a single model).
+
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch (the model's compiled batch dim).
+    pub max_batch: usize,
+    /// Max time the oldest queued request may wait before the batch is
+    /// closed even if not full.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_delay: Duration::from_millis(5) }
+    }
+}
+
+/// An accumulating batch of items with arrival times.
+#[derive(Debug)]
+pub struct Batch<T> {
+    items: Vec<T>,
+    oldest: Option<Instant>,
+    policy: BatchPolicy,
+}
+
+impl<T> Batch<T> {
+    pub fn new(policy: BatchPolicy) -> Batch<T> {
+        Batch { items: Vec::with_capacity(policy.max_batch), oldest: None, policy }
+    }
+
+    /// Add an item; returns true if the batch is now full.
+    pub fn push(&mut self, item: T) -> bool {
+        if self.items.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.items.push(item);
+        self.items.len() >= self.policy.max_batch
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Whether the deadline policy says to close the batch now.
+    pub fn deadline_expired(&self) -> bool {
+        match self.oldest {
+            Some(t) => !self.items.is_empty() && t.elapsed() >= self.policy.max_delay,
+            None => false,
+        }
+    }
+
+    /// Remaining time until the deadline (None if empty).
+    pub fn time_left(&self) -> Option<Duration> {
+        self.oldest
+            .map(|t| self.policy.max_delay.saturating_sub(t.elapsed()))
+    }
+
+    /// Close the batch, taking its items.
+    pub fn take(&mut self) -> Vec<T> {
+        self.oldest = None;
+        std::mem::take(&mut self.items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_delay: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn fills_to_max_batch() {
+        let mut b = Batch::new(policy(3, 1000));
+        assert!(!b.push(1));
+        assert!(!b.push(2));
+        assert!(b.push(3), "third item fills the batch");
+        assert_eq!(b.take(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_fires_for_partial_batch() {
+        let mut b = Batch::new(policy(10, 10));
+        b.push(1);
+        assert!(!b.deadline_expired());
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.deadline_expired());
+    }
+
+    #[test]
+    fn empty_batch_never_expires() {
+        let b: Batch<u32> = Batch::new(policy(10, 0));
+        assert!(!b.deadline_expired());
+        assert!(b.time_left().is_none());
+    }
+
+    #[test]
+    fn take_resets_deadline() {
+        let mut b = Batch::new(policy(10, 5));
+        b.push(1);
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(b.deadline_expired());
+        let _ = b.take();
+        assert!(!b.deadline_expired());
+        b.push(2);
+        assert!(!b.deadline_expired(), "fresh deadline for the new batch");
+    }
+}

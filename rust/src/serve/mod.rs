@@ -1,0 +1,10 @@
+//! Inference serving on top of the session: a request queue, a dynamic
+//! batcher, and worker threads — the "mobile inference service" the
+//! paper's introduction motivates (continuous camera/sensor frames with
+//! pre/post-processing sharing the FPGA).
+
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{Batch, BatchPolicy};
+pub use server::{InferenceServer, ServeReport, ServerConfig};

@@ -1,0 +1,317 @@
+//! The inference server: clients submit single images; a batcher thread
+//! groups them and drives the session's whole-model kernel (`mnist_cnn`),
+//! padding the final partial batch (the PJRT module's batch dim is
+//! compiled to `max_batch`, like a real shape-locked bitstream).
+
+use crate::hsa::error::{HsaError, Result};
+use crate::metrics::histogram::Histogram;
+use crate::serve::batcher::{Batch, BatchPolicy};
+use crate::tf::dtype::DType;
+use crate::tf::graph::{Graph, OpKind};
+use crate::tf::session::{Session, SessionOptions};
+use crate::tf::tensor::Tensor;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub batch: BatchPolicy,
+    pub session: SessionOptions,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { batch: BatchPolicy::default(), session: SessionOptions::default() }
+    }
+}
+
+struct Request {
+    image: Vec<f32>, // 784 floats
+    enqueued: Instant,
+    reply: mpsc::SyncSender<Result<Vec<f32>>>, // 10 logits
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch_fill: f64,
+    /// End-to-end request latency in µs.
+    pub latency_us_p50: u64,
+    pub latency_us_p99: u64,
+    pub latency_us_mean: f64,
+    pub reconfig: crate::reconfig::manager::ReconfigStats,
+}
+
+struct Shared {
+    latency: Histogram,
+    requests: u64,
+    batches: u64,
+    fill_sum: u64,
+}
+
+/// A running inference server.
+pub struct InferenceServer {
+    tx: mpsc::Sender<Option<Request>>,
+    worker: Option<JoinHandle<()>>,
+    session: Arc<Session>,
+    shared: Arc<Mutex<Shared>>,
+    max_batch: usize,
+}
+
+impl InferenceServer {
+    /// Build the session (batch dim = `config.batch.max_batch`) and start
+    /// the batcher/worker thread.
+    pub fn start(config: ServerConfig) -> Result<InferenceServer> {
+        let max_batch = config.batch.max_batch;
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[max_batch, 1, 28, 28], DType::F32)?;
+        g.add("logits", OpKind::MnistCnn, &[x])?;
+        let session = Arc::new(Session::new(g, config.session)?);
+
+        let (tx, rx) = mpsc::channel::<Option<Request>>();
+        let shared = Arc::new(Mutex::new(Shared {
+            latency: Histogram::new(),
+            requests: 0,
+            batches: 0,
+            fill_sum: 0,
+        }));
+        let worker = {
+            let session = Arc::clone(&session);
+            let shared = Arc::clone(&shared);
+            let policy = config.batch;
+            std::thread::Builder::new()
+                .name("inference-batcher".into())
+                .spawn(move || batcher_loop(rx, session, shared, policy))
+                .map_err(|e| HsaError::Runtime(format!("spawn batcher: {e}")))?
+        };
+        Ok(InferenceServer {
+            tx,
+            worker: Some(worker),
+            session,
+            shared,
+            max_batch,
+        })
+    }
+
+    /// Submit one 28x28 image; blocks until its logits are ready.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
+        if image.len() != 784 {
+            return Err(HsaError::Runtime(format!(
+                "image must be 784 floats, got {}",
+                image.len()
+            )));
+        }
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Some(Request { image, enqueued: Instant::now(), reply }))
+            .map_err(|_| HsaError::Runtime("server stopped".into()))?;
+        rx.recv().map_err(|_| HsaError::Runtime("server dropped request".into()))?
+    }
+
+    /// Non-blocking async submit: returns a receiver for the logits.
+    pub fn infer_async(
+        &self,
+        image: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Some(Request { image, enqueued: Instant::now(), reply }))
+            .map_err(|_| HsaError::Runtime("server stopped".into()))?;
+        Ok(rx)
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn report(&self) -> ServeReport {
+        let s = self.shared.lock().unwrap();
+        ServeReport {
+            requests: s.requests,
+            batches: s.batches,
+            mean_batch_fill: if s.batches == 0 {
+                0.0
+            } else {
+                s.fill_sum as f64 / s.batches as f64
+            },
+            latency_us_p50: s.latency.quantile(0.50),
+            latency_us_p99: s.latency.quantile(0.99),
+            latency_us_mean: s.latency.mean(),
+            reconfig: self.session.reconfig_stats(),
+        }
+    }
+
+    pub fn stop(&mut self) {
+        let _ = self.tx.send(None);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.session.shutdown();
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+enum Msg {
+    Req(Request),
+    /// Deadline tick (no message arrived before the batch deadline).
+    Tick,
+    /// Stop sentinel or disconnected channel.
+    Stop,
+}
+
+fn batcher_loop(
+    rx: mpsc::Receiver<Option<Request>>,
+    session: Arc<Session>,
+    shared: Arc<Mutex<Shared>>,
+    policy: BatchPolicy,
+) {
+    let mut batch: Batch<Request> = Batch::new(policy);
+    loop {
+        // Wait for work; with a batch open, wait only until its deadline.
+        let msg = match batch.time_left() {
+            None => match rx.recv() {
+                Ok(Some(r)) => Msg::Req(r),
+                Ok(None) | Err(_) => Msg::Stop,
+            },
+            Some(left) => match rx.recv_timeout(left.max(Duration::from_micros(50))) {
+                Ok(Some(r)) => Msg::Req(r),
+                Ok(None) => Msg::Stop,
+                Err(mpsc::RecvTimeoutError::Timeout) => Msg::Tick,
+                Err(mpsc::RecvTimeoutError::Disconnected) => Msg::Stop,
+            },
+        };
+        match msg {
+            Msg::Req(r) => {
+                let full = batch.push(r);
+                if full || batch.deadline_expired() {
+                    flush(&mut batch, &session, &shared);
+                }
+            }
+            Msg::Tick => {
+                if batch.deadline_expired() {
+                    flush(&mut batch, &session, &shared);
+                }
+            }
+            Msg::Stop => {
+                if !batch.is_empty() {
+                    flush(&mut batch, &session, &shared);
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn flush(batch: &mut Batch<Request>, session: &Session, shared: &Mutex<Shared>) {
+    let reqs = batch.take();
+    let n = reqs.len();
+    let max_batch = {
+        // Padded to the compiled batch dim.
+        session.graph().node(session.graph().by_name("x").unwrap()).out_shape[0]
+    };
+    let mut data = vec![0f32; max_batch * 784];
+    for (i, r) in reqs.iter().enumerate() {
+        data[i * 784..(i + 1) * 784].copy_from_slice(&r.image);
+    }
+    let x = Tensor::from_f32(&[max_batch, 1, 28, 28], data).expect("batch tensor");
+    let result = session.run(&[("x", x)], &["logits"]);
+    match result {
+        Ok(out) => {
+            let logits = out[0].as_f32().expect("f32 logits");
+            let mut s = shared.lock().unwrap();
+            for (i, r) in reqs.into_iter().enumerate() {
+                let row = logits[i * 10..(i + 1) * 10].to_vec();
+                s.latency.record(r.enqueued.elapsed().as_micros() as u64);
+                s.requests += 1;
+                let _ = r.reply.send(Ok(row));
+            }
+            s.batches += 1;
+            s.fill_sum += n as u64;
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            let mut s = shared.lock().unwrap();
+            for r in reqs {
+                s.requests += 1;
+                let _ = r.reply.send(Err(HsaError::Runtime(msg.clone())));
+            }
+            s.batches += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server(max_batch: usize, delay_ms: u64) -> InferenceServer {
+        InferenceServer::start(ServerConfig {
+            batch: BatchPolicy {
+                max_batch,
+                max_delay: Duration::from_millis(delay_ms),
+            },
+            session: SessionOptions::native_only(),
+        })
+        .expect("server")
+    }
+
+    #[test]
+    fn single_request_served_by_deadline() {
+        let mut srv = server(8, 5);
+        let logits = srv.infer(vec![0.5; 784]).unwrap();
+        assert_eq!(logits.len(), 10);
+        let rep = srv.report();
+        assert_eq!(rep.requests, 1);
+        assert_eq!(rep.batches, 1);
+        srv.stop();
+    }
+
+    #[test]
+    fn many_async_requests_batch_up() {
+        let mut srv = server(8, 20);
+        let rxs: Vec<_> = (0..16)
+            .map(|i| srv.infer_async(vec![i as f32 / 16.0; 784]).unwrap())
+            .collect();
+        for rx in rxs {
+            let logits = rx.recv().unwrap().unwrap();
+            assert_eq!(logits.len(), 10);
+        }
+        let rep = srv.report();
+        assert_eq!(rep.requests, 16);
+        assert!(rep.batches <= 4, "16 requests should need few batches: {rep:?}");
+        assert!(rep.mean_batch_fill > 2.0, "{rep:?}");
+        srv.stop();
+    }
+
+    #[test]
+    fn identical_inputs_identical_outputs_across_batches() {
+        let mut srv = server(4, 2);
+        let a = srv.infer(vec![0.25; 784]).unwrap();
+        let b = srv.infer(vec![0.25; 784]).unwrap();
+        assert_eq!(a, b, "padding must not leak across requests");
+        srv.stop();
+    }
+
+    #[test]
+    fn bad_image_size_rejected() {
+        let mut srv = server(4, 2);
+        assert!(srv.infer(vec![0.0; 100]).is_err());
+        srv.stop();
+    }
+
+    #[test]
+    fn stop_is_clean_with_inflight_empty() {
+        let mut srv = server(4, 2);
+        srv.stop();
+        assert!(srv.infer(vec![0.0; 784]).is_err(), "stopped server rejects");
+    }
+}

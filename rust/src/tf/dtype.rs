@@ -1,0 +1,65 @@
+//! Element types supported by the frontend (mirrors the artifact manifest).
+
+use std::fmt;
+
+/// Tensor element type. The paper's roles use `F32` (FC) and `I16`
+/// (fixed-point conv); `I32` appears as the conv accumulator type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    F32,
+    I16,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I16 => 2,
+        }
+    }
+
+    /// Manifest string form (`"f32"`, `"i16"`, `"i32"`).
+    pub fn from_manifest(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i16" => Some(DType::I16),
+            "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+
+    pub fn as_manifest(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I16 => "i16",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_manifest())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::I16.size_bytes(), 2);
+        assert_eq!(DType::I32.size_bytes(), 4);
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        for dt in [DType::F32, DType::I16, DType::I32] {
+            assert_eq!(DType::from_manifest(dt.as_manifest()), Some(dt));
+        }
+        assert_eq!(DType::from_manifest("f64"), None);
+    }
+}

@@ -1,0 +1,285 @@
+//! The graph executor: topological walk, inline structural ops, HSA
+//! dispatch for compute ops, reference-counted tensor lifetimes.
+
+use crate::hsa::agent::DeviceType;
+use crate::hsa::error::{HsaError, Result};
+use crate::hsa::queue::Queue;
+use crate::hsa::runtime::HsaRuntime;
+use crate::tf::graph::{Graph, NodeId, OpKind};
+use crate::tf::placer::{Placement, PlacementMap};
+use crate::tf::tensor::Tensor;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Per-run statistics (feeds Table II's dispatch-latency analysis).
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub inline_ops: u64,
+    pub dispatches: u64,
+    pub dispatches_by_device: HashMap<DeviceType, u64>,
+    pub wall_us: u128,
+}
+
+/// Execution environment: the HSA runtime and one queue per device type.
+pub struct ExecEnv<'a> {
+    pub runtime: &'a HsaRuntime,
+    pub queues: &'a HashMap<DeviceType, Queue>,
+}
+
+/// Execute a finalized, placed graph.
+pub fn run(
+    graph: &Graph,
+    placement: &PlacementMap,
+    env: &ExecEnv<'_>,
+    feeds: &HashMap<String, Tensor>,
+    fetches: &[&str],
+) -> Result<(Vec<Tensor>, RunStats)> {
+    assert!(graph.is_finalized(), "finalize the graph before running");
+    let t0 = Instant::now();
+    let mut stats = RunStats::default();
+
+    // Reference counts: free intermediate tensors when the last consumer is
+    // done (keeps peak memory at the working set, not the whole graph).
+    let mut refcount: Vec<usize> = vec![0; graph.len()];
+    for node in graph.nodes() {
+        for &i in &node.inputs {
+            refcount[i.0] += 1;
+        }
+    }
+    for &name in fetches {
+        let id = graph
+            .by_name(name)
+            .ok_or_else(|| HsaError::Runtime(format!("fetch '{name}' not in graph")))?;
+        refcount[id.0] += 1;
+    }
+
+    let mut values: Vec<Option<Tensor>> = vec![None; graph.len()];
+
+    for id in graph.topo_order() {
+        let node = graph.node(id);
+        // Dead nodes (nothing consumes them) still execute — TF prunes;
+        // we keep it simple and skip only if refcount is 0 AND not fetched.
+        if refcount[id.0] == 0 {
+            continue;
+        }
+        let inputs: Vec<Tensor> = node
+            .inputs
+            .iter()
+            .map(|&i| {
+                values[i.0]
+                    .clone()
+                    .ok_or_else(|| HsaError::Runtime(format!("input of '{}' missing", node.name)))
+            })
+            .collect::<Result<_>>()?;
+
+        let out = match placement.by_node.get(&id) {
+            Some(Placement::Inline) | None => {
+                stats.inline_ops += 1;
+                run_inline(node.id, graph, feeds, &inputs)?
+            }
+            Some(Placement::Device { device, kernel_object }) => {
+                let queue = env.queues.get(device).ok_or_else(|| {
+                    HsaError::Runtime(format!("no queue for device {device}"))
+                })?;
+                stats.dispatches += 1;
+                *stats.dispatches_by_device.entry(*device).or_insert(0) += 1;
+                let mut outs = env.runtime.dispatch_sync(queue, *kernel_object, inputs)?;
+                if outs.len() != 1 {
+                    return Err(HsaError::Runtime(format!(
+                        "kernel for '{}' returned {} outputs",
+                        node.name,
+                        outs.len()
+                    )));
+                }
+                outs.pop().unwrap()
+            }
+        };
+
+        // Shape check against inference (strict mode catches kernel bugs).
+        if !node.out_shape.is_empty() && out.shape() != node.out_shape.as_slice() {
+            return Err(HsaError::Runtime(format!(
+                "node '{}': kernel produced {:?}, inference said {:?}",
+                node.name,
+                out.shape(),
+                node.out_shape
+            )));
+        }
+
+        values[id.0] = Some(out);
+
+        // Release inputs whose consumers are all done.
+        for &i in &node.inputs {
+            refcount[i.0] -= 1;
+            if refcount[i.0] == 0 {
+                values[i.0] = None;
+            }
+        }
+    }
+
+    let mut results = Vec::with_capacity(fetches.len());
+    for &name in fetches {
+        let id = graph.by_name(name).unwrap();
+        let t = values[id.0]
+            .clone()
+            .ok_or_else(|| HsaError::Runtime(format!("fetch '{name}' was not computed")))?;
+        results.push(t);
+    }
+    stats.wall_us = t0.elapsed().as_micros();
+    Ok((results, stats))
+}
+
+fn run_inline(
+    id: NodeId,
+    graph: &Graph,
+    feeds: &HashMap<String, Tensor>,
+    inputs: &[Tensor],
+) -> Result<Tensor> {
+    let node = graph.node(id);
+    match &node.op {
+        OpKind::Placeholder { shape, dtype } => {
+            let t = feeds.get(&node.name).ok_or_else(|| {
+                HsaError::Runtime(format!("placeholder '{}' not fed", node.name))
+            })?;
+            if t.shape() != shape.as_slice() || t.dtype() != *dtype {
+                return Err(HsaError::Runtime(format!(
+                    "feed '{}': expected {:?} {}, got {:?} {}",
+                    node.name,
+                    shape,
+                    dtype,
+                    t.shape(),
+                    t.dtype()
+                )));
+            }
+            Ok(t.clone())
+        }
+        OpKind::Constant(t) => Ok(t.clone()),
+        OpKind::Reshape { shape } => Ok(inputs[0].reshape(shape)?),
+        other => Err(HsaError::Runtime(format!(
+            "op {other:?} is not inline-executable"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::device::{CpuAgent, CpuKernel};
+    use crate::cpu::a53::CpuKernelClass;
+    use crate::tf::dtype::DType;
+    use crate::tf::kernel::KernelRegistry;
+    use crate::tf::placer::{place, PlacerOptions};
+    use std::sync::Arc;
+
+    fn env_with_cpu() -> (HsaRuntime, HashMap<DeviceType, Queue>, KernelRegistry) {
+        let cpu = CpuAgent::with_defaults();
+        let fc = cpu.register_kernel(CpuKernel {
+            name: "fc".into(),
+            func: Arc::new(|ins| Ok(vec![crate::ops::fc_f32(&ins[0], &ins[1], &ins[2])?])),
+            class: CpuKernelClass::FcF32,
+            op_template: None,
+        });
+        let relu = cpu.register_kernel(CpuKernel {
+            name: "relu".into(),
+            func: Arc::new(|ins| Ok(vec![crate::ops::relu_f32(&ins[0])?])),
+            class: CpuKernelClass::Memory,
+            op_template: None,
+        });
+        let rt = HsaRuntime::builder().with_agent(cpu.clone()).build();
+        let q = rt.create_queue(rt.agent_by_type(DeviceType::Cpu).unwrap(), 64);
+        let mut queues = HashMap::new();
+        queues.insert(DeviceType::Cpu, q);
+        let mut reg = KernelRegistry::new();
+        reg.register("fc", DeviceType::Cpu, fc);
+        reg.register("relu", DeviceType::Cpu, relu);
+        (rt, queues, reg)
+    }
+
+    fn small_graph() -> Graph {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 2], DType::F32).unwrap();
+        let w = g
+            .constant(
+                "w",
+                Tensor::from_f32(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap(),
+            )
+            .unwrap();
+        let b = g
+            .constant("b", Tensor::from_f32(&[2], vec![-5.0, 5.0]).unwrap())
+            .unwrap();
+        let y = g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
+        g.add("out", OpKind::Relu, &[y]).unwrap();
+        g.finalize().unwrap();
+        g
+    }
+
+    #[test]
+    fn executes_fc_relu_pipeline() {
+        let (rt, queues, reg) = env_with_cpu();
+        let g = small_graph();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let mut feeds = HashMap::new();
+        feeds.insert(
+            "x".to_string(),
+            Tensor::from_f32(&[1, 2], vec![1.0, 2.0]).unwrap(),
+        );
+        let (outs, stats) = run(&g, &p, &env, &feeds, &["out", "y"]).unwrap();
+        // y = [1-5, 2+5] = [-4, 7]; relu -> [0, 7].
+        assert_eq!(outs[0].as_f32().unwrap(), &[0.0, 7.0]);
+        assert_eq!(outs[1].as_f32().unwrap(), &[-4.0, 7.0]);
+        assert_eq!(stats.dispatches, 2);
+        assert_eq!(stats.inline_ops, 3);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn missing_feed_is_an_error() {
+        let (rt, queues, reg) = env_with_cpu();
+        let g = small_graph();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let err = run(&g, &p, &env, &HashMap::new(), &["out"]).unwrap_err();
+        assert!(err.to_string().contains("not fed"), "{err}");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn wrong_feed_shape_rejected() {
+        let (rt, queues, reg) = env_with_cpu();
+        let g = small_graph();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let mut feeds = HashMap::new();
+        feeds.insert("x".to_string(), Tensor::zeros(&[2, 2], DType::F32));
+        assert!(run(&g, &p, &env, &feeds, &["out"]).is_err());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn unknown_fetch_rejected() {
+        let (rt, queues, reg) = env_with_cpu();
+        let g = small_graph();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+        assert!(run(&g, &p, &env, &HashMap::new(), &["zzz"]).is_err());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn dead_nodes_are_skipped() {
+        let (rt, queues, reg) = env_with_cpu();
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1], DType::F32).unwrap();
+        g.add("dead", OpKind::Relu, &[x]).unwrap();
+        g.add("live", OpKind::Relu, &[x]).unwrap();
+        g.finalize().unwrap();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let mut feeds = HashMap::new();
+        feeds.insert("x".to_string(), Tensor::from_f32(&[1], vec![-3.0]).unwrap());
+        let (outs, stats) = run(&g, &p, &env, &feeds, &["live"]).unwrap();
+        assert_eq!(outs[0].as_f32().unwrap(), &[0.0]);
+        assert_eq!(stats.dispatches, 1, "dead relu must not dispatch");
+        rt.shutdown();
+    }
+}

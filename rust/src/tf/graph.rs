@@ -1,0 +1,426 @@
+//! The dataflow graph: nodes, ops, shape inference.
+
+use crate::hsa::agent::DeviceType;
+use crate::hsa::error::{HsaError, Result};
+use crate::tf::dtype::DType;
+use crate::tf::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Node handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// Operation kinds. Structural ops (`Placeholder`, `Constant`, `Reshape`)
+/// execute inline in the executor; compute ops resolve to registered
+/// kernels by `kernel_name()` and dispatch through HSA.
+#[derive(Debug, Clone)]
+pub enum OpKind {
+    /// Fed at run time.
+    Placeholder { shape: Vec<usize>, dtype: DType },
+    /// Baked into the graph.
+    Constant(Tensor),
+    /// `x @ w + b` (inputs: x, w, b) — role 1.
+    FullyConnected,
+    /// Same math, barrier-synchronized datapath — role 2.
+    FcBarrier,
+    /// Fixed-weight int16 conv 5x5, 1 filter — role 3 (input: x).
+    Conv5x5I16,
+    /// Fixed-weight int16 conv 3x3, 2 filters — role 4 (input: x).
+    Conv3x3I16,
+    /// Named fixed-weight f32 conv (the CNN layers); weights resolved by
+    /// the session from the artifact store.
+    ConvFixedF32 { weights: String, filters: usize, cin: usize, kh: usize, kw: usize },
+    /// Named fixed-weight fully connected (x only; w/b from artifacts).
+    FcFixed { weights_w: String, weights_b: String, out_width: usize },
+    Relu,
+    /// Softmax over the last axis (rank-2 f32).
+    Softmax,
+    MaxPool2,
+    Reshape { shape: Vec<usize> },
+    Add,
+    Quantize { frac_bits: u32 },
+    Dequantize { frac_bits: u32 },
+    /// Whole-model kernel (one dispatch = one batch of CNN inference).
+    MnistCnn,
+    /// Registry-resolved custom kernel with explicit output meta.
+    Custom { kernel: String, out_shape: Vec<usize>, out_dtype: DType },
+}
+
+impl OpKind {
+    /// Registry key for compute ops; `None` for structural ops.
+    pub fn kernel_name(&self) -> Option<String> {
+        match self {
+            OpKind::Placeholder { .. } | OpKind::Constant(_) | OpKind::Reshape { .. } => {
+                None
+            }
+            OpKind::FullyConnected => Some("fc".into()),
+            OpKind::FcBarrier => Some("fc_barrier".into()),
+            OpKind::Conv5x5I16 => Some("conv5x5_i16".into()),
+            OpKind::Conv3x3I16 => Some("conv3x3_i16".into()),
+            OpKind::ConvFixedF32 { weights, .. } => Some(format!("convf32:{weights}")),
+            OpKind::FcFixed { weights_w, .. } => Some(format!("fcfixed:{weights_w}")),
+            OpKind::Relu => Some("relu".into()),
+            OpKind::Softmax => Some("softmax".into()),
+            OpKind::MaxPool2 => Some("maxpool2".into()),
+            OpKind::Add => Some("add".into()),
+            OpKind::Quantize { .. } => Some("quantize".into()),
+            OpKind::Dequantize { .. } => Some("dequantize".into()),
+            OpKind::MnistCnn => Some("mnist_cnn".into()),
+            OpKind::Custom { kernel, .. } => Some(kernel.clone()),
+        }
+    }
+
+    /// Expected input arity (`None` = variadic).
+    pub fn arity(&self) -> Option<usize> {
+        match self {
+            OpKind::Placeholder { .. } | OpKind::Constant(_) => Some(0),
+            OpKind::FullyConnected | OpKind::FcBarrier => Some(3),
+            OpKind::Add => Some(2),
+            OpKind::Custom { .. } => None,
+            _ => Some(1),
+        }
+    }
+
+    /// Infer output (shape, dtype) from input metas.
+    pub fn infer(&self, inputs: &[(Vec<usize>, DType)]) -> Result<(Vec<usize>, DType)> {
+        let bad = |msg: String| Err(HsaError::Runtime(format!("shape inference: {msg}")));
+        match self {
+            OpKind::Placeholder { shape, dtype } => Ok((shape.clone(), *dtype)),
+            OpKind::Constant(t) => Ok((t.shape().to_vec(), t.dtype())),
+            OpKind::FullyConnected | OpKind::FcBarrier => {
+                let (x, w, b) = (&inputs[0], &inputs[1], &inputs[2]);
+                if x.0.len() != 2 || w.0.len() != 2 || x.0[1] != w.0[0] {
+                    return bad(format!("fc: {:?} @ {:?}", x.0, w.0));
+                }
+                if b.0 != vec![w.0[1]] {
+                    return bad(format!("fc bias {:?} != [{}]", b.0, w.0[1]));
+                }
+                if x.1 != DType::F32 {
+                    return bad("fc wants f32".into());
+                }
+                Ok((vec![x.0[0], w.0[1]], DType::F32))
+            }
+            OpKind::Conv5x5I16 => conv_infer(&inputs[0], 1, 1, 5, 5, DType::I16),
+            OpKind::Conv3x3I16 => conv_infer(&inputs[0], 2, 1, 3, 3, DType::I16),
+            OpKind::ConvFixedF32 { filters, cin, kh, kw, .. } => {
+                conv_infer(&inputs[0], *filters, *cin, *kh, *kw, DType::F32)
+            }
+            OpKind::FcFixed { out_width, .. } => {
+                let x = &inputs[0];
+                if x.0.len() != 2 || x.1 != DType::F32 {
+                    return bad(format!("fc_fixed wants rank-2 f32, got {:?}", x.0));
+                }
+                Ok((vec![x.0[0], *out_width], DType::F32))
+            }
+            OpKind::Relu => Ok(inputs[0].clone()),
+            OpKind::Softmax => {
+                let (s, dt) = &inputs[0];
+                if s.len() != 2 || *dt != DType::F32 {
+                    return bad(format!("softmax wants rank-2 f32, got {s:?} {dt}"));
+                }
+                Ok(inputs[0].clone())
+            }
+            OpKind::MaxPool2 => {
+                let (s, dt) = &inputs[0];
+                if s.len() != 3 {
+                    return bad(format!("maxpool rank {}", s.len()));
+                }
+                Ok((vec![s[0], s[1] / 2, s[2] / 2], *dt))
+            }
+            OpKind::Reshape { shape } => {
+                let (s, dt) = &inputs[0];
+                let from: usize = s.iter().product();
+                let to: usize = shape.iter().product();
+                if from != to {
+                    return bad(format!("reshape {s:?} -> {shape:?}"));
+                }
+                Ok((shape.clone(), *dt))
+            }
+            OpKind::Add => {
+                if inputs[0] != inputs[1] {
+                    return bad("add operands differ".into());
+                }
+                Ok(inputs[0].clone())
+            }
+            OpKind::Quantize { .. } => {
+                let (s, dt) = &inputs[0];
+                if *dt != DType::F32 {
+                    return bad("quantize wants f32".into());
+                }
+                Ok((s.clone(), DType::I16))
+            }
+            OpKind::Dequantize { .. } => {
+                let (s, dt) = &inputs[0];
+                if *dt != DType::I16 {
+                    return bad("dequantize wants i16".into());
+                }
+                Ok((s.clone(), DType::F32))
+            }
+            OpKind::MnistCnn => {
+                let (s, dt) = &inputs[0];
+                if s.len() != 4 || s[1] != 1 || s[2] != 28 || s[3] != 28 || *dt != DType::F32
+                {
+                    return bad(format!("mnist_cnn wants (B,1,28,28) f32, got {s:?}"));
+                }
+                Ok((vec![s[0], 10], DType::F32))
+            }
+            OpKind::Custom { out_shape, out_dtype, .. } => {
+                Ok((out_shape.clone(), *out_dtype))
+            }
+        }
+    }
+}
+
+fn conv_infer(
+    x: &(Vec<usize>, DType),
+    f: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    want: DType,
+) -> Result<(Vec<usize>, DType)> {
+    let (s, dt) = x;
+    if s.len() != 3 || s[0] != c || s[1] < kh || s[2] < kw || *dt != want {
+        return Err(HsaError::Runtime(format!(
+            "conv{kh}x{kw}: bad input {s:?} {dt} (want {c} ch, {want})"
+        )));
+    }
+    Ok((vec![f, s[1] - kh + 1, s[2] - kw + 1], want))
+}
+
+/// A graph node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: OpKind,
+    pub inputs: Vec<NodeId>,
+    /// Explicit device annotation (the paper's `with tf.device(...)`).
+    pub device: Option<DeviceType>,
+    /// Filled by shape inference at finalize.
+    pub out_shape: Vec<usize>,
+    pub out_dtype: DType,
+}
+
+/// The dataflow graph builder.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    nodes: Vec<Node>,
+    by_name: HashMap<String, NodeId>,
+    finalized: bool,
+}
+
+impl Graph {
+    pub fn new() -> Graph {
+        Graph::default()
+    }
+
+    /// Add a node. Names must be unique; inputs must already exist.
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        op: OpKind,
+        inputs: &[NodeId],
+    ) -> Result<NodeId> {
+        assert!(!self.finalized, "graph is finalized");
+        let name = name.into();
+        if self.by_name.contains_key(&name) {
+            return Err(HsaError::Runtime(format!("duplicate node name '{name}'")));
+        }
+        if let Some(arity) = op.arity() {
+            if inputs.len() != arity {
+                return Err(HsaError::Runtime(format!(
+                    "node '{name}': op wants {arity} inputs, got {}",
+                    inputs.len()
+                )));
+            }
+        }
+        for &i in inputs {
+            if i.0 >= self.nodes.len() {
+                return Err(HsaError::Runtime(format!("node '{name}': bad input {i:?}")));
+            }
+        }
+        let id = NodeId(self.nodes.len());
+        self.nodes.push(Node {
+            id,
+            name: name.clone(),
+            op,
+            inputs: inputs.to_vec(),
+            device: None,
+            out_shape: Vec::new(),
+            out_dtype: DType::F32,
+        });
+        self.by_name.insert(name, id);
+        Ok(id)
+    }
+
+    /// Convenience: placeholder node.
+    pub fn placeholder(
+        &mut self,
+        name: impl Into<String>,
+        shape: &[usize],
+        dtype: DType,
+    ) -> Result<NodeId> {
+        self.add(name, OpKind::Placeholder { shape: shape.to_vec(), dtype }, &[])
+    }
+
+    /// Convenience: constant node.
+    pub fn constant(&mut self, name: impl Into<String>, t: Tensor) -> Result<NodeId> {
+        self.add(name, OpKind::Constant(t), &[])
+    }
+
+    /// Pin a node to a device type (`with tf.device(...)`). Allowed after
+    /// finalize — placement is orthogonal to shape inference.
+    pub fn set_device(&mut self, id: NodeId, device: DeviceType) {
+        self.nodes[id.0].device = Some(device);
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.0]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<NodeId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn is_finalized(&self) -> bool {
+        self.finalized
+    }
+
+    /// Run shape inference over the whole graph (nodes are in insertion
+    /// order, which is already topological because inputs must pre-exist).
+    pub fn finalize(&mut self) -> Result<()> {
+        for i in 0..self.nodes.len() {
+            let metas: Vec<(Vec<usize>, DType)> = self.nodes[i]
+                .inputs
+                .iter()
+                .map(|&j| (self.nodes[j.0].out_shape.clone(), self.nodes[j.0].out_dtype))
+                .collect();
+            let (shape, dtype) = self.nodes[i]
+                .op
+                .infer(&metas)
+                .map_err(|e| HsaError::Runtime(format!("node '{}': {e}", self.nodes[i].name)))?;
+            self.nodes[i].out_shape = shape;
+            self.nodes[i].out_dtype = dtype;
+        }
+        self.finalized = true;
+        Ok(())
+    }
+
+    /// Topological order (insertion order is topological by construction).
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        (0..self.nodes.len()).map(NodeId).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fc_graph() -> (Graph, NodeId) {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[4, 8], DType::F32).unwrap();
+        let w = g
+            .constant("w", Tensor::zeros(&[8, 2], DType::F32))
+            .unwrap();
+        let b = g.constant("b", Tensor::zeros(&[2], DType::F32)).unwrap();
+        let y = g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
+        (g, y)
+    }
+
+    #[test]
+    fn build_and_infer() {
+        let (mut g, y) = fc_graph();
+        g.finalize().unwrap();
+        assert_eq!(g.node(y).out_shape, vec![4, 2]);
+        assert_eq!(g.node(y).out_dtype, DType::F32);
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut g = Graph::new();
+        g.placeholder("x", &[1], DType::F32).unwrap();
+        assert!(g.placeholder("x", &[1], DType::F32).is_err());
+    }
+
+    #[test]
+    fn arity_enforced() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[2, 2], DType::F32).unwrap();
+        assert!(g.add("y", OpKind::FullyConnected, &[x]).is_err());
+    }
+
+    #[test]
+    fn bad_fc_shapes_fail_at_finalize() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[4, 8], DType::F32).unwrap();
+        let w = g.constant("w", Tensor::zeros(&[7, 2], DType::F32)).unwrap();
+        let b = g.constant("b", Tensor::zeros(&[2], DType::F32)).unwrap();
+        g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
+        assert!(g.finalize().is_err());
+    }
+
+    #[test]
+    fn conv_shapes() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 28, 28], DType::I16).unwrap();
+        let c5 = g.add("c5", OpKind::Conv5x5I16, &[x]).unwrap();
+        let c3 = g.add("c3", OpKind::Conv3x3I16, &[x]).unwrap();
+        g.finalize().unwrap();
+        assert_eq!(g.node(c5).out_shape, vec![1, 24, 24]);
+        assert_eq!(g.node(c3).out_shape, vec![2, 26, 26]);
+    }
+
+    #[test]
+    fn quant_dequant_dtype_flow() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 8, 8], DType::F32).unwrap();
+        let q = g.add("q", OpKind::Quantize { frac_bits: 8 }, &[x]).unwrap();
+        let d = g.add("d", OpKind::Dequantize { frac_bits: 8 }, &[q]).unwrap();
+        g.finalize().unwrap();
+        assert_eq!(g.node(q).out_dtype, DType::I16);
+        assert_eq!(g.node(d).out_dtype, DType::F32);
+    }
+
+    #[test]
+    fn reshape_validates_elements() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[2, 6], DType::F32).unwrap();
+        g.add("r", OpKind::Reshape { shape: vec![3, 4] }, &[x]).unwrap();
+        g.finalize().unwrap();
+        let mut g2 = Graph::new();
+        let x2 = g2.placeholder("x", &[2, 6], DType::F32).unwrap();
+        g2.add("r", OpKind::Reshape { shape: vec![5, 5] }, &[x2]).unwrap();
+        assert!(g2.finalize().is_err());
+    }
+
+    #[test]
+    fn device_annotation_stored() {
+        let (mut g, y) = fc_graph();
+        g.set_device(y, DeviceType::Fpga);
+        assert_eq!(g.node(y).device, Some(DeviceType::Fpga));
+    }
+
+    #[test]
+    fn topo_order_is_complete() {
+        let (mut g, _) = fc_graph();
+        g.finalize().unwrap();
+        assert_eq!(g.topo_order().len(), g.len());
+    }
+}

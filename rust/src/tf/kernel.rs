@@ -1,0 +1,135 @@
+//! Kernel registry: `(kernel name, device type)` → HSA kernel object.
+//!
+//! This is the paper's central mechanism: "If TF is able to find a
+//! registered kernel implementation for HSA devices it will be dispatched
+//! using HSA runtime calls." For FPGA entries the kernel object names a
+//! pre-synthesized bitstream on the FPGA agent; for CPU entries a native
+//! kernel on the CPU agent.
+
+use crate::hsa::agent::DeviceType;
+use crate::hsa::error::{HsaError, Result};
+use std::collections::HashMap;
+
+/// One registered implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelEntry {
+    pub device: DeviceType,
+    pub kernel_object: u64,
+}
+
+/// The registry.
+#[derive(Debug, Default, Clone)]
+pub struct KernelRegistry {
+    entries: HashMap<(String, DeviceType), u64>,
+}
+
+impl KernelRegistry {
+    pub fn new() -> KernelRegistry {
+        KernelRegistry::default()
+    }
+
+    /// Register an implementation; re-registration replaces (TF allows
+    /// kernel overrides in priority order; last wins here).
+    pub fn register(&mut self, name: impl Into<String>, device: DeviceType, object: u64) {
+        self.entries.insert((name.into(), device), object);
+    }
+
+    pub fn lookup(&self, name: &str, device: DeviceType) -> Option<u64> {
+        self.entries.get(&(name.to_string(), device)).copied()
+    }
+
+    /// Devices that implement `name`, in preference order (FPGA first —
+    /// accelerate when possible, the paper's default placement).
+    pub fn devices_for(&self, name: &str) -> Vec<DeviceType> {
+        let mut out: Vec<DeviceType> = [DeviceType::Fpga, DeviceType::Gpu, DeviceType::Dsp, DeviceType::Cpu]
+            .into_iter()
+            .filter(|d| self.lookup(name, *d).is_some())
+            .collect();
+        out.dedup();
+        out
+    }
+
+    /// Resolve for a required device or fail.
+    pub fn require(&self, name: &str, device: DeviceType) -> Result<KernelEntry> {
+        self.lookup(name, device)
+            .map(|kernel_object| KernelEntry { device, kernel_object })
+            .ok_or_else(|| {
+                HsaError::Runtime(format!(
+                    "no kernel '{name}' registered for device {device}"
+                ))
+            })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All registered kernel names (sorted, deduplicated).
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.entries.keys().map(|(n, _)| n.clone()).collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_lookup() {
+        let mut r = KernelRegistry::new();
+        r.register("fc", DeviceType::Cpu, 1);
+        r.register("fc", DeviceType::Fpga, 2);
+        assert_eq!(r.lookup("fc", DeviceType::Cpu), Some(1));
+        assert_eq!(r.lookup("fc", DeviceType::Fpga), Some(2));
+        assert_eq!(r.lookup("fc", DeviceType::Gpu), None);
+    }
+
+    #[test]
+    fn fpga_preferred_in_device_order() {
+        let mut r = KernelRegistry::new();
+        r.register("fc", DeviceType::Cpu, 1);
+        r.register("fc", DeviceType::Fpga, 2);
+        assert_eq!(r.devices_for("fc"), vec![DeviceType::Fpga, DeviceType::Cpu]);
+    }
+
+    #[test]
+    fn cpu_only_op() {
+        let mut r = KernelRegistry::new();
+        r.register("relu", DeviceType::Cpu, 3);
+        assert_eq!(r.devices_for("relu"), vec![DeviceType::Cpu]);
+    }
+
+    #[test]
+    fn require_error_is_descriptive() {
+        let r = KernelRegistry::new();
+        let err = r.require("fc", DeviceType::Fpga).unwrap_err();
+        assert!(err.to_string().contains("fc"));
+        assert!(err.to_string().contains("Fpga"));
+    }
+
+    #[test]
+    fn reregistration_replaces() {
+        let mut r = KernelRegistry::new();
+        r.register("fc", DeviceType::Cpu, 1);
+        r.register("fc", DeviceType::Cpu, 9);
+        assert_eq!(r.lookup("fc", DeviceType::Cpu), Some(9));
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn names_sorted_unique() {
+        let mut r = KernelRegistry::new();
+        r.register("b", DeviceType::Cpu, 1);
+        r.register("a", DeviceType::Cpu, 2);
+        r.register("a", DeviceType::Fpga, 3);
+        assert_eq!(r.names(), vec!["a".to_string(), "b".to_string()]);
+    }
+}

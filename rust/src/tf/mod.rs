@@ -1,0 +1,22 @@
+//! TensorFlow-like frontend (the paper's §III "everything needed is
+//! completely integrated into TF itself").
+//!
+//! The shape mirrors TF 1.x's C++ core: build a [`graph::Graph`] of ops,
+//! annotate nodes with a device ([`placer`] fills in the rest, soft-placing
+//! onto the FPGA when a kernel implementation is registered for it), then
+//! run it through a [`session::Session`] whose executor dispatches each
+//! node to its device's HSA queue.
+
+pub mod dtype;
+pub mod executor;
+pub mod graph;
+pub mod kernel;
+pub mod placer;
+pub mod session;
+pub mod tensor;
+
+pub use dtype::DType;
+pub use graph::{Graph, NodeId, OpKind};
+pub use kernel::KernelRegistry;
+pub use session::{Session, SessionOptions};
+pub use tensor::Tensor;

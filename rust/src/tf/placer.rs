@@ -1,0 +1,214 @@
+//! Device placement.
+//!
+//! Explicit annotations (`graph.set_device`, the paper's code annotation)
+//! are honored when a kernel exists for that device; otherwise placement
+//! fails — unless soft placement is on, in which case the node falls back
+//! to the best available device with a warning flag, exactly TF's
+//! `allow_soft_placement` semantics. Unannotated compute nodes take the
+//! registry's preference order (FPGA first when implemented).
+
+use crate::hsa::agent::DeviceType;
+use crate::hsa::error::{HsaError, Result};
+use crate::tf::graph::{Graph, NodeId};
+use crate::tf::kernel::KernelRegistry;
+use std::collections::HashMap;
+
+/// Placement decision per node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Structural op, executes inline in the executor.
+    Inline,
+    /// Dispatch to this device's queue with this kernel object.
+    Device { device: DeviceType, kernel_object: u64 },
+}
+
+/// Placement options.
+#[derive(Debug, Clone, Copy)]
+pub struct PlacerOptions {
+    /// Fall back when an explicit annotation cannot be satisfied.
+    pub allow_soft_placement: bool,
+    /// Default preference: place on FPGA when available.
+    pub prefer_fpga: bool,
+}
+
+impl Default for PlacerOptions {
+    fn default() -> Self {
+        PlacerOptions { allow_soft_placement: true, prefer_fpga: true }
+    }
+}
+
+/// Result of placing a graph.
+#[derive(Debug, Clone)]
+pub struct PlacementMap {
+    pub by_node: HashMap<NodeId, Placement>,
+    /// Nodes whose explicit annotation was soft-overridden.
+    pub soft_placed: Vec<NodeId>,
+}
+
+impl PlacementMap {
+    pub fn device_of(&self, id: NodeId) -> Option<DeviceType> {
+        match self.by_node.get(&id) {
+            Some(Placement::Device { device, .. }) => Some(*device),
+            _ => None,
+        }
+    }
+}
+
+/// Place every node of a finalized graph.
+pub fn place(
+    graph: &Graph,
+    registry: &KernelRegistry,
+    opts: PlacerOptions,
+) -> Result<PlacementMap> {
+    let mut by_node = HashMap::new();
+    let mut soft_placed = Vec::new();
+
+    for node in graph.nodes() {
+        let Some(kernel) = node.op.kernel_name() else {
+            by_node.insert(node.id, Placement::Inline);
+            continue;
+        };
+
+        let placement = match node.device {
+            Some(want) => match registry.lookup(&kernel, want) {
+                Some(obj) => Placement::Device { device: want, kernel_object: obj },
+                None if opts.allow_soft_placement => {
+                    let fallback = pick_default(registry, &kernel, opts).ok_or_else(|| {
+                        HsaError::Runtime(format!(
+                            "node '{}': kernel '{kernel}' implemented nowhere",
+                            node.name
+                        ))
+                    })?;
+                    soft_placed.push(node.id);
+                    fallback
+                }
+                None => {
+                    return Err(HsaError::Runtime(format!(
+                        "node '{}': kernel '{kernel}' not registered for {want} \
+                         (soft placement disabled)",
+                        node.name
+                    )))
+                }
+            },
+            None => pick_default(registry, &kernel, opts).ok_or_else(|| {
+                HsaError::Runtime(format!(
+                    "node '{}': kernel '{kernel}' implemented nowhere",
+                    node.name
+                ))
+            })?,
+        };
+        by_node.insert(node.id, placement);
+    }
+
+    Ok(PlacementMap { by_node, soft_placed })
+}
+
+fn pick_default(
+    registry: &KernelRegistry,
+    kernel: &str,
+    opts: PlacerOptions,
+) -> Option<Placement> {
+    let order: Vec<DeviceType> = if opts.prefer_fpga {
+        registry.devices_for(kernel)
+    } else {
+        // CPU-first order (the paper's Table III baseline runs).
+        let mut v = registry.devices_for(kernel);
+        v.sort_by_key(|d| if *d == DeviceType::Cpu { 0 } else { 1 });
+        v
+    };
+    let device = *order.first()?;
+    let obj = registry.lookup(kernel, device)?;
+    Some(Placement::Device { device, kernel_object: obj })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tf::dtype::DType;
+    use crate::tf::graph::OpKind;
+    use crate::tf::tensor::Tensor;
+
+    fn graph_and_registry() -> (Graph, KernelRegistry, NodeId, NodeId) {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[4, 8], DType::F32).unwrap();
+        let w = g.constant("w", Tensor::zeros(&[8, 2], DType::F32)).unwrap();
+        let b = g.constant("b", Tensor::zeros(&[2], DType::F32)).unwrap();
+        let y = g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
+        let r = g.add("r", OpKind::Relu, &[y]).unwrap();
+        g.finalize().unwrap();
+        let mut reg = KernelRegistry::new();
+        reg.register("fc", DeviceType::Cpu, 1);
+        reg.register("fc", DeviceType::Fpga, 2);
+        reg.register("relu", DeviceType::Cpu, 3);
+        (g, reg, y, r)
+    }
+
+    #[test]
+    fn default_prefers_fpga() {
+        let (g, reg, y, r) = graph_and_registry();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        assert_eq!(p.device_of(y), Some(DeviceType::Fpga));
+        assert_eq!(p.device_of(r), Some(DeviceType::Cpu), "relu is CPU-only");
+        assert!(p.soft_placed.is_empty());
+    }
+
+    #[test]
+    fn cpu_first_when_not_preferring_fpga() {
+        let (g, reg, y, _) = graph_and_registry();
+        let p = place(
+            &g,
+            &reg,
+            PlacerOptions { prefer_fpga: false, allow_soft_placement: true },
+        )
+        .unwrap();
+        assert_eq!(p.device_of(y), Some(DeviceType::Cpu));
+    }
+
+    #[test]
+    fn explicit_annotation_honored() {
+        let (mut g, reg, y, _) = graph_and_registry();
+        g.set_device(y, DeviceType::Cpu);
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        assert_eq!(p.device_of(y), Some(DeviceType::Cpu));
+    }
+
+    #[test]
+    fn soft_placement_falls_back() {
+        let (mut g, reg, _, r) = graph_and_registry();
+        g.set_device(r, DeviceType::Fpga); // relu has no FPGA kernel
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        assert_eq!(p.device_of(r), Some(DeviceType::Cpu));
+        assert_eq!(p.soft_placed, vec![r]);
+    }
+
+    #[test]
+    fn hard_placement_fails_loudly() {
+        let (mut g, reg, _, r) = graph_and_registry();
+        g.set_device(r, DeviceType::Fpga);
+        let err = place(
+            &g,
+            &reg,
+            PlacerOptions { allow_soft_placement: false, prefer_fpga: true },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("relu"), "{err}");
+    }
+
+    #[test]
+    fn structural_ops_are_inline() {
+        let (g, reg, _, _) = graph_and_registry();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let x = g.by_name("x").unwrap();
+        assert_eq!(p.by_node[&x], Placement::Inline);
+    }
+
+    #[test]
+    fn unimplemented_kernel_is_an_error() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 28, 28], DType::I16).unwrap();
+        g.add("c", OpKind::Conv5x5I16, &[x]).unwrap();
+        g.finalize().unwrap();
+        let reg = KernelRegistry::new();
+        assert!(place(&g, &reg, PlacerOptions::default()).is_err());
+    }
+}

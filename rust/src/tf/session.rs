@@ -1,0 +1,771 @@
+//! The session: TF's user-facing entry point, owning the whole backend
+//! stack — HSA runtime, CPU + FPGA agents, queues, kernel registry, PJRT
+//! service, artifact store — exactly the "device/kernel setup" cost that
+//! Table II's first row measures.
+
+use crate::cpu::a53::CpuKernelClass;
+use crate::cpu::device::{CpuAgent, CpuKernel};
+use crate::fpga::datapath::RoleOp;
+use crate::fpga::device::{ComputeBinding, FpgaAgent, FpgaConfig};
+use crate::fpga::roles;
+use crate::hsa::agent::DeviceType;
+use crate::hsa::error::{HsaError, Result};
+use crate::hsa::queue::Queue;
+use crate::hsa::runtime::HsaRuntime;
+use crate::reconfig::manager::ReconfigStats;
+use crate::reconfig::policy::PolicyKind;
+use crate::runtime::artifact::ArtifactStore;
+use crate::runtime::pjrt::PjrtService;
+use crate::tf::executor::{self, ExecEnv, RunStats};
+use crate::tf::graph::Graph;
+use crate::tf::kernel::KernelRegistry;
+use crate::tf::placer::{place, PlacementMap, PlacerOptions};
+use crate::tf::tensor::Tensor;
+use crate::util::prng::Rng;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Session configuration.
+pub struct SessionOptions {
+    /// Artifact directory (None = `$TF_FPGA_ARTIFACTS` or `./artifacts`).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Bring up PJRT and bind FPGA roles to their AOT modules. When false
+    /// (or artifacts are missing) roles use native datapath numerics.
+    pub use_pjrt: bool,
+    pub num_regions: usize,
+    pub policy: PolicyKind,
+    pub prefer_fpga: bool,
+    pub allow_soft_placement: bool,
+    /// Sleep modeled device durations (reconfig/exec) for realistic
+    /// wall-clock behaviour; off for benches that read virtual time.
+    pub realtime: bool,
+    /// Optional event trace fed by the FPGA agent (Chrome-trace export).
+    pub trace: Option<crate::trace::recorder::TraceRecorder>,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions {
+            artifacts_dir: None,
+            use_pjrt: true,
+            num_regions: 2,
+            policy: PolicyKind::Lru,
+            prefer_fpga: true,
+            allow_soft_placement: true,
+            realtime: false,
+            trace: None,
+        }
+    }
+}
+
+impl SessionOptions {
+    /// CPU-only baseline (Table III denominator runs).
+    pub fn cpu_baseline() -> SessionOptions {
+        SessionOptions { prefer_fpga: false, use_pjrt: false, ..Default::default() }
+    }
+
+    /// No-PJRT lightweight options (unit tests / property tests).
+    pub fn native_only() -> SessionOptions {
+        SessionOptions { use_pjrt: false, ..Default::default() }
+    }
+}
+
+/// Fixed weights shared by every backend implementation of the built-in
+/// kernels (loaded from artifacts when present so PJRT modules agree, else
+/// synthesized deterministically).
+pub struct WeightBank {
+    pub conv5_w: Vec<i16>, // (1,1,5,5)
+    pub conv3_w: Vec<i16>, // (2,1,3,3)
+    pub cnn_conv1: Vec<f32>, // (2,1,3,3)
+    pub cnn_conv2: Vec<f32>, // (4,2,5,5)
+    pub cnn_fc1_w: Vec<f32>, // (64,32)
+    pub cnn_fc1_b: Vec<f32>, // (32,)
+    pub cnn_fc2_w: Vec<f32>, // (32,10)
+    pub cnn_fc2_b: Vec<f32>, // (10,)
+    pub role1_w: Vec<f32>, // (64,64)
+    pub role1_b: Vec<f32>, // (64,)
+    pub conv_shift: u32,
+    pub from_artifacts: bool,
+}
+
+impl WeightBank {
+    pub fn load(store: Option<&ArtifactStore>) -> Result<WeightBank> {
+        if let Some(s) = store {
+            let g = |n: &str| s.load_weight_f32(n).map(|(_, v)| v);
+            let gi = |n: &str| s.load_weight_i16(n).map(|(_, v)| v);
+            return Ok(WeightBank {
+                conv5_w: gi("role3/w")?,
+                conv3_w: gi("role4/w")?,
+                cnn_conv1: g("cnn/conv1")?,
+                cnn_conv2: g("cnn/conv2")?,
+                cnn_fc1_w: g("cnn/fc1_w")?,
+                cnn_fc1_b: g("cnn/fc1_b")?,
+                cnn_fc2_w: g("cnn/fc2_w")?,
+                cnn_fc2_b: g("cnn/fc2_b")?,
+                role1_w: g("role1/w")?,
+                role1_b: g("role1/b")?,
+                conv_shift: s.conv_shift,
+                from_artifacts: true,
+            });
+        }
+        // Deterministic synthetic weights (PJRT-free mode).
+        let mut rng = Rng::new(0x5EED_1027);
+        let mut f32s = |n: usize, std: f32| {
+            let mut v = vec![0f32; n];
+            rng.fill_f32_normal(&mut v, 0.0, std);
+            v
+        };
+        let cnn_conv1 = f32s(2 * 1 * 3 * 3, 0.2);
+        let cnn_conv2 = f32s(4 * 2 * 5 * 5, 0.15);
+        let cnn_fc1_w = f32s(64 * 32, 0.1);
+        let cnn_fc2_w = f32s(32 * 10, 0.1);
+        let role1_w = f32s(64 * 64, 0.1);
+        let role1_b = f32s(64, 0.1);
+        let mut i16s = |n: usize| {
+            let mut v = vec![0i16; n];
+            rng.fill_i16(&mut v, -128, 127);
+            v
+        };
+        Ok(WeightBank {
+            conv5_w: i16s(25),
+            conv3_w: i16s(18),
+            cnn_conv1,
+            cnn_conv2,
+            cnn_fc1_w,
+            cnn_fc1_b: vec![0.0; 32],
+            cnn_fc2_w,
+            cnn_fc2_b: vec![0.0; 10],
+            role1_w,
+            role1_b,
+            conv_shift: 8,
+            from_artifacts: false,
+        })
+    }
+}
+
+/// Timing breakdown of session construction (Table II row 1).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SetupTiming {
+    pub total_us: u128,
+    pub pjrt_client_us: u128,
+    pub pjrt_compile_us: u128,
+    pub hsa_bringup_us: u128,
+}
+
+/// The session.
+pub struct Session {
+    graph: Graph,
+    placement: PlacementMap,
+    runtime: HsaRuntime,
+    queues: HashMap<DeviceType, Queue>,
+    registry: KernelRegistry,
+    cpu: Arc<CpuAgent>,
+    fpga: Arc<FpgaAgent>,
+    weights: Arc<WeightBank>,
+    _pjrt: Option<PjrtService>,
+    setup: SetupTiming,
+}
+
+impl Session {
+    /// Build the full backend and place `graph` onto it.
+    pub fn new(mut graph: Graph, opts: SessionOptions) -> Result<Session> {
+        let t_total = Instant::now();
+        if !graph.is_finalized() {
+            graph.finalize()?;
+        }
+
+        // Artifacts (weights always come from here when available, so all
+        // session configurations — FPGA-placed, CPU baseline, PJRT-free —
+        // compute with identical fixed weights).
+        let dir = opts.artifacts_dir.clone().unwrap_or_else(|| {
+            std::env::var("TF_FPGA_ARTIFACTS")
+                .unwrap_or_else(|_| "artifacts".into())
+                .into()
+        });
+        let store = ArtifactStore::open(dir).ok();
+        let weights = Arc::new(WeightBank::load(store.as_ref())?);
+
+        let mut setup = SetupTiming::default();
+        let mut pjrt = None;
+        if let (true, Some(store)) = (opts.use_pjrt, &store) {
+            let t = Instant::now();
+            let svc = PjrtService::start()?;
+            setup.pjrt_client_us = t.elapsed().as_micros();
+            let t = Instant::now();
+            for name in ["role1_fc", "role2_fc_barrier", "role3_conv5x5", "role4_conv3x3", "mnist_cnn"]
+            {
+                if let Ok(meta) = store.module(name) {
+                    svc.handle().load_module(meta)?;
+                }
+            }
+            setup.pjrt_compile_us = t.elapsed().as_micros();
+            pjrt = Some(svc);
+        }
+
+        // HSA bring-up: agents, kernels, queues, registry.
+        let t_hsa = Instant::now();
+        let cpu = CpuAgent::with_defaults();
+        let fpga = FpgaAgent::new(FpgaConfig {
+            num_regions: opts.num_regions,
+            policy: opts.policy.build(0xF06A),
+            realtime: opts.realtime,
+            realtime_scale: 1.0,
+            trace: opts.trace.clone(),
+        });
+        let mut registry = KernelRegistry::new();
+        register_cpu_kernels(&cpu, &weights, &mut registry);
+        register_fpga_roles(
+            &fpga,
+            &weights,
+            pjrt.as_ref().map(|p| p.handle()),
+            store.as_ref(),
+            &mut registry,
+        );
+
+        let runtime = HsaRuntime::builder()
+            .with_agent(cpu.clone())
+            .with_agent(fpga.clone())
+            .build();
+        let mut queues = HashMap::new();
+        queues.insert(
+            DeviceType::Cpu,
+            runtime.create_queue(runtime.agent_by_type(DeviceType::Cpu)?, 256),
+        );
+        queues.insert(
+            DeviceType::Fpga,
+            runtime.create_queue(runtime.agent_by_type(DeviceType::Fpga)?, 256),
+        );
+        setup.hsa_bringup_us = t_hsa.elapsed().as_micros();
+
+        let placement = place(
+            &graph,
+            &registry,
+            PlacerOptions {
+                allow_soft_placement: opts.allow_soft_placement,
+                prefer_fpga: opts.prefer_fpga,
+            },
+        )?;
+        setup.total_us = t_total.elapsed().as_micros();
+
+        Ok(Session {
+            graph,
+            placement,
+            runtime,
+            queues,
+            registry,
+            cpu,
+            fpga,
+            weights,
+            _pjrt: pjrt,
+            setup,
+        })
+    }
+
+    /// Run the graph: feed placeholders, fetch outputs by node name.
+    pub fn run(
+        &self,
+        feeds: &[(&str, Tensor)],
+        fetches: &[&str],
+    ) -> Result<Vec<Tensor>> {
+        self.run_with_stats(feeds, fetches).map(|(t, _)| t)
+    }
+
+    pub fn run_with_stats(
+        &self,
+        feeds: &[(&str, Tensor)],
+        fetches: &[&str],
+    ) -> Result<(Vec<Tensor>, RunStats)> {
+        let feeds: HashMap<String, Tensor> =
+            feeds.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        let env = ExecEnv { runtime: &self.runtime, queues: &self.queues };
+        executor::run(&self.graph, &self.placement, &env, &feeds, fetches)
+    }
+
+    // ---- introspection used by benches/examples ----
+
+    pub fn setup_timing(&self) -> SetupTiming {
+        self.setup
+    }
+
+    pub fn reconfig_stats(&self) -> ReconfigStats {
+        self.fpga.reconfig_stats()
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn placement(&self) -> &PlacementMap {
+        &self.placement
+    }
+
+    pub fn registry(&self) -> &KernelRegistry {
+        &self.registry
+    }
+
+    pub fn weights(&self) -> &WeightBank {
+        &self.weights
+    }
+
+    pub fn cpu_agent(&self) -> &Arc<CpuAgent> {
+        &self.cpu
+    }
+
+    pub fn fpga_agent(&self) -> &Arc<FpgaAgent> {
+        &self.fpga
+    }
+
+    pub fn hsa_runtime(&self) -> &HsaRuntime {
+        &self.runtime
+    }
+
+    pub fn queue(&self, device: DeviceType) -> Option<&Queue> {
+        self.queues.get(&device)
+    }
+
+    /// Raw HSA dispatch, bypassing graph/executor overhead (Table II's
+    /// "HSA Runtime" column).
+    pub fn dispatch_raw(
+        &self,
+        device: DeviceType,
+        kernel: &str,
+        inputs: Vec<Tensor>,
+    ) -> Result<Vec<Tensor>> {
+        let entry = self.registry.require(kernel, device)?;
+        let queue = self
+            .queues
+            .get(&device)
+            .ok_or_else(|| HsaError::Runtime(format!("no queue for {device}")))?;
+        self.runtime.dispatch_sync(queue, entry.kernel_object, inputs)
+    }
+
+    pub fn shutdown(&self) {
+        self.runtime.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in kernel registration
+// ---------------------------------------------------------------------------
+
+type NativeFn = Arc<dyn Fn(&[Tensor]) -> Result<Vec<Tensor>> + Send + Sync>;
+
+fn native_fc() -> NativeFn {
+    Arc::new(|ins| Ok(vec![crate::ops::fc_f32(&ins[0], &ins[1], &ins[2])?]))
+}
+
+fn native_conv_i16(w: Vec<i16>, f: usize, c: usize, kh: usize, kw: usize, shift: u32) -> NativeFn {
+    Arc::new(move |ins| {
+        Ok(vec![crate::ops::conv2d_fixed_i16(&ins[0], &w, f, c, kh, kw, shift)?])
+    })
+}
+
+fn native_conv_f32(w: Vec<f32>, f: usize, c: usize, kh: usize, kw: usize) -> NativeFn {
+    Arc::new(move |ins| {
+        Ok(vec![crate::ops::conv2d_fixed_f32(&ins[0], &w, f, c, kh, kw)?])
+    })
+}
+
+fn native_fc_fixed(w: Vec<f32>, b: Vec<f32>, k: usize, n: usize) -> NativeFn {
+    Arc::new(move |ins| {
+        let wt = Tensor::from_f32(&[k, n], w.clone())?;
+        let bt = Tensor::from_f32(&[n], b.clone())?;
+        Ok(vec![crate::ops::fc_f32(&ins[0], &wt, &bt)?])
+    })
+}
+
+/// Native full-CNN kernel (one dispatch per batch) — identical math to the
+/// PJRT `mnist_cnn` module.
+pub fn native_mnist_cnn(weights: &Arc<WeightBank>) -> NativeFn {
+    let w = Arc::clone(weights);
+    Arc::new(move |ins: &[Tensor]| {
+        let x = &ins[0];
+        let s = x.shape();
+        if s.len() != 4 || s[1] != 1 || s[2] != 28 || s[3] != 28 {
+            return Err(HsaError::KernelFailed(format!(
+                "mnist_cnn wants (B,1,28,28), got {s:?}"
+            )));
+        }
+        let b = s[0];
+        let xd = x.as_f32()?;
+        let mut logits = Vec::with_capacity(b * 10);
+        for i in 0..b {
+            let img = Tensor::from_f32(&[1, 28, 28], xd[i * 784..(i + 1) * 784].to_vec())?;
+            let h = crate::ops::conv2d_fixed_f32(&img, &w.cnn_conv1, 2, 1, 3, 3)?;
+            let h = crate::ops::relu_f32(&h)?;
+            let h = crate::ops::maxpool2_f32(&h)?;
+            let h = crate::ops::conv2d_fixed_f32(&h, &w.cnn_conv2, 4, 2, 5, 5)?;
+            let h = crate::ops::relu_f32(&h)?;
+            let h = crate::ops::maxpool2_f32(&h)?; // (4,4,4)
+            let h = h.reshape(&[1, 64])?;
+            let w1 = Tensor::from_f32(&[64, 32], w.cnn_fc1_w.clone())?;
+            let b1 = Tensor::from_f32(&[32], w.cnn_fc1_b.clone())?;
+            let h = crate::ops::fc_f32(&h, &w1, &b1)?;
+            let h = crate::ops::relu_f32(&h)?;
+            let w2 = Tensor::from_f32(&[32, 10], w.cnn_fc2_w.clone())?;
+            let b2 = Tensor::from_f32(&[10], w.cnn_fc2_b.clone())?;
+            let h = crate::ops::fc_f32(&h, &w2, &b2)?;
+            logits.extend_from_slice(h.as_f32()?);
+        }
+        Ok(vec![Tensor::from_f32(&[b, 10], logits)?])
+    })
+}
+
+fn register_cpu_kernels(
+    cpu: &Arc<CpuAgent>,
+    weights: &Arc<WeightBank>,
+    registry: &mut KernelRegistry,
+) {
+    let shift = weights.conv_shift;
+    let mut reg = |name: &str, kernel: CpuKernel| {
+        let id = cpu.register_kernel(kernel);
+        registry.register(name, DeviceType::Cpu, id);
+    };
+
+    reg(
+        "fc",
+        CpuKernel {
+            name: "fc".into(),
+            func: native_fc(),
+            class: CpuKernelClass::FcF32,
+            op_template: Some(RoleOp::FcF32 { m: 64, k: 64, n: 64 }),
+        },
+    );
+    reg(
+        "fc_barrier",
+        CpuKernel {
+            name: "fc_barrier".into(),
+            func: native_fc(), // same math on a CPU
+            class: CpuKernelClass::FcF32,
+            op_template: Some(RoleOp::FcF32 { m: 64, k: 64, n: 64 }),
+        },
+    );
+    reg(
+        "conv5x5_i16",
+        CpuKernel {
+            name: "conv5x5_i16".into(),
+            func: native_conv_i16(weights.conv5_w.clone(), 1, 1, 5, 5, shift),
+            class: CpuKernelClass::ConvI16Large,
+            op_template: Some(RoleOp::ConvI16 {
+                cin: 1, h: 28, w: 28, kh: 5, kw: 5, filters: 1,
+            }),
+        },
+    );
+    reg(
+        "conv3x3_i16",
+        CpuKernel {
+            name: "conv3x3_i16".into(),
+            func: native_conv_i16(weights.conv3_w.clone(), 2, 1, 3, 3, shift),
+            class: CpuKernelClass::ConvI16Small,
+            op_template: Some(RoleOp::ConvI16 {
+                cin: 1, h: 28, w: 28, kh: 3, kw: 3, filters: 2,
+            }),
+        },
+    );
+    reg(
+        "relu",
+        CpuKernel {
+            name: "relu".into(),
+            func: Arc::new(|ins| {
+                Ok(vec![match ins[0].dtype() {
+                    crate::tf::dtype::DType::I16 => crate::ops::relu_i16(&ins[0])?,
+                    _ => crate::ops::relu_f32(&ins[0])?,
+                }])
+            }),
+            class: CpuKernelClass::Memory,
+            op_template: None,
+        },
+    );
+    reg(
+        "softmax",
+        CpuKernel {
+            name: "softmax".into(),
+            func: Arc::new(|ins| Ok(vec![crate::ops::softmax_f32(&ins[0])?])),
+            class: CpuKernelClass::Memory,
+            op_template: None,
+        },
+    );
+    reg(
+        "maxpool2",
+        CpuKernel {
+            name: "maxpool2".into(),
+            func: Arc::new(|ins| Ok(vec![crate::ops::maxpool2_f32(&ins[0])?])),
+            class: CpuKernelClass::Memory,
+            op_template: None,
+        },
+    );
+    reg(
+        "add",
+        CpuKernel {
+            name: "add".into(),
+            func: Arc::new(|ins| Ok(vec![crate::ops::add_f32(&ins[0], &ins[1])?])),
+            class: CpuKernelClass::Memory,
+            op_template: None,
+        },
+    );
+    reg(
+        "quantize",
+        CpuKernel {
+            name: "quantize".into(),
+            func: {
+                let fb = shift;
+                Arc::new(move |ins| Ok(vec![crate::ops::quantize_f32_to_i16(&ins[0], fb)?]))
+            },
+            class: CpuKernelClass::Memory,
+            op_template: None,
+        },
+    );
+    reg(
+        "dequantize",
+        CpuKernel {
+            name: "dequantize".into(),
+            func: {
+                let fb = shift;
+                Arc::new(move |ins| Ok(vec![crate::ops::dequantize_i16_to_f32(&ins[0], fb)?]))
+            },
+            class: CpuKernelClass::Memory,
+            op_template: None,
+        },
+    );
+    reg(
+        "mnist_cnn",
+        CpuKernel {
+            name: "mnist_cnn".into(),
+            func: native_mnist_cnn(weights),
+            class: CpuKernelClass::FcF32,
+            op_template: None,
+        },
+    );
+    // CNN layer kernels (fixed weights) for the layer-wise graph.
+    reg(
+        "convf32:cnn/conv1",
+        CpuKernel {
+            name: "convf32:cnn/conv1".into(),
+            func: native_conv_f32(weights.cnn_conv1.clone(), 2, 1, 3, 3),
+            class: CpuKernelClass::ConvI16Small,
+            op_template: None,
+        },
+    );
+    reg(
+        "convf32:cnn/conv2",
+        CpuKernel {
+            name: "convf32:cnn/conv2".into(),
+            func: native_conv_f32(weights.cnn_conv2.clone(), 4, 2, 5, 5),
+            class: CpuKernelClass::ConvI16Large,
+            op_template: None,
+        },
+    );
+    reg(
+        "fcfixed:cnn/fc1_w",
+        CpuKernel {
+            name: "fcfixed:cnn/fc1_w".into(),
+            func: native_fc_fixed(weights.cnn_fc1_w.clone(), weights.cnn_fc1_b.clone(), 64, 32),
+            class: CpuKernelClass::FcF32,
+            op_template: Some(RoleOp::FcF32 { m: 1, k: 64, n: 32 }),
+        },
+    );
+    reg(
+        "fcfixed:cnn/fc2_w",
+        CpuKernel {
+            name: "fcfixed:cnn/fc2_w".into(),
+            func: native_fc_fixed(weights.cnn_fc2_w.clone(), weights.cnn_fc2_b.clone(), 32, 10),
+            class: CpuKernelClass::FcF32,
+            op_template: Some(RoleOp::FcF32 { m: 1, k: 32, n: 10 }),
+        },
+    );
+}
+
+fn register_fpga_roles(
+    fpga: &Arc<FpgaAgent>,
+    weights: &Arc<WeightBank>,
+    pjrt: Option<crate::runtime::pjrt::PjrtHandle>,
+    store: Option<&ArtifactStore>,
+    registry: &mut KernelRegistry,
+) {
+    let shift = weights.conv_shift;
+    let paper = roles::paper_roles();
+    // Bindings: PJRT module when available + signature matches, native
+    // datapath math otherwise.
+    let bind = |module: &str, native: NativeFn| -> ComputeBinding {
+        match (&pjrt, store.and_then(|s| s.module(module).ok())) {
+            (Some(handle), Some(meta)) => ComputeBinding::PjrtOrNative {
+                handle: handle.clone(),
+                module: module.to_string(),
+                signature: meta.inputs.clone(),
+                native,
+            },
+            _ => ComputeBinding::Native(native),
+        }
+    };
+
+    let kernels: [(&str, &str, NativeFn); 4] = [
+        ("fc", "role1_fc", native_fc()),
+        ("fc_barrier", "role2_fc_barrier", native_fc()),
+        (
+            "conv5x5_i16",
+            "role3_conv5x5",
+            native_conv_i16(weights.conv5_w.clone(), 1, 1, 5, 5, shift),
+        ),
+        (
+            "conv3x3_i16",
+            "role4_conv3x3",
+            native_conv_i16(weights.conv3_w.clone(), 2, 1, 3, 3, shift),
+        ),
+    ];
+    for ((kernel_name, module, native), bitstream) in kernels.into_iter().zip(paper) {
+        let id = fpga.register_role(bitstream, bind(module, native));
+        registry.register(kernel_name, DeviceType::Fpga, id);
+    }
+
+    // CNN layers as weight-fixed roles (the paper's "fix layer weights to
+    // have more efficient hardware" trade-off), plus the whole CNN as one
+    // role for the serving path.
+    let mk_role = |name: &str, op: RoleOp, macs: u32| {
+        crate::fpga::bitstream::Bitstream::new(
+            name,
+            roles::ROLE_BITSTREAM_BYTES,
+            crate::fpga::synthesis::estimate(&roles::role3_components()),
+            crate::fpga::datapath::DatapathSpec {
+                name: "cnn_layer",
+                op,
+                macs_per_cycle: macs,
+                ii: 1,
+                pipeline_depth: 32,
+                burst_bytes: 4096,
+                burst_overhead_cycles: 8,
+                barriers_per_pass: 0,
+                barrier_stall_cycles: 0,
+                clock_mhz: roles::PL_CLOCK_MHZ,
+            },
+        )
+    };
+
+    let conv1 = mk_role(
+        "cnn_conv1",
+        RoleOp::ConvI16 { cin: 1, h: 28, w: 28, kh: 3, kw: 3, filters: 2 },
+        18,
+    );
+    let id = fpga.register_role(conv1, ComputeBinding::Native(native_conv_f32(weights.cnn_conv1.clone(), 2, 1, 3, 3)));
+    registry.register("convf32:cnn/conv1", DeviceType::Fpga, id);
+
+    let conv2 = mk_role(
+        "cnn_conv2",
+        RoleOp::ConvI16 { cin: 2, h: 13, w: 13, kh: 5, kw: 5, filters: 4 },
+        25,
+    );
+    let id = fpga.register_role(conv2, ComputeBinding::Native(native_conv_f32(weights.cnn_conv2.clone(), 4, 2, 5, 5)));
+    registry.register("convf32:cnn/conv2", DeviceType::Fpga, id);
+
+    let fc1 = mk_role("cnn_fc1", RoleOp::FcF32 { m: 1, k: 64, n: 32 }, 4);
+    let id = fpga.register_role(
+        fc1,
+        ComputeBinding::Native(native_fc_fixed(weights.cnn_fc1_w.clone(), weights.cnn_fc1_b.clone(), 64, 32)),
+    );
+    registry.register("fcfixed:cnn/fc1_w", DeviceType::Fpga, id);
+
+    let fc2 = mk_role("cnn_fc2", RoleOp::FcF32 { m: 1, k: 32, n: 10 }, 4);
+    let id = fpga.register_role(
+        fc2,
+        ComputeBinding::Native(native_fc_fixed(weights.cnn_fc2_w.clone(), weights.cnn_fc2_b.clone(), 32, 10)),
+    );
+    registry.register("fcfixed:cnn/fc2_w", DeviceType::Fpga, id);
+
+    let full = mk_role(
+        "cnn_full",
+        RoleOp::Stream { elements: 32 * 784, ops_per_element: 60 },
+        32,
+    );
+    let native = native_mnist_cnn(weights);
+    let id = fpga.register_role(full, bind("mnist_cnn", native));
+    registry.register("mnist_cnn", DeviceType::Fpga, id);
+}
+
+/// Wait helper re-exported for examples.
+pub const DISPATCH_TIMEOUT: Duration = crate::hsa::runtime::DISPATCH_TIMEOUT;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tf::dtype::DType;
+    use crate::tf::graph::OpKind;
+
+    fn fc_graph() -> Graph {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[4, 8], DType::F32).unwrap();
+        let w = g.constant("w", Tensor::from_f32(&[8, 2], vec![0.5; 16]).unwrap()).unwrap();
+        let b = g.constant("b", Tensor::from_f32(&[2], vec![1.0, -1.0]).unwrap()).unwrap();
+        let y = g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
+        g.add("out", OpKind::Relu, &[y]).unwrap();
+        g
+    }
+
+    #[test]
+    fn session_runs_fc_graph_native() {
+        let sess = Session::new(fc_graph(), SessionOptions::native_only()).unwrap();
+        let x = Tensor::from_f32(&[4, 8], vec![1.0; 32]).unwrap();
+        let out = sess.run(&[("x", x)], &["out"]).unwrap();
+        // 8 * 0.5 = 4 (+1 / -1) -> [5, 3] per row, relu keeps both.
+        assert_eq!(out[0].shape(), &[4, 2]);
+        for row in out[0].as_f32().unwrap().chunks(2) {
+            assert_eq!(row, &[5.0, 3.0]);
+        }
+        sess.shutdown();
+    }
+
+    #[test]
+    fn fpga_and_cpu_agree_on_fc() {
+        let sess_fpga = Session::new(fc_graph(), SessionOptions::native_only()).unwrap();
+        let sess_cpu = Session::new(fc_graph(), SessionOptions::cpu_baseline()).unwrap();
+        let x = Tensor::from_f32(&[4, 8], (0..32).map(|v| v as f32 * 0.1).collect()).unwrap();
+        let a = sess_fpga.run(&[("x", x.clone())], &["out"]).unwrap();
+        let b = sess_cpu.run(&[("x", x)], &["out"]).unwrap();
+        assert_eq!(a[0], b[0]);
+        // And the FPGA session actually used the FPGA.
+        assert!(sess_fpga.reconfig_stats().dispatches > 0);
+        assert_eq!(sess_cpu.reconfig_stats().dispatches, 0);
+        sess_fpga.shutdown();
+        sess_cpu.shutdown();
+    }
+
+    #[test]
+    fn conv_roles_reconfigure_and_match_cpu() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 28, 28], DType::I16).unwrap();
+        let c5 = g.add("c5", OpKind::Conv5x5I16, &[x]).unwrap();
+        let _ = c5;
+        g.add("c3", OpKind::Conv3x3I16, &[x]).unwrap();
+        let sess = Session::new(g.clone(), SessionOptions::native_only()).unwrap();
+        let cpu_sess = Session::new(g, SessionOptions::cpu_baseline()).unwrap();
+        let mut vals = vec![0i16; 784];
+        let mut rng = Rng::new(3);
+        rng.fill_i16(&mut vals, -256, 255);
+        let x = Tensor::from_i16(&[1, 28, 28], vals).unwrap();
+        let a = sess.run(&[("x", x.clone())], &["c5", "c3"]).unwrap();
+        let b = cpu_sess.run(&[("x", x)], &["c5", "c3"]).unwrap();
+        assert_eq!(a[0], b[0]);
+        assert_eq!(a[1], b[1]);
+        let s = sess.reconfig_stats();
+        assert_eq!(s.misses, 2, "two roles loaded");
+        sess.shutdown();
+        cpu_sess.shutdown();
+    }
+
+    #[test]
+    fn setup_timing_recorded() {
+        let sess = Session::new(fc_graph(), SessionOptions::native_only()).unwrap();
+        assert!(sess.setup_timing().total_us > 0);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn dispatch_raw_bypasses_executor() {
+        let sess = Session::new(fc_graph(), SessionOptions::native_only()).unwrap();
+        let x = Tensor::from_f32(&[2, 3], vec![1.0; 6]).unwrap();
+        let w = Tensor::from_f32(&[3, 2], vec![1.0; 6]).unwrap();
+        let b = Tensor::from_f32(&[2], vec![0.0; 2]).unwrap();
+        let out = sess.dispatch_raw(DeviceType::Cpu, "fc", vec![x, w, b]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[3.0, 3.0, 3.0, 3.0]);
+        sess.shutdown();
+    }
+}

@@ -1,0 +1,213 @@
+//! Dense host tensors moved through the graph executor and HSA packets.
+
+use crate::tf::dtype::DType;
+use std::fmt;
+use std::sync::Arc;
+
+/// Raw storage variants (one per supported dtype). Buffers are `Arc`-shared:
+/// a dispatch clones the handle, not the data.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Arc<Vec<f32>>),
+    I16(Arc<Vec<i16>>),
+    I32(Arc<Vec<i32>>),
+}
+
+/// A dense, row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    storage: Storage,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum TensorError {
+    #[error("shape {shape:?} implies {expected} elements, buffer has {actual}")]
+    LengthMismatch { shape: Vec<usize>, expected: usize, actual: usize },
+    #[error("dtype mismatch: tensor is {actual}, requested {requested}")]
+    DTypeMismatch { actual: DType, requested: DType },
+    #[error("cannot reshape {from:?} ({from_n} elems) to {to:?} ({to_n} elems)")]
+    ReshapeMismatch { from: Vec<usize>, from_n: usize, to: Vec<usize>, to_n: usize },
+}
+
+impl Tensor {
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Tensor, TensorError> {
+        Self::check_len(shape, data.len())?;
+        Ok(Tensor { shape: shape.to_vec(), storage: Storage::F32(Arc::new(data)) })
+    }
+
+    pub fn from_i16(shape: &[usize], data: Vec<i16>) -> Result<Tensor, TensorError> {
+        Self::check_len(shape, data.len())?;
+        Ok(Tensor { shape: shape.to_vec(), storage: Storage::I16(Arc::new(data)) })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Tensor, TensorError> {
+        Self::check_len(shape, data.len())?;
+        Ok(Tensor { shape: shape.to_vec(), storage: Storage::I32(Arc::new(data)) })
+    }
+
+    pub fn zeros(shape: &[usize], dtype: DType) -> Tensor {
+        let n = shape.iter().product();
+        let storage = match dtype {
+            DType::F32 => Storage::F32(Arc::new(vec![0.0; n])),
+            DType::I16 => Storage::I16(Arc::new(vec![0; n])),
+            DType::I32 => Storage::I32(Arc::new(vec![0; n])),
+        };
+        Tensor { shape: shape.to_vec(), storage }
+    }
+
+    fn check_len(shape: &[usize], actual: usize) -> Result<(), TensorError> {
+        let expected: usize = shape.iter().product();
+        if expected != actual {
+            return Err(TensorError::LengthMismatch {
+                shape: shape.to_vec(),
+                expected,
+                actual,
+            });
+        }
+        Ok(())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.storage {
+            Storage::F32(_) => DType::F32,
+            Storage::I16(_) => DType::I16,
+            Storage::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.len() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32], TensorError> {
+        match &self.storage {
+            Storage::F32(v) => Ok(v),
+            _ => Err(TensorError::DTypeMismatch { actual: self.dtype(), requested: DType::F32 }),
+        }
+    }
+
+    pub fn as_i16(&self) -> Result<&[i16], TensorError> {
+        match &self.storage {
+            Storage::I16(v) => Ok(v),
+            _ => Err(TensorError::DTypeMismatch { actual: self.dtype(), requested: DType::I16 }),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32], TensorError> {
+        match &self.storage {
+            Storage::I32(v) => Ok(v),
+            _ => Err(TensorError::DTypeMismatch { actual: self.dtype(), requested: DType::I32 }),
+        }
+    }
+
+    /// Same data, new shape (element counts must match).
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor, TensorError> {
+        let to_n: usize = shape.iter().product();
+        if to_n != self.len() {
+            return Err(TensorError::ReshapeMismatch {
+                from: self.shape.clone(),
+                from_n: self.len(),
+                to: shape.to_vec(),
+                to_n,
+            });
+        }
+        Ok(Tensor { shape: shape.to_vec(), storage: self.storage.clone() })
+    }
+
+    /// Row-major offset for index tuple (debug/testing helper).
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            assert!(ix < dim, "index {ix} out of bounds for dim {i} ({dim})");
+            off = off * dim + ix;
+        }
+        off
+    }
+
+    /// Max |a - b| between two f32 tensors (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f64, TensorError> {
+        let a = self.as_f32()?;
+        let b = other.as_f32()?;
+        assert_eq!(self.shape, other.shape, "shape mismatch in comparison");
+        Ok(a.iter()
+            .zip(b)
+            .map(|(x, y)| (*x as f64 - *y as f64).abs())
+            .fold(0.0, f64::max))
+    }
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor<{}>{:?}", self.dtype(), self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_length() {
+        assert!(Tensor::from_f32(&[2, 3], vec![0.0; 6]).is_ok());
+        let err = Tensor::from_f32(&[2, 3], vec![0.0; 5]).unwrap_err();
+        assert!(matches!(err, TensorError::LengthMismatch { expected: 6, actual: 5, .. }));
+    }
+
+    #[test]
+    fn dtype_accessors_enforced() {
+        let t = Tensor::from_i16(&[4], vec![1, 2, 3, 4]).unwrap();
+        assert_eq!(t.dtype(), DType::I16);
+        assert!(t.as_i16().is_ok());
+        assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    fn reshape_shares_storage() {
+        let t = Tensor::from_f32(&[2, 6], (0..12).map(|x| x as f32).collect()).unwrap();
+        let r = t.reshape(&[3, 4]).unwrap();
+        assert_eq!(r.shape(), &[3, 4]);
+        assert_eq!(t.as_f32().unwrap(), r.as_f32().unwrap());
+        assert!(t.reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn offset_is_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4], DType::F32);
+        assert_eq!(t.offset(&[0, 0, 0]), 0);
+        assert_eq!(t.offset(&[0, 0, 3]), 3);
+        assert_eq!(t.offset(&[0, 1, 0]), 4);
+        assert_eq!(t.offset(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn byte_len_counts_dtype_size() {
+        assert_eq!(Tensor::zeros(&[10], DType::I16).byte_len(), 20);
+        assert_eq!(Tensor::zeros(&[10], DType::F32).byte_len(), 40);
+    }
+
+    #[test]
+    fn scalar_and_empty() {
+        let s = Tensor::from_f32(&[], vec![7.0]).unwrap();
+        assert_eq!(s.len(), 1);
+        let e = Tensor::from_f32(&[0], vec![]).unwrap();
+        assert!(e.is_empty());
+    }
+}

@@ -1,0 +1,7 @@
+//! Structured event tracing with Chrome-trace (about://tracing, Perfetto)
+//! JSON export — reconfigurations, dispatches and kernel executions become
+//! visually inspectable timelines.
+
+pub mod recorder;
+
+pub use recorder::{EventKind, TraceRecorder};

@@ -1,0 +1,243 @@
+//! The trace recorder: thread-safe event sink + Chrome-trace JSON export.
+//!
+//! Events use the Trace Event Format's complete events (`"ph":"X"`): a
+//! name, a category, a start timestamp (µs) and a duration. Tracks map to
+//! the simulated devices ("pid" = device, "tid" = region/queue), so a
+//! reconfiguration appears as a block on its PR region's track.
+
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Event categories.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Dispatch,
+    Reconfig,
+    KernelExec,
+    Barrier,
+    Custom,
+}
+
+impl EventKind {
+    fn category(self) -> &'static str {
+        match self {
+            EventKind::Dispatch => "dispatch",
+            EventKind::Reconfig => "reconfig",
+            EventKind::KernelExec => "kernel",
+            EventKind::Barrier => "barrier",
+            EventKind::Custom => "custom",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Event {
+    name: String,
+    kind: EventKind,
+    track: String,
+    lane: u32,
+    start_us: u64,
+    dur_us: u64,
+}
+
+/// Cloneable, thread-safe recorder.
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    epoch: Instant,
+    events: Mutex<Vec<Event>>,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder::new()
+    }
+}
+
+impl TraceRecorder {
+    pub fn new() -> TraceRecorder {
+        TraceRecorder {
+            inner: Arc::new(Inner { epoch: Instant::now(), events: Mutex::new(Vec::new()) }),
+        }
+    }
+
+    /// Current timestamp in µs since the recorder's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.inner.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record a complete event with explicit timing.
+    pub fn record(
+        &self,
+        kind: EventKind,
+        name: impl Into<String>,
+        track: impl Into<String>,
+        lane: u32,
+        start_us: u64,
+        dur_us: u64,
+    ) {
+        self.inner.events.lock().unwrap().push(Event {
+            name: name.into(),
+            kind,
+            track: track.into(),
+            lane,
+            start_us,
+            dur_us,
+        });
+    }
+
+    /// Record an event that started `dur_us` ago and ends now.
+    pub fn record_ending_now(
+        &self,
+        kind: EventKind,
+        name: impl Into<String>,
+        track: impl Into<String>,
+        lane: u32,
+        dur_us: u64,
+    ) {
+        let end = self.now_us();
+        self.record(kind, name, track, lane, end.saturating_sub(dur_us), dur_us);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Export as Chrome Trace Event Format JSON.
+    pub fn to_chrome_trace(&self) -> String {
+        let events = self.inner.events.lock().unwrap();
+        // Stable pid mapping per track name.
+        let mut tracks: Vec<&str> = events.iter().map(|e| e.track.as_str()).collect();
+        tracks.sort();
+        tracks.dedup();
+        let pid_of = |t: &str| tracks.iter().position(|x| *x == t).unwrap() + 1;
+
+        let mut out = String::from("{\"traceEvents\":[");
+        for (i, t) in tracks.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"ph\":\"M\",\"pid\":{},\"name\":\"process_name\",\"args\":{{\"name\":{}}}}}",
+                i + 1,
+                crate::util::json::Json::Str(t.to_string())
+            );
+        }
+        for e in events.iter() {
+            let _ = write!(
+                out,
+                ",{{\"ph\":\"X\",\"pid\":{},\"tid\":{},\"ts\":{},\"dur\":{},\"cat\":\"{}\",\"name\":{}}}",
+                pid_of(&e.track),
+                e.lane,
+                e.start_us,
+                e.dur_us,
+                e.kind.category(),
+                crate::util::json::Json::Str(e.name.clone())
+            );
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Write the trace to a file.
+    pub fn write_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome_trace())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn records_and_counts() {
+        let tr = TraceRecorder::new();
+        assert!(tr.is_empty());
+        tr.record(EventKind::Dispatch, "fc", "fpga", 0, 10, 5);
+        tr.record(EventKind::Reconfig, "role3", "fpga", 1, 15, 7425);
+        assert_eq!(tr.len(), 2);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_all_events() {
+        let tr = TraceRecorder::new();
+        tr.record(EventKind::Dispatch, "fc \"quoted\"", "fpga", 0, 1, 2);
+        tr.record(EventKind::KernelExec, "conv", "cpu", 3, 4, 5);
+        let doc = Json::parse(&tr.to_chrome_trace()).expect("valid json");
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        // 2 metadata (one per track) + 2 events.
+        assert_eq!(events.len(), 4);
+        let x_events: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .collect();
+        assert_eq!(x_events.len(), 2);
+        assert_eq!(x_events[0].get("name").as_str(), Some("fc \"quoted\""));
+        assert_eq!(x_events[1].get("cat").as_str(), Some("kernel"));
+    }
+
+    #[test]
+    fn tracks_get_distinct_pids() {
+        let tr = TraceRecorder::new();
+        tr.record(EventKind::Custom, "a", "t1", 0, 0, 1);
+        tr.record(EventKind::Custom, "b", "t2", 0, 0, 1);
+        let doc = Json::parse(&tr.to_chrome_trace()).unwrap();
+        let pids: Vec<f64> = doc
+            .get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .map(|e| e.get("pid").as_f64().unwrap())
+            .collect();
+        assert_ne!(pids[0], pids[1]);
+    }
+
+    #[test]
+    fn record_ending_now_has_sane_bounds() {
+        let tr = TraceRecorder::new();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        tr.record_ending_now(EventKind::Reconfig, "r", "fpga", 0, 1000);
+        let doc = Json::parse(&tr.to_chrome_trace()).unwrap();
+        let ev = doc
+            .get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|e| e.get("ph").as_str() == Some("X"))
+            .unwrap()
+            .clone();
+        assert_eq!(ev.get("dur").as_usize(), Some(1000));
+    }
+
+    #[test]
+    fn concurrent_recording_is_safe() {
+        let tr = TraceRecorder::new();
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let tr = tr.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        tr.record(EventKind::Custom, format!("e{t}-{i}"), "t", t, i, 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(tr.len(), 400);
+        Json::parse(&tr.to_chrome_trace()).expect("valid json");
+    }
+}

@@ -1,0 +1,227 @@
+//! INI-style config files for the launcher (`tf-fpga --config run.cfg ...`
+//! and `Session` construction from a deployment file) — the "real config
+//! system" a framework ships instead of a flag zoo.
+//!
+//! Format: `key = value` lines, `[section]` headers, `#`/`;` comments.
+//! Keys are addressed as `section.key` (keys before any header live in the
+//! root section, addressed bare).
+
+use crate::hsa::error::{HsaError, Result};
+use crate::reconfig::policy::PolicyKind;
+use crate::tf::session::SessionOptions;
+use std::collections::BTreeMap;
+
+/// Parsed configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(HsaError::Runtime(format!(
+                        "config line {}: empty section name",
+                        lineno + 1
+                    )));
+                }
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(HsaError::Runtime(format!(
+                    "config line {}: expected `key = value`, got '{line}'",
+                    lineno + 1
+                )));
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            if key.split('.').next_back().unwrap_or("").is_empty() {
+                return Err(HsaError::Runtime(format!(
+                    "config line {}: empty key",
+                    lineno + 1
+                )));
+            }
+            values.insert(key, v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            HsaError::Runtime(format!("read {}: {e}", path.as_ref().display()))
+        })?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| {
+                v.parse().map_err(|_| {
+                    HsaError::Runtime(format!("config '{key}': '{v}' is not an integer"))
+                })
+            })
+            .transpose()
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        self.get(key)
+            .map(|v| match v {
+                "true" | "yes" | "1" | "on" => Ok(true),
+                "false" | "no" | "0" | "off" => Ok(false),
+                other => Err(HsaError::Runtime(format!(
+                    "config '{key}': '{other}' is not a boolean"
+                ))),
+            })
+            .transpose()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Build `SessionOptions` from the `[session]` section:
+    ///
+    /// ```ini
+    /// [session]
+    /// regions = 4
+    /// policy = lru            # lru | mru | fifo | random
+    /// prefer_fpga = true
+    /// soft_placement = true
+    /// use_pjrt = true
+    /// artifacts = artifacts   # directory
+    /// realtime = false
+    /// ```
+    pub fn session_options(&self) -> Result<SessionOptions> {
+        let mut o = SessionOptions::default();
+        if let Some(n) = self.get_usize("session.regions")? {
+            if n == 0 {
+                return Err(HsaError::Runtime("session.regions must be >= 1".into()));
+            }
+            o.num_regions = n;
+        }
+        if let Some(p) = self.get("session.policy") {
+            o.policy = PolicyKind::parse(p).ok_or_else(|| {
+                HsaError::Runtime(format!(
+                    "session.policy '{p}' (want lru|mru|fifo|random)"
+                ))
+            })?;
+        }
+        if let Some(b) = self.get_bool("session.prefer_fpga")? {
+            o.prefer_fpga = b;
+        }
+        if let Some(b) = self.get_bool("session.soft_placement")? {
+            o.allow_soft_placement = b;
+        }
+        if let Some(b) = self.get_bool("session.use_pjrt")? {
+            o.use_pjrt = b;
+        }
+        if let Some(dir) = self.get("session.artifacts") {
+            o.artifacts_dir = Some(dir.into());
+        }
+        if let Some(b) = self.get_bool("session.realtime")? {
+            o.realtime = b;
+        }
+        Ok(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# deployment config
+top = 1
+
+[session]
+regions = 4
+policy = fifo
+prefer_fpga = false
+use_pjrt = off
+
+[serve]
+max_batch = 16
+; comment
+max_delay_ms = 3
+";
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("top"), Some("1"));
+        assert_eq!(c.get("session.regions"), Some("4"));
+        assert_eq!(c.get("serve.max_batch"), Some("16"));
+        assert_eq!(c.get("serve.max_delay_ms"), Some("3"));
+        assert_eq!(c.get("missing"), None);
+        assert_eq!(c.len(), 7);
+    }
+
+    #[test]
+    fn session_options_from_config() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let o = c.session_options().unwrap();
+        assert_eq!(o.num_regions, 4);
+        assert_eq!(o.policy, crate::reconfig::policy::PolicyKind::Fifo);
+        assert!(!o.prefer_fpga);
+        assert!(!o.use_pjrt);
+        assert!(o.allow_soft_placement, "untouched default");
+    }
+
+    #[test]
+    fn typed_getters_validate() {
+        let c = Config::parse("x = abc\nb = maybe\n").unwrap();
+        assert!(c.get_usize("x").is_err());
+        assert!(c.get_bool("b").is_err());
+        assert_eq!(c.get_usize("nope").unwrap(), None);
+    }
+
+    #[test]
+    fn bad_lines_error_with_line_numbers() {
+        let err = Config::parse("ok = 1\nnot a kv line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        let err = Config::parse("[]\n").unwrap_err();
+        assert!(err.to_string().contains("section"), "{err}");
+    }
+
+    #[test]
+    fn zero_regions_rejected() {
+        let c = Config::parse("[session]\nregions = 0\n").unwrap();
+        assert!(c.session_options().is_err());
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        let c = Config::parse("[session]\npolicy = belady\n").unwrap();
+        assert!(c.session_options().is_err(), "belady needs a trace, not valid here");
+    }
+
+    #[test]
+    fn whitespace_tolerant() {
+        let c = Config::parse("  key   =   spaced value  \n").unwrap();
+        assert_eq!(c.get("key"), Some("spaced value"));
+    }
+}

@@ -1,0 +1,22 @@
+//! Small self-contained utilities (no third-party deps are available
+//! offline beyond `xla`/`anyhow`/`thiserror`/`once_cell`, so JSON parsing,
+//! PRNG, statistics and property testing are implemented here).
+
+pub mod config;
+pub mod json;
+pub mod prng;
+pub mod quickcheck;
+pub mod stats;
+
+/// Whether spin-then-block waiting is profitable on this host. On a
+/// single-core machine a spinning waiter only steals cycles from the
+/// thread it is waiting for, so all hot-path spin phases collapse to
+/// immediate blocking (§Perf, EXPERIMENTS.md).
+pub fn spin_enabled() -> bool {
+    static ENABLED: once_cell::sync::Lazy<bool> = once_cell::sync::Lazy::new(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get() > 1)
+            .unwrap_or(false)
+    });
+    *ENABLED
+}

@@ -1,0 +1,115 @@
+//! Timing statistics: summaries with percentiles for the paper-style tables.
+
+use std::time::Duration;
+
+/// Summary statistics over a sample of durations (or any f64 series).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Build from raw values (any unit). Returns a zeroed summary for an
+    /// empty sample rather than panicking.
+    pub fn from_values(values: &[f64]) -> Summary {
+        if values.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
+        }
+        let mut v: Vec<f64> = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            p50: percentile_sorted(&v, 50.0),
+            p90: percentile_sorted(&v, 90.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: v[n - 1],
+        }
+    }
+
+    /// Build from durations, in microseconds (the paper's Table II unit).
+    pub fn from_durations_us(samples: &[Duration]) -> Summary {
+        let us: Vec<f64> = samples.iter().map(|d| d.as_secs_f64() * 1e6).collect();
+        Summary::from_values(&us)
+    }
+}
+
+/// Nearest-rank percentile on a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0 * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Geometric mean (used for speedup aggregation).
+pub fn geomean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let logs: f64 = values.iter().map(|v| v.ln()).sum();
+    (logs / values.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant_series() {
+        let s = Summary::from_values(&[5.0; 10]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 5.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn summary_orders_percentiles() {
+        let vals: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let s = Summary::from_values(&vals);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_sample_is_zeroed() {
+        let s = Summary::from_values(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn geomean_of_powers() {
+        let g = geomean(&[1.0, 4.0, 16.0]);
+        assert!((g - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duration_conversion_is_us() {
+        let s = Summary::from_durations_us(&[Duration::from_micros(250); 4]);
+        assert!((s.mean - 250.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,271 @@
+//! Integration: full graphs through the Session, FPGA placement vs the CPU
+//! baseline, soft placement, quantization pipelines, reconfiguration
+//! behaviour at the session level.
+
+use tf_fpga::hsa::agent::DeviceType;
+use tf_fpga::tf::dtype::DType;
+use tf_fpga::tf::graph::{Graph, OpKind};
+use tf_fpga::tf::session::{Session, SessionOptions};
+use tf_fpga::tf::tensor::Tensor;
+use tf_fpga::util::prng::Rng;
+
+fn rand_f32(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0f32; shape.iter().product()];
+    rng.fill_f32_normal(&mut v, 0.0, 1.0);
+    Tensor::from_f32(shape, v).unwrap()
+}
+
+fn rand_i16(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0i16; shape.iter().product()];
+    rng.fill_i16(&mut v, -256, 255);
+    Tensor::from_i16(shape, v).unwrap()
+}
+
+/// FC chain: x -> fc -> relu -> fc_barrier.
+fn fc_chain() -> Graph {
+    let mut g = Graph::new();
+    let x = g.placeholder("x", &[8, 16], DType::F32).unwrap();
+    let w1 = g.constant("w1", rand_f32(&[16, 12], 1)).unwrap();
+    let b1 = g.constant("b1", rand_f32(&[12], 2)).unwrap();
+    let y1 = g.add("y1", OpKind::FullyConnected, &[x, w1, b1]).unwrap();
+    let r = g.add("r", OpKind::Relu, &[y1]).unwrap();
+    let w2 = g.constant("w2", rand_f32(&[12, 4], 3)).unwrap();
+    let b2 = g.constant("b2", rand_f32(&[4], 4)).unwrap();
+    g.add("y2", OpKind::FcBarrier, &[r, w2, b2]).unwrap();
+    g
+}
+
+#[test]
+fn fc_chain_fpga_equals_cpu_baseline() {
+    let fpga = Session::new(fc_chain(), SessionOptions::native_only()).unwrap();
+    let cpu = Session::new(fc_chain(), SessionOptions::cpu_baseline()).unwrap();
+    for seed in 0..5 {
+        let x = rand_f32(&[8, 16], 100 + seed);
+        let a = fpga.run(&[("x", x.clone())], &["y2"]).unwrap();
+        let b = cpu.run(&[("x", x)], &["y2"]).unwrap();
+        let diff = a[0].max_abs_diff(&b[0]).unwrap();
+        assert!(diff < 1e-5, "seed {seed}: diff {diff}");
+    }
+    // FC ops went to the FPGA in one session and not the other.
+    assert!(fpga.reconfig_stats().dispatches >= 10);
+    assert_eq!(cpu.reconfig_stats().dispatches, 0);
+    fpga.shutdown();
+    cpu.shutdown();
+}
+
+#[test]
+fn quantized_conv_pipeline_round_trip() {
+    // f32 -> quantize -> conv5x5(i16) -> relu(i16) -> dequantize -> f32.
+    let mut g = Graph::new();
+    let x = g.placeholder("x", &[1, 28, 28], DType::F32).unwrap();
+    let q = g.add("q", OpKind::Quantize { frac_bits: 8 }, &[x]).unwrap();
+    let c = g.add("c", OpKind::Conv5x5I16, &[q]).unwrap();
+    let r = g.add("r", OpKind::Relu, &[c]).unwrap();
+    g.add("out", OpKind::Dequantize { frac_bits: 8 }, &[r]).unwrap();
+
+    let sess = Session::new(g, SessionOptions::native_only()).unwrap();
+    let x = rand_f32(&[1, 28, 28], 9);
+    let out = sess.run(&[("x", x)], &["out"]).unwrap();
+    assert_eq!(out[0].shape(), &[1, 24, 24]);
+    assert_eq!(out[0].dtype(), DType::F32);
+    // Relu'd and dequantized: all outputs are >= 0.
+    assert!(out[0].as_f32().unwrap().iter().all(|&v| v >= 0.0));
+    sess.shutdown();
+}
+
+#[test]
+fn conv_roles_on_fpga_match_cpu_for_many_inputs() {
+    let mut g = Graph::new();
+    let x = g.placeholder("x", &[1, 28, 28], DType::I16).unwrap();
+    g.add("c5", OpKind::Conv5x5I16, &[x]).unwrap();
+    g.add("c3", OpKind::Conv3x3I16, &[x]).unwrap();
+    let fpga = Session::new(g.clone(), SessionOptions::native_only()).unwrap();
+    let cpu = Session::new(g, SessionOptions::cpu_baseline()).unwrap();
+    for seed in 0..8 {
+        let x = rand_i16(&[1, 28, 28], 50 + seed);
+        let a = fpga.run(&[("x", x.clone())], &["c5", "c3"]).unwrap();
+        let b = cpu.run(&[("x", x)], &["c5", "c3"]).unwrap();
+        assert_eq!(a[0], b[0], "conv5 seed {seed}");
+        assert_eq!(a[1], b[1], "conv3 seed {seed}");
+    }
+    fpga.shutdown();
+    cpu.shutdown();
+}
+
+#[test]
+fn soft_placement_falls_back_for_fpga_annotated_relu() {
+    let mut g = Graph::new();
+    let x = g.placeholder("x", &[4], DType::F32).unwrap();
+    let r = g.add("r", OpKind::Relu, &[x]).unwrap();
+    g.set_device(r, DeviceType::Fpga); // no FPGA relu registered
+    let sess = Session::new(g, SessionOptions::native_only()).unwrap();
+    assert_eq!(sess.placement().device_of(r), Some(DeviceType::Cpu));
+    assert_eq!(sess.placement().soft_placed, vec![r]);
+    let out = sess
+        .run(&[("x", Tensor::from_f32(&[4], vec![-1.0, 2.0, -3.0, 4.0]).unwrap())], &["r"])
+        .unwrap();
+    assert_eq!(out[0].as_f32().unwrap(), &[0.0, 2.0, 0.0, 4.0]);
+    sess.shutdown();
+}
+
+#[test]
+fn hard_placement_error_is_loud() {
+    let mut g = Graph::new();
+    let x = g.placeholder("x", &[4], DType::F32).unwrap();
+    let r = g.add("r", OpKind::Relu, &[x]).unwrap();
+    g.set_device(r, DeviceType::Fpga);
+    let err = Session::new(
+        g,
+        SessionOptions { allow_soft_placement: false, ..SessionOptions::native_only() },
+    )
+    .err()
+    .expect("must fail");
+    assert!(err.to_string().contains("relu"), "{err}");
+}
+
+#[test]
+fn session_reconfig_stats_reflect_role_thrash() {
+    // Alternate two conv roles + fc on a 1-region FPGA: every dispatch is
+    // a miss (paper: "if not configured" cost on every role switch).
+    let mut g = Graph::new();
+    let x = g.placeholder("x", &[1, 28, 28], DType::I16).unwrap();
+    g.add("c5", OpKind::Conv5x5I16, &[x]).unwrap();
+    g.add("c3", OpKind::Conv3x3I16, &[x]).unwrap();
+    let sess = Session::new(
+        g,
+        SessionOptions { num_regions: 1, ..SessionOptions::native_only() },
+    )
+    .unwrap();
+    for seed in 0..5 {
+        let x = rand_i16(&[1, 28, 28], seed);
+        sess.run(&[("x", x)], &["c5", "c3"]).unwrap();
+    }
+    let s = sess.reconfig_stats();
+    assert_eq!(s.dispatches, 10);
+    assert_eq!(s.misses, 10, "1 region + 2 alternating roles never hits");
+    assert_eq!(s.reconfig_us_total, 10 * 7425);
+    sess.shutdown();
+}
+
+#[test]
+fn run_with_stats_counts_dispatches_per_device() {
+    let sess = Session::new(fc_chain(), SessionOptions::native_only()).unwrap();
+    let x = rand_f32(&[8, 16], 1);
+    let (_, stats) = sess.run_with_stats(&[("x", x)], &["y2"]).unwrap();
+    // 2 FC on FPGA + relu on CPU.
+    assert_eq!(stats.dispatches, 3);
+    assert_eq!(stats.dispatches_by_device[&DeviceType::Fpga], 2);
+    assert_eq!(stats.dispatches_by_device[&DeviceType::Cpu], 1);
+    assert!(stats.wall_us > 0);
+    sess.shutdown();
+}
+
+#[test]
+fn whole_cnn_native_kernel_shapes_and_consistency() {
+    let mut g = Graph::new();
+    let x = g.placeholder("x", &[4, 1, 28, 28], DType::F32).unwrap();
+    g.add("logits", OpKind::MnistCnn, &[x]).unwrap();
+    let fpga = Session::new(g.clone(), SessionOptions::native_only()).unwrap();
+    let cpu = Session::new(g, SessionOptions::cpu_baseline()).unwrap();
+    let x = rand_f32(&[4, 1, 28, 28], 33);
+    let a = fpga.run(&[("x", x.clone())], &["logits"]).unwrap();
+    let b = cpu.run(&[("x", x)], &["logits"]).unwrap();
+    assert_eq!(a[0].shape(), &[4, 10]);
+    let diff = a[0].max_abs_diff(&b[0]).unwrap();
+    assert!(diff < 1e-5, "diff {diff}");
+    fpga.shutdown();
+    cpu.shutdown();
+}
+
+#[test]
+fn softmax_head_produces_distribution() {
+    let mut g = Graph::new();
+    let x = g.placeholder("x", &[4, 1, 28, 28], DType::F32).unwrap();
+    let l = g.add("logits", OpKind::MnistCnn, &[x]).unwrap();
+    g.add("probs", OpKind::Softmax, &[l]).unwrap();
+    let sess = Session::new(g, SessionOptions::native_only()).unwrap();
+    let x = rand_f32(&[4, 1, 28, 28], 71);
+    let out = sess.run(&[("x", x)], &["probs"]).unwrap();
+    for row in out[0].as_f32().unwrap().chunks(10) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5, "{row:?}");
+        assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+    sess.shutdown();
+}
+
+#[test]
+fn session_trace_records_reconfig_and_exec_events() {
+    use tf_fpga::trace::recorder::TraceRecorder;
+    let tr = TraceRecorder::new();
+    let mut g = Graph::new();
+    let x = g.placeholder("x", &[1, 28, 28], DType::I16).unwrap();
+    g.add("c5", OpKind::Conv5x5I16, &[x]).unwrap();
+    let sess = Session::new(
+        g,
+        SessionOptions { trace: Some(tr.clone()), ..SessionOptions::native_only() },
+    )
+    .unwrap();
+    let x = rand_i16(&[1, 28, 28], 3);
+    sess.run(&[("x", x.clone())], &["c5"]).unwrap();
+    sess.run(&[("x", x)], &["c5"]).unwrap();
+    // 1 reconfig + 2 kernel executions.
+    assert_eq!(tr.len(), 3, "{}", tr.to_chrome_trace());
+    let json = tf_fpga::util::json::Json::parse(&tr.to_chrome_trace()).unwrap();
+    let cats: Vec<String> = json
+        .get("traceEvents")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|e| e.get("cat").as_str().map(String::from))
+        .collect();
+    assert_eq!(cats.iter().filter(|c| *c == "reconfig").count(), 1);
+    assert_eq!(cats.iter().filter(|c| *c == "kernel").count(), 2);
+    sess.shutdown();
+}
+
+#[test]
+fn eviction_policy_option_respected_by_session() {
+    use tf_fpga::reconfig::policy::PolicyKind;
+    // FIFO vs LRU distinguishable: load c5, c3; touch c5; load third role
+    // (cnn conv1 via graph) — FIFO evicts c5, LRU evicts c3.
+    let build = |policy| {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 28, 28], DType::I16).unwrap();
+        g.add("c5", OpKind::Conv5x5I16, &[x]).unwrap();
+        g.add("c3", OpKind::Conv3x3I16, &[x]).unwrap();
+        Session::new(
+            g,
+            SessionOptions { policy, num_regions: 2, ..SessionOptions::native_only() },
+        )
+        .unwrap()
+    };
+    for kind in [PolicyKind::Lru, PolicyKind::Fifo, PolicyKind::Random] {
+        let sess = build(kind);
+        let x = rand_i16(&[1, 28, 28], 1);
+        for _ in 0..4 {
+            sess.run(&[("x", x.clone())], &["c5", "c3"]).unwrap();
+        }
+        let s = sess.reconfig_stats();
+        assert_eq!(s.misses, 2, "{kind:?}: both roles stay resident");
+        assert_eq!(s.hits, 6, "{kind:?}");
+        sess.shutdown();
+    }
+}
+
+#[test]
+fn batch_size_flexibility_via_native_fallback() {
+    // The generic FC datapath accepts any M (PJRT module is shape-locked to
+    // 64; the hybrid binding falls back to the native path for others).
+    let mut g = Graph::new();
+    let x = g.placeholder("x", &[3, 16], DType::F32).unwrap();
+    let w = g.constant("w", rand_f32(&[16, 5], 7)).unwrap();
+    let b = g.constant("b", rand_f32(&[5], 8)).unwrap();
+    g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
+    let sess = Session::new(g, SessionOptions::default()).unwrap();
+    let out = sess.run(&[("x", rand_f32(&[3, 16], 21))], &["y"]).unwrap();
+    assert_eq!(out[0].shape(), &[3, 5]);
+    sess.shutdown();
+}

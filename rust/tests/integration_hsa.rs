@@ -1,0 +1,214 @@
+//! Integration: the HSA runtime under realistic multi-agent, multi-queue,
+//! multi-client load.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tf_fpga::cpu::a53::CpuKernelClass;
+use tf_fpga::cpu::device::{CpuAgent, CpuKernel};
+use tf_fpga::fpga::device::{ComputeBinding, FpgaAgent, FpgaConfig};
+use tf_fpga::fpga::roles;
+use tf_fpga::hsa::agent::DeviceType;
+use tf_fpga::hsa::runtime::HsaRuntime;
+use tf_fpga::hsa::signal::Signal;
+use tf_fpga::reconfig::policy::PolicyKind;
+use tf_fpga::tf::tensor::Tensor;
+
+fn echo_binding() -> ComputeBinding {
+    ComputeBinding::Native(Arc::new(|ins: &[Tensor]| Ok(ins.to_vec())))
+}
+
+fn full_runtime() -> (HsaRuntime, u64, u64) {
+    let cpu = CpuAgent::with_defaults();
+    let cpu_kernel = cpu.register_kernel(CpuKernel {
+        name: "relu".into(),
+        func: Arc::new(|ins| Ok(vec![tf_fpga::ops::relu_f32(&ins[0])?])),
+        class: CpuKernelClass::Memory,
+        op_template: None,
+    });
+    let fpga = FpgaAgent::new(FpgaConfig {
+        num_regions: 2,
+        policy: PolicyKind::Lru.build(0),
+        realtime: false,
+        realtime_scale: 1.0,
+        trace: None,
+    });
+    let fpga_kernel = fpga.register_role(roles::paper_roles().remove(0), echo_binding());
+    let rt = HsaRuntime::builder().with_agent(cpu).with_agent(fpga).build();
+    (rt, cpu_kernel, fpga_kernel)
+}
+
+#[test]
+fn cpu_and_fpga_agents_coexist() {
+    let (rt, cpu_k, fpga_k) = full_runtime();
+    let qc = rt.create_queue(rt.agent_by_type(DeviceType::Cpu).unwrap(), 32);
+    let qf = rt.create_queue(rt.agent_by_type(DeviceType::Fpga).unwrap(), 32);
+    let t = Tensor::from_f32(&[2], vec![-1.0, 1.0]).unwrap();
+    let out_c = rt.dispatch_sync(&qc, cpu_k, vec![t.clone()]).unwrap();
+    assert_eq!(out_c[0].as_f32().unwrap(), &[0.0, 1.0]);
+    let out_f = rt.dispatch_sync(&qf, fpga_k, vec![t.clone()]).unwrap();
+    assert_eq!(out_f[0], t);
+    rt.shutdown();
+}
+
+#[test]
+fn many_concurrent_clients_one_device() {
+    let (rt, _cpu_k, fpga_k) = full_runtime();
+    let rt = Arc::new(rt);
+    let q = rt.create_queue(rt.agent_by_type(DeviceType::Fpga).unwrap(), 64);
+    let handles: Vec<_> = (0..8)
+        .map(|c| {
+            let rt = Arc::clone(&rt);
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..40 {
+                    let t = Tensor::from_f32(&[2], vec![c as f32, i as f32]).unwrap();
+                    let out = rt.dispatch_sync(&q, fpga_k, vec![t.clone()]).unwrap();
+                    assert_eq!(out[0], t, "client {c} iteration {i}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    rt.shutdown();
+}
+
+#[test]
+fn barrier_chains_across_queues() {
+    let (rt, cpu_k, fpga_k) = full_runtime();
+    let qc = rt.create_queue(rt.agent_by_type(DeviceType::Cpu).unwrap(), 32);
+    let qf = rt.create_queue(rt.agent_by_type(DeviceType::Fpga).unwrap(), 32);
+    let t = Tensor::from_f32(&[1], vec![1.0]).unwrap();
+
+    let (fpga_done, _args) = rt.dispatch_async(&qf, fpga_k, vec![t.clone()]).unwrap();
+    let barrier_done = rt.barrier(&qc, vec![fpga_done.clone()]).unwrap();
+    let (cpu_done, _args2) = rt.dispatch_async(&qc, cpu_k, vec![t]).unwrap();
+    cpu_done.wait_eq(0, Some(Duration::from_secs(10))).unwrap();
+    barrier_done.wait_eq(0, Some(Duration::from_secs(10))).unwrap();
+    assert_eq!(fpga_done.load(), 0);
+    rt.shutdown();
+}
+
+#[test]
+fn deep_pipeline_async_dispatches_all_retire() {
+    let (rt, _cpu_k, fpga_k) = full_runtime();
+    let q = rt.create_queue(rt.agent_by_type(DeviceType::Fpga).unwrap(), 16);
+    let mut signals: Vec<Signal> = Vec::new();
+    for i in 0..64 {
+        let t = Tensor::from_f32(&[1], vec![i as f32]).unwrap();
+        let (sig, _args) = rt.dispatch_async(&q, fpga_k, vec![t]).unwrap();
+        signals.push(sig);
+    }
+    for (i, s) in signals.iter().enumerate() {
+        assert_eq!(
+            s.wait_eq(0, Some(Duration::from_secs(10))).unwrap(),
+            0,
+            "dispatch {i}"
+        );
+    }
+    rt.shutdown();
+}
+
+#[test]
+fn memory_pools_track_usage_across_threads() {
+    let pools = tf_fpga::hsa::memory::ultra96_regions();
+    let global = pools
+        .iter()
+        .find(|p| p.info().name == "lpddr4-global")
+        .unwrap()
+        .clone();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let pool = global.clone();
+            std::thread::spawn(move || {
+                let mut ids = Vec::new();
+                for _ in 0..50 {
+                    ids.push(pool.alloc(4096).unwrap());
+                }
+                for id in ids {
+                    pool.free(id).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(global.used_bytes(), 0, "all freed");
+    assert_eq!(global.live_allocations(), 0);
+    assert!(global.peak_bytes() >= 4096 * 50, "peak witnessed some load");
+}
+
+#[test]
+fn dispatch_after_shutdown_errors() {
+    let (rt, _cpu_k, fpga_k) = full_runtime();
+    let q = rt.create_queue(rt.agent_by_type(DeviceType::Fpga).unwrap(), 8);
+    rt.shutdown();
+    let t = Tensor::from_f32(&[1], vec![0.0]).unwrap();
+    assert!(rt.dispatch_sync(&q, fpga_k, vec![t]).is_err());
+}
+
+#[test]
+fn failed_fpga_kernel_reports_error_not_hang() {
+    let fpga = FpgaAgent::with_defaults();
+    let failing = fpga.register_role(
+        roles::paper_roles().remove(0),
+        ComputeBinding::Native(Arc::new(|_ins: &[Tensor]| {
+            Err(tf_fpga::hsa::error::HsaError::KernelFailed("boom".into()))
+        })),
+    );
+    let rt = HsaRuntime::builder().with_agent(fpga).build();
+    let q = rt.create_queue(rt.agent_by_type(DeviceType::Fpga).unwrap(), 8);
+    let err = rt
+        .dispatch_sync(&q, failing, vec![Tensor::from_f32(&[1], vec![0.0]).unwrap()])
+        .unwrap_err();
+    assert!(err.to_string().contains("boom"), "{err}");
+    rt.shutdown();
+}
+
+#[test]
+fn shared_fpga_two_tenants_interleave_correctly() {
+    // Condensed multi_tenant example as a regression test.
+    let fpga = FpgaAgent::new(FpgaConfig {
+        num_regions: 2,
+        policy: PolicyKind::Lru.build(0),
+        realtime: false,
+        realtime_scale: 1.0,
+        trace: None,
+    });
+    let paper = roles::paper_roles();
+    let a = fpga.register_role(paper[2].clone(), echo_binding());
+    let b = fpga.register_role(paper[3].clone(), echo_binding());
+    let c = fpga.register_role(roles::preprocess_role(), echo_binding());
+    let rt = Arc::new(HsaRuntime::builder().with_agent(fpga.clone()).build());
+    let q1 = rt.create_queue(rt.agent_by_type(DeviceType::Fpga).unwrap(), 32);
+    let q2 = rt.create_queue(rt.agent_by_type(DeviceType::Fpga).unwrap(), 32);
+
+    let t1 = {
+        let rt = Arc::clone(&rt);
+        std::thread::spawn(move || {
+            let x = Tensor::from_i16(&[1, 28, 28], vec![0; 784]).unwrap();
+            for i in 0..60 {
+                let k = if i % 2 == 0 { a } else { b };
+                rt.dispatch_sync(&q1, k, vec![x.clone()]).unwrap();
+            }
+        })
+    };
+    let t2 = {
+        let rt = Arc::clone(&rt);
+        std::thread::spawn(move || {
+            let x = Tensor::from_i16(&[784], vec![0; 784]).unwrap();
+            for _ in 0..60 {
+                rt.dispatch_sync(&q2, c, vec![x.clone()]).unwrap();
+            }
+        })
+    };
+    t1.join().unwrap();
+    t2.join().unwrap();
+    let s = fpga.reconfig_stats();
+    assert_eq!(s.dispatches, 120);
+    assert_eq!(s.hits + s.misses, s.dispatches, "accounting closes");
+    assert!(s.evictions > 0, "3 roles over 2 regions must evict");
+    rt.shutdown();
+}

@@ -1,0 +1,177 @@
+//! Integration: the PJRT runtime against the real AOT artifacts.
+//!
+//! These tests are the rust-side half of the L1/L2 correctness story: the
+//! HLO modules produced by `python/compile/aot.py` (Pallas kernels inside)
+//! must agree with the native Rust oracle kernels on the same fixed
+//! weights. Tests skip (with a message) when `make artifacts` has not run.
+
+use tf_fpga::ops;
+use tf_fpga::runtime::artifact::ArtifactStore;
+use tf_fpga::runtime::pjrt::PjrtService;
+use tf_fpga::tf::tensor::Tensor;
+use tf_fpga::util::prng::Rng;
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::open_default() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn rand_f32(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0f32; shape.iter().product()];
+    rng.fill_f32_normal(&mut v, 0.0, 1.0);
+    Tensor::from_f32(shape, v).unwrap()
+}
+
+fn rand_i16(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0i16; shape.iter().product()];
+    rng.fill_i16(&mut v, -256, 255);
+    Tensor::from_i16(shape, v).unwrap()
+}
+
+#[test]
+fn manifest_lists_all_five_modules() {
+    let Some(store) = store() else { return };
+    for name in ["role1_fc", "role2_fc_barrier", "role3_conv5x5", "role4_conv3x3", "mnist_cnn"]
+    {
+        assert!(store.module(name).is_ok(), "missing module {name}");
+    }
+}
+
+#[test]
+fn role1_fc_artifact_matches_native_oracle() {
+    let Some(store) = store() else { return };
+    let svc = PjrtService::start().unwrap();
+    let meta = store.module("role1_fc").unwrap();
+    svc.handle().load_module(meta).unwrap();
+
+    let x = rand_f32(&[64, 64], 1);
+    let w = rand_f32(&[64, 64], 2);
+    let b = rand_f32(&[64], 3);
+    let got = svc
+        .handle()
+        .execute("role1_fc", vec![x.clone(), w.clone(), b.clone()])
+        .unwrap();
+    let want = ops::fc_f32(&x, &w, &b).unwrap();
+    let diff = got[0].max_abs_diff(&want).unwrap();
+    assert!(diff < 1e-3, "pallas-FC vs native diff {diff}");
+}
+
+#[test]
+fn role2_fc_barrier_artifact_matches_role1() {
+    let Some(store) = store() else { return };
+    let svc = PjrtService::start().unwrap();
+    svc.handle().load_module(store.module("role1_fc").unwrap()).unwrap();
+    svc.handle()
+        .load_module(store.module("role2_fc_barrier").unwrap())
+        .unwrap();
+    let x = rand_f32(&[64, 64], 5);
+    let w = rand_f32(&[64, 64], 6);
+    let b = rand_f32(&[64], 7);
+    let a = svc
+        .handle()
+        .execute("role1_fc", vec![x.clone(), w.clone(), b.clone()])
+        .unwrap();
+    let b2 = svc.handle().execute("role2_fc_barrier", vec![x, w, b]).unwrap();
+    let diff = a[0].max_abs_diff(&b2[0]).unwrap();
+    assert!(diff < 1e-4, "barrier variant diverged: {diff}");
+}
+
+#[test]
+fn conv_role_artifacts_match_native_with_manifest_weights() {
+    let Some(store) = store() else { return };
+    let svc = PjrtService::start().unwrap();
+    svc.handle().load_module(store.module("role3_conv5x5").unwrap()).unwrap();
+    svc.handle().load_module(store.module("role4_conv3x3").unwrap()).unwrap();
+    let (_, w5) = store.load_weight_i16("role3/w").unwrap();
+    let (_, w3) = store.load_weight_i16("role4/w").unwrap();
+    let shift = store.conv_shift;
+
+    for seed in 0..4 {
+        let x = rand_i16(&[1, 28, 28], 40 + seed);
+        let got5 = svc.handle().execute("role3_conv5x5", vec![x.clone()]).unwrap();
+        let want5 = ops::conv2d_fixed_i16(&x, &w5, 1, 1, 5, 5, shift).unwrap();
+        assert_eq!(got5[0], want5, "conv5x5 seed {seed}: int16 must be bit-exact");
+
+        let got3 = svc.handle().execute("role4_conv3x3", vec![x.clone()]).unwrap();
+        let want3 = ops::conv2d_fixed_i16(&x, &w3, 2, 1, 3, 3, shift).unwrap();
+        assert_eq!(got3[0], want3, "conv3x3 seed {seed}");
+    }
+}
+
+#[test]
+fn mnist_cnn_artifact_matches_native_full_model() {
+    let Some(store) = store() else { return };
+    let svc = PjrtService::start().unwrap();
+    svc.handle().load_module(store.module("mnist_cnn").unwrap()).unwrap();
+
+    // Native full model with the same artifact weights.
+    let weights = std::sync::Arc::new(
+        tf_fpga::tf::session::WeightBank::load(Some(&store)).unwrap(),
+    );
+    let native = tf_fpga::tf::session::native_mnist_cnn(&weights);
+
+    let x = rand_f32(&[32, 1, 28, 28], 77);
+    let got = svc.handle().execute("mnist_cnn", vec![x.clone()]).unwrap();
+    let want = native(&[x]).unwrap();
+    assert_eq!(got[0].shape(), &[32, 10]);
+    let diff = got[0].max_abs_diff(&want[0]).unwrap();
+    assert!(diff < 1e-3, "CNN pallas-vs-native diff {diff}");
+}
+
+#[test]
+fn shape_validation_rejects_wrong_inputs() {
+    let Some(store) = store() else { return };
+    let svc = PjrtService::start().unwrap();
+    svc.handle().load_module(store.module("role3_conv5x5").unwrap()).unwrap();
+    // Wrong shape.
+    let bad = Tensor::zeros(&[1, 27, 27], tf_fpga::tf::dtype::DType::I16);
+    let err = svc.handle().execute("role3_conv5x5", vec![bad]).unwrap_err();
+    assert!(err.to_string().contains("expected"), "{err}");
+    // Wrong dtype.
+    let bad = Tensor::zeros(&[1, 28, 28], tf_fpga::tf::dtype::DType::F32);
+    assert!(svc.handle().execute("role3_conv5x5", vec![bad]).is_err());
+    // Wrong arity.
+    let x = Tensor::zeros(&[1, 28, 28], tf_fpga::tf::dtype::DType::I16);
+    assert!(svc
+        .handle()
+        .execute("role3_conv5x5", vec![x.clone(), x])
+        .is_err());
+}
+
+#[test]
+fn session_uses_pjrt_for_canonical_role_shapes() {
+    // With artifacts present, a (64,64) FC dispatch on the FPGA flows
+    // through the PJRT module (hybrid binding); the result must still match
+    // the native oracle.
+    let Some(_) = store() else { return };
+    let mut g = tf_fpga::tf::graph::Graph::new();
+    use tf_fpga::tf::dtype::DType;
+    use tf_fpga::tf::graph::OpKind;
+    let x = g.placeholder("x", &[64, 64], DType::F32).unwrap();
+    let w = g.constant("w", rand_f32(&[64, 64], 11)).unwrap();
+    let b = g.constant("b", rand_f32(&[64], 12)).unwrap();
+    g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
+    let sess = tf_fpga::tf::session::Session::new(
+        g,
+        tf_fpga::tf::session::SessionOptions::default(),
+    )
+    .unwrap();
+    let xv = rand_f32(&[64, 64], 13);
+    let out = sess.run(&[("x", xv.clone())], &["y"]).unwrap();
+    let want = ops::fc_f32(
+        &xv,
+        &rand_f32(&[64, 64], 11),
+        &rand_f32(&[64], 12),
+    )
+    .unwrap();
+    let diff = out[0].max_abs_diff(&want).unwrap();
+    assert!(diff < 1e-3, "hybrid PJRT path diverged: {diff}");
+    sess.shutdown();
+}
