@@ -1,0 +1,129 @@
+//! Serving throughput: synchronous lock-step pipeline vs the async
+//! batched pipeline, at compiled batch sizes 1, 8 and 32.
+//! `cargo bench --bench serving_throughput`.
+//!
+//! Both servers run the same `mnist_cnn` kernel with the same weights and
+//! the same client drive (a pool of blocking clients issuing single-image
+//! requests). The only variable is the pipeline: the sync server forms,
+//! executes and delivers one batch at a time; the async server overlaps
+//! all three stages and keeps several batches in flight across queue
+//! processors. Environment knobs: `SERVE_N` total requests per
+//! configuration (default 256), `SERVE_CLIENTS` concurrent clients
+//! (default 8).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tf_fpga::serve::{
+    AsyncInferenceServer, AsyncServerConfig, BatchPolicy, InferenceServer, ModelSpec,
+    ServerConfig,
+};
+use tf_fpga::tf::session::SessionOptions;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn policy(max_batch: usize) -> BatchPolicy {
+    BatchPolicy { max_batch, max_delay: Duration::from_millis(2) }
+}
+
+/// Drive `total` blocking requests from `clients` threads; return elapsed.
+fn drive(clients: usize, total: usize, infer: impl Fn(Vec<f32>) -> bool + Send + Sync + 'static) -> Duration {
+    let infer = Arc::new(infer);
+    let t0 = Instant::now();
+    let per_client = total / clients;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let infer = Arc::clone(&infer);
+            std::thread::spawn(move || {
+                for i in 0..per_client {
+                    let image = vec![((c * per_client + i) % 255) as f32 / 255.0; 784];
+                    assert!(infer(image), "request failed");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed()
+}
+
+fn main() {
+    let total = env_usize("SERVE_N", 256);
+    let clients = env_usize("SERVE_CLIENTS", 8);
+    let total = (total / clients).max(1) * clients; // divisible by clients
+
+    println!(
+        "serving_throughput: {total} requests, {clients} clients, per batch size:\n"
+    );
+    println!(
+        "{:<12} {:>12} {:>12} {:>9}   (req/s, higher is better)",
+        "batch size", "sync", "async", "speedup"
+    );
+
+    let mut all_faster = true;
+    for max_batch in [1usize, 8, 32] {
+        // --- synchronous lock-step baseline ---
+        let sync_rps = {
+            let srv = Arc::new(
+                InferenceServer::start(ServerConfig {
+                    batch: policy(max_batch),
+                    session: SessionOptions::native_only(),
+                })
+                .expect("sync server"),
+            );
+            let s2 = Arc::clone(&srv);
+            let elapsed =
+                drive(clients, total, move |img| s2.infer(img).is_ok());
+            let rps = total as f64 / elapsed.as_secs_f64();
+            // All client clones are gone after drive(); unwrap and stop.
+            if let Ok(mut s) = Arc::try_unwrap(srv) {
+                s.stop();
+            }
+            rps
+        };
+
+        // --- async batched pipeline ---
+        let async_rps = {
+            let srv = Arc::new(
+                AsyncInferenceServer::start(AsyncServerConfig {
+                    models: vec![ModelSpec::new("mnist", policy(max_batch))],
+                    session: SessionOptions {
+                        dispatch_workers: 4,
+                        ..SessionOptions::native_only()
+                    },
+                    pipeline_depth: 4,
+                })
+                .expect("async server"),
+            );
+            let s2 = Arc::clone(&srv);
+            let elapsed =
+                drive(clients, total, move |img| s2.infer("mnist", img).is_ok());
+            let rps = total as f64 / elapsed.as_secs_f64();
+            let rep = srv.report();
+            println!(
+                "  [async b{max_batch}: fill {:.1}, max in-flight {}, p99 {} µs]",
+                rep.mean_batch_fill, rep.max_inflight, rep.latency_us_p99
+            );
+            if let Ok(mut s) = Arc::try_unwrap(srv) {
+                s.stop();
+            }
+            rps
+        };
+
+        let speedup = async_rps / sync_rps;
+        all_faster &= speedup > 1.0;
+        println!(
+            "{:<12} {:>12.1} {:>12.1} {:>8.2}x",
+            max_batch, sync_rps, async_rps, speedup
+        );
+    }
+
+    if all_faster {
+        println!("\nserving_throughput: OK (async > sync at every batch size)");
+    } else {
+        println!("\nserving_throughput: WARNING — async did not beat sync everywhere");
+        std::process::exit(1);
+    }
+}

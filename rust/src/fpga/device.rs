@@ -140,6 +140,20 @@ impl FpgaAgent {
         self.manager.lock().unwrap().stats()
     }
 
+    /// Queued-demand hint from the serving layer: `queued` requests are
+    /// waiting on the role registered as `kernel_object` (0 clears it).
+    /// Demand-blind eviction policies ignore the hint; `queue-aware` uses
+    /// it to spare roles the batcher is about to dispatch.
+    pub fn hint_demand(&self, kernel_object: u64, queued: u64) {
+        let role = {
+            let map = self.roles.read().unwrap();
+            map.get(&kernel_object).map(|r| r.bitstream.id)
+        };
+        if let Some(id) = role {
+            self.manager.lock().unwrap().demand_hint(id, queued);
+        }
+    }
+
     pub fn num_regions(&self) -> usize {
         self.manager.lock().unwrap().num_regions()
     }
@@ -207,7 +221,18 @@ impl Agent for FpgaAgent {
             ComputeBinding::Native(f) => f(&packet.args.inputs)?,
             ComputeBinding::PjrtOrNative { handle, module, signature, native } => {
                 if ComputeBinding::signature_matches(signature, &packet.args.inputs) {
-                    handle.execute(module, packet.args.inputs.clone())?
+                    // PJRT failures (module skipped at load, service gone)
+                    // degrade to the native kernel — identical math.
+                    match handle.execute(module, packet.args.inputs.clone()) {
+                        Ok(outs) => outs,
+                        Err(e) => {
+                            eprintln!(
+                                "fpga: PJRT execute '{module}' failed, \
+                                 using native kernel: {e}"
+                            );
+                            native(&packet.args.inputs)?
+                        }
+                    }
                 } else {
                     native(&packet.args.inputs)?
                 }

@@ -1,10 +1,32 @@
 //! User-mode AQL queues with the HSA write-index/doorbell protocol.
 //!
 //! A producer reserves a slot by bumping the write index, fills the slot,
-//! then rings the doorbell signal with the new index. The packet processor
-//! consumes slots in order (read index chases write index). We realize the
+//! then rings the doorbell signal with the new index. Packet processors
+//! consume slots in order (read index chases write index). We realize the
 //! ring as a fixed-capacity `Vec<Mutex<Option<AqlPacket>>>` — one mutex per
 //! slot keeps producers on distinct slots contention-free, as on hardware.
+//!
+//! Both ends are fully concurrent (MPMC):
+//!
+//! * **Multi-producer** — any number of threads may [`Queue::enqueue`]
+//!   simultaneously; each reserves a distinct slot with one atomic
+//!   `fetch_add` and publishes it with a doorbell ring, no submit lock.
+//! * **Multi-consumer** — several packet processors may drain one queue
+//!   (see `HsaRuntime::create_queue_with_processors`); a consumer *claims*
+//!   the read index with a compare-exchange before touching the slot, so
+//!   two processors never dequeue the same packet and the read index never
+//!   moves backwards. This is what lets multiple kernel dispatches be in
+//!   flight on one device at once (one per PR region, as on hardware).
+//!
+//! Each slot carries a sequence number (the Vyukov bounded-MPMC scheme):
+//! the producer for ring index `i` may only fill the slot when its
+//! sequence equals `i` (the previous lap's packet was *taken*, not merely
+//! claimed), and the consumer that claimed `i` only takes a packet
+//! stamped `i+1`. A stalled producer therefore cannot be overtaken by a
+//! full-lap peer, and a consumer can never grab a neighbouring lap's
+//! packet — reservation order is delivery order, even under contention.
+//! Backpressure falls out of the same rule: a producer one lap ahead
+//! waits for its slot's sequence to catch up.
 
 use crate::hsa::error::{HsaError, Result};
 use crate::hsa::packet::AqlPacket;
@@ -18,10 +40,19 @@ pub struct Queue {
     inner: Arc<QueueInner>,
 }
 
+/// One ring slot: Vyukov-style sequence + payload. `seq == i` means the
+/// slot is free for the producer of ring index `i`; `seq == i + 1` means
+/// packet `i` is stored and waiting for the consumer that claimed `i`.
+#[derive(Debug)]
+struct Slot {
+    seq: u64,
+    pkt: Option<AqlPacket>,
+}
+
 #[derive(Debug)]
 struct QueueInner {
     /// Ring storage; capacity is a power of two (HSA requirement).
-    slots: Vec<Mutex<Option<AqlPacket>>>,
+    slots: Vec<Mutex<Slot>>,
     capacity_mask: u64,
     /// Next slot a producer will write.
     write_index: AtomicU64,
@@ -39,7 +70,9 @@ impl Queue {
     /// Create a queue with `capacity` slots (rounded up to a power of two).
     pub fn new(capacity: usize) -> Queue {
         let cap = capacity.next_power_of_two().max(2);
-        let slots = (0..cap).map(|_| Mutex::new(None)).collect();
+        let slots = (0..cap)
+            .map(|i| Mutex::new(Slot { seq: i as u64, pkt: None }))
+            .collect();
         Queue {
             inner: Arc::new(QueueInner {
                 slots,
@@ -76,18 +109,23 @@ impl Queue {
         }
         // Reserve.
         let idx = self.inner.write_index.fetch_add(1, Ordering::AcqRel);
-        // Backpressure: wait until the slot is free (reader caught up to
-        // within one lap).
+        // Backpressure + publish: the slot's sequence reaches `idx` only
+        // once the previous lap's packet has been *taken* (not merely
+        // claimed), so a full-lap producer can neither clobber a pending
+        // packet nor overtake a stalled peer that reserved an earlier
+        // index for the same slot.
+        let slot = &self.inner.slots[(idx & self.inner.capacity_mask) as usize];
         loop {
-            let r = self.inner.read_index.load(Ordering::Acquire);
-            if idx - r <= self.inner.capacity_mask {
-                break;
+            {
+                let mut guard = slot.lock().unwrap();
+                if guard.seq == idx {
+                    guard.pkt = Some(packet);
+                    guard.seq = idx + 1;
+                    break;
+                }
             }
             std::thread::yield_now();
         }
-        // Publish payload.
-        let slot = &self.inner.slots[(idx & self.inner.capacity_mask) as usize];
-        *slot.lock().unwrap() = Some(packet);
         // Ring the doorbell with the newest visible index. Monotonic max:
         // concurrent producers may race; the processor only needs "some
         // index >= mine" to wake.
@@ -110,22 +148,42 @@ impl Queue {
 
     /// Consumer side (packet processor): block until a packet is available,
     /// then take it. Returns `None` after shutdown once drained.
+    ///
+    /// Safe to call from several threads at once: each consumer claims the
+    /// read index with a compare-exchange first, so packets are handed out
+    /// exactly once and in ring order even with a pool of processors.
     pub fn dequeue_blocking(&self) -> Option<AqlPacket> {
         loop {
             let r = self.inner.read_index.load(Ordering::Acquire);
             let w = self.inner.write_index.load(Ordering::Acquire);
             if r < w {
-                let slot = &self.inner.slots[(r & self.inner.capacity_mask) as usize];
-                let mut guard = slot.lock().unwrap();
-                if let Some(pkt) = guard.take() {
-                    drop(guard);
-                    self.inner.read_index.store(r + 1, Ordering::Release);
-                    return Some(pkt);
+                // Claim slot r before touching it; a lost race just retries
+                // with the advanced index.
+                if self
+                    .inner
+                    .read_index
+                    .compare_exchange(r, r + 1, Ordering::AcqRel, Ordering::Acquire)
+                    .is_err()
+                {
+                    continue;
                 }
-                // Producer reserved the slot but hasn't stored yet: spin.
-                drop(guard);
-                std::thread::yield_now();
-                continue;
+                let slot = &self.inner.slots[(r & self.inner.capacity_mask) as usize];
+                loop {
+                    {
+                        let mut guard = slot.lock().unwrap();
+                        // Take only the packet stamped for *this* ring
+                        // index — a neighbouring lap's payload stays put.
+                        if guard.seq == r + 1 {
+                            let pkt = guard.pkt.take().expect("sequenced slot has packet");
+                            // Free the slot for the producer one lap ahead.
+                            guard.seq = r + self.inner.capacity_mask + 1;
+                            return Some(pkt);
+                        }
+                    }
+                    // The producer bumped the write index but hasn't stored
+                    // the payload yet: it is about to, spin briefly.
+                    std::thread::yield_now();
+                }
             }
             if self.inner.shut_down.load(Ordering::Acquire) {
                 return None;
@@ -285,5 +343,63 @@ mod tests {
             (0..4).flat_map(|p| (0..50).map(move |i| p * 1000 + i)).collect();
         expect.sort();
         assert_eq!(seen, expect);
+    }
+
+    #[test]
+    fn multi_consumer_each_packet_delivered_exactly_once() {
+        use std::sync::Mutex as StdMutex;
+        let q = Queue::new(16);
+        let seen = std::sync::Arc::new(StdMutex::new(Vec::new()));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                let seen = std::sync::Arc::clone(&seen);
+                thread::spawn(move || {
+                    while let Some(pkt) = q.dequeue_blocking() {
+                        if let AqlPacket::KernelDispatch(d) = pkt {
+                            seen.lock().unwrap().push(d.kernel_object);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for i in 0..120u64 {
+            let (pkt, _) = AqlPacket::dispatch(i, vec![], Signal::new(1));
+            q.enqueue(pkt).unwrap();
+        }
+        // Give consumers time to drain, then shut down and join.
+        while q.depth() > 0 {
+            thread::yield_now();
+        }
+        q.shutdown();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        let mut got = seen.lock().unwrap().clone();
+        got.sort();
+        assert_eq!(got, (0..120).collect::<Vec<u64>>(), "no loss, no duplication");
+    }
+
+    #[test]
+    fn full_lap_producers_do_not_clobber_claimed_slots() {
+        // Tiny ring, many more packets than slots, concurrent consumer:
+        // exercises the producer-waits-for-empty-slot path.
+        let q = Queue::new(2);
+        let q2 = q.clone();
+        let consumer = thread::spawn(move || {
+            let mut n = 0u64;
+            while q2.dequeue_blocking().is_some() {
+                n += 1;
+            }
+            n
+        });
+        for _ in 0..64 {
+            q.enqueue(noop_packet()).unwrap();
+        }
+        while q.depth() > 0 {
+            thread::yield_now();
+        }
+        q.shutdown();
+        assert_eq!(consumer.join().unwrap(), 64);
     }
 }

@@ -42,7 +42,7 @@ impl HsaRuntimeBuilder {
 
 struct QueueRecord {
     queue: Queue,
-    processor: Option<JoinHandle<()>>,
+    processors: Vec<JoinHandle<()>>,
     agent_name: String,
 }
 
@@ -81,18 +81,42 @@ impl HsaRuntime {
 
     /// Create a queue bound to `agent` and spawn its packet processor.
     pub fn create_queue(&self, agent: Arc<dyn Agent>, size: usize) -> Queue {
+        self.create_queue_with_processors(agent, size, 1)
+    }
+
+    /// Create a queue drained by a *pool* of `workers` packet processors.
+    ///
+    /// With more than one worker, independent kernel dispatches on this
+    /// queue execute concurrently — the software analogue of a device with
+    /// several compute units (for the FPGA agent: several PR regions), and
+    /// the mechanism that lets an async serving front keep multiple
+    /// batches in flight at once. Packets are still *handed out* in ring
+    /// order, but retirement order is whatever the kernels' runtimes give;
+    /// callers needing cross-packet ordering must use barrier packets or
+    /// completion signals. Note the AQL barrier bit's "block later packets"
+    /// semantics only holds on single-worker queues.
+    pub fn create_queue_with_processors(
+        &self,
+        agent: Arc<dyn Agent>,
+        size: usize,
+        workers: usize,
+    ) -> Queue {
         let size = size.min(agent.info().queue_max_size);
         let queue = Queue::new(size);
-        let q2 = queue.clone();
-        let a2 = Arc::clone(&agent);
         let name = agent.info().name.clone();
-        let processor = std::thread::Builder::new()
-            .name(format!("pktproc-{name}"))
-            .spawn(move || packet_processor(q2, a2))
-            .expect("spawn packet processor");
+        let processors = (0..workers.max(1))
+            .map(|i| {
+                let q2 = queue.clone();
+                let a2 = Arc::clone(&agent);
+                std::thread::Builder::new()
+                    .name(format!("pktproc-{name}-{i}"))
+                    .spawn(move || packet_processor(q2, a2))
+                    .expect("spawn packet processor")
+            })
+            .collect();
         self.queues.lock().unwrap().push(QueueRecord {
             queue: queue.clone(),
-            processor: Some(processor),
+            processors,
             agent_name: name,
         });
         queue
@@ -144,7 +168,7 @@ impl HsaRuntime {
             rec.queue.shutdown();
         }
         for rec in queues.iter_mut() {
-            if let Some(h) = rec.processor.take() {
+            for h in rec.processors.drain(..) {
                 if h.join().is_err() {
                     eprintln!("packet processor for {} panicked", rec.agent_name);
                 }
@@ -301,6 +325,26 @@ mod tests {
         let barrier_done = rt.barrier(&q2, vec![slow_sig.clone()]).unwrap();
         barrier_done.wait_eq(0, Some(Duration::from_secs(5))).unwrap();
         assert_eq!(slow_sig.load(), 0, "barrier retired before its dep");
+    }
+
+    #[test]
+    fn processor_pool_overlaps_kernel_execution() {
+        let rt = runtime();
+        let agent = rt.agent_by_type(DeviceType::Cpu).unwrap();
+        let q = rt.create_queue_with_processors(agent, 16, 4);
+        let t0 = std::time::Instant::now();
+        // Four 30 ms kernels; a single processor would serialize to 120 ms.
+        let pending: Vec<_> =
+            (0..4).map(|_| rt.dispatch_async(&q, 2, vec![]).unwrap()).collect();
+        for (sig, _) in &pending {
+            sig.wait_eq(0, Some(Duration::from_secs(5))).unwrap();
+        }
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(110),
+            "kernels should overlap across the processor pool, took {elapsed:?}"
+        );
+        rt.shutdown();
     }
 
     #[test]

@@ -50,6 +50,14 @@ impl Signal {
         self.inner.value.load(Ordering::Acquire)
     }
 
+    /// Non-blocking poll for the common completion condition (value 0 —
+    /// a retired kernel-dispatch packet). Used by async callers that want
+    /// to check a pending dispatch without sleeping on it.
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.load() == 0
+    }
+
     fn wake(&self) {
         // Pairing with the waiter's check-under-lock prevents the missed
         // wake-up: we cannot publish between its predicate check and its

@@ -15,9 +15,11 @@
 //! * **L3** (this crate) — the coordinator: [`tf`] frontend (graph, placer,
 //!   session), [`hsa`] runtime (queues, signals, packet processors),
 //!   [`fpga`] substrate (shell, PR regions, ICAP, datapath models, roles),
-//!   [`reconfig`] (LRU & friends), [`cpu`] (A53 baseline), [`runtime`]
-//!   (PJRT executor service for the AOT artifacts), [`ops`] (native
-//!   oracle kernels), [`bench`] (Table I–III generators).
+//!   [`reconfig`] (LRU & friends, including the queue-aware policy),
+//!   [`cpu`] (A53 baseline), [`runtime`] (PJRT executor service for the
+//!   AOT artifacts), [`ops`] (native oracle kernels), [`serve`] (the
+//!   sync and async batched serving pipelines), [`bench`] (Table I–III
+//!   generators).
 //!
 //! Quickstart (see `examples/quickstart.rs`):
 //!
@@ -32,6 +34,22 @@
 //! let sess = Session::new(g, SessionOptions::default()).unwrap();
 //! let out = sess.run(&[("x", Tensor::zeros(&[4, 8], DType::F32))], &["y"]).unwrap();
 //! ```
+//!
+//! Serving: [`serve::AsyncInferenceServer`] is the async batched entry
+//! point — per-model micro-batch lanes, `Session::run_async` dispatch,
+//! and a completer pool delivering replies in completion order:
+//!
+//! ```no_run
+//! use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig};
+//!
+//! let mut srv = AsyncInferenceServer::start(AsyncServerConfig::default()).unwrap();
+//! let logits = srv.infer("mnist", vec![0.0; 784]).unwrap();
+//! assert_eq!(logits.len(), 10);
+//! srv.stop();
+//! ```
+//!
+//! (`cargo bench --bench serving_throughput` compares it against the
+//! lock-step [`serve::InferenceServer`] baseline.)
 
 pub mod bench;
 pub mod cpu;

@@ -59,6 +59,14 @@ fn main() -> Result<()> {
             flag_usize(&flags, "batch-size", 32),
             session_opts_from_flags(&flags)?,
         ),
+        "serve" if flags.contains_key("async") => serve_async(
+            flag_usize(&flags, "requests", 512),
+            flag_usize(&flags, "clients", 4),
+            flag_usize(&flags, "max-batch", 16),
+            flag_usize(&flags, "max-delay-ms", 3),
+            flag_usize(&flags, "pipeline-depth", 4),
+            flag_usize(&flags, "workers", 2),
+        ),
         "serve" => serve(
             flag_usize(&flags, "requests", 512),
             flag_usize(&flags, "clients", 4),
@@ -91,6 +99,8 @@ commands:
                            end-to-end CNN inference through the full stack
   serve [--requests N --clients C --max-batch B --max-delay-ms D --trace-out F]
                            dynamic-batching inference service + latency report
+  serve --async [--pipeline-depth P --workers W ...]
+                           async batched pipeline (overlapped dispatch/completion)
   ablate-hls               pre-synthesized vs online-synthesis (OpenCL) flow costs
 ";
 
@@ -408,6 +418,81 @@ fn serve(
         println!("trace         : wrote {} events to {path}", tr.len());
     }
     drop(srv); // Drop stops the batcher and shuts the session down.
+    Ok(())
+}
+
+fn serve_async(
+    requests: usize,
+    clients: usize,
+    max_batch: usize,
+    max_delay_ms: usize,
+    pipeline_depth: usize,
+    workers: usize,
+) -> Result<()> {
+    use std::sync::Arc;
+    use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig, BatchPolicy, ModelSpec};
+    use tf_fpga::tf::session::SessionOptions;
+    use tf_fpga::util::prng::Rng;
+
+    let srv = AsyncInferenceServer::start(AsyncServerConfig {
+        models: vec![ModelSpec::new(
+            "mnist",
+            BatchPolicy {
+                max_batch,
+                max_delay: std::time::Duration::from_millis(max_delay_ms as u64),
+            },
+        )],
+        session: SessionOptions { dispatch_workers: workers, ..SessionOptions::default() },
+        pipeline_depth,
+    })
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "async serving mnist_cnn: max_batch={max_batch} max_delay={max_delay_ms}ms \
+         depth={pipeline_depth} workers={workers}, {clients} clients, {requests} requests"
+    );
+
+    let srv = Arc::new(srv);
+    let per_client = requests / clients.max(1);
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let srv = Arc::clone(&srv);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(c as u64 + 1);
+                for _ in 0..per_client {
+                    let mut img = vec![0f32; 784];
+                    rng.fill_f32_normal(&mut img, 0.0, 1.0);
+                    let logits = srv.infer("mnist", img).expect("infer");
+                    assert_eq!(logits.len(), 10);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let rep = srv.report();
+    println!("\n--- async serve report ---");
+    println!("requests      : {} ({} completed, {} failed)", rep.requests, rep.completed, rep.failed);
+    println!(
+        "batches       : {} (mean fill {:.1}/{max_batch}, max in-flight {})",
+        rep.batches, rep.mean_batch_fill, rep.max_inflight
+    );
+    println!(
+        "latency       : mean {:.2} ms  p50 {:.2} ms  p99 {:.2} ms",
+        rep.latency_us_mean / 1e3,
+        rep.latency_us_p50 as f64 / 1e3,
+        rep.latency_us_p99 as f64 / 1e3
+    );
+    println!("throughput    : {:.0} req/s", rep.requests as f64 / wall);
+    println!(
+        "fpga          : hit rate {:.1}%, {} reconfigs",
+        100.0 * rep.reconfig.hit_rate(),
+        rep.reconfig.misses
+    );
+    drop(srv); // Drop drains the pipeline and shuts the session down.
     Ok(())
 }
 

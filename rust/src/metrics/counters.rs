@@ -1,0 +1,172 @@
+//! Lock-free serving counters: request/batch accounting and an in-flight
+//! gauge with a high-water mark, shared across the submit, batcher and
+//! completer threads of the async serving pipeline.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Atomic counters for one serving pipeline. All methods are cheap enough
+/// for the per-request hot path (relaxed read-modify-writes).
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    /// Sum of batch fills, for mean-fill reporting.
+    fill_sum: AtomicU64,
+    /// Batches dispatched but not yet retired.
+    inflight: AtomicU64,
+    max_inflight: AtomicU64,
+}
+
+/// A point-in-time copy of [`ServeCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub fill_sum: u64,
+    pub inflight: u64,
+    pub max_inflight: u64,
+}
+
+impl CounterSnapshot {
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.fill_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+impl ServeCounters {
+    pub fn new() -> ServeCounters {
+        ServeCounters::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A batch of `fill` requests was dispatched; bumps the in-flight
+    /// gauge and folds it into the high-water mark.
+    pub fn on_batch_dispatch(&self, fill: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.fill_sum.fetch_add(fill, Ordering::Relaxed);
+        let now = self.inflight.fetch_add(1, Ordering::AcqRel) + 1;
+        self.max_inflight.fetch_max(now, Ordering::AcqRel);
+    }
+
+    /// A batch retired; `completed` of its requests succeeded, `failed`
+    /// got an error reply.
+    pub fn on_batch_complete(&self, completed: u64, failed: u64) {
+        self.completed.fetch_add(completed, Ordering::Relaxed);
+        self.failed.fetch_add(failed, Ordering::Relaxed);
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Requests rejected before ever being dispatched (bad tensor, model
+    /// gone, pipeline torn down): failures only, no batch accounting.
+    pub fn on_failed(&self, n: u64) {
+        self.failed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            fill_sum: self.fill_sum.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Acquire),
+            max_inflight: self.max_inflight.load(Ordering::Acquire),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_accounting() {
+        let c = ServeCounters::new();
+        for _ in 0..5 {
+            c.on_submit();
+        }
+        c.on_batch_dispatch(3);
+        c.on_batch_dispatch(2);
+        assert_eq!(c.inflight(), 2);
+        c.on_batch_complete(3, 0);
+        c.on_batch_complete(1, 1);
+        let s = c.snapshot();
+        assert_eq!(s.submitted, 5);
+        assert_eq!(s.completed, 4);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.inflight, 0);
+        assert_eq!(s.max_inflight, 2);
+        assert!((s.mean_batch_fill() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn high_water_mark_survives_drain() {
+        let c = ServeCounters::new();
+        for _ in 0..4 {
+            c.on_batch_dispatch(1);
+        }
+        for _ in 0..4 {
+            c.on_batch_complete(1, 0);
+        }
+        assert_eq!(c.inflight(), 0);
+        assert_eq!(c.snapshot().max_inflight, 4);
+    }
+
+    #[test]
+    fn rejected_requests_do_not_touch_batch_gauges() {
+        let c = ServeCounters::new();
+        c.on_failed(3);
+        let s = c.snapshot();
+        assert_eq!(s.failed, 3);
+        assert_eq!((s.batches, s.inflight, s.max_inflight), (0, 0, 0));
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = ServeCounters::new().snapshot();
+        assert_eq!(s, CounterSnapshot::default());
+        assert_eq!(s.mean_batch_fill(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_updates_do_not_lose_counts() {
+        use std::sync::Arc;
+        let c = Arc::new(ServeCounters::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.on_submit();
+                        c.on_batch_dispatch(1);
+                        c.on_batch_complete(1, 0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = c.snapshot();
+        assert_eq!(s.submitted, 4000);
+        assert_eq!(s.completed, 4000);
+        assert_eq!(s.batches, 4000);
+        assert_eq!(s.inflight, 0);
+    }
+}

@@ -1,7 +1,12 @@
-//! Measurement and reporting utilities for the paper-style tables.
+//! Measurement and reporting utilities: the log2-bucketed latency
+//! [`Histogram`] and paper-style [`Table`] rendering, plus the lock-free
+//! [`ServeCounters`] the async serving pipeline shares across its submit,
+//! batcher and completer threads.
 
+pub mod counters;
 pub mod histogram;
 pub mod report;
 
+pub use counters::{CounterSnapshot, ServeCounters};
 pub use histogram::Histogram;
 pub use report::Table;

@@ -171,6 +171,12 @@ impl ReconfigManager {
         Ok(candidates[victim].region_id)
     }
 
+    /// Forward a queued-demand hint from the serving layer to the policy
+    /// (see `EvictionPolicy::on_demand`). No-op for demand-blind policies.
+    pub fn demand_hint(&mut self, role: RoleId, queued: u64) {
+        self.policy.on_demand(role, queued);
+    }
+
     /// ICAP accounting passthrough (total modeled reconfiguration time).
     pub fn icap(&self) -> &Icap {
         &self.icap
@@ -278,6 +284,26 @@ mod tests {
         m.ensure_loaded(&a).unwrap();
         assert_eq!(m.stats().reconfig_us_total, 1); // 1000 B / 1000 B-per-µs
         assert_eq!(m.icap().total_reconfigs(), 1);
+    }
+
+    #[test]
+    fn demand_hint_steers_queue_aware_eviction() {
+        let mut m = ReconfigManager::with_uniform_regions(
+            2,
+            ResourceVector::new(100, 100, 10, 10),
+            Box::new(crate::reconfig::policy::QueueAwareLru::new()),
+            Icap::new(1000.0, 0),
+        );
+        let (a, b, c) = (bs("a"), bs("b"), bs("c"));
+        m.ensure_loaded(&a).unwrap();
+        m.ensure_loaded(&b).unwrap();
+        // a is the LRU victim, but the batcher has requests queued on it.
+        m.demand_hint(a.id, 5);
+        match m.ensure_loaded(&c).unwrap() {
+            LoadOutcome::Miss { evicted: Some(victim), .. } => assert_eq!(victim, b.id),
+            o => panic!("expected eviction, got {o:?}"),
+        }
+        assert!(m.region_of(a.id).is_some(), "demanded role stays resident");
     }
 
     #[test]

@@ -3,10 +3,15 @@
 //! The policy sees a read-only view of every *occupied* region (metadata
 //! only — resident role, load tick, last-use tick) and picks the victim.
 //! LRU is the paper's scheme; the others exist for the ablation bench
-//! (`cargo bench --bench ablations`).
+//! (`cargo bench --bench ablations`). [`QueueAwareLru`] extends LRU with
+//! *queued-demand hints* from the serving batcher: a role with requests
+//! waiting in the micro-batch queues is spared even if it is the least
+//! recently *dispatched* — under async serving, "recently used" lags
+//! "about to be used" by a whole pipeline depth.
 
 use crate::fpga::bitstream::RoleId;
 use crate::util::prng::Rng;
+use std::collections::HashMap;
 
 /// Metadata the policy may inspect per candidate region.
 #[derive(Debug, Clone, Copy)]
@@ -23,6 +28,10 @@ pub trait EvictionPolicy: Send {
     fn pick_victim(&mut self, candidates: &[RegionView]) -> usize;
     /// Observation hook: a role was dispatched (Belady consumes its trace).
     fn on_access(&mut self, _role: RoleId) {}
+    /// Demand hook: the serving layer reports that `queued` requests are
+    /// currently waiting on `role` (0 clears the hint). Policies that do
+    /// not model queued demand ignore it.
+    fn on_demand(&mut self, _role: RoleId, _queued: u64) {}
 }
 
 /// Least-recently-used — the paper's shipped policy.
@@ -146,6 +155,50 @@ impl EvictionPolicy for BeladyOracle {
     }
 }
 
+/// LRU extended with queued-demand awareness (async serving).
+///
+/// Victim selection is two-level: first prefer roles with *no* queued
+/// demand, then break ties by least-recent use. A role the batcher has
+/// requests queued for is only evicted when every candidate has demand
+/// (in which case the least-demanded goes — it will be reloaded latest).
+#[derive(Debug, Default)]
+pub struct QueueAwareLru {
+    demand: HashMap<RoleId, u64>,
+}
+
+impl QueueAwareLru {
+    pub fn new() -> QueueAwareLru {
+        QueueAwareLru::default()
+    }
+
+    fn demand_for(&self, role: RoleId) -> u64 {
+        self.demand.get(&role).copied().unwrap_or(0)
+    }
+}
+
+impl EvictionPolicy for QueueAwareLru {
+    fn name(&self) -> &'static str {
+        "queue-aware"
+    }
+
+    fn on_demand(&mut self, role: RoleId, queued: u64) {
+        if queued == 0 {
+            self.demand.remove(&role);
+        } else {
+            self.demand.insert(role, queued);
+        }
+    }
+
+    fn pick_victim(&mut self, candidates: &[RegionView]) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, c)| (self.demand_for(c.role), c.last_used_tick))
+            .map(|(i, _)| i)
+            .expect("pick_victim on empty candidate set")
+    }
+}
+
 /// Name-indexed construction for CLI/bench parameter sweeps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PolicyKind {
@@ -153,6 +206,7 @@ pub enum PolicyKind {
     Mru,
     Fifo,
     Random,
+    QueueAware,
 }
 
 impl PolicyKind {
@@ -162,6 +216,7 @@ impl PolicyKind {
             PolicyKind::Mru => Box::new(Mru),
             PolicyKind::Fifo => Box::new(Fifo),
             PolicyKind::Random => Box::new(RandomEvict::new(seed)),
+            PolicyKind::QueueAware => Box::new(QueueAwareLru::new()),
         }
     }
 
@@ -171,12 +226,18 @@ impl PolicyKind {
             "mru" => Some(PolicyKind::Mru),
             "fifo" => Some(PolicyKind::Fifo),
             "random" => Some(PolicyKind::Random),
+            "queue-aware" => Some(PolicyKind::QueueAware),
             _ => None,
         }
     }
 
-    pub const ALL: [PolicyKind; 4] =
-        [PolicyKind::Lru, PolicyKind::Mru, PolicyKind::Fifo, PolicyKind::Random];
+    pub const ALL: [PolicyKind; 5] = [
+        PolicyKind::Lru,
+        PolicyKind::Mru,
+        PolicyKind::Fifo,
+        PolicyKind::Random,
+        PolicyKind::QueueAware,
+    ];
 }
 
 #[cfg(test)]
@@ -250,6 +311,28 @@ mod tests {
         // a recurs, b never does.
         let cands = [view(0, 1, 0, 0), view(1, 2, 0, 1)];
         assert_eq!(p.pick_victim(&cands), 1);
+    }
+
+    #[test]
+    fn queue_aware_spares_roles_with_demand() {
+        let mut p = QueueAwareLru::new();
+        // Role 1 is LRU-coldest but has queued requests; role 2 is warm but
+        // idle — the idle one goes.
+        p.on_demand(RoleId(1), 4);
+        let c = [view(0, 1, 0, 1), view(1, 2, 0, 9)];
+        assert_eq!(p.pick_victim(&c), 1, "demand outranks recency");
+        // Hint cleared: falls back to plain LRU.
+        p.on_demand(RoleId(1), 0);
+        assert_eq!(p.pick_victim(&c), 0);
+    }
+
+    #[test]
+    fn queue_aware_all_demanded_evicts_least_demanded() {
+        let mut p = QueueAwareLru::new();
+        p.on_demand(RoleId(1), 8);
+        p.on_demand(RoleId(2), 2);
+        let c = [view(0, 1, 0, 1), view(1, 2, 0, 9)];
+        assert_eq!(p.pick_victim(&c), 1, "fewest queued requests goes");
     }
 
     #[test]

@@ -6,6 +6,14 @@
 //! thread-safe [`pjrt::PjrtHandle`]. [`artifact`] reads the
 //! `artifacts/manifest.json` the Python AOT step writes and loads each
 //! module's HLO text.
+//!
+//! This layer is *optional at runtime and at build time*: without the
+//! `pjrt` cargo feature (or when the XLA client fails to come up, or no
+//! artifacts exist) the session binds every role to its native Rust
+//! kernel instead — same numerics, no PJRT round-trip — so the serving
+//! path and all tier-1 tests run on a toolchain-only machine. Requests
+//! flow `serve → tf::session → hsa queue → fpga agent → (pjrt | native)`;
+//! only that last hop changes.
 
 pub mod artifact;
 pub mod pjrt;

@@ -5,15 +5,18 @@
 //! Loading a module follows the AOT recipe from /opt/xla-example:
 //! HLO *text* → `HloModuleProto::from_text_file` → `XlaComputation` →
 //! `client.compile` → execute with `Literal` inputs, unwrap the 1-tuple.
+//!
+//! The XLA backend is compiled only with the `pjrt` cargo feature (the
+//! `xla` crate needs native XLA libraries that are not in the offline
+//! vendor set). Without the feature, [`PjrtService::start`] returns an
+//! error and the session falls back to native-kernel numerics — the same
+//! math, minus the artifact round-trip.
 
 use crate::hsa::error::{HsaError, Result};
-use crate::runtime::artifact::{ModuleMeta, TensorMeta};
-use crate::tf::dtype::DType;
+use crate::runtime::artifact::ModuleMeta;
 use crate::tf::tensor::Tensor;
-use std::collections::HashMap;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 enum Request {
     Load {
@@ -46,16 +49,22 @@ pub struct PjrtService {
 
 impl PjrtService {
     /// Start the service thread and bring up the PJRT CPU client on it.
+    ///
+    /// Errors when the `pjrt` feature is not compiled in, or when the XLA
+    /// client fails to initialize.
     pub fn start() -> Result<PjrtService> {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
         let worker = std::thread::Builder::new()
             .name("pjrt-exec".into())
-            .spawn(move || service_main(rx, ready_tx))
+            .spawn(move || backend::service_main(rx, ready_tx))
             .map_err(|e| HsaError::Runtime(format!("spawn pjrt thread: {e}")))?;
         match ready_rx.recv() {
             Ok(Ok(())) => {}
-            Ok(Err(e)) => return Err(e),
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                return Err(e);
+            }
             Err(_) => return Err(HsaError::Runtime("pjrt thread died at startup".into())),
         }
         Ok(PjrtService { handle: PjrtHandle { tx }, worker: Some(worker) })
@@ -109,144 +118,181 @@ impl PjrtHandle {
     }
 }
 
-struct LoadedModule {
-    exe: xla::PjRtLoadedExecutable,
-    meta: ModuleMeta,
-}
+/// The real XLA-backed service loop.
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::Request;
+    use crate::hsa::error::{HsaError, Result};
+    use crate::runtime::artifact::{ModuleMeta, TensorMeta};
+    use crate::tf::dtype::DType;
+    use crate::tf::tensor::Tensor;
+    use std::collections::HashMap;
+    use std::sync::mpsc;
+    use std::time::Instant;
 
-fn service_main(rx: mpsc::Receiver<Request>, ready: mpsc::SyncSender<Result<()>>) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => {
-            let _ = ready.send(Ok(()));
-            c
-        }
-        Err(e) => {
-            let _ = ready.send(Err(HsaError::Runtime(format!("PjRtClient::cpu: {e}"))));
-            return;
-        }
-    };
-    let mut modules: HashMap<String, LoadedModule> = HashMap::new();
+    struct LoadedModule {
+        exe: xla::PjRtLoadedExecutable,
+        meta: ModuleMeta,
+    }
 
-    while let Ok(req) = rx.recv() {
-        match req {
-            Request::Load { meta, reply } => {
-                let t0 = Instant::now();
-                let res = load_module(&client, &meta).map(|lm| {
-                    modules.insert(meta.name.clone(), lm);
-                    t0.elapsed().as_micros()
-                });
-                let _ = reply.send(res);
+    pub(super) fn service_main(
+        rx: mpsc::Receiver<Request>,
+        ready: mpsc::SyncSender<Result<()>>,
+    ) {
+        let client = match xla::PjRtClient::cpu() {
+            Ok(c) => {
+                let _ = ready.send(Ok(()));
+                c
             }
-            Request::Execute { module, inputs, reply } => {
-                let res = match modules.get(&module) {
-                    Some(lm) => execute_module(lm, &inputs),
-                    None => Err(HsaError::Runtime(format!("module '{module}' not loaded"))),
-                };
-                let _ = reply.send(res);
+            Err(e) => {
+                let _ = ready.send(Err(HsaError::Runtime(format!("PjRtClient::cpu: {e}"))));
+                return;
             }
-            Request::List { reply } => {
-                let mut names: Vec<String> = modules.keys().cloned().collect();
-                names.sort();
-                let _ = reply.send(names);
+        };
+        let mut modules: HashMap<String, LoadedModule> = HashMap::new();
+
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::Load { meta, reply } => {
+                    let t0 = Instant::now();
+                    let res = load_module(&client, &meta).map(|lm| {
+                        modules.insert(meta.name.clone(), lm);
+                        t0.elapsed().as_micros()
+                    });
+                    let _ = reply.send(res);
+                }
+                Request::Execute { module, inputs, reply } => {
+                    let res = match modules.get(&module) {
+                        Some(lm) => execute_module(lm, &inputs),
+                        None => {
+                            Err(HsaError::Runtime(format!("module '{module}' not loaded")))
+                        }
+                    };
+                    let _ = reply.send(res);
+                }
+                Request::List { reply } => {
+                    let mut names: Vec<String> = modules.keys().cloned().collect();
+                    names.sort();
+                    let _ = reply.send(names);
+                }
+                Request::Shutdown => break,
             }
-            Request::Shutdown => break,
         }
     }
-}
 
-fn load_module(client: &xla::PjRtClient, meta: &ModuleMeta) -> Result<LoadedModule> {
-    let path = meta
-        .hlo_path
-        .to_str()
-        .ok_or_else(|| HsaError::Runtime("non-utf8 artifact path".into()))?;
-    let proto = xla::HloModuleProto::from_text_file(path)
-        .map_err(|e| HsaError::Runtime(format!("parse {path}: {e}")))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    let exe = client
-        .compile(&comp)
-        .map_err(|e| HsaError::Runtime(format!("compile {}: {e}", meta.name)))?;
-    Ok(LoadedModule { exe, meta: meta.clone() })
-}
-
-fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let bytes: Vec<u8> = match t.dtype() {
-        DType::F32 => t.as_f32()?.iter().flat_map(|v| v.to_le_bytes()).collect(),
-        DType::I16 => t.as_i16()?.iter().flat_map(|v| v.to_le_bytes()).collect(),
-        DType::I32 => t.as_i32()?.iter().flat_map(|v| v.to_le_bytes()).collect(),
-    };
-    let ty = match t.dtype() {
-        DType::F32 => xla::ElementType::F32,
-        DType::I16 => xla::ElementType::S16,
-        DType::I32 => xla::ElementType::S32,
-    };
-    xla::Literal::create_from_shape_and_untyped_data(ty, t.shape(), &bytes)
-        .map_err(|e| HsaError::Runtime(format!("literal: {e}")))
-}
-
-fn literal_to_tensor(lit: &xla::Literal, meta: &TensorMeta) -> Result<Tensor> {
-    let out = match meta.dtype {
-        DType::F32 => Tensor::from_f32(
-            &meta.shape,
-            lit.to_vec::<f32>()
-                .map_err(|e| HsaError::Runtime(format!("to_vec f32: {e}")))?,
-        )?,
-        DType::I16 => Tensor::from_i16(
-            &meta.shape,
-            lit.to_vec::<i16>()
-                .map_err(|e| HsaError::Runtime(format!("to_vec i16: {e}")))?,
-        )?,
-        DType::I32 => Tensor::from_i32(
-            &meta.shape,
-            lit.to_vec::<i32>()
-                .map_err(|e| HsaError::Runtime(format!("to_vec i32: {e}")))?,
-        )?,
-    };
-    Ok(out)
-}
-
-fn execute_module(lm: &LoadedModule, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-    // Validate the signature before touching PJRT: clearer errors.
-    if inputs.len() != lm.meta.inputs.len() {
-        return Err(HsaError::Runtime(format!(
-            "module '{}' expects {} inputs, got {}",
-            lm.meta.name,
-            lm.meta.inputs.len(),
-            inputs.len()
-        )));
+    fn load_module(client: &xla::PjRtClient, meta: &ModuleMeta) -> Result<LoadedModule> {
+        let path = meta
+            .hlo_path
+            .to_str()
+            .ok_or_else(|| HsaError::Runtime("non-utf8 artifact path".into()))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| HsaError::Runtime(format!("parse {path}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| HsaError::Runtime(format!("compile {}: {e}", meta.name)))?;
+        Ok(LoadedModule { exe, meta: meta.clone() })
     }
-    for (t, m) in inputs.iter().zip(&lm.meta.inputs) {
-        if t.shape() != m.shape.as_slice() || t.dtype() != m.dtype {
+
+    fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let bytes: Vec<u8> = match t.dtype() {
+            DType::F32 => t.as_f32()?.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            DType::I16 => t.as_i16()?.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            DType::I32 => t.as_i32()?.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        };
+        let ty = match t.dtype() {
+            DType::F32 => xla::ElementType::F32,
+            DType::I16 => xla::ElementType::S16,
+            DType::I32 => xla::ElementType::S32,
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, t.shape(), &bytes)
+            .map_err(|e| HsaError::Runtime(format!("literal: {e}")))
+    }
+
+    fn literal_to_tensor(lit: &xla::Literal, meta: &TensorMeta) -> Result<Tensor> {
+        let out = match meta.dtype {
+            DType::F32 => Tensor::from_f32(
+                &meta.shape,
+                lit.to_vec::<f32>()
+                    .map_err(|e| HsaError::Runtime(format!("to_vec f32: {e}")))?,
+            )?,
+            DType::I16 => Tensor::from_i16(
+                &meta.shape,
+                lit.to_vec::<i16>()
+                    .map_err(|e| HsaError::Runtime(format!("to_vec i16: {e}")))?,
+            )?,
+            DType::I32 => Tensor::from_i32(
+                &meta.shape,
+                lit.to_vec::<i32>()
+                    .map_err(|e| HsaError::Runtime(format!("to_vec i32: {e}")))?,
+            )?,
+        };
+        Ok(out)
+    }
+
+    fn execute_module(lm: &LoadedModule, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        // Validate the signature before touching PJRT: clearer errors.
+        if inputs.len() != lm.meta.inputs.len() {
             return Err(HsaError::Runtime(format!(
-                "module '{}' input '{}': expected {:?} {}, got {:?} {}",
+                "module '{}' expects {} inputs, got {}",
                 lm.meta.name,
-                m.name,
-                m.shape,
-                m.dtype,
-                t.shape(),
-                t.dtype()
+                lm.meta.inputs.len(),
+                inputs.len()
             )));
         }
-    }
+        for (t, m) in inputs.iter().zip(&lm.meta.inputs) {
+            if t.shape() != m.shape.as_slice() || t.dtype() != m.dtype {
+                return Err(HsaError::Runtime(format!(
+                    "module '{}' input '{}': expected {:?} {}, got {:?} {}",
+                    lm.meta.name,
+                    m.name,
+                    m.shape,
+                    m.dtype,
+                    t.shape(),
+                    t.dtype()
+                )));
+            }
+        }
 
-    let lits: Vec<xla::Literal> =
-        inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
-    let bufs = lm
-        .exe
-        .execute::<xla::Literal>(&lits)
-        .map_err(|e| HsaError::Runtime(format!("execute {}: {e}", lm.meta.name)))?;
-    let lit = bufs[0][0]
-        .to_literal_sync()
-        .map_err(|e| HsaError::Runtime(format!("to_literal: {e}")))?;
-    let lit = if lm.meta.tuple_output {
-        lit.to_tuple1()
-            .map_err(|e| HsaError::Runtime(format!("to_tuple1: {e}")))?
-    } else {
-        lit
-    };
-    Ok(vec![literal_to_tensor(&lit, &lm.meta.output)?])
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let bufs = lm
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| HsaError::Runtime(format!("execute {}: {e}", lm.meta.name)))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| HsaError::Runtime(format!("to_literal: {e}")))?;
+        let lit = if lm.meta.tuple_output {
+            lit.to_tuple1()
+                .map_err(|e| HsaError::Runtime(format!("to_tuple1: {e}")))?
+        } else {
+            lit
+        };
+        Ok(vec![literal_to_tensor(&lit, &lm.meta.output)?])
+    }
 }
 
-#[cfg(test)]
+/// Featureless stub: report at startup that PJRT is unavailable. The
+/// session treats this as "no PJRT" and binds roles to native kernels.
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::Request;
+    use crate::hsa::error::{HsaError, Result};
+    use std::sync::mpsc;
+
+    pub(super) fn service_main(
+        rx: mpsc::Receiver<Request>,
+        ready: mpsc::SyncSender<Result<()>>,
+    ) {
+        drop(rx);
+        let _ = ready.send(Err(HsaError::Runtime(
+            "PJRT backend not compiled in (enable the `pjrt` cargo feature)".into(),
+        )));
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     // PJRT service tests that need real artifacts live in
     // rust/tests/integration_runtime.rs (gated on artifacts/ existing).
@@ -263,5 +309,16 @@ mod tests {
     fn list_initially_empty() {
         let svc = PjrtService::start().expect("pjrt client");
         assert!(svc.handle().loaded_modules().is_empty());
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_reports_missing_backend() {
+        let err = PjrtService::start().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -1,0 +1,618 @@
+//! The asynchronous batched serving pipeline — the production request
+//! path.
+//!
+//! Where [`super::server::InferenceServer`] runs lock-step (one batch
+//! dispatched, *waited on*, and delivered before the next is formed), this
+//! server decouples the three stages so they overlap:
+//!
+//! ```text
+//! clients ──▶ submit queue ──▶ batcher thread ──▶ AQL queue (multi-
+//!             (mpsc)           per-model lanes,    processor: kernels
+//!                              size/deadline       run concurrently
+//!                              flush,              across PR regions)
+//!                              run_async ──▶ in-flight channel (bounded =
+//!                                            pipeline depth, backpressure)
+//!                                               │
+//!                              completer pool ◀─┘  wait on completion
+//!                              signals, deliver rows to each caller's
+//!                              reply channel — in whatever order batches
+//!                              retire
+//! ```
+//!
+//! The batcher never blocks on kernel execution: `Session::run_async`
+//! returns as soon as the packet is enqueued, so while batch *n* computes,
+//! batch *n+1* is being formed and batch *n-1*'s replies are being
+//! delivered. Before each dispatch the batcher publishes per-kernel queue
+//! depths to the FPGA eviction policy ([`Session::hint_demand`]), so a
+//! `queue-aware` policy won't evict a role the queues are about to need.
+
+use crate::hsa::error::{HsaError, Result};
+use crate::metrics::counters::ServeCounters;
+use crate::metrics::histogram::Histogram;
+use crate::serve::batcher::{BatchPolicy, Batcher};
+use crate::tf::dtype::DType;
+use crate::tf::graph::{Graph, OpKind};
+use crate::tf::session::{PendingRun, Session, SessionOptions};
+use crate::tf::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// MNIST image size (flattened 28×28), the input width of every model.
+const IMAGE_ELEMS: usize = 784;
+/// Logits per request.
+const LOGIT_ELEMS: usize = 10;
+
+/// One served model: a name and its micro-batching policy. Each model
+/// gets its own graph subtree (`{name}/x` → `{name}/logits`), batch lane
+/// and compiled batch dimension (`batch.max_batch`).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub batch: BatchPolicy,
+}
+
+impl ModelSpec {
+    pub fn new(name: impl Into<String>, batch: BatchPolicy) -> ModelSpec {
+        ModelSpec { name: name.into(), batch }
+    }
+}
+
+/// Async server configuration.
+pub struct AsyncServerConfig {
+    pub models: Vec<ModelSpec>,
+    pub session: SessionOptions,
+    /// Max batches in flight past the batcher (bounded in-flight channel +
+    /// completer pool size). The batcher blocks when the pipeline is full —
+    /// the serving-side backpressure.
+    pub pipeline_depth: usize,
+}
+
+impl Default for AsyncServerConfig {
+    fn default() -> Self {
+        AsyncServerConfig {
+            models: vec![ModelSpec::new("mnist", BatchPolicy::default())],
+            session: SessionOptions { dispatch_workers: 2, ..Default::default() },
+            pipeline_depth: 4,
+        }
+    }
+}
+
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    reply: mpsc::SyncSender<Result<Vec<f32>>>,
+}
+
+/// Per-model constants the batcher thread needs at flush time.
+struct ModelInfo {
+    max_batch: usize,
+    x_name: String,
+    logits_name: String,
+    kernel: String,
+}
+
+/// A dispatched batch travelling from the batcher to a completer.
+struct InFlight {
+    reqs: Vec<Request>,
+    pending: PendingRun,
+}
+
+struct StatsInner {
+    latency: Histogram,
+}
+
+/// Aggregate statistics of the async pipeline.
+#[derive(Debug, Clone)]
+pub struct AsyncServeReport {
+    pub requests: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_batch_fill: f64,
+    /// High-water mark of batches simultaneously in flight — >1 proves
+    /// the pipeline actually overlapped dispatches.
+    pub max_inflight: u64,
+    pub latency_us_p50: u64,
+    pub latency_us_p99: u64,
+    pub latency_us_mean: f64,
+    pub reconfig: crate::reconfig::manager::ReconfigStats,
+}
+
+/// A running asynchronous inference server.
+pub struct AsyncInferenceServer {
+    tx: mpsc::Sender<Option<(String, Request)>>,
+    batcher: Option<JoinHandle<()>>,
+    completers: Vec<JoinHandle<()>>,
+    session: Arc<Session>,
+    stats: Arc<Mutex<StatsInner>>,
+    counters: Arc<ServeCounters>,
+    models: Vec<String>,
+}
+
+impl AsyncInferenceServer {
+    /// Build one session hosting every model's subgraph and start the
+    /// batcher thread plus `pipeline_depth` completer threads.
+    pub fn start(config: AsyncServerConfig) -> Result<AsyncInferenceServer> {
+        if config.models.is_empty() {
+            return Err(HsaError::Runtime("no models configured".into()));
+        }
+        let mut g = Graph::new();
+        let mut infos: HashMap<String, ModelInfo> = HashMap::new();
+        let mut lanes = Batcher::new();
+        for spec in &config.models {
+            if infos.contains_key(&spec.name) {
+                return Err(HsaError::Runtime(format!(
+                    "duplicate model '{}'",
+                    spec.name
+                )));
+            }
+            let x_name = format!("{}/x", spec.name);
+            let logits_name = format!("{}/logits", spec.name);
+            let x = g.placeholder(
+                x_name.clone(),
+                &[spec.batch.max_batch, 1, 28, 28],
+                DType::F32,
+            )?;
+            g.add(logits_name.clone(), OpKind::MnistCnn, &[x])?;
+            infos.insert(
+                spec.name.clone(),
+                ModelInfo {
+                    max_batch: spec.batch.max_batch,
+                    x_name,
+                    logits_name,
+                    kernel: OpKind::MnistCnn.kernel_name().unwrap(),
+                },
+            );
+            lanes.add_model(spec.name.clone(), spec.batch);
+        }
+        let session = Arc::new(Session::new(g, config.session)?);
+
+        let depth = config.pipeline_depth.max(1);
+        let (tx, submit_rx) = mpsc::channel::<Option<(String, Request)>>();
+        let (inflight_tx, inflight_rx) = mpsc::sync_channel::<InFlight>(depth);
+        let inflight_rx = Arc::new(Mutex::new(inflight_rx));
+        let stats = Arc::new(Mutex::new(StatsInner { latency: Histogram::new() }));
+        let counters = Arc::new(ServeCounters::new());
+
+        let batcher = {
+            let session = Arc::clone(&session);
+            let counters = Arc::clone(&counters);
+            std::thread::Builder::new()
+                .name("serve-batcher".into())
+                .spawn(move || {
+                    batcher_loop(submit_rx, inflight_tx, session, counters, lanes, infos)
+                })
+                .map_err(|e| HsaError::Runtime(format!("spawn batcher: {e}")))?
+        };
+        let completers = (0..depth)
+            .map(|i| {
+                let rx = Arc::clone(&inflight_rx);
+                let stats = Arc::clone(&stats);
+                let counters = Arc::clone(&counters);
+                std::thread::Builder::new()
+                    .name(format!("serve-completer-{i}"))
+                    .spawn(move || completer_loop(rx, stats, counters))
+                    .map_err(|e| HsaError::Runtime(format!("spawn completer: {e}")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(AsyncInferenceServer {
+            tx,
+            batcher: Some(batcher),
+            completers,
+            session,
+            stats,
+            counters,
+            models: config.models.iter().map(|m| m.name.clone()).collect(),
+        })
+    }
+
+    /// Submit one image to `model`; blocks until its logits are ready.
+    pub fn infer(&self, model: &str, image: Vec<f32>) -> Result<Vec<f32>> {
+        let rx = self.infer_async(model, image)?;
+        rx.recv().map_err(|_| HsaError::Runtime("server dropped request".into()))?
+    }
+
+    /// Non-blocking submit: returns a receiver that yields the logits
+    /// whenever the request's batch retires (completion order, not
+    /// submission order).
+    pub fn infer_async(
+        &self,
+        model: &str,
+        image: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        if !self.models.iter().any(|m| m == model) {
+            return Err(HsaError::Runtime(format!("unknown model '{model}'")));
+        }
+        if image.len() != IMAGE_ELEMS {
+            return Err(HsaError::Runtime(format!(
+                "image must be {IMAGE_ELEMS} floats, got {}",
+                image.len()
+            )));
+        }
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.counters.on_submit();
+        self.tx
+            .send(Some((
+                model.to_string(),
+                Request { image, enqueued: Instant::now(), reply },
+            )))
+            .map_err(|_| HsaError::Runtime("server stopped".into()))?;
+        Ok(rx)
+    }
+
+    pub fn report(&self) -> AsyncServeReport {
+        let c = self.counters.snapshot();
+        let s = self.stats.lock().unwrap();
+        AsyncServeReport {
+            requests: c.submitted,
+            completed: c.completed,
+            failed: c.failed,
+            batches: c.batches,
+            mean_batch_fill: c.mean_batch_fill(),
+            max_inflight: c.max_inflight,
+            latency_us_p50: s.latency.quantile(0.50),
+            latency_us_p99: s.latency.quantile(0.99),
+            latency_us_mean: s.latency.mean(),
+            reconfig: self.session.reconfig_stats(),
+        }
+    }
+
+    /// Drain the pipeline (queued lanes flush, in-flight batches retire,
+    /// replies deliver), then stop every thread and shut the session down.
+    pub fn stop(&mut self) {
+        let _ = self.tx.send(None);
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        // The batcher dropped its in-flight sender: completers finish the
+        // remaining batches and exit on the closed channel.
+        for c in self.completers.drain(..) {
+            let _ = c.join();
+        }
+        self.session.shutdown();
+    }
+}
+
+impl Drop for AsyncInferenceServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+enum Msg {
+    Req(String, Request),
+    Tick,
+    Stop,
+}
+
+fn batcher_loop(
+    rx: mpsc::Receiver<Option<(String, Request)>>,
+    inflight_tx: mpsc::SyncSender<InFlight>,
+    session: Arc<Session>,
+    counters: Arc<ServeCounters>,
+    mut lanes: Batcher<Request>,
+    infos: HashMap<String, ModelInfo>,
+) {
+    loop {
+        let msg = match lanes.next_deadline() {
+            None => match rx.recv() {
+                Ok(Some((m, r))) => Msg::Req(m, r),
+                Ok(None) | Err(_) => Msg::Stop,
+            },
+            Some(left) => match rx.recv_timeout(left.max(Duration::from_micros(50))) {
+                Ok(Some((m, r))) => Msg::Req(m, r),
+                Ok(None) => Msg::Stop,
+                Err(mpsc::RecvTimeoutError::Timeout) => Msg::Tick,
+                Err(mpsc::RecvTimeoutError::Disconnected) => Msg::Stop,
+            },
+        };
+        match msg {
+            Msg::Req(model, req) => {
+                // Unknown models were rejected at submit; push cannot fail.
+                let _ = lanes.push(&model, req);
+                flush_ready(&mut lanes, &infos, &session, &counters, &inflight_tx);
+            }
+            Msg::Tick => {
+                flush_ready(&mut lanes, &infos, &session, &counters, &inflight_tx);
+            }
+            Msg::Stop => {
+                for (model, reqs) in lanes.drain() {
+                    dispatch(&model, reqs, &infos, &session, &counters, &inflight_tx);
+                }
+                // Lanes are empty now; clear any outstanding demand hints.
+                publish_demand(&lanes, &infos, &session);
+                break;
+            }
+        }
+    }
+    // inflight_tx drops here; completers drain and exit.
+}
+
+/// Flush every due lane. Demand hints are published before the flush (so
+/// the policy sees what is about to be dispatched while the dispatches
+/// reconfigure) and re-published after it — the second pass reports the
+/// drained lanes as 0, clearing stale hints so an idle role does not stay
+/// artificially protected forever.
+fn flush_ready(
+    lanes: &mut Batcher<Request>,
+    infos: &HashMap<String, ModelInfo>,
+    session: &Arc<Session>,
+    counters: &Arc<ServeCounters>,
+    inflight_tx: &mpsc::SyncSender<InFlight>,
+) {
+    publish_demand(lanes, infos, session);
+    let mut flushed = false;
+    while let Some((model, reqs)) = lanes.ready() {
+        dispatch(&model, reqs, infos, session, counters, inflight_tx);
+        flushed = true;
+    }
+    if flushed {
+        publish_demand(lanes, infos, session);
+    }
+}
+
+/// Aggregate lane depths per kernel and hand them to the FPGA policy.
+fn publish_demand(
+    lanes: &Batcher<Request>,
+    infos: &HashMap<String, ModelInfo>,
+    session: &Session,
+) {
+    let mut per_kernel: HashMap<&str, u64> = HashMap::new();
+    for (model, queued) in lanes.queued_by_model() {
+        if let Some(info) = infos.get(&model) {
+            *per_kernel.entry(info.kernel.as_str()).or_insert(0) += queued as u64;
+        }
+    }
+    for (kernel, queued) in per_kernel {
+        session.hint_demand(kernel, queued);
+    }
+}
+
+fn dispatch(
+    model: &str,
+    reqs: Vec<Request>,
+    infos: &HashMap<String, ModelInfo>,
+    session: &Arc<Session>,
+    counters: &Arc<ServeCounters>,
+    inflight_tx: &mpsc::SyncSender<InFlight>,
+) {
+    let info = match infos.get(model) {
+        Some(i) => i,
+        None => {
+            fail_all(reqs, "model vanished", counters);
+            return;
+        }
+    };
+    // Pad the final partial batch to the compiled batch dimension.
+    let mut data = vec![0f32; info.max_batch * IMAGE_ELEMS];
+    for (i, r) in reqs.iter().enumerate() {
+        data[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].copy_from_slice(&r.image);
+    }
+    let x = match Tensor::from_f32(&[info.max_batch, 1, 28, 28], data) {
+        Ok(t) => t,
+        Err(e) => {
+            fail_all(reqs, &e.to_string(), counters);
+            return;
+        }
+    };
+    match session.run_async(&[(info.x_name.as_str(), x)], &[info.logits_name.as_str()]) {
+        Ok(pending) => {
+            counters.on_batch_dispatch(reqs.len() as u64);
+            // Blocks while `pipeline_depth` batches are already in flight
+            // — the pipeline's backpressure point.
+            if let Err(mpsc::SendError(inf)) =
+                inflight_tx.send(InFlight { reqs, pending })
+            {
+                // Completers are gone (server tearing down mid-dispatch).
+                counters.on_batch_complete(0, inf.reqs.len() as u64);
+                fail_requests(inf.reqs, "server stopped");
+            }
+        }
+        Err(e) => fail_all(reqs, &e.to_string(), counters),
+    }
+}
+
+/// Reject a batch that never entered the pipeline: counts only failures,
+/// leaving the batch/fill/in-flight gauges untouched.
+fn fail_all(reqs: Vec<Request>, msg: &str, counters: &Arc<ServeCounters>) {
+    counters.on_failed(reqs.len() as u64);
+    fail_requests(reqs, msg);
+}
+
+fn fail_requests(reqs: Vec<Request>, msg: &str) {
+    for r in reqs {
+        let _ = r.reply.send(Err(HsaError::Runtime(msg.to_string())));
+    }
+}
+
+fn completer_loop(
+    rx: Arc<Mutex<mpsc::Receiver<InFlight>>>,
+    stats: Arc<Mutex<StatsInner>>,
+    counters: Arc<ServeCounters>,
+) {
+    loop {
+        // Hold the receiver lock only for the handoff: while this thread
+        // waits on a completion signal, peers pick up other batches — this
+        // is what makes delivery completion-ordered.
+        let inf = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(inf) => inf,
+                Err(_) => break,
+            }
+        };
+        let n = inf.reqs.len();
+        let timeout = Some(crate::hsa::runtime::DISPATCH_TIMEOUT);
+        match inf.pending.wait(timeout).and_then(|outs| {
+            outs[0].as_f32().map(|v| v.to_vec()).map_err(HsaError::from)
+        }) {
+            Ok(logits) => {
+                // Account the batch *before* delivering replies, so a
+                // caller who reads `report()` right after its reply
+                // arrives sees itself counted.
+                {
+                    let mut s = stats.lock().unwrap();
+                    for r in &inf.reqs {
+                        s.latency.record(r.enqueued.elapsed().as_micros() as u64);
+                    }
+                }
+                counters.on_batch_complete(n as u64, 0);
+                for (i, r) in inf.reqs.into_iter().enumerate() {
+                    let row = logits[i * LOGIT_ELEMS..(i + 1) * LOGIT_ELEMS].to_vec();
+                    let _ = r.reply.send(Ok(row));
+                }
+            }
+            Err(e) => {
+                counters.on_batch_complete(0, n as u64);
+                fail_requests(inf.reqs, &e.to_string());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::server::{InferenceServer, ServerConfig};
+
+    fn policy(max_batch: usize, delay_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_delay: Duration::from_millis(delay_ms) }
+    }
+
+    fn single_model(max_batch: usize, delay_ms: u64, depth: usize) -> AsyncInferenceServer {
+        AsyncInferenceServer::start(AsyncServerConfig {
+            models: vec![ModelSpec::new("mnist", policy(max_batch, delay_ms))],
+            session: SessionOptions {
+                dispatch_workers: 2,
+                ..SessionOptions::native_only()
+            },
+            pipeline_depth: depth,
+        })
+        .expect("server")
+    }
+
+    #[test]
+    fn deadline_flush_serves_single_request() {
+        let mut srv = single_model(8, 5, 2);
+        let logits = srv.infer("mnist", vec![0.5; 784]).unwrap();
+        assert_eq!(logits.len(), 10);
+        let rep = srv.report();
+        assert_eq!(rep.requests, 1);
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.batches, 1, "partial batch flushed by deadline");
+        srv.stop();
+    }
+
+    #[test]
+    fn capacity_flush_batches_without_waiting_for_deadline() {
+        // Deadline far out: only the size trigger can flush.
+        let mut srv = single_model(8, 5_000, 4);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..16)
+            .map(|i| srv.infer_async("mnist", vec![i as f32 / 16.0; 784]).unwrap())
+            .collect();
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().unwrap().len(), 10);
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "size-triggered flush must not wait out the 5 s deadline"
+        );
+        let rep = srv.report();
+        assert_eq!(rep.requests, 16);
+        assert_eq!(rep.batches, 2, "16 requests = two full batches of 8");
+        assert!((rep.mean_batch_fill - 8.0).abs() < 1e-9, "{rep:?}");
+        srv.stop();
+    }
+
+    #[test]
+    fn out_of_order_completion_delivers_to_correct_callers() {
+        // Two models sharing weights: "slow" pads every batch to 32 images
+        // of compute, "fast" to 1 — so a fast batch dispatched *after* a
+        // slow one retires *before* it, and replies must still land on
+        // the right callers.
+        let mut srv = AsyncInferenceServer::start(AsyncServerConfig {
+            models: vec![
+                ModelSpec::new("slow", policy(32, 1)),
+                ModelSpec::new("fast", policy(1, 1)),
+            ],
+            session: SessionOptions {
+                dispatch_workers: 4,
+                ..SessionOptions::native_only()
+            },
+            pipeline_depth: 4,
+        })
+        .unwrap();
+
+        // Reference logits from the synchronous server (identical
+        // deterministic weights in every PJRT-free session).
+        let mut reference = InferenceServer::start(ServerConfig {
+            batch: policy(4, 2),
+            session: SessionOptions::native_only(),
+        })
+        .unwrap();
+        let images: Vec<Vec<f32>> =
+            (0..6).map(|i| vec![0.1 * (i + 1) as f32; 784]).collect();
+        let expected: Vec<Vec<f32>> =
+            images.iter().map(|im| reference.infer(im.clone()).unwrap()).collect();
+
+        // Interleave: slow model first, then a burst on the fast lane.
+        let slow_rx = srv.infer_async("slow", images[0].clone()).unwrap();
+        let fast_rxs: Vec<_> = images[1..]
+            .iter()
+            .map(|im| srv.infer_async("fast", im.clone()).unwrap())
+            .collect();
+        for (rx, want) in fast_rxs.into_iter().zip(&expected[1..]) {
+            let got = rx.recv().unwrap().unwrap();
+            assert_eq!(&got, want, "fast-lane reply crossed callers");
+        }
+        let got = slow_rx.recv().unwrap().unwrap();
+        assert_eq!(&got, &expected[0], "slow-lane reply crossed callers");
+        srv.stop();
+        reference.stop();
+    }
+
+    #[test]
+    fn pipeline_keeps_multiple_batches_in_flight() {
+        let mut srv = single_model(1, 1, 4);
+        let rxs: Vec<_> = (0..12)
+            .map(|i| srv.infer_async("mnist", vec![i as f32 / 12.0; 784]).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let rep = srv.report();
+        assert_eq!(rep.completed, 12);
+        assert_eq!(rep.batches, 12);
+        assert!(
+            rep.max_inflight >= 2,
+            "batch-1 burst should overlap dispatches: {rep:?}"
+        );
+        srv.stop();
+    }
+
+    #[test]
+    fn unknown_model_rejected_and_bad_image_rejected() {
+        let mut srv = single_model(4, 2, 2);
+        assert!(srv.infer("nope", vec![0.0; 784]).is_err());
+        assert!(srv.infer_async("mnist", vec![0.0; 100]).is_err());
+        srv.stop();
+    }
+
+    #[test]
+    fn stop_drains_queued_requests() {
+        let mut srv = single_model(32, 10_000, 2);
+        // Deadline far out and batch far from full: only stop() flushes.
+        let rxs: Vec<_> = (0..3)
+            .map(|i| srv.infer_async("mnist", vec![i as f32; 784]).unwrap())
+            .collect();
+        srv.stop();
+        for rx in rxs {
+            let logits = rx.recv().unwrap().unwrap();
+            assert_eq!(logits.len(), 10);
+        }
+    }
+}

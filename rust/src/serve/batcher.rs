@@ -1,7 +1,19 @@
-//! Dynamic batching: collect requests until the batch is full or the
-//! oldest request has waited `max_delay` (vLLM-router-style policy,
-//! simplified for a single model).
+//! Adaptive micro-batching: collect requests until the batch is full
+//! (size-triggered flush) or the oldest request has waited `max_delay`
+//! (deadline-triggered flush).
+//!
+//! Two layers:
+//!
+//! * [`Batch`] — one accumulating batch with its arrival clock; the
+//!   single-model building block.
+//! * [`Batcher`] — a set of independent per-model *lanes*, each a
+//!   [`Batch`] with its own [`BatchPolicy`]. The serving loop pushes
+//!   requests into lanes, sleeps until [`Batcher::next_deadline`], and
+//!   flushes whatever [`Batcher::ready`] hands back. Lane queue depths
+//!   ([`Batcher::queued_by_model`]) double as the demand hints fed to the
+//!   queue-aware eviction policy.
 
+use crate::hsa::error::{HsaError, Result};
 use std::time::{Duration, Instant};
 
 /// Batching policy knobs.
@@ -50,6 +62,15 @@ impl<T> Batch<T> {
         self.items.is_empty()
     }
 
+    /// Whether the size trigger has fired (batch reached `max_batch`).
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.policy.max_batch
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
     /// Whether the deadline policy says to close the batch now.
     pub fn deadline_expired(&self) -> bool {
         match self.oldest {
@@ -68,6 +89,129 @@ impl<T> Batch<T> {
     pub fn take(&mut self) -> Vec<T> {
         self.oldest = None;
         std::mem::take(&mut self.items)
+    }
+}
+
+struct Lane<T> {
+    model: String,
+    batch: Batch<T>,
+}
+
+/// Per-model adaptive micro-batcher: one [`Batch`] lane per model, each
+/// with its own size and deadline policy.
+///
+/// # Example
+///
+/// ```
+/// use std::time::Duration;
+/// use tf_fpga::serve::{BatchPolicy, Batcher};
+///
+/// let mut b: Batcher<u32> = Batcher::new();
+/// b.add_model("mnist", BatchPolicy { max_batch: 2, max_delay: Duration::from_millis(5) });
+///
+/// assert!(!b.push("mnist", 7).unwrap());
+/// assert!(b.push("mnist", 8).unwrap()); // size trigger: lane is full
+///
+/// let (model, items) = b.ready().expect("full lane flushes");
+/// assert_eq!((model.as_str(), items.as_slice()), ("mnist", &[7, 8][..]));
+/// assert!(b.ready().is_none(), "nothing left to flush");
+/// ```
+pub struct Batcher<T> {
+    lanes: Vec<Lane<T>>,
+    /// Rotating scan start so one hot lane cannot starve the others.
+    cursor: usize,
+}
+
+impl<T> Default for Batcher<T> {
+    fn default() -> Self {
+        Batcher::new()
+    }
+}
+
+impl<T> Batcher<T> {
+    pub fn new() -> Batcher<T> {
+        Batcher { lanes: Vec::new(), cursor: 0 }
+    }
+
+    /// Register a model lane. Adding the same model twice replaces its
+    /// policy (and drops anything queued — call before serving starts).
+    pub fn add_model(&mut self, model: impl Into<String>, policy: BatchPolicy) {
+        let model = model.into();
+        if let Some(lane) = self.lanes.iter_mut().find(|l| l.model == model) {
+            lane.batch = Batch::new(policy);
+        } else {
+            self.lanes.push(Lane { model, batch: Batch::new(policy) });
+        }
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.lanes.iter().map(|l| l.model.as_str()).collect()
+    }
+
+    /// Queue a request into its model's lane; returns true if the lane is
+    /// now full (caller should flush via [`Batcher::ready`]).
+    pub fn push(&mut self, model: &str, item: T) -> Result<bool> {
+        let lane = self
+            .lanes
+            .iter_mut()
+            .find(|l| l.model == model)
+            .ok_or_else(|| HsaError::Runtime(format!("unknown model '{model}'")))?;
+        Ok(lane.batch.push(item))
+    }
+
+    /// Next lane due for dispatch — size-triggered (full) lanes first,
+    /// then deadline-expired ones. Returns the model name and its drained
+    /// items; `None` when nothing is due yet.
+    pub fn ready(&mut self) -> Option<(String, Vec<T>)> {
+        let n = self.lanes.len();
+        if n == 0 {
+            return None;
+        }
+        for pass in [true, false] {
+            for off in 0..n {
+                let i = (self.cursor + off) % n;
+                let lane = &mut self.lanes[i];
+                let due = if pass { lane.batch.is_full() } else { lane.batch.deadline_expired() };
+                if due {
+                    self.cursor = (i + 1) % n;
+                    return Some((lane.model.clone(), lane.batch.take()));
+                }
+            }
+        }
+        None
+    }
+
+    /// Flush every non-empty lane regardless of triggers (shutdown path).
+    pub fn drain(&mut self) -> Vec<(String, Vec<T>)> {
+        self.lanes
+            .iter_mut()
+            .filter(|l| !l.batch.is_empty())
+            .map(|l| (l.model.clone(), l.batch.take()))
+            .collect()
+    }
+
+    /// Time until the earliest lane deadline (None when all lanes are
+    /// empty) — how long the serving loop may sleep.
+    pub fn next_deadline(&self) -> Option<Duration> {
+        self.lanes.iter().filter_map(|l| l.batch.time_left()).min()
+    }
+
+    /// Requests currently queued for `model` (0 for unknown models).
+    pub fn queued(&self, model: &str) -> usize {
+        self.lanes
+            .iter()
+            .find(|l| l.model == model)
+            .map(|l| l.batch.len())
+            .unwrap_or(0)
+    }
+
+    pub fn total_queued(&self) -> usize {
+        self.lanes.iter().map(|l| l.batch.len()).sum()
+    }
+
+    /// Per-model queue depths — the demand hints for the eviction policy.
+    pub fn queued_by_model(&self) -> Vec<(String, usize)> {
+        self.lanes.iter().map(|l| (l.model.clone(), l.batch.len())).collect()
     }
 }
 
@@ -115,5 +259,64 @@ mod tests {
         assert!(!b.deadline_expired());
         b.push(2);
         assert!(!b.deadline_expired(), "fresh deadline for the new batch");
+    }
+
+    #[test]
+    fn batcher_flushes_full_lane_first() {
+        let mut b: Batcher<u32> = Batcher::new();
+        b.add_model("a", policy(2, 1000));
+        b.add_model("b", policy(4, 1000));
+        b.push("b", 10).unwrap();
+        assert!(!b.push("a", 1).unwrap());
+        assert!(b.push("a", 2).unwrap(), "lane a fills");
+        let (model, items) = b.ready().unwrap();
+        assert_eq!((model.as_str(), items), ("a", vec![1, 2]));
+        assert!(b.ready().is_none(), "lane b neither full nor expired");
+        assert_eq!(b.queued("b"), 1);
+    }
+
+    #[test]
+    fn batcher_deadline_flushes_partial_lane() {
+        let mut b: Batcher<u32> = Batcher::new();
+        b.add_model("a", policy(8, 5));
+        b.push("a", 1).unwrap();
+        assert!(b.ready().is_none());
+        std::thread::sleep(Duration::from_millis(10));
+        let (model, items) = b.ready().unwrap();
+        assert_eq!((model.as_str(), items), ("a", vec![1]));
+    }
+
+    #[test]
+    fn batcher_rejects_unknown_model() {
+        let mut b: Batcher<u32> = Batcher::new();
+        b.add_model("a", policy(2, 10));
+        assert!(b.push("nope", 1).is_err());
+        assert_eq!(b.queued("nope"), 0);
+    }
+
+    #[test]
+    fn batcher_next_deadline_tracks_oldest_lane() {
+        let mut b: Batcher<u32> = Batcher::new();
+        b.add_model("slow", policy(8, 1000));
+        b.add_model("fast", policy(8, 5));
+        assert!(b.next_deadline().is_none(), "all lanes empty");
+        b.push("slow", 1).unwrap();
+        b.push("fast", 2).unwrap();
+        let left = b.next_deadline().unwrap();
+        assert!(left <= Duration::from_millis(5), "fast lane dominates: {left:?}");
+    }
+
+    #[test]
+    fn batcher_drain_empties_every_lane() {
+        let mut b: Batcher<u32> = Batcher::new();
+        b.add_model("a", policy(8, 1000));
+        b.add_model("b", policy(8, 1000));
+        b.push("a", 1).unwrap();
+        b.push("b", 2).unwrap();
+        b.push("b", 3).unwrap();
+        let mut flushed = b.drain();
+        flushed.sort_by(|x, y| x.0.cmp(&y.0));
+        assert_eq!(flushed, vec![("a".into(), vec![1]), ("b".into(), vec![2, 3])]);
+        assert_eq!(b.total_queued(), 0);
     }
 }

@@ -1,10 +1,33 @@
-//! Inference serving on top of the session: a request queue, a dynamic
-//! batcher, and worker threads — the "mobile inference service" the
-//! paper's introduction motivates (continuous camera/sensor frames with
-//! pre/post-processing sharing the FPGA).
+//! Inference serving on top of the session — the "mobile inference
+//! service" the paper's introduction motivates (continuous camera/sensor
+//! frames with pre/post-processing sharing the FPGA), grown into a
+//! production-shaped request path.
+//!
+//! Three pieces:
+//!
+//! * [`batcher`] — adaptive micro-batching: a single-model [`Batch`] with
+//!   size- and deadline-triggered flush, and the per-model multi-lane
+//!   [`Batcher`] on top of it.
+//! * [`server`] — [`InferenceServer`], the *synchronous* reference
+//!   pipeline: one batcher thread forms a batch, runs it to completion,
+//!   delivers, repeats. Simple, strictly ordered, and the baseline the
+//!   `serving_throughput` bench measures against.
+//! * [`async_server`] — [`AsyncInferenceServer`], the *asynchronous*
+//!   pipeline: batches are dispatched with `Session::run_async` and
+//!   retired by a completer pool, so forming batch *n+1*, executing batch
+//!   *n* and delivering batch *n-1* all overlap, across several models
+//!   and PR regions at once. Queue depths feed the `queue-aware` eviction
+//!   policy as demand hints.
+//!
+//! Start with [`AsyncInferenceServer::start`] for throughput;
+//! [`InferenceServer::start`] remains the minimal single-model path.
 
+pub mod async_server;
 pub mod batcher;
 pub mod server;
 
-pub use batcher::{Batch, BatchPolicy};
+pub use async_server::{
+    AsyncInferenceServer, AsyncServeReport, AsyncServerConfig, ModelSpec,
+};
+pub use batcher::{Batch, BatchPolicy, Batcher};
 pub use server::{InferenceServer, ServeReport, ServerConfig};

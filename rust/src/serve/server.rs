@@ -1,7 +1,14 @@
-//! The inference server: clients submit single images; a batcher thread
-//! groups them and drives the session's whole-model kernel (`mnist_cnn`),
-//! padding the final partial batch (the PJRT module's batch dim is
-//! compiled to `max_batch`, like a real shape-locked bitstream).
+//! The synchronous inference server: clients submit single images; a
+//! batcher thread groups them and drives the session's whole-model kernel
+//! (`mnist_cnn`), padding the final partial batch (the PJRT module's
+//! batch dim is compiled to `max_batch`, like a real shape-locked
+//! bitstream).
+//!
+//! This is the lock-step reference path: exactly one batch is in flight
+//! at any moment, so batch formation, kernel execution and reply delivery
+//! serialize. [`crate::serve::async_server::AsyncInferenceServer`]
+//! overlaps all three — see `benches/serving_throughput.rs` for the
+//! difference it makes.
 
 use crate::hsa::error::{HsaError, Result};
 use crate::metrics::histogram::Histogram;

@@ -1,6 +1,20 @@
 //! Structured event tracing with Chrome-trace (about://tracing, Perfetto)
 //! JSON export — reconfigurations, dispatches and kernel executions become
 //! visually inspectable timelines.
+//!
+//! Wire a [`TraceRecorder`] into `SessionOptions::trace` and the FPGA
+//! agent emits one event per partial reconfiguration
+//! ([`EventKind::Reconfig`]) and per kernel execution
+//! ([`EventKind::KernelExec`]) onto the `fpga-pl` track, with the PR
+//! region as the lane — so an async serving run renders as the familiar
+//! "staircase" of overlapping batches, and an eviction storm is visible
+//! as a wall of reconfig blocks. Export with
+//! `TraceRecorder::to_chrome_trace` (or `write_to`) and load the file in
+//! Perfetto.
+//!
+//! Recording is lock-light (one mutex around an append-only event vec)
+//! and cheap enough to leave on in the serving path; it is opt-in per
+//! session regardless.
 
 pub mod recorder;
 

@@ -108,12 +108,13 @@ impl Config {
     /// ```ini
     /// [session]
     /// regions = 4
-    /// policy = lru            # lru | mru | fifo | random
+    /// policy = lru            # lru | mru | fifo | random | queue-aware
     /// prefer_fpga = true
     /// soft_placement = true
     /// use_pjrt = true
     /// artifacts = artifacts   # directory
     /// realtime = false
+    /// dispatch_workers = 1    # >1: concurrent kernels per queue
     /// ```
     pub fn session_options(&self) -> Result<SessionOptions> {
         let mut o = SessionOptions::default();
@@ -126,7 +127,7 @@ impl Config {
         if let Some(p) = self.get("session.policy") {
             o.policy = PolicyKind::parse(p).ok_or_else(|| {
                 HsaError::Runtime(format!(
-                    "session.policy '{p}' (want lru|mru|fifo|random)"
+                    "session.policy '{p}' (want lru|mru|fifo|random|queue-aware)"
                 ))
             })?;
         }
@@ -144,6 +145,14 @@ impl Config {
         }
         if let Some(b) = self.get_bool("session.realtime")? {
             o.realtime = b;
+        }
+        if let Some(n) = self.get_usize("session.dispatch_workers")? {
+            if n == 0 {
+                return Err(HsaError::Runtime(
+                    "session.dispatch_workers must be >= 1".into(),
+                ));
+            }
+            o.dispatch_workers = n;
         }
         Ok(o)
     }

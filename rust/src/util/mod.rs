@@ -1,6 +1,20 @@
 //! Small self-contained utilities (no third-party deps are available
 //! offline beyond `xla`/`anyhow`/`thiserror`/`once_cell`, so JSON parsing,
 //! PRNG, statistics and property testing are implemented here).
+//!
+//! * [`config`] — key=value config files that desugar into
+//!   `SessionOptions` (the CLI's `--config` flag);
+//! * [`json`] — a minimal JSON parser for the artifact manifest and the
+//!   Chrome-trace export (no serde offline);
+//! * [`prng`] — a splitmix64-style deterministic PRNG so synthetic
+//!   weights and property-test inputs are reproducible across runs and
+//!   platforms;
+//! * [`quickcheck`] — a tiny property-testing harness over that PRNG;
+//! * [`stats`] — summary statistics (mean/percentiles/geomean) for the
+//!   bench harness and the paper tables;
+//! * [`spin_enabled`] — host-level gate for all spin-then-block wait
+//!   loops (spinning on a single core only delays the thread being
+//!   waited for).
 
 pub mod config;
 pub mod json;

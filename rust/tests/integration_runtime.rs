@@ -11,6 +11,18 @@ use tf_fpga::runtime::pjrt::PjrtService;
 use tf_fpga::tf::tensor::Tensor;
 use tf_fpga::util::prng::Rng;
 
+/// Skip-helper: PJRT needs the `pjrt` cargo feature and a working XLA
+/// client; tests skip (like the missing-artifacts case) when absent.
+fn pjrt() -> Option<PjrtService> {
+    match PjrtService::start() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIP (PJRT backend unavailable): {e}");
+            None
+        }
+    }
+}
+
 fn store() -> Option<ArtifactStore> {
     match ArtifactStore::open_default() {
         Ok(s) => Some(s),
@@ -47,7 +59,7 @@ fn manifest_lists_all_five_modules() {
 #[test]
 fn role1_fc_artifact_matches_native_oracle() {
     let Some(store) = store() else { return };
-    let svc = PjrtService::start().unwrap();
+    let Some(svc) = pjrt() else { return };
     let meta = store.module("role1_fc").unwrap();
     svc.handle().load_module(meta).unwrap();
 
@@ -66,7 +78,7 @@ fn role1_fc_artifact_matches_native_oracle() {
 #[test]
 fn role2_fc_barrier_artifact_matches_role1() {
     let Some(store) = store() else { return };
-    let svc = PjrtService::start().unwrap();
+    let Some(svc) = pjrt() else { return };
     svc.handle().load_module(store.module("role1_fc").unwrap()).unwrap();
     svc.handle()
         .load_module(store.module("role2_fc_barrier").unwrap())
@@ -86,7 +98,7 @@ fn role2_fc_barrier_artifact_matches_role1() {
 #[test]
 fn conv_role_artifacts_match_native_with_manifest_weights() {
     let Some(store) = store() else { return };
-    let svc = PjrtService::start().unwrap();
+    let Some(svc) = pjrt() else { return };
     svc.handle().load_module(store.module("role3_conv5x5").unwrap()).unwrap();
     svc.handle().load_module(store.module("role4_conv3x3").unwrap()).unwrap();
     let (_, w5) = store.load_weight_i16("role3/w").unwrap();
@@ -108,7 +120,7 @@ fn conv_role_artifacts_match_native_with_manifest_weights() {
 #[test]
 fn mnist_cnn_artifact_matches_native_full_model() {
     let Some(store) = store() else { return };
-    let svc = PjrtService::start().unwrap();
+    let Some(svc) = pjrt() else { return };
     svc.handle().load_module(store.module("mnist_cnn").unwrap()).unwrap();
 
     // Native full model with the same artifact weights.
@@ -128,7 +140,7 @@ fn mnist_cnn_artifact_matches_native_full_model() {
 #[test]
 fn shape_validation_rejects_wrong_inputs() {
     let Some(store) = store() else { return };
-    let svc = PjrtService::start().unwrap();
+    let Some(svc) = pjrt() else { return };
     svc.handle().load_module(store.module("role3_conv5x5").unwrap()).unwrap();
     // Wrong shape.
     let bad = Tensor::zeros(&[1, 27, 27], tf_fpga::tf::dtype::DType::I16);
