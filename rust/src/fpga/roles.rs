@@ -236,6 +236,30 @@ pub fn paper_roles() -> Vec<Bitstream> {
     ]
 }
 
+/// ReLU-fused variants of the four paper roles, for the plan compiler's
+/// op-fusion pass (`tf::fusion`): the same streaming datapaths with one
+/// extra saturation/clamp unit on the output stream, so `op+relu` executes
+/// as a single dispatch in a single PR region. Timing is unchanged — a
+/// pipelined clamp costs resources, not cycles — which is exactly why
+/// fusion pays: one dispatch and one resident role instead of a conv role
+/// *plus* a CPU relu hop.
+pub fn fused_paper_roles() -> Vec<Bitstream> {
+    let variants: Vec<(&'static str, DatapathSpec, Vec<Component>)> = vec![
+        ("role1_fc_relu", role1_spec(), role1_components()),
+        ("role2_fc_barrier_relu", role2_spec(), role2_components()),
+        ("role3_conv5x5_relu", role3_spec(), role3_components()),
+        ("role4_conv3x3_relu", role4_spec(), role4_components()),
+    ];
+    variants
+        .into_iter()
+        .map(|(name, mut spec, mut comps)| {
+            spec.name = name;
+            comps.push(Component::QuantSat); // the output clamp stage
+            Bitstream::new(name, ROLE_BITSTREAM_BYTES, estimate(&comps), spec)
+        })
+        .collect()
+}
+
 /// An extra "preprocessing" role for the multi-tenant example (the paper's
 /// pre/post-processing sharing story): a generic streaming op.
 pub fn preprocess_role() -> Bitstream {
@@ -357,8 +381,23 @@ mod tests {
             crate::fpga::resources::ZU3EG.bram36 / 4,
             crate::fpga::resources::ZU3EG.dsps / 4,
         );
-        for r in paper_roles() {
+        for r in paper_roles().into_iter().chain(fused_paper_roles()) {
             assert!(r.resources.fits_in(&cap), "{} does not fit: {}", r.name, r.resources);
+        }
+    }
+
+    #[test]
+    fn fused_roles_distinct_and_cost_only_a_clamp_stage() {
+        let base = paper_roles();
+        let fused = fused_paper_roles();
+        assert_eq!(fused.len(), base.len());
+        let clamp = Component::QuantSat.cost();
+        for (b, f) in base.iter().zip(&fused) {
+            assert_ne!(b.id, f.id);
+            assert!(f.name.ends_with("_relu"), "{}", f.name);
+            assert_eq!(f.resources, b.resources + clamp, "{}", f.name);
+            // Same cycle model: fusion saves a dispatch, not datapath time.
+            assert_eq!(f.spec.ops_per_cycle(&f.spec.op), b.spec.ops_per_cycle(&b.spec.op));
         }
     }
 }

@@ -13,7 +13,8 @@
 //! * **L2** (`python/compile/model.py`) — jax entry points AOT-lowered to
 //!   HLO text artifacts (`make artifacts`);
 //! * **L3** (this crate) — the coordinator: [`tf`] frontend (graph, placer,
-//!   session), [`hsa`] runtime (queues, signals, packet processors),
+//!   plan compiler + replayer, session), [`hsa`] runtime (queues, signals,
+//!   packet processors),
 //!   [`fpga`] substrate (shell, PR regions, ICAP, datapath models, roles),
 //!   [`reconfig`] (LRU & friends, including the queue-aware policy),
 //!   [`cpu`] (A53 baseline), [`runtime`] (PJRT executor service for the
@@ -21,7 +22,11 @@
 //!   sync and async batched serving pipelines), [`bench`] (Table I–III
 //!   generators).
 //!
-//! Quickstart (see `examples/quickstart.rs`):
+//! Quickstart (see `examples/quickstart.rs`). The first `run` for a
+//! `(feeds, fetches)` shape compiles an execution plan — dead-node
+//! pruning, constant folding, op fusion, slot-allocated buffers — and
+//! caches it; every later `run` replays the plan without re-walking the
+//! graph (see [`tf::plan`]):
 //!
 //! ```no_run
 //! use tf_fpga::tf::{Graph, OpKind, Session, SessionOptions, Tensor, DType};
@@ -33,6 +38,7 @@
 //! g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
 //! let sess = Session::new(g, SessionOptions::default()).unwrap();
 //! let out = sess.run(&[("x", Tensor::zeros(&[4, 8], DType::F32))], &["y"]).unwrap();
+//! assert_eq!(sess.plan_cache_stats().compiles, 1); // cached for replay
 //! ```
 //!
 //! Serving: [`serve::AsyncInferenceServer`] is the async batched entry

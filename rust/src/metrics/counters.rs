@@ -17,6 +17,11 @@ pub struct ServeCounters {
     /// Batches dispatched but not yet retired.
     inflight: AtomicU64,
     max_inflight: AtomicU64,
+    /// Cumulative µs of plan compilation *recorded by the pipeline via*
+    /// [`ServeCounters::on_plan_compile`] (today: the startup prewarm).
+    /// Serve reports source their total from the session's plan-cache
+    /// stats instead, which also sees steady-state cache misses.
+    plan_compile_us: AtomicU64,
 }
 
 /// A point-in-time copy of [`ServeCounters`].
@@ -29,6 +34,7 @@ pub struct CounterSnapshot {
     pub fill_sum: u64,
     pub inflight: u64,
     pub max_inflight: u64,
+    pub plan_compile_us: u64,
 }
 
 impl CounterSnapshot {
@@ -73,6 +79,12 @@ impl ServeCounters {
         self.failed.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// An execution plan was compiled for this pipeline (µs of compile
+    /// time; accumulated so multi-model prewarms sum up).
+    pub fn on_plan_compile(&self, us: u64) {
+        self.plan_compile_us.fetch_add(us, Ordering::Relaxed);
+    }
+
     pub fn inflight(&self) -> u64 {
         self.inflight.load(Ordering::Acquire)
     }
@@ -86,6 +98,7 @@ impl ServeCounters {
             fill_sum: self.fill_sum.load(Ordering::Relaxed),
             inflight: self.inflight.load(Ordering::Acquire),
             max_inflight: self.max_inflight.load(Ordering::Acquire),
+            plan_compile_us: self.plan_compile_us.load(Ordering::Relaxed),
         }
     }
 }
@@ -126,6 +139,14 @@ mod tests {
         }
         assert_eq!(c.inflight(), 0);
         assert_eq!(c.snapshot().max_inflight, 4);
+    }
+
+    #[test]
+    fn plan_compile_time_accumulates() {
+        let c = ServeCounters::new();
+        c.on_plan_compile(120);
+        c.on_plan_compile(80);
+        assert_eq!(c.snapshot().plan_compile_us, 200);
     }
 
     #[test]

@@ -74,6 +74,21 @@ pub fn conv2d_fixed_i16(
     Ok(Tensor::from_i16(&[f, oh, ow], out)?)
 }
 
+/// Fused int16 conv + ReLU, enabling single-dispatch fused plan steps.
+/// Defined as `relu_i16 ∘ conv2d_fixed_i16`, so it is bitwise identical to
+/// the unfused pair by construction.
+pub fn conv2d_fixed_i16_relu(
+    x: &Tensor,
+    weights: &[i16],
+    f: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    shift: u32,
+) -> Result<Tensor> {
+    crate::ops::relu_i16(&conv2d_fixed_i16(x, weights, f, c, kh, kw, shift)?)
+}
+
 /// float32 fixed-weight conv (the MNIST CNN's layers).
 pub fn conv2d_fixed_f32(
     x: &Tensor,
@@ -107,6 +122,19 @@ pub fn conv2d_fixed_f32(
         }
     }
     Ok(Tensor::from_f32(&[f, oh, ow], out)?)
+}
+
+/// Fused float32 fixed-weight conv + ReLU (`relu_f32 ∘ conv2d_fixed_f32`,
+/// bitwise identical to the unfused pair by construction).
+pub fn conv2d_fixed_f32_relu(
+    x: &Tensor,
+    weights: &[f32],
+    f: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+) -> Result<Tensor> {
+    crate::ops::relu_f32(&conv2d_fixed_f32(x, weights, f, c, kh, kw)?)
 }
 
 #[cfg(test)]
@@ -162,6 +190,25 @@ mod tests {
         let y = conv2d_fixed_i16(&x, &w, 1, 1, 1, 1, 2).unwrap();
         // -100 >> 2 (arithmetic) = -25.
         assert_eq!(y.as_i16().unwrap(), &[-25]);
+    }
+
+    #[test]
+    fn fused_conv_relu_matches_sequential() {
+        let x = Tensor::from_i16(&[1, 4, 4], (0..16).map(|v| v as i16 - 8).collect())
+            .unwrap();
+        let w = vec![3i16, -2, 1, -1];
+        let fused = conv2d_fixed_i16_relu(&x, &w, 1, 1, 2, 2, 1).unwrap();
+        let seq = crate::ops::relu_i16(&conv2d_fixed_i16(&x, &w, 1, 1, 2, 2, 1).unwrap())
+            .unwrap();
+        assert_eq!(fused, seq);
+
+        let xf = Tensor::from_f32(&[1, 3, 3], (0..9).map(|v| v as f32 - 4.0).collect())
+            .unwrap();
+        let wf = vec![1.0f32, -1.0, -1.0, 1.0];
+        let fusedf = conv2d_fixed_f32_relu(&xf, &wf, 1, 1, 2, 2).unwrap();
+        let seqf = crate::ops::relu_f32(&conv2d_fixed_f32(&xf, &wf, 1, 1, 2, 2).unwrap())
+            .unwrap();
+        assert_eq!(fusedf, seqf);
     }
 
     #[test]

@@ -54,6 +54,13 @@ pub fn fc_f32(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
     Ok(Tensor::from_f32(&[m, n], out)?)
 }
 
+/// Fused fully connected + ReLU: `max(x @ w + b, 0)` in one kernel call.
+/// Defined as `relu_f32 ∘ fc_f32`, so fused and unfused plans are bitwise
+/// identical by construction.
+pub fn fc_relu_f32(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+    crate::ops::relu_f32(&fc_f32(x, w, b)?)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,6 +105,17 @@ mod tests {
         let b = Tensor::from_f32(&[2], vec![1.5, -2.5]).unwrap();
         let y = fc_f32(&x, &w, &b).unwrap();
         assert_eq!(y.as_f32().unwrap(), &[1.5, -2.5, 1.5, -2.5]);
+    }
+
+    #[test]
+    fn fc_relu_matches_sequential_relu_of_fc() {
+        let x = Tensor::from_f32(&[2, 3], vec![1.0, -2.0, 0.5, 0.25, 3.0, -1.5]).unwrap();
+        let w = Tensor::from_f32(&[3, 2], vec![0.7, -0.3, 1.1, 0.2, -0.9, 0.4]).unwrap();
+        let b = Tensor::from_f32(&[2], vec![-0.1, 0.1]).unwrap();
+        let fused = fc_relu_f32(&x, &w, &b).unwrap();
+        let seq = crate::ops::relu_f32(&fc_f32(&x, &w, &b).unwrap()).unwrap();
+        assert_eq!(fused, seq, "fused FC+ReLU must be bitwise identical");
+        assert!(fused.as_f32().unwrap().iter().all(|&v| v >= 0.0));
     }
 
     #[test]

@@ -117,6 +117,11 @@ pub struct AsyncServeReport {
     pub latency_us_p50: u64,
     pub latency_us_p99: u64,
     pub latency_us_mean: f64,
+    /// Total time the session spent compiling execution plans (startup
+    /// prewarm plus any later cache misses) — same meaning as the sync
+    /// server's field. Note the async hot path dispatches via `run_async`'s
+    /// tail fast path; cached plans only serve its synchronous fallback.
+    pub plan_compile_us: u64,
     pub reconfig: crate::reconfig::manager::ReconfigStats,
 }
 
@@ -175,6 +180,21 @@ impl AsyncInferenceServer {
         let inflight_rx = Arc::new(Mutex::new(inflight_rx));
         let stats = Arc::new(Mutex::new(StatsInner { latency: Histogram::new() }));
         let counters = Arc::new(ServeCounters::new());
+
+        // Prewarm every model's execution plan. Honest caveat: with the
+        // current single-op model graphs (x → mnist_cnn → logits) the
+        // steady-state request path is `run_async`'s single-device-tail
+        // fast path, which never consults the plan cache — the cached
+        // plans only serve `run_async`'s synchronous fallback, i.e. any
+        // future model graph shape that does not qualify for the tail
+        // dispatch. The prewarm is one cheap compile per model at startup
+        // and puts a compile-time figure in the counters/report.
+        for info in infos.values() {
+            let zero = Tensor::zeros(&[info.max_batch, 1, 28, 28], DType::F32);
+            let fetches = [info.logits_name.as_str()];
+            let us = session.warm_plan(&[(info.x_name.as_str(), zero)], &fetches)?;
+            counters.on_plan_compile(us);
+        }
 
         let batcher = {
             let session = Arc::clone(&session);
@@ -256,6 +276,9 @@ impl AsyncInferenceServer {
             latency_us_p50: s.latency.quantile(0.50),
             latency_us_p99: s.latency.quantile(0.99),
             latency_us_mean: s.latency.mean(),
+            // Sourced from the session (not the counters) so steady-state
+            // cache-miss compiles are included, matching the sync server.
+            plan_compile_us: self.session.plan_cache_stats().compile_us_total,
             reconfig: self.session.reconfig_stats(),
         }
     }
@@ -503,6 +526,10 @@ mod tests {
         assert_eq!(rep.requests, 1);
         assert_eq!(rep.completed, 1);
         assert_eq!(rep.batches, 1, "partial batch flushed by deadline");
+        assert!(
+            rep.plan_compile_us > 0,
+            "startup prewarm must surface plan compile time: {rep:?}"
+        );
         srv.stop();
     }
 

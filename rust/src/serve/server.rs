@@ -50,6 +50,9 @@ pub struct ServeReport {
     pub latency_us_p50: u64,
     pub latency_us_p99: u64,
     pub latency_us_mean: f64,
+    /// Time spent compiling the model's execution plan (prewarmed at
+    /// startup; steady-state batches replay the cached plan).
+    pub plan_compile_us: u64,
     pub reconfig: crate::reconfig::manager::ReconfigStats,
 }
 
@@ -78,6 +81,9 @@ impl InferenceServer {
         let x = g.placeholder("x", &[max_batch, 1, 28, 28], DType::F32)?;
         g.add("logits", OpKind::MnistCnn, &[x])?;
         let session = Arc::new(Session::new(g, config.session)?);
+        // Prewarm the plan so the first batch replays instead of compiling.
+        let zero = Tensor::zeros(&[max_batch, 1, 28, 28], DType::F32);
+        session.warm_plan(&[("x", zero)], &["logits"])?;
 
         let (tx, rx) = mpsc::channel::<Option<Request>>();
         let shared = Arc::new(Mutex::new(Shared {
@@ -148,6 +154,7 @@ impl InferenceServer {
             latency_us_p50: s.latency.quantile(0.50),
             latency_us_p99: s.latency.quantile(0.99),
             latency_us_mean: s.latency.mean(),
+            plan_compile_us: self.session.plan_cache_stats().compile_us_total,
             reconfig: self.session.reconfig_stats(),
         }
     }
@@ -296,6 +303,22 @@ mod tests {
         assert_eq!(rep.requests, 16);
         assert!(rep.batches <= 4, "16 requests should need few batches: {rep:?}");
         assert!(rep.mean_batch_fill > 2.0, "{rep:?}");
+        srv.stop();
+    }
+
+    #[test]
+    fn batches_replay_the_prewarmed_plan() {
+        let mut srv = server(4, 2);
+        let rep0 = srv.report();
+        assert!(rep0.plan_compile_us > 0, "prewarm compiles at startup: {rep0:?}");
+        for i in 0..3 {
+            srv.infer(vec![i as f32 * 0.1; 784]).unwrap();
+        }
+        let rep = srv.report();
+        assert_eq!(
+            rep.plan_compile_us, rep0.plan_compile_us,
+            "steady-state batches must not recompile: {rep:?}"
+        );
         srv.stop();
     }
 

@@ -1,22 +1,84 @@
-//! The graph executor: topological walk, inline structural ops, HSA
-//! dispatch for compute ops, reference-counted tensor lifetimes.
+//! The interpreted graph executor: topological walk, inline structural
+//! ops, HSA dispatch for compute ops, reference-counted tensor lifetimes.
+//!
+//! This is the *reference* execution path. The serving hot path replays a
+//! precompiled [`crate::tf::plan::ExecutionPlan`] instead (pruning,
+//! constant folding, op fusion, slot-based buffers, concurrent dispatch);
+//! [`crate::tf::session::Session::run`] routes through cached plans and
+//! `Session::run_interpreted` exposes this walk for comparison. The
+//! plan-equivalence property test (`tests/prop_invariants.rs`) pins the
+//! two paths to bitwise-identical outputs.
 
 use crate::hsa::agent::DeviceType;
 use crate::hsa::error::{HsaError, Result};
 use crate::hsa::queue::Queue;
 use crate::hsa::runtime::HsaRuntime;
+use crate::tf::dtype::DType;
 use crate::tf::graph::{Graph, NodeId, OpKind};
 use crate::tf::placer::{Placement, PlacementMap};
 use crate::tf::tensor::Tensor;
 use std::collections::HashMap;
 use std::time::Instant;
 
+/// Validate a fed tensor against its placeholder declaration. Shared by
+/// the interpreter, plan replay, the plan cache and the async fast path so
+/// the rule (and its error message) can never drift between them.
+pub(crate) fn check_feed(
+    name: &str,
+    shape: &[usize],
+    dtype: DType,
+    t: &Tensor,
+) -> Result<()> {
+    if t.shape() != shape || t.dtype() != dtype {
+        return Err(HsaError::Runtime(format!(
+            "feed '{name}': expected {shape:?} {dtype}, got {:?} {}",
+            t.shape(),
+            t.dtype()
+        )));
+    }
+    Ok(())
+}
+
+/// Unwrap a kernel's single output, checking it against shape inference
+/// (`expected_shape` empty = skip the shape check). Shared by the
+/// interpreter, plan compile-time folding and plan replay.
+pub(crate) fn check_kernel_output(
+    name: &str,
+    expected_shape: &[usize],
+    mut outs: Vec<Tensor>,
+) -> Result<Tensor> {
+    if outs.len() != 1 {
+        return Err(HsaError::Runtime(format!(
+            "kernel for '{name}' returned {} outputs",
+            outs.len()
+        )));
+    }
+    let out = outs.pop().unwrap();
+    if !expected_shape.is_empty() && out.shape() != expected_shape {
+        return Err(HsaError::Runtime(format!(
+            "node '{name}': kernel produced {:?}, inference said {:?}",
+            out.shape(),
+            expected_shape
+        )));
+    }
+    Ok(out)
+}
+
 /// Per-run statistics (feeds Table II's dispatch-latency analysis).
 #[derive(Debug, Clone, Default)]
 pub struct RunStats {
+    /// Structural ops executed inline. The interpreter counts
+    /// placeholders, constants and reshapes it runs; plan replay counts
+    /// only feeds and reshapes (constants are preloaded at compile time),
+    /// so compare `dispatches` across paths, not this.
     pub inline_ops: u64,
     pub dispatches: u64,
     pub dispatches_by_device: HashMap<DeviceType, u64>,
+    /// Dispatches that covered a fused op pair (plan replay only; the
+    /// interpreted walk never fuses, so it leaves this at 0).
+    pub fused_dispatches: u64,
+    /// Steps in the replayed plan (0 for the interpreted walk).
+    pub plan_steps: u64,
     pub wall_us: u128,
 }
 
@@ -57,20 +119,28 @@ pub fn run(
 
     for id in graph.topo_order() {
         let node = graph.node(id);
-        // Dead nodes (nothing consumes them) still execute — TF prunes;
-        // we keep it simple and skip only if refcount is 0 AND not fetched.
+        // Dead nodes — refcount 0 because nothing consumes them and they
+        // are not fetched — are skipped entirely, the on-the-fly analogue
+        // of TF's graph pruning. (The plan compiler prunes them at compile
+        // time instead.)
         if refcount[id.0] == 0 {
             continue;
         }
-        let inputs: Vec<Tensor> = node
-            .inputs
-            .iter()
-            .map(|&i| {
-                values[i.0]
-                    .clone()
-                    .ok_or_else(|| HsaError::Runtime(format!("input of '{}' missing", node.name)))
-            })
-            .collect::<Result<_>>()?;
+        // Gather inputs, decrementing refcounts as we go: the last
+        // consumer *moves* the tensor out of `values` instead of cloning
+        // it, so intermediate buffers transfer ownership along the chain.
+        let mut inputs = Vec::with_capacity(node.inputs.len());
+        for &i in &node.inputs {
+            refcount[i.0] -= 1;
+            let t = if refcount[i.0] == 0 {
+                values[i.0].take()
+            } else {
+                values[i.0].clone()
+            };
+            inputs.push(t.ok_or_else(|| {
+                HsaError::Runtime(format!("input of '{}' missing", node.name))
+            })?);
+        }
 
         let out = match placement.by_node.get(&id) {
             Some(Placement::Inline) | None => {
@@ -83,15 +153,9 @@ pub fn run(
                 })?;
                 stats.dispatches += 1;
                 *stats.dispatches_by_device.entry(*device).or_insert(0) += 1;
-                let mut outs = env.runtime.dispatch_sync(queue, *kernel_object, inputs)?;
-                if outs.len() != 1 {
-                    return Err(HsaError::Runtime(format!(
-                        "kernel for '{}' returned {} outputs",
-                        node.name,
-                        outs.len()
-                    )));
-                }
-                outs.pop().unwrap()
+                let outs = env.runtime.dispatch_sync(queue, *kernel_object, inputs)?;
+                // Shape checked below (shared with the inline branch).
+                check_kernel_output(&node.name, &[], outs)?
             }
         };
 
@@ -106,14 +170,6 @@ pub fn run(
         }
 
         values[id.0] = Some(out);
-
-        // Release inputs whose consumers are all done.
-        for &i in &node.inputs {
-            refcount[i.0] -= 1;
-            if refcount[i.0] == 0 {
-                values[i.0] = None;
-            }
-        }
     }
 
     let mut results = Vec::with_capacity(fetches.len());
@@ -140,16 +196,7 @@ fn run_inline(
             let t = feeds.get(&node.name).ok_or_else(|| {
                 HsaError::Runtime(format!("placeholder '{}' not fed", node.name))
             })?;
-            if t.shape() != shape.as_slice() || t.dtype() != *dtype {
-                return Err(HsaError::Runtime(format!(
-                    "feed '{}': expected {:?} {}, got {:?} {}",
-                    node.name,
-                    shape,
-                    dtype,
-                    t.shape(),
-                    t.dtype()
-                )));
-            }
+            check_feed(&node.name, shape, *dtype, t)?;
             Ok(t.clone())
         }
         OpKind::Constant(t) => Ok(t.clone()),
@@ -184,6 +231,12 @@ mod tests {
             class: CpuKernelClass::Memory,
             op_template: None,
         });
+        let add = cpu.register_kernel(CpuKernel {
+            name: "add".into(),
+            func: Arc::new(|ins| Ok(vec![crate::ops::add_f32(&ins[0], &ins[1])?])),
+            class: CpuKernelClass::Memory,
+            op_template: None,
+        });
         let rt = HsaRuntime::builder().with_agent(cpu.clone()).build();
         let q = rt.create_queue(rt.agent_by_type(DeviceType::Cpu).unwrap(), 64);
         let mut queues = HashMap::new();
@@ -191,6 +244,7 @@ mod tests {
         let mut reg = KernelRegistry::new();
         reg.register("fc", DeviceType::Cpu, fc);
         reg.register("relu", DeviceType::Cpu, relu);
+        reg.register("add", DeviceType::Cpu, add);
         (rt, queues, reg)
     }
 
@@ -262,6 +316,25 @@ mod tests {
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
         let env = ExecEnv { runtime: &rt, queues: &queues };
         assert!(run(&g, &p, &env, &HashMap::new(), &["zzz"]).is_err());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn node_consuming_same_input_twice_survives_move_optimization() {
+        // Add(r, r): the first read must clone, only the final read may
+        // move the tensor out of the value table.
+        let (rt, queues, reg) = env_with_cpu();
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 2], DType::F32).unwrap();
+        let r = g.add("r", OpKind::Relu, &[x]).unwrap();
+        g.add("d", OpKind::Add, &[r, r]).unwrap();
+        g.finalize().unwrap();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let mut feeds = HashMap::new();
+        feeds.insert("x".to_string(), Tensor::from_f32(&[1, 2], vec![-1.0, 3.0]).unwrap());
+        let (outs, _) = run(&g, &p, &env, &feeds, &["d"]).unwrap();
+        assert_eq!(outs[0].as_f32().unwrap(), &[0.0, 6.0]);
         rt.shutdown();
     }
 

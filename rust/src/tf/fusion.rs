@@ -1,0 +1,227 @@
+//! Op fusion for the execution plan compiler.
+//!
+//! The only pattern the backends currently implement in hardware is
+//! *compute-op + ReLU*: the paper's roles are streaming datapaths whose
+//! output stage can clamp at zero for free (one saturation unit, no extra
+//! cycles), so `FullyConnected → Relu` and `Conv → Relu` collapse into a
+//! single dispatch whenever a fused kernel is registered for the device
+//! the producer was placed on. When no fused kernel exists the pair simply
+//! stays unfused — fusion is an optimization, never a requirement.
+
+use crate::hsa::agent::DeviceType;
+use crate::tf::graph::{Graph, NodeId, OpKind};
+use crate::tf::kernel::{fused_relu_name, KernelRegistry};
+use crate::tf::placer::{Placement, PlacementMap};
+
+/// One producer→ReLU pair that will execute as a single fused dispatch.
+#[derive(Debug, Clone)]
+pub struct Fusion {
+    /// The compute op absorbing the activation.
+    pub producer: NodeId,
+    /// The ReLU node being absorbed (its output becomes the step output).
+    pub activation: NodeId,
+    /// Device the fused step runs on (the producer's placement).
+    pub device: DeviceType,
+    /// Kernel object of the registered fused kernel.
+    pub kernel_object: u64,
+    /// Registry name of the fused kernel (`"<base>+relu"`).
+    pub kernel: String,
+}
+
+/// Whether `op` has a ReLU-fusible hardware shape (a dense / conv datapath
+/// whose output stream can be clamped in place).
+pub fn fusible_with_relu(op: &OpKind) -> bool {
+    matches!(
+        op,
+        OpKind::FullyConnected
+            | OpKind::FcBarrier
+            | OpKind::Conv5x5I16
+            | OpKind::Conv3x3I16
+            | OpKind::ConvFixedF32 { .. }
+            | OpKind::FcFixed { .. }
+    )
+}
+
+/// Find every producer→ReLU pair that can fuse.
+///
+/// A pair fuses iff:
+/// * both nodes are live (reverse-reachable from the fetch set) and not
+///   already folded to constants,
+/// * the producer's *only* live consumer is the ReLU and the producer
+///   itself is not fetched (its intermediate value must not be observable),
+/// * the ReLU carries no explicit device annotation pinning it elsewhere
+///   (a user's `with tf.device(...)` must not be silently overridden),
+/// * the producer is device-placed and the registry has the fused kernel
+///   (`<base>+relu`) on that same device.
+///
+/// `is_const[i]` marks nodes whose value was folded at compile time;
+/// `fetched[i]` marks fetch-set members.
+pub fn find_relu_fusions(
+    graph: &Graph,
+    placement: &PlacementMap,
+    registry: &KernelRegistry,
+    live: &[bool],
+    is_const: &[bool],
+    fetched: &[bool],
+) -> Vec<Fusion> {
+    // Consumer counts over the live subgraph only: a producer whose other
+    // consumers were all pruned can still fuse.
+    let mut consumers = vec![0usize; graph.len()];
+    for node in graph.nodes() {
+        if live[node.id.0] && !is_const[node.id.0] {
+            for &i in &node.inputs {
+                consumers[i.0] += 1;
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    for node in graph.nodes() {
+        let relu = node.id;
+        if !live[relu.0] || is_const[relu.0] || !matches!(node.op, OpKind::Relu) {
+            continue;
+        }
+        let producer = node.inputs[0];
+        if is_const[producer.0] || fetched[producer.0] || consumers[producer.0] != 1 {
+            continue;
+        }
+        let pnode = graph.node(producer);
+        if !fusible_with_relu(&pnode.op) {
+            continue;
+        }
+        let Some(base) = pnode.op.kernel_name() else { continue };
+        let Some(Placement::Device { device, .. }) = placement.by_node.get(&producer)
+        else {
+            continue;
+        };
+        // An explicit device pin on the ReLU is a user contract: only fuse
+        // when it agrees with where the fused step will actually run.
+        if matches!(node.device, Some(d) if d != *device) {
+            continue;
+        }
+        let Some(kernel_object) = registry.lookup_fused_relu(&base, *device) else {
+            continue;
+        };
+        out.push(Fusion {
+            producer,
+            activation: relu,
+            device: *device,
+            kernel_object,
+            kernel: fused_relu_name(&base),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tf::dtype::DType;
+    use crate::tf::placer::{place, PlacerOptions};
+    use crate::tf::tensor::Tensor;
+
+    fn fc_relu_graph() -> (Graph, NodeId, NodeId) {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 4], DType::F32).unwrap();
+        let w = g.constant("w", Tensor::zeros(&[4, 2], DType::F32)).unwrap();
+        let b = g.constant("b", Tensor::zeros(&[2], DType::F32)).unwrap();
+        let y = g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
+        let r = g.add("out", OpKind::Relu, &[y]).unwrap();
+        g.finalize().unwrap();
+        (g, y, r)
+    }
+
+    fn registry(with_fused: bool) -> KernelRegistry {
+        let mut reg = KernelRegistry::new();
+        reg.register("fc", DeviceType::Cpu, 1);
+        reg.register("relu", DeviceType::Cpu, 2);
+        if with_fused {
+            reg.register(fused_relu_name("fc"), DeviceType::Cpu, 3);
+        }
+        reg
+    }
+
+    fn all(g: &Graph, v: bool) -> Vec<bool> {
+        vec![v; g.len()]
+    }
+
+    #[test]
+    fn fc_relu_pair_fuses_when_kernel_registered() {
+        let (g, y, r) = fc_relu_graph();
+        let reg = registry(true);
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let mut fetched = all(&g, false);
+        fetched[r.0] = true;
+        let f = find_relu_fusions(&g, &p, &reg, &all(&g, true), &all(&g, false), &fetched);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].producer, f[0].activation), (y, r));
+        assert_eq!(f[0].kernel, "fc+relu");
+        assert_eq!(f[0].kernel_object, 3);
+    }
+
+    #[test]
+    fn no_fused_kernel_means_no_fusion() {
+        let (g, _, r) = fc_relu_graph();
+        let reg = registry(false);
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let mut fetched = all(&g, false);
+        fetched[r.0] = true;
+        let f = find_relu_fusions(&g, &p, &reg, &all(&g, true), &all(&g, false), &fetched);
+        assert!(f.is_empty(), "must fall back to the unfused pair");
+    }
+
+    #[test]
+    fn fetched_producer_blocks_fusion() {
+        let (g, y, r) = fc_relu_graph();
+        let reg = registry(true);
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let mut fetched = all(&g, false);
+        fetched[y.0] = true; // the intermediate is observable
+        fetched[r.0] = true;
+        let f = find_relu_fusions(&g, &p, &reg, &all(&g, true), &all(&g, false), &fetched);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn explicitly_pinned_relu_blocks_cross_device_fusion() {
+        let (mut g, y, r) = fc_relu_graph();
+        let mut reg = KernelRegistry::new();
+        reg.register("fc", DeviceType::Fpga, 1);
+        reg.register(fused_relu_name("fc"), DeviceType::Fpga, 2);
+        reg.register("relu", DeviceType::Cpu, 3);
+        // The user pinned the relu to the CPU: fusing it into the FPGA
+        // dispatch would silently override that annotation.
+        g.set_device(r, DeviceType::Cpu);
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let mut fetched = all(&g, false);
+        fetched[r.0] = true;
+        let f = find_relu_fusions(&g, &p, &reg, &all(&g, true), &all(&g, false), &fetched);
+        assert!(f.is_empty(), "explicit CPU pin on relu must block FPGA fusion");
+        // Pinning it to the producer's own device keeps fusion legal.
+        g.set_device(r, DeviceType::Fpga);
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let f = find_relu_fusions(&g, &p, &reg, &all(&g, true), &all(&g, false), &fetched);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].producer, y);
+    }
+
+    #[test]
+    fn second_consumer_blocks_fusion() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 4], DType::F32).unwrap();
+        let w = g.constant("w", Tensor::zeros(&[4, 2], DType::F32)).unwrap();
+        let b = g.constant("b", Tensor::zeros(&[2], DType::F32)).unwrap();
+        let y = g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
+        let r = g.add("r", OpKind::Relu, &[y]).unwrap();
+        let s = g.add("s", OpKind::Softmax, &[y]).unwrap(); // second consumer of y
+        g.finalize().unwrap();
+        let mut reg = registry(true);
+        reg.register("softmax", DeviceType::Cpu, 4);
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let mut fetched = all(&g, false);
+        fetched[r.0] = true;
+        fetched[s.0] = true;
+        let f = find_relu_fusions(&g, &p, &reg, &all(&g, true), &all(&g, false), &fetched);
+        assert!(f.is_empty(), "y's value is needed by softmax too");
+    }
+}

@@ -10,6 +10,17 @@ use crate::hsa::agent::DeviceType;
 use crate::hsa::error::{HsaError, Result};
 use std::collections::HashMap;
 
+/// Suffix appended to a base kernel name to form its ReLU-fused variant
+/// (e.g. `"fc"` → `"fc+relu"`). The plan compiler's fusion pass looks these
+/// names up; backends that register them get single-dispatch FC+ReLU /
+/// Conv+ReLU steps, everyone else transparently falls back to the pair.
+pub const FUSED_RELU_SUFFIX: &str = "+relu";
+
+/// Registry key of the ReLU-fused variant of `base`.
+pub fn fused_relu_name(base: &str) -> String {
+    format!("{base}{FUSED_RELU_SUFFIX}")
+}
+
 /// One registered implementation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KernelEntry {
@@ -36,6 +47,13 @@ impl KernelRegistry {
 
     pub fn lookup(&self, name: &str, device: DeviceType) -> Option<u64> {
         self.entries.get(&(name.to_string(), device)).copied()
+    }
+
+    /// Kernel object of the ReLU-fused variant of `base` on `device`, if
+    /// one is registered (`None` = fusion must fall back to the unfused
+    /// pair).
+    pub fn lookup_fused_relu(&self, base: &str, device: DeviceType) -> Option<u64> {
+        self.lookup(&fused_relu_name(base), device)
     }
 
     /// Devices that implement `name`, in preference order (FPGA first —
@@ -122,6 +140,17 @@ mod tests {
         r.register("fc", DeviceType::Cpu, 9);
         assert_eq!(r.lookup("fc", DeviceType::Cpu), Some(9));
         assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn fused_relu_lookup_resolves_suffix_name() {
+        let mut r = KernelRegistry::new();
+        r.register("fc", DeviceType::Fpga, 1);
+        r.register(fused_relu_name("fc"), DeviceType::Fpga, 7);
+        assert_eq!(fused_relu_name("fc"), "fc+relu");
+        assert_eq!(r.lookup_fused_relu("fc", DeviceType::Fpga), Some(7));
+        assert_eq!(r.lookup_fused_relu("fc", DeviceType::Cpu), None);
+        assert_eq!(r.lookup_fused_relu("relu", DeviceType::Fpga), None);
     }
 
     #[test]

@@ -4,19 +4,25 @@
 //! The shape mirrors TF 1.x's C++ core: build a [`graph::Graph`] of ops,
 //! annotate nodes with a device ([`placer`] fills in the rest, soft-placing
 //! onto the FPGA when a kernel implementation is registered for it), then
-//! run it through a [`session::Session`] whose executor dispatches each
-//! node to its device's HSA queue.
+//! run it through a [`session::Session`]. The session compiles each
+//! `(feeds, fetches)` shape once into an [`plan::ExecutionPlan`] — pruned,
+//! constant-folded, op-fused, slot-allocated — and replays it on every
+//! subsequent `run`; the interpreted [`executor`] walk remains as the
+//! reference path.
 
 pub mod dtype;
 pub mod executor;
+pub mod fusion;
 pub mod graph;
 pub mod kernel;
 pub mod placer;
+pub mod plan;
 pub mod session;
 pub mod tensor;
 
 pub use dtype::DType;
 pub use graph::{Graph, NodeId, OpKind};
 pub use kernel::KernelRegistry;
+pub use plan::{ExecutionPlan, PlanOptions};
 pub use session::{Session, SessionOptions};
 pub use tensor::Tensor;

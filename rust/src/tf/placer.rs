@@ -103,19 +103,36 @@ pub fn place(
     Ok(PlacementMap { by_node, soft_placed })
 }
 
+/// Total preference order over devices. Fully deterministic — rank first,
+/// then the `DeviceType` ordering as tie-break — so default placement (and
+/// therefore plan-cache keys derived from it) is reproducible run to run
+/// regardless of registry iteration or sort-stability details.
+fn device_rank(d: DeviceType, prefer_fpga: bool) -> u8 {
+    if prefer_fpga {
+        match d {
+            DeviceType::Fpga => 0,
+            DeviceType::Gpu => 1,
+            DeviceType::Dsp => 2,
+            DeviceType::Cpu => 3,
+        }
+    } else {
+        // CPU-first order (the paper's Table III baseline runs).
+        match d {
+            DeviceType::Cpu => 0,
+            DeviceType::Fpga => 1,
+            DeviceType::Gpu => 2,
+            DeviceType::Dsp => 3,
+        }
+    }
+}
+
 fn pick_default(
     registry: &KernelRegistry,
     kernel: &str,
     opts: PlacerOptions,
 ) -> Option<Placement> {
-    let order: Vec<DeviceType> = if opts.prefer_fpga {
-        registry.devices_for(kernel)
-    } else {
-        // CPU-first order (the paper's Table III baseline runs).
-        let mut v = registry.devices_for(kernel);
-        v.sort_by_key(|d| if *d == DeviceType::Cpu { 0 } else { 1 });
-        v
-    };
+    let mut order = registry.devices_for(kernel);
+    order.sort_by_key(|d| (device_rank(*d, opts.prefer_fpga), *d));
     let device = *order.first()?;
     let obj = registry.lookup(kernel, device)?;
     Some(Placement::Device { device, kernel_object: obj })
@@ -162,6 +179,45 @@ mod tests {
         )
         .unwrap();
         assert_eq!(p.device_of(y), Some(DeviceType::Cpu));
+    }
+
+    #[test]
+    fn default_placement_is_deterministic_across_repeats() {
+        // Same kernel on every device: the pick must be identical on every
+        // call in both preference modes (plan-cache keys depend on it).
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[2, 2], DType::F32).unwrap();
+        let w = g.constant("w", Tensor::zeros(&[2, 2], DType::F32)).unwrap();
+        let b = g.constant("b", Tensor::zeros(&[2], DType::F32)).unwrap();
+        let y = g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
+        g.finalize().unwrap();
+        let mut reg = KernelRegistry::new();
+        for (i, d) in [DeviceType::Cpu, DeviceType::Fpga, DeviceType::Gpu, DeviceType::Dsp]
+            .into_iter()
+            .enumerate()
+        {
+            reg.register("fc", d, i as u64 + 1);
+        }
+        for prefer_fpga in [true, false] {
+            let opts = PlacerOptions { prefer_fpga, allow_soft_placement: true };
+            let first = place(&g, &reg, opts).unwrap().device_of(y);
+            for _ in 0..10 {
+                assert_eq!(place(&g, &reg, opts).unwrap().device_of(y), first);
+            }
+            let want = if prefer_fpga { DeviceType::Fpga } else { DeviceType::Cpu };
+            assert_eq!(first, Some(want));
+        }
+        // Rank tie (neither CPU nor FPGA): DeviceType order breaks the tie.
+        let mut reg2 = KernelRegistry::new();
+        reg2.register("fc", DeviceType::Dsp, 1);
+        reg2.register("fc", DeviceType::Gpu, 2);
+        let p = place(
+            &g,
+            &reg2,
+            PlacerOptions { prefer_fpga: false, allow_soft_placement: true },
+        )
+        .unwrap();
+        assert_eq!(p.device_of(y), Some(DeviceType::Gpu), "Gpu ranks before Dsp");
     }
 
     #[test]

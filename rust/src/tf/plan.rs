@@ -1,0 +1,912 @@
+//! Compile-once / replay-many execution plans.
+//!
+//! [`Session::run`](crate::tf::session::Session::run) used to re-walk the
+//! graph on every call: re-derive topological order and refcounts,
+//! re-resolve placements, and clone tensors through a per-run `HashMap`.
+//! An [`ExecutionPlan`] does all of that exactly once:
+//!
+//! 1. **Prune** — drop every node not reverse-reachable from the fetch set.
+//! 2. **Fold** — evaluate const-only subgraphs at compile time (structural
+//!    ops inline, compute ops via one real dispatch) and bake the results
+//!    in as constants.
+//! 3. **Fuse** — collapse `FullyConnected+Relu` / `Conv+Relu` pairs into a
+//!    single dispatch when the backend registers a fused kernel
+//!    (see [`crate::tf::fusion`]); otherwise keep the pair.
+//! 4. **Allocate** — liveness analysis assigns every value a slot in a
+//!    small reusable arena; the last consumer of a value *moves* it out of
+//!    its slot instead of cloning, and dead slots are recycled for later
+//!    outputs (only by steps already ordered after the slot's readers, so
+//!    out-of-order replay can never clobber a live tensor).
+//! 5. **Link** — each step gets a pre-resolved `(device, kernel_object)`
+//!    and a dependency count, so replay is a counter-driven loop with no
+//!    name or registry lookups.
+//!
+//! Replay issues every ready step immediately: inline steps run in place,
+//! device steps are dispatched *asynchronously* onto their queue, so
+//! independent steps on different devices (or on one device with a
+//! processor pool) execute concurrently instead of the interpreted
+//! executor's strictly serialized walk.
+
+use crate::hsa::agent::DeviceType;
+use crate::hsa::error::{HsaError, Result};
+use crate::hsa::packet::KernelArgs;
+use crate::hsa::signal::Signal;
+use crate::tf::dtype::DType;
+use crate::tf::executor::{check_feed, check_kernel_output, ExecEnv, RunStats};
+use crate::tf::fusion;
+use crate::tf::graph::{Graph, NodeId, OpKind};
+use crate::tf::kernel::KernelRegistry;
+use crate::tf::placer::{Placement, PlacementMap};
+use crate::tf::tensor::Tensor;
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+/// Pass toggles (all on by default; tests flip them to compare paths).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanOptions {
+    /// Collapse op+ReLU pairs into fused dispatches where registered.
+    pub fusion: bool,
+    /// Evaluate const-only subgraphs at compile time.
+    pub fold_constants: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions { fusion: true, fold_constants: true }
+    }
+}
+
+/// What a step does when replayed.
+#[derive(Debug, Clone)]
+pub enum StepOp {
+    /// Copy a fed placeholder tensor into the step's slot (validating
+    /// shape and dtype against the graph's declaration).
+    Feed { placeholder: String, shape: Vec<usize>, dtype: DType },
+    /// Inline reshape (Arc'd storage: no data copy).
+    Reshape { shape: Vec<usize> },
+    /// One asynchronous kernel dispatch on a pre-resolved device queue.
+    Dispatch { device: DeviceType, kernel_object: u64, kernel: String, fused: bool },
+}
+
+/// One input read: which arena slot, and whether this step may *move* the
+/// tensor out (it is the value's only reader and the value is not fetched).
+#[derive(Debug, Clone, Copy)]
+pub struct SlotRead {
+    pub slot: usize,
+    pub take: bool,
+    /// Value id expected in the slot (consumed by [`ExecutionPlan::validate`]).
+    pub value: usize,
+}
+
+/// One replayable step.
+#[derive(Debug, Clone)]
+pub struct PlanStep {
+    /// Node name (fused steps: `"producer+activation"`).
+    pub name: String,
+    pub op: StepOp,
+    pub inputs: Vec<SlotRead>,
+    pub out_slot: usize,
+    /// Value id this step produces (for validation).
+    pub out_value: usize,
+    pub out_shape: Vec<usize>,
+    pub out_dtype: DType,
+    /// Number of producing steps that must complete before this one issues.
+    pub num_deps: usize,
+    /// Steps unblocked when this one completes.
+    pub dependents: Vec<usize>,
+}
+
+/// Compile-time accounting.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanStats {
+    pub graph_nodes: usize,
+    /// Nodes dropped because nothing in the fetch set needs them.
+    pub pruned_nodes: usize,
+    /// Non-constant nodes evaluated at compile time (constant folding).
+    pub folded_nodes: usize,
+    /// Op pairs collapsed into fused dispatches.
+    pub fused_pairs: usize,
+    pub steps: usize,
+    pub dispatch_steps: usize,
+    /// Constants preloaded into the arena at the start of each replay.
+    pub const_values: usize,
+    /// Arena size — always ≤ live values thanks to slot recycling.
+    pub slots: usize,
+    pub compile_us: u128,
+}
+
+/// A compiled, replayable execution of one `(feeds, fetches)` shape of a
+/// placed graph. See the module docs for the pass pipeline.
+pub struct ExecutionPlan {
+    steps: Vec<PlanStep>,
+    /// `(slot, value id, tensor)` preloaded before the first step.
+    consts: Vec<(usize, usize, Tensor)>,
+    num_slots: usize,
+    /// `(slot, value id)` per fetch, in fetch order.
+    fetch_slots: Vec<(usize, usize)>,
+    stats: PlanStats,
+}
+
+impl ExecutionPlan {
+    pub fn steps(&self) -> &[PlanStep] {
+        &self.steps
+    }
+
+    pub fn stats(&self) -> &PlanStats {
+        &self.stats
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.num_slots
+    }
+
+    /// Compile the graph for one fetch set. `env` is used only at compile
+    /// time, to evaluate const-only subgraphs with the real kernels.
+    pub fn compile(
+        graph: &Graph,
+        placement: &PlacementMap,
+        registry: &KernelRegistry,
+        env: &ExecEnv<'_>,
+        fetches: &[&str],
+        opts: PlanOptions,
+    ) -> Result<ExecutionPlan> {
+        assert!(graph.is_finalized(), "finalize the graph before compiling");
+        let t0 = Instant::now();
+
+        let fetch_ids: Vec<NodeId> = fetches
+            .iter()
+            .map(|name| {
+                graph.by_name(name).ok_or_else(|| {
+                    HsaError::Runtime(format!("fetch '{name}' not in graph"))
+                })
+            })
+            .collect::<Result<_>>()?;
+        let mut fetched = vec![false; graph.len()];
+        for &f in &fetch_ids {
+            fetched[f.0] = true;
+        }
+
+        // Pass 1: prune — reverse reachability from the fetch set.
+        let mut live = vec![false; graph.len()];
+        let mut stack: Vec<NodeId> = fetch_ids.clone();
+        while let Some(id) = stack.pop() {
+            if live[id.0] {
+                continue;
+            }
+            live[id.0] = true;
+            stack.extend_from_slice(&graph.node(id).inputs);
+        }
+        let live_count = live.iter().filter(|&&l| l).count();
+
+        // Pass 2: constant folding. `const_val[i]` holds the compile-time
+        // value of node i if it is constant (Constant nodes always are;
+        // with folding on, any live node whose inputs are all constant is
+        // evaluated — structural ops inline, compute ops via one real
+        // dispatch on the node's placed device).
+        let mut const_val: Vec<Option<Tensor>> = vec![None; graph.len()];
+        let mut folded_nodes = 0usize;
+        for id in graph.topo_order() {
+            if !live[id.0] {
+                continue;
+            }
+            let node = graph.node(id);
+            match &node.op {
+                OpKind::Constant(t) => const_val[id.0] = Some(t.clone()),
+                OpKind::Placeholder { .. } => {}
+                _ => {
+                    if !opts.fold_constants
+                        || node.inputs.iter().any(|i| const_val[i.0].is_none())
+                    {
+                        continue;
+                    }
+                    let inputs: Vec<Tensor> = node
+                        .inputs
+                        .iter()
+                        .map(|i| const_val[i.0].clone().unwrap())
+                        .collect();
+                    let out = match placement.by_node.get(&id) {
+                        Some(Placement::Inline) | None => match &node.op {
+                            OpKind::Reshape { shape } => inputs[0].reshape(shape)?,
+                            other => {
+                                return Err(HsaError::Runtime(format!(
+                                    "op {other:?} is not inline-executable"
+                                )))
+                            }
+                        },
+                        Some(Placement::Device { device, kernel_object }) => {
+                            let queue = env.queues.get(device).ok_or_else(|| {
+                                HsaError::Runtime(format!("no queue for device {device}"))
+                            })?;
+                            let outs =
+                                env.runtime.dispatch_sync(queue, *kernel_object, inputs)?;
+                            // Shape checked below (shared with the reshape branch).
+                            check_kernel_output(&node.name, &[], outs)?
+                        }
+                    };
+                    if !node.out_shape.is_empty() && out.shape() != node.out_shape.as_slice()
+                    {
+                        return Err(HsaError::Runtime(format!(
+                            "node '{}': kernel produced {:?}, inference said {:?}",
+                            node.name,
+                            out.shape(),
+                            node.out_shape
+                        )));
+                    }
+                    const_val[id.0] = Some(out);
+                    folded_nodes += 1;
+                }
+            }
+        }
+        let is_const: Vec<bool> = const_val.iter().map(|v| v.is_some()).collect();
+
+        // Pass 3: fusion over the live, non-constant remainder.
+        let fusions = if opts.fusion {
+            fusion::find_relu_fusions(graph, placement, registry, &live, &is_const, &fetched)
+        } else {
+            Vec::new()
+        };
+        let mut fused_by_producer: HashMap<NodeId, fusion::Fusion> = HashMap::new();
+        let mut fused_activation = vec![false; graph.len()];
+        for f in fusions {
+            fused_activation[f.activation.0] = true;
+            fused_by_producer.insert(f.producer, f);
+        }
+        let fused_pairs = fused_by_producer.len();
+
+        // Pass 4: emit steps in topological order.
+        struct EmitStep {
+            out_node: NodeId,
+            name: String,
+            op: StepOp,
+            input_nodes: Vec<NodeId>,
+            out_shape: Vec<usize>,
+            out_dtype: DType,
+        }
+        let mut emits: Vec<EmitStep> = Vec::new();
+        for id in graph.topo_order() {
+            if !live[id.0] || is_const[id.0] || fused_activation[id.0] {
+                continue;
+            }
+            let node = graph.node(id);
+            if let Some(f) = fused_by_producer.get(&id) {
+                let act = graph.node(f.activation);
+                emits.push(EmitStep {
+                    out_node: f.activation,
+                    name: format!("{}+{}", node.name, act.name),
+                    op: StepOp::Dispatch {
+                        device: f.device,
+                        kernel_object: f.kernel_object,
+                        kernel: f.kernel.clone(),
+                        fused: true,
+                    },
+                    input_nodes: node.inputs.clone(),
+                    out_shape: act.out_shape.clone(),
+                    out_dtype: act.out_dtype,
+                });
+                continue;
+            }
+            let op = match &node.op {
+                OpKind::Placeholder { shape, dtype } => StepOp::Feed {
+                    placeholder: node.name.clone(),
+                    shape: shape.clone(),
+                    dtype: *dtype,
+                },
+                OpKind::Constant(_) => unreachable!("constants are folded"),
+                OpKind::Reshape { shape } => StepOp::Reshape { shape: shape.clone() },
+                other => match placement.by_node.get(&id) {
+                    Some(Placement::Device { device, kernel_object }) => StepOp::Dispatch {
+                        device: *device,
+                        kernel_object: *kernel_object,
+                        kernel: other.kernel_name().unwrap_or_default(),
+                        fused: false,
+                    },
+                    _ => {
+                        return Err(HsaError::Runtime(format!(
+                            "op {other:?} is not inline-executable"
+                        )))
+                    }
+                },
+            };
+            emits.push(EmitStep {
+                out_node: id,
+                name: node.name.clone(),
+                op,
+                input_nodes: node.inputs.clone(),
+                out_shape: node.out_shape.clone(),
+                out_dtype: node.out_dtype,
+            });
+        }
+
+        // Value numbering: constants that something still reads (folding
+        // can orphan a Constant's direct value), then one value per step.
+        let mut used_const = vec![false; graph.len()];
+        for e in &emits {
+            for &n in &e.input_nodes {
+                if is_const[n.0] {
+                    used_const[n.0] = true;
+                }
+            }
+        }
+        for &f in &fetch_ids {
+            if is_const[f.0] {
+                used_const[f.0] = true;
+            }
+        }
+        let mut value_of_node: Vec<Option<usize>> = vec![None; graph.len()];
+        let mut const_tensors: Vec<Tensor> = Vec::new();
+        for (i, used) in used_const.iter().enumerate() {
+            if *used {
+                value_of_node[i] = Some(const_tensors.len());
+                const_tensors.push(const_val[i].clone().unwrap());
+            }
+        }
+        let num_const_values = const_tensors.len();
+        for (si, e) in emits.iter().enumerate() {
+            value_of_node[e.out_node.0] = Some(num_const_values + si);
+        }
+        let num_values = num_const_values + emits.len();
+
+        // Liveness: per value, the reading steps and the last read.
+        let mut step_inputs: Vec<Vec<usize>> = Vec::with_capacity(emits.len());
+        let mut last_use: Vec<Option<usize>> = vec![None; num_values];
+        let mut readers: Vec<Vec<usize>> = vec![Vec::new(); num_values];
+        for (si, e) in emits.iter().enumerate() {
+            let vals: Vec<usize> = e
+                .input_nodes
+                .iter()
+                .map(|n| {
+                    value_of_node[n.0].ok_or_else(|| {
+                        HsaError::Runtime(format!(
+                            "plan: input of '{}' has no value (internal)",
+                            e.name
+                        ))
+                    })
+                })
+                .collect::<Result<_>>()?;
+            for &v in &vals {
+                last_use[v] = Some(si);
+                if readers[v].last() != Some(&si) {
+                    readers[v].push(si);
+                }
+            }
+            step_inputs.push(vals);
+        }
+        let mut value_fetched = vec![false; num_values];
+        let mut fetch_values = Vec::with_capacity(fetch_ids.len());
+        for &f in &fetch_ids {
+            let v = value_of_node[f.0].ok_or_else(|| {
+                HsaError::Runtime("plan: fetch lost during compilation (internal)".into())
+            })?;
+            value_fetched[v] = true;
+            fetch_values.push(v);
+        }
+
+        // Pass 5: slot assignment + dependency edges.
+        let mut slot_of_value = vec![usize::MAX; num_values];
+        let mut num_slots = 0usize;
+        for slot in slot_of_value.iter_mut().take(num_const_values) {
+            *slot = num_slots;
+            num_slots += 1;
+        }
+        // Freed slots carry the step indices that read the previous
+        // occupant: a slot may only be recycled by a step that already
+        // depends on all of them, otherwise an out-of-order replay could
+        // overwrite a tensor a not-yet-issued step still needs.
+        let mut free: Vec<(usize, Vec<usize>)> = Vec::new();
+        let mut steps: Vec<PlanStep> = Vec::with_capacity(emits.len());
+        let mut deps_per_step: Vec<Vec<usize>> = Vec::with_capacity(emits.len());
+        for (si, e) in emits.iter().enumerate() {
+            let vals = &step_inputs[si];
+            let mut deps: Vec<usize> = Vec::new();
+            for &v in vals {
+                if v >= num_const_values {
+                    let p = v - num_const_values;
+                    if !deps.contains(&p) {
+                        deps.push(p);
+                    }
+                }
+            }
+            let mut inputs = Vec::with_capacity(vals.len());
+            for (k, &v) in vals.iter().enumerate() {
+                // Move-out is only safe when no other step ever reads the
+                // value (replay is out of order across independent steps).
+                let take = readers[v].len() == 1
+                    && readers[v][0] == si
+                    && !value_fetched[v]
+                    && !vals[k + 1..].contains(&v);
+                inputs.push(SlotRead { slot: slot_of_value[v], take, value: v });
+            }
+            let mut freed_here: Vec<usize> = Vec::new();
+            for &v in vals {
+                if last_use[v] == Some(si) && !value_fetched[v] && !freed_here.contains(&v)
+                {
+                    freed_here.push(v);
+                    free.push((slot_of_value[v], readers[v].clone()));
+                }
+            }
+            let reusable = free.iter().position(|(_, war)| {
+                war.iter().all(|&r| r == si || deps.contains(&r))
+            });
+            let out_slot = match reusable {
+                Some(ix) => free.remove(ix).0,
+                None => {
+                    let s = num_slots;
+                    num_slots += 1;
+                    s
+                }
+            };
+            slot_of_value[num_const_values + si] = out_slot;
+            steps.push(PlanStep {
+                name: e.name.clone(),
+                op: e.op.clone(),
+                inputs,
+                out_slot,
+                out_value: num_const_values + si,
+                out_shape: e.out_shape.clone(),
+                out_dtype: e.out_dtype,
+                num_deps: deps.len(),
+                dependents: Vec::new(),
+            });
+            deps_per_step.push(deps);
+        }
+        for (si, deps) in deps_per_step.iter().enumerate() {
+            for &p in deps {
+                steps[p].dependents.push(si);
+            }
+        }
+
+        let consts: Vec<(usize, usize, Tensor)> = const_tensors
+            .into_iter()
+            .enumerate()
+            .map(|(v, t)| (slot_of_value[v], v, t))
+            .collect();
+        let fetch_slots: Vec<(usize, usize)> =
+            fetch_values.iter().map(|&v| (slot_of_value[v], v)).collect();
+
+        let dispatch_steps =
+            steps.iter().filter(|s| matches!(s.op, StepOp::Dispatch { .. })).count();
+        let plan = ExecutionPlan {
+            stats: PlanStats {
+                graph_nodes: graph.len(),
+                pruned_nodes: graph.len() - live_count,
+                folded_nodes,
+                fused_pairs,
+                steps: steps.len(),
+                dispatch_steps,
+                const_values: num_const_values,
+                slots: num_slots,
+                compile_us: t0.elapsed().as_micros(),
+            },
+            steps,
+            consts,
+            num_slots,
+            fetch_slots,
+        };
+        plan.validate().map_err(|e| {
+            HsaError::Runtime(format!("plan failed self-validation (internal): {e}"))
+        })?;
+        Ok(plan)
+    }
+
+    /// Symbolically execute the plan in program order, checking that every
+    /// step finds exactly the value it expects in each slot — i.e. that
+    /// the slot allocator never aliased two live tensors and every fetch
+    /// survives to the end.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        let mut slots: Vec<Option<usize>> = vec![None; self.num_slots];
+        for (slot, value, _) in &self.consts {
+            if slots[*slot].is_some() {
+                return Err(format!("two constants share slot {slot}"));
+            }
+            slots[*slot] = Some(*value);
+        }
+        for (si, step) in self.steps.iter().enumerate() {
+            for r in &step.inputs {
+                if slots[r.slot] != Some(r.value) {
+                    return Err(format!(
+                        "step {si} '{}' expected value {} in slot {}, found {:?}",
+                        step.name, r.value, r.slot, slots[r.slot]
+                    ));
+                }
+            }
+            for r in &step.inputs {
+                if r.take {
+                    slots[r.slot] = None;
+                }
+            }
+            slots[step.out_slot] = Some(step.out_value);
+        }
+        for (slot, value) in &self.fetch_slots {
+            if slots[*slot] != Some(*value) {
+                return Err(format!(
+                    "fetch value {value} no longer in slot {slot}: {:?}",
+                    slots[*slot]
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Replay the plan: dependency-counter scheduling, asynchronous device
+    /// dispatch (independent steps overlap across queues), slot-arena
+    /// tensor traffic.
+    pub fn replay(
+        &self,
+        env: &ExecEnv<'_>,
+        feeds: &HashMap<String, Tensor>,
+    ) -> Result<(Vec<Tensor>, RunStats)> {
+        let t0 = Instant::now();
+        // Note: constants are *preloaded*, not executed, so they do not
+        // count toward `inline_ops` — replay reports only the structural
+        // work it actually performs (feeds and reshapes). The interpreter
+        // counts constant nodes it executes, so the two paths' inline_ops
+        // are intentionally not comparable; `dispatches` is.
+        let mut stats = RunStats { plan_steps: self.steps.len() as u64, ..Default::default() };
+        let mut values: Vec<Option<Tensor>> = vec![None; self.num_slots];
+        for (slot, _, t) in &self.consts {
+            values[*slot] = Some(t.clone());
+        }
+        let mut remaining: Vec<usize> = self.steps.iter().map(|s| s.num_deps).collect();
+        let mut ready: VecDeque<usize> = (0..self.steps.len())
+            .filter(|&i| self.steps[i].num_deps == 0)
+            .collect();
+        let mut inflight: VecDeque<(usize, Signal, KernelArgs)> = VecDeque::new();
+        let mut done = 0usize;
+
+        while done < self.steps.len() {
+            while let Some(i) = ready.pop_front() {
+                let step = &self.steps[i];
+                let mut ins: Vec<Tensor> = Vec::with_capacity(step.inputs.len());
+                for r in &step.inputs {
+                    let t = if r.take {
+                        values[r.slot].take()
+                    } else {
+                        values[r.slot].clone()
+                    };
+                    ins.push(t.ok_or_else(|| {
+                        HsaError::Runtime(format!("input of '{}' missing", step.name))
+                    })?);
+                }
+                match &step.op {
+                    StepOp::Feed { placeholder, shape, dtype } => {
+                        let t = feeds.get(placeholder).ok_or_else(|| {
+                            HsaError::Runtime(format!(
+                                "placeholder '{placeholder}' not fed"
+                            ))
+                        })?;
+                        check_feed(placeholder, shape, *dtype, t)?;
+                        stats.inline_ops += 1;
+                        values[step.out_slot] = Some(t.clone());
+                        complete(i, &self.steps, &mut remaining, &mut ready, &mut done);
+                    }
+                    StepOp::Reshape { shape } => {
+                        stats.inline_ops += 1;
+                        values[step.out_slot] = Some(ins.swap_remove(0).reshape(shape)?);
+                        complete(i, &self.steps, &mut remaining, &mut ready, &mut done);
+                    }
+                    StepOp::Dispatch { device, kernel_object, fused, .. } => {
+                        let queue = env.queues.get(device).ok_or_else(|| {
+                            HsaError::Runtime(format!("no queue for device {device}"))
+                        })?;
+                        stats.dispatches += 1;
+                        *stats.dispatches_by_device.entry(*device).or_insert(0) += 1;
+                        if *fused {
+                            stats.fused_dispatches += 1;
+                        }
+                        let (sig, args) =
+                            env.runtime.dispatch_async(queue, *kernel_object, ins)?;
+                        inflight.push_back((i, sig, args));
+                    }
+                }
+            }
+            if done == self.steps.len() {
+                break;
+            }
+            // Harvest the oldest in-flight dispatch (the others keep
+            // executing on their queues meanwhile).
+            let (i, sig, args) = inflight.pop_front().ok_or_else(|| {
+                HsaError::Runtime("plan replay stalled with no work in flight (internal)".into())
+            })?;
+            sig.wait_eq(0, Some(crate::hsa::runtime::DISPATCH_TIMEOUT))?;
+            let outs = match args.take_output() {
+                Some(Ok(outs)) => outs,
+                Some(Err(msg)) => return Err(HsaError::KernelFailed(msg)),
+                None => {
+                    return Err(HsaError::KernelFailed(
+                        "kernel retired without writing outputs".into(),
+                    ))
+                }
+            };
+            let step = &self.steps[i];
+            let out = check_kernel_output(&step.name, &step.out_shape, outs)?;
+            values[step.out_slot] = Some(out);
+            complete(i, &self.steps, &mut remaining, &mut ready, &mut done);
+        }
+
+        let mut results = Vec::with_capacity(self.fetch_slots.len());
+        for (slot, _) in &self.fetch_slots {
+            results.push(values[*slot].clone().ok_or_else(|| {
+                HsaError::Runtime("fetch missing after replay (internal)".into())
+            })?);
+        }
+        stats.wall_us = t0.elapsed().as_micros();
+        Ok((results, stats))
+    }
+}
+
+fn complete(
+    i: usize,
+    steps: &[PlanStep],
+    remaining: &mut [usize],
+    ready: &mut VecDeque<usize>,
+    done: &mut usize,
+) {
+    *done += 1;
+    for &d in &steps[i].dependents {
+        remaining[d] -= 1;
+        if remaining[d] == 0 {
+            ready.push_back(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::a53::CpuKernelClass;
+    use crate::cpu::device::{CpuAgent, CpuKernel};
+    use crate::hsa::queue::Queue;
+    use crate::hsa::runtime::HsaRuntime;
+    use crate::tf::kernel::fused_relu_name;
+    use crate::tf::placer::{place, PlacerOptions};
+    use std::sync::Arc;
+
+    fn cpu_env(
+        with_fused: bool,
+    ) -> (HsaRuntime, HashMap<DeviceType, Queue>, KernelRegistry) {
+        let cpu = CpuAgent::with_defaults();
+        let mut reg = KernelRegistry::new();
+        let mut add = |name: &str,
+                       f: Arc<dyn Fn(&[Tensor]) -> Result<Vec<Tensor>> + Send + Sync>| {
+            let id = cpu.register_kernel(CpuKernel {
+                name: name.into(),
+                func: f,
+                class: CpuKernelClass::Memory,
+                op_template: None,
+            });
+            reg.register(name, DeviceType::Cpu, id);
+        };
+        add("fc", Arc::new(|ins| Ok(vec![crate::ops::fc_f32(&ins[0], &ins[1], &ins[2])?])));
+        add("relu", Arc::new(|ins| Ok(vec![crate::ops::relu_f32(&ins[0])?])));
+        add("add", Arc::new(|ins| Ok(vec![crate::ops::add_f32(&ins[0], &ins[1])?])));
+        add("softmax", Arc::new(|ins| Ok(vec![crate::ops::softmax_f32(&ins[0])?])));
+        if with_fused {
+            add(
+                &fused_relu_name("fc"),
+                Arc::new(|ins| Ok(vec![crate::ops::fc_relu_f32(&ins[0], &ins[1], &ins[2])?])),
+            );
+        }
+        let rt = HsaRuntime::builder().with_agent(cpu).build();
+        let q = rt.create_queue(rt.agent_by_type(DeviceType::Cpu).unwrap(), 64);
+        let mut queues = HashMap::new();
+        queues.insert(DeviceType::Cpu, q);
+        (rt, queues, reg)
+    }
+
+    fn fc_relu_graph() -> Graph {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[2, 3], DType::F32).unwrap();
+        let w = g
+            .constant("w", Tensor::from_f32(&[3, 2], vec![1.0, -1.0, 0.5, 0.5, -2.0, 2.0]).unwrap())
+            .unwrap();
+        let b = g.constant("b", Tensor::from_f32(&[2], vec![0.25, -0.25]).unwrap()).unwrap();
+        let y = g.add("y", OpKind::FullyConnected, &[x, w, b]).unwrap();
+        g.add("out", OpKind::Relu, &[y]).unwrap();
+        g.finalize().unwrap();
+        g
+    }
+
+    fn feeds(x: Tensor) -> HashMap<String, Tensor> {
+        let mut m = HashMap::new();
+        m.insert("x".to_string(), x);
+        m
+    }
+
+    #[test]
+    fn fusion_halves_dispatches_and_matches_interpreter() {
+        let (rt, queues, reg) = cpu_env(true);
+        let g = fc_relu_graph();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let x = Tensor::from_f32(&[2, 3], vec![1.0, -2.0, 0.5, 0.0, 3.0, -1.0]).unwrap();
+
+        let plan =
+            ExecutionPlan::compile(&g, &p, &reg, &env, &["out"], PlanOptions::default())
+                .unwrap();
+        assert_eq!(plan.stats().fused_pairs, 1);
+        assert_eq!(plan.stats().dispatch_steps, 1, "FC+Relu is one fused dispatch");
+        let (outs, stats) = plan.replay(&env, &feeds(x.clone())).unwrap();
+        assert_eq!(stats.dispatches, 1);
+        assert_eq!(stats.fused_dispatches, 1);
+
+        let (ref_outs, ref_stats) =
+            crate::tf::executor::run(&g, &p, &env, &feeds(x), &["out"]).unwrap();
+        assert_eq!(ref_stats.dispatches, 2, "interpreter never fuses");
+        assert_eq!(outs[0], ref_outs[0], "fused replay must be bitwise identical");
+        assert!(stats.dispatches < ref_stats.dispatches);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn fusion_falls_back_cleanly_without_fused_kernel() {
+        let (rt, queues, reg) = cpu_env(false);
+        let g = fc_relu_graph();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let plan =
+            ExecutionPlan::compile(&g, &p, &reg, &env, &["out"], PlanOptions::default())
+                .unwrap();
+        assert_eq!(plan.stats().fused_pairs, 0);
+        assert_eq!(plan.stats().dispatch_steps, 2, "unfused pair survives");
+        let x = Tensor::from_f32(&[2, 3], vec![0.5; 6]).unwrap();
+        let (outs, stats) = plan.replay(&env, &feeds(x.clone())).unwrap();
+        assert_eq!(stats.dispatches, 2);
+        assert_eq!(stats.fused_dispatches, 0);
+        let (ref_outs, _) =
+            crate::tf::executor::run(&g, &p, &env, &feeds(x), &["out"]).unwrap();
+        assert_eq!(outs[0], ref_outs[0]);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn constant_folding_removes_const_only_chains() {
+        // relu(w) is const-only: folded at compile time; only the add of
+        // the placeholder remains a dispatch.
+        let (rt, queues, reg) = cpu_env(false);
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[2, 2], DType::F32).unwrap();
+        let w = g
+            .constant("w", Tensor::from_f32(&[2, 2], vec![-1.0, 2.0, -3.0, 4.0]).unwrap())
+            .unwrap();
+        let r = g.add("rw", OpKind::Relu, &[w]).unwrap();
+        g.add("out", OpKind::Add, &[x, r]).unwrap();
+        g.finalize().unwrap();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+
+        let plan =
+            ExecutionPlan::compile(&g, &p, &reg, &env, &["out"], PlanOptions::default())
+                .unwrap();
+        assert_eq!(plan.stats().folded_nodes, 1, "relu(const) folded");
+        assert_eq!(plan.stats().dispatch_steps, 1, "only the add dispatches");
+        let x = Tensor::from_f32(&[2, 2], vec![1.0; 4]).unwrap();
+        let (outs, stats) = plan.replay(&env, &feeds(x)).unwrap();
+        assert_eq!(stats.dispatches, 1);
+        assert_eq!(outs[0].as_f32().unwrap(), &[1.0, 3.0, 1.0, 5.0]);
+
+        // With folding off the chain stays in the plan.
+        let plan2 = ExecutionPlan::compile(
+            &g,
+            &p,
+            &reg,
+            &env,
+            &["out"],
+            PlanOptions { fold_constants: false, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(plan2.stats().folded_nodes, 0);
+        assert_eq!(plan2.stats().dispatch_steps, 2);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn pruning_drops_nodes_outside_fetch_cone() {
+        let (rt, queues, reg) = cpu_env(false);
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 2], DType::F32).unwrap();
+        g.add("dead", OpKind::Relu, &[x]).unwrap();
+        let live = g.add("live", OpKind::Relu, &[x]).unwrap();
+        g.add("also_dead", OpKind::Softmax, &[live]).unwrap();
+        g.finalize().unwrap();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let plan =
+            ExecutionPlan::compile(&g, &p, &reg, &env, &["live"], PlanOptions::default())
+                .unwrap();
+        assert_eq!(plan.stats().pruned_nodes, 2);
+        assert_eq!(plan.stats().dispatch_steps, 1);
+        let (outs, stats) =
+            plan.replay(&env, &feeds(Tensor::from_f32(&[1, 2], vec![-1.0, 2.0]).unwrap()))
+                .unwrap();
+        assert_eq!(stats.dispatches, 1, "dead relu and softmax never dispatch");
+        assert_eq!(outs[0].as_f32().unwrap(), &[0.0, 2.0]);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn slot_arena_reuses_slots_without_aliasing() {
+        // A long chain must execute in a small arena; a diamond must keep
+        // both live branches in distinct slots. validate() proves no
+        // aliasing; the stats prove reuse actually happened.
+        let (rt, queues, reg) = cpu_env(false);
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 4], DType::F32).unwrap();
+        let mut prev = x;
+        for i in 0..6 {
+            prev = g.add(format!("r{i}"), OpKind::Relu, &[prev]).unwrap();
+        }
+        let a = g.add("a", OpKind::Relu, &[prev]).unwrap();
+        let b = g.add("b", OpKind::Softmax, &[prev]).unwrap();
+        g.add("sum", OpKind::Add, &[a, b]).unwrap();
+        g.finalize().unwrap();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let plan =
+            ExecutionPlan::compile(&g, &p, &reg, &env, &["sum"], PlanOptions::default())
+                .unwrap();
+        plan.validate().expect("no two live tensors may share a slot");
+        assert!(
+            plan.num_slots() < plan.steps().len(),
+            "chain slots must be recycled: {} slots for {} steps",
+            plan.num_slots(),
+            plan.steps().len()
+        );
+        let x = Tensor::from_f32(&[1, 4], vec![0.1, 0.2, 0.3, 0.4]).unwrap();
+        let (outs, _) = plan.replay(&env, &feeds(x.clone())).unwrap();
+        let (ref_outs, _) =
+            crate::tf::executor::run(&g, &p, &env, &feeds(x), &["sum"]).unwrap();
+        assert_eq!(outs[0], ref_outs[0]);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn fetched_intermediate_is_never_moved_or_clobbered() {
+        let (rt, queues, reg) = cpu_env(true);
+        let g = fc_relu_graph();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+        // Fetching "y" blocks fusion and pins y's slot for the whole run.
+        let plan =
+            ExecutionPlan::compile(&g, &p, &reg, &env, &["out", "y"], PlanOptions::default())
+                .unwrap();
+        assert_eq!(plan.stats().fused_pairs, 0, "fetched intermediate blocks fusion");
+        let x = Tensor::from_f32(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, -2.0, -3.0]).unwrap();
+        let (outs, _) = plan.replay(&env, &feeds(x.clone())).unwrap();
+        let (ref_outs, _) =
+            crate::tf::executor::run(&g, &p, &env, &feeds(x), &["out", "y"]).unwrap();
+        assert_eq!(outs[0], ref_outs[0]);
+        assert_eq!(outs[1], ref_outs[1]);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn unknown_fetch_fails_at_compile_time() {
+        let (rt, queues, reg) = cpu_env(false);
+        let g = fc_relu_graph();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let err =
+            ExecutionPlan::compile(&g, &p, &reg, &env, &["zzz"], PlanOptions::default())
+                .unwrap_err();
+        assert!(err.to_string().contains("zzz"), "{err}");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn replay_validates_feeds_like_the_interpreter() {
+        let (rt, queues, reg) = cpu_env(false);
+        let g = fc_relu_graph();
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let plan =
+            ExecutionPlan::compile(&g, &p, &reg, &env, &["out"], PlanOptions::default())
+                .unwrap();
+        let err = plan.replay(&env, &HashMap::new()).unwrap_err();
+        assert!(err.to_string().contains("not fed"), "{err}");
+        let err = plan
+            .replay(&env, &feeds(Tensor::zeros(&[3, 3], DType::F32)))
+            .unwrap_err();
+        assert!(err.to_string().contains("expected"), "{err}");
+        rt.shutdown();
+    }
+}

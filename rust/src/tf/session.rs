@@ -3,16 +3,22 @@
 //! service, artifact store — exactly the "device/kernel setup" cost that
 //! Table II's first row measures.
 //!
-//! Two execution paths:
+//! Three execution paths:
 //!
-//! * [`Session::run`] — synchronous: topological walk, one blocking HSA
-//!   dispatch per placed node.
+//! * [`Session::run`] — compiles the `(feeds, fetches)` shape once into an
+//!   [`ExecutionPlan`] (pruning, constant folding, op fusion, slot-based
+//!   buffer arena), caches it, and *replays* it — no graph walking, no
+//!   per-run name/registry lookups; independent steps dispatch
+//!   concurrently across device queues.
 //! * [`Session::run_async`] — pipelined: for graphs whose fetch is one
 //!   device-placed op fed only by structural ops (the serving shape),
 //!   enqueue the AQL packet and return a [`PendingRun`] immediately; the
 //!   caller overlaps further submissions with the in-flight kernel and
 //!   harvests the result off the completion signal. Other graph shapes
-//!   transparently fall back to a synchronous run.
+//!   transparently fall back to a (plan-replayed) synchronous run.
+//! * [`Session::run_interpreted`] — the legacy topological walk (one
+//!   blocking HSA dispatch per placed node), kept as the reference the
+//!   plan path is property-tested against and as the benchmark baseline.
 
 use crate::cpu::a53::CpuKernelClass;
 use crate::cpu::device::{CpuAgent, CpuKernel};
@@ -29,14 +35,17 @@ use crate::reconfig::manager::ReconfigStats;
 use crate::reconfig::policy::PolicyKind;
 use crate::runtime::artifact::ArtifactStore;
 use crate::runtime::pjrt::PjrtService;
+use crate::tf::dtype::DType;
 use crate::tf::executor::{self, ExecEnv, RunStats};
 use crate::tf::graph::{Graph, NodeId, OpKind};
-use crate::tf::kernel::KernelRegistry;
+use crate::tf::kernel::{fused_relu_name, KernelRegistry};
 use crate::tf::placer::{place, Placement, PlacementMap, PlacerOptions};
+use crate::tf::plan::{ExecutionPlan, PlanOptions};
 use crate::tf::tensor::Tensor;
 use crate::util::prng::Rng;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Session configuration.
@@ -61,6 +70,9 @@ pub struct SessionOptions {
     /// region), which the async serving pipeline relies on. See
     /// `HsaRuntime::create_queue_with_processors` for ordering caveats.
     pub dispatch_workers: usize,
+    /// Plan-compiler pass toggles (fusion, constant folding). Both on by
+    /// default; `run` always goes through cached plans either way.
+    pub plan: PlanOptions,
 }
 
 impl Default for SessionOptions {
@@ -75,6 +87,7 @@ impl Default for SessionOptions {
             realtime: false,
             trace: None,
             dispatch_workers: 1,
+            plan: PlanOptions::default(),
         }
     }
 }
@@ -251,6 +264,50 @@ impl PendingRun {
     }
 }
 
+/// Cache key of a compiled plan: the fetch list (order-sensitive — it is
+/// the output order) plus the name-sorted feed signature (name, shape,
+/// dtype). A feed whose shape changes therefore misses the cache instead
+/// of replaying a stale plan. Only feeds naming a graph placeholder enter
+/// the key — extraneous feeds cannot affect the plan, and keying on them
+/// would let a caller with a varying junk feed grow the cache per call.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    fetches: Vec<String>,
+    feeds: Vec<(String, Vec<usize>, DType)>,
+}
+
+impl PlanKey {
+    fn new(graph: &Graph, feeds: &HashMap<String, Tensor>, fetches: &[&str]) -> PlanKey {
+        let mut feed_sig: Vec<(String, Vec<usize>, DType)> = feeds
+            .iter()
+            .filter(|(n, _)| {
+                graph
+                    .by_name(n)
+                    .is_some_and(|id| matches!(graph.node(id).op, OpKind::Placeholder { .. }))
+            })
+            .map(|(n, t)| (n.clone(), t.shape().to_vec(), t.dtype()))
+            .collect();
+        feed_sig.sort();
+        PlanKey {
+            fetches: fetches.iter().map(|s| s.to_string()).collect(),
+            feeds: feed_sig,
+        }
+    }
+}
+
+/// Plan-cache accounting (see [`Session::plan_cache_stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Plans currently cached.
+    pub entries: usize,
+    /// Compilations performed (cache misses).
+    pub compiles: u64,
+    /// Replays served from the cache.
+    pub hits: u64,
+    /// Total time spent compiling plans, in µs.
+    pub compile_us_total: u64,
+}
+
 /// The session.
 pub struct Session {
     graph: Graph,
@@ -263,6 +320,15 @@ pub struct Session {
     weights: Arc<WeightBank>,
     _pjrt: Option<PjrtService>,
     setup: SetupTiming,
+    plan_opts: PlanOptions,
+    plans: RwLock<HashMap<PlanKey, Arc<ExecutionPlan>>>,
+    /// Serializes compilations (double-checked against `plans`), so two
+    /// threads missing on the same key never both run the compile — which
+    /// matters because constant folding issues real dispatches.
+    plan_compile_lock: Mutex<()>,
+    plan_compiles: AtomicU64,
+    plan_hits: AtomicU64,
+    plan_compile_us: AtomicU64,
 }
 
 impl Session {
@@ -389,10 +455,21 @@ impl Session {
             weights,
             _pjrt: pjrt,
             setup,
+            plan_opts: opts.plan,
+            plans: RwLock::new(HashMap::new()),
+            plan_compile_lock: Mutex::new(()),
+            plan_compiles: AtomicU64::new(0),
+            plan_hits: AtomicU64::new(0),
+            plan_compile_us: AtomicU64::new(0),
         })
     }
 
     /// Run the graph: feed placeholders, fetch outputs by node name.
+    ///
+    /// The first call for a given `(feeds, fetches)` shape compiles an
+    /// [`ExecutionPlan`] (prune → fold constants → fuse ops → allocate
+    /// buffer slots) and caches it; every later call replays the plan —
+    /// the serving hot path never walks the graph again.
     ///
     /// # Example
     ///
@@ -410,6 +487,7 @@ impl Session {
     ///     .run(&[("x", Tensor::zeros(&[1, 4], DType::F32))], &["y"])
     ///     .unwrap();
     /// assert_eq!(out[0].shape(), &[1, 2]);
+    /// assert_eq!(sess.plan_cache_stats().compiles, 1); // cached for replay
     /// sess.shutdown();
     /// ```
     pub fn run(
@@ -427,8 +505,102 @@ impl Session {
     ) -> Result<(Vec<Tensor>, RunStats)> {
         let feeds: HashMap<String, Tensor> =
             feeds.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        let plan = self.cached_plan(&feeds, fetches)?;
+        let env = ExecEnv { runtime: &self.runtime, queues: &self.queues };
+        plan.replay(&env, &feeds)
+    }
+
+    /// The legacy interpreted path: topological walk, one blocking dispatch
+    /// per placed node, no pruning/folding/fusion. Kept as the reference
+    /// the plan replayer is property-tested against and as the baseline in
+    /// `benches/dispatch_hotpath.rs`.
+    pub fn run_interpreted(
+        &self,
+        feeds: &[(&str, Tensor)],
+        fetches: &[&str],
+    ) -> Result<(Vec<Tensor>, RunStats)> {
+        let feeds: HashMap<String, Tensor> =
+            feeds.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
         let env = ExecEnv { runtime: &self.runtime, queues: &self.queues };
         executor::run(&self.graph, &self.placement, &env, &feeds, fetches)
+    }
+
+    /// Get-or-compile the plan for this `(feeds, fetches)` shape.
+    fn cached_plan(
+        &self,
+        feeds: &HashMap<String, Tensor>,
+        fetches: &[&str],
+    ) -> Result<Arc<ExecutionPlan>> {
+        // Reject mis-shaped feeds before touching the cache: a plan whose
+        // Feed step can never succeed must not become a permanent entry.
+        // Note this validates every fed placeholder — including ones the
+        // fetch cone would prune — so the plan path is deliberately
+        // stricter than `run_interpreted` (which skips dead placeholders).
+        for (name, t) in feeds {
+            let Some(id) = self.graph.by_name(name) else { continue };
+            if let OpKind::Placeholder { shape, dtype } = &self.graph.node(id).op {
+                executor::check_feed(name, shape, *dtype, t)?;
+            }
+        }
+        let key = PlanKey::new(&self.graph, feeds, fetches);
+        if let Some(plan) = self.plans.read().unwrap().get(&key) {
+            self.plan_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(plan));
+        }
+        // Serialize compiles, then re-check: a racing thread may have
+        // compiled this key while we waited. The `plans` lock itself stays
+        // free during compilation (folding may dispatch kernels), so
+        // cache *hits* on other keys never block behind a compile.
+        let _compiling = self.plan_compile_lock.lock().unwrap();
+        if let Some(plan) = self.plans.read().unwrap().get(&key) {
+            self.plan_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(plan));
+        }
+        let t0 = Instant::now();
+        let env = ExecEnv { runtime: &self.runtime, queues: &self.queues };
+        let plan = Arc::new(ExecutionPlan::compile(
+            &self.graph,
+            &self.placement,
+            &self.registry,
+            &env,
+            fetches,
+            self.plan_opts,
+        )?);
+        self.plan_compiles.fetch_add(1, Ordering::Relaxed);
+        // 1 µs floor: a compile always registers in the accounting, even
+        // for graphs small enough to compile sub-microsecond.
+        self.plan_compile_us
+            .fetch_add((t0.elapsed().as_micros() as u64).max(1), Ordering::Relaxed);
+        self.plans.write().unwrap().insert(key, Arc::clone(&plan));
+        Ok(plan)
+    }
+
+    /// Precompile and cache the plan for a `(feeds, fetches)` shape without
+    /// running it (servers call this at startup so the first request does
+    /// not pay compile latency). Returns the time *this call* spent, in µs
+    /// (floored at 1) — timed locally, so concurrent compiles on other
+    /// threads are never attributed to this caller.
+    pub fn warm_plan(
+        &self,
+        feeds: &[(&str, Tensor)],
+        fetches: &[&str],
+    ) -> Result<u64> {
+        let feeds: HashMap<String, Tensor> =
+            feeds.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        let t0 = Instant::now();
+        self.cached_plan(&feeds, fetches)?;
+        Ok((t0.elapsed().as_micros() as u64).max(1))
+    }
+
+    /// Plan-cache accounting: entries, compiles (misses), replay hits and
+    /// cumulative compile time.
+    pub fn plan_cache_stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            entries: self.plans.read().unwrap().len(),
+            compiles: self.plan_compiles.load(Ordering::Relaxed),
+            hits: self.plan_hits.load(Ordering::Relaxed),
+            compile_us_total: self.plan_compile_us.load(Ordering::Relaxed),
+        }
     }
 
     /// Asynchronous run: dispatch without waiting for retirement.
@@ -514,16 +686,7 @@ impl Session {
                     .ok_or_else(|| {
                         HsaError::Runtime(format!("placeholder '{}' not fed", node.name))
                     })?;
-                if t.shape() != shape.as_slice() || t.dtype() != *dtype {
-                    return Err(HsaError::Runtime(format!(
-                        "feed '{}': expected {:?} {}, got {:?} {}",
-                        node.name,
-                        shape,
-                        dtype,
-                        t.shape(),
-                        t.dtype()
-                    )));
-                }
+                executor::check_feed(&node.name, shape, *dtype, t)?;
                 Ok(Some(t.clone()))
             }
             OpKind::Constant(t) => Ok(Some(t.clone())),
@@ -617,9 +780,26 @@ fn native_fc() -> NativeFn {
     Arc::new(|ins| Ok(vec![crate::ops::fc_f32(&ins[0], &ins[1], &ins[2])?]))
 }
 
+fn native_fc_relu() -> NativeFn {
+    Arc::new(|ins| Ok(vec![crate::ops::fc_relu_f32(&ins[0], &ins[1], &ins[2])?]))
+}
+
 fn native_conv_i16(w: Vec<i16>, f: usize, c: usize, kh: usize, kw: usize, shift: u32) -> NativeFn {
     Arc::new(move |ins| {
         Ok(vec![crate::ops::conv2d_fixed_i16(&ins[0], &w, f, c, kh, kw, shift)?])
+    })
+}
+
+fn native_conv_i16_relu(
+    w: Vec<i16>,
+    f: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    shift: u32,
+) -> NativeFn {
+    Arc::new(move |ins| {
+        Ok(vec![crate::ops::conv2d_fixed_i16_relu(&ins[0], &w, f, c, kh, kw, shift)?])
     })
 }
 
@@ -629,11 +809,25 @@ fn native_conv_f32(w: Vec<f32>, f: usize, c: usize, kh: usize, kw: usize) -> Nat
     })
 }
 
+fn native_conv_f32_relu(w: Vec<f32>, f: usize, c: usize, kh: usize, kw: usize) -> NativeFn {
+    Arc::new(move |ins| {
+        Ok(vec![crate::ops::conv2d_fixed_f32_relu(&ins[0], &w, f, c, kh, kw)?])
+    })
+}
+
 fn native_fc_fixed(w: Vec<f32>, b: Vec<f32>, k: usize, n: usize) -> NativeFn {
     Arc::new(move |ins| {
         let wt = Tensor::from_f32(&[k, n], w.clone())?;
         let bt = Tensor::from_f32(&[n], b.clone())?;
         Ok(vec![crate::ops::fc_f32(&ins[0], &wt, &bt)?])
+    })
+}
+
+fn native_fc_fixed_relu(w: Vec<f32>, b: Vec<f32>, k: usize, n: usize) -> NativeFn {
+    Arc::new(move |ins| {
+        let wt = Tensor::from_f32(&[k, n], w.clone())?;
+        let bt = Tensor::from_f32(&[n], b.clone())?;
+        Ok(vec![crate::ops::fc_relu_f32(&ins[0], &wt, &bt)?])
     })
 }
 
@@ -799,6 +993,48 @@ fn register_cpu_kernels(
             op_template: None,
         },
     );
+    // ReLU-fused variants (the plan compiler's fusion pass dispatches
+    // these instead of an op+relu pair whenever they are registered).
+    reg(
+        &fused_relu_name("fc"),
+        CpuKernel {
+            name: fused_relu_name("fc"),
+            func: native_fc_relu(),
+            class: CpuKernelClass::FcF32,
+            op_template: Some(RoleOp::FcF32 { m: 64, k: 64, n: 64 }),
+        },
+    );
+    reg(
+        &fused_relu_name("fc_barrier"),
+        CpuKernel {
+            name: fused_relu_name("fc_barrier"),
+            func: native_fc_relu(),
+            class: CpuKernelClass::FcF32,
+            op_template: Some(RoleOp::FcF32 { m: 64, k: 64, n: 64 }),
+        },
+    );
+    reg(
+        &fused_relu_name("conv5x5_i16"),
+        CpuKernel {
+            name: fused_relu_name("conv5x5_i16"),
+            func: native_conv_i16_relu(weights.conv5_w.clone(), 1, 1, 5, 5, shift),
+            class: CpuKernelClass::ConvI16Large,
+            op_template: Some(RoleOp::ConvI16 {
+                cin: 1, h: 28, w: 28, kh: 5, kw: 5, filters: 1,
+            }),
+        },
+    );
+    reg(
+        &fused_relu_name("conv3x3_i16"),
+        CpuKernel {
+            name: fused_relu_name("conv3x3_i16"),
+            func: native_conv_i16_relu(weights.conv3_w.clone(), 2, 1, 3, 3, shift),
+            class: CpuKernelClass::ConvI16Small,
+            op_template: Some(RoleOp::ConvI16 {
+                cin: 1, h: 28, w: 28, kh: 3, kw: 3, filters: 2,
+            }),
+        },
+    );
     // CNN layer kernels (fixed weights) for the layer-wise graph.
     reg(
         "convf32:cnn/conv1",
@@ -834,6 +1070,35 @@ fn register_cpu_kernels(
             func: native_fc_fixed(weights.cnn_fc2_w.clone(), weights.cnn_fc2_b.clone(), 32, 10),
             class: CpuKernelClass::FcF32,
             op_template: Some(RoleOp::FcF32 { m: 1, k: 32, n: 10 }),
+        },
+    );
+    // Fused variants of the CNN layers that are followed by ReLU in the
+    // layer-wise MNIST graph.
+    reg(
+        &fused_relu_name("convf32:cnn/conv1"),
+        CpuKernel {
+            name: fused_relu_name("convf32:cnn/conv1"),
+            func: native_conv_f32_relu(weights.cnn_conv1.clone(), 2, 1, 3, 3),
+            class: CpuKernelClass::ConvI16Small,
+            op_template: None,
+        },
+    );
+    reg(
+        &fused_relu_name("convf32:cnn/conv2"),
+        CpuKernel {
+            name: fused_relu_name("convf32:cnn/conv2"),
+            func: native_conv_f32_relu(weights.cnn_conv2.clone(), 4, 2, 5, 5),
+            class: CpuKernelClass::ConvI16Large,
+            op_template: None,
+        },
+    );
+    reg(
+        &fused_relu_name("fcfixed:cnn/fc1_w"),
+        CpuKernel {
+            name: fused_relu_name("fcfixed:cnn/fc1_w"),
+            func: native_fc_fixed_relu(weights.cnn_fc1_w.clone(), weights.cnn_fc1_b.clone(), 64, 32),
+            class: CpuKernelClass::FcF32,
+            op_template: Some(RoleOp::FcF32 { m: 1, k: 64, n: 32 }),
         },
     );
 }
@@ -878,6 +1143,40 @@ fn register_fpga_roles(
     for ((kernel_name, module, native), bitstream) in kernels.into_iter().zip(paper) {
         let id = fpga.register_role(bitstream, bind(module, native));
         registry.register(kernel_name, DeviceType::Fpga, id);
+    }
+
+    // ReLU-fused role variants (datapath + output clamp stage): the plan
+    // compiler maps fused op+relu steps onto these so a fused step lives
+    // in one PR region and costs one dispatch. No PJRT modules exist for
+    // them, so they carry native numerics — and are therefore registered
+    // only when the *base* role is native too: if the base executes a
+    // PJRT-bound XLA module, a native fused variant could differ in f32
+    // accumulation order from the unfused pair, and fusion must fall back
+    // rather than change results with the fetch set.
+    let fused_kernels: [(&str, &str, NativeFn); 4] = [
+        ("fc", "role1_fc", native_fc_relu()),
+        ("fc_barrier", "role2_fc_barrier", native_fc_relu()),
+        (
+            "conv5x5_i16",
+            "role3_conv5x5",
+            native_conv_i16_relu(weights.conv5_w.clone(), 1, 1, 5, 5, shift),
+        ),
+        (
+            "conv3x3_i16",
+            "role4_conv3x3",
+            native_conv_i16_relu(weights.conv3_w.clone(), 2, 1, 3, 3, shift),
+        ),
+    ];
+    for ((base, module, native), bitstream) in
+        fused_kernels.into_iter().zip(roles::fused_paper_roles())
+    {
+        let base_is_pjrt_bound =
+            pjrt.is_some() && store.is_some_and(|s| s.module(module).is_ok());
+        if base_is_pjrt_bound {
+            continue;
+        }
+        let id = fpga.register_role(bitstream, ComputeBinding::Native(native));
+        registry.register(fused_relu_name(base), DeviceType::Fpga, id);
     }
 
     // CNN layers as weight-fixed roles (the paper's "fix layer weights to
@@ -932,6 +1231,41 @@ fn register_fpga_roles(
         ComputeBinding::Native(native_fc_fixed(weights.cnn_fc2_w.clone(), weights.cnn_fc2_b.clone(), 32, 10)),
     );
     registry.register("fcfixed:cnn/fc2_w", DeviceType::Fpga, id);
+
+    // Fused variants of the ReLU-followed CNN layers.
+    let conv1_relu = mk_role(
+        "cnn_conv1_relu",
+        RoleOp::ConvI16 { cin: 1, h: 28, w: 28, kh: 3, kw: 3, filters: 2 },
+        18,
+    );
+    let id = fpga.register_role(
+        conv1_relu,
+        ComputeBinding::Native(native_conv_f32_relu(weights.cnn_conv1.clone(), 2, 1, 3, 3)),
+    );
+    registry.register(fused_relu_name("convf32:cnn/conv1"), DeviceType::Fpga, id);
+
+    let conv2_relu = mk_role(
+        "cnn_conv2_relu",
+        RoleOp::ConvI16 { cin: 2, h: 13, w: 13, kh: 5, kw: 5, filters: 4 },
+        25,
+    );
+    let id = fpga.register_role(
+        conv2_relu,
+        ComputeBinding::Native(native_conv_f32_relu(weights.cnn_conv2.clone(), 4, 2, 5, 5)),
+    );
+    registry.register(fused_relu_name("convf32:cnn/conv2"), DeviceType::Fpga, id);
+
+    let fc1_relu = mk_role("cnn_fc1_relu", RoleOp::FcF32 { m: 1, k: 64, n: 32 }, 4);
+    let id = fpga.register_role(
+        fc1_relu,
+        ComputeBinding::Native(native_fc_fixed_relu(
+            weights.cnn_fc1_w.clone(),
+            weights.cnn_fc1_b.clone(),
+            64,
+            32,
+        )),
+    );
+    registry.register(fused_relu_name("fcfixed:cnn/fc1_w"), DeviceType::Fpga, id);
 
     let full = mk_role(
         "cnn_full",
@@ -1067,6 +1401,72 @@ mod tests {
                 assert_eq!(row, &want, "request {i} got another batch's tensor");
             }
         }
+        sess.shutdown();
+    }
+
+    #[test]
+    fn fused_plan_issues_strictly_fewer_dispatches_than_interpreter() {
+        let sess = Session::new(fc_graph(), SessionOptions::native_only()).unwrap();
+        let x = Tensor::from_f32(&[4, 8], (0..32).map(|v| v as f32 * 0.3 - 4.0).collect())
+            .unwrap();
+        let (outs, plan_stats) = sess.run_with_stats(&[("x", x.clone())], &["out"]).unwrap();
+        let (ref_outs, interp_stats) = sess.run_interpreted(&[("x", x)], &["out"]).unwrap();
+        assert_eq!(outs[0], ref_outs[0], "fused replay must be bitwise identical");
+        assert_eq!(plan_stats.dispatches, 1, "FC+Relu collapses into one dispatch");
+        assert_eq!(plan_stats.fused_dispatches, 1);
+        assert_eq!(interp_stats.dispatches, 2, "the interpreter never fuses");
+        assert!(plan_stats.dispatches < interp_stats.dispatches);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn plan_cache_hits_on_repeat_and_misses_on_new_fetch_set() {
+        let sess = Session::new(fc_graph(), SessionOptions::native_only()).unwrap();
+        let x = Tensor::from_f32(&[4, 8], vec![1.0; 32]).unwrap();
+        sess.run(&[("x", x.clone())], &["out"]).unwrap();
+        sess.run(&[("x", x.clone())], &["out"]).unwrap();
+        let s = sess.plan_cache_stats();
+        assert_eq!((s.entries, s.compiles, s.hits), (1, 1, 1), "{s:?}");
+        sess.run(&[("x", x)], &["y"]).unwrap();
+        let s = sess.plan_cache_stats();
+        assert_eq!((s.entries, s.compiles, s.hits), (2, 2, 1), "{s:?}");
+        sess.shutdown();
+    }
+
+    #[test]
+    fn plan_cache_invalidates_on_feed_shape_change() {
+        let sess = Session::new(fc_graph(), SessionOptions::native_only()).unwrap();
+        let good = Tensor::from_f32(&[4, 8], vec![0.5; 32]).unwrap();
+        let want = sess.run(&[("x", good.clone())], &["out"]).unwrap();
+        // A differently-shaped feed must not replay the cached plan: it is
+        // rejected before the cache, so no dead entry is ever inserted.
+        let bad = Tensor::zeros(&[8, 4], DType::F32);
+        let err = sess.run(&[("x", bad)], &["out"]).unwrap_err();
+        assert!(err.to_string().contains("expected"), "{err}");
+        assert_eq!(sess.plan_cache_stats().entries, 1, "bad feed must not pollute");
+        // The original entry is untouched and still replays correctly.
+        let again = sess.run(&[("x", good)], &["out"]).unwrap();
+        assert_eq!(want[0], again[0]);
+        assert!(sess.plan_cache_stats().hits >= 1);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn const_only_subgraph_folds_at_session_compile_time() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[2, 2], DType::F32).unwrap();
+        let w = g
+            .constant("w", Tensor::from_f32(&[2, 2], vec![-1.0, 2.0, -3.0, 4.0]).unwrap())
+            .unwrap();
+        let rw = g.add("rw", OpKind::Relu, &[w]).unwrap();
+        g.add("out", OpKind::Add, &[x, rw]).unwrap();
+        let sess = Session::new(g, SessionOptions::native_only()).unwrap();
+        let x = Tensor::from_f32(&[2, 2], vec![1.0; 4]).unwrap();
+        let (outs, plan_stats) = sess.run_with_stats(&[("x", x.clone())], &["out"]).unwrap();
+        assert_eq!(outs[0].as_f32().unwrap(), &[1.0, 3.0, 1.0, 5.0]);
+        assert_eq!(plan_stats.dispatches, 1, "relu(const) was folded at compile");
+        let (_, interp_stats) = sess.run_interpreted(&[("x", x)], &["out"]).unwrap();
+        assert_eq!(interp_stats.dispatches, 2);
         sess.shutdown();
     }
 

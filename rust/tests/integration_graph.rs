@@ -153,12 +153,22 @@ fn session_reconfig_stats_reflect_role_thrash() {
 fn run_with_stats_counts_dispatches_per_device() {
     let sess = Session::new(fc_chain(), SessionOptions::native_only()).unwrap();
     let x = rand_f32(&[8, 16], 1);
-    let (_, stats) = sess.run_with_stats(&[("x", x)], &["y2"]).unwrap();
-    // 2 FC on FPGA + relu on CPU.
+
+    // Interpreted walk: 2 FC on FPGA + relu on CPU, one dispatch per node.
+    let (interp_out, stats) = sess.run_interpreted(&[("x", x.clone())], &["y2"]).unwrap();
     assert_eq!(stats.dispatches, 3);
     assert_eq!(stats.dispatches_by_device[&DeviceType::Fpga], 2);
     assert_eq!(stats.dispatches_by_device[&DeviceType::Cpu], 1);
     assert!(stats.wall_us > 0);
+
+    // Plan replay: fc+relu fuses into one FPGA dispatch, so the relu's
+    // CPU hop disappears — 2 FPGA dispatches total, identical output.
+    let (plan_out, stats) = sess.run_with_stats(&[("x", x)], &["y2"]).unwrap();
+    assert_eq!(stats.dispatches, 2);
+    assert_eq!(stats.fused_dispatches, 1);
+    assert_eq!(stats.dispatches_by_device[&DeviceType::Fpga], 2);
+    assert!(!stats.dispatches_by_device.contains_key(&DeviceType::Cpu));
+    assert_eq!(plan_out[0], interp_out[0]);
     sess.shutdown();
 }
 

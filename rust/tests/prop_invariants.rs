@@ -1,6 +1,7 @@
 //! Property-based tests over coordinator invariants (reconfiguration
-//! manager, queue ordering, signals, JSON, tensors) using the in-tree
-//! quickcheck harness (`util::quickcheck`).
+//! manager, queue ordering, signals, JSON, tensors, and plan-vs-interpreter
+//! execution equivalence) using the in-tree quickcheck harness
+//! (`util::quickcheck`).
 
 use tf_fpga::fpga::bitstream::Bitstream;
 use tf_fpga::fpga::icap::Icap;
@@ -267,6 +268,195 @@ fn prop_tensor_reshape_preserves_data() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// Plan replay ≡ interpreted executor
+// ---------------------------------------------------------------------------
+
+mod plan_equivalence {
+    use std::collections::HashMap;
+    use std::sync::Arc;
+    use tf_fpga::cpu::a53::CpuKernelClass;
+    use tf_fpga::cpu::device::{CpuAgent, CpuKernel};
+    use tf_fpga::hsa::agent::DeviceType;
+    use tf_fpga::hsa::error::Result;
+    use tf_fpga::hsa::queue::Queue;
+    use tf_fpga::hsa::runtime::HsaRuntime;
+    use tf_fpga::tf::dtype::DType;
+    use tf_fpga::tf::executor::{self, ExecEnv};
+    use tf_fpga::tf::graph::{Graph, OpKind};
+    use tf_fpga::tf::kernel::{fused_relu_name, KernelRegistry};
+    use tf_fpga::tf::placer::{place, PlacerOptions};
+    use tf_fpga::tf::plan::{ExecutionPlan, PlanOptions};
+    use tf_fpga::tf::tensor::Tensor;
+    use tf_fpga::util::prng::Rng;
+    use tf_fpga::util::quickcheck::{forall, Gen};
+
+    fn cpu_env() -> (HsaRuntime, HashMap<DeviceType, Queue>, KernelRegistry) {
+        let cpu = CpuAgent::with_defaults();
+        let mut reg = KernelRegistry::new();
+        let mut add = |name: String,
+                       f: Arc<dyn Fn(&[Tensor]) -> Result<Vec<Tensor>> + Send + Sync>| {
+            let id = cpu.register_kernel(CpuKernel {
+                name: name.clone(),
+                func: f,
+                class: CpuKernelClass::Memory,
+                op_template: None,
+            });
+            reg.register(name, DeviceType::Cpu, id);
+        };
+        add(
+            "fc".into(),
+            Arc::new(|ins| Ok(vec![tf_fpga::ops::fc_f32(&ins[0], &ins[1], &ins[2])?])),
+        );
+        add(
+            fused_relu_name("fc"),
+            Arc::new(|ins| Ok(vec![tf_fpga::ops::fc_relu_f32(&ins[0], &ins[1], &ins[2])?])),
+        );
+        add("relu".into(), Arc::new(|ins| Ok(vec![tf_fpga::ops::relu_f32(&ins[0])?])));
+        add(
+            "softmax".into(),
+            Arc::new(|ins| Ok(vec![tf_fpga::ops::softmax_f32(&ins[0])?])),
+        );
+        add(
+            "add".into(),
+            Arc::new(|ins| Ok(vec![tf_fpga::ops::add_f32(&ins[0], &ins[1])?])),
+        );
+        let rt = HsaRuntime::builder().with_agent(cpu).build();
+        let q = rt.create_queue(rt.agent_by_type(DeviceType::Cpu).unwrap(), 128);
+        let mut queues = HashMap::new();
+        queues.insert(DeviceType::Cpu, q);
+        (rt, queues, reg)
+    }
+
+    /// Random small rank-2 f32 graphs: chains and diamonds of
+    /// Relu/Softmax/FC/Add/Reshape over a placeholder plus random
+    /// constants (which make const-only subgraphs for the folding pass).
+    struct GraphCase;
+
+    impl Gen for GraphCase {
+        type Value = (u64, Vec<u8>);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            let len = 1 + rng.below(10) as usize;
+            (rng.next_u64(), (0..len).map(|_| rng.below(240) as u8).collect())
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            let (seed, ops) = v;
+            let mut out = Vec::new();
+            if ops.len() > 1 {
+                out.push((*seed, ops[..ops.len() / 2].to_vec()));
+                out.push((*seed, ops[1..].to_vec()));
+                let mut m = ops.clone();
+                m.pop();
+                out.push((*seed, m));
+            }
+            out
+        }
+    }
+
+    /// Build the graph; returns it plus the fetch names (the final node
+    /// and one random interior node).
+    fn build(seed: u64, ops: &[u8]) -> (Graph, Vec<String>) {
+        let mut rng = Rng::new(seed);
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[2, 3], DType::F32).unwrap();
+        let mut nodes = vec![(x, 3usize)];
+        for (i, &op) in ops.iter().enumerate() {
+            let (src, cols) = nodes[rng.below(nodes.len() as u64) as usize];
+            let made = match op % 6 {
+                0 => (g.add(format!("relu{i}"), OpKind::Relu, &[src]).unwrap(), cols),
+                1 => (g.add(format!("soft{i}"), OpKind::Softmax, &[src]).unwrap(), cols),
+                2 => {
+                    let n = 1 + rng.below(4) as usize;
+                    let mut wv = vec![0f32; cols * n];
+                    rng.fill_f32_normal(&mut wv, 0.0, 0.5);
+                    let mut bv = vec![0f32; n];
+                    rng.fill_f32_normal(&mut bv, 0.0, 0.5);
+                    let w = g
+                        .constant(format!("w{i}"), Tensor::from_f32(&[cols, n], wv).unwrap())
+                        .unwrap();
+                    let b = g
+                        .constant(format!("b{i}"), Tensor::from_f32(&[n], bv).unwrap())
+                        .unwrap();
+                    (
+                        g.add(format!("fc{i}"), OpKind::FullyConnected, &[src, w, b])
+                            .unwrap(),
+                        n,
+                    )
+                }
+                3 => (g.add(format!("dbl{i}"), OpKind::Add, &[src, src]).unwrap(), cols),
+                4 => (
+                    g.add(
+                        format!("rs{i}"),
+                        OpKind::Reshape { shape: vec![2, cols] },
+                        &[src],
+                    )
+                    .unwrap(),
+                    cols,
+                ),
+                _ => {
+                    // Fresh constant source: seeds const-only subgraphs.
+                    let mut cv = vec![0f32; 4];
+                    rng.fill_f32_normal(&mut cv, 0.0, 1.0);
+                    (
+                        g.constant(format!("c{i}"), Tensor::from_f32(&[2, 2], cv).unwrap())
+                            .unwrap(),
+                        2,
+                    )
+                }
+            };
+            nodes.push(made);
+        }
+        let last = g.node(nodes.last().unwrap().0).name.clone();
+        let mid = g
+            .node(nodes[rng.below(nodes.len() as u64) as usize].0)
+            .name
+            .clone();
+        (g, vec![last, mid])
+    }
+
+    #[test]
+    fn prop_plan_replay_bitwise_matches_interpreter_with_and_without_fusion() {
+        forall(11, 40, &GraphCase, |(seed, ops)| {
+            let (mut g, fetches) = build(*seed, ops);
+            g.finalize().map_err(|e| e.to_string())?;
+            let (rt, queues, reg) = cpu_env();
+            let placement =
+                place(&g, &reg, PlacerOptions::default()).map_err(|e| e.to_string())?;
+            let env = ExecEnv { runtime: &rt, queues: &queues };
+            let mut xv = vec![0f32; 6];
+            Rng::new(seed ^ 0x9E3779B9).fill_f32_normal(&mut xv, 0.0, 1.0);
+            let mut feeds = HashMap::new();
+            feeds.insert("x".to_string(), Tensor::from_f32(&[2, 3], xv).unwrap());
+            let fetch_refs: Vec<&str> = fetches.iter().map(|s| s.as_str()).collect();
+
+            let (want, _) = executor::run(&g, &placement, &env, &feeds, &fetch_refs)
+                .map_err(|e| format!("interpreter: {e}"))?;
+            for fusion in [false, true] {
+                for fold_constants in [false, true] {
+                    let opts = PlanOptions { fusion, fold_constants };
+                    let plan =
+                        ExecutionPlan::compile(&g, &placement, &reg, &env, &fetch_refs, opts)
+                            .map_err(|e| format!("compile {opts:?}: {e}"))?;
+                    plan.validate().map_err(|e| format!("validate {opts:?}: {e}"))?;
+                    let (got, _) = plan
+                        .replay(&env, &feeds)
+                        .map_err(|e| format!("replay {opts:?}: {e}"))?;
+                    for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                        if a != b {
+                            return Err(format!(
+                                "fetch '{}' diverged under {opts:?}",
+                                fetch_refs[k]
+                            ));
+                        }
+                    }
+                }
+            }
+            rt.shutdown();
+            Ok(())
+        });
+    }
 }
 
 #[test]
