@@ -1,175 +1,100 @@
-//! Fig. 1 / §III reproduction: the FPGA is *not* monopolized by the neural
-//! network. A DL inference client (TF frontend) and an "OpenCL-style"
-//! preprocessing client share the same FPGA through the same HSA runtime;
-//! the reconfiguration manager LRU-swaps their roles in and out of the PR
-//! regions.
+//! Fig. 1 / §III reproduction, grown to the signature-based serving API:
+//! the FPGA is *not* monopolized by one network. Two model bundles with
+//! **different input shapes** — the MNIST CNN (`[B, 1, 28, 28]`) and a
+//! tiny dense model (`[B, 16]`) — are served side by side from one
+//! session; each gets its own micro-batch lane, and the reconfiguration
+//! manager swaps their roles through the shared PR regions.
 //!
 //! ```bash
 //! cargo run --release --example multi_tenant
 //! ```
 
 use std::sync::Arc;
-use tf_fpga::fpga::device::{ComputeBinding, FpgaAgent, FpgaConfig};
-use tf_fpga::fpga::roles;
-use tf_fpga::hsa::agent::DeviceType;
-use tf_fpga::hsa::runtime::HsaRuntime;
-use tf_fpga::ops;
-use tf_fpga::reconfig::policy::PolicyKind;
-use tf_fpga::tf::tensor::Tensor;
+use std::time::Duration;
+use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig, BatchPolicy, ModelSpec};
+use tf_fpga::tf::model::ModelBundle;
+use tf_fpga::tf::session::SessionOptions;
 use tf_fpga::util::prng::Rng;
 use tf_fpga::util::stats::Summary;
 
 fn main() -> anyhow::Result<()> {
-    println!("=== multi-tenant FPGA sharing (Fig. 1) ===\n");
+    println!("=== multi-tenant serving: two bundles, two shapes, one FPGA ===\n");
 
-    // One FPGA agent with 2 PR regions and LRU eviction (paper default).
-    let fpga = FpgaAgent::new(FpgaConfig {
-        num_regions: 2,
-        policy: PolicyKind::Lru.build(0),
-        realtime: false,
-        realtime_scale: 1.0,
-        trace: None,
-    });
-
-    // DL roles (conv layers) + an OpenCL-style preprocessing role.
-    let paper = roles::paper_roles();
-    let conv5 = paper[2].clone();
-    let conv3 = paper[3].clone();
-    let mut rng = Rng::new(5);
-    let mut w5 = vec![0i16; 25];
-    rng.fill_i16(&mut w5, -64, 63);
-    let mut w3 = vec![0i16; 18];
-    rng.fill_i16(&mut w3, -64, 63);
-    let conv5_id = fpga.register_role(
-        conv5,
-        ComputeBinding::Native(Arc::new({
-            let w = w5.clone();
-            move |ins: &[Tensor]| Ok(vec![ops::conv2d_fixed_i16(&ins[0], &w, 1, 1, 5, 5, 8)?])
-        })),
-    );
-    let conv3_id = fpga.register_role(
-        conv3,
-        ComputeBinding::Native(Arc::new({
-            let w = w3.clone();
-            move |ins: &[Tensor]| Ok(vec![ops::conv2d_fixed_i16(&ins[0], &w, 2, 1, 3, 3, 8)?])
-        })),
-    );
-    // Preprocessing role: scale + clamp (sensor-fusion-style stream op).
-    let pre_id = fpga.register_role(
-        roles::preprocess_role(),
-        ComputeBinding::Native(Arc::new(|ins: &[Tensor]| {
-            let d = ins[0].as_i16()?;
-            let out: Vec<i16> = d.iter().map(|&v| (v / 2).clamp(-512, 511)).collect();
-            Ok(vec![Tensor::from_i16(ins[0].shape(), out)?])
-        })),
-    );
-
-    let rt = HsaRuntime::builder().with_agent(fpga.clone()).build();
-    let agent = rt.agent_by_type(DeviceType::Fpga)?;
-    // Each tenant gets its own AQL queue to the same device — the HSA way.
-    let q_dl = rt.create_queue(agent.clone(), 64);
-    let q_pre = rt.create_queue(agent, 64);
-
-    // --- the two tenants run concurrently ---
-    let n_per_tenant = 120usize;
-    let rt = Arc::new(rt);
-
-    let dl = {
-        let rt = Arc::clone(&rt);
-        std::thread::spawn(move || -> Vec<f64> {
-            let mut rng = Rng::new(10);
-            let mut lat = Vec::new();
-            for i in 0..n_per_tenant {
-                let mut v = vec![0i16; 784];
-                rng.fill_i16(&mut v, -256, 255);
-                let x = Tensor::from_i16(&[1, 28, 28], v).unwrap();
-                let kernel = if i % 2 == 0 { conv5_id } else { conv3_id };
-                let t0 = std::time::Instant::now();
-                rt.dispatch_sync(&q_dl, kernel, vec![x]).expect("dl dispatch");
-                lat.push(t0.elapsed().as_secs_f64() * 1e6);
-            }
-            lat
-        })
+    let policy = |max_batch, ms| BatchPolicy {
+        max_batch,
+        max_delay: Duration::from_millis(ms),
     };
+    // Two tenants. The bundles could just as well come from disk
+    // (`ModelSpec::from_dir`) after `tf-fpga export-demo` or
+    // `python -m compile.export`.
+    let srv = AsyncInferenceServer::start(AsyncServerConfig {
+        models: vec![
+            ModelSpec::from_bundle("mnist", ModelBundle::mnist_demo(8), policy(8, 2)),
+            ModelSpec::from_bundle("tiny", ModelBundle::tiny_fc_demo(4, 16, 4), policy(4, 1)),
+        ],
+        session: SessionOptions { dispatch_workers: 4, ..SessionOptions::default() },
+        pipeline_depth: 4,
+    })
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
 
-    let pre = {
-        let rt = Arc::clone(&rt);
+    for name in ["mnist", "tiny"] {
+        let meta = srv.model_meta(name).expect("served model");
+        println!(
+            "tenant '{name}': {:?} -> {:?} per request",
+            meta.sample_in_shape, meta.sample_out_shape
+        );
+    }
+
+    // --- both tenants submit concurrently ---
+    let n_per_tenant = 120usize;
+    let srv = Arc::new(srv);
+    let client = |model: &'static str, seed: u64| {
+        let srv = Arc::clone(&srv);
         std::thread::spawn(move || -> Vec<f64> {
-            let mut rng = Rng::new(20);
+            let meta = srv.model_meta(model).expect("served model").clone();
+            let mut rng = Rng::new(seed);
             let mut lat = Vec::new();
             for _ in 0..n_per_tenant {
-                let mut v = vec![0i16; 784];
-                rng.fill_i16(&mut v, -1024, 1023);
-                let x = Tensor::from_i16(&[784], v).unwrap();
+                let mut sample = vec![0f32; meta.in_elems];
+                rng.fill_f32_normal(&mut sample, 0.0, 1.0);
                 let t0 = std::time::Instant::now();
-                rt.dispatch_sync(&q_pre, pre_id, vec![x]).expect("pre dispatch");
+                let row = srv.infer(model, sample).expect("infer");
                 lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                assert_eq!(row.len(), meta.out_elems, "{model} row size");
             }
             lat
         })
     };
+    let mnist_thread = client("mnist", 10);
+    let tiny_thread = client("tiny", 20);
+    let mnist_lat = mnist_thread.join().unwrap();
+    let tiny_lat = tiny_thread.join().unwrap();
 
-    let dl_lat = dl.join().unwrap();
-    let pre_lat = pre.join().unwrap();
+    let ms = Summary::from_values(&mnist_lat);
+    let ts = Summary::from_values(&tiny_lat);
+    println!("\nmnist tenant : n={} mean {:.1} µs p99 {:.1} µs", ms.n, ms.mean, ms.p99);
+    println!("tiny tenant  : n={} mean {:.1} µs p99 {:.1} µs", ts.n, ts.mean, ts.p99);
 
-    let dls = Summary::from_values(&dl_lat);
-    let pres = Summary::from_values(&pre_lat);
-    println!("DL tenant   : n={} mean {:.1} µs p99 {:.1} µs", dls.n, dls.mean, dls.p99);
-    println!("preproc     : n={} mean {:.1} µs p99 {:.1} µs", pres.n, pres.mean, pres.p99);
-
-    let s = fpga.reconfig_stats();
-    println!("\nshared-FPGA reconfiguration stats:");
+    let rep = srv.report();
+    println!("\nshared-session serving report:");
     println!(
-        "  dispatches {}  hits {} ({:.1}%)  misses {}  evictions {}  modeled PCAP {:.1} ms",
-        s.dispatches,
-        s.hits,
-        100.0 * s.hit_rate(),
-        s.misses,
-        s.evictions,
-        s.reconfig_us_total as f64 / 1e3
+        "  requests {} (completed {}, failed {})  batches {} (mean fill {:.1}, max in-flight {})",
+        rep.requests, rep.completed, rep.failed, rep.batches, rep.mean_batch_fill,
+        rep.max_inflight
     );
-    println!("  per-role dispatches: {:?}", fpga.role_dispatches());
-    assert_eq!(s.dispatches as usize, 2 * n_per_tenant);
-    assert!(s.evictions > 0, "3 roles over 2 regions must evict");
+    println!(
+        "  fpga: {} dispatches, hit rate {:.1}%, {} reconfigs ({:.1} ms modeled PCAP)",
+        rep.reconfig.dispatches,
+        100.0 * rep.reconfig.hit_rate(),
+        rep.reconfig.misses,
+        rep.reconfig.reconfig_us_total as f64 / 1e3
+    );
+    assert_eq!(rep.completed, 2 * n_per_tenant as u64);
+    assert_eq!(rep.failed, 0);
 
-    // Contrast: 3 regions -> no eviction once warm.
-    println!("\nwith 3 regions (working set fits):");
-    let fpga3 = FpgaAgent::new(FpgaConfig {
-        num_regions: 3,
-        policy: PolicyKind::Lru.build(0),
-        realtime: false,
-        realtime_scale: 1.0,
-        trace: None,
-    });
-    let ids: Vec<u64> = roles::paper_roles()[2..4]
-        .iter()
-        .cloned()
-        .chain([roles::preprocess_role()])
-        .map(|b| {
-            fpga3.register_role(
-                b,
-                ComputeBinding::Native(Arc::new(|ins: &[Tensor]| Ok(ins.to_vec()))),
-            )
-        })
-        .collect();
-    let rt3 = HsaRuntime::builder().with_agent(fpga3.clone()).build();
-    let q3 = rt3.create_queue(rt3.agent_by_type(DeviceType::Fpga)?, 64);
-    let x = Tensor::from_i16(&[1, 28, 28], vec![0; 784]).unwrap();
-    for i in 0..60 {
-        rt3.dispatch_sync(&q3, ids[i % 3], vec![x.clone()])?;
+    if let Ok(mut s) = Arc::try_unwrap(srv) {
+        s.stop();
     }
-    let s3 = fpga3.reconfig_stats();
-    println!(
-        "  dispatches {}  hit rate {:.1}%  evictions {}",
-        s3.dispatches,
-        100.0 * s3.hit_rate(),
-        s3.evictions
-    );
-    assert_eq!(s3.evictions, 0);
-    assert_eq!(s3.misses, 3, "only the 3 cold loads");
-
-    rt.shutdown();
-    rt3.shutdown();
-    println!("\nOK: the FPGA served two independent clients through one runtime.");
+    println!("\nOK: one session served two differently-shaped models through one FPGA.");
     Ok(())
 }

@@ -1,5 +1,8 @@
-//! Quickstart: build a small graph, let the placer put the FC on the FPGA,
-//! run it, and inspect the reconfiguration stats.
+//! Quickstart: build a graph the way a TF user would, wrap it in a signed
+//! [`ModelBundle`], save/load it as a `model.json` directory, and invoke
+//! it by *endpoint name* through the [`Model`] facade — the same bundle
+//! format `python -m compile.export` writes and `tf-fpga serve --model`
+//! serves.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -8,11 +11,13 @@
 use tf_fpga::hsa::agent::DeviceType;
 use tf_fpga::tf::dtype::DType;
 use tf_fpga::tf::graph::{Graph, OpKind};
-use tf_fpga::tf::session::{Session, SessionOptions};
+use tf_fpga::tf::model::{Endpoint, Model, ModelBundle, Signature};
+use tf_fpga::tf::session::SessionOptions;
 use tf_fpga::tf::tensor::Tensor;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Build a graph the way a TF user would: x -> FC -> relu.
+    // 1. Build a graph: x -> FC -> relu, FC pinned to the FPGA (the
+    //    paper's `with tf.device(...)` annotation — carried by the bundle).
     let mut g = Graph::new();
     let x = g.placeholder("x", &[2, 4], DType::F32).map_err(err)?;
     let w = g
@@ -27,36 +32,50 @@ fn main() -> anyhow::Result<()> {
         .map_err(err)?;
     let y = g.add("y", OpKind::FullyConnected, &[x, w, b]).map_err(err)?;
     g.add("out", OpKind::Relu, &[y]).map_err(err)?;
-
-    // Optional: pin the FC to the FPGA explicitly (the paper's
-    // `with tf.device(...)` annotation). Without this the placer would
-    // pick the FPGA anyway because an FPGA kernel is registered.
     g.set_device(y, DeviceType::Fpga);
 
-    // 2. One Session bring-up = the paper's "device/kernel setup".
-    let sess = Session::new(g, SessionOptions::default()).map_err(err)?;
-    println!(
-        "session ready in {:.1} ms (PJRT compile {:.1} ms)",
-        sess.setup_timing().total_us as f64 / 1000.0,
-        sess.setup_timing().pjrt_compile_us as f64 / 1000.0,
-    );
+    // 2. Name the entry point: a signature maps public endpoint names to
+    //    graph nodes, with the tensor metas callers must honor.
+    let sig = Signature {
+        name: "serve".into(),
+        inputs: vec![Endpoint::new("features", "x", &[2, 4], DType::F32)],
+        outputs: vec![Endpoint::new("scores", "out", &[2, 3], DType::F32)],
+    };
+    let bundle = ModelBundle::new("quickstart", g, vec![sig]).map_err(err)?;
 
-    // 3. Run. First dispatch partially reconfigures an FPGA region with the
-    //    FC role; later dispatches hit the resident role.
+    // 3. Save and reload: the bundle is a directory holding `model.json`
+    //    (GraphDef + signatures) — weights embedded, device pins included.
+    let dir = std::env::temp_dir().join("tf_fpga_quickstart_bundle");
+    bundle.save(&dir).map_err(err)?;
+    println!("saved bundle to {}", dir.join("model.json").display());
+    let model = Model::load(&dir, SessionOptions::default()).map_err(err)?;
+
+    // 4. Invoke by endpoint name. First call compiles and caches the
+    //    signature's execution plan; later calls replay it.
     let input = Tensor::from_f32(&[2, 4], vec![1.0, 2.0, 3.0, 4.0, -1.0, -2.0, -3.0, -4.0])
         .map_err(terr)?;
     for i in 0..3 {
-        let out = sess.run(&[("x", input.clone())], &["out"]).map_err(err)?;
-        println!("run {i}: out = {:?}", out[0].as_f32().map_err(terr)?);
+        let out = model
+            .invoke("serve", &[("features", input.clone())])
+            .map_err(err)?;
+        println!("run {i}: scores = {:?}", out[0].as_f32().map_err(terr)?);
     }
 
-    let s = sess.reconfig_stats();
+    // 5. Mis-shaped feeds fail by *endpoint*, naming expected vs got —
+    //    not a NodeId-level failure deep in the executor.
+    let bad = Tensor::zeros(&[5, 4], DType::F32);
+    let e = model.invoke("serve", &[("features", bad)]).unwrap_err();
+    println!("bad feed rejected: {e}");
+
+    let plans = model.session().plan_cache_stats();
+    let s = model.session().reconfig_stats();
     println!(
-        "fpga stats: {} dispatches, {} hits, {} misses, {} µs reconfiguration (modeled)",
-        s.dispatches, s.hits, s.misses, s.reconfig_us_total
+        "plan cache: {} compile(s), {} replay hit(s); fpga: {} dispatches, {} reconfigs",
+        plans.compiles, plans.hits, s.dispatches, s.misses
     );
-    assert_eq!(s.misses, 1, "role loads once, then stays resident");
-    sess.shutdown();
+    assert_eq!(plans.compiles, 1, "one signature = one cached plan");
+    model.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }
 

@@ -1,0 +1,29 @@
+"""CLI: export demo model bundles in the Rust runtime's `tf::model`
+serving format (directories of `model.json`).
+
+Usage:  python -m compile.export --out-dir /tmp/demo-bundles
+Then:   tf-fpga serve --model /tmp/demo-bundles/tiny_fc
+
+Writes three bundles:
+  mnist/         whole-model CNN, batched along dim 0 (servable)
+  mnist_layers/  per-layer CNN with named weight-artifact references
+  tiny_fc/       dense model with weights embedded in the GraphDef
+"""
+
+import argparse
+
+from . import model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="demo-bundles")
+    ap.add_argument("--max-batch", type=int, default=32,
+                    help="batch dim of the whole-model mnist bundle")
+    ns = ap.parse_args()
+    for path in model.export(ns.out_dir, max_batch=ns.max_batch):
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -187,3 +187,165 @@ ENTRY_POINTS = {
     "role4_conv3x3": role4_conv3x3,
     "mnist_cnn": mnist_cnn,
 }
+
+# ---------------------------------------------------------------------------
+# Model-bundle export: the Rust runtime's `tf::model` serving format.
+#
+# A bundle is a directory holding `model.json`: a GraphDef (nodes with op
+# tags mirroring the Rust `OpKind` variants), named signatures (endpoint
+# name -> node, shape, dtype), and the list of weight-artifact names the
+# graph references. Weights are either *embedded* as constant nodes
+# (json floats round-trip f32 exactly: np.float32 -> python float widens
+# losslessly and json prints the shortest f64 form) or *referenced* by
+# artifact name and resolved by the Rust session's weight bank. This is
+# the piece that closes the Python -> FPGA loop: build here, serve with
+# `tf-fpga serve --model <dir>` — no specialized toolchain in between.
+# ---------------------------------------------------------------------------
+
+BUNDLE_FORMAT = "tf-fpga-model-bundle"
+BUNDLE_VERSION = 1
+
+
+def _node(name, op, inputs=None, device=None, **fields):
+    n = {"name": name, "op": op}
+    if inputs:
+        n["inputs"] = list(inputs)
+    if device:
+        n["device"] = device
+    n.update(fields)
+    return n
+
+
+def _constant(name, array):
+    arr = np.asarray(array)
+    dtype = {"float32": "f32", "int16": "i16", "int32": "i32"}[str(arr.dtype)]
+    data = [
+        float(v) if dtype == "f32" else int(v) for v in arr.reshape(-1)
+    ]
+    return _node(
+        name,
+        "constant",
+        tensor={"shape": list(arr.shape), "dtype": dtype, "data": data},
+    )
+
+
+def _endpoint(name, node, shape, dtype="f32"):
+    return {"name": name, "node": node, "shape": list(shape), "dtype": dtype}
+
+
+def _bundle_doc(name, nodes, signatures):
+    artifacts = set()
+    for n in nodes:
+        if n["op"] == "conv_fixed_f32":
+            artifacts.add(n["weights"])
+        elif n["op"] == "fc_fixed":
+            artifacts.add(n["weights_w"])
+            artifacts.add(n["weights_b"])
+    return {
+        "format": BUNDLE_FORMAT,
+        "version": BUNDLE_VERSION,
+        "name": name,
+        "graph": {"nodes": nodes},
+        "signatures": signatures,
+        "artifacts": sorted(artifacts),
+    }
+
+
+def write_bundle(doc, out_dir):
+    import json
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "model.json")
+    # allow_nan=False: JSON has no NaN/Infinity and the Rust parser
+    # rejects the bare tokens — fail loudly here, at the source, instead
+    # of exporting a bundle that can never load. Serialize fully before
+    # touching the file so a failure never truncates an existing bundle.
+    text = json.dumps(doc, indent=2, sort_keys=True, allow_nan=False)
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def mnist_cnn_bundle(max_batch=32):
+    """Whole-model CNN (one `mnist_cnn` dispatch per batch), batched
+    generically along dim 0 — the canonical servable export."""
+    nodes = [
+        _node("x", "placeholder", shape=[max_batch, 1, 28, 28], dtype="f32"),
+        _node("logits", "mnist_cnn", inputs=["x"], device="fpga"),
+    ]
+    sig = {
+        "name": "serve",
+        "inputs": [_endpoint("x", "x", [max_batch, 1, 28, 28])],
+        "outputs": [_endpoint("logits", "logits", [max_batch, 10])],
+    }
+    return _bundle_doc("mnist", nodes, [sig])
+
+
+def mnist_layers_bundle():
+    """The CNN as per-layer ops with *named weight-artifact references*
+    (`cnn/conv1`, `cnn/fc1_w`, ...) resolved by the Rust weight bank."""
+    nodes = [
+        _node("x", "placeholder", shape=[1, 28, 28], dtype="f32"),
+        _node("conv1", "conv_fixed_f32", inputs=["x"],
+              weights="cnn/conv1", filters=2, cin=1, kh=3, kw=3),
+        _node("relu1", "relu", inputs=["conv1"]),
+        _node("pool1", "maxpool2", inputs=["relu1"]),
+        _node("conv2", "conv_fixed_f32", inputs=["pool1"],
+              weights="cnn/conv2", filters=4, cin=2, kh=5, kw=5),
+        _node("relu2", "relu", inputs=["conv2"]),
+        _node("pool2", "maxpool2", inputs=["relu2"]),
+        _node("flat", "reshape", inputs=["pool2"], shape=[1, 64]),
+        _node("fc1", "fc_fixed", inputs=["flat"],
+              weights_w="cnn/fc1_w", weights_b="cnn/fc1_b", out_width=32),
+        _node("relu3", "relu", inputs=["fc1"]),
+        _node("logits", "fc_fixed", inputs=["relu3"],
+              weights_w="cnn/fc2_w", weights_b="cnn/fc2_b", out_width=10),
+    ]
+    sig = {
+        "name": "serve",
+        "inputs": [_endpoint("x", "x", [1, 28, 28])],
+        "outputs": [_endpoint("logits", "logits", [1, 10])],
+    }
+    return _bundle_doc("mnist_layers", nodes, [sig])
+
+
+def tiny_fc_weights(in_dim=16, out_dim=4):
+    g = _rng_stable("tiny_fc")
+    w = g.normal(0, 0.3, (in_dim, out_dim)).astype(np.float32)
+    b = g.normal(0, 0.1, (out_dim,)).astype(np.float32)
+    return w, b
+
+
+def tiny_fc_bundle(batch=8, in_dim=16, out_dim=4):
+    """A dense model with weights *embedded* in the GraphDef — fully
+    self-contained, and an input shape unlike MNIST's, proving the serving
+    stack carries arbitrary leading-batch-dim shapes."""
+    w, b = tiny_fc_weights(in_dim, out_dim)
+    nodes = [
+        _node("x", "placeholder", shape=[batch, in_dim], dtype="f32"),
+        _constant("w", w),
+        _constant("b", b),
+        _node("fc", "fully_connected", inputs=["x", "w", "b"], device="fpga"),
+        _node("y", "relu", inputs=["fc"]),
+    ]
+    sig = {
+        "name": "serve",
+        "inputs": [_endpoint("x", "x", [batch, in_dim])],
+        "outputs": [_endpoint("y", "y", [batch, out_dim])],
+    }
+    return _bundle_doc("tiny_fc", nodes, [sig])
+
+
+def export(out_dir, max_batch=32):
+    """Export every demo bundle under `out_dir/<name>/model.json`."""
+    import os
+
+    paths = []
+    for doc in [
+        mnist_cnn_bundle(max_batch),
+        mnist_layers_bundle(),
+        tiny_fc_bundle(),
+    ]:
+        paths.append(write_bundle(doc, os.path.join(out_dir, doc["name"])))
+    return paths

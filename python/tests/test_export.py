@@ -1,0 +1,101 @@
+"""Model-bundle export: structure, references, and f32 exactness of the
+`model.json` documents the Rust runtime loads via `ModelBundle::load`."""
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import model
+
+
+def _load(tmp_path, name):
+    with open(os.path.join(tmp_path, name, "model.json")) as f:
+        return json.load(f)
+
+
+def _check_graph_well_formed(doc):
+    seen = set()
+    for node in doc["graph"]["nodes"]:
+        assert node["name"] not in seen, f"duplicate node {node['name']}"
+        for inp in node.get("inputs", []):
+            assert inp in seen, f"{node['name']} uses {inp} before definition"
+        seen.add(node["name"])
+    for sig in doc["signatures"]:
+        for ep in sig["inputs"] + sig["outputs"]:
+            assert ep["node"] in seen, f"endpoint {ep['name']} -> unknown {ep['node']}"
+
+
+def test_export_writes_all_bundles(tmp_path):
+    paths = model.export(str(tmp_path))
+    assert len(paths) == 3
+    for name in ["mnist", "mnist_layers", "tiny_fc"]:
+        doc = _load(tmp_path, name)
+        assert doc["format"] == model.BUNDLE_FORMAT
+        assert doc["version"] == model.BUNDLE_VERSION
+        assert doc["name"] == name
+        assert doc["signatures"], name
+        _check_graph_well_formed(doc)
+
+
+def test_mnist_bundle_batches_along_dim0(tmp_path):
+    model.export(str(tmp_path), max_batch=16)
+    doc = _load(tmp_path, "mnist")
+    (sig,) = doc["signatures"]
+    assert sig["inputs"][0]["shape"] == [16, 1, 28, 28]
+    assert sig["outputs"][0]["shape"] == [16, 10]
+    assert doc["artifacts"] == []
+
+
+def test_layers_bundle_lists_weight_artifact_refs(tmp_path):
+    model.export(str(tmp_path))
+    doc = _load(tmp_path, "mnist_layers")
+    assert doc["artifacts"] == [
+        "cnn/conv1", "cnn/conv2", "cnn/fc1_b", "cnn/fc1_w", "cnn/fc2_b", "cnn/fc2_w",
+    ]
+    ops = [n["op"] for n in doc["graph"]["nodes"]]
+    assert ops.count("conv_fixed_f32") == 2
+    assert ops.count("fc_fixed") == 2
+
+
+def test_tiny_fc_embedded_weights_round_trip_exactly(tmp_path):
+    model.export(str(tmp_path))
+    doc = _load(tmp_path, "tiny_fc")
+    w_ref, b_ref = model.tiny_fc_weights()
+    by_name = {n["name"]: n for n in doc["graph"]["nodes"]}
+    w = np.asarray(by_name["w"]["tensor"]["data"], np.float32).reshape(w_ref.shape)
+    b = np.asarray(by_name["b"]["tensor"]["data"], np.float32).reshape(b_ref.shape)
+    # json floats are shortest-round-trip f64; narrowing back to f32 must
+    # reproduce the original bits.
+    np.testing.assert_array_equal(w, w_ref)
+    np.testing.assert_array_equal(b, b_ref)
+    assert by_name["w"]["tensor"]["shape"] == list(w_ref.shape)
+    assert by_name["fc"]["inputs"] == ["x", "w", "b"]
+    assert by_name["fc"]["device"] == "fpga"
+
+
+def test_non_finite_weights_fail_export_loudly(tmp_path):
+    import pytest
+
+    doc = model.tiny_fc_bundle()
+    for node in doc["graph"]["nodes"]:
+        if node["name"] == "w":
+            node["tensor"]["data"][0] = float("nan")
+    with pytest.raises(ValueError):
+        model.write_bundle(doc, str(tmp_path / "bad"))
+
+
+def test_export_is_deterministic(tmp_path):
+    a_dir = tmp_path / "a"
+    b_dir = tmp_path / "b"
+    model.export(str(a_dir))
+    model.export(str(b_dir))
+    for name in ["mnist", "mnist_layers", "tiny_fc"]:
+        with open(a_dir / name / "model.json") as f:
+            a = f.read()
+        with open(b_dir / name / "model.json") as f:
+            b = f.read()
+        assert a == b, f"{name} export not deterministic"

@@ -70,6 +70,7 @@ fn main() {
                 InferenceServer::start(ServerConfig {
                     batch: policy(max_batch),
                     session: SessionOptions::native_only(),
+                    ..ServerConfig::default()
                 })
                 .expect("sync server"),
             );

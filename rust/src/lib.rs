@@ -41,8 +41,28 @@
 //! assert_eq!(sess.plan_cache_stats().compiles, 1); // cached for replay
 //! ```
 //!
+//! Models cross the Python → Rust boundary as **bundles** ([`tf::model`]):
+//! a `model.json` directory of serialized GraphDef + named signatures,
+//! written by `python -m compile.export` (or `tf-fpga export-demo`) and
+//! loaded with [`tf::model::ModelBundle::load`] / invoked by endpoint
+//! name through [`tf::model::Model`]:
+//!
+//! ```no_run
+//! use tf_fpga::tf::model::{Model, ModelBundle};
+//! use tf_fpga::tf::{SessionOptions, Tensor, DType};
+//!
+//! let model = Model::from_bundle(
+//!     ModelBundle::tiny_fc_demo(8, 16, 4),
+//!     SessionOptions::default(),
+//! ).unwrap();
+//! let out = model.invoke("serve", &[("x", Tensor::zeros(&[8, 16], DType::F32))]).unwrap();
+//! assert_eq!(out[0].shape(), &[8, 4]);
+//! model.shutdown();
+//! ```
+//!
 //! Serving: [`serve::AsyncInferenceServer`] is the async batched entry
-//! point — per-model micro-batch lanes, `Session::run_async` dispatch,
+//! point — per-model micro-batch lanes (any loaded bundle, batched along
+//! dim 0 of its input endpoint), `Session::run_async` dispatch,
 //! and a completer pool delivering replies in completion order:
 //!
 //! ```no_run

@@ -11,6 +11,8 @@
 //! tf-fpga ablate-regions [...]      # PR-region-count sweep
 //! tf-fpga crossover                 # reconfiguration amortization point
 //! tf-fpga run-mnist [--batches 32]  # end-to-end CNN inference
+//! tf-fpga export-demo [dir]         # write demo model bundles
+//! tf-fpga serve --model <dir>       # serve an exported bundle (async)
 //! ```
 
 use anyhow::{bail, Result};
@@ -18,7 +20,14 @@ use std::collections::HashMap;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (cmd, flags) = parse(&args)?;
+    let (cmd, flags, positional) = parse(&args)?;
+    // Only export-demo takes a positional argument (one: the output
+    // directory); any other stray token is almost certainly a typo'd
+    // flag (e.g. `serve async`).
+    let allowed_positionals = usize::from(cmd == "export-demo");
+    if let Some(stray) = positional.get(allowed_positionals) {
+        bail!("unexpected argument '{stray}' (try `tf-fpga help`)");
+    }
     match cmd.as_str() {
         "info" => info(),
         "table1" => {
@@ -59,20 +68,30 @@ fn main() -> Result<()> {
             flag_usize(&flags, "batch-size", 32),
             session_opts_from_flags(&flags)?,
         ),
-        "serve" if flags.contains_key("async") => serve_async(
-            flag_usize(&flags, "requests", 512),
-            flag_usize(&flags, "clients", 4),
-            flag_usize(&flags, "max-batch", 16),
-            flag_usize(&flags, "max-delay-ms", 3),
-            flag_usize(&flags, "pipeline-depth", 4),
-            flag_usize(&flags, "workers", 2),
-        ),
+        "serve" if flags.contains_key("async") || flags.contains_key("model") => {
+            serve_async(
+                flag_usize(&flags, "requests", 512),
+                flag_usize(&flags, "clients", 4),
+                flag_usize(&flags, "max-batch", 16),
+                flag_usize(&flags, "max-delay-ms", 3),
+                flag_usize(&flags, "pipeline-depth", 4),
+                flag_usize(&flags, "workers", 2),
+                flags.get("model").cloned(),
+            )
+        }
         "serve" => serve(
             flag_usize(&flags, "requests", 512),
             flag_usize(&flags, "clients", 4),
             flag_usize(&flags, "max-batch", 16),
             flag_usize(&flags, "max-delay-ms", 3),
             flags.get("trace-out").cloned(),
+        ),
+        "export-demo" => export_demo(
+            positional
+                .first()
+                .map(String::as_str)
+                .or_else(|| flags.get("out").map(String::as_str))
+                .unwrap_or("demo-bundles"),
         ),
         "ablate-hls" => ablate_hls(),
         "help" | "--help" | "-h" => {
@@ -101,15 +120,20 @@ commands:
                            dynamic-batching inference service + latency report
   serve --async [--pipeline-depth P --workers W ...]
                            async batched pipeline (overlapped dispatch/completion)
+  serve --model DIR [...]  serve a model bundle directory (async pipeline);
+                           see `export-demo` and `python -m compile.export`
+  export-demo [DIR]        write the built-in demo model bundles to DIR
+                           (mnist, mnist_layers, tiny_fc; default ./demo-bundles)
   ablate-hls               pre-synthesized vs online-synthesis (OpenCL) flow costs
 ";
 
-fn parse(args: &[String]) -> Result<(String, HashMap<String, String>)> {
+fn parse(args: &[String]) -> Result<(String, HashMap<String, String>, Vec<String>)> {
     if args.is_empty() {
-        return Ok(("help".into(), HashMap::new()));
+        return Ok(("help".into(), HashMap::new(), Vec::new()));
     }
     let cmd = args[0].clone();
     let mut flags = HashMap::new();
+    let mut positional = Vec::new();
     let mut i = 1;
     while i < args.len() {
         let a = &args[i];
@@ -122,11 +146,11 @@ fn parse(args: &[String]) -> Result<(String, HashMap<String, String>)> {
             };
             flags.insert(name.to_string(), value);
         } else {
-            bail!("unexpected argument '{a}'");
+            positional.push(a.clone());
         }
         i += 1;
     }
-    Ok((cmd, flags))
+    Ok((cmd, flags, positional))
 }
 
 fn flag_usize(flags: &HashMap<String, String>, name: &str, default: usize) -> usize {
@@ -369,6 +393,7 @@ fn serve(
             max_delay: std::time::Duration::from_millis(max_delay_ms as u64),
         },
         session: SessionOptions { trace: trace.clone(), ..SessionOptions::default() },
+        ..ServerConfig::default()
     })
     .map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
@@ -428,27 +453,35 @@ fn serve_async(
     max_delay_ms: usize,
     pipeline_depth: usize,
     workers: usize,
+    model_dir: Option<String>,
 ) -> Result<()> {
     use std::sync::Arc;
     use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig, BatchPolicy, ModelSpec};
     use tf_fpga::tf::session::SessionOptions;
     use tf_fpga::util::prng::Rng;
 
+    let policy = BatchPolicy {
+        max_batch,
+        max_delay: std::time::Duration::from_millis(max_delay_ms as u64),
+    };
+    // --model <dir>: serve a loaded bundle; otherwise the built-in demo.
+    let spec = match &model_dir {
+        Some(dir) => ModelSpec::from_dir(dir, policy).map_err(|e| anyhow::anyhow!("{e}"))?,
+        None => ModelSpec::new("mnist", policy),
+    };
+    let model_name = spec.name.clone();
     let srv = AsyncInferenceServer::start(AsyncServerConfig {
-        models: vec![ModelSpec::new(
-            "mnist",
-            BatchPolicy {
-                max_batch,
-                max_delay: std::time::Duration::from_millis(max_delay_ms as u64),
-            },
-        )],
+        models: vec![spec],
         session: SessionOptions { dispatch_workers: workers, ..SessionOptions::default() },
         pipeline_depth,
     })
     .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let meta = srv.model_meta(&model_name).expect("hosted model has meta").clone();
     println!(
-        "async serving mnist_cnn: max_batch={max_batch} max_delay={max_delay_ms}ms \
-         depth={pipeline_depth} workers={workers}, {clients} clients, {requests} requests"
+        "async serving '{model_name}' ({:?} -> {:?} per request): max_batch={max_batch} \
+         max_delay={max_delay_ms}ms depth={pipeline_depth} workers={workers}, \
+         {clients} clients, {requests} requests",
+        meta.sample_in_shape, meta.sample_out_shape
     );
 
     let srv = Arc::new(srv);
@@ -457,13 +490,15 @@ fn serve_async(
     let handles: Vec<_> = (0..clients)
         .map(|c| {
             let srv = Arc::clone(&srv);
+            let model_name = model_name.clone();
+            let meta = meta.clone();
             std::thread::spawn(move || {
                 let mut rng = Rng::new(c as u64 + 1);
                 for _ in 0..per_client {
-                    let mut img = vec![0f32; 784];
-                    rng.fill_f32_normal(&mut img, 0.0, 1.0);
-                    let logits = srv.infer("mnist", img).expect("infer");
-                    assert_eq!(logits.len(), 10);
+                    let mut sample = vec![0f32; meta.in_elems];
+                    rng.fill_f32_normal(&mut sample, 0.0, 1.0);
+                    let row = srv.infer(&model_name, sample).expect("infer");
+                    assert_eq!(row.len(), meta.out_elems);
                 }
             })
         })
@@ -493,6 +528,30 @@ fn serve_async(
         rep.reconfig.misses
     );
     drop(srv); // Drop drains the pipeline and shuts the session down.
+    Ok(())
+}
+
+/// Write the built-in demo bundles — the same directory format
+/// `python -m compile.export` produces from the Python frontend.
+fn export_demo(dir: &str) -> Result<()> {
+    use tf_fpga::tf::model::ModelBundle;
+    let bundles = [
+        ModelBundle::mnist_demo(32),
+        ModelBundle::mnist_layers_demo(),
+        ModelBundle::tiny_fc_demo(8, 16, 4),
+    ];
+    for bundle in bundles {
+        let path = std::path::Path::new(dir).join(&bundle.name);
+        bundle.save(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "wrote {} ({} nodes, {} signature(s), artifacts {:?})",
+            path.join("model.json").display(),
+            bundle.graph.len(),
+            bundle.signatures.len(),
+            bundle.artifact_refs()
+        );
+    }
+    println!("\nserve one with: tf-fpga serve --model {dir}/tiny_fc");
     Ok(())
 }
 

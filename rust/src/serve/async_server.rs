@@ -30,34 +30,15 @@ use crate::hsa::error::{HsaError, Result};
 use crate::metrics::counters::ServeCounters;
 use crate::metrics::histogram::Histogram;
 use crate::serve::batcher::{BatchPolicy, Batcher};
+use crate::serve::hosted::{host_model, HostedModel, ModelIoMeta, ModelSpec};
 use crate::tf::dtype::DType;
-use crate::tf::graph::{Graph, OpKind};
+use crate::tf::graph::Graph;
 use crate::tf::session::{PendingRun, Session, SessionOptions};
 use crate::tf::tensor::Tensor;
 use std::collections::HashMap;
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
-
-/// MNIST image size (flattened 28×28), the input width of every model.
-const IMAGE_ELEMS: usize = 784;
-/// Logits per request.
-const LOGIT_ELEMS: usize = 10;
-
-/// One served model: a name and its micro-batching policy. Each model
-/// gets its own graph subtree (`{name}/x` → `{name}/logits`), batch lane
-/// and compiled batch dimension (`batch.max_batch`).
-#[derive(Debug, Clone)]
-pub struct ModelSpec {
-    pub name: String,
-    pub batch: BatchPolicy,
-}
-
-impl ModelSpec {
-    pub fn new(name: impl Into<String>, batch: BatchPolicy) -> ModelSpec {
-        ModelSpec { name: name.into(), batch }
-    }
-}
 
 /// Async server configuration.
 pub struct AsyncServerConfig {
@@ -80,23 +61,19 @@ impl Default for AsyncServerConfig {
 }
 
 struct Request {
-    image: Vec<f32>,
+    /// One flattened input sample (`ModelIoMeta::in_elems` f32 values).
+    sample: Vec<f32>,
     enqueued: Instant,
+    /// Receives one flattened output row (`ModelIoMeta::out_elems` values).
     reply: mpsc::SyncSender<Result<Vec<f32>>>,
-}
-
-/// Per-model constants the batcher thread needs at flush time.
-struct ModelInfo {
-    max_batch: usize,
-    x_name: String,
-    logits_name: String,
-    kernel: String,
 }
 
 /// A dispatched batch travelling from the batcher to a completer.
 struct InFlight {
     reqs: Vec<Request>,
     pending: PendingRun,
+    /// Output elements per request row (completer slices the batch).
+    out_elems: usize,
 }
 
 struct StatsInner {
@@ -133,18 +110,18 @@ pub struct AsyncInferenceServer {
     session: Arc<Session>,
     stats: Arc<Mutex<StatsInner>>,
     counters: Arc<ServeCounters>,
-    models: Vec<String>,
+    metas: HashMap<String, ModelIoMeta>,
 }
 
 impl AsyncInferenceServer {
-    /// Build one session hosting every model's subgraph and start the
-    /// batcher thread plus `pipeline_depth` completer threads.
+    /// Build one session hosting every model's merged bundle subgraph and
+    /// start the batcher thread plus `pipeline_depth` completer threads.
     pub fn start(config: AsyncServerConfig) -> Result<AsyncInferenceServer> {
         if config.models.is_empty() {
             return Err(HsaError::Runtime("no models configured".into()));
         }
         let mut g = Graph::new();
-        let mut infos: HashMap<String, ModelInfo> = HashMap::new();
+        let mut infos: HashMap<String, HostedModel> = HashMap::new();
         let mut lanes = Batcher::new();
         for spec in &config.models {
             if infos.contains_key(&spec.name) {
@@ -153,25 +130,16 @@ impl AsyncInferenceServer {
                     spec.name
                 )));
             }
-            let x_name = format!("{}/x", spec.name);
-            let logits_name = format!("{}/logits", spec.name);
-            let x = g.placeholder(
-                x_name.clone(),
-                &[spec.batch.max_batch, 1, 28, 28],
-                DType::F32,
-            )?;
-            g.add(logits_name.clone(), OpKind::MnistCnn, &[x])?;
-            infos.insert(
-                spec.name.clone(),
-                ModelInfo {
-                    max_batch: spec.batch.max_batch,
-                    x_name,
-                    logits_name,
-                    kernel: OpKind::MnistCnn.kernel_name().unwrap(),
-                },
-            );
+            let hosted = host_model(&mut g, spec)?;
+            infos.insert(spec.name.clone(), hosted);
             lanes.add_model(spec.name.clone(), spec.batch);
         }
+        g.finalize()?;
+        for info in infos.values_mut() {
+            info.resolve_output(&g)?;
+        }
+        let metas: HashMap<String, ModelIoMeta> =
+            infos.iter().map(|(name, info)| (name.clone(), info.io_meta())).collect();
         let session = Arc::new(Session::new(g, config.session)?);
 
         let depth = config.pipeline_depth.max(1);
@@ -181,17 +149,16 @@ impl AsyncInferenceServer {
         let stats = Arc::new(Mutex::new(StatsInner { latency: Histogram::new() }));
         let counters = Arc::new(ServeCounters::new());
 
-        // Prewarm every model's execution plan. Honest caveat: with the
-        // current single-op model graphs (x → mnist_cnn → logits) the
-        // steady-state request path is `run_async`'s single-device-tail
-        // fast path, which never consults the plan cache — the cached
-        // plans only serve `run_async`'s synchronous fallback, i.e. any
-        // future model graph shape that does not qualify for the tail
-        // dispatch. The prewarm is one cheap compile per model at startup
-        // and puts a compile-time figure in the counters/report.
+        // Prewarm every model's execution plan. Honest caveat: for
+        // single-device-tail bundle graphs (one placed op fed by
+        // structural ops, e.g. the MNIST demo) the steady-state request
+        // path is `run_async`'s tail fast path, which never consults the
+        // plan cache — the cached plans serve the synchronous fallback,
+        // i.e. every multi-op bundle. The prewarm is one cheap compile per
+        // model at startup and puts a compile-time figure in the report.
         for info in infos.values() {
-            let zero = Tensor::zeros(&[info.max_batch, 1, 28, 28], DType::F32);
-            let fetches = [info.logits_name.as_str()];
+            let zero = Tensor::zeros(&info.full_in_shape, DType::F32);
+            let fetches = [info.out_name.as_str()];
             let us = session.warm_plan(&[(info.x_name.as_str(), zero)], &fetches)?;
             counters.on_plan_compile(us);
         }
@@ -225,31 +192,43 @@ impl AsyncInferenceServer {
             session,
             stats,
             counters,
-            models: config.models.iter().map(|m| m.name.clone()).collect(),
+            metas,
         })
     }
 
-    /// Submit one image to `model`; blocks until its logits are ready.
-    pub fn infer(&self, model: &str, image: Vec<f32>) -> Result<Vec<f32>> {
-        let rx = self.infer_async(model, image)?;
+    /// Per-sample input/output meta of a served model (how many f32s a
+    /// request must carry and a reply row will hold).
+    pub fn model_meta(&self, model: &str) -> Option<&ModelIoMeta> {
+        self.metas.get(model)
+    }
+
+    /// Submit one flattened input sample to `model`; blocks until its
+    /// output row is ready.
+    pub fn infer(&self, model: &str, sample: Vec<f32>) -> Result<Vec<f32>> {
+        let rx = self.infer_async(model, sample)?;
         rx.recv().map_err(|_| HsaError::Runtime("server dropped request".into()))?
     }
 
-    /// Non-blocking submit: returns a receiver that yields the logits
-    /// whenever the request's batch retires (completion order, not
-    /// submission order).
+    /// Non-blocking submit: returns a receiver that yields the flattened
+    /// output row whenever the request's batch retires (completion order,
+    /// not submission order).
     pub fn infer_async(
         &self,
         model: &str,
-        image: Vec<f32>,
+        sample: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
-        if !self.models.iter().any(|m| m == model) {
-            return Err(HsaError::Runtime(format!("unknown model '{model}'")));
-        }
-        if image.len() != IMAGE_ELEMS {
+        let Some(meta) = self.metas.get(model) else {
+            let known: Vec<&str> = self.metas.keys().map(String::as_str).collect();
             return Err(HsaError::Runtime(format!(
-                "image must be {IMAGE_ELEMS} floats, got {}",
-                image.len()
+                "unknown model '{model}' (serving: {known:?})"
+            )));
+        };
+        if sample.len() != meta.in_elems {
+            return Err(HsaError::Runtime(format!(
+                "model '{model}': input sample must be {} f32 values (shape {:?}), got {}",
+                meta.in_elems,
+                meta.sample_in_shape,
+                sample.len()
             )));
         }
         let (reply, rx) = mpsc::sync_channel(1);
@@ -257,7 +236,7 @@ impl AsyncInferenceServer {
         self.tx
             .send(Some((
                 model.to_string(),
-                Request { image, enqueued: Instant::now(), reply },
+                Request { sample, enqueued: Instant::now(), reply },
             )))
             .map_err(|_| HsaError::Runtime("server stopped".into()))?;
         Ok(rx)
@@ -317,7 +296,7 @@ fn batcher_loop(
     session: Arc<Session>,
     counters: Arc<ServeCounters>,
     mut lanes: Batcher<Request>,
-    infos: HashMap<String, ModelInfo>,
+    infos: HashMap<String, HostedModel>,
 ) {
     loop {
         let msg = match lanes.next_deadline() {
@@ -361,7 +340,7 @@ fn batcher_loop(
 /// artificially protected forever.
 fn flush_ready(
     lanes: &mut Batcher<Request>,
-    infos: &HashMap<String, ModelInfo>,
+    infos: &HashMap<String, HostedModel>,
     session: &Arc<Session>,
     counters: &Arc<ServeCounters>,
     inflight_tx: &mpsc::SyncSender<InFlight>,
@@ -377,16 +356,21 @@ fn flush_ready(
     }
 }
 
-/// Aggregate lane depths per kernel and hand them to the FPGA policy.
+/// Aggregate lane depths per kernel and hand them to the FPGA policy. A
+/// model's queued requests count toward *every* kernel in its fetch cone
+/// (each is dispatched once per batch); the hint no-ops for kernels with
+/// no FPGA implementation.
 fn publish_demand(
     lanes: &Batcher<Request>,
-    infos: &HashMap<String, ModelInfo>,
+    infos: &HashMap<String, HostedModel>,
     session: &Session,
 ) {
     let mut per_kernel: HashMap<&str, u64> = HashMap::new();
     for (model, queued) in lanes.queued_by_model() {
         if let Some(info) = infos.get(&model) {
-            *per_kernel.entry(info.kernel.as_str()).or_insert(0) += queued as u64;
+            for kernel in &info.kernels {
+                *per_kernel.entry(kernel.as_str()).or_insert(0) += queued as u64;
+            }
         }
     }
     for (kernel, queued) in per_kernel {
@@ -397,7 +381,7 @@ fn publish_demand(
 fn dispatch(
     model: &str,
     reqs: Vec<Request>,
-    infos: &HashMap<String, ModelInfo>,
+    infos: &HashMap<String, HostedModel>,
     session: &Arc<Session>,
     counters: &Arc<ServeCounters>,
     inflight_tx: &mpsc::SyncSender<InFlight>,
@@ -410,24 +394,24 @@ fn dispatch(
         }
     };
     // Pad the final partial batch to the compiled batch dimension.
-    let mut data = vec![0f32; info.max_batch * IMAGE_ELEMS];
+    let mut data = vec![0f32; info.max_batch * info.in_elems];
     for (i, r) in reqs.iter().enumerate() {
-        data[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].copy_from_slice(&r.image);
+        data[i * info.in_elems..(i + 1) * info.in_elems].copy_from_slice(&r.sample);
     }
-    let x = match Tensor::from_f32(&[info.max_batch, 1, 28, 28], data) {
+    let x = match Tensor::from_f32(&info.full_in_shape, data) {
         Ok(t) => t,
         Err(e) => {
             fail_all(reqs, &e.to_string(), counters);
             return;
         }
     };
-    match session.run_async(&[(info.x_name.as_str(), x)], &[info.logits_name.as_str()]) {
+    match session.run_async(&[(info.x_name.as_str(), x)], &[info.out_name.as_str()]) {
         Ok(pending) => {
             counters.on_batch_dispatch(reqs.len() as u64);
             // Blocks while `pipeline_depth` batches are already in flight
             // — the pipeline's backpressure point.
             if let Err(mpsc::SendError(inf)) =
-                inflight_tx.send(InFlight { reqs, pending })
+                inflight_tx.send(InFlight { reqs, pending, out_elems: info.out_elems })
             {
                 // Completers are gone (server tearing down mid-dispatch).
                 counters.on_batch_complete(0, inf.reqs.len() as u64);
@@ -468,11 +452,12 @@ fn completer_loop(
             }
         };
         let n = inf.reqs.len();
+        let out_elems = inf.out_elems;
         let timeout = Some(crate::hsa::runtime::DISPATCH_TIMEOUT);
         match inf.pending.wait(timeout).and_then(|outs| {
             outs[0].as_f32().map(|v| v.to_vec()).map_err(HsaError::from)
         }) {
-            Ok(logits) => {
+            Ok(rows) => {
                 // Account the batch *before* delivering replies, so a
                 // caller who reads `report()` right after its reply
                 // arrives sees itself counted.
@@ -484,7 +469,7 @@ fn completer_loop(
                 }
                 counters.on_batch_complete(n as u64, 0);
                 for (i, r) in inf.reqs.into_iter().enumerate() {
-                    let row = logits[i * LOGIT_ELEMS..(i + 1) * LOGIT_ELEMS].to_vec();
+                    let row = rows[i * out_elems..(i + 1) * out_elems].to_vec();
                     let _ = r.reply.send(Ok(row));
                 }
             }
@@ -579,6 +564,7 @@ mod tests {
         let mut reference = InferenceServer::start(ServerConfig {
             batch: policy(4, 2),
             session: SessionOptions::native_only(),
+            ..ServerConfig::default()
         })
         .unwrap();
         let images: Vec<Vec<f32>> =
@@ -622,11 +608,56 @@ mod tests {
     }
 
     #[test]
-    fn unknown_model_rejected_and_bad_image_rejected() {
+    fn unknown_model_rejected_and_bad_sample_rejected() {
         let mut srv = single_model(4, 2, 2);
         assert!(srv.infer("nope", vec![0.0; 784]).is_err());
-        assert!(srv.infer_async("mnist", vec![0.0; 100]).is_err());
+        let err = srv.infer_async("mnist", vec![0.0; 100]).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("mnist") && msg.contains("784") && msg.contains("100"),
+            "error must name the model and expected vs got sizes: {msg}"
+        );
         srv.stop();
+    }
+
+    #[test]
+    fn serves_two_bundles_with_different_input_shapes() {
+        use crate::tf::model::{Model, ModelBundle};
+        let tiny = ModelBundle::tiny_fc_demo(4, 16, 4);
+        let mut srv = AsyncInferenceServer::start(AsyncServerConfig {
+            models: vec![
+                ModelSpec::new("mnist", policy(2, 2)),
+                ModelSpec::from_bundle("tiny", tiny.clone(), policy(2, 2)),
+            ],
+            session: SessionOptions {
+                dispatch_workers: 2,
+                ..SessionOptions::native_only()
+            },
+            pipeline_depth: 2,
+        })
+        .unwrap();
+
+        let meta = srv.model_meta("tiny").unwrap().clone();
+        assert_eq!((meta.in_elems, meta.out_elems), (16, 4));
+        assert_eq!(meta.sample_in_shape, vec![16]);
+        assert_eq!(srv.model_meta("mnist").unwrap().in_elems, 784);
+
+        let logits = srv.infer("mnist", vec![0.1; 784]).unwrap();
+        assert_eq!(logits.len(), 10);
+        let sample: Vec<f32> = (0..16).map(|i| i as f32 * 0.1 - 0.8).collect();
+        let row = srv.infer("tiny", sample.clone()).unwrap();
+        assert_eq!(row.len(), 4);
+        srv.stop();
+
+        // The served row must equal a direct Model invocation of the same
+        // bundle (row-independent FC: padding rows cannot bleed in).
+        let model = Model::from_bundle(tiny, SessionOptions::native_only()).unwrap();
+        let mut data = vec![0f32; 4 * 16];
+        data[..16].copy_from_slice(&sample);
+        let x = Tensor::from_f32(&[4, 16], data).unwrap();
+        let want = model.invoke("serve", &[("x", x)]).unwrap();
+        assert_eq!(&want[0].as_f32().unwrap()[..4], row.as_slice());
+        model.shutdown();
     }
 
     #[test]

@@ -1,0 +1,380 @@
+//! Hosting model bundles inside a serving session.
+//!
+//! Both servers build **one** session whose graph is the union of every
+//! served model's bundle graph, merged under a `{model}/` name prefix.
+//! The crate-internal `host_model` performs the merge: it validates the
+//! bundle's serving
+//! signature (exactly one input and one output endpoint, f32 both ways),
+//! rewrites the input placeholder's **leading dimension** to the lane's
+//! `max_batch` — batching is along dim 0, whatever the rest of the shape
+//! is — and records the merged node names plus per-sample element counts
+//! the batcher and completer need. No MNIST geometry anywhere: a bundle
+//! with a `[B, 16]` input serves next to one with `[B, 1, 28, 28]`.
+
+use crate::hsa::error::{HsaError, Result};
+use crate::serve::batcher::BatchPolicy;
+use crate::tf::dtype::DType;
+use crate::tf::graph::{Graph, OpKind};
+use crate::tf::model::{ModelBundle, SERVE_SIGNATURE};
+use std::path::Path;
+
+/// One served model: a lane name, its micro-batching policy, and the
+/// bundle (graph + signatures) it executes. Each model gets its own graph
+/// subtree (`{name}/...`), batch lane and compiled batch dimension
+/// (`batch.max_batch`, which overrides the bundle's exported batch dim).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub batch: BatchPolicy,
+    pub bundle: ModelBundle,
+    /// Which bundle signature to serve (default `"serve"`).
+    pub signature: String,
+}
+
+impl ModelSpec {
+    /// The built-in MNIST CNN demo bundle under `name` — the historical
+    /// default, now just one bundle among any.
+    pub fn new(name: impl Into<String>, batch: BatchPolicy) -> ModelSpec {
+        ModelSpec::from_bundle(name, ModelBundle::mnist_demo(batch.max_batch), batch)
+    }
+
+    pub fn from_bundle(
+        name: impl Into<String>,
+        bundle: ModelBundle,
+        batch: BatchPolicy,
+    ) -> ModelSpec {
+        ModelSpec {
+            name: name.into(),
+            batch,
+            bundle,
+            signature: SERVE_SIGNATURE.to_string(),
+        }
+    }
+
+    /// Load a bundle directory; the lane takes the bundle's name.
+    pub fn from_dir(dir: impl AsRef<Path>, batch: BatchPolicy) -> Result<ModelSpec> {
+        let bundle = ModelBundle::load(dir)?;
+        Ok(ModelSpec::from_bundle(bundle.name.clone(), bundle, batch))
+    }
+
+    pub fn with_signature(mut self, signature: impl Into<String>) -> ModelSpec {
+        self.signature = signature.into();
+        self
+    }
+}
+
+/// Public per-model I/O meta, for clients that need to size requests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelIoMeta {
+    /// Per-request input shape (the input endpoint's shape minus dim 0).
+    pub sample_in_shape: Vec<usize>,
+    pub in_elems: usize,
+    /// Per-request output shape (the output's shape minus dim 0).
+    pub sample_out_shape: Vec<usize>,
+    pub out_elems: usize,
+}
+
+/// A bundle merged into the serving graph: everything the batcher thread
+/// and completers need at flush/retire time.
+#[derive(Debug, Clone)]
+pub(crate) struct HostedModel {
+    pub name: String,
+    /// Merged input placeholder node name (`{model}/{node}`).
+    pub x_name: String,
+    /// Merged output node name.
+    pub out_name: String,
+    pub max_batch: usize,
+    pub sample_in_shape: Vec<usize>,
+    pub in_elems: usize,
+    /// Full input shape with the batch dim: `[max_batch, sample...]`.
+    pub full_in_shape: Vec<usize>,
+    /// Per-request output row: filled by [`HostedModel::resolve_output`]
+    /// after the merged graph finalizes.
+    pub sample_out_shape: Vec<usize>,
+    pub out_elems: usize,
+    /// Kernels of every compute node in the output's fetch cone, for
+    /// eviction-policy demand hints: N queued requests imply N upcoming
+    /// dispatches of *each* of these (empty for all-structural graphs).
+    pub kernels: Vec<String>,
+}
+
+impl HostedModel {
+    pub fn io_meta(&self) -> ModelIoMeta {
+        ModelIoMeta {
+            sample_in_shape: self.sample_in_shape.clone(),
+            in_elems: self.in_elems,
+            sample_out_shape: self.sample_out_shape.clone(),
+            out_elems: self.out_elems,
+        }
+    }
+
+    /// After `g.finalize()`: read the output node's inferred shape, check
+    /// the batch-along-dim-0 convention, and fill the per-row meta.
+    pub fn resolve_output(&mut self, g: &Graph) -> Result<()> {
+        let id = g.by_name(&self.out_name).expect("output node was just merged");
+        let node = g.node(id);
+        let shape = &node.out_shape;
+        if shape.first() != Some(&self.max_batch) {
+            return Err(HsaError::Runtime(format!(
+                "model '{}': output '{}' has shape {shape:?}, which does not batch \
+                 along dim 0 (expected leading {})",
+                self.name, self.out_name, self.max_batch
+            )));
+        }
+        if node.out_dtype != DType::F32 {
+            return Err(HsaError::Runtime(format!(
+                "model '{}': output '{}' is {}, the serving pipeline is f32-only \
+                 (use tf::model::Model for other dtypes)",
+                self.name, self.out_name, node.out_dtype
+            )));
+        }
+        self.sample_out_shape = shape[1..].to_vec();
+        self.out_elems = shape[1..].iter().product();
+        // Every compute kernel in the output's fetch cone is dispatched
+        // once per batch, so all of them carry the lane's queued demand —
+        // not just the output node's op (which may even be structural, or
+        // a CPU-only tail like a final Relu).
+        let live = crate::tf::model::fetch_cone(g, &[id]);
+        let mut kernels = Vec::new();
+        for node in g.nodes() {
+            if live[node.id.0] {
+                if let Some(k) = node.op.kernel_name() {
+                    if !kernels.contains(&k) {
+                        kernels.push(k);
+                    }
+                }
+            }
+        }
+        self.kernels = kernels;
+        Ok(())
+    }
+}
+
+/// Merge `spec`'s bundle into the shared serving graph under the
+/// `{spec.name}/` prefix, overriding the serve input's leading dim with
+/// the lane's `max_batch`. Call [`HostedModel::resolve_output`] once the
+/// merged graph has been finalized.
+pub(crate) fn host_model(g: &mut Graph, spec: &ModelSpec) -> Result<HostedModel> {
+    let sig = spec.bundle.signature(&spec.signature)?;
+    if sig.inputs.len() != 1 || sig.outputs.len() != 1 {
+        return Err(HsaError::Runtime(format!(
+            "model '{}': serving needs a single-input/single-output signature, \
+             '{}' has {} inputs / {} outputs",
+            spec.name,
+            spec.signature,
+            sig.inputs.len(),
+            sig.outputs.len()
+        )));
+    }
+    let in_ep = &sig.inputs[0];
+    let out_ep = &sig.outputs[0];
+    if in_ep.shape.is_empty() {
+        return Err(HsaError::Runtime(format!(
+            "model '{}': input endpoint '{}' is a scalar; serving needs a leading \
+             batch dimension",
+            spec.name, in_ep.name
+        )));
+    }
+    if in_ep.dtype != DType::F32 {
+        return Err(HsaError::Runtime(format!(
+            "model '{}': input endpoint '{}' is {}, the serving pipeline is f32-only \
+             (use tf::model::Model for other dtypes)",
+            spec.name, in_ep.name, in_ep.dtype
+        )));
+    }
+
+    let max_batch = spec.batch.max_batch;
+    let sample_in_shape = in_ep.shape[1..].to_vec();
+    let mut full_in_shape = Vec::with_capacity(in_ep.shape.len());
+    full_in_shape.push(max_batch);
+    full_in_shape.extend_from_slice(&sample_in_shape);
+
+    // Merge only the served signature's fetch cone (plus its input
+    // placeholder): nodes that exist solely for *other* signatures must
+    // not constrain — or even enter — the serving session. Insertion
+    // order is topological; node ids shift, so inputs are remapped
+    // through the old-id → new-id table.
+    let src = &spec.bundle.graph;
+    let out_id = src.by_name(&out_ep.node).ok_or_else(|| {
+        HsaError::Runtime(format!(
+            "model '{}': output endpoint node '{}' not in graph",
+            spec.name, out_ep.node
+        ))
+    })?;
+    let in_id = src.by_name(&in_ep.node).ok_or_else(|| {
+        HsaError::Runtime(format!(
+            "model '{}': input endpoint node '{}' not in graph",
+            spec.name, in_ep.node
+        ))
+    })?;
+    let live = crate::tf::model::fetch_cone(src, &[out_id, in_id]);
+    let mut idmap = vec![None; src.len()];
+    for node in src.nodes() {
+        if !live[node.id.0] {
+            continue;
+        }
+        let merged_name = format!("{}/{}", spec.name, node.name);
+        let op = if node.name == in_ep.node {
+            match &node.op {
+                OpKind::Placeholder { dtype, .. } => {
+                    OpKind::Placeholder { shape: full_in_shape.clone(), dtype: *dtype }
+                }
+                // ModelBundle::validate already pinned input endpoints to
+                // placeholders; keep a readable error anyway.
+                other => {
+                    return Err(HsaError::Runtime(format!(
+                        "model '{}': input endpoint node '{}' is {other:?}, not a \
+                         placeholder",
+                        spec.name, in_ep.node
+                    )))
+                }
+            }
+        } else {
+            node.op.clone()
+        };
+        let inputs: Vec<_> = node
+            .inputs
+            .iter()
+            .map(|i| idmap[i.0].expect("inputs precede consumers"))
+            .collect();
+        let id = g.add(merged_name, op, &inputs)?;
+        if let Some(d) = node.device {
+            g.set_device(id, d);
+        }
+        idmap[node.id.0] = Some(id);
+    }
+
+    Ok(HostedModel {
+        name: spec.name.clone(),
+        x_name: format!("{}/{}", spec.name, in_ep.node),
+        out_name: format!("{}/{}", spec.name, out_ep.node),
+        max_batch,
+        in_elems: sample_in_shape.iter().product(),
+        sample_in_shape,
+        full_in_shape,
+        sample_out_shape: Vec::new(),
+        out_elems: 0,
+        kernels: Vec::new(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn policy(max_batch: usize) -> BatchPolicy {
+        BatchPolicy { max_batch, max_delay: Duration::from_millis(1) }
+    }
+
+    #[test]
+    fn hosting_overrides_the_batch_dim_and_prefixes_names() {
+        let mut g = Graph::new();
+        // Bundle exported with batch 32; the lane serves batch 4.
+        let spec = ModelSpec::from_bundle("tiny", ModelBundle::tiny_fc_demo(32, 16, 4), policy(4));
+        let mut h = host_model(&mut g, &spec).unwrap();
+        g.finalize().unwrap();
+        h.resolve_output(&g).unwrap();
+        assert_eq!(h.x_name, "tiny/x");
+        assert_eq!(h.out_name, "tiny/y");
+        assert_eq!(h.full_in_shape, vec![4, 16]);
+        assert_eq!(h.in_elems, 16);
+        assert_eq!(h.sample_out_shape, vec![4]);
+        assert_eq!(h.out_elems, 4);
+        let x = g.by_name("tiny/x").unwrap();
+        assert_eq!(g.node(x).out_shape, vec![4, 16]);
+    }
+
+    #[test]
+    fn two_models_with_different_shapes_share_one_graph() {
+        let mut g = Graph::new();
+        let mnist = ModelSpec::new("mnist", policy(8));
+        let tiny = ModelSpec::from_bundle("tiny", ModelBundle::tiny_fc_demo(2, 16, 4), policy(2));
+        let mut hm = host_model(&mut g, &mnist).unwrap();
+        let mut ht = host_model(&mut g, &tiny).unwrap();
+        g.finalize().unwrap();
+        hm.resolve_output(&g).unwrap();
+        ht.resolve_output(&g).unwrap();
+        assert_eq!(hm.in_elems, 784);
+        assert_eq!(hm.out_elems, 10);
+        assert_eq!(ht.in_elems, 16);
+        assert_eq!(ht.out_elems, 4);
+        assert_eq!(hm.kernels, vec!["mnist_cnn".to_string()]);
+        // tiny's cone carries BOTH its kernels (topological order): the
+        // relu tail alone would starve the FPGA-placed fc of demand hints.
+        assert_eq!(ht.kernels, vec!["fc".to_string(), "relu".to_string()]);
+    }
+
+    #[test]
+    fn hosting_merges_only_the_served_signatures_cone() {
+        use crate::tf::model::{Endpoint, Signature};
+        use crate::tf::{DType, Graph as G, OpKind, Tensor};
+        // Bundle with a second signature whose cone is pinned to the
+        // exported batch dim (Reshape to [32, 16]) — it must neither
+        // enter the serving graph nor break the lane's batch override.
+        let mut g = G::new();
+        let x = g.placeholder("x", &[32, 16], DType::F32).unwrap();
+        let w = g.constant("w", Tensor::zeros(&[16, 4], DType::F32)).unwrap();
+        let b = g.constant("b", Tensor::zeros(&[4], DType::F32)).unwrap();
+        let fc = g.add("fc", OpKind::FullyConnected, &[x, w, b]).unwrap();
+        g.add("y", OpKind::Relu, &[fc]).unwrap();
+        g.add("debug_view", OpKind::Reshape { shape: vec![16, 32] }, &[x]).unwrap();
+        let serve = Signature {
+            name: "serve".into(),
+            inputs: vec![Endpoint::new("x", "x", &[32, 16], DType::F32)],
+            outputs: vec![Endpoint::new("y", "y", &[32, 4], DType::F32)],
+        };
+        let debug = Signature {
+            name: "debug".into(),
+            inputs: vec![Endpoint::new("x", "x", &[32, 16], DType::F32)],
+            outputs: vec![Endpoint::new("v", "debug_view", &[16, 32], DType::F32)],
+        };
+        let bundle =
+            crate::tf::model::ModelBundle::new("multi", g, vec![serve, debug]).unwrap();
+
+        // Serve at batch 4: the debug Reshape would fail shape inference
+        // ([4,16] -> [16,32]) if it were merged; pruning keeps it out.
+        let mut host = Graph::new();
+        let spec = ModelSpec::from_bundle("multi", bundle, policy(4));
+        let mut h = host_model(&mut host, &spec).unwrap();
+        host.finalize().unwrap();
+        h.resolve_output(&host).unwrap();
+        assert!(host.by_name("multi/debug_view").is_none(), "non-cone node merged");
+        assert_eq!(h.out_elems, 4);
+    }
+
+    #[test]
+    fn unknown_signature_is_an_error() {
+        let mut g = Graph::new();
+        let spec = ModelSpec::new("m", policy(2)).with_signature("train");
+        let err = host_model(&mut g, &spec).unwrap_err();
+        assert!(err.to_string().contains("train"), "{err}");
+    }
+
+    #[test]
+    fn non_batching_output_is_rejected_at_resolve() {
+        // tiny_fc batches fine; force a mismatch by serving with a batch
+        // the convs cannot carry: mnist_layers is rank-3 (no batch dim),
+        // so any max_batch != 1 breaks shape inference at finalize.
+        let mut g = Graph::new();
+        let spec = ModelSpec::from_bundle(
+            "layers",
+            ModelBundle::mnist_layers_demo(),
+            policy(4),
+        );
+        host_model(&mut g, &spec).unwrap();
+        assert!(g.finalize().is_err(), "batch-4 (4,28,28) must fail conv inference");
+
+        // With max_batch = 1 the layered bundle serves (dim 0 is 1).
+        let mut g = Graph::new();
+        let spec = ModelSpec::from_bundle(
+            "layers",
+            ModelBundle::mnist_layers_demo(),
+            policy(1),
+        );
+        let mut h = host_model(&mut g, &spec).unwrap();
+        g.finalize().unwrap();
+        h.resolve_output(&g).unwrap();
+        assert_eq!(h.out_elems, 10);
+    }
+}

@@ -3,11 +3,16 @@
 //! frames with pre/post-processing sharing the FPGA), grown into a
 //! production-shaped request path.
 //!
-//! Three pieces:
+//! Four pieces:
 //!
 //! * [`batcher`] — adaptive micro-batching: a single-model [`Batch`] with
 //!   size- and deadline-triggered flush, and the per-model multi-lane
 //!   [`Batcher`] on top of it.
+//! * [`hosted`] — bundle hosting: a [`ModelSpec`] names a loaded
+//!   [`crate::tf::model::ModelBundle`] plus its batching policy; the
+//!   bundle's graph is merged into the shared serving session and batched
+//!   generically along dimension 0 of its input endpoint — models with
+//!   different input shapes serve side by side.
 //! * [`server`] — [`InferenceServer`], the *synchronous* reference
 //!   pipeline: one batcher thread forms a batch, runs it to completion,
 //!   delivers, repeats. Simple, strictly ordered, and the baseline the
@@ -24,10 +29,10 @@
 
 pub mod async_server;
 pub mod batcher;
+pub mod hosted;
 pub mod server;
 
-pub use async_server::{
-    AsyncInferenceServer, AsyncServeReport, AsyncServerConfig, ModelSpec,
-};
+pub use async_server::{AsyncInferenceServer, AsyncServeReport, AsyncServerConfig};
 pub use batcher::{Batch, BatchPolicy, Batcher};
+pub use hosted::{ModelIoMeta, ModelSpec};
 pub use server::{InferenceServer, ServeReport, ServerConfig};

@@ -1,8 +1,9 @@
-//! The synchronous inference server: clients submit single images; a
-//! batcher thread groups them and drives the session's whole-model kernel
-//! (`mnist_cnn`), padding the final partial batch (the PJRT module's
-//! batch dim is compiled to `max_batch`, like a real shape-locked
-//! bitstream).
+//! The synchronous inference server: clients submit single flattened
+//! input samples; a batcher thread groups them along the model's leading
+//! batch dimension and runs the session, padding the final partial batch
+//! (the compiled batch dim is `max_batch`, like a real shape-locked
+//! bitstream). The model is any loaded [`ModelBundle`] — the default is
+//! the built-in MNIST CNN demo.
 //!
 //! This is the lock-step reference path: exactly one batch is in flight
 //! at any moment, so batch formation, kernel execution and reply delivery
@@ -13,8 +14,10 @@
 use crate::hsa::error::{HsaError, Result};
 use crate::metrics::histogram::Histogram;
 use crate::serve::batcher::{Batch, BatchPolicy};
+use crate::serve::hosted::{host_model, HostedModel, ModelIoMeta, ModelSpec};
 use crate::tf::dtype::DType;
-use crate::tf::graph::{Graph, OpKind};
+use crate::tf::graph::Graph;
+use crate::tf::model::{ModelBundle, SERVE_SIGNATURE};
 use crate::tf::session::{Session, SessionOptions};
 use crate::tf::tensor::Tensor;
 use std::sync::mpsc;
@@ -26,18 +29,29 @@ use std::time::{Duration, Instant};
 pub struct ServerConfig {
     pub batch: BatchPolicy,
     pub session: SessionOptions,
+    /// The model to serve (default: the built-in MNIST CNN demo).
+    pub bundle: ModelBundle,
+    /// Bundle signature to serve (default `"serve"`).
+    pub signature: String,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { batch: BatchPolicy::default(), session: SessionOptions::default() }
+        ServerConfig {
+            batch: BatchPolicy::default(),
+            session: SessionOptions::default(),
+            bundle: ModelBundle::mnist_demo(BatchPolicy::default().max_batch),
+            signature: SERVE_SIGNATURE.to_string(),
+        }
     }
 }
 
 struct Request {
-    image: Vec<f32>, // 784 floats
+    /// One flattened input sample (`ModelIoMeta::in_elems` f32 values).
+    sample: Vec<f32>,
     enqueued: Instant,
-    reply: mpsc::SyncSender<Result<Vec<f32>>>, // 10 logits
+    /// Receives one flattened output row.
+    reply: mpsc::SyncSender<Result<Vec<f32>>>,
 }
 
 /// Aggregate serving statistics.
@@ -69,21 +83,27 @@ pub struct InferenceServer {
     worker: Option<JoinHandle<()>>,
     session: Arc<Session>,
     shared: Arc<Mutex<Shared>>,
-    max_batch: usize,
+    info: HostedModel,
 }
 
 impl InferenceServer {
-    /// Build the session (batch dim = `config.batch.max_batch`) and start
-    /// the batcher/worker thread.
+    /// Build the session (batch dim = `config.batch.max_batch`, whatever
+    /// the bundle was exported with) and start the batcher/worker thread.
     pub fn start(config: ServerConfig) -> Result<InferenceServer> {
-        let max_batch = config.batch.max_batch;
+        let spec = ModelSpec::from_bundle(
+            config.bundle.name.clone(),
+            config.bundle,
+            config.batch,
+        )
+        .with_signature(config.signature);
         let mut g = Graph::new();
-        let x = g.placeholder("x", &[max_batch, 1, 28, 28], DType::F32)?;
-        g.add("logits", OpKind::MnistCnn, &[x])?;
+        let mut info = host_model(&mut g, &spec)?;
+        g.finalize()?;
+        info.resolve_output(&g)?;
         let session = Arc::new(Session::new(g, config.session)?);
         // Prewarm the plan so the first batch replays instead of compiling.
-        let zero = Tensor::zeros(&[max_batch, 1, 28, 28], DType::F32);
-        session.warm_plan(&[("x", zero)], &["logits"])?;
+        let zero = Tensor::zeros(&info.full_in_shape, DType::F32);
+        session.warm_plan(&[(info.x_name.as_str(), zero)], &[info.out_name.as_str()])?;
 
         let (tx, rx) = mpsc::channel::<Option<Request>>();
         let shared = Arc::new(Mutex::new(Shared {
@@ -96,9 +116,10 @@ impl InferenceServer {
             let session = Arc::clone(&session);
             let shared = Arc::clone(&shared);
             let policy = config.batch;
+            let info = info.clone();
             std::thread::Builder::new()
                 .name("inference-batcher".into())
-                .spawn(move || batcher_loop(rx, session, shared, policy))
+                .spawn(move || batcher_loop(rx, session, shared, policy, info))
                 .map_err(|e| HsaError::Runtime(format!("spawn batcher: {e}")))?
         };
         Ok(InferenceServer {
@@ -106,39 +127,45 @@ impl InferenceServer {
             worker: Some(worker),
             session,
             shared,
-            max_batch,
+            info,
         })
     }
 
-    /// Submit one 28x28 image; blocks until its logits are ready.
-    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
-        if image.len() != 784 {
+    /// Submit one flattened input sample; blocks until its output row is
+    /// ready.
+    pub fn infer(&self, sample: Vec<f32>) -> Result<Vec<f32>> {
+        let rx = self.infer_async(sample)?;
+        rx.recv().map_err(|_| HsaError::Runtime("server dropped request".into()))?
+    }
+
+    /// Non-blocking async submit: returns a receiver for the output row.
+    pub fn infer_async(
+        &self,
+        sample: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        if sample.len() != self.info.in_elems {
             return Err(HsaError::Runtime(format!(
-                "image must be 784 floats, got {}",
-                image.len()
+                "model '{}': input sample must be {} f32 values (shape {:?}), got {}",
+                self.info.name,
+                self.info.in_elems,
+                self.info.sample_in_shape,
+                sample.len()
             )));
         }
         let (reply, rx) = mpsc::sync_channel(1);
         self.tx
-            .send(Some(Request { image, enqueued: Instant::now(), reply }))
-            .map_err(|_| HsaError::Runtime("server stopped".into()))?;
-        rx.recv().map_err(|_| HsaError::Runtime("server dropped request".into()))?
-    }
-
-    /// Non-blocking async submit: returns a receiver for the logits.
-    pub fn infer_async(
-        &self,
-        image: Vec<f32>,
-    ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
-        let (reply, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Some(Request { image, enqueued: Instant::now(), reply }))
+            .send(Some(Request { sample, enqueued: Instant::now(), reply }))
             .map_err(|_| HsaError::Runtime("server stopped".into()))?;
         Ok(rx)
     }
 
     pub fn max_batch(&self) -> usize {
-        self.max_batch
+        self.info.max_batch
+    }
+
+    /// Per-sample input/output meta of the served model.
+    pub fn model_meta(&self) -> ModelIoMeta {
+        self.info.io_meta()
     }
 
     pub fn report(&self) -> ServeReport {
@@ -187,6 +214,7 @@ fn batcher_loop(
     session: Arc<Session>,
     shared: Arc<Mutex<Shared>>,
     policy: BatchPolicy,
+    info: HostedModel,
 ) {
     let mut batch: Batch<Request> = Batch::new(policy);
     loop {
@@ -207,17 +235,17 @@ fn batcher_loop(
             Msg::Req(r) => {
                 let full = batch.push(r);
                 if full || batch.deadline_expired() {
-                    flush(&mut batch, &session, &shared);
+                    flush(&mut batch, &session, &shared, &info);
                 }
             }
             Msg::Tick => {
                 if batch.deadline_expired() {
-                    flush(&mut batch, &session, &shared);
+                    flush(&mut batch, &session, &shared, &info);
                 }
             }
             Msg::Stop => {
                 if !batch.is_empty() {
-                    flush(&mut batch, &session, &shared);
+                    flush(&mut batch, &session, &shared, &info);
                 }
                 break;
             }
@@ -225,25 +253,27 @@ fn batcher_loop(
     }
 }
 
-fn flush(batch: &mut Batch<Request>, session: &Session, shared: &Mutex<Shared>) {
+fn flush(
+    batch: &mut Batch<Request>,
+    session: &Session,
+    shared: &Mutex<Shared>,
+    info: &HostedModel,
+) {
     let reqs = batch.take();
     let n = reqs.len();
-    let max_batch = {
-        // Padded to the compiled batch dim.
-        session.graph().node(session.graph().by_name("x").unwrap()).out_shape[0]
-    };
-    let mut data = vec![0f32; max_batch * 784];
+    // Padded to the compiled batch dim.
+    let mut data = vec![0f32; info.max_batch * info.in_elems];
     for (i, r) in reqs.iter().enumerate() {
-        data[i * 784..(i + 1) * 784].copy_from_slice(&r.image);
+        data[i * info.in_elems..(i + 1) * info.in_elems].copy_from_slice(&r.sample);
     }
-    let x = Tensor::from_f32(&[max_batch, 1, 28, 28], data).expect("batch tensor");
-    let result = session.run(&[("x", x)], &["logits"]);
+    let x = Tensor::from_f32(&info.full_in_shape, data).expect("batch tensor");
+    let result = session.run(&[(info.x_name.as_str(), x)], &[info.out_name.as_str()]);
     match result {
         Ok(out) => {
-            let logits = out[0].as_f32().expect("f32 logits");
+            let rows = out[0].as_f32().expect("f32 output rows");
             let mut s = shared.lock().unwrap();
             for (i, r) in reqs.into_iter().enumerate() {
-                let row = logits[i * 10..(i + 1) * 10].to_vec();
+                let row = rows[i * info.out_elems..(i + 1) * info.out_elems].to_vec();
                 s.latency.record(r.enqueued.elapsed().as_micros() as u64);
                 s.requests += 1;
                 let _ = r.reply.send(Ok(row));
@@ -274,6 +304,7 @@ mod tests {
                 max_delay: Duration::from_millis(delay_ms),
             },
             session: SessionOptions::native_only(),
+            ..ServerConfig::default()
         })
         .expect("server")
     }
@@ -332,9 +363,27 @@ mod tests {
     }
 
     #[test]
-    fn bad_image_size_rejected() {
+    fn bad_sample_size_rejected_with_expected_meta() {
         let mut srv = server(4, 2);
-        assert!(srv.infer(vec![0.0; 100]).is_err());
+        let err = srv.infer(vec![0.0; 100]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("784") && msg.contains("100"), "{msg}");
+        srv.stop();
+    }
+
+    #[test]
+    fn serves_a_non_mnist_bundle_shape() {
+        let mut srv = InferenceServer::start(ServerConfig {
+            batch: BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(2) },
+            session: SessionOptions::native_only(),
+            bundle: crate::tf::model::ModelBundle::tiny_fc_demo(8, 16, 4),
+            ..ServerConfig::default()
+        })
+        .unwrap();
+        let meta = srv.model_meta();
+        assert_eq!((meta.in_elems, meta.out_elems), (16, 4));
+        let row = srv.infer(vec![0.5; 16]).unwrap();
+        assert_eq!(row.len(), 4);
         srv.stop();
     }
 

@@ -9,12 +9,18 @@
 //! constant-folded, op-fused, slot-allocated — and replays it on every
 //! subsequent `run`; the interpreted [`executor`] walk remains as the
 //! reference path.
+//!
+//! Above the session sits [`model`]: serialized GraphDef bundles
+//! ([`model::ModelBundle`], `model.json` on disk — the exchange format the
+//! Python frontend exports) and the [`model::Model`] facade that resolves
+//! feeds/fetches by *signature endpoint name* instead of raw node names.
 
 pub mod dtype;
 pub mod executor;
 pub mod fusion;
 pub mod graph;
 pub mod kernel;
+pub mod model;
 pub mod placer;
 pub mod plan;
 pub mod session;
@@ -23,6 +29,7 @@ pub mod tensor;
 pub use dtype::DType;
 pub use graph::{Graph, NodeId, OpKind};
 pub use kernel::KernelRegistry;
+pub use model::{Endpoint, Model, ModelBundle, Signature};
 pub use plan::{ExecutionPlan, PlanOptions};
 pub use session::{Session, SessionOptions};
 pub use tensor::Tensor;

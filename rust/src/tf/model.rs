@@ -1,0 +1,1300 @@
+//! Model bundles & signatures — the serialized contract between the
+//! Python frontend, on-disk model directories, and the serving stack.
+//!
+//! Three pieces:
+//!
+//! * **GraphDef** ([`graph_to_json`] / [`graph_from_json`]) — a JSON
+//!   (de)serialization of [`Graph`] covering every [`OpKind`] variant:
+//!   explicit device annotations, small constants embedded inline (with
+//!   f32-exact number round-tripping, see [`crate::util::json`]), and
+//!   named weight-artifact references (`ConvFixedF32` / `FcFixed` resolve
+//!   their weights from the session's artifact store by name, so the
+//!   GraphDef carries only the names).
+//! * **[`Signature`]** — named input/output endpoints (name → graph node,
+//!   shape, dtype) — and **[`ModelBundle`]**, the directory format
+//!   (`model.json` = GraphDef + signatures + artifact refs) with
+//!   [`ModelBundle::save`] / [`ModelBundle::load`]. The Python frontend
+//!   writes the identical format (`python -m compile.export`), closing the
+//!   Python → FPGA loop without a specialized toolchain.
+//! * **[`Model`]** — a facade over [`Session`] that resolves feeds and
+//!   fetches by *endpoint name* instead of raw node names:
+//!   `model.invoke("serve", &[("x", t)])`. Mis-shaped feeds fail up front
+//!   with an error naming the endpoint and the expected vs. fed meta,
+//!   instead of a NodeId-level failure deep in the executor. Each
+//!   signature maps to one `(feeds, fetches)` shape, so the session's
+//!   plan cache holds exactly one compiled plan per signature.
+//!
+//! The serving layer ([`crate::serve`]) hosts any number of bundles in a
+//! single session, batching each along dimension 0 of its input endpoint.
+
+use crate::hsa::agent::DeviceType;
+use crate::hsa::error::{HsaError, Result};
+use crate::tf::dtype::DType;
+use crate::tf::graph::{Graph, NodeId, OpKind};
+use crate::tf::session::{PendingRun, Session, SessionOptions};
+use crate::tf::tensor::Tensor;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// The signature name conventionally used for the serving entry point.
+pub const SERVE_SIGNATURE: &str = "serve";
+
+/// Bundle `model.json` format tag and version.
+pub const BUNDLE_FORMAT: &str = "tf-fpga-model-bundle";
+pub const BUNDLE_VERSION: usize = 1;
+
+fn rt_err(msg: impl Into<String>) -> HsaError {
+    HsaError::Runtime(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// GraphDef: Graph <-> Json
+// ---------------------------------------------------------------------------
+
+fn device_tag(d: DeviceType) -> &'static str {
+    match d {
+        DeviceType::Cpu => "cpu",
+        DeviceType::Fpga => "fpga",
+        DeviceType::Gpu => "gpu",
+        DeviceType::Dsp => "dsp",
+    }
+}
+
+fn device_from_tag(s: &str) -> Option<DeviceType> {
+    match s {
+        "cpu" => Some(DeviceType::Cpu),
+        "fpga" => Some(DeviceType::Fpga),
+        "gpu" => Some(DeviceType::Gpu),
+        "dsp" => Some(DeviceType::Dsp),
+        _ => None,
+    }
+}
+
+fn shape_to_json(shape: &[usize]) -> Json {
+    Json::Arr(shape.iter().map(|&d| Json::from_usize(d)).collect())
+}
+
+fn shape_from_json(ctx: &str, v: &Json) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| rt_err(format!("{ctx}: expected a shape array")))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| rt_err(format!("{ctx}: bad shape dim {d}"))))
+        .collect()
+}
+
+fn dtype_from_json(ctx: &str, v: &Json) -> Result<DType> {
+    v.as_str()
+        .and_then(DType::from_manifest)
+        .ok_or_else(|| rt_err(format!("{ctx}: bad dtype {v}")))
+}
+
+fn tensor_to_json(t: &Tensor) -> Json {
+    let data = match t.dtype() {
+        DType::F32 => t
+            .as_f32()
+            .unwrap()
+            .iter()
+            .map(|&v| Json::from_f32(v))
+            .collect(),
+        DType::I16 => t
+            .as_i16()
+            .unwrap()
+            .iter()
+            .map(|&v| Json::Num(v as f64))
+            .collect(),
+        DType::I32 => t
+            .as_i32()
+            .unwrap()
+            .iter()
+            .map(|&v| Json::Num(v as f64))
+            .collect(),
+    };
+    let mut m = BTreeMap::new();
+    m.insert("shape".to_string(), shape_to_json(t.shape()));
+    m.insert("dtype".to_string(), Json::Str(t.dtype().as_manifest().to_string()));
+    m.insert("data".to_string(), Json::Arr(data));
+    Json::Obj(m)
+}
+
+fn tensor_from_json(ctx: &str, v: &Json) -> Result<Tensor> {
+    let shape = shape_from_json(ctx, v.get("shape"))?;
+    let dtype = dtype_from_json(ctx, v.get("dtype"))?;
+    let data = v
+        .get("data")
+        .as_arr()
+        .ok_or_else(|| rt_err(format!("{ctx}: constant missing data array")))?;
+    let int_val = |d: &Json, lo: f64, hi: f64| -> Result<f64> {
+        let n = d
+            .as_f64()
+            .ok_or_else(|| rt_err(format!("{ctx}: non-numeric constant element {d}")))?;
+        if n.fract() != 0.0 || n < lo || n > hi {
+            return Err(rt_err(format!("{ctx}: integer constant element {n} out of range")));
+        }
+        Ok(n)
+    };
+    let t = match dtype {
+        DType::F32 => {
+            let vals = data
+                .iter()
+                .map(|d| {
+                    d.as_f32()
+                        .ok_or_else(|| rt_err(format!("{ctx}: non-numeric constant element {d}")))
+                })
+                .collect::<Result<Vec<f32>>>()?;
+            Tensor::from_f32(&shape, vals)?
+        }
+        DType::I16 => {
+            let vals = data
+                .iter()
+                .map(|d| int_val(d, i16::MIN as f64, i16::MAX as f64).map(|n| n as i16))
+                .collect::<Result<Vec<i16>>>()?;
+            Tensor::from_i16(&shape, vals)?
+        }
+        DType::I32 => {
+            let vals = data
+                .iter()
+                .map(|d| int_val(d, i32::MIN as f64, i32::MAX as f64).map(|n| n as i32))
+                .collect::<Result<Vec<i32>>>()?;
+            Tensor::from_i32(&shape, vals)?
+        }
+    };
+    Ok(t)
+}
+
+fn op_to_json(m: &mut BTreeMap<String, Json>, op: &OpKind) {
+    let tag = match op {
+        OpKind::Placeholder { .. } => "placeholder",
+        OpKind::Constant(_) => "constant",
+        OpKind::FullyConnected => "fully_connected",
+        OpKind::FcBarrier => "fc_barrier",
+        OpKind::Conv5x5I16 => "conv5x5_i16",
+        OpKind::Conv3x3I16 => "conv3x3_i16",
+        OpKind::ConvFixedF32 { .. } => "conv_fixed_f32",
+        OpKind::FcFixed { .. } => "fc_fixed",
+        OpKind::Relu => "relu",
+        OpKind::Softmax => "softmax",
+        OpKind::MaxPool2 => "maxpool2",
+        OpKind::Reshape { .. } => "reshape",
+        OpKind::Add => "add",
+        OpKind::Quantize { .. } => "quantize",
+        OpKind::Dequantize { .. } => "dequantize",
+        OpKind::MnistCnn => "mnist_cnn",
+        OpKind::Custom { .. } => "custom",
+    };
+    m.insert("op".to_string(), Json::Str(tag.to_string()));
+    match op {
+        OpKind::Placeholder { shape, dtype } => {
+            m.insert("shape".to_string(), shape_to_json(shape));
+            m.insert("dtype".to_string(), Json::Str(dtype.as_manifest().to_string()));
+        }
+        OpKind::Constant(t) => {
+            m.insert("tensor".to_string(), tensor_to_json(t));
+        }
+        OpKind::ConvFixedF32 { weights, filters, cin, kh, kw } => {
+            m.insert("weights".to_string(), Json::Str(weights.clone()));
+            m.insert("filters".to_string(), Json::from_usize(*filters));
+            m.insert("cin".to_string(), Json::from_usize(*cin));
+            m.insert("kh".to_string(), Json::from_usize(*kh));
+            m.insert("kw".to_string(), Json::from_usize(*kw));
+        }
+        OpKind::FcFixed { weights_w, weights_b, out_width } => {
+            m.insert("weights_w".to_string(), Json::Str(weights_w.clone()));
+            m.insert("weights_b".to_string(), Json::Str(weights_b.clone()));
+            m.insert("out_width".to_string(), Json::from_usize(*out_width));
+        }
+        OpKind::Reshape { shape } => {
+            m.insert("shape".to_string(), shape_to_json(shape));
+        }
+        OpKind::Quantize { frac_bits } | OpKind::Dequantize { frac_bits } => {
+            m.insert("frac_bits".to_string(), Json::from_usize(*frac_bits as usize));
+        }
+        OpKind::Custom { kernel, out_shape, out_dtype } => {
+            m.insert("kernel".to_string(), Json::Str(kernel.clone()));
+            m.insert("out_shape".to_string(), shape_to_json(out_shape));
+            m.insert(
+                "out_dtype".to_string(),
+                Json::Str(out_dtype.as_manifest().to_string()),
+            );
+        }
+        _ => {}
+    }
+}
+
+fn op_from_json(name: &str, v: &Json) -> Result<OpKind> {
+    let ctx = format!("node '{name}'");
+    let tag = v
+        .get("op")
+        .as_str()
+        .ok_or_else(|| rt_err(format!("{ctx}: missing op tag")))?;
+    let ufield = |key: &str| -> Result<usize> {
+        v.get(key)
+            .as_usize()
+            .ok_or_else(|| rt_err(format!("{ctx}: missing/bad field '{key}'")))
+    };
+    let sfield = |key: &str| -> Result<String> {
+        v.get(key)
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| rt_err(format!("{ctx}: missing/bad field '{key}'")))
+    };
+    Ok(match tag {
+        "placeholder" => OpKind::Placeholder {
+            shape: shape_from_json(&ctx, v.get("shape"))?,
+            dtype: dtype_from_json(&ctx, v.get("dtype"))?,
+        },
+        "constant" => OpKind::Constant(tensor_from_json(&ctx, v.get("tensor"))?),
+        "fully_connected" => OpKind::FullyConnected,
+        "fc_barrier" => OpKind::FcBarrier,
+        "conv5x5_i16" => OpKind::Conv5x5I16,
+        "conv3x3_i16" => OpKind::Conv3x3I16,
+        "conv_fixed_f32" => OpKind::ConvFixedF32 {
+            weights: sfield("weights")?,
+            filters: ufield("filters")?,
+            cin: ufield("cin")?,
+            kh: ufield("kh")?,
+            kw: ufield("kw")?,
+        },
+        "fc_fixed" => OpKind::FcFixed {
+            weights_w: sfield("weights_w")?,
+            weights_b: sfield("weights_b")?,
+            out_width: ufield("out_width")?,
+        },
+        "relu" => OpKind::Relu,
+        "softmax" => OpKind::Softmax,
+        "maxpool2" => OpKind::MaxPool2,
+        "reshape" => OpKind::Reshape { shape: shape_from_json(&ctx, v.get("shape"))? },
+        "add" => OpKind::Add,
+        "quantize" => OpKind::Quantize { frac_bits: ufield("frac_bits")? as u32 },
+        "dequantize" => OpKind::Dequantize { frac_bits: ufield("frac_bits")? as u32 },
+        "mnist_cnn" => OpKind::MnistCnn,
+        "custom" => OpKind::Custom {
+            kernel: sfield("kernel")?,
+            out_shape: shape_from_json(&ctx, v.get("out_shape"))?,
+            out_dtype: dtype_from_json(&ctx, v.get("out_dtype"))?,
+        },
+        other => return Err(rt_err(format!("{ctx}: unknown op tag '{other}'"))),
+    })
+}
+
+/// Serialize a graph to its GraphDef JSON form. Nodes are written in
+/// insertion (= topological) order; inputs are referenced by node name,
+/// so the representation is stable under NodeId renumbering.
+pub fn graph_to_json(graph: &Graph) -> Json {
+    let mut nodes = Vec::with_capacity(graph.len());
+    for node in graph.nodes() {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(node.name.clone()));
+        op_to_json(&mut m, &node.op);
+        if !node.inputs.is_empty() {
+            m.insert(
+                "inputs".to_string(),
+                Json::Arr(
+                    node.inputs
+                        .iter()
+                        .map(|&i| Json::Str(graph.node(i).name.clone()))
+                        .collect(),
+                ),
+            );
+        }
+        if let Some(d) = node.device {
+            m.insert("device".to_string(), Json::Str(device_tag(d).to_string()));
+        }
+        nodes.push(Json::Obj(m));
+    }
+    let mut g = BTreeMap::new();
+    g.insert("nodes".to_string(), Json::Arr(nodes));
+    Json::Obj(g)
+}
+
+/// Parse a GraphDef JSON document back into an (unfinalized) [`Graph`].
+/// Node order in the document must be topological (inputs before
+/// consumers), which [`graph_to_json`] guarantees.
+pub fn graph_from_json(v: &Json) -> Result<Graph> {
+    let nodes = v
+        .get("nodes")
+        .as_arr()
+        .ok_or_else(|| rt_err("graphdef: missing nodes array"))?;
+    let mut g = Graph::new();
+    for (idx, nv) in nodes.iter().enumerate() {
+        let name = nv
+            .get("name")
+            .as_str()
+            .ok_or_else(|| rt_err(format!("graphdef node {idx}: missing name")))?
+            .to_string();
+        let op = op_from_json(&name, nv)?;
+        let mut input_ids: Vec<NodeId> = Vec::new();
+        match nv.get("inputs") {
+            Json::Null => {} // absent = no inputs
+            inputs => {
+                let arr = inputs.as_arr().ok_or_else(|| {
+                    rt_err(format!("node '{name}': inputs must be an array, got {inputs}"))
+                })?;
+                for s in arr {
+                    let input_name = s
+                        .as_str()
+                        .ok_or_else(|| rt_err(format!("node '{name}': non-string input {s}")))?;
+                    input_ids.push(g.by_name(input_name).ok_or_else(|| {
+                        rt_err(format!(
+                            "node '{name}': input '{input_name}' not defined before use"
+                        ))
+                    })?);
+                }
+            }
+        }
+        let id = g.add(name.clone(), op, &input_ids)?;
+        match nv.get("device") {
+            Json::Null => {}
+            d => {
+                let tag = d
+                    .as_str()
+                    .ok_or_else(|| rt_err(format!("node '{name}': non-string device {d}")))?;
+                let dev = device_from_tag(tag).ok_or_else(|| {
+                    rt_err(format!("node '{name}': unknown device '{tag}'"))
+                })?;
+                g.set_device(id, dev);
+            }
+        }
+    }
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------------
+// Signatures
+// ---------------------------------------------------------------------------
+
+/// One named I/O endpoint of a signature: the public name, the graph node
+/// it binds to, and the tensor meta a caller must provide (inputs) or will
+/// receive (outputs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Endpoint {
+    pub name: String,
+    pub node: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl Endpoint {
+    pub fn new(
+        name: impl Into<String>,
+        node: impl Into<String>,
+        shape: &[usize],
+        dtype: DType,
+    ) -> Endpoint {
+        Endpoint { name: name.into(), node: node.into(), shape: shape.to_vec(), dtype }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("node".to_string(), Json::Str(self.node.clone()));
+        m.insert("shape".to_string(), shape_to_json(&self.shape));
+        m.insert("dtype".to_string(), Json::Str(self.dtype.as_manifest().to_string()));
+        Json::Obj(m)
+    }
+
+    fn from_json(ctx: &str, v: &Json) -> Result<Endpoint> {
+        let name = v
+            .get("name")
+            .as_str()
+            .ok_or_else(|| rt_err(format!("{ctx}: endpoint missing name")))?
+            .to_string();
+        // Absent "node" defaults to the endpoint name; a present but
+        // non-string value is malformed, not a default.
+        let node = match v.get("node") {
+            Json::Null => name.clone(),
+            n => n
+                .as_str()
+                .ok_or_else(|| {
+                    rt_err(format!("{ctx} endpoint '{name}': non-string node {n}"))
+                })?
+                .to_string(),
+        };
+        Ok(Endpoint {
+            shape: shape_from_json(&format!("{ctx} endpoint '{name}'"), v.get("shape"))?,
+            dtype: dtype_from_json(&format!("{ctx} endpoint '{name}'"), v.get("dtype"))?,
+            name,
+            node,
+        })
+    }
+}
+
+/// A named entry point into a model: input and output endpoints with full
+/// tensor metas. One signature corresponds to one `(feeds, fetches)` shape
+/// and therefore to exactly one cached execution plan in the session.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Signature {
+    pub name: String,
+    pub inputs: Vec<Endpoint>,
+    pub outputs: Vec<Endpoint>,
+}
+
+impl Signature {
+    pub fn input(&self, name: &str) -> Option<&Endpoint> {
+        self.inputs.iter().find(|e| e.name == name)
+    }
+
+    pub fn output(&self, name: &str) -> Option<&Endpoint> {
+        self.outputs.iter().find(|e| e.name == name)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert(
+            "inputs".to_string(),
+            Json::Arr(self.inputs.iter().map(Endpoint::to_json).collect()),
+        );
+        m.insert(
+            "outputs".to_string(),
+            Json::Arr(self.outputs.iter().map(Endpoint::to_json).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> Result<Signature> {
+        let name = v
+            .get("name")
+            .as_str()
+            .ok_or_else(|| rt_err("signature missing name"))?
+            .to_string();
+        let ctx = format!("signature '{name}'");
+        let parse_eps = |key: &str| -> Result<Vec<Endpoint>> {
+            v.get(key)
+                .as_arr()
+                .ok_or_else(|| rt_err(format!("{ctx}: missing {key} array")))?
+                .iter()
+                .map(|e| Endpoint::from_json(&ctx, e))
+                .collect()
+        };
+        Ok(Signature { inputs: parse_eps("inputs")?, outputs: parse_eps("outputs")?, name })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ModelBundle
+// ---------------------------------------------------------------------------
+
+/// Signature lookup shared by [`ModelBundle`] and [`Model`]; `owner` is
+/// the error-message prefix (e.g. `bundle 'mnist'`).
+fn find_signature<'a>(
+    signatures: &'a [Signature],
+    owner: &str,
+    name: &str,
+) -> Result<&'a Signature> {
+    signatures.iter().find(|s| s.name == name).ok_or_else(|| {
+        let known: Vec<&str> = signatures.iter().map(|s| s.name.as_str()).collect();
+        rt_err(format!("{owner}: no signature '{name}' (available: {known:?})"))
+    })
+}
+
+/// Nodes reachable from `roots` through input edges. Shared with the
+/// serving layer, which merges only a signature's cone into its session.
+pub(crate) fn fetch_cone(graph: &Graph, roots: &[NodeId]) -> Vec<bool> {
+    let mut live = vec![false; graph.len()];
+    let mut stack: Vec<NodeId> = roots.to_vec();
+    while let Some(id) = stack.pop() {
+        if live[id.0] {
+            continue;
+        }
+        live[id.0] = true;
+        for &i in &graph.node(id).inputs {
+            stack.push(i);
+        }
+    }
+    live
+}
+
+/// A self-describing model: a finalized graph plus its signatures. On
+/// disk, a bundle is a directory holding `model.json` (GraphDef +
+/// signatures + artifact refs). Weights are either embedded as `Constant`
+/// nodes (fully self-contained) or referenced by artifact name
+/// (`ConvFixedF32` / `FcFixed`), resolved by the session's weight bank.
+#[derive(Debug, Clone)]
+pub struct ModelBundle {
+    pub name: String,
+    pub graph: Graph,
+    pub signatures: Vec<Signature>,
+}
+
+impl ModelBundle {
+    /// Build and validate a bundle. Finalizes the graph if needed; every
+    /// endpoint must name an existing node and match its inferred meta,
+    /// and each signature's input endpoints must cover every placeholder
+    /// its outputs depend on.
+    pub fn new(
+        name: impl Into<String>,
+        mut graph: Graph,
+        signatures: Vec<Signature>,
+    ) -> Result<ModelBundle> {
+        if !graph.is_finalized() {
+            graph.finalize()?;
+        }
+        let bundle = ModelBundle { name: name.into(), graph, signatures };
+        bundle.validate()?;
+        Ok(bundle)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.signatures.is_empty() {
+            return Err(rt_err(format!("bundle '{}': no signatures", self.name)));
+        }
+        let mut seen = Vec::new();
+        for sig in &self.signatures {
+            if seen.contains(&&sig.name) {
+                return Err(rt_err(format!(
+                    "bundle '{}': duplicate signature '{}'",
+                    self.name, sig.name
+                )));
+            }
+            seen.push(&sig.name);
+            if sig.outputs.is_empty() {
+                return Err(rt_err(format!(
+                    "bundle '{}': signature '{}' has no outputs",
+                    self.name, sig.name
+                )));
+            }
+            let ctx = format!("bundle '{}' signature '{}'", self.name, sig.name);
+            let check_eps = |eps: &[Endpoint], role: &str| -> Result<Vec<NodeId>> {
+                let mut names = Vec::new();
+                let mut ids = Vec::new();
+                for ep in eps {
+                    if names.contains(&&ep.name) {
+                        return Err(rt_err(format!(
+                            "{ctx}: duplicate {role} endpoint '{}'",
+                            ep.name
+                        )));
+                    }
+                    names.push(&ep.name);
+                    let id = self.graph.by_name(&ep.node).ok_or_else(|| {
+                        rt_err(format!(
+                            "{ctx}: {role} endpoint '{}' names unknown node '{}'",
+                            ep.name, ep.node
+                        ))
+                    })?;
+                    let node = self.graph.node(id);
+                    if node.out_shape != ep.shape || node.out_dtype != ep.dtype {
+                        return Err(rt_err(format!(
+                            "{ctx}: {role} endpoint '{}' declares {:?} {} but node '{}' \
+                             produces {:?} {}",
+                            ep.name, ep.shape, ep.dtype, ep.node, node.out_shape,
+                            node.out_dtype
+                        )));
+                    }
+                    ids.push(id);
+                }
+                Ok(ids)
+            };
+            let input_ids = check_eps(&sig.inputs, "input")?;
+            let output_ids = check_eps(&sig.outputs, "output")?;
+            for (ep, &id) in sig.inputs.iter().zip(&input_ids) {
+                if !matches!(self.graph.node(id).op, OpKind::Placeholder { .. }) {
+                    return Err(rt_err(format!(
+                        "{ctx}: input endpoint '{}' must bind a placeholder, '{}' is not",
+                        ep.name, ep.node
+                    )));
+                }
+            }
+            // Every placeholder the outputs depend on must be fed through
+            // some input endpoint, or the signature can never run.
+            let live = fetch_cone(&self.graph, &output_ids);
+            for node in self.graph.nodes() {
+                if live[node.id.0]
+                    && matches!(node.op, OpKind::Placeholder { .. })
+                    && !input_ids.contains(&node.id)
+                {
+                    return Err(rt_err(format!(
+                        "{ctx}: outputs depend on placeholder '{}' which no input \
+                         endpoint covers",
+                        node.name
+                    )));
+                }
+            }
+        }
+        // Embedded weights must be serializable: JSON has no NaN/Infinity,
+        // so a non-finite constant would save as `null` and never load
+        // back. Reject it here, at construction, with the node named.
+        for node in self.graph.nodes() {
+            if let OpKind::Constant(t) = &node.op {
+                if let Ok(vals) = t.as_f32() {
+                    if let Some(bad) = vals.iter().find(|v| !v.is_finite()) {
+                        return Err(rt_err(format!(
+                            "bundle '{}': constant '{}' holds non-finite value {bad}, \
+                             which JSON cannot represent",
+                            self.name, node.name
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn signature(&self, name: &str) -> Result<&Signature> {
+        find_signature(&self.signatures, &format!("bundle '{}'", self.name), name)
+    }
+
+    /// Named weight artifacts the graph references (`ConvFixedF32` /
+    /// `FcFixed` weights), deduplicated and sorted. Purely informational:
+    /// the session resolves them from its weight bank / artifact store.
+    pub fn artifact_refs(&self) -> Vec<String> {
+        let mut refs = Vec::new();
+        for node in self.graph.nodes() {
+            match &node.op {
+                OpKind::ConvFixedF32 { weights, .. } => refs.push(weights.clone()),
+                OpKind::FcFixed { weights_w, weights_b, .. } => {
+                    refs.push(weights_w.clone());
+                    refs.push(weights_b.clone());
+                }
+                _ => {}
+            }
+        }
+        refs.sort();
+        refs.dedup();
+        refs
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("format".to_string(), Json::Str(BUNDLE_FORMAT.to_string()));
+        m.insert("version".to_string(), Json::from_usize(BUNDLE_VERSION));
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("graph".to_string(), graph_to_json(&self.graph));
+        m.insert(
+            "signatures".to_string(),
+            Json::Arr(self.signatures.iter().map(Signature::to_json).collect()),
+        );
+        m.insert(
+            "artifacts".to_string(),
+            Json::Arr(self.artifact_refs().into_iter().map(Json::Str).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    /// Parse a bundle document. `fallback_name` is used when the document
+    /// omits `name` (e.g. hand-written bundles), typically the directory
+    /// name.
+    pub fn from_json(v: &Json, fallback_name: &str) -> Result<ModelBundle> {
+        match v.get("format").as_str() {
+            Some(BUNDLE_FORMAT) => {}
+            other => {
+                return Err(rt_err(format!(
+                    "not a model bundle: format {other:?}, expected '{BUNDLE_FORMAT}'"
+                )))
+            }
+        }
+        match v.get("version").as_usize() {
+            Some(BUNDLE_VERSION) => {}
+            other => {
+                return Err(rt_err(format!(
+                    "unsupported bundle version {other:?} (this runtime reads {BUNDLE_VERSION})"
+                )))
+            }
+        }
+        let name = v.get("name").as_str().unwrap_or(fallback_name).to_string();
+        let graph = graph_from_json(v.get("graph"))?;
+        let signatures = v
+            .get("signatures")
+            .as_arr()
+            .ok_or_else(|| rt_err(format!("bundle '{name}': missing signatures array")))?
+            .iter()
+            .map(Signature::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        ModelBundle::new(name, graph, signatures)
+    }
+
+    /// Write `<dir>/model.json` (pretty-printed, creating `dir`).
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .map_err(|e| rt_err(format!("create {}: {e}", dir.display())))?;
+        let path = dir.join("model.json");
+        std::fs::write(&path, self.to_json().pretty())
+            .map_err(|e| rt_err(format!("write {}: {e}", path.display())))
+    }
+
+    /// Load `<dir>/model.json`, validating the graph and signatures.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ModelBundle> {
+        let dir = dir.as_ref();
+        let path = dir.join("model.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| rt_err(format!("cannot read {}: {e}", path.display())))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| rt_err(format!("{}: {e}", path.display())))?;
+        let fallback = dir
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "model".to_string());
+        ModelBundle::from_json(&doc, &fallback)
+    }
+
+    // ---- built-in demo bundles (also written by `tf-fpga export-demo`) ----
+
+    /// The whole-model MNIST CNN (one `mnist_cnn` dispatch per batch),
+    /// batched along dim 0 — the canonical serving demo.
+    pub fn mnist_demo(max_batch: usize) -> ModelBundle {
+        let mut g = Graph::new();
+        let x = g
+            .placeholder("x", &[max_batch, 1, 28, 28], DType::F32)
+            .expect("fresh graph");
+        g.add("logits", OpKind::MnistCnn, &[x]).expect("fresh graph");
+        let sig = Signature {
+            name: SERVE_SIGNATURE.to_string(),
+            inputs: vec![Endpoint::new("x", "x", &[max_batch, 1, 28, 28], DType::F32)],
+            outputs: vec![Endpoint::new("logits", "logits", &[max_batch, 10], DType::F32)],
+        };
+        ModelBundle::new("mnist", g, vec![sig]).expect("demo bundle is valid")
+    }
+
+    /// The MNIST CNN as individual layers with *named weight-artifact
+    /// references* (conv/fc weights resolved from the session's weight
+    /// bank). Rank-3 convs process one image, so this bundle serves with
+    /// batch 1 and is mainly a [`Model::invoke`] showcase.
+    pub fn mnist_layers_demo() -> ModelBundle {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 28, 28], DType::F32).expect("fresh graph");
+        let c1 = g
+            .add(
+                "conv1",
+                OpKind::ConvFixedF32 {
+                    weights: "cnn/conv1".into(),
+                    filters: 2,
+                    cin: 1,
+                    kh: 3,
+                    kw: 3,
+                },
+                &[x],
+            )
+            .unwrap();
+        let r1 = g.add("relu1", OpKind::Relu, &[c1]).unwrap();
+        let p1 = g.add("pool1", OpKind::MaxPool2, &[r1]).unwrap();
+        let c2 = g
+            .add(
+                "conv2",
+                OpKind::ConvFixedF32 {
+                    weights: "cnn/conv2".into(),
+                    filters: 4,
+                    cin: 2,
+                    kh: 5,
+                    kw: 5,
+                },
+                &[p1],
+            )
+            .unwrap();
+        let r2 = g.add("relu2", OpKind::Relu, &[c2]).unwrap();
+        let p2 = g.add("pool2", OpKind::MaxPool2, &[r2]).unwrap();
+        let flat = g
+            .add("flat", OpKind::Reshape { shape: vec![1, 64] }, &[p2])
+            .unwrap();
+        let fc1 = g
+            .add(
+                "fc1",
+                OpKind::FcFixed {
+                    weights_w: "cnn/fc1_w".into(),
+                    weights_b: "cnn/fc1_b".into(),
+                    out_width: 32,
+                },
+                &[flat],
+            )
+            .unwrap();
+        let r3 = g.add("relu3", OpKind::Relu, &[fc1]).unwrap();
+        g.add(
+            "logits",
+            OpKind::FcFixed {
+                weights_w: "cnn/fc2_w".into(),
+                weights_b: "cnn/fc2_b".into(),
+                out_width: 10,
+            },
+            &[r3],
+        )
+        .unwrap();
+        let sig = Signature {
+            name: SERVE_SIGNATURE.to_string(),
+            inputs: vec![Endpoint::new("x", "x", &[1, 28, 28], DType::F32)],
+            outputs: vec![Endpoint::new("logits", "logits", &[1, 10], DType::F32)],
+        };
+        ModelBundle::new("mnist_layers", g, vec![sig]).expect("demo bundle is valid")
+    }
+
+    /// A tiny dense model with weights *embedded* as constants in the
+    /// GraphDef (fully self-contained, no artifact store needed) and an
+    /// input shape unlike MNIST's — exercises arbitrary-shape serving.
+    pub fn tiny_fc_demo(batch: usize, in_dim: usize, out_dim: usize) -> ModelBundle {
+        let mut rng = crate::util::prng::Rng::new(
+            0x7157_FC00 ^ ((in_dim as u64) << 8) ^ (out_dim as u64),
+        );
+        let mut wv = vec![0f32; in_dim * out_dim];
+        rng.fill_f32_normal(&mut wv, 0.0, 0.3);
+        let mut bv = vec![0f32; out_dim];
+        rng.fill_f32_normal(&mut bv, 0.0, 0.1);
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[batch, in_dim], DType::F32).expect("fresh graph");
+        let w = g
+            .constant("w", Tensor::from_f32(&[in_dim, out_dim], wv).unwrap())
+            .unwrap();
+        let b = g.constant("b", Tensor::from_f32(&[out_dim], bv).unwrap()).unwrap();
+        let fc = g.add("fc", OpKind::FullyConnected, &[x, w, b]).unwrap();
+        g.add("y", OpKind::Relu, &[fc]).unwrap();
+        let sig = Signature {
+            name: SERVE_SIGNATURE.to_string(),
+            inputs: vec![Endpoint::new("x", "x", &[batch, in_dim], DType::F32)],
+            outputs: vec![Endpoint::new("y", "y", &[batch, out_dim], DType::F32)],
+        };
+        ModelBundle::new("tiny_fc", g, vec![sig]).expect("demo bundle is valid")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model: the session facade keyed by endpoint names
+// ---------------------------------------------------------------------------
+
+/// A loaded model: a [`Session`] plus the bundle's signatures, invoked by
+/// endpoint name. One cached execution plan per signature (the plan cache
+/// is keyed by the `(feeds, fetches)` shape a signature pins down).
+///
+/// ```no_run
+/// use tf_fpga::tf::model::{Model, ModelBundle};
+/// use tf_fpga::tf::{SessionOptions, Tensor, DType};
+///
+/// let bundle = ModelBundle::tiny_fc_demo(4, 16, 4);
+/// let model = Model::from_bundle(bundle, SessionOptions::native_only()).unwrap();
+/// let out = model
+///     .invoke("serve", &[("x", Tensor::zeros(&[4, 16], DType::F32))])
+///     .unwrap();
+/// assert_eq!(out[0].shape(), &[4, 4]);
+/// model.shutdown();
+/// ```
+pub struct Model {
+    name: String,
+    signatures: Vec<Signature>,
+    session: Arc<Session>,
+}
+
+impl Model {
+    /// Load a bundle directory and bring up a session for it.
+    pub fn load(dir: impl AsRef<Path>, opts: SessionOptions) -> Result<Model> {
+        Model::from_bundle(ModelBundle::load(dir)?, opts)
+    }
+
+    pub fn from_bundle(bundle: ModelBundle, opts: SessionOptions) -> Result<Model> {
+        let session = Session::new(bundle.graph.clone(), opts)?;
+        Ok(Model {
+            name: bundle.name,
+            signatures: bundle.signatures,
+            session: Arc::new(session),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn signatures(&self) -> &[Signature] {
+        &self.signatures
+    }
+
+    pub fn signature(&self, name: &str) -> Result<&Signature> {
+        find_signature(&self.signatures, &format!("model '{}'", self.name), name)
+    }
+
+    /// Resolve endpoint-named feeds into node-named session feeds plus the
+    /// signature's fetch list, validating shape/dtype per endpoint so a
+    /// bad feed fails here with the endpoint's name and expected meta.
+    fn resolve(
+        &self,
+        signature: &str,
+        feeds: &[(&str, Tensor)],
+    ) -> Result<(Vec<(String, Tensor)>, Vec<&str>)> {
+        let sig = self.signature(signature)?;
+        let mut node_feeds = Vec::with_capacity(feeds.len());
+        for (name, t) in feeds {
+            let ep = sig.input(name).ok_or_else(|| {
+                let known: Vec<&str> = sig.inputs.iter().map(|e| e.name.as_str()).collect();
+                rt_err(format!(
+                    "model '{}' signature '{signature}': no input endpoint '{name}' \
+                     (available: {known:?})",
+                    self.name
+                ))
+            })?;
+            if t.shape() != ep.shape.as_slice() || t.dtype() != ep.dtype {
+                return Err(rt_err(format!(
+                    "model '{}' signature '{signature}' input '{name}': expected {:?} {}, \
+                     got {:?} {}",
+                    self.name,
+                    ep.shape,
+                    ep.dtype,
+                    t.shape(),
+                    t.dtype()
+                )));
+            }
+            node_feeds.push((ep.node.clone(), t.clone()));
+        }
+        for ep in &sig.inputs {
+            if !feeds.iter().any(|(n, _)| *n == ep.name) {
+                return Err(rt_err(format!(
+                    "model '{}' signature '{signature}': input endpoint '{}' not fed \
+                     (expected {:?} {})",
+                    self.name, ep.name, ep.shape, ep.dtype
+                )));
+            }
+        }
+        let fetches: Vec<&str> = sig.outputs.iter().map(|e| e.node.as_str()).collect();
+        Ok((node_feeds, fetches))
+    }
+
+    /// Run one signature. Outputs come back in the signature's declared
+    /// output order. The first call compiles (and caches) the signature's
+    /// execution plan; later calls replay it.
+    pub fn invoke(&self, signature: &str, feeds: &[(&str, Tensor)]) -> Result<Vec<Tensor>> {
+        let (node_feeds, fetches) = self.resolve(signature, feeds)?;
+        let feed_refs: Vec<(&str, Tensor)> =
+            node_feeds.iter().map(|(n, t)| (n.as_str(), t.clone())).collect();
+        self.session.run(&feed_refs, &fetches)
+    }
+
+    /// Asynchronous invoke: single-output signatures whose graph qualifies
+    /// for the session's tail fast path dispatch without blocking; others
+    /// complete synchronously inside the returned [`PendingRun`].
+    pub fn invoke_async(
+        &self,
+        signature: &str,
+        feeds: &[(&str, Tensor)],
+    ) -> Result<PendingRun> {
+        let (node_feeds, fetches) = self.resolve(signature, feeds)?;
+        let feed_refs: Vec<(&str, Tensor)> =
+            node_feeds.iter().map(|(n, t)| (n.as_str(), t.clone())).collect();
+        self.session.run_async(&feed_refs, &fetches)
+    }
+
+    /// Precompile the signature's plan (zero-filled feeds); returns the µs
+    /// this call spent. Servers call this so the first request replays.
+    pub fn warm(&self, signature: &str) -> Result<u64> {
+        let sig = self.signature(signature)?;
+        let zeros: Vec<(String, Tensor)> = sig
+            .inputs
+            .iter()
+            .map(|e| (e.node.clone(), Tensor::zeros(&e.shape, e.dtype)))
+            .collect();
+        let feed_refs: Vec<(&str, Tensor)> =
+            zeros.iter().map(|(n, t)| (n.as_str(), t.clone())).collect();
+        let fetches: Vec<&str> = sig.outputs.iter().map(|e| e.node.as_str()).collect();
+        self.session.warm_plan(&feed_refs, &fetches)
+    }
+
+    /// The underlying session (plan-cache stats, reconfig stats, ...).
+    pub fn session(&self) -> &Arc<Session> {
+        &self.session
+    }
+
+    pub fn shutdown(&self) {
+        self.session.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tf::session::SessionOptions;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("tf_fpga_model_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// A graph touching every OpKind variant for round-trip coverage.
+    fn kitchen_sink_graph() -> Graph {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[2, 64], DType::F32).unwrap();
+        let w = g.constant("w", Tensor::from_f32(&[64, 64], vec![0.01; 4096]).unwrap()).unwrap();
+        let b = g.constant("b", Tensor::from_f32(&[64], vec![0.5; 64]).unwrap()).unwrap();
+        let fc = g.add("fc", OpKind::FullyConnected, &[x, w, b]).unwrap();
+        let fcb = g.add("fcb", OpKind::FcBarrier, &[x, w, b]).unwrap();
+        let sum = g.add("sum", OpKind::Add, &[fc, fcb]).unwrap();
+        let relu = g.add("relu", OpKind::Relu, &[sum]).unwrap();
+        g.add("soft", OpKind::Softmax, &[relu]).unwrap();
+        let img = g.placeholder("img", &[1, 28, 28], DType::F32).unwrap();
+        let q = g.add("q", OpKind::Quantize { frac_bits: 8 }, &[img]).unwrap();
+        let c5 = g.add("c5", OpKind::Conv5x5I16, &[q]).unwrap();
+        g.add("c3", OpKind::Conv3x3I16, &[q]).unwrap();
+        let dq = g.add("dq", OpKind::Dequantize { frac_bits: 8 }, &[c5]).unwrap();
+        let mp = g.add("mp", OpKind::MaxPool2, &[dq]).unwrap();
+        g.add("rs", OpKind::Reshape { shape: vec![1, 144] }, &[mp]).unwrap();
+        let cf = g
+            .add(
+                "cf",
+                OpKind::ConvFixedF32 {
+                    weights: "cnn/conv1".into(),
+                    filters: 2,
+                    cin: 1,
+                    kh: 3,
+                    kw: 3,
+                },
+                &[img],
+            )
+            .unwrap();
+        let _ = cf;
+        let flat = g.add("flat", OpKind::Reshape { shape: vec![1, 784] }, &[img]).unwrap();
+        let short = g.add("short", OpKind::Reshape { shape: vec![1, 64] }, &[b]).unwrap();
+        g.add(
+            "ff",
+            OpKind::FcFixed {
+                weights_w: "cnn/fc1_w".into(),
+                weights_b: "cnn/fc1_b".into(),
+                out_width: 32,
+            },
+            &[short],
+        )
+        .unwrap();
+        let batch = g.placeholder("batch", &[2, 1, 28, 28], DType::F32).unwrap();
+        g.add("cnn", OpKind::MnistCnn, &[batch]).unwrap();
+        g.add(
+            "cust",
+            OpKind::Custom {
+                kernel: "my_kernel".into(),
+                out_shape: vec![1, 2],
+                out_dtype: DType::I32,
+            },
+            &[flat],
+        )
+        .unwrap();
+        g.set_device(fc, DeviceType::Fpga);
+        g.set_device(relu, DeviceType::Cpu);
+        g
+    }
+
+    #[test]
+    fn graphdef_round_trips_every_op_kind() {
+        let mut g = kitchen_sink_graph();
+        g.finalize().unwrap();
+        let doc = graph_to_json(&g).to_string();
+        let mut g2 = graph_from_json(&Json::parse(&doc).unwrap()).unwrap();
+        g2.finalize().unwrap();
+        assert_eq!(g.len(), g2.len());
+        for (a, b) in g.nodes().iter().zip(g2.nodes()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(format!("{:?}", a.op), format!("{:?}", b.op), "op of '{}'", a.name);
+            assert_eq!(a.inputs, b.inputs, "inputs of '{}'", a.name);
+            assert_eq!(a.device, b.device, "device of '{}'", a.name);
+            assert_eq!(a.out_shape, b.out_shape, "shape of '{}'", a.name);
+            assert_eq!(a.out_dtype, b.out_dtype, "dtype of '{}'", a.name);
+        }
+    }
+
+    #[test]
+    fn graphdef_embedded_constants_are_bitwise_exact() {
+        let vals = vec![0.1f32, -0.0, 1.0 / 3.0, f32::MIN_POSITIVE, -2.5e-7, 16_777_216.0];
+        let mut g = Graph::new();
+        g.constant("c", Tensor::from_f32(&[6], vals.clone()).unwrap()).unwrap();
+        let doc = graph_to_json(&g).to_string();
+        let g2 = graph_from_json(&Json::parse(&doc).unwrap()).unwrap();
+        let OpKind::Constant(t) = &g2.node(g2.by_name("c").unwrap()).op else {
+            panic!("constant op lost");
+        };
+        for (a, b) in vals.iter().zip(t.as_f32().unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+        }
+    }
+
+    #[test]
+    fn graphdef_rejects_bad_documents() {
+        assert!(graph_from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad_input = r#"{"nodes":[{"name":"y","op":"relu","inputs":["nope"]}]}"#;
+        let err = graph_from_json(&Json::parse(bad_input).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("nope"), "{err}");
+        let bad_op = r#"{"nodes":[{"name":"y","op":"warp_drive"}]}"#;
+        let err = graph_from_json(&Json::parse(bad_op).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("warp_drive"), "{err}");
+    }
+
+    #[test]
+    fn bundle_save_load_round_trip() {
+        let bundle = ModelBundle::tiny_fc_demo(4, 16, 4);
+        let dir = tmpdir("roundtrip");
+        bundle.save(&dir).unwrap();
+        let loaded = ModelBundle::load(&dir).unwrap();
+        assert_eq!(loaded.name, bundle.name);
+        assert_eq!(loaded.graph.len(), bundle.graph.len());
+        assert_eq!(loaded.signatures, bundle.signatures);
+        // Embedded weights identical bit for bit.
+        let w = |b: &ModelBundle| match &b.graph.node(b.graph.by_name("w").unwrap()).op {
+            OpKind::Constant(t) => t.as_f32().unwrap().to_vec(),
+            _ => panic!("w is a constant"),
+        };
+        assert_eq!(w(&bundle), w(&loaded));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bundle_records_artifact_refs() {
+        let refs = ModelBundle::mnist_layers_demo().artifact_refs();
+        assert_eq!(
+            refs,
+            vec!["cnn/conv1", "cnn/conv2", "cnn/fc1_b", "cnn/fc1_w", "cnn/fc2_b", "cnn/fc2_w"]
+        );
+        assert!(ModelBundle::mnist_demo(4).artifact_refs().is_empty());
+    }
+
+    #[test]
+    fn bundle_validation_catches_bad_signatures() {
+        let mk_graph = || {
+            let mut g = Graph::new();
+            let x = g.placeholder("x", &[2, 4], DType::F32).unwrap();
+            g.add("y", OpKind::Relu, &[x]).unwrap();
+            g
+        };
+        // Endpoint meta mismatch.
+        let sig = Signature {
+            name: "serve".into(),
+            inputs: vec![Endpoint::new("x", "x", &[2, 4], DType::F32)],
+            outputs: vec![Endpoint::new("y", "y", &[9, 9], DType::F32)],
+        };
+        let err = ModelBundle::new("m", mk_graph(), vec![sig]).unwrap_err();
+        assert!(err.to_string().contains("[9, 9]"), "{err}");
+        // Uncovered placeholder.
+        let sig = Signature {
+            name: "serve".into(),
+            inputs: vec![],
+            outputs: vec![Endpoint::new("y", "y", &[2, 4], DType::F32)],
+        };
+        let err = ModelBundle::new("m", mk_graph(), vec![sig]).unwrap_err();
+        assert!(err.to_string().contains("placeholder 'x'"), "{err}");
+        // Unknown node.
+        let sig = Signature {
+            name: "serve".into(),
+            inputs: vec![Endpoint::new("x", "x", &[2, 4], DType::F32)],
+            outputs: vec![Endpoint::new("z", "zz", &[2, 4], DType::F32)],
+        };
+        let err = ModelBundle::new("m", mk_graph(), vec![sig]).unwrap_err();
+        assert!(err.to_string().contains("zz"), "{err}");
+    }
+
+    #[test]
+    fn non_finite_embedded_constants_are_rejected_at_construction() {
+        let mut g = Graph::new();
+        let c = g
+            .constant("w", Tensor::from_f32(&[2], vec![1.0, f32::NAN]).unwrap())
+            .unwrap();
+        g.add("y", OpKind::Relu, &[c]).unwrap();
+        let sig = Signature {
+            name: "serve".into(),
+            inputs: vec![],
+            outputs: vec![Endpoint::new("y", "y", &[2], DType::F32)],
+        };
+        let err = ModelBundle::new("m", g, vec![sig]).unwrap_err();
+        assert!(err.to_string().contains("constant 'w'"), "{err}");
+        assert!(err.to_string().contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn model_invoke_matches_direct_session_run() {
+        let bundle = ModelBundle::tiny_fc_demo(2, 8, 3);
+        let sess = Session::new(bundle.graph.clone(), SessionOptions::native_only()).unwrap();
+        let model = Model::from_bundle(bundle, SessionOptions::native_only()).unwrap();
+        let x = Tensor::from_f32(&[2, 8], (0..16).map(|i| i as f32 * 0.1 - 0.8).collect())
+            .unwrap();
+        let got = model.invoke(SERVE_SIGNATURE, &[("x", x.clone())]).unwrap();
+        let want = sess.run(&[("x", x)], &["y"]).unwrap();
+        assert_eq!(got[0], want[0]);
+        assert_eq!(model.session().plan_cache_stats().compiles, 1);
+        model.shutdown();
+        sess.shutdown();
+    }
+
+    #[test]
+    fn named_feed_errors_carry_endpoint_and_meta() {
+        let model = Model::from_bundle(
+            ModelBundle::tiny_fc_demo(2, 8, 3),
+            SessionOptions::native_only(),
+        )
+        .unwrap();
+        // Wrong shape: error names the endpoint, expected and got metas.
+        let err = model
+            .invoke("serve", &[("x", Tensor::zeros(&[3, 8], DType::F32))])
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("input 'x'"), "{msg}");
+        assert!(msg.contains("[2, 8]") && msg.contains("[3, 8]"), "{msg}");
+        // Wrong dtype.
+        let err = model
+            .invoke("serve", &[("x", Tensor::zeros(&[2, 8], DType::I16))])
+            .unwrap_err();
+        assert!(err.to_string().contains("i16"), "{err}");
+        // Unknown endpoint name lists the valid ones.
+        let err = model
+            .invoke("serve", &[("nope", Tensor::zeros(&[2, 8], DType::F32))])
+            .unwrap_err();
+        assert!(err.to_string().contains("\"x\""), "{err}");
+        // Missing feed names the endpoint it wants.
+        let err = model.invoke("serve", &[]).unwrap_err();
+        assert!(err.to_string().contains("'x' not fed"), "{err}");
+        // Unknown signature lists the available ones.
+        let err = model.invoke("wat", &[]).unwrap_err();
+        assert!(err.to_string().contains("serve"), "{err}");
+        model.shutdown();
+    }
+
+    #[test]
+    fn model_invoke_async_matches_sync() {
+        let model = Model::from_bundle(
+            ModelBundle::tiny_fc_demo(2, 8, 3),
+            SessionOptions::native_only(),
+        )
+        .unwrap();
+        let x = Tensor::from_f32(&[2, 8], vec![0.25; 16]).unwrap();
+        let pending = model.invoke_async("serve", &[("x", x.clone())]).unwrap();
+        let async_out = pending.wait(Some(std::time::Duration::from_secs(30))).unwrap();
+        let sync_out = model.invoke("serve", &[("x", x)]).unwrap();
+        assert_eq!(async_out[0], sync_out[0]);
+        model.shutdown();
+    }
+
+    #[test]
+    fn warm_caches_the_signature_plan() {
+        let model = Model::from_bundle(
+            ModelBundle::tiny_fc_demo(2, 8, 3),
+            SessionOptions::native_only(),
+        )
+        .unwrap();
+        let us = model.warm("serve").unwrap();
+        assert!(us >= 1);
+        assert_eq!(model.session().plan_cache_stats().compiles, 1);
+        model
+            .invoke("serve", &[("x", Tensor::zeros(&[2, 8], DType::F32))])
+            .unwrap();
+        let s = model.session().plan_cache_stats();
+        assert_eq!((s.compiles, s.hits), (1, 1), "invoke replays the warmed plan");
+        model.shutdown();
+    }
+
+    #[test]
+    fn mnist_demo_serves_through_model_facade() {
+        let model = Model::from_bundle(
+            ModelBundle::mnist_demo(2),
+            SessionOptions::native_only(),
+        )
+        .unwrap();
+        let out = model
+            .invoke("serve", &[("x", Tensor::zeros(&[2, 1, 28, 28], DType::F32))])
+            .unwrap();
+        assert_eq!(out[0].shape(), &[2, 10]);
+        model.shutdown();
+    }
+
+    #[test]
+    fn mnist_layers_demo_resolves_weight_refs() {
+        let model = Model::from_bundle(
+            ModelBundle::mnist_layers_demo(),
+            SessionOptions::native_only(),
+        )
+        .unwrap();
+        let out = model
+            .invoke("serve", &[("x", Tensor::zeros(&[1, 28, 28], DType::F32))])
+            .unwrap();
+        assert_eq!(out[0].shape(), &[1, 10]);
+        model.shutdown();
+    }
+}

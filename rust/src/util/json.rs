@@ -1,9 +1,14 @@
-//! Minimal JSON parser — enough for `artifacts/manifest.json`.
+//! Minimal JSON parser and writer — the interchange layer between the
+//! Python frontend and the Rust runtime (`artifacts/manifest.json`, model
+//! bundles' `model.json`).
 //!
 //! Supports the full JSON grammar (objects, arrays, strings with escapes,
-//! numbers, booleans, null); no serialization beyond what the metrics
-//! reports need. Written because `serde`/`serde_json` are not available in
-//! the offline vendor set.
+//! numbers, booleans, null). Serialization comes in two forms: compact via
+//! [`std::fmt::Display`] and human-readable via [`Json::pretty`]. Numbers
+//! are written in the shortest form that round-trips `f64` — and therefore
+//! any `f32` widened into one, which is what lets model weights embedded
+//! in a bundle survive a save/load cycle bit-for-bit. Written because
+//! `serde`/`serde_json` are not available in the offline vendor set.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -88,6 +93,30 @@ impl Json {
     pub fn idx(&self, i: usize) -> &Json {
         static NULL: Json = Json::Null;
         self.as_arr().and_then(|a| a.get(i)).unwrap_or(&NULL)
+    }
+
+    /// Number as `f32`. The narrowing cast is exact whenever the document
+    /// was written from an `f32` in the first place (widening to `f64` is
+    /// lossless and the writer prints the shortest `f64` round-trip form).
+    pub fn as_f32(&self) -> Option<f32> {
+        self.as_f64().map(|n| n as f32)
+    }
+
+    /// `f32` → `Json::Num`, widening losslessly so the value round-trips.
+    pub fn from_f32(v: f32) -> Json {
+        Json::Num(v as f64)
+    }
+
+    pub fn from_usize(n: usize) -> Json {
+        Json::Num(n as f64)
+    }
+
+    /// Pretty-print with two-space indentation. `Json::parse(&v.pretty())`
+    /// reconstructs an equal value, same as the compact `Display` form.
+    pub fn pretty(&self) -> String {
+        let mut s = String::new();
+        write_json(&mut s, self, Some(0)).expect("write to String cannot fail");
+        s
     }
 }
 
@@ -302,54 +331,108 @@ fn utf8_len(first: u8) -> Option<usize> {
     }
 }
 
+/// Escape and quote `s` per the JSON string grammar.
+fn write_escaped<W: fmt::Write>(w: &mut W, s: &str) -> fmt::Result {
+    w.write_char('"')?;
+    for c in s.chars() {
+        match c {
+            '"' => w.write_str("\\\"")?,
+            '\\' => w.write_str("\\\\")?,
+            '\n' => w.write_str("\\n")?,
+            '\r' => w.write_str("\\r")?,
+            '\t' => w.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(w, "\\u{:04x}", c as u32)?,
+            c => w.write_char(c)?,
+        }
+    }
+    w.write_char('"')
+}
+
+/// Shortest round-trip number form. JSON has no NaN/Infinity, so
+/// non-finite values degrade to `null`; negative zero keeps its sign
+/// (`-0.0`) so f32/f64 bit patterns survive a round trip.
+fn write_num<W: fmt::Write>(w: &mut W, n: f64) -> fmt::Result {
+    if !n.is_finite() {
+        w.write_str("null")
+    } else if n == 0.0 && n.is_sign_negative() {
+        w.write_str("-0.0")
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
+        write!(w, "{}", n as i64)
+    } else {
+        // Rust's f64 Display is the shortest string that parses back to
+        // the identical bits — exactly the round-trip guarantee we need.
+        write!(w, "{n}")
+    }
+}
+
+fn newline_indent<W: fmt::Write>(w: &mut W, level: usize) -> fmt::Result {
+    w.write_char('\n')?;
+    for _ in 0..level {
+        w.write_str("  ")?;
+    }
+    Ok(())
+}
+
+/// Shared serializer: `indent: None` is the compact `Display` form,
+/// `Some(level)` the pretty form.
+fn write_json<W: fmt::Write>(w: &mut W, v: &Json, indent: Option<usize>) -> fmt::Result {
+    match v {
+        Json::Null => w.write_str("null"),
+        Json::Bool(b) => write!(w, "{b}"),
+        Json::Num(n) => write_num(w, *n),
+        Json::Str(s) => write_escaped(w, s),
+        Json::Arr(a) => {
+            if a.is_empty() {
+                return w.write_str("[]");
+            }
+            w.write_char('[')?;
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 {
+                    w.write_char(',')?;
+                }
+                if let Some(level) = indent {
+                    newline_indent(w, level + 1)?;
+                    write_json(w, item, Some(level + 1))?;
+                } else {
+                    write_json(w, item, None)?;
+                }
+            }
+            if let Some(level) = indent {
+                newline_indent(w, level)?;
+            }
+            w.write_char(']')
+        }
+        Json::Obj(m) => {
+            if m.is_empty() {
+                return w.write_str("{}");
+            }
+            w.write_char('{')?;
+            for (i, (k, item)) in m.iter().enumerate() {
+                if i > 0 {
+                    w.write_char(',')?;
+                }
+                if let Some(level) = indent {
+                    newline_indent(w, level + 1)?;
+                    write_escaped(w, k)?;
+                    w.write_str(": ")?;
+                    write_json(w, item, Some(level + 1))?;
+                } else {
+                    write_escaped(w, k)?;
+                    w.write_char(':')?;
+                    write_json(w, item, None)?;
+                }
+            }
+            if let Some(level) = indent {
+                newline_indent(w, level)?;
+            }
+            w.write_char('}')
+        }
+    }
+}
+
 impl fmt::Display for Json {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            Json::Null => write!(f, "null"),
-            Json::Bool(b) => write!(f, "{b}"),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
-                    write!(f, "{}", *n as i64)
-                } else {
-                    write!(f, "{n}")
-                }
-            }
-            Json::Str(s) => {
-                write!(f, "\"")?;
-                for c in s.chars() {
-                    match c {
-                        '"' => write!(f, "\\\"")?,
-                        '\\' => write!(f, "\\\\")?,
-                        '\n' => write!(f, "\\n")?,
-                        '\r' => write!(f, "\\r")?,
-                        '\t' => write!(f, "\\t")?,
-                        c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
-                        c => write!(f, "{c}")?,
-                    }
-                }
-                write!(f, "\"")
-            }
-            Json::Arr(a) => {
-                write!(f, "[")?;
-                for (i, v) in a.iter().enumerate() {
-                    if i > 0 {
-                        write!(f, ",")?;
-                    }
-                    write!(f, "{v}")?;
-                }
-                write!(f, "]")
-            }
-            Json::Obj(m) => {
-                write!(f, "{{")?;
-                for (i, (k, v)) in m.iter().enumerate() {
-                    if i > 0 {
-                        write!(f, ",")?;
-                    }
-                    write!(f, "{}:{v}", Json::Str(k.clone()))?;
-                }
-                write!(f, "}}")
-            }
-        }
+        write_json(f, self, None)
     }
 }
 
@@ -416,5 +499,67 @@ mod tests {
         let v = Json::parse(doc).unwrap();
         let v2 = Json::parse(&v.to_string()).unwrap();
         assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn writer_escapes_round_trip() {
+        for s in [
+            "plain",
+            "quote\" backslash\\ slash/",
+            "ctrl:\u{1}\u{8}\u{c}\u{1f}",
+            "newline\n tab\t cr\r",
+            "unicode é 😀 héllo",
+            "",
+        ] {
+            let v = Json::Str(s.to_string());
+            let compact = v.to_string();
+            assert_eq!(Json::parse(&compact).unwrap().as_str(), Some(s), "{compact}");
+            assert_eq!(Json::parse(&v.pretty()).unwrap().as_str(), Some(s));
+        }
+    }
+
+    #[test]
+    fn writer_f32_values_round_trip_exactly() {
+        let vals = [
+            0.1f32,
+            -0.0,
+            1.0 / 3.0,
+            f32::MAX,
+            f32::MIN_POSITIVE,
+            1e-45,            // smallest subnormal
+            16_777_216.0,     // 2^24, the f32 integer-precision edge
+            -2.5e-7,
+            1234.5678,
+        ];
+        for v in vals {
+            let doc = Json::from_f32(v).to_string();
+            let back = Json::parse(&doc).unwrap().as_f32().unwrap();
+            assert_eq!(v.to_bits(), back.to_bits(), "{v} -> {doc} -> {back}");
+        }
+    }
+
+    #[test]
+    fn writer_nonfinite_degrades_to_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn pretty_parses_back_equal_and_is_indented() {
+        let doc = r#"{"a":[1,2.5,"x\"y"],"b":true,"c":{},"d":[]}"#;
+        let v = Json::parse(doc).unwrap();
+        let p = v.pretty();
+        assert_eq!(Json::parse(&p).unwrap(), v);
+        assert!(p.contains("\n  \"a\": [\n"), "pretty form:\n{p}");
+        assert!(p.contains("\"c\": {}"), "empty containers stay inline:\n{p}");
+    }
+
+    #[test]
+    fn pretty_and_compact_agree_on_scalars() {
+        for doc in ["null", "true", "42", "-7.25", "\"x\""] {
+            let v = Json::parse(doc).unwrap();
+            assert_eq!(v.to_string(), v.pretty());
+        }
     }
 }

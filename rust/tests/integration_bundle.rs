@@ -1,0 +1,136 @@
+//! Model-bundle integration: save/load round trips, end-to-end serving of
+//! loaded bundles with non-MNIST shapes, and (when `TF_FPGA_BUNDLE_DIR`
+//! points at a directory of bundles exported by the Python frontend via
+//! `python -m compile.export`) the cross-language Python → Rust loop.
+
+use std::path::PathBuf;
+use std::time::Duration;
+use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig, BatchPolicy, ModelSpec};
+use tf_fpga::tf::model::{Model, ModelBundle};
+use tf_fpga::tf::session::SessionOptions;
+use tf_fpga::tf::tensor::Tensor;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("tf_fpga_bundle_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn policy(max_batch: usize, delay_ms: u64) -> BatchPolicy {
+    BatchPolicy { max_batch, max_delay: Duration::from_millis(delay_ms) }
+}
+
+#[test]
+fn saved_bundles_reload_and_serve_end_to_end() {
+    let dir = tmpdir("serve");
+    ModelBundle::mnist_demo(32).save(dir.join("mnist")).unwrap();
+    ModelBundle::tiny_fc_demo(8, 16, 4).save(dir.join("tiny_fc")).unwrap();
+
+    // Load from disk — not the in-memory originals — and serve both from
+    // one async server; each lane picks its own (overriding) batch dim.
+    let mnist = ModelSpec::from_dir(dir.join("mnist"), policy(4, 2)).unwrap();
+    let tiny = ModelSpec::from_dir(dir.join("tiny_fc"), policy(2, 2)).unwrap();
+    assert_eq!(mnist.name, "mnist");
+    assert_eq!(tiny.name, "tiny_fc");
+    let mut srv = AsyncInferenceServer::start(AsyncServerConfig {
+        models: vec![mnist, tiny],
+        session: SessionOptions { dispatch_workers: 2, ..SessionOptions::native_only() },
+        pipeline_depth: 2,
+    })
+    .unwrap();
+
+    let logits = srv.infer("mnist", vec![0.25; 784]).unwrap();
+    assert_eq!(logits.len(), 10);
+    let row = srv.infer("tiny_fc", vec![0.5; 16]).unwrap();
+    assert_eq!(row.len(), 4);
+    let rep = srv.report();
+    assert_eq!(rep.completed, 2);
+    assert_eq!(rep.failed, 0);
+    srv.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn loaded_bundle_invokes_identically_to_the_original() {
+    let dir = tmpdir("invoke");
+    let original = ModelBundle::tiny_fc_demo(4, 16, 4);
+    original.save(&dir).unwrap();
+    let loaded = ModelBundle::load(&dir).unwrap();
+
+    let m1 = Model::from_bundle(original, SessionOptions::native_only()).unwrap();
+    let m2 = Model::from_bundle(loaded, SessionOptions::native_only()).unwrap();
+    let x = Tensor::from_f32(&[4, 16], (0..64).map(|i| (i as f32) * 0.03 - 1.0).collect())
+        .unwrap();
+    let a = m1.invoke("serve", &[("x", x.clone())]).unwrap();
+    let b = m2.invoke("serve", &[("x", x)]).unwrap();
+    assert_eq!(a[0], b[0], "embedded weights must survive the JSON round trip bitwise");
+    m1.shutdown();
+    m2.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn layered_bundle_resolves_artifact_refs_after_reload() {
+    let dir = tmpdir("layers");
+    let bundle = ModelBundle::mnist_layers_demo();
+    assert!(!bundle.artifact_refs().is_empty());
+    bundle.save(&dir).unwrap();
+    let model = Model::load(&dir, SessionOptions::native_only()).unwrap();
+    let out = model
+        .invoke("serve", &[("x", Tensor::zeros(&[1, 28, 28], tf_fpga::tf::DType::F32))])
+        .unwrap();
+    assert_eq!(out[0].shape(), &[1, 10]);
+    model.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Python → Rust interop: CI exports bundles with the Python frontend and
+/// points `TF_FPGA_BUNDLE_DIR` here. Every bundle in the directory must
+/// load, bring up a session, and produce outputs matching its declared
+/// signature metas. Skipped (with a note) when the env var is unset.
+#[test]
+fn python_exported_bundles_load_and_invoke() {
+    let Ok(dir) = std::env::var("TF_FPGA_BUNDLE_DIR") else {
+        eprintln!("skipped: TF_FPGA_BUNDLE_DIR not set (CI exports bundles from Python)");
+        return;
+    };
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("bundle dir readable") {
+        let path = entry.expect("dir entry").path();
+        if !path.join("model.json").is_file() {
+            continue;
+        }
+        seen += 1;
+        let bundle = ModelBundle::load(&path)
+            .unwrap_or_else(|e| panic!("load {}: {e}", path.display()));
+        let model = Model::from_bundle(bundle.clone(), SessionOptions::native_only())
+            .unwrap_or_else(|e| panic!("session for {}: {e}", bundle.name));
+        for sig in &bundle.signatures {
+            let feeds_owned: Vec<(String, Tensor)> = sig
+                .inputs
+                .iter()
+                .map(|e| (e.name.clone(), Tensor::zeros(&e.shape, e.dtype)))
+                .collect();
+            let feeds: Vec<(&str, Tensor)> =
+                feeds_owned.iter().map(|(n, t)| (n.as_str(), t.clone())).collect();
+            let outs = model
+                .invoke(&sig.name, &feeds)
+                .unwrap_or_else(|e| panic!("invoke {}:{}: {e}", bundle.name, sig.name));
+            for (out, ep) in outs.iter().zip(&sig.outputs) {
+                assert_eq!(
+                    out.shape(),
+                    ep.shape.as_slice(),
+                    "{}:{} output '{}' shape",
+                    bundle.name,
+                    sig.name,
+                    ep.name
+                );
+                assert_eq!(out.dtype(), ep.dtype);
+            }
+        }
+        model.shutdown();
+        println!("ok: python bundle '{}' invoked through the Rust stack", bundle.name);
+    }
+    assert!(seen > 0, "TF_FPGA_BUNDLE_DIR={dir} holds no bundles");
+}

@@ -417,6 +417,83 @@ mod plan_equivalence {
     }
 
     #[test]
+    fn prop_graphdef_json_round_trip_preserves_graph_and_plan_outputs() {
+        use tf_fpga::hsa::agent::DeviceType;
+        use tf_fpga::tf::model::{graph_from_json, graph_to_json};
+        use tf_fpga::util::json::Json;
+
+        forall(13, 40, &GraphCase, |(seed, ops)| {
+            let (mut g, fetches) = build(*seed, ops);
+            g.finalize().map_err(|e| e.to_string())?;
+            // Random device annotation so the round trip must carry it.
+            let mut rng = Rng::new(seed ^ 0xD0D0);
+            let annotated = tf_fpga::tf::graph::NodeId(
+                rng.below(g.len() as u64) as usize
+            );
+            g.set_device(annotated, DeviceType::Cpu);
+
+            // Serialize through the *string* form, as a bundle on disk would.
+            let doc = graph_to_json(&g).to_string();
+            let parsed = Json::parse(&doc).map_err(|e| format!("reparse: {e}"))?;
+            let mut g2 = graph_from_json(&parsed).map_err(|e| format!("decode: {e}"))?;
+            g2.finalize().map_err(|e| format!("refinalize: {e}"))?;
+
+            // Node count, names, topology and device annotations survive.
+            if g.len() != g2.len() {
+                return Err(format!("node count {} -> {}", g.len(), g2.len()));
+            }
+            for (a, b) in g.nodes().iter().zip(g2.nodes()) {
+                if a.name != b.name {
+                    return Err(format!("name '{}' -> '{}'", a.name, b.name));
+                }
+                if a.inputs != b.inputs {
+                    return Err(format!("inputs of '{}' changed", a.name));
+                }
+                if a.device != b.device {
+                    return Err(format!("device of '{}' changed", a.name));
+                }
+                if a.out_shape != b.out_shape || a.out_dtype != b.out_dtype {
+                    return Err(format!("inferred meta of '{}' changed", a.name));
+                }
+            }
+
+            // Same registry places both graphs identically...
+            let (rt, queues, reg) = cpu_env();
+            let p1 = place(&g, &reg, PlacerOptions::default()).map_err(|e| e.to_string())?;
+            let p2 = place(&g2, &reg, PlacerOptions::default()).map_err(|e| e.to_string())?;
+            if p1.by_node != p2.by_node {
+                return Err("placements diverged after round trip".into());
+            }
+
+            // ...and the compiled-plan path produces bitwise-identical
+            // outputs on both sides of the round trip.
+            let env = ExecEnv { runtime: &rt, queues: &queues };
+            let mut xv = vec![0f32; 6];
+            Rng::new(seed ^ 0x5A5A).fill_f32_normal(&mut xv, 0.0, 1.0);
+            let mut feeds = HashMap::new();
+            feeds.insert("x".to_string(), Tensor::from_f32(&[2, 3], xv).unwrap());
+            let fetch_refs: Vec<&str> = fetches.iter().map(|s| s.as_str()).collect();
+            let opts = PlanOptions::default();
+            let plan1 = ExecutionPlan::compile(&g, &p1, &reg, &env, &fetch_refs, opts)
+                .map_err(|e| format!("compile original: {e}"))?;
+            let plan2 = ExecutionPlan::compile(&g2, &p2, &reg, &env, &fetch_refs, opts)
+                .map_err(|e| format!("compile round-tripped: {e}"))?;
+            let (want, _) = plan1.replay(&env, &feeds).map_err(|e| e.to_string())?;
+            let (got, _) = plan2.replay(&env, &feeds).map_err(|e| e.to_string())?;
+            for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                if a != b {
+                    return Err(format!(
+                        "fetch '{}' diverged after GraphDef round trip",
+                        fetch_refs[k]
+                    ));
+                }
+            }
+            rt.shutdown();
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_plan_replay_bitwise_matches_interpreter_with_and_without_fusion() {
         forall(11, 40, &GraphCase, |(seed, ops)| {
             let (mut g, fetches) = build(*seed, ops);
