@@ -1,5 +1,6 @@
 //! Serving throughput: synchronous lock-step pipeline vs the async
-//! batched pipeline, at compiled batch sizes 1, 8 and 32.
+//! batched pipeline at compiled batch sizes 1, 8 and 32, then the async
+//! pipeline scaled across FPGA pool sizes 1, 2 and 4.
 //! `cargo bench --bench serving_throughput`.
 //!
 //! Both servers run the same `mnist_cnn` kernel with the same weights and
@@ -7,7 +8,9 @@
 //! requests). The only variable is the pipeline: the sync server forms,
 //! executes and delivers one batch at a time; the async server overlaps
 //! all three stages and keeps several batches in flight across queue
-//! processors. Environment knobs: `SERVE_N` total requests per
+//! processors. The pool series pins one packet processor per agent queue,
+//! so the only parallelism left is the pool itself — N agents execute N
+//! batches concurrently. Environment knobs: `SERVE_N` total requests per
 //! configuration (default 256), `SERVE_CLIENTS` concurrent clients
 //! (default 8).
 
@@ -121,8 +124,65 @@ fn main() {
         );
     }
 
-    if all_faster {
-        println!("\nserving_throughput: OK (async > sync at every batch size)");
+    // --- multi-FPGA scaling series: async pipeline, pool 1 vs 2 vs 4 ---
+    //
+    // dispatch_workers = 1: each agent queue has exactly one packet
+    // processor, so per-agent kernel execution is serialized and the pool
+    // size is the concurrency. Least-loaded routing spreads the batches.
+    println!(
+        "\n{:<12} {:>12} {:>9}   (req/s, batch 8, least-loaded routing)",
+        "fpga pool", "async", "scaling"
+    );
+    let mut base_rps = 0.0;
+    let mut pool2_scaling = 0.0;
+    for pool in [1usize, 2, 4] {
+        let srv = Arc::new(
+            AsyncInferenceServer::start(AsyncServerConfig {
+                models: vec![ModelSpec::new("mnist", policy(8))],
+                session: SessionOptions {
+                    dispatch_workers: 1,
+                    fpga_pool: pool,
+                    shard_strategy: tf_fpga::sharding::ShardStrategy::LeastLoaded,
+                    ..SessionOptions::native_only()
+                },
+                pipeline_depth: 8,
+            })
+            .expect("pooled async server"),
+        );
+        let s2 = Arc::clone(&srv);
+        let elapsed = drive(clients, total, move |img| s2.infer("mnist", img).is_ok());
+        let rps = total as f64 / elapsed.as_secs_f64();
+        let rep = srv.report();
+        let shards: Vec<String> = rep
+            .pool
+            .iter()
+            .map(|s| format!("{}:{}", s.agent, s.dispatches))
+            .collect();
+        println!("  [pool {pool}: dispatches {}]", shards.join(" "));
+        if pool == 1 {
+            base_rps = rps;
+        }
+        let scaling = if base_rps > 0.0 { rps / base_rps } else { 1.0 };
+        if pool == 2 {
+            pool2_scaling = scaling;
+        }
+        println!("{:<12} {:>12.1} {:>8.2}x", pool, rps, scaling);
+        if let Ok(mut s) = Arc::try_unwrap(srv) {
+            s.stop();
+        }
+    }
+
+    if all_faster && pool2_scaling >= 1.5 {
+        println!(
+            "\nserving_throughput: OK (async > sync at every batch size; \
+             pool 2 scaled {pool2_scaling:.2}x >= 1.5x)"
+        );
+    } else if all_faster {
+        println!(
+            "\nserving_throughput: WARNING — pool 2 scaled only \
+             {pool2_scaling:.2}x (< 1.5x target; single-core host?)"
+        );
+        std::process::exit(1);
     } else {
         println!("\nserving_throughput: WARNING — async did not beat sync everywhere");
         std::process::exit(1);

@@ -100,11 +100,18 @@ pub struct FpgaAgent {
 
 impl FpgaAgent {
     pub fn new(config: FpgaConfig) -> Arc<FpgaAgent> {
+        FpgaAgent::new_named(config, "ultra96-pl")
+    }
+
+    /// Like [`FpgaAgent::new`] with an explicit agent name — pool members
+    /// need distinct names (`ultra96-pl-0`, `ultra96-pl-1`, ...) so
+    /// per-agent reports and queue-processor thread names stay readable.
+    pub fn new_named(config: FpgaConfig, name: impl Into<String>) -> Arc<FpgaAgent> {
         let shell = Shell::ultra96(config.num_regions);
         let manager = ReconfigManager::new(shell.regions, config.policy, shell.icap);
         Arc::new(FpgaAgent {
             info: AgentInfo {
-                name: "ultra96-pl".into(),
+                name: name.into(),
                 vendor: "xilinx zu3eg (simulated)".into(),
                 device_type: DeviceType::Fpga,
                 queue_max_size: 1024,
@@ -158,14 +165,39 @@ impl FpgaAgent {
         self.manager.lock().unwrap().num_regions()
     }
 
-    /// Dispatch counts per registered role (diagnostics).
+    /// Whether this agent has at least one unoccupied PR region (a cold
+    /// role can load without evicting anything).
+    pub fn has_free_region(&self) -> bool {
+        self.manager.lock().unwrap().free_regions() > 0
+    }
+
+    /// Whether the role registered as `kernel_object` currently occupies a
+    /// PR region on *this* agent (false for unknown kernels). The
+    /// kernel-affinity router uses this to steer dispatches toward agents
+    /// that can skip reconfiguration.
+    pub fn is_resident(&self, kernel_object: u64) -> bool {
+        let role = {
+            let map = self.roles.read().unwrap();
+            map.get(&kernel_object).map(|r| r.bitstream.id)
+        };
+        match role {
+            Some(id) => self.manager.lock().unwrap().region_of(id).is_some(),
+            None => false,
+        }
+    }
+
+    /// Dispatch counts per registered role (diagnostics). Sorted by role
+    /// name so multi-agent comparisons are order-stable.
     pub fn role_dispatches(&self) -> Vec<(String, u64)> {
-        self.roles
+        let mut out: Vec<(String, u64)> = self
+            .roles
             .read()
             .unwrap()
             .values()
             .map(|r| (r.bitstream.name.clone(), r.dispatches.load(Ordering::Relaxed)))
-            .collect()
+            .collect();
+        out.sort();
+        out
     }
 
     fn sleep_scaled(&self, us: u64) {

@@ -31,6 +31,19 @@ impl HsaRuntimeBuilder {
         self
     }
 
+    /// Register every member of a multi-FPGA pool as an independent agent
+    /// (each with its own PR regions, ICAP and reconfiguration manager).
+    /// Build the pool first with [`crate::sharding::FpgaPool::new`] so
+    /// role registration and the [`crate::sharding::Router`] can keep
+    /// using the same handles; `agent_by_type(DeviceType::Fpga)` resolves
+    /// to the pool's first member.
+    pub fn with_fpga_pool(mut self, pool: &crate::sharding::FpgaPool) -> Self {
+        for agent in pool.agents() {
+            self.agents.push(Arc::clone(agent) as Arc<dyn Agent>);
+        }
+        self
+    }
+
     pub fn build(self) -> HsaRuntime {
         HsaRuntime {
             agents: self.agents,

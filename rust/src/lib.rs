@@ -75,7 +75,13 @@
 //! ```
 //!
 //! (`cargo bench --bench serving_throughput` compares it against the
-//! lock-step [`serve::InferenceServer`] baseline.)
+//! lock-step [`serve::InferenceServer`] baseline, and scales the async
+//! pipeline across FPGA pool sizes 1/2/4.)
+//!
+//! Scale-out: [`sharding`] pools N independent FPGA agents behind one
+//! session (`SessionOptions::fpga_pool`), with a [`sharding::Router`]
+//! assigning each dispatch to an agent — round-robin, least-loaded, or
+//! kernel-affinity (replica-aware, reconfiguration-avoiding) routing.
 
 pub mod bench;
 pub mod cpu;
@@ -86,6 +92,7 @@ pub mod ops;
 pub mod reconfig;
 pub mod runtime;
 pub mod serve;
+pub mod sharding;
 pub mod tf;
 pub mod trace;
 pub mod util;

@@ -13,6 +13,7 @@
 //! tf-fpga run-mnist [--batches 32]  # end-to-end CNN inference
 //! tf-fpga export-demo [dir]         # write demo model bundles
 //! tf-fpga serve --model <dir>       # serve an exported bundle (async)
+//! tf-fpga serve --fpga-pool 2       # shard serving across an FPGA pool
 //! ```
 
 use anyhow::{bail, Result};
@@ -68,7 +69,20 @@ fn main() -> Result<()> {
             flag_usize(&flags, "batch-size", 32),
             session_opts_from_flags(&flags)?,
         ),
-        "serve" if flags.contains_key("async") || flags.contains_key("model") => {
+        "serve"
+            if flags.contains_key("async")
+                || flags.contains_key("model")
+                || flags.contains_key("fpga-pool") =>
+        {
+            let strategy = match flags.get("shard-strategy") {
+                Some(s) => tf_fpga::sharding::ShardStrategy::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown --shard-strategy '{s}' \
+                         (round-robin | least-loaded | kernel-affinity)"
+                    )
+                })?,
+                None => tf_fpga::sharding::ShardStrategy::KernelAffinity,
+            };
             serve_async(
                 flag_usize(&flags, "requests", 512),
                 flag_usize(&flags, "clients", 4),
@@ -76,6 +90,8 @@ fn main() -> Result<()> {
                 flag_usize(&flags, "max-delay-ms", 3),
                 flag_usize(&flags, "pipeline-depth", 4),
                 flag_usize(&flags, "workers", 2),
+                flag_usize(&flags, "fpga-pool", 1),
+                strategy,
                 flags.get("model").cloned(),
             )
         }
@@ -122,6 +138,9 @@ commands:
                            async batched pipeline (overlapped dispatch/completion)
   serve --model DIR [...]  serve a model bundle directory (async pipeline);
                            see `export-demo` and `python -m compile.export`
+  serve --fpga-pool N [--shard-strategy S ...]
+                           shard the async pipeline across N FPGA agents
+                           (S: round-robin | least-loaded | kernel-affinity)
   export-demo [DIR]        write the built-in demo model bundles to DIR
                            (mnist, mnist_layers, tiny_fc; default ./demo-bundles)
   ablate-hls               pre-synthesized vs online-synthesis (OpenCL) flow costs
@@ -446,6 +465,7 @@ fn serve(
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn serve_async(
     requests: usize,
     clients: usize,
@@ -453,6 +473,8 @@ fn serve_async(
     max_delay_ms: usize,
     pipeline_depth: usize,
     workers: usize,
+    fpga_pool: usize,
+    shard_strategy: tf_fpga::sharding::ShardStrategy,
     model_dir: Option<String>,
 ) -> Result<()> {
     use std::sync::Arc;
@@ -472,7 +494,12 @@ fn serve_async(
     let model_name = spec.name.clone();
     let srv = AsyncInferenceServer::start(AsyncServerConfig {
         models: vec![spec],
-        session: SessionOptions { dispatch_workers: workers, ..SessionOptions::default() },
+        session: SessionOptions {
+            dispatch_workers: workers,
+            fpga_pool,
+            shard_strategy,
+            ..SessionOptions::default()
+        },
         pipeline_depth,
     })
     .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -480,8 +507,10 @@ fn serve_async(
     println!(
         "async serving '{model_name}' ({:?} -> {:?} per request): max_batch={max_batch} \
          max_delay={max_delay_ms}ms depth={pipeline_depth} workers={workers}, \
-         {clients} clients, {requests} requests",
-        meta.sample_in_shape, meta.sample_out_shape
+         fpga pool {fpga_pool} ({}), {clients} clients, {requests} requests",
+        meta.sample_in_shape,
+        meta.sample_out_shape,
+        shard_strategy.name()
     );
 
     let srv = Arc::new(srv);
@@ -523,10 +552,21 @@ fn serve_async(
     );
     println!("throughput    : {:.0} req/s", rep.requests as f64 / wall);
     println!(
-        "fpga          : hit rate {:.1}%, {} reconfigs",
+        "fpga          : hit rate {:.1}%, {} reconfigs (pooled over {} agent(s))",
         100.0 * rep.reconfig.hit_rate(),
-        rep.reconfig.misses
+        rep.reconfig.misses,
+        rep.pool.len()
     );
+    for shard in &rep.pool {
+        println!(
+            "  {:<14}: {} dispatches, max in-flight {}, hit rate {:.1}%, {} reconfigs",
+            shard.agent,
+            shard.dispatches,
+            shard.max_inflight,
+            100.0 * shard.reconfig.hit_rate(),
+            shard.reconfig.misses
+        );
+    }
     drop(srv); // Drop drains the pipeline and shuts the session down.
     Ok(())
 }

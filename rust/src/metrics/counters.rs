@@ -45,6 +45,33 @@ impl CounterSnapshot {
             self.fill_sum as f64 / self.batches as f64
         }
     }
+
+    /// Field-wise accumulation for pooled rollups (per-agent or
+    /// per-pipeline counters summed into one view). Gauges add too:
+    /// the pool's in-flight total is the sum of its members', and the
+    /// summed high-water mark is the pool-wide upper bound (individual
+    /// peaks need not have coincided).
+    pub fn absorb(&mut self, other: &CounterSnapshot) {
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.failed += other.failed;
+        self.batches += other.batches;
+        self.fill_sum += other.fill_sum;
+        self.inflight += other.inflight;
+        self.max_inflight += other.max_inflight;
+        self.plan_compile_us += other.plan_compile_us;
+    }
+
+    /// Sum of many per-agent/per-pipeline snapshots.
+    pub fn rollup<'a>(
+        parts: impl IntoIterator<Item = &'a CounterSnapshot>,
+    ) -> CounterSnapshot {
+        let mut total = CounterSnapshot::default();
+        for p in parts {
+            total.absorb(p);
+        }
+        total
+    }
 }
 
 impl ServeCounters {
@@ -156,6 +183,28 @@ mod tests {
         let s = c.snapshot();
         assert_eq!(s.failed, 3);
         assert_eq!((s.batches, s.inflight, s.max_inflight), (0, 0, 0));
+    }
+
+    #[test]
+    fn rollup_sums_field_wise() {
+        let a = ServeCounters::new();
+        a.on_submit();
+        a.on_batch_dispatch(3);
+        a.on_batch_complete(3, 0);
+        a.on_plan_compile(100);
+        let b = ServeCounters::new();
+        b.on_submit();
+        b.on_submit();
+        b.on_batch_dispatch(2);
+        let total = CounterSnapshot::rollup([a.snapshot(), b.snapshot()].iter());
+        assert_eq!(total.submitted, 3);
+        assert_eq!(total.completed, 3);
+        assert_eq!(total.batches, 2);
+        assert_eq!(total.fill_sum, 5);
+        assert_eq!(total.inflight, 1, "b's batch is still in flight");
+        assert_eq!(total.max_inflight, 2, "pool-wide upper bound");
+        assert_eq!(total.plan_compile_us, 100);
+        assert!((total.mean_batch_fill() - 2.5).abs() < 1e-9);
     }
 
     #[test]

@@ -53,6 +53,26 @@ impl ReconfigStats {
             self.hits as f64 / self.dispatches as f64
         }
     }
+
+    /// Field-wise accumulation, for pooled rollups across a multi-agent
+    /// FPGA pool (each agent keeps its own manager and stats; the session
+    /// and serving reports sum them through here).
+    pub fn accumulate(&mut self, other: &ReconfigStats) {
+        self.dispatches += other.dispatches;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.reconfig_us_total += other.reconfig_us_total;
+    }
+
+    /// Sum of many per-agent stats (see [`ReconfigStats::accumulate`]).
+    pub fn sum<'a>(parts: impl IntoIterator<Item = &'a ReconfigStats>) -> ReconfigStats {
+        let mut total = ReconfigStats::default();
+        for p in parts {
+            total.accumulate(p);
+        }
+        total
+    }
 }
 
 /// Manages which role occupies which PR region.
@@ -106,6 +126,13 @@ impl ReconfigManager {
     /// Which region holds `role`, if resident.
     pub fn region_of(&self, role: RoleId) -> Option<usize> {
         self.resident.get(&role).copied()
+    }
+
+    /// Number of currently unoccupied PR regions (loading a role into one
+    /// evicts nothing — the shard router prefers such agents for cold
+    /// kernels).
+    pub fn free_regions(&self) -> usize {
+        self.regions.iter().filter(|r| r.is_free()).count()
     }
 
     /// Ensure `bitstream`'s role is resident; reconfigure (evicting if

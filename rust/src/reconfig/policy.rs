@@ -11,7 +11,7 @@
 
 use crate::fpga::bitstream::RoleId;
 use crate::util::prng::Rng;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Metadata the policy may inspect per candidate region.
 #[derive(Debug, Clone, Copy)]
@@ -161,9 +161,13 @@ impl EvictionPolicy for BeladyOracle {
 /// demand, then break ties by least-recent use. A role the batcher has
 /// requests queued for is only evicted when every candidate has demand
 /// (in which case the least-demanded goes — it will be reloaded latest).
+/// Demand table is an ordered map: no iteration-order nondeterminism can
+/// leak into victim selection or debug output, which matters once several
+/// policy instances run side by side in a multi-agent pool whose tests
+/// demand reproducible placement.
 #[derive(Debug, Default)]
 pub struct QueueAwareLru {
-    demand: HashMap<RoleId, u64>,
+    demand: BTreeMap<RoleId, u64>,
 }
 
 impl QueueAwareLru {

@@ -6,11 +6,13 @@
 //! HLO *text* → `HloModuleProto::from_text_file` → `XlaComputation` →
 //! `client.compile` → execute with `Literal` inputs, unwrap the 1-tuple.
 //!
-//! The XLA backend is compiled only with the `pjrt` cargo feature (the
-//! `xla` crate needs native XLA libraries that are not in the offline
-//! vendor set). Without the feature, [`PjrtService::start`] returns an
-//! error and the session falls back to native-kernel numerics — the same
-//! math, minus the artifact round-trip.
+//! The XLA backend is compiled only with the `pjrt` + `pjrt-xla` cargo
+//! features together (the `xla` crate needs native XLA libraries that
+//! are not in the offline vendor set; `pjrt` alone builds this service
+//! with a stub backend so the feature stays CI-green). Without the real
+//! backend, [`PjrtService::start`] returns an error and the session
+//! falls back to native-kernel numerics — the same math, minus the
+//! artifact round-trip.
 
 use crate::hsa::error::{HsaError, Result};
 use crate::runtime::artifact::ModuleMeta;
@@ -118,8 +120,12 @@ impl PjrtHandle {
     }
 }
 
-/// The real XLA-backed service loop.
-#[cfg(feature = "pjrt")]
+/// The real XLA-backed service loop. Compiled only when *both* `pjrt`
+/// and `pjrt-xla` are enabled: `pjrt` alone builds the full service
+/// plumbing (so CI keeps the feature green) but degrades to the stub
+/// below, because the `xla` crate needs native XLA libraries outside
+/// the offline vendor set (see Cargo.toml).
+#[cfg(all(feature = "pjrt", feature = "pjrt-xla"))]
 mod backend {
     use super::Request;
     use crate::hsa::error::{HsaError, Result};
@@ -273,9 +279,12 @@ mod backend {
     }
 }
 
-/// Featureless stub: report at startup that PJRT is unavailable. The
-/// session treats this as "no PJRT" and binds roles to native kernels.
-#[cfg(not(feature = "pjrt"))]
+/// Backend-less stub: report at startup that PJRT is unavailable — either
+/// the `pjrt` feature is off entirely, or it is on without the vendored
+/// `pjrt-xla` backend. The session treats both as "no PJRT" and binds
+/// roles to native kernels (identical math), so `--features pjrt` always
+/// builds and tests green even with no XLA toolchain or artifacts.
+#[cfg(not(all(feature = "pjrt", feature = "pjrt-xla")))]
 mod backend {
     use super::Request;
     use crate::hsa::error::{HsaError, Result};
@@ -287,12 +296,14 @@ mod backend {
     ) {
         drop(rx);
         let _ = ready.send(Err(HsaError::Runtime(
-            "PJRT backend not compiled in (enable the `pjrt` cargo feature)".into(),
+            "PJRT backend not compiled in (enable the `pjrt` + `pjrt-xla` \
+             cargo features after vendoring the `xla` crate)"
+                .into(),
         )));
     }
 }
 
-#[cfg(all(test, feature = "pjrt"))]
+#[cfg(all(test, feature = "pjrt", feature = "pjrt-xla"))]
 mod tests {
     // PJRT service tests that need real artifacts live in
     // rust/tests/integration_runtime.rs (gated on artifacts/ existing).
@@ -312,7 +323,7 @@ mod tests {
     }
 }
 
-#[cfg(all(test, not(feature = "pjrt")))]
+#[cfg(all(test, not(all(feature = "pjrt", feature = "pjrt-xla"))))]
 mod tests {
     use super::*;
 

@@ -99,7 +99,13 @@ pub struct AsyncServeReport {
     /// server's field. Note the async hot path dispatches via `run_async`'s
     /// tail fast path; cached plans only serve its synchronous fallback.
     pub plan_compile_us: u64,
+    /// Pooled rollup over every FPGA agent (== the single agent's stats
+    /// at pool size 1).
     pub reconfig: crate::reconfig::manager::ReconfigStats,
+    /// Per-agent shard accounting (dispatches routed, in-flight
+    /// high-water, per-agent reconfig stats), in pool order. One entry
+    /// for the default single-device session.
+    pub pool: Vec<crate::sharding::ShardAgentReport>,
 }
 
 /// A running asynchronous inference server.
@@ -156,7 +162,12 @@ impl AsyncInferenceServer {
         // plan cache — the cached plans serve the synchronous fallback,
         // i.e. every multi-op bundle. The prewarm is one cheap compile per
         // model at startup and puts a compile-time figure in the report.
-        for info in infos.values() {
+        // Warmed in name order: compile-time folding issues real (routed)
+        // dispatches, so a deterministic order keeps multi-agent runs
+        // reproducible.
+        let mut warm_order: Vec<&HostedModel> = infos.values().collect();
+        warm_order.sort_by(|a, b| a.name.cmp(&b.name));
+        for info in warm_order {
             let zero = Tensor::zeros(&info.full_in_shape, DType::F32);
             let fetches = [info.out_name.as_str()];
             let us = session.warm_plan(&[(info.x_name.as_str(), zero)], &fetches)?;
@@ -259,6 +270,7 @@ impl AsyncInferenceServer {
             // cache-miss compiles are included, matching the sync server.
             plan_compile_us: self.session.plan_cache_stats().compile_us_total,
             reconfig: self.session.reconfig_stats(),
+            pool: self.session.shard_stats(),
         }
     }
 
@@ -365,7 +377,11 @@ fn publish_demand(
     infos: &HashMap<String, HostedModel>,
     session: &Session,
 ) {
-    let mut per_kernel: HashMap<&str, u64> = HashMap::new();
+    // Ordered map: hints reach the policies and the shard router in a
+    // deterministic (name-sorted) order, so multi-agent placement — which
+    // reads the demand table — is reproducible for a given request trace.
+    let mut per_kernel: std::collections::BTreeMap<&str, u64> =
+        std::collections::BTreeMap::new();
     for (model, queued) in lanes.queued_by_model() {
         if let Some(info) = infos.get(&model) {
             for kernel in &info.kernels {
@@ -658,6 +674,46 @@ mod tests {
         let want = model.invoke("serve", &[("x", x)]).unwrap();
         assert_eq!(&want[0].as_f32().unwrap()[..4], row.as_slice());
         model.shutdown();
+    }
+
+    #[test]
+    fn pooled_server_shards_batches_and_reports_per_agent() {
+        use crate::sharding::ShardStrategy;
+        let mut srv = AsyncInferenceServer::start(AsyncServerConfig {
+            models: vec![ModelSpec::new("mnist", policy(1, 1))],
+            session: SessionOptions {
+                fpga_pool: 2,
+                shard_strategy: ShardStrategy::RoundRobin,
+                dispatch_workers: 1,
+                ..SessionOptions::native_only()
+            },
+            pipeline_depth: 4,
+        })
+        .unwrap();
+        // Batch 1 → every request is its own dispatch; round robin puts
+        // half on each agent.
+        let rxs: Vec<_> = (0..8)
+            .map(|i| srv.infer_async("mnist", vec![i as f32 / 8.0; 784]).unwrap())
+            .collect();
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().unwrap().len(), 10);
+        }
+        let rep = srv.report();
+        assert_eq!(rep.completed, 8);
+        assert_eq!(rep.pool.len(), 2, "one report row per pool agent");
+        let (a, b) = (rep.pool[0].dispatches, rep.pool[1].dispatches);
+        assert_eq!(a + b, rep.reconfig.dispatches, "rollup covers the pool");
+        assert!(a >= 1 && b >= 1, "both agents served traffic: {a}/{b}");
+        // Replies all delivered, so nothing may still be in flight.
+        assert_eq!(rep.pool.iter().map(|p| p.inflight).sum::<u64>(), 0);
+        // Pooled outputs equal the single-agent server's for the same
+        // input (identical deterministic weights everywhere).
+        let mut single = single_model(1, 1, 2);
+        let want = single.infer("mnist", vec![0.25; 784]).unwrap();
+        let got = srv.infer("mnist", vec![0.25; 784]).unwrap();
+        assert_eq!(want, got, "pool-2 logits diverged from single agent");
+        single.stop();
+        srv.stop();
     }
 
     #[test]

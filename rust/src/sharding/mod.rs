@@ -1,0 +1,41 @@
+//! Multi-FPGA sharded dispatch: an agent pool behind one runtime.
+//!
+//! The paper's device is a *single* reconfigurable FPGA whose PR regions
+//! are re-targeted per kernel at runtime. Nothing in that model is
+//! inherently single-device: a pool of such agents — each with its own PR
+//! regions, ICAP and [`crate::reconfig::manager::ReconfigManager`] — can
+//! serve shards of the same traffic, and the scheduling problem moves up
+//! one level: *which* agent should a given kernel dispatch land on?
+//!
+//! Two pieces:
+//!
+//! * [`FpgaPool`] — constructs N independent
+//!   [`FpgaAgent`](crate::fpga::device::FpgaAgent)s and registers
+//!   every role bitstream on all of them **under one shared kernel-object
+//!   id**, so a compiled [`crate::tf::plan::ExecutionPlan`]'s pre-resolved
+//!   `(device, kernel_object)` pairs stay valid on every member of the
+//!   pool. Plug it into [`crate::hsa::runtime::HsaRuntimeBuilder::with_fpga_pool`].
+//! * [`Router`] — assigns each FPGA dispatch to an agent via a pluggable
+//!   [`ShardStrategy`]:
+//!   - [`ShardStrategy::RoundRobin`] — cyclic, load-blind;
+//!   - [`ShardStrategy::LeastLoaded`] — lowest in-flight counter wins
+//!     (ties break to the lowest agent index, so routing is a pure
+//!     function of the observed call sequence);
+//!   - [`ShardStrategy::KernelAffinity`] — prefer agents already holding
+//!     the kernel's bitstream in a PR region (no reconfiguration); place
+//!     cold kernels on an agent with a free region first (least-loaded
+//!     otherwise), and *replicate* a hot
+//!     kernel onto an idle agent when the queued-demand hints
+//!     ([`Router::hint_demand`], fed by the serving batcher) say its
+//!     resident replicas cannot keep up.
+//!
+//! Every dispatch returns a [`RouteGuard`] that decrements the chosen
+//! agent's in-flight gauge on drop, so load balancing sees completions
+//! without any callback plumbing. Per-agent accounting rolls up through
+//! [`Router::report`] / [`Router::rollup`].
+
+pub mod pool;
+pub mod router;
+
+pub use pool::FpgaPool;
+pub use router::{RouteGuard, Router, ShardAgentReport, ShardStrategy};

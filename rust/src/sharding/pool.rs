@@ -1,0 +1,142 @@
+//! A pool of independent FPGA agents sharing one kernel namespace.
+//!
+//! Each member is a full [`FpgaAgent`]: its own PR regions, ICAP timing
+//! model, eviction policy and reconfiguration statistics. The pool's one
+//! job is to keep the *kernel-object ids identical across members*: a role
+//! registered through [`FpgaPool::register_role`] is cloned onto every
+//! agent under the same [`crate::fpga::bitstream::RoleId`], so placement,
+//! compiled plans and the kernel registry never need to know how many
+//! agents exist — only the [`super::Router`] does.
+
+use crate::fpga::device::{ComputeBinding, FpgaAgent, FpgaConfig};
+use crate::fpga::bitstream::Bitstream;
+use std::sync::Arc;
+
+/// N independent FPGA agents with a shared role namespace.
+pub struct FpgaPool {
+    agents: Vec<Arc<FpgaAgent>>,
+}
+
+impl FpgaPool {
+    /// Build a pool of `n` agents (at least one). `config` is called once
+    /// per agent with the agent index, so each member gets its own
+    /// eviction policy instance (policies are stateful) and, when wanted,
+    /// a per-agent seed. Agents are named `ultra96-pl-<i>`; a pool of one
+    /// keeps the historical name `ultra96-pl`.
+    pub fn new(n: usize, mut config: impl FnMut(usize) -> FpgaConfig) -> FpgaPool {
+        let n = n.max(1);
+        let agents = (0..n)
+            .map(|i| {
+                let name = if n == 1 {
+                    "ultra96-pl".to_string()
+                } else {
+                    format!("ultra96-pl-{i}")
+                };
+                FpgaAgent::new_named(config(i), name)
+            })
+            .collect();
+        FpgaPool { agents }
+    }
+
+    pub fn len(&self) -> usize {
+        self.agents.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.agents.is_empty()
+    }
+
+    pub fn agents(&self) -> &[Arc<FpgaAgent>] {
+        &self.agents
+    }
+
+    pub fn agent(&self, i: usize) -> &Arc<FpgaAgent> {
+        &self.agents[i]
+    }
+
+    /// Register `bitstream` as a dispatchable kernel on **every** agent.
+    /// All members receive a clone carrying the same `RoleId`, so the
+    /// returned kernel object resolves on whichever agent the router
+    /// picks. The binding is cloned per agent (bindings are `Arc`-backed).
+    pub fn register_role(&self, bitstream: Bitstream, binding: ComputeBinding) -> u64 {
+        let id = bitstream.id.0;
+        for agent in &self.agents {
+            agent.register_role(bitstream.clone(), binding.clone());
+        }
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::roles::paper_roles;
+    use crate::hsa::agent::Agent;
+    use crate::reconfig::policy::PolicyKind;
+    use crate::tf::tensor::Tensor;
+
+    fn config(seed: u64) -> FpgaConfig {
+        FpgaConfig {
+            num_regions: 2,
+            policy: PolicyKind::Lru.build(seed),
+            realtime: false,
+            realtime_scale: 1.0,
+            trace: None,
+        }
+    }
+
+    fn echo() -> ComputeBinding {
+        ComputeBinding::Native(Arc::new(|ins: &[Tensor]| Ok(ins.to_vec())))
+    }
+
+    #[test]
+    fn pool_members_are_independent_agents_with_distinct_names() {
+        let pool = FpgaPool::new(3, |i| config(i as u64));
+        assert_eq!(pool.len(), 3);
+        let names: Vec<_> =
+            pool.agents().iter().map(|a| a.info().name.clone()).collect();
+        assert_eq!(names, ["ultra96-pl-0", "ultra96-pl-1", "ultra96-pl-2"]);
+    }
+
+    #[test]
+    fn single_agent_pool_keeps_historical_name() {
+        let pool = FpgaPool::new(1, |i| config(i as u64));
+        assert_eq!(pool.agent(0).info().name, "ultra96-pl");
+    }
+
+    #[test]
+    fn zero_is_clamped_to_one_agent() {
+        assert_eq!(FpgaPool::new(0, |i| config(i as u64)).len(), 1);
+    }
+
+    #[test]
+    fn register_role_shares_one_kernel_object_across_agents() {
+        let pool = FpgaPool::new(2, |i| config(i as u64));
+        let role = paper_roles().remove(0);
+        let want = role.id.0;
+        let got = pool.register_role(role, echo());
+        assert_eq!(got, want);
+        // Both agents resolve the id: dispatching marks residency on
+        // exactly the agent that executed, not its peers.
+        for agent in pool.agents() {
+            assert!(!agent.is_resident(got), "nothing dispatched yet");
+        }
+    }
+
+    #[test]
+    fn reconfig_state_is_per_agent() {
+        use crate::hsa::packet::AqlPacket;
+        use crate::hsa::signal::Signal;
+        let pool = FpgaPool::new(2, |i| config(i as u64));
+        let id = pool.register_role(paper_roles().remove(0), echo());
+        let x = Tensor::from_f32(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let (pkt, _args) = AqlPacket::dispatch(id, vec![x], Signal::new(1));
+        if let AqlPacket::KernelDispatch(d) = pkt {
+            pool.agent(0).execute(&d).unwrap();
+        }
+        assert!(pool.agent(0).is_resident(id), "executor agent holds the role");
+        assert!(!pool.agent(1).is_resident(id), "peer agent untouched");
+        assert_eq!(pool.agent(0).reconfig_stats().misses, 1);
+        assert_eq!(pool.agent(1).reconfig_stats().dispatches, 0);
+    }
+}

@@ -1,0 +1,452 @@
+//! Replica-aware, load-balanced routing of FPGA dispatches.
+//!
+//! The router owns one *slot* per pool agent — the agent handle, its AQL
+//! queue and a trio of counters (in-flight gauge, total dispatches,
+//! in-flight high-water mark). [`Router::route`] picks a slot for a
+//! kernel object and returns the slot's queue plus a [`RouteGuard`] whose
+//! `Drop` retires the dispatch from the gauge, so callers need no
+//! completion callbacks: hold the guard until the kernel's result is
+//! harvested and load balancing stays truthful.
+//!
+//! Strategy selection is **deterministic**: every tie breaks toward the
+//! lowest agent index, and the only inputs are the router's own counters,
+//! the agents' residency maps and the demand table — all of which are
+//! pure functions of the call sequence. Two routers fed the same sequence
+//! of `route`/guard-drop/`hint_demand` calls make identical choices
+//! (property-tested in `tests/prop_invariants.rs`).
+
+use crate::fpga::device::FpgaAgent;
+use crate::hsa::agent::Agent;
+use crate::hsa::queue::Queue;
+use crate::reconfig::manager::ReconfigStats;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// How the router assigns dispatches to pool agents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Cyclic assignment, blind to load and residency.
+    RoundRobin,
+    /// Lowest in-flight count wins (ties → lowest agent index).
+    LeastLoaded,
+    /// Prefer agents already holding the kernel's bitstream (avoids
+    /// reconfiguration churn); cold kernels fall back to least-loaded,
+    /// and hot kernels (queued demand above their replica count) spill
+    /// onto an idle agent, replicating the bitstream there.
+    KernelAffinity,
+}
+
+impl ShardStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardStrategy::RoundRobin => "round-robin",
+            ShardStrategy::LeastLoaded => "least-loaded",
+            ShardStrategy::KernelAffinity => "kernel-affinity",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ShardStrategy> {
+        match s {
+            "round-robin" => Some(ShardStrategy::RoundRobin),
+            "least-loaded" => Some(ShardStrategy::LeastLoaded),
+            "kernel-affinity" => Some(ShardStrategy::KernelAffinity),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [ShardStrategy; 3] = [
+        ShardStrategy::RoundRobin,
+        ShardStrategy::LeastLoaded,
+        ShardStrategy::KernelAffinity,
+    ];
+}
+
+struct Slot {
+    agent: Arc<FpgaAgent>,
+    queue: Queue,
+    inflight: Arc<AtomicU64>,
+    dispatches: AtomicU64,
+    max_inflight: AtomicU64,
+}
+
+/// Retires one routed dispatch from its agent's in-flight gauge on drop.
+/// Hold it until the dispatch's result is harvested (plan replay keeps it
+/// in the in-flight ring; `PendingRun` carries it to `wait`).
+#[derive(Debug)]
+pub struct RouteGuard {
+    inflight: Arc<AtomicU64>,
+}
+
+impl Drop for RouteGuard {
+    fn drop(&mut self) {
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Point-in-time accounting of one pool agent (see [`Router::report`]).
+#[derive(Debug, Clone)]
+pub struct ShardAgentReport {
+    pub agent: String,
+    /// Dispatches routed to this agent.
+    pub dispatches: u64,
+    /// Dispatches routed but not yet retired.
+    pub inflight: u64,
+    /// High-water mark of concurrently in-flight dispatches.
+    pub max_inflight: u64,
+    /// The agent's own reconfiguration accounting.
+    pub reconfig: ReconfigStats,
+}
+
+/// Routes FPGA dispatches across a pool of agents.
+pub struct Router {
+    slots: Vec<Slot>,
+    strategy: ShardStrategy,
+    rr_next: AtomicUsize,
+    /// Latest queued-demand hint per kernel object (serving queue depths),
+    /// consulted by `KernelAffinity` to decide replication. Ordered map so
+    /// iteration/debug output is deterministic.
+    demand: Mutex<BTreeMap<u64, u64>>,
+}
+
+impl Router {
+    /// Build a router over `(agent, queue)` pairs — one AQL queue per
+    /// agent, created by the caller on the shared runtime.
+    pub fn new(
+        slots: Vec<(Arc<FpgaAgent>, Queue)>,
+        strategy: ShardStrategy,
+    ) -> Router {
+        assert!(!slots.is_empty(), "router needs at least one agent");
+        Router {
+            slots: slots
+                .into_iter()
+                .map(|(agent, queue)| Slot {
+                    agent,
+                    queue,
+                    inflight: Arc::new(AtomicU64::new(0)),
+                    dispatches: AtomicU64::new(0),
+                    max_inflight: AtomicU64::new(0),
+                })
+                .collect(),
+            strategy,
+            rr_next: AtomicUsize::new(0),
+            demand: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn strategy(&self) -> ShardStrategy {
+        self.strategy
+    }
+
+    pub fn agent(&self, i: usize) -> &Arc<FpgaAgent> {
+        &self.slots[i].agent
+    }
+
+    pub fn agents(&self) -> impl Iterator<Item = &Arc<FpgaAgent>> {
+        self.slots.iter().map(|s| &s.agent)
+    }
+
+    /// Pick an agent for `kernel_object` and account the dispatch.
+    /// Returns the chosen index, a clone of its queue, and the guard that
+    /// retires the dispatch when dropped.
+    pub fn route(&self, kernel_object: u64) -> (usize, Queue, RouteGuard) {
+        let i = self.pick(kernel_object);
+        let slot = &self.slots[i];
+        slot.dispatches.fetch_add(1, Ordering::Relaxed);
+        let now = slot.inflight.fetch_add(1, Ordering::AcqRel) + 1;
+        slot.max_inflight.fetch_max(now, Ordering::AcqRel);
+        (
+            i,
+            slot.queue.clone(),
+            RouteGuard { inflight: Arc::clone(&slot.inflight) },
+        )
+    }
+
+    fn pick(&self, kernel_object: u64) -> usize {
+        match self.strategy {
+            ShardStrategy::RoundRobin => {
+                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.slots.len()
+            }
+            ShardStrategy::LeastLoaded => self.least_loaded(|_| true),
+            ShardStrategy::KernelAffinity => self.pick_affinity(kernel_object),
+        }
+    }
+
+    /// Index of the least-loaded slot among those passing `eligible`
+    /// (lowest index on ties). `eligible` must accept at least one slot.
+    fn least_loaded(&self, eligible: impl Fn(usize) -> bool) -> usize {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| eligible(*i))
+            .min_by_key(|(i, s)| (s.inflight.load(Ordering::Acquire), *i))
+            .map(|(i, _)| i)
+            .expect("least_loaded over empty eligible set")
+    }
+
+    fn pick_affinity(&self, kernel_object: u64) -> usize {
+        let resident: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.agent.is_resident(kernel_object))
+            .map(|(i, _)| i)
+            .collect();
+        if resident.is_empty() {
+            // Cold kernel: prefer an agent with a free PR region (loading
+            // there evicts nothing, and spreads the working set across
+            // the pool); with no free region anywhere, lowest load wins.
+            let free: Vec<usize> = self
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.agent.has_free_region())
+                .map(|(i, _)| i)
+                .collect();
+            if !free.is_empty() {
+                return self.least_loaded(|i| free.contains(&i));
+            }
+            return self.least_loaded(|_| true);
+        }
+        let best = self.least_loaded(|i| resident.contains(&i));
+        // Replication: the kernel is hot (more queued demand than resident
+        // replicas), every replica is busy, and an idle agent exists —
+        // spill there; its reconfiguration loads a new replica, and
+        // subsequent affinity routing spreads across both.
+        let demand = self
+            .demand
+            .lock()
+            .unwrap()
+            .get(&kernel_object)
+            .copied()
+            .unwrap_or(0);
+        let best_busy = self.slots[best].inflight.load(Ordering::Acquire) > 0;
+        if best_busy && demand > resident.len() as u64 {
+            let idle = self
+                .slots
+                .iter()
+                .enumerate()
+                .find(|(i, s)| {
+                    !resident.contains(i) && s.inflight.load(Ordering::Acquire) == 0
+                })
+                .map(|(i, _)| i);
+            if let Some(i) = idle {
+                return i;
+            }
+        }
+        best
+    }
+
+    /// Queued-demand hint from the serving layer: `queued` requests are
+    /// waiting on `kernel_object` (0 clears it). Recorded for the
+    /// replication decision and forwarded to *every* agent's eviction
+    /// policy — a demand-aware policy spares the role on whichever agent
+    /// holds (or is about to hold) it.
+    pub fn hint_demand(&self, kernel_object: u64, queued: u64) {
+        {
+            let mut demand = self.demand.lock().unwrap();
+            if queued == 0 {
+                demand.remove(&kernel_object);
+            } else {
+                demand.insert(kernel_object, queued);
+            }
+        }
+        for slot in &self.slots {
+            slot.agent.hint_demand(kernel_object, queued);
+        }
+    }
+
+    /// Dispatches currently in flight across the whole pool.
+    pub fn inflight(&self) -> u64 {
+        self.slots.iter().map(|s| s.inflight.load(Ordering::Acquire)).sum()
+    }
+
+    /// Per-agent accounting, in agent-index order.
+    pub fn report(&self) -> Vec<ShardAgentReport> {
+        self.slots
+            .iter()
+            .map(|s| ShardAgentReport {
+                agent: s.agent.info().name.clone(),
+                dispatches: s.dispatches.load(Ordering::Relaxed),
+                inflight: s.inflight.load(Ordering::Acquire),
+                max_inflight: s.max_inflight.load(Ordering::Acquire),
+                reconfig: s.agent.reconfig_stats(),
+            })
+            .collect()
+    }
+
+    /// Pooled rollup of [`Router::report`]: sums every counter (the
+    /// reconfig stats accumulate field-wise).
+    pub fn rollup(&self) -> ShardAgentReport {
+        let mut total = ShardAgentReport {
+            agent: "pool".to_string(),
+            dispatches: 0,
+            inflight: 0,
+            max_inflight: 0,
+            reconfig: ReconfigStats::default(),
+        };
+        for r in self.report() {
+            total.dispatches += r.dispatches;
+            total.inflight += r.inflight;
+            total.max_inflight += r.max_inflight;
+            total.reconfig.accumulate(&r.reconfig);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::{ComputeBinding, FpgaConfig};
+    use crate::fpga::roles::paper_roles;
+    use crate::hsa::agent::Agent;
+    use crate::hsa::packet::AqlPacket;
+    use crate::hsa::signal::Signal;
+    use crate::reconfig::policy::PolicyKind;
+    use crate::sharding::pool::FpgaPool;
+    use crate::tf::tensor::Tensor;
+
+    fn mk_router(n: usize, strategy: ShardStrategy) -> (FpgaPool, Router, Vec<u64>) {
+        let pool = FpgaPool::new(n, |i| FpgaConfig {
+            num_regions: 1,
+            policy: PolicyKind::Lru.build(i as u64),
+            realtime: false,
+            realtime_scale: 1.0,
+            trace: None,
+        });
+        let echo = ComputeBinding::Native(std::sync::Arc::new(
+            |ins: &[Tensor]| Ok(ins.to_vec()),
+        ));
+        let ids: Vec<u64> = paper_roles()
+            .into_iter()
+            .take(2)
+            .map(|r| pool.register_role(r, echo.clone()))
+            .collect();
+        let slots = pool
+            .agents()
+            .iter()
+            .map(|a| (std::sync::Arc::clone(a), Queue::new(8)))
+            .collect();
+        let router = Router::new(slots, strategy);
+        (pool, router, ids)
+    }
+
+    /// Execute a dispatch on the routed agent directly (no runtime), so
+    /// residency is established for affinity tests.
+    fn execute_on(router: &Router, idx: usize, kernel_object: u64) {
+        let x = Tensor::from_f32(&[1, 2], vec![0.5, -0.5]).unwrap();
+        let (pkt, _args) = AqlPacket::dispatch(kernel_object, vec![x], Signal::new(1));
+        if let AqlPacket::KernelDispatch(d) = pkt {
+            router.agent(idx).execute(&d).unwrap();
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_across_agents() {
+        let (_pool, router, ids) = mk_router(3, ShardStrategy::RoundRobin);
+        let picks: Vec<usize> =
+            (0..6).map(|_| router.route(ids[0]).0).collect();
+        assert_eq!(picks, [0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_agent_and_breaks_ties_low() {
+        let (_pool, router, ids) = mk_router(2, ShardStrategy::LeastLoaded);
+        let (first, _, g0) = router.route(ids[0]);
+        assert_eq!(first, 0, "all idle: lowest index");
+        let (second, _, g1) = router.route(ids[0]);
+        assert_eq!(second, 1, "agent 0 busy: spill to 1");
+        drop(g0);
+        let (third, _, _g2) = router.route(ids[0]);
+        assert_eq!(third, 0, "agent 0 retired: back to it");
+        drop(g1);
+    }
+
+    #[test]
+    fn guard_drop_retires_inflight() {
+        let (_pool, router, ids) = mk_router(2, ShardStrategy::LeastLoaded);
+        let (_, _, g) = router.route(ids[0]);
+        assert_eq!(router.inflight(), 1);
+        drop(g);
+        assert_eq!(router.inflight(), 0);
+        let rep = router.rollup();
+        assert_eq!(rep.dispatches, 1);
+        assert_eq!(rep.max_inflight, 1);
+    }
+
+    #[test]
+    fn affinity_prefers_resident_agent() {
+        let (_pool, router, ids) = mk_router(2, ShardStrategy::KernelAffinity);
+        // Make the kernel resident on agent 1 only.
+        execute_on(&router, 1, ids[0]);
+        for _ in 0..3 {
+            let (i, _, g) = router.route(ids[0]);
+            assert_eq!(i, 1, "resident agent wins even though 0 is idle");
+            drop(g);
+        }
+    }
+
+    #[test]
+    fn affinity_cold_kernel_goes_least_loaded() {
+        let (_pool, router, ids) = mk_router(2, ShardStrategy::KernelAffinity);
+        let (_, _, _g) = router.route(ids[1]); // busies agent 0 (cold pick)
+        let (i, _, _g2) = router.route(ids[0]);
+        assert_eq!(i, 1, "cold kernel avoids the busy agent");
+    }
+
+    #[test]
+    fn affinity_replicates_hot_kernel_onto_idle_agent() {
+        let (_pool, router, ids) = mk_router(2, ShardStrategy::KernelAffinity);
+        execute_on(&router, 0, ids[0]); // resident only on agent 0
+        // Replica busy + no demand: stays put (no replication).
+        let (i, _, g) = router.route(ids[0]);
+        assert_eq!(i, 0);
+        let (j, _, g2) = router.route(ids[0]);
+        assert_eq!(j, 0, "without demand hints the replica is never split");
+        drop(g2);
+        // Replica busy + hot demand: spill to the idle agent.
+        router.hint_demand(ids[0], 8);
+        let (k, _, g3) = router.route(ids[0]);
+        assert_eq!(k, 1, "hot kernel replicates onto the idle agent");
+        drop(g3);
+        drop(g);
+        // Clearing the hint returns to pure affinity.
+        router.hint_demand(ids[0], 0);
+        execute_on(&router, 1, ids[0]); // now resident on both
+        let (l, _, _g4) = router.route(ids[0]);
+        assert_eq!(l, 0, "both resident + idle: lowest index");
+    }
+
+    #[test]
+    fn report_is_per_agent_and_rollup_sums() {
+        let (_pool, router, ids) = mk_router(2, ShardStrategy::RoundRobin);
+        let g0 = router.route(ids[0]).2;
+        let g1 = router.route(ids[0]).2;
+        let g2 = router.route(ids[0]).2;
+        let rep = router.report();
+        assert_eq!(rep.len(), 2);
+        assert_eq!(rep[0].dispatches, 2);
+        assert_eq!(rep[1].dispatches, 1);
+        assert_eq!(router.rollup().dispatches, 3);
+        assert_eq!(router.rollup().inflight, 3);
+        drop((g0, g1, g2));
+        assert_eq!(router.rollup().inflight, 0);
+    }
+
+    #[test]
+    fn strategy_parse_round_trip() {
+        for s in ShardStrategy::ALL {
+            assert_eq!(ShardStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(ShardStrategy::parse("zipf"), None);
+    }
+}

@@ -82,10 +82,43 @@ pub struct RunStats {
     pub wall_us: u128,
 }
 
-/// Execution environment: the HSA runtime and one queue per device type.
+/// Execution environment: the HSA runtime, one queue per device type, and
+/// (optionally) a multi-FPGA router that fans FPGA dispatches out across
+/// an agent pool instead of the single mapped queue.
 pub struct ExecEnv<'a> {
     pub runtime: &'a HsaRuntime,
     pub queues: &'a HashMap<DeviceType, Queue>,
+    /// `Some` when the session runs a pool (`SessionOptions::fpga_pool`
+    /// > 1, or 1 — the degenerate router); `None` for bare test
+    /// environments, which fall back to the `queues` map for every
+    /// device.
+    pub router: Option<&'a crate::sharding::Router>,
+}
+
+impl ExecEnv<'_> {
+    /// Resolve the queue a `(device, kernel_object)` dispatch should land
+    /// on. FPGA dispatches with a router present are shard-routed and
+    /// return a [`crate::sharding::RouteGuard`] the caller must hold
+    /// until the dispatch's result is harvested (it retires the agent's
+    /// in-flight gauge on drop); everything else uses the per-device
+    /// queue map.
+    pub fn route(
+        &self,
+        device: DeviceType,
+        kernel_object: u64,
+    ) -> Result<(Queue, Option<crate::sharding::RouteGuard>)> {
+        if device == DeviceType::Fpga {
+            if let Some(router) = self.router {
+                let (_, queue, guard) = router.route(kernel_object);
+                return Ok((queue, Some(guard)));
+            }
+        }
+        self.queues
+            .get(&device)
+            .cloned()
+            .map(|q| (q, None))
+            .ok_or_else(|| HsaError::Runtime(format!("no queue for device {device}")))
+    }
 }
 
 /// Execute a finalized, placed graph.
@@ -148,12 +181,10 @@ pub fn run(
                 run_inline(node.id, graph, feeds, &inputs)?
             }
             Some(Placement::Device { device, kernel_object }) => {
-                let queue = env.queues.get(device).ok_or_else(|| {
-                    HsaError::Runtime(format!("no queue for device {device}"))
-                })?;
+                let (queue, _route) = env.route(*device, *kernel_object)?;
                 stats.dispatches += 1;
                 *stats.dispatches_by_device.entry(*device).or_insert(0) += 1;
-                let outs = env.runtime.dispatch_sync(queue, *kernel_object, inputs)?;
+                let outs = env.runtime.dispatch_sync(&queue, *kernel_object, inputs)?;
                 // Shape checked below (shared with the inline branch).
                 check_kernel_output(&node.name, &[], outs)?
             }
@@ -271,7 +302,7 @@ mod tests {
         let (rt, queues, reg) = env_with_cpu();
         let g = small_graph();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
         let mut feeds = HashMap::new();
         feeds.insert(
             "x".to_string(),
@@ -291,7 +322,7 @@ mod tests {
         let (rt, queues, reg) = env_with_cpu();
         let g = small_graph();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
         let err = run(&g, &p, &env, &HashMap::new(), &["out"]).unwrap_err();
         assert!(err.to_string().contains("not fed"), "{err}");
         rt.shutdown();
@@ -302,7 +333,7 @@ mod tests {
         let (rt, queues, reg) = env_with_cpu();
         let g = small_graph();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
         let mut feeds = HashMap::new();
         feeds.insert("x".to_string(), Tensor::zeros(&[2, 2], DType::F32));
         assert!(run(&g, &p, &env, &feeds, &["out"]).is_err());
@@ -314,7 +345,7 @@ mod tests {
         let (rt, queues, reg) = env_with_cpu();
         let g = small_graph();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
         assert!(run(&g, &p, &env, &HashMap::new(), &["zzz"]).is_err());
         rt.shutdown();
     }
@@ -330,7 +361,7 @@ mod tests {
         g.add("d", OpKind::Add, &[r, r]).unwrap();
         g.finalize().unwrap();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
         let mut feeds = HashMap::new();
         feeds.insert("x".to_string(), Tensor::from_f32(&[1, 2], vec![-1.0, 3.0]).unwrap());
         let (outs, _) = run(&g, &p, &env, &feeds, &["d"]).unwrap();
@@ -347,7 +378,7 @@ mod tests {
         g.add("live", OpKind::Relu, &[x]).unwrap();
         g.finalize().unwrap();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
         let mut feeds = HashMap::new();
         feeds.insert("x".to_string(), Tensor::from_f32(&[1], vec![-3.0]).unwrap());
         let (outs, stats) = run(&g, &p, &env, &feeds, &["live"]).unwrap();

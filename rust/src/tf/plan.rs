@@ -214,11 +214,9 @@ impl ExecutionPlan {
                             }
                         },
                         Some(Placement::Device { device, kernel_object }) => {
-                            let queue = env.queues.get(device).ok_or_else(|| {
-                                HsaError::Runtime(format!("no queue for device {device}"))
-                            })?;
+                            let (queue, _route) = env.route(*device, *kernel_object)?;
                             let outs =
-                                env.runtime.dispatch_sync(queue, *kernel_object, inputs)?;
+                                env.runtime.dispatch_sync(&queue, *kernel_object, inputs)?;
                             // Shape checked below (shared with the reshape branch).
                             check_kernel_output(&node.name, &[], outs)?
                         }
@@ -550,7 +548,10 @@ impl ExecutionPlan {
         let mut ready: VecDeque<usize> = (0..self.steps.len())
             .filter(|&i| self.steps[i].num_deps == 0)
             .collect();
-        let mut inflight: VecDeque<(usize, Signal, KernelArgs)> = VecDeque::new();
+        // In-flight dispatches carry their route guard (if shard-routed)
+        // so the chosen agent's load gauge stays accurate until harvest.
+        type InFlightStep = (usize, Signal, KernelArgs, Option<crate::sharding::RouteGuard>);
+        let mut inflight: VecDeque<InFlightStep> = VecDeque::new();
         let mut done = 0usize;
 
         while done < self.steps.len() {
@@ -585,17 +586,17 @@ impl ExecutionPlan {
                         complete(i, &self.steps, &mut remaining, &mut ready, &mut done);
                     }
                     StepOp::Dispatch { device, kernel_object, fused, .. } => {
-                        let queue = env.queues.get(device).ok_or_else(|| {
-                            HsaError::Runtime(format!("no queue for device {device}"))
-                        })?;
+                        // Shard-routed per step: independent steps of one
+                        // replay fan out across the FPGA pool.
+                        let (queue, route) = env.route(*device, *kernel_object)?;
                         stats.dispatches += 1;
                         *stats.dispatches_by_device.entry(*device).or_insert(0) += 1;
                         if *fused {
                             stats.fused_dispatches += 1;
                         }
                         let (sig, args) =
-                            env.runtime.dispatch_async(queue, *kernel_object, ins)?;
-                        inflight.push_back((i, sig, args));
+                            env.runtime.dispatch_async(&queue, *kernel_object, ins)?;
+                        inflight.push_back((i, sig, args, route));
                     }
                 }
             }
@@ -603,8 +604,9 @@ impl ExecutionPlan {
                 break;
             }
             // Harvest the oldest in-flight dispatch (the others keep
-            // executing on their queues meanwhile).
-            let (i, sig, args) = inflight.pop_front().ok_or_else(|| {
+            // executing on their queues meanwhile). The route guard drops
+            // at the end of this harvest, retiring the agent's gauge.
+            let (i, sig, args, _route) = inflight.pop_front().ok_or_else(|| {
                 HsaError::Runtime("plan replay stalled with no work in flight (internal)".into())
             })?;
             sig.wait_eq(0, Some(crate::hsa::runtime::DISPATCH_TIMEOUT))?;
@@ -717,7 +719,7 @@ mod tests {
         let (rt, queues, reg) = cpu_env(true);
         let g = fc_relu_graph();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
         let x = Tensor::from_f32(&[2, 3], vec![1.0, -2.0, 0.5, 0.0, 3.0, -1.0]).unwrap();
 
         let plan =
@@ -742,7 +744,7 @@ mod tests {
         let (rt, queues, reg) = cpu_env(false);
         let g = fc_relu_graph();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
         let plan =
             ExecutionPlan::compile(&g, &p, &reg, &env, &["out"], PlanOptions::default())
                 .unwrap();
@@ -772,7 +774,7 @@ mod tests {
         g.add("out", OpKind::Add, &[x, r]).unwrap();
         g.finalize().unwrap();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
 
         let plan =
             ExecutionPlan::compile(&g, &p, &reg, &env, &["out"], PlanOptions::default())
@@ -809,7 +811,7 @@ mod tests {
         g.add("also_dead", OpKind::Softmax, &[live]).unwrap();
         g.finalize().unwrap();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
         let plan =
             ExecutionPlan::compile(&g, &p, &reg, &env, &["live"], PlanOptions::default())
                 .unwrap();
@@ -840,7 +842,7 @@ mod tests {
         g.add("sum", OpKind::Add, &[a, b]).unwrap();
         g.finalize().unwrap();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
         let plan =
             ExecutionPlan::compile(&g, &p, &reg, &env, &["sum"], PlanOptions::default())
                 .unwrap();
@@ -864,7 +866,7 @@ mod tests {
         let (rt, queues, reg) = cpu_env(true);
         let g = fc_relu_graph();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
         // Fetching "y" blocks fusion and pins y's slot for the whole run.
         let plan =
             ExecutionPlan::compile(&g, &p, &reg, &env, &["out", "y"], PlanOptions::default())
@@ -884,7 +886,7 @@ mod tests {
         let (rt, queues, reg) = cpu_env(false);
         let g = fc_relu_graph();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
         let err =
             ExecutionPlan::compile(&g, &p, &reg, &env, &["zzz"], PlanOptions::default())
                 .unwrap_err();
@@ -897,7 +899,7 @@ mod tests {
         let (rt, queues, reg) = cpu_env(false);
         let g = fc_relu_graph();
         let p = place(&g, &reg, PlacerOptions::default()).unwrap();
-        let env = ExecEnv { runtime: &rt, queues: &queues };
+        let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
         let plan =
             ExecutionPlan::compile(&g, &p, &reg, &env, &["out"], PlanOptions::default())
                 .unwrap();

@@ -35,6 +35,7 @@ use crate::reconfig::manager::ReconfigStats;
 use crate::reconfig::policy::PolicyKind;
 use crate::runtime::artifact::ArtifactStore;
 use crate::runtime::pjrt::PjrtService;
+use crate::sharding::{FpgaPool, RouteGuard, Router, ShardAgentReport, ShardStrategy};
 use crate::tf::dtype::DType;
 use crate::tf::executor::{self, ExecEnv, RunStats};
 use crate::tf::graph::{Graph, NodeId, OpKind};
@@ -73,6 +74,18 @@ pub struct SessionOptions {
     /// Plan-compiler pass toggles (fusion, constant folding). Both on by
     /// default; `run` always goes through cached plans either way.
     pub plan: PlanOptions,
+    /// Number of independent FPGA agents (each with its own PR regions,
+    /// ICAP and eviction policy). 1 — the paper's single device — by
+    /// default; >1 shards FPGA dispatches across the pool via
+    /// `shard_strategy` (see [`crate::sharding`]).
+    pub fpga_pool: usize,
+    /// How the pool router assigns dispatches to agents. Irrelevant at
+    /// `fpga_pool == 1`.
+    pub shard_strategy: ShardStrategy,
+    /// Seed for stochastic components (today: the `random` eviction
+    /// policy; agent `i` of a pool derives `seed + i`), so multi-agent
+    /// runs are reproducible end to end.
+    pub seed: u64,
 }
 
 impl Default for SessionOptions {
@@ -88,6 +101,9 @@ impl Default for SessionOptions {
             trace: None,
             dispatch_workers: 1,
             plan: PlanOptions::default(),
+            fpga_pool: 1,
+            shard_strategy: ShardStrategy::KernelAffinity,
+            seed: 0xF06A,
         }
     }
 }
@@ -204,6 +220,9 @@ enum PendingState {
         args: KernelArgs,
         node_name: String,
         expected_shape: Vec<usize>,
+        /// Keeps the routed agent's in-flight gauge truthful until the
+        /// result is harvested (or the run is dropped unharvested).
+        _route: Option<RouteGuard>,
     },
 }
 
@@ -233,7 +252,9 @@ impl PendingRun {
     pub fn wait(self, timeout: Option<Duration>) -> Result<Vec<Tensor>> {
         match self.state {
             PendingState::Ready(outputs) => Ok(outputs),
-            PendingState::InFlight { completion, args, node_name, expected_shape } => {
+            PendingState::InFlight {
+                completion, args, node_name, expected_shape, _route,
+            } => {
                 completion.wait_eq(0, timeout)?;
                 let mut outs = match args.take_output() {
                     Some(Ok(outs)) => outs,
@@ -316,7 +337,9 @@ pub struct Session {
     queues: HashMap<DeviceType, Queue>,
     registry: KernelRegistry,
     cpu: Arc<CpuAgent>,
-    fpga: Arc<FpgaAgent>,
+    /// FPGA dispatch router over the agent pool (a pool of one for the
+    /// default single-device configuration).
+    router: Router,
     weights: Arc<WeightBank>,
     _pjrt: Option<PjrtService>,
     setup: SetupTiming,
@@ -390,12 +413,16 @@ impl Session {
             }
         }
 
-        // HSA bring-up: agents, kernels, queues, registry.
+        // HSA bring-up: agents (CPU + the FPGA pool), kernels, queues,
+        // registry. Every pool member gets its own PR regions, ICAP and
+        // eviction-policy instance (seeded per agent for reproducibility);
+        // roles register on all members under one shared kernel-object id
+        // so placement and compiled plans stay pool-agnostic.
         let t_hsa = Instant::now();
         let cpu = CpuAgent::with_defaults();
-        let fpga = FpgaAgent::new(FpgaConfig {
+        let pool = FpgaPool::new(opts.fpga_pool, |i| FpgaConfig {
             num_regions: opts.num_regions,
-            policy: opts.policy.build(0xF06A),
+            policy: opts.policy.build(opts.seed.wrapping_add(i as u64)),
             realtime: opts.realtime,
             realtime_scale: 1.0,
             trace: opts.trace.clone(),
@@ -403,7 +430,7 @@ impl Session {
         let mut registry = KernelRegistry::new();
         register_cpu_kernels(&cpu, &weights, &mut registry);
         register_fpga_roles(
-            &fpga,
+            &pool,
             &weights,
             pjrt.as_ref().map(|p| p.handle()),
             store.as_ref(),
@@ -412,7 +439,7 @@ impl Session {
 
         let runtime = HsaRuntime::builder()
             .with_agent(cpu.clone())
-            .with_agent(fpga.clone())
+            .with_fpga_pool(&pool)
             .build();
         let workers = opts.dispatch_workers.max(1);
         let mut queues = HashMap::new();
@@ -424,14 +451,24 @@ impl Session {
                 workers,
             ),
         );
-        queues.insert(
-            DeviceType::Fpga,
-            runtime.create_queue_with_processors(
-                runtime.agent_by_type(DeviceType::Fpga)?,
-                256,
-                workers,
-            ),
-        );
+        // One AQL queue (with its own processor pool) per FPGA agent; the
+        // router owns the full set. The per-device map keeps agent 0's
+        // queue so router-less paths (`Session::queue`, bare ExecEnvs)
+        // stay valid.
+        let fpga_slots: Vec<(Arc<FpgaAgent>, Queue)> = pool
+            .agents()
+            .iter()
+            .map(|agent| {
+                let q = runtime.create_queue_with_processors(
+                    Arc::clone(agent) as Arc<dyn crate::hsa::agent::Agent>,
+                    256,
+                    workers,
+                );
+                (Arc::clone(agent), q)
+            })
+            .collect();
+        queues.insert(DeviceType::Fpga, fpga_slots[0].1.clone());
+        let router = Router::new(fpga_slots, opts.shard_strategy);
         setup.hsa_bringup_us = t_hsa.elapsed().as_micros();
 
         let placement = place(
@@ -451,7 +488,7 @@ impl Session {
             queues,
             registry,
             cpu,
-            fpga,
+            router,
             weights,
             _pjrt: pjrt,
             setup,
@@ -506,7 +543,7 @@ impl Session {
         let feeds: HashMap<String, Tensor> =
             feeds.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
         let plan = self.cached_plan(&feeds, fetches)?;
-        let env = ExecEnv { runtime: &self.runtime, queues: &self.queues };
+        let env = ExecEnv { runtime: &self.runtime, queues: &self.queues, router: Some(&self.router) };
         plan.replay(&env, &feeds)
     }
 
@@ -521,7 +558,7 @@ impl Session {
     ) -> Result<(Vec<Tensor>, RunStats)> {
         let feeds: HashMap<String, Tensor> =
             feeds.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
-        let env = ExecEnv { runtime: &self.runtime, queues: &self.queues };
+        let env = ExecEnv { runtime: &self.runtime, queues: &self.queues, router: Some(&self.router) };
         executor::run(&self.graph, &self.placement, &env, &feeds, fetches)
     }
 
@@ -557,7 +594,7 @@ impl Session {
             return Ok(Arc::clone(plan));
         }
         let t0 = Instant::now();
-        let env = ExecEnv { runtime: &self.runtime, queues: &self.queues };
+        let env = ExecEnv { runtime: &self.runtime, queues: &self.queues, router: Some(&self.router) };
         let plan = Arc::new(ExecutionPlan::compile(
             &self.graph,
             &self.placement,
@@ -653,17 +690,23 @@ impl Session {
                 None => return Ok(None),
             }
         }
-        let queue = self
-            .queues
-            .get(&device)
-            .ok_or_else(|| HsaError::Runtime(format!("no queue for {device}")))?;
-        let (completion, args) = self.runtime.dispatch_async(queue, kernel_object, inputs)?;
+        // FPGA dispatches shard across the pool: each in-flight serving
+        // batch can land on a different agent, which is what lets separate
+        // micro-batch lanes execute truly in parallel at pool > 1.
+        let env = ExecEnv {
+            runtime: &self.runtime,
+            queues: &self.queues,
+            router: Some(&self.router),
+        };
+        let (queue, route) = env.route(device, kernel_object)?;
+        let (completion, args) = self.runtime.dispatch_async(&queue, kernel_object, inputs)?;
         Ok(Some(PendingRun {
             state: PendingState::InFlight {
                 completion,
                 args,
                 node_name: node.name.clone(),
                 expected_shape: node.out_shape.clone(),
+                _route: route,
             },
         }))
     }
@@ -698,12 +741,15 @@ impl Session {
         }
     }
 
-    /// Queued-demand hint for the FPGA eviction policy: `queued` requests
-    /// are waiting on `kernel` (0 clears the hint). No-op when the kernel
-    /// has no FPGA implementation or the policy is demand-blind.
+    /// Queued-demand hint for the FPGA eviction policies: `queued`
+    /// requests are waiting on `kernel` (0 clears the hint). The hint
+    /// reaches *every* pool agent's policy and the router's replication
+    /// heuristic (`KernelAffinity` spills hot kernels onto idle agents).
+    /// No-op when the kernel has no FPGA implementation; demand-blind
+    /// policies ignore it.
     pub fn hint_demand(&self, kernel: &str, queued: u64) {
         if let Ok(entry) = self.registry.require(kernel, DeviceType::Fpga) {
-            self.fpga.hint_demand(entry.kernel_object, queued);
+            self.router.hint_demand(entry.kernel_object, queued);
         }
     }
 
@@ -713,8 +759,30 @@ impl Session {
         self.setup
     }
 
+    /// Pooled reconfiguration stats: the field-wise sum over every FPGA
+    /// agent (identical to the single agent's stats at pool size 1).
     pub fn reconfig_stats(&self) -> ReconfigStats {
-        self.fpga.reconfig_stats()
+        let mut total = ReconfigStats::default();
+        for agent in self.router.agents() {
+            total.accumulate(&agent.reconfig_stats());
+        }
+        total
+    }
+
+    /// Per-agent reconfiguration stats, in pool order.
+    pub fn reconfig_stats_per_agent(&self) -> Vec<ReconfigStats> {
+        self.router.agents().map(|a| a.reconfig_stats()).collect()
+    }
+
+    /// Per-agent routing/dispatch accounting (dispatches, in-flight
+    /// high-water, reconfig stats), in pool order.
+    pub fn shard_stats(&self) -> Vec<ShardAgentReport> {
+        self.router.report()
+    }
+
+    /// The FPGA dispatch router (pool membership, strategy, rollups).
+    pub fn router(&self) -> &Router {
+        &self.router
     }
 
     pub fn graph(&self) -> &Graph {
@@ -737,8 +805,10 @@ impl Session {
         &self.cpu
     }
 
+    /// First (or only) FPGA agent of the pool — the historical accessor;
+    /// use [`Session::shard_stats`] / [`Session::router`] for the others.
     pub fn fpga_agent(&self) -> &Arc<FpgaAgent> {
-        &self.fpga
+        self.router.agent(0)
     }
 
     pub fn hsa_runtime(&self) -> &HsaRuntime {
@@ -758,11 +828,13 @@ impl Session {
         inputs: Vec<Tensor>,
     ) -> Result<Vec<Tensor>> {
         let entry = self.registry.require(kernel, device)?;
-        let queue = self
-            .queues
-            .get(&device)
-            .ok_or_else(|| HsaError::Runtime(format!("no queue for {device}")))?;
-        self.runtime.dispatch_sync(queue, entry.kernel_object, inputs)
+        let env = ExecEnv {
+            runtime: &self.runtime,
+            queues: &self.queues,
+            router: Some(&self.router),
+        };
+        let (queue, _route) = env.route(device, entry.kernel_object)?;
+        self.runtime.dispatch_sync(&queue, entry.kernel_object, inputs)
     }
 
     pub fn shutdown(&self) {
@@ -1103,8 +1175,10 @@ fn register_cpu_kernels(
     );
 }
 
+/// Register every FPGA role on **all** pool agents (shared kernel-object
+/// ids — see [`FpgaPool::register_role`]) and in the kernel registry.
 fn register_fpga_roles(
-    fpga: &Arc<FpgaAgent>,
+    fpga: &FpgaPool,
     weights: &Arc<WeightBank>,
     pjrt: Option<crate::runtime::pjrt::PjrtHandle>,
     store: Option<&ArtifactStore>,
@@ -1467,6 +1541,113 @@ mod tests {
         assert_eq!(plan_stats.dispatches, 1, "relu(const) was folded at compile");
         let (_, interp_stats) = sess.run_interpreted(&[("x", x)], &["out"]).unwrap();
         assert_eq!(interp_stats.dispatches, 2);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn pooled_session_matches_single_agent_bitwise() {
+        let x = Tensor::from_f32(&[4, 8], (0..32).map(|v| v as f32 * 0.17 - 2.0).collect())
+            .unwrap();
+        let single = Session::new(fc_graph(), SessionOptions::native_only()).unwrap();
+        let want = single.run(&[("x", x.clone())], &["out"]).unwrap();
+        for strategy in ShardStrategy::ALL {
+            let opts = SessionOptions {
+                fpga_pool: 2,
+                shard_strategy: strategy,
+                ..SessionOptions::native_only()
+            };
+            let pooled = Session::new(fc_graph(), opts).unwrap();
+            let got = pooled.run(&[("x", x.clone())], &["out"]).unwrap();
+            assert_eq!(want[0], got[0], "pool-2 {strategy:?} diverged from single");
+            pooled.shutdown();
+        }
+        single.shutdown();
+    }
+
+    #[test]
+    fn round_robin_pool_spreads_dispatches_across_agents() {
+        let opts = SessionOptions {
+            fpga_pool: 2,
+            shard_strategy: ShardStrategy::RoundRobin,
+            ..SessionOptions::native_only()
+        };
+        let sess = Session::new(fc_graph(), opts).unwrap();
+        let x = Tensor::from_f32(&[4, 8], vec![0.5; 32]).unwrap();
+        for _ in 0..4 {
+            sess.run(&[("x", x.clone())], &["out"]).unwrap();
+        }
+        let per_agent = sess.reconfig_stats_per_agent();
+        assert_eq!(per_agent.len(), 2);
+        assert_eq!(per_agent[0].dispatches, 2, "round robin: half each");
+        assert_eq!(per_agent[1].dispatches, 2);
+        let rollup = sess.reconfig_stats();
+        assert_eq!(rollup.dispatches, 4, "rollup sums the pool");
+        // Each agent paid its own cold reconfiguration.
+        assert_eq!(rollup.misses, 2);
+        let shard = sess.shard_stats();
+        assert_eq!(shard.len(), 2);
+        assert_eq!(shard[0].agent, "ultra96-pl-0");
+        assert_eq!(shard[0].dispatches + shard[1].dispatches, 4);
+        assert_eq!(sess.router().rollup().inflight, 0, "all retired");
+        sess.shutdown();
+    }
+
+    #[test]
+    fn kernel_affinity_pool_avoids_reconfig_churn() {
+        // Two FPGA kernels, one region per agent, pool of 2: affinity
+        // settles each kernel on its own agent, so after the two cold
+        // loads every dispatch is a residency hit. (A single agent with
+        // one region would miss on every alternation.)
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 28, 28], DType::I16).unwrap();
+        g.add("c5", OpKind::Conv5x5I16, &[x]).unwrap();
+        g.add("c3", OpKind::Conv3x3I16, &[x]).unwrap();
+        let opts = SessionOptions {
+            fpga_pool: 2,
+            num_regions: 1,
+            shard_strategy: ShardStrategy::KernelAffinity,
+            ..SessionOptions::native_only()
+        };
+        let sess = Session::new(g, opts).unwrap();
+        let mut vals = vec![0i16; 784];
+        let mut rng = Rng::new(5);
+        rng.fill_i16(&mut vals, -256, 255);
+        let x = Tensor::from_i16(&[1, 28, 28], vals).unwrap();
+        for _ in 0..5 {
+            sess.run(&[("x", x.clone())], &["c5", "c3"]).unwrap();
+        }
+        let s = sess.reconfig_stats();
+        assert_eq!(s.dispatches, 10);
+        assert_eq!(s.misses, 2, "one cold load per kernel, zero thrash");
+        assert_eq!(s.evictions, 0);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn run_async_shards_across_pool() {
+        let opts = SessionOptions {
+            fpga_pool: 2,
+            shard_strategy: ShardStrategy::RoundRobin,
+            ..SessionOptions::native_only()
+        };
+        let sess = Session::new(fc_graph(), opts).unwrap();
+        let pendings: Vec<PendingRun> = (0..4)
+            .map(|i| {
+                let x = Tensor::from_f32(&[4, 8], vec![i as f32; 32]).unwrap();
+                sess.run_async(&[("x", x)], &["y"]).unwrap()
+            })
+            .collect();
+        for (i, p) in pendings.into_iter().enumerate() {
+            let out = p.wait(Some(Duration::from_secs(30))).unwrap();
+            let want = [4.0 * i as f32 + 1.0, 4.0 * i as f32 - 1.0];
+            for row in out[0].as_f32().unwrap().chunks(2) {
+                assert_eq!(row, &want, "request {i} crossed agents");
+            }
+        }
+        let per_agent = sess.reconfig_stats_per_agent();
+        assert_eq!(per_agent[0].dispatches, 2);
+        assert_eq!(per_agent[1].dispatches, 2);
+        assert_eq!(sess.router().rollup().inflight, 0);
         sess.shutdown();
     }
 

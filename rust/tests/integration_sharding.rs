@@ -1,0 +1,169 @@
+//! Failover / eviction-storm integration: serve a bundle whose FPGA
+//! working set is larger than the pool's total PR regions, under every
+//! eviction policy × shard strategy combination that matters, and assert
+//! the pipeline keeps making progress with correct outputs and bounded
+//! reconfiguration thrash.
+//!
+//! The layered MNIST bundle dispatches four distinct FPGA kernels per
+//! request (conv1+relu, conv2+relu, fc1+relu, fc2); a pool of two agents
+//! with one PR region each can hold only two at a time, so *every*
+//! request forces reconfigurations somewhere — the storm. The invariants:
+//!
+//! * forward progress — every request completes within the timeout (no
+//!   deadlock between routing, reconfiguration and completion);
+//! * correctness — pooled logits are bitwise identical to a single-agent
+//!   baseline (identical deterministic weights everywhere);
+//! * bounded thrash — the reconfiguration accounting closes: at most one
+//!   reconfig per dispatch, at least one cold load per kernel, and the
+//!   in-flight gauges all return to zero.
+
+use std::time::Duration;
+use tf_fpga::reconfig::policy::PolicyKind;
+use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig, BatchPolicy, ModelSpec};
+use tf_fpga::sharding::ShardStrategy;
+use tf_fpga::tf::model::ModelBundle;
+use tf_fpga::tf::session::SessionOptions;
+
+const REQUESTS: usize = 12;
+const RECV_TIMEOUT: Duration = Duration::from_secs(120);
+
+fn layered_spec() -> ModelSpec {
+    // max_batch 1: the layered graph is rank-3 (batch dim must stay 1).
+    ModelSpec::from_bundle(
+        "layers",
+        ModelBundle::mnist_layers_demo(),
+        BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(1) },
+    )
+}
+
+fn images() -> Vec<Vec<f32>> {
+    (0..REQUESTS)
+        .map(|i| {
+            (0..784)
+                .map(|p| ((i * 37 + p * 13) % 255) as f32 / 255.0 - 0.5)
+                .collect()
+        })
+        .collect()
+}
+
+fn serve_all(
+    srv: &AsyncInferenceServer,
+    images: &[Vec<f32>],
+    tag: &str,
+) -> Vec<Vec<f32>> {
+    // Submit everything up front (the storm: all lanes demand regions at
+    // once), then harvest with a deadline so a routing/reconfig deadlock
+    // fails the test instead of hanging it.
+    let rxs: Vec<_> = images
+        .iter()
+        .map(|im| srv.infer_async("layers", im.clone()).expect("submit"))
+        .collect();
+    rxs.into_iter()
+        .enumerate()
+        .map(|(i, rx)| {
+            rx.recv_timeout(RECV_TIMEOUT)
+                .unwrap_or_else(|_| panic!("{tag}: request {i} stalled (deadlock?)"))
+                .unwrap_or_else(|e| panic!("{tag}: request {i} failed: {e}"))
+        })
+        .collect()
+}
+
+#[test]
+fn eviction_storm_on_undersized_pool_stays_correct_and_live() {
+    let images = images();
+
+    // Single-agent baseline with ample regions: the reference logits.
+    let mut baseline = AsyncInferenceServer::start(AsyncServerConfig {
+        models: vec![layered_spec()],
+        session: SessionOptions {
+            num_regions: 4,
+            dispatch_workers: 1,
+            ..SessionOptions::native_only()
+        },
+        pipeline_depth: 2,
+    })
+    .expect("baseline server");
+    let want = serve_all(&baseline, &images, "baseline");
+    baseline.stop();
+
+    for policy in [PolicyKind::Lru, PolicyKind::QueueAware] {
+        for strategy in ShardStrategy::ALL {
+            let tag = format!("{policy:?}/{strategy:?}");
+            let mut srv = AsyncInferenceServer::start(AsyncServerConfig {
+                models: vec![layered_spec()],
+                session: SessionOptions {
+                    fpga_pool: 2,
+                    num_regions: 1, // 2 regions total < 4-kernel working set
+                    policy,
+                    shard_strategy: strategy,
+                    dispatch_workers: 1,
+                    ..SessionOptions::native_only()
+                },
+                pipeline_depth: 4,
+            })
+            .unwrap_or_else(|e| panic!("{tag}: server start: {e}"));
+
+            let got = serve_all(&srv, &images, &tag);
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a, b, "{tag}: request {i} logits diverged under the storm");
+            }
+
+            let rep = srv.report();
+            assert_eq!(rep.completed, REQUESTS as u64, "{tag}: {rep:?}");
+            assert_eq!(rep.failed, 0, "{tag}: {rep:?}");
+            let rc = &rep.reconfig;
+            assert!(rc.dispatches > 0, "{tag}: nothing reached the FPGA pool");
+            // Bounded thrash: a dispatch triggers at most one reconfig,
+            // and the four-kernel working set must have cold-loaded at
+            // least once each (somewhere in the pool).
+            assert!(
+                rc.misses <= rc.dispatches,
+                "{tag}: more reconfigs than dispatches: {rc:?}"
+            );
+            assert!(rc.misses >= 4, "{tag}: working set never loaded: {rc:?}");
+            assert_eq!(rc.hits + rc.misses, rc.dispatches, "{tag}: {rc:?}");
+            // Both report rows exist and the gauges closed.
+            assert_eq!(rep.pool.len(), 2, "{tag}");
+            assert_eq!(
+                rep.pool.iter().map(|p| p.inflight).sum::<u64>(),
+                0,
+                "{tag}: in-flight leaked: {:?}",
+                rep.pool
+            );
+            srv.stop();
+        }
+    }
+}
+
+/// The same storm at pool sizes 1..=3 under kernel-affinity routing:
+/// adding agents must never *increase* total reconfiguration misses for
+/// the same request trace (more total regions → the affinity router can
+/// pin kernels to agents instead of cycling one undersized device).
+#[test]
+fn kernel_affinity_reconfig_thrash_shrinks_as_the_pool_grows() {
+    let images = images();
+    let mut misses_by_pool = Vec::new();
+    for pool in 1..=3usize {
+        let mut srv = AsyncInferenceServer::start(AsyncServerConfig {
+            models: vec![layered_spec()],
+            session: SessionOptions {
+                fpga_pool: pool,
+                num_regions: 1,
+                shard_strategy: ShardStrategy::KernelAffinity,
+                dispatch_workers: 1,
+                ..SessionOptions::native_only()
+            },
+            pipeline_depth: 1, // serialized: routing sees settled residency
+        })
+        .unwrap_or_else(|e| panic!("pool {pool}: {e}"));
+        let _ = serve_all(&srv, &images, &format!("pool-{pool}"));
+        let rep = srv.report();
+        assert_eq!(rep.completed, REQUESTS as u64);
+        misses_by_pool.push(rep.reconfig.misses);
+        srv.stop();
+    }
+    assert!(
+        misses_by_pool.windows(2).all(|w| w[1] <= w[0]),
+        "reconfig misses should not grow with pool size: {misses_by_pool:?}"
+    );
+}

@@ -333,7 +333,8 @@ mod plan_equivalence {
     /// Random small rank-2 f32 graphs: chains and diamonds of
     /// Relu/Softmax/FC/Add/Reshape over a placeholder plus random
     /// constants (which make const-only subgraphs for the folding pass).
-    struct GraphCase;
+    /// (`pub`: the sharding properties below reuse the same case space.)
+    pub struct GraphCase;
 
     impl Gen for GraphCase {
         type Value = (u64, Vec<u8>);
@@ -357,7 +358,7 @@ mod plan_equivalence {
 
     /// Build the graph; returns it plus the fetch names (the final node
     /// and one random interior node).
-    fn build(seed: u64, ops: &[u8]) -> (Graph, Vec<String>) {
+    pub fn build(seed: u64, ops: &[u8]) -> (Graph, Vec<String>) {
         let mut rng = Rng::new(seed);
         let mut g = Graph::new();
         let x = g.placeholder("x", &[2, 3], DType::F32).unwrap();
@@ -467,7 +468,7 @@ mod plan_equivalence {
 
             // ...and the compiled-plan path produces bitwise-identical
             // outputs on both sides of the round trip.
-            let env = ExecEnv { runtime: &rt, queues: &queues };
+            let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
             let mut xv = vec![0f32; 6];
             Rng::new(seed ^ 0x5A5A).fill_f32_normal(&mut xv, 0.0, 1.0);
             let mut feeds = HashMap::new();
@@ -501,7 +502,7 @@ mod plan_equivalence {
             let (rt, queues, reg) = cpu_env();
             let placement =
                 place(&g, &reg, PlacerOptions::default()).map_err(|e| e.to_string())?;
-            let env = ExecEnv { runtime: &rt, queues: &queues };
+            let env = ExecEnv { runtime: &rt, queues: &queues, router: None };
             let mut xv = vec![0f32; 6];
             Rng::new(seed ^ 0x9E3779B9).fill_f32_normal(&mut xv, 0.0, 1.0);
             let mut feeds = HashMap::new();
@@ -531,6 +532,180 @@ mod plan_equivalence {
                 }
             }
             rt.shutdown();
+            Ok(())
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-FPGA sharding: pooled replay ≡ single-agent replay, and
+// deterministic kernel-affinity placement
+// ---------------------------------------------------------------------------
+
+mod sharding_props {
+    use tf_fpga::sharding::ShardStrategy;
+    use tf_fpga::tf::session::{Session, SessionOptions};
+    use tf_fpga::tf::tensor::Tensor;
+    use tf_fpga::util::prng::Rng;
+    use tf_fpga::util::quickcheck::forall;
+
+    /// For random graphs, any pool size and every shard strategy, pooled
+    /// replay is bitwise identical to single-agent replay: sharding moves
+    /// dispatches between agents, never changes what they compute. (All
+    /// pool members run the same native numerics, so any divergence means
+    /// the router corrupted routing, inputs or result delivery.)
+    #[test]
+    fn prop_pooled_replay_bitwise_matches_single_agent() {
+        forall(17, 12, &super::plan_equivalence::GraphCase, |(seed, ops)| {
+            let (g, fetches) = super::plan_equivalence::build(*seed, ops);
+            let fetch_refs: Vec<&str> = fetches.iter().map(|s| s.as_str()).collect();
+            let mut xv = vec![0f32; 6];
+            Rng::new(seed ^ 0x0055AA).fill_f32_normal(&mut xv, 0.0, 1.0);
+            let x = Tensor::from_f32(&[2, 3], xv).map_err(|e| e.to_string())?;
+            let feeds = [("x", x)];
+
+            let single = Session::new(g.clone(), SessionOptions::native_only())
+                .map_err(|e| format!("single session: {e}"))?;
+            let want = single
+                .run(&feeds, &fetch_refs)
+                .map_err(|e| format!("single run: {e}"))?;
+            single.shutdown();
+
+            let pool_size = 2 + (seed % 3) as usize; // 2..=4 agents
+            for strategy in ShardStrategy::ALL {
+                let opts = SessionOptions {
+                    fpga_pool: pool_size,
+                    shard_strategy: strategy,
+                    ..SessionOptions::native_only()
+                };
+                let pooled = Session::new(g.clone(), opts)
+                    .map_err(|e| format!("pool-{pool_size} session: {e}"))?;
+                // Two replays per pooled session: the second exercises
+                // warm residency / different routing state.
+                for round in 0..2 {
+                    let got = pooled
+                        .run(&feeds, &fetch_refs)
+                        .map_err(|e| format!("{strategy:?} run: {e}"))?;
+                    for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                        if a != b {
+                            return Err(format!(
+                                "fetch '{}' diverged on pool {pool_size} \
+                                 {strategy:?} round {round}",
+                                fetch_refs[k]
+                            ));
+                        }
+                    }
+                }
+                if pooled.router().rollup().inflight != 0 {
+                    return Err(format!("{strategy:?}: in-flight gauge leaked"));
+                }
+                pooled.shutdown();
+            }
+            Ok(())
+        });
+    }
+
+    /// Kernel-affinity routing is a pure function of the observed call
+    /// sequence: two routers fed the identical interleaving of route /
+    /// retire / demand-hint calls make identical placements.
+    #[test]
+    fn prop_kernel_affinity_placement_is_deterministic() {
+        use std::collections::VecDeque;
+        use std::sync::Arc;
+        use tf_fpga::fpga::device::{ComputeBinding, FpgaConfig};
+        use tf_fpga::fpga::roles::paper_roles;
+        use tf_fpga::hsa::queue::Queue;
+        use tf_fpga::reconfig::policy::PolicyKind;
+        use tf_fpga::sharding::{FpgaPool, RouteGuard, Router};
+        use tf_fpga::util::quickcheck::{U64Range, VecGen};
+
+        struct Harness {
+            router: Router,
+            ids: Vec<u64>,
+            guards: VecDeque<RouteGuard>,
+        }
+
+        impl Harness {
+            fn new(agents: usize) -> Harness {
+                let pool = FpgaPool::new(agents, |i| FpgaConfig {
+                    num_regions: 1,
+                    policy: PolicyKind::Lru.build(i as u64),
+                    realtime: false,
+                    realtime_scale: 1.0,
+                    trace: None,
+                });
+                let echo = ComputeBinding::Native(Arc::new(
+                    |ins: &[tf_fpga::tf::tensor::Tensor]| Ok(ins.to_vec()),
+                ));
+                let ids: Vec<u64> = paper_roles()
+                    .into_iter()
+                    .take(3)
+                    .map(|r| pool.register_role(r, echo.clone()))
+                    .collect();
+                let slots = pool
+                    .agents()
+                    .iter()
+                    .map(|a| (Arc::clone(a), Queue::new(8)))
+                    .collect();
+                Harness {
+                    router: Router::new(slots, ShardStrategy::KernelAffinity),
+                    ids,
+                    guards: VecDeque::new(),
+                }
+            }
+
+            /// Apply one op; `Some(agent)` when the op was a route. A
+            /// routed dispatch is also *executed* on the chosen agent so
+            /// residency evolves exactly as it would in a real session.
+            fn apply(&mut self, op: u64) -> Option<usize> {
+                use tf_fpga::hsa::agent::Agent;
+                use tf_fpga::hsa::packet::AqlPacket;
+                use tf_fpga::hsa::signal::Signal;
+                match op % 4 {
+                    0 | 1 => {
+                        let ko = self.ids[(op / 4) as usize % self.ids.len()];
+                        let (idx, _q, guard) = self.router.route(ko);
+                        let x = tf_fpga::tf::tensor::Tensor::from_f32(
+                            &[1],
+                            vec![op as f32],
+                        )
+                        .unwrap();
+                        let (pkt, _args) =
+                            AqlPacket::dispatch(ko, vec![x], Signal::new(1));
+                        if let AqlPacket::KernelDispatch(d) = pkt {
+                            self.router.agent(idx).execute(&d).unwrap();
+                        }
+                        self.guards.push_back(guard);
+                        Some(idx)
+                    }
+                    2 => {
+                        self.guards.pop_front(); // retire the oldest
+                        None
+                    }
+                    _ => {
+                        let ko = self.ids[(op / 4) as usize % self.ids.len()];
+                        self.router.hint_demand(ko, op % 7);
+                        None
+                    }
+                }
+            }
+        }
+
+        let gen = VecGen { inner: U64Range(0, 1 << 20), min_len: 1, max_len: 120 };
+        forall(19, 40, &gen, |ops| {
+            let agents = 2 + (ops.len() % 3); // 2..=4
+            let mut a = Harness::new(agents);
+            let mut b = Harness::new(agents);
+            for (step, &op) in ops.iter().enumerate() {
+                let pa = a.apply(op);
+                let pb = b.apply(op);
+                if pa != pb {
+                    return Err(format!(
+                        "placement diverged at step {step}: {pa:?} vs {pb:?} \
+                         (agents {agents})"
+                    ));
+                }
+            }
             Ok(())
         });
     }
