@@ -1,0 +1,146 @@
+//! Closed-loop loopback benchmark of the HTTP serving frontend:
+//! in-process `AsyncInferenceServer::infer` vs the same pipeline behind
+//! `net::HttpServer` + `NetClient` keep-alive connections, at batch sizes
+//! 1 and 8. `cargo bench --bench http_serving`.
+//!
+//! The interesting number is the *overhead factor* — how much of the
+//! pipeline's throughput survives the JSON + TCP round trip. A closed
+//! loop (every client blocks on its reply) keeps the comparison honest:
+//! both sides see identical offered concurrency. Environment knobs:
+//! `HTTP_N` total requests per configuration (default 256),
+//! `HTTP_CLIENTS` concurrent clients (default 8).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tf_fpga::net::{HttpServer, HttpServerConfig, NetClient};
+use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig, BatchPolicy, ModelSpec};
+use tf_fpga::tf::session::SessionOptions;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn config(max_batch: usize) -> AsyncServerConfig {
+    AsyncServerConfig {
+        models: vec![ModelSpec::new(
+            "mnist",
+            BatchPolicy { max_batch, max_delay: Duration::from_millis(2) },
+        )],
+        session: SessionOptions { dispatch_workers: 4, ..SessionOptions::native_only() },
+        pipeline_depth: 4,
+    }
+}
+
+fn sample(seed: usize) -> Vec<f32> {
+    (0..784).map(|j| ((seed * 131 + j) % 255) as f32 / 255.0).collect()
+}
+
+/// Drive `total` closed-loop requests from `clients` threads.
+fn drive(clients: usize, total: usize, infer: impl Fn(usize, Vec<f32>) + Send + Sync + 'static) -> Duration {
+    let infer = Arc::new(infer);
+    let per_client = total / clients;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let infer = Arc::clone(&infer);
+            std::thread::spawn(move || {
+                for i in 0..per_client {
+                    infer(c, sample(c * per_client + i));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed()
+}
+
+fn main() {
+    let total = env_usize("HTTP_N", 256);
+    let clients = env_usize("HTTP_CLIENTS", 8);
+    let total = (total / clients).max(1) * clients;
+
+    println!("http_serving: {total} requests, {clients} closed-loop clients\n");
+    println!(
+        "{:<12} {:>14} {:>14} {:>10}   (req/s; http/in-process)",
+        "batch size", "in-process", "http", "factor"
+    );
+
+    let mut sane = true;
+    for max_batch in [1usize, 8] {
+        // --- in-process baseline: same pipeline, no network ---
+        let inproc_rps = {
+            let srv = Arc::new(AsyncInferenceServer::start(config(max_batch)).expect("server"));
+            let s2 = Arc::clone(&srv);
+            let elapsed = drive(clients, total, move |_c, img| {
+                s2.infer("mnist", img).expect("infer");
+            });
+            let rps = total as f64 / elapsed.as_secs_f64();
+            if let Ok(mut s) = Arc::try_unwrap(srv) {
+                s.stop();
+            }
+            rps
+        };
+
+        // --- over the wire: one keep-alive connection per client ---
+        let http_rps = {
+            let srv = AsyncInferenceServer::start(config(max_batch)).expect("server");
+            let server = HttpServer::start(
+                srv,
+                HttpServerConfig {
+                    workers: clients,
+                    max_pending: total.max(64),
+                    ..HttpServerConfig::default()
+                },
+            )
+            .expect("http server");
+            let addr = server.local_addr();
+            let per_client = total / clients;
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    std::thread::spawn(move || {
+                        let mut client = NetClient::connect(addr).expect("connect");
+                        for i in 0..per_client {
+                            let s = sample(c * per_client + i);
+                            let resp = client
+                                .predict("mnist", &[s.as_slice()], &[])
+                                .expect("predict io");
+                            assert_eq!(resp.status, 200, "{}", resp.body);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let elapsed = t0.elapsed();
+            let rep = server.report();
+            let net = server.net_snapshot();
+            println!(
+                "  [http b{max_batch}: fill {:.1}, max in-flight {}, p99 {} µs, \
+                 shed {}, {} connections]",
+                rep.mean_batch_fill,
+                rep.max_inflight,
+                rep.latency_us_p99,
+                net.shed_pending + net.shed_tenant,
+                net.connections
+            );
+            sane &= rep.failed == 0 && net.responses_with(200) as usize == total;
+            drop(server); // graceful drain
+            total as f64 / elapsed.as_secs_f64()
+        };
+
+        let factor = http_rps / inproc_rps;
+        sane &= factor > 0.05; // the wire may cost, but not 20x
+        println!("{:<12} {:>14.1} {:>14.1} {:>9.2}x", max_batch, inproc_rps, http_rps, factor);
+    }
+
+    if sane {
+        println!("\nhttp_serving: OK (all requests answered 200, overhead within bounds)");
+    } else {
+        println!("\nhttp_serving: WARNING — failed requests or pathological overhead");
+        std::process::exit(1);
+    }
+}

@@ -82,12 +82,18 @@
 //! session (`SessionOptions::fpga_pool`), with a [`sharding::Router`]
 //! assigning each dispatch to an agent — round-robin, least-loaded, or
 //! kernel-affinity (replica-aware, reconfiguration-avoiding) routing.
+//!
+//! Remote clients reach all of the above through [`net`]: a std-only
+//! HTTP/1.1 frontend (`tf-fpga serve --http <addr>`) with per-tenant
+//! rate limiting, bounded-queue load shedding (`429` + `Retry-After`),
+//! pre-dispatch deadline cancellation and Prometheus `/metrics`.
 
 pub mod bench;
 pub mod cpu;
 pub mod fpga;
 pub mod hsa;
 pub mod metrics;
+pub mod net;
 pub mod ops;
 pub mod reconfig;
 pub mod runtime;

@@ -14,6 +14,7 @@
 //! tf-fpga export-demo [dir]         # write demo model bundles
 //! tf-fpga serve --model <dir>       # serve an exported bundle (async)
 //! tf-fpga serve --fpga-pool 2       # shard serving across an FPGA pool
+//! tf-fpga serve --http 0.0.0.0:8080 # HTTP frontend with admission control
 //! ```
 
 use anyhow::{bail, Result};
@@ -69,20 +70,29 @@ fn main() -> Result<()> {
             flag_usize(&flags, "batch-size", 32),
             session_opts_from_flags(&flags)?,
         ),
+        "serve" if flags.contains_key("http") => serve_http(
+            match flags.get("http").map(String::as_str) {
+                Some("true") | None => "127.0.0.1:8080".to_string(),
+                Some(addr) => addr.to_string(),
+            },
+            flag_usize(&flags, "max-pending", 64),
+            flag_usize(&flags, "tenant-rps", 0),
+            flag_usize(&flags, "http-workers", 8),
+            flag_usize(&flags, "serve-secs", 0),
+            flag_usize(&flags, "max-batch", 16),
+            flag_usize(&flags, "max-delay-ms", 3),
+            flag_usize(&flags, "pipeline-depth", 4),
+            flag_usize(&flags, "workers", 2),
+            flag_usize(&flags, "fpga-pool", 1),
+            shard_strategy_from_flags(&flags)?,
+            flags.get("model").cloned(),
+        ),
         "serve"
             if flags.contains_key("async")
                 || flags.contains_key("model")
                 || flags.contains_key("fpga-pool") =>
         {
-            let strategy = match flags.get("shard-strategy") {
-                Some(s) => tf_fpga::sharding::ShardStrategy::parse(s).ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "unknown --shard-strategy '{s}' \
-                         (round-robin | least-loaded | kernel-affinity)"
-                    )
-                })?,
-                None => tf_fpga::sharding::ShardStrategy::KernelAffinity,
-            };
+            let strategy = shard_strategy_from_flags(&flags)?;
             serve_async(
                 flag_usize(&flags, "requests", 512),
                 flag_usize(&flags, "clients", 4),
@@ -141,6 +151,15 @@ commands:
   serve --fpga-pool N [--shard-strategy S ...]
                            shard the async pipeline across N FPGA agents
                            (S: round-robin | least-loaded | kernel-affinity)
+  serve --http [ADDR] [--max-pending N --tenant-rps R --http-workers W
+                --serve-secs T --model DIR ...]
+                           HTTP/1.1 frontend (default 127.0.0.1:8080) over the
+                           async pipeline: POST /v1/models/<name>:predict,
+                           GET /v1/models | /healthz | /metrics (Prometheus).
+                           Sheds load with 429 + Retry-After past N pending
+                           requests; rate-limits per X-Tenant header at R req/s
+                           (0 = unlimited); honors X-Deadline-Ms; drains
+                           gracefully after T seconds (0 = run until killed)
   export-demo [DIR]        write the built-in demo model bundles to DIR
                            (mnist, mnist_layers, tiny_fc; default ./demo-bundles)
   ablate-hls               pre-synthesized vs online-synthesis (OpenCL) flow costs
@@ -177,6 +196,20 @@ fn flag_usize(flags: &HashMap<String, String>, name: &str, default: usize) -> us
         .get(name)
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+fn shard_strategy_from_flags(
+    flags: &HashMap<String, String>,
+) -> Result<tf_fpga::sharding::ShardStrategy> {
+    match flags.get("shard-strategy") {
+        Some(s) => tf_fpga::sharding::ShardStrategy::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown --shard-strategy '{s}' \
+                 (round-robin | least-loaded | kernel-affinity)"
+            )
+        }),
+        None => Ok(tf_fpga::sharding::ShardStrategy::KernelAffinity),
+    }
 }
 
 /// `--config <file>` loads `[session]` options (see util::config); other
@@ -568,6 +601,96 @@ fn serve_async(
         );
     }
     drop(srv); // Drop drains the pipeline and shuts the session down.
+    Ok(())
+}
+
+/// Serve over HTTP: the async pipeline behind the `net` frontend, with
+/// admission control. Runs until Ctrl-C (or `--serve-secs N`, which
+/// drains gracefully and prints the report).
+#[allow(clippy::too_many_arguments)]
+fn serve_http(
+    addr: String,
+    max_pending: usize,
+    tenant_rps: usize,
+    http_workers: usize,
+    serve_secs: usize,
+    max_batch: usize,
+    max_delay_ms: usize,
+    pipeline_depth: usize,
+    workers: usize,
+    fpga_pool: usize,
+    shard_strategy: tf_fpga::sharding::ShardStrategy,
+    model_dir: Option<String>,
+) -> Result<()> {
+    use tf_fpga::net::{HttpServer, HttpServerConfig};
+    use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig, BatchPolicy, ModelSpec};
+    use tf_fpga::tf::session::SessionOptions;
+
+    let policy = BatchPolicy {
+        max_batch,
+        max_delay: std::time::Duration::from_millis(max_delay_ms as u64),
+    };
+    let spec = match &model_dir {
+        Some(dir) => ModelSpec::from_dir(dir, policy).map_err(|e| anyhow::anyhow!("{e}"))?,
+        None => ModelSpec::new("mnist", policy),
+    };
+    let srv = AsyncInferenceServer::start(AsyncServerConfig {
+        models: vec![spec],
+        session: SessionOptions {
+            dispatch_workers: workers,
+            fpga_pool,
+            shard_strategy,
+            ..SessionOptions::default()
+        },
+        pipeline_depth,
+    })
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let models = srv.models().join(", ");
+    let mut server = HttpServer::start(
+        srv,
+        HttpServerConfig {
+            addr,
+            workers: http_workers,
+            max_pending,
+            tenant_rps: tenant_rps as u64,
+            ..HttpServerConfig::default()
+        },
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let bound = server.local_addr();
+    println!(
+        "http serving [{models}] on {bound}: max_pending={max_pending} tenant_rps={} \
+         http_workers={http_workers}, fpga pool {fpga_pool} ({})",
+        if tenant_rps == 0 { "unlimited".to_string() } else { tenant_rps.to_string() },
+        shard_strategy.name()
+    );
+    println!("  GET  http://{bound}/v1/models");
+    println!("  GET  http://{bound}/healthz   |   GET http://{bound}/metrics");
+    println!("  POST http://{bound}/v1/models/<name>:predict  {{\"instances\": [[...]]}}");
+    if serve_secs > 0 {
+        std::thread::sleep(std::time::Duration::from_secs(serve_secs as u64));
+        println!("\n--serve-secs elapsed; draining...");
+        server.shutdown();
+        let rep = server.report();
+        println!(
+            "served {} requests ({} completed, {} failed), {} batches",
+            rep.requests, rep.completed, rep.failed, rep.batches
+        );
+        for shard in &rep.pool {
+            println!(
+                "  {:<14}: {} dispatches, hit rate {:.1}%",
+                shard.agent,
+                shard.dispatches,
+                100.0 * shard.reconfig.hit_rate()
+            );
+        }
+    } else {
+        // Serve until the process is killed; Ctrl-C tears the sockets
+        // down with it.
+        loop {
+            std::thread::park();
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,299 @@
+//! A small blocking HTTP/1.1 client for loopback use: the integration
+//! tests and the `http_serving` bench drive the frontend through it, and
+//! it doubles as a reference for the wire protocol. Keep-alive by
+//! default, with one transparent reconnect when a reused connection turns
+//! out to be stale (server recycled it on idle timeout or drain).
+
+use crate::util::json::{Json, JsonError};
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// A parsed HTTP response. Header names are lowercased.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Json, JsonError> {
+        Json::parse(&self.body)
+    }
+
+    fn closes(&self) -> bool {
+        self.header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+}
+
+/// A keep-alive connection to one server address.
+pub struct NetClient {
+    addr: SocketAddr,
+    stream: Option<BufReader<TcpStream>>,
+    read_timeout: Duration,
+}
+
+impl NetClient {
+    /// Resolve `addr` and open the first connection eagerly, so a
+    /// missing/refusing server fails here rather than on first use.
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<NetClient> {
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "no address"))?;
+        let mut client =
+            NetClient { addr, stream: None, read_timeout: Duration::from_secs(30) };
+        client.reconnect()?;
+        Ok(client)
+    }
+
+    /// Cap on how long a single response read may block (default 30 s —
+    /// a hang-guard for tests, not a request deadline).
+    pub fn set_read_timeout(&mut self, timeout: Duration) {
+        self.read_timeout = timeout;
+    }
+
+    fn reconnect(&mut self) -> io::Result<()> {
+        let stream = TcpStream::connect(self.addr)?;
+        stream.set_read_timeout(Some(self.read_timeout))?;
+        stream.set_nodelay(true)?;
+        self.stream = Some(BufReader::new(stream));
+        Ok(())
+    }
+
+    /// Issue one request. Reuses the held connection when possible; if a
+    /// *reused* connection turns out to be dead (stale keep-alive the
+    /// server recycled: EOF/reset/broken pipe before a response), retries
+    /// exactly once on a fresh one. Response-read *timeouts* are NOT
+    /// retried — the request may be admitted and executing, and a resend
+    /// would double-dispatch it. A failure on a fresh connection (server
+    /// down, refused while draining) propagates.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: Option<&str>,
+    ) -> io::Result<HttpResponse> {
+        let reused = self.stream.is_some();
+        match self.try_request(method, path, headers, body) {
+            Ok(resp) => Ok(resp),
+            Err(e) if reused && stale_keep_alive(&e) => {
+                self.reconnect().map_err(|_| e)?;
+                self.try_request(method, path, headers, body)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn try_request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: Option<&str>,
+    ) -> io::Result<HttpResponse> {
+        if self.stream.is_none() {
+            self.reconnect()?;
+        }
+        let result = (|| {
+            let reader = self.stream.as_mut().expect("just connected");
+            let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {}\r\n", self.addr);
+            for (name, value) in headers {
+                head.push_str(&format!("{name}: {value}\r\n"));
+            }
+            let body = body.unwrap_or("");
+            head.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
+            {
+                let stream = reader.get_mut();
+                stream.write_all(head.as_bytes())?;
+                stream.write_all(body.as_bytes())?;
+                stream.flush()?;
+            }
+            read_response(reader)
+        })();
+        match result {
+            Ok(resp) => {
+                if resp.closes() {
+                    self.stream = None;
+                }
+                Ok(resp)
+            }
+            Err(e) => {
+                // Never reuse a connection in an unknown protocol state.
+                self.stream = None;
+                Err(e)
+            }
+        }
+    }
+
+    pub fn get(&mut self, path: &str) -> io::Result<HttpResponse> {
+        self.request("GET", path, &[], None)
+    }
+
+    /// `POST /v1/models/{model}:predict` with `{"instances": [...]}`.
+    /// Samples are written with exact f32 round-trip, so a bit-identical
+    /// tensor reaches the server.
+    pub fn predict(
+        &mut self,
+        model: &str,
+        samples: &[&[f32]],
+        headers: &[(&str, &str)],
+    ) -> io::Result<HttpResponse> {
+        let body = predict_body(samples);
+        self.request("POST", &format!("/v1/models/{model}:predict"), headers, Some(&body))
+    }
+}
+
+/// Build an `{"instances": [...]}` predict body from flat samples.
+pub fn predict_body(samples: &[&[f32]]) -> String {
+    let instances: Vec<Json> = samples
+        .iter()
+        .map(|s| Json::Arr(s.iter().map(|&v| Json::from_f32(v)).collect()))
+        .collect();
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("instances".to_string(), Json::Arr(instances));
+    Json::Obj(top).to_string()
+}
+
+/// Decode a 200 predict response into rows of f32 (exact bits, thanks to
+/// the round-trip number format on both sides).
+pub fn decode_predictions(resp: &HttpResponse) -> Result<Vec<Vec<f32>>, String> {
+    let doc = resp.json().map_err(|e| e.to_string())?;
+    let Some(rows) = doc.get("predictions").as_arr() else {
+        return Err(format!("no \"predictions\" in {}", resp.body));
+    };
+    rows.iter()
+        .map(|row| {
+            row.as_arr()
+                .ok_or_else(|| "prediction row is not an array".to_string())?
+                .iter()
+                .map(|v| v.as_f32().ok_or_else(|| "non-numeric prediction".to_string()))
+                .collect()
+        })
+        .collect()
+}
+
+/// One-shot request on a fresh connection (`Connection: close`): used
+/// where connection reuse would hide what is being tested (e.g. "are new
+/// connections refused during drain?").
+pub fn one_shot(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: Option<&str>,
+) -> io::Result<HttpResponse> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
+    for (name, value) in headers {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    let body = body.unwrap_or("");
+    head.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    read_response(&mut BufReader::new(stream))
+}
+
+/// Failure shapes a recycled keep-alive connection produces when the
+/// server closed it while we were idle — safe to retry because the new
+/// request cannot have been admitted. Timeouts and protocol errors are
+/// excluded: those can follow a fully-sent request.
+fn stale_keep_alive(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::UnexpectedEof
+            | io::ErrorKind::ConnectionReset
+            | io::ErrorKind::ConnectionAborted
+            | io::ErrorKind::BrokenPipe
+    )
+}
+
+fn bad_data(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+fn read_response<S: Read>(reader: &mut BufReader<S>) -> io::Result<HttpResponse> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "connection closed"));
+    }
+    let line = line.trim_end();
+    // "HTTP/1.1 200 OK" — the reason phrase may contain spaces.
+    let mut parts = line.splitn(3, ' ');
+    let (Some(version), Some(code)) = (parts.next(), parts.next()) else {
+        return Err(bad_data(format!("malformed status line '{line}'")));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(bad_data(format!("not an HTTP response: '{line}'")));
+    }
+    let status: u16 = code
+        .parse()
+        .map_err(|_| bad_data(format!("bad status code in '{line}'")))?;
+
+    let mut headers = Vec::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof in headers"));
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+    }
+    let content_length: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse().ok())
+        .ok_or_else(|| bad_data("response without Content-Length"))?;
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8(body).map_err(|_| bad_data("non-UTF-8 body"))?;
+    Ok(HttpResponse { status, headers, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_body_round_trips_f32_bits() {
+        let samples: Vec<f32> = vec![0.1, -0.0, 1.0 / 3.0, f32::MIN_POSITIVE];
+        let body = predict_body(&[&samples]);
+        let doc = Json::parse(&body).unwrap();
+        let row = doc.get("instances").idx(0).as_arr().unwrap();
+        for (want, got) in samples.iter().zip(row) {
+            assert_eq!(want.to_bits(), got.as_f32().unwrap().to_bits());
+        }
+    }
+
+    #[test]
+    fn parses_response_with_spaced_reason_phrase() {
+        let doc = "HTTP/1.1 429 Too Many Requests\r\nRetry-After: 2\r\n\
+                   Content-Length: 2\r\nConnection: close\r\n\r\n{}";
+        let resp = read_response(&mut BufReader::new(doc.as_bytes())).unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("retry-after"), Some("2"));
+        assert_eq!(resp.body, "{}");
+        assert!(resp.closes());
+    }
+}

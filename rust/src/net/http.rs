@@ -1,0 +1,453 @@
+//! HTTP/1.1 wire handling — request parsing and response writing over any
+//! `BufRead`/`Write` pair, no external dependencies.
+//!
+//! Deliberately small: the serving frontend needs exactly request-line +
+//! headers + `Content-Length` bodies (no chunked transfer, no trailers),
+//! with hard caps on header and body size so an adversarial peer cannot
+//! balloon memory. Everything protocol-level that can go wrong maps to a
+//! [`HttpError::Bad`] carrying the status the connection handler should
+//! answer with before closing.
+
+use std::fmt::Write as _;
+use std::io::{BufRead, Read, Write};
+use std::time::{Duration, Instant};
+
+/// Cap on the total bytes of request line + headers. Generous for any
+/// real client, tight enough to bound a hostile one.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Reads are chunked this small so the aggregate request deadline is
+/// checked often: a slow-trickle client (one byte per read-timeout) can
+/// overstay its budget by at most one chunk of per-byte timeouts, not by
+/// the whole head/body.
+const READ_CHUNK: usize = 256;
+
+/// A parsed HTTP request. Header names are lowercased at parse time;
+/// values keep their bytes (trimmed of surrounding whitespace).
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Request target with any `?query` suffix split off.
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// `HTTP/1.0` requests (and `Connection: close`) disable keep-alive.
+    pub http10: bool,
+}
+
+impl Request {
+    /// First header value for `name` (case-insensitive lookup — names are
+    /// stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the client asked for the connection to end after this
+    /// exchange.
+    pub fn wants_close(&self) -> bool {
+        self.http10
+            || self
+                .header("connection")
+                .map(|v| v.eq_ignore_ascii_case("close"))
+                .unwrap_or(false)
+    }
+}
+
+/// Why a request could not be read.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Clean end-of-stream before any request byte — the normal way a
+    /// keep-alive connection ends.
+    Eof,
+    /// Transport failure (including read timeouts on idle keep-alive).
+    Io(std::io::Error),
+    /// Protocol violation: answer with `status`/`msg`, then close.
+    Bad { status: u16, msg: String },
+}
+
+impl From<std::io::Error> for HttpError {
+    fn from(e: std::io::Error) -> HttpError {
+        HttpError::Io(e)
+    }
+}
+
+fn bad(status: u16, msg: impl Into<String>) -> HttpError {
+    HttpError::Bad { status, msg: msg.into() }
+}
+
+/// The running limits of one request read: a byte budget for the head
+/// and a wall-clock deadline armed when the first bytes arrive (so idle
+/// keep-alive waits are not charged against it).
+struct ReadLimits {
+    head_budget: usize,
+    read_budget: Duration,
+    deadline: Option<Instant>,
+}
+
+impl ReadLimits {
+    /// Arm the deadline once the request has started flowing.
+    fn started(&mut self) {
+        if self.deadline.is_none() {
+            self.deadline = Some(Instant::now() + self.read_budget);
+        }
+    }
+
+    fn check(&self) -> Result<(), HttpError> {
+        if let Some(d) = self.deadline {
+            if Instant::now() >= d {
+                return Err(bad(
+                    408,
+                    format!("request not fully read within {:?}", self.read_budget),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Read one line (terminated by `\n`), enforcing the running head-byte
+/// budget and the aggregate read deadline. Reads are capped at the
+/// remaining budget (a hostile peer cannot balloon memory with a
+/// newline-free stream) and chunked at [`READ_CHUNK`] bytes so a
+/// trickling peer hits `408` shortly after the budget expires instead of
+/// holding a worker for hours. Returns the line without its `\r\n`/`\n`
+/// terminator.
+fn read_line(r: &mut impl BufRead, limits: &mut ReadLimits) -> Result<String, HttpError> {
+    let mut line = String::new();
+    loop {
+        // Checked before every chunk — including between short complete
+        // header lines — so trickling many tiny lines is cut off just
+        // like trickling one long one.
+        limits.check()?;
+        let cap = (limits.head_budget + 1 - line.len()).min(READ_CHUNK);
+        let n = r.by_ref().take(cap as u64).read_line(&mut line)?;
+        if n == 0 {
+            if line.is_empty() {
+                return Err(HttpError::Eof);
+            }
+            return Err(bad(400, "truncated request head"));
+        }
+        limits.started();
+        if line.len() > limits.head_budget {
+            return Err(bad(431, format!("request head exceeds {MAX_HEAD_BYTES} bytes")));
+        }
+        if line.ends_with('\n') {
+            break;
+        }
+    }
+    limits.head_budget -= line.len();
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(line)
+}
+
+/// Read one full request. `max_body` bounds the `Content-Length` a client
+/// may declare; longer bodies are refused with `413` *before* reading
+/// them. `read_budget` is the wall-clock allowance for reading the whole
+/// request once its first bytes arrive (idle keep-alive waiting is not
+/// charged): a slow-trickle client gets `408` at the next [`READ_CHUNK`]
+/// boundary past the budget, so it cannot pin a worker indefinitely.
+pub fn read_request(
+    r: &mut impl BufRead,
+    max_body: usize,
+    read_budget: Duration,
+) -> Result<Request, HttpError> {
+    let mut limits =
+        ReadLimits { head_budget: MAX_HEAD_BYTES, read_budget, deadline: None };
+    let line = read_line(r, &mut limits)?;
+    let mut parts = line.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() || version.is_empty() || parts.next().is_some() {
+        return Err(bad(400, format!("malformed request line '{line}'")));
+    }
+    let http10 = match version {
+        "HTTP/1.1" => false,
+        "HTTP/1.0" => true,
+        other => return Err(bad(505, format!("unsupported version '{other}'"))),
+    };
+
+    let mut headers = Vec::new();
+    loop {
+        let line = match read_line(r, &mut limits) {
+            // EOF mid-headers is a truncated request, not a clean close.
+            Err(HttpError::Eof) => return Err(bad(400, "truncated request head")),
+            other => other?,
+        };
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(bad(400, format!("malformed header line '{line}'")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    if headers.iter().any(|(k, _)| k == "transfer-encoding") {
+        return Err(bad(501, "transfer-encoding is not supported; send Content-Length"));
+    }
+    let content_length = match headers.iter().find(|(k, _)| k == "content-length") {
+        None => 0,
+        Some((_, v)) => v
+            .parse::<usize>()
+            .map_err(|_| bad(400, format!("bad Content-Length '{v}'")))?,
+    };
+    if content_length > max_body {
+        // Drain what the client already wrote (bounded to roughly what
+        // fits in flight — a trickler must not turn the courtesy drain
+        // into a hold) before erroring: closing with unread data in the
+        // receive buffer sends a TCP reset that can clobber the 413
+        // response.
+        let drain = content_length.min(64 << 10) as u64;
+        let _ = std::io::copy(&mut r.by_ref().take(drain), &mut std::io::sink());
+        return Err(bad(
+            413,
+            format!("body is {content_length} bytes, limit {max_body}"),
+        ));
+    }
+    // Chunked body read with the same aggregate deadline: the declared
+    // length is already bounded, this bounds the *time* a trickler can
+    // take delivering it.
+    let mut body = vec![0u8; content_length];
+    let mut off = 0;
+    while off < content_length {
+        limits.check()?;
+        let end = (off + READ_CHUNK).min(content_length);
+        r.read_exact(&mut body[off..end])?;
+        limits.started();
+        off = end;
+    }
+
+    let path = target.split('?').next().unwrap_or(&target).to_string();
+    Ok(Request { method, path, headers, body, http10 })
+}
+
+/// An HTTP response about to be written. Always carries an explicit
+/// `Content-Length`; `close` controls the `Connection` header (and tells
+/// the connection loop to hang up afterwards).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    pub extra_headers: Vec<(String, String)>,
+    pub close: bool,
+}
+
+impl Response {
+    pub fn json(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into().into_bytes(),
+            extra_headers: Vec::new(),
+            close: false,
+        }
+    }
+
+    /// Prometheus/text responses.
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; version=0.0.4",
+            body: body.into().into_bytes(),
+            extra_headers: Vec::new(),
+            close: false,
+        }
+    }
+
+    pub fn with_header(mut self, name: impl Into<String>, value: impl Into<String>) -> Response {
+        self.extra_headers.push((name.into(), value.into()));
+        self
+    }
+
+    pub fn with_close(mut self) -> Response {
+        self.close = true;
+        self
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        let mut head = String::with_capacity(128);
+        let _ = write!(
+            head,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        for (name, value) in &self.extra_headers {
+            let _ = write!(head, "{name}: {value}\r\n");
+        }
+        let _ = write!(
+            head,
+            "Connection: {}\r\n\r\n",
+            if self.close { "close" } else { "keep-alive" }
+        );
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Reason phrase for the handful of statuses the server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(doc: &str) -> Result<Request, HttpError> {
+        read_request(&mut Cursor::new(doc.as_bytes()), 1 << 20, Duration::from_secs(5))
+    }
+
+    #[test]
+    fn parses_request_with_body_and_lowercases_headers() {
+        let req = parse(
+            "POST /v1/models/mnist:predict?verbose=1 HTTP/1.1\r\n\
+             Host: localhost\r\n\
+             X-Tenant: alice\r\n\
+             Content-Length: 4\r\n\
+             \r\nabcd",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/models/mnist:predict", "query split off");
+        assert_eq!(req.header("x-tenant"), Some("alice"));
+        assert_eq!(req.header("X-TENANT"), Some("alice"));
+        assert_eq!(req.body, b"abcd");
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn bare_lf_line_endings_parse_too() {
+        let req = parse("GET /healthz HTTP/1.1\nHost: x\n\n").unwrap();
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.body, b"");
+    }
+
+    #[test]
+    fn connection_close_and_http10_disable_keep_alive() {
+        let req = parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(req.wants_close());
+        let req = parse("GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(req.wants_close());
+    }
+
+    #[test]
+    fn clean_eof_is_eof_not_an_error() {
+        assert!(matches!(parse(""), Err(HttpError::Eof)));
+        // But a truncated head is a 400.
+        match parse("GET / HTTP/1.1\r\nHost: x\r\n") {
+            Err(HttpError::Bad { status: 400, .. }) => {}
+            other => panic!("expected 400, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413_before_reading() {
+        let doc = "POST /x HTTP/1.1\r\nContent-Length: 999\r\n\r\n";
+        match read_request(&mut Cursor::new(doc.as_bytes()), 10, Duration::from_secs(5)) {
+            Err(HttpError::Bad { status: 413, msg }) => {
+                assert!(msg.contains("999") && msg.contains("10"), "{msg}");
+            }
+            other => panic!("expected 413, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn exhausted_read_budget_is_408_not_a_pinned_worker() {
+        // A zero budget expires the moment the request starts flowing, so
+        // the chunked body loop refuses before reading a byte of body —
+        // the same check that cuts off a slow-trickle client.
+        let doc = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: 600\r\n\r\n{}",
+            "a".repeat(600)
+        );
+        match read_request(&mut Cursor::new(doc.as_bytes()), 1 << 20, Duration::ZERO) {
+            Err(HttpError::Bad { status: 408, msg }) => {
+                assert!(msg.contains("not fully read"), "{msg}");
+            }
+            other => panic!("expected 408, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_head_is_431() {
+        let doc = format!(
+            "GET / HTTP/1.1\r\nX-Big: {}\r\n\r\n",
+            "a".repeat(MAX_HEAD_BYTES)
+        );
+        match parse(&doc) {
+            Err(HttpError::Bad { status: 431, .. }) => {}
+            other => panic!("expected 431, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn garbage_request_lines_and_versions_are_rejected() {
+        for doc in [
+            "NOT-HTTP\r\n\r\n",
+            "GET /\r\n\r\n",
+            "GET / HTTP/2.0\r\n\r\n",
+            "GET / HTTP/1.1 extra\r\n\r\n",
+        ] {
+            match parse(doc) {
+                Err(HttpError::Bad { .. }) => {}
+                other => panic!("{doc:?} should be rejected, got {other:?}"),
+            }
+        }
+        match parse("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n") {
+            Err(HttpError::Bad { status: 400, .. }) => {}
+            other => panic!("expected 400, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn transfer_encoding_is_refused() {
+        match parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n") {
+            Err(HttpError::Bad { status: 501, .. }) => {}
+            other => panic!("expected 501, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_writes_status_line_headers_and_body() {
+        let mut buf = Vec::new();
+        Response::json(429, "{\"e\":1}")
+            .with_header("Retry-After", "2")
+            .with_close()
+            .write_to(&mut buf)
+            .unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 7\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 2\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"e\":1}"), "{text}");
+    }
+}

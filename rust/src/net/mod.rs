@@ -1,0 +1,51 @@
+//! Network serving frontend: HTTP/1.1 over `std::net`, fronting the
+//! async batched inference pipeline with admission control.
+//!
+//! The paper's thesis is hiding accelerator complexity behind a familiar
+//! frontend; this module extends that one layer further out — the FPGA
+//! pool, plan compiler and batching pipeline all sit behind a plain JSON
+//! HTTP API a `curl` can hit. Std-only by design (no tokio/hyper in the
+//! offline vendor set): a blocking accept thread feeds a worker pool,
+//! which is the right shape for a backend whose concurrency is bounded by
+//! FPGA agents and batch lanes, not by socket counts.
+//!
+//! Pieces:
+//!
+//! * [`http`] — minimal HTTP/1.1 wire parsing/writing with hard caps on
+//!   head and body size.
+//! * [`admission`] — who gets in: deterministic per-tenant token buckets
+//!   ([`admission::RateLimiter`]), the bounded pending gate
+//!   ([`admission::PendingGate`]) that sheds with `429` + `Retry-After`,
+//!   and pre-dispatch [`admission::Deadline`] cancellation, all over an
+//!   injected [`admission::Clock`].
+//! * [`server`] — [`HttpServer`]: routes (`:predict`, `/v1/models`,
+//!   `/healthz`, `/metrics`), structured JSON error bodies, graceful
+//!   drain on [`HttpServer::shutdown`].
+//! * [`prom`] — frontend counters and the Prometheus text rendering.
+//! * [`client`] — [`NetClient`], the blocking loopback client the
+//!   integration tests and the `http_serving` bench drive the server
+//!   with.
+//!
+//! ```no_run
+//! use tf_fpga::net::{HttpServer, HttpServerConfig, NetClient};
+//! use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig};
+//!
+//! let srv = AsyncInferenceServer::start(AsyncServerConfig::default()).unwrap();
+//! let mut http = HttpServer::start(srv, HttpServerConfig::default()).unwrap();
+//! let mut client = NetClient::connect(http.local_addr()).unwrap();
+//! let image = vec![0.0f32; 784];
+//! let resp = client.predict("mnist", &[image.as_slice()], &[]).unwrap();
+//! assert_eq!(resp.status, 200);
+//! http.shutdown(); // drain: finish in-flight, refuse new, stop
+//! ```
+
+pub mod admission;
+pub mod client;
+pub mod http;
+pub mod prom;
+pub mod server;
+
+pub use admission::{Clock, Deadline, ManualClock, PendingGate, RateLimiter, SystemClock};
+pub use client::{decode_predictions, one_shot, predict_body, HttpResponse, NetClient};
+pub use prom::{NetCounters, NetSnapshot};
+pub use server::{HttpServer, HttpServerConfig};

@@ -1,0 +1,290 @@
+//! Frontend counters and the Prometheus text exposition for
+//! `GET /metrics`.
+//!
+//! [`NetCounters`] accounts what happens at the HTTP boundary
+//! (connections, responses by status code, sheds by reason, deadline
+//! cancellations); [`render`] merges a snapshot of those with the serving
+//! pipeline's [`CounterSnapshot`] and the per-agent
+//! [`ShardAgentReport`] rows into the Prometheus text format (version
+//! 0.0.4 — `# HELP`/`# TYPE` preambles, `name{labels} value` samples).
+
+use crate::metrics::counters::CounterSnapshot;
+use crate::sharding::ShardAgentReport;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Atomic accounting of the HTTP boundary, shared across worker threads.
+#[derive(Debug, Default)]
+pub struct NetCounters {
+    connections: AtomicU64,
+    refused_draining: AtomicU64,
+    shed_pending: AtomicU64,
+    shed_tenant: AtomicU64,
+    shed_backlog: AtomicU64,
+    deadline_expired: AtomicU64,
+    /// Responses by status code; a `Mutex<BTreeMap>` is plenty at HTTP
+    /// request rates and keeps the exposition order deterministic.
+    responses: Mutex<BTreeMap<u16, u64>>,
+}
+
+/// Point-in-time copy of [`NetCounters`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NetSnapshot {
+    pub connections: u64,
+    pub refused_draining: u64,
+    pub shed_pending: u64,
+    pub shed_tenant: u64,
+    pub shed_backlog: u64,
+    pub deadline_expired: u64,
+    pub responses: BTreeMap<u16, u64>,
+}
+
+impl NetSnapshot {
+    /// Total responses carrying `status`.
+    pub fn responses_with(&self, status: u16) -> u64 {
+        self.responses.get(&status).copied().unwrap_or(0)
+    }
+}
+
+impl NetCounters {
+    pub fn new() -> NetCounters {
+        NetCounters::default()
+    }
+
+    pub fn on_connection(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_refused_draining(&self) {
+        self.refused_draining.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_shed_pending(&self) {
+        self.shed_pending.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_shed_tenant(&self) {
+        self.shed_tenant.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A connection was refused because the bounded worker backlog was
+    /// full — overload shed before any request parsing.
+    pub fn on_shed_backlog(&self) {
+        self.shed_backlog.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_deadline_expired(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_response(&self, status: u16) {
+        *self.responses.lock().unwrap().entry(status).or_insert(0) += 1;
+    }
+
+    pub fn snapshot(&self) -> NetSnapshot {
+        NetSnapshot {
+            connections: self.connections.load(Ordering::Relaxed),
+            refused_draining: self.refused_draining.load(Ordering::Relaxed),
+            shed_pending: self.shed_pending.load(Ordering::Relaxed),
+            shed_tenant: self.shed_tenant.load(Ordering::Relaxed),
+            shed_backlog: self.shed_backlog.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            responses: self.responses.lock().unwrap().clone(),
+        }
+    }
+}
+
+fn metric(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Render the full `/metrics` document: HTTP-boundary counters, serving
+/// pipeline counters, and one labelled sample per pool agent.
+pub fn render(
+    net: &NetSnapshot,
+    serve: &CounterSnapshot,
+    pool: &[ShardAgentReport],
+    draining: bool,
+) -> String {
+    let mut out = String::with_capacity(2048);
+
+    metric(&mut out, "tf_fpga_http_connections_total", "counter", "Accepted TCP connections.");
+    let _ = writeln!(out, "tf_fpga_http_connections_total {}", net.connections);
+    metric(
+        &mut out,
+        "tf_fpga_http_responses_total",
+        "counter",
+        "HTTP responses by status code.",
+    );
+    for (code, n) in &net.responses {
+        let _ = writeln!(out, "tf_fpga_http_responses_total{{code=\"{code}\"}} {n}");
+    }
+    metric(
+        &mut out,
+        "tf_fpga_http_shed_total",
+        "counter",
+        "Requests shed by admission control, by reason.",
+    );
+    let _ = writeln!(out, "tf_fpga_http_shed_total{{reason=\"pending\"}} {}", net.shed_pending);
+    let _ = writeln!(out, "tf_fpga_http_shed_total{{reason=\"tenant\"}} {}", net.shed_tenant);
+    let _ = writeln!(out, "tf_fpga_http_shed_total{{reason=\"backlog\"}} {}", net.shed_backlog);
+    let _ = writeln!(
+        out,
+        "tf_fpga_http_shed_total{{reason=\"draining\"}} {}",
+        net.refused_draining
+    );
+    metric(
+        &mut out,
+        "tf_fpga_http_deadline_expired_total",
+        "counter",
+        "Requests cancelled before dispatch because their deadline had passed.",
+    );
+    let _ = writeln!(out, "tf_fpga_http_deadline_expired_total {}", net.deadline_expired);
+    metric(&mut out, "tf_fpga_http_draining", "gauge", "1 while the server drains for shutdown.");
+    let _ = writeln!(out, "tf_fpga_http_draining {}", u8::from(draining));
+
+    metric(
+        &mut out,
+        "tf_fpga_serve_requests_total",
+        "counter",
+        "Requests submitted into the serving pipeline.",
+    );
+    let _ = writeln!(out, "tf_fpga_serve_requests_total {}", serve.submitted);
+    metric(&mut out, "tf_fpga_serve_completed_total", "counter", "Requests answered successfully.");
+    let _ = writeln!(out, "tf_fpga_serve_completed_total {}", serve.completed);
+    metric(&mut out, "tf_fpga_serve_failed_total", "counter", "Requests that failed in the pipeline.");
+    let _ = writeln!(out, "tf_fpga_serve_failed_total {}", serve.failed);
+    metric(&mut out, "tf_fpga_serve_batches_total", "counter", "Micro-batches dispatched.");
+    let _ = writeln!(out, "tf_fpga_serve_batches_total {}", serve.batches);
+    metric(
+        &mut out,
+        "tf_fpga_serve_inflight_batches",
+        "gauge",
+        "Batches dispatched but not yet retired.",
+    );
+    let _ = writeln!(out, "tf_fpga_serve_inflight_batches {}", serve.inflight);
+
+    metric(
+        &mut out,
+        "tf_fpga_agent_dispatches_total",
+        "counter",
+        "Kernel dispatches routed to each FPGA agent.",
+    );
+    for shard in pool {
+        let _ = writeln!(
+            out,
+            "tf_fpga_agent_dispatches_total{{agent=\"{}\"}} {}",
+            shard.agent, shard.dispatches
+        );
+    }
+    metric(&mut out, "tf_fpga_agent_inflight", "gauge", "Dispatches in flight per agent.");
+    for shard in pool {
+        let _ = writeln!(
+            out,
+            "tf_fpga_agent_inflight{{agent=\"{}\"}} {}",
+            shard.agent, shard.inflight
+        );
+    }
+    metric(
+        &mut out,
+        "tf_fpga_agent_reconfig_misses_total",
+        "counter",
+        "Partial reconfigurations (role-residency misses) per agent.",
+    );
+    for shard in pool {
+        let _ = writeln!(
+            out,
+            "tf_fpga_agent_reconfig_misses_total{{agent=\"{}\"}} {}",
+            shard.agent, shard.reconfig.misses
+        );
+    }
+    metric(
+        &mut out,
+        "tf_fpga_agent_reconfig_us_total",
+        "counter",
+        "Modeled reconfiguration time per agent, microseconds.",
+    );
+    for shard in pool {
+        let _ = writeln!(
+            out,
+            "tf_fpga_agent_reconfig_us_total{{agent=\"{}\"}} {}",
+            shard.agent, shard.reconfig.reconfig_us_total
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reconfig::manager::ReconfigStats;
+
+    #[test]
+    fn counters_snapshot_round_trip() {
+        let c = NetCounters::new();
+        c.on_connection();
+        c.on_connection();
+        c.on_response(200);
+        c.on_response(200);
+        c.on_response(429);
+        c.on_shed_pending();
+        c.on_shed_tenant();
+        c.on_shed_backlog();
+        c.on_deadline_expired();
+        c.on_refused_draining();
+        let s = c.snapshot();
+        assert_eq!(s.connections, 2);
+        assert_eq!(s.responses_with(200), 2);
+        assert_eq!(s.responses_with(429), 1);
+        assert_eq!(s.responses_with(500), 0);
+        assert_eq!(
+            (s.shed_pending, s.shed_tenant, s.shed_backlog, s.deadline_expired, s.refused_draining),
+            (1, 1, 1, 1, 1)
+        );
+    }
+
+    #[test]
+    fn render_exposes_request_shed_and_per_agent_counters() {
+        let c = NetCounters::new();
+        c.on_response(200);
+        c.on_response(429);
+        c.on_shed_pending();
+        let serve = CounterSnapshot { submitted: 7, completed: 6, failed: 1, batches: 3, ..Default::default() };
+        let pool = vec![
+            ShardAgentReport {
+                agent: "ultra96-pl-0".into(),
+                dispatches: 5,
+                inflight: 1,
+                max_inflight: 2,
+                reconfig: ReconfigStats { misses: 2, reconfig_us_total: 9000, ..Default::default() },
+            },
+            ShardAgentReport {
+                agent: "ultra96-pl-1".into(),
+                dispatches: 4,
+                inflight: 0,
+                max_inflight: 1,
+                reconfig: ReconfigStats::default(),
+            },
+        ];
+        let text = render(&c.snapshot(), &serve, &pool, true);
+        for needle in [
+            "tf_fpga_http_responses_total{code=\"200\"} 1",
+            "tf_fpga_http_responses_total{code=\"429\"} 1",
+            "tf_fpga_http_shed_total{reason=\"pending\"} 1",
+            "tf_fpga_http_shed_total{reason=\"tenant\"} 0",
+            "tf_fpga_http_shed_total{reason=\"backlog\"} 0",
+            "tf_fpga_http_draining 1",
+            "tf_fpga_serve_requests_total 7",
+            "tf_fpga_serve_completed_total 6",
+            "tf_fpga_agent_dispatches_total{agent=\"ultra96-pl-0\"} 5",
+            "tf_fpga_agent_dispatches_total{agent=\"ultra96-pl-1\"} 4",
+            "tf_fpga_agent_reconfig_misses_total{agent=\"ultra96-pl-0\"} 2",
+            "# TYPE tf_fpga_http_responses_total counter",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+}

@@ -1,0 +1,850 @@
+//! The HTTP serving frontend: a std-only HTTP/1.1 server over
+//! [`TcpListener`] fronting an [`AsyncInferenceServer`].
+//!
+//! ```text
+//! TcpListener ──▶ accept thread ──▶ connection queue ──▶ worker pool
+//!                 (refuses new                           (keep-alive loop:
+//!                  connections                            parse → admit →
+//!                  while draining)                        predict → reply)
+//!
+//! admission, per request:   rate limit (X-Tenant bucket)
+//!                         → pending gate (429 + Retry-After past high water)
+//!                         → deadline (X-Deadline-Ms; cancel before dispatch)
+//!                         → AsyncInferenceServer::infer_async → reply row
+//! ```
+//!
+//! Routes:
+//!
+//! * `POST /v1/models/{name}:predict` — JSON body with either
+//!   `{"instances": [<sample>, ...]}` or a single named endpoint feed
+//!   `{"inputs": {"<endpoint>": <sample>}}`; samples are (arbitrarily
+//!   nested) arrays flattened row-major and validated against the model's
+//!   [`ModelIoMeta`]. Replies `{"model": ..., "predictions": [<row>, ...]}`
+//!   with bit-exact f32 round-trip (the JSON writer prints shortest
+//!   round-trip forms).
+//! * `GET /v1/models` — hosted models with signature and I/O meta.
+//! * `GET /healthz` — liveness (`"ok"`, or `"draining"` during shutdown).
+//! * `GET /metrics` — Prometheus text (see [`crate::net::prom`]).
+//!
+//! [`HttpServer::shutdown`] drains gracefully: stop accepting, let every
+//! admitted request finish and flush its reply, then stop the inference
+//! pipeline.
+
+use crate::hsa::error::{HsaError, Result};
+use crate::net::admission::{Clock, Deadline, PendingGate, RateLimiter, SystemClock};
+use crate::net::http::{self, HttpError, Request, Response};
+use crate::net::prom::{self, NetCounters};
+use crate::serve::async_server::AsyncInferenceServer;
+use crate::serve::hosted::ModelIoMeta;
+use crate::util::json::{Json, JsonErrorKind, JsonLimits};
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Frontend configuration. The admission knobs mirror the CLI:
+/// `--max-pending` bounds admitted-but-unanswered requests, and
+/// `--tenant-rps` (0 = unlimited) rate-limits per `X-Tenant` value.
+pub struct HttpServerConfig {
+    /// Bind address; port 0 picks a free port (see
+    /// [`HttpServer::local_addr`]).
+    pub addr: String,
+    /// Connection-handling worker threads. Each serves one (keep-alive)
+    /// connection at a time, so this is also the concurrent-*request*
+    /// budget — the pending gate can only fill past `max_pending` when
+    /// `workers > max_pending`. Size it above `max_pending` (the
+    /// integration tests do) when the gate should be the first shedding
+    /// layer; otherwise the bounded connection backlog sheds first.
+    pub workers: usize,
+    /// Pending-gate high-water mark: requests admitted past the rate
+    /// limiter but not yet answered. Above it, `429` + `Retry-After`.
+    /// Connections beyond what the workers and this gate can absorb land
+    /// in a bounded backlog (`workers + max_pending` deep); past *that*
+    /// the accept loop sheds `429` immediately, so overload never grows
+    /// memory or fd counts without bound.
+    pub max_pending: usize,
+    /// Sustained per-tenant requests/second (token-bucket refill rate);
+    /// 0 disables per-tenant limiting.
+    pub tenant_rps: u64,
+    /// Token-bucket burst capacity; 0 means "same as `tenant_rps`".
+    pub tenant_burst: u64,
+    /// Request-body cap, enforced on `Content-Length` before reading.
+    pub max_body_bytes: usize,
+    /// JSON nesting cap for request bodies (defense against `[[[[...`).
+    pub max_json_depth: usize,
+    /// Idle keep-alive read timeout before a worker recycles the
+    /// connection.
+    pub keep_alive: Duration,
+    /// Wall-clock allowance for reading one whole request once its first
+    /// bytes arrive; a slow-trickle client gets `408` instead of pinning
+    /// a worker (see `net::http::read_request`).
+    pub request_read_budget: Duration,
+    /// Time source for rate limiting and deadlines; swap in a manual
+    /// clock for deterministic tests.
+    pub clock: Arc<dyn Clock>,
+}
+
+impl Default for HttpServerConfig {
+    fn default() -> HttpServerConfig {
+        HttpServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 4,
+            max_pending: 64,
+            tenant_rps: 0,
+            tenant_burst: 0,
+            max_body_bytes: 1 << 20,
+            max_json_depth: 32,
+            keep_alive: Duration::from_secs(5),
+            request_read_budget: Duration::from_secs(10),
+            clock: Arc::new(SystemClock::new()),
+        }
+    }
+}
+
+/// Cap on `instances` per predict request: admission is per-request, so
+/// without a bound one permit/token would admit an arbitrary amount of
+/// work. Batch bigger workloads across requests.
+pub const MAX_INSTANCES_PER_REQUEST: usize = 64;
+
+struct Shared {
+    srv: AsyncInferenceServer,
+    gate: PendingGate,
+    limiter: Option<RateLimiter>,
+    net: NetCounters,
+    draining: AtomicBool,
+    clock: Arc<dyn Clock>,
+    max_body: usize,
+    read_budget: Duration,
+    json_limits: JsonLimits,
+}
+
+/// A running HTTP frontend. Dropping it (or calling
+/// [`HttpServer::shutdown`]) drains gracefully.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `config.addr` and start serving `srv`'s hosted models.
+    pub fn start(srv: AsyncInferenceServer, config: HttpServerConfig) -> Result<HttpServer> {
+        let listener = TcpListener::bind(&config.addr)
+            .map_err(|e| HsaError::Runtime(format!("bind {}: {e}", config.addr)))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| HsaError::Runtime(format!("local_addr: {e}")))?;
+
+        let limiter = (config.tenant_rps > 0).then(|| {
+            let burst = if config.tenant_burst > 0 { config.tenant_burst } else { config.tenant_rps };
+            RateLimiter::new(config.tenant_rps, burst, Arc::clone(&config.clock))
+        });
+        let shared = Arc::new(Shared {
+            srv,
+            gate: PendingGate::new(config.max_pending as u64),
+            limiter,
+            net: NetCounters::new(),
+            draining: AtomicBool::new(false),
+            clock: Arc::clone(&config.clock),
+            max_body: config.max_body_bytes,
+            read_budget: config.request_read_budget,
+            json_limits: JsonLimits {
+                max_depth: config.max_json_depth,
+                max_bytes: config.max_body_bytes,
+            },
+        });
+
+        // Bounded connection backlog: enough for every worker plus a
+        // gate's worth of waiters. `try_send` overflow sheds in the
+        // accept loop, so a flood cannot queue connections unboundedly.
+        let backlog = config.workers.max(1) + config.max_pending;
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(backlog);
+        let rx = Arc::new(Mutex::new(rx));
+        let keep_alive = config.keep_alive;
+
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("http-accept".into())
+                .spawn(move || accept_loop(listener, tx, shared))
+                .map_err(|e| HsaError::Runtime(format!("spawn accept: {e}")))?
+        };
+        let workers = (0..config.workers.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("http-worker-{i}"))
+                    .spawn(move || loop {
+                        // Hold the receiver lock only for the handoff —
+                        // a `while let` scrutinee would keep it (and
+                        // serialize the whole pool) through the
+                        // connection handling.
+                        let next = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match next {
+                            Ok(stream) => handle_connection(stream, &shared, keep_alive),
+                            Err(_) => break,
+                        }
+                    })
+                    .map_err(|e| HsaError::Runtime(format!("spawn worker: {e}")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(HttpServer { addr, shared, accept: Some(accept), workers })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The serving pipeline's aggregate report (same as the in-process
+    /// server's).
+    pub fn report(&self) -> crate::serve::AsyncServeReport {
+        self.shared.srv.report()
+    }
+
+    /// Frontend counters (responses by code, sheds, deadline cancels).
+    pub fn net_snapshot(&self) -> prom::NetSnapshot {
+        self.shared.net.snapshot()
+    }
+
+    /// Graceful drain: stop accepting, refuse new connections with `503`,
+    /// let every in-flight request complete and flush its reply, then
+    /// stop the inference pipeline. Idempotent.
+    pub fn shutdown(&mut self) {
+        let Some(accept) = self.accept.take() else { return };
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // Wake the accept loop: it re-checks the flag per connection.
+        // Connect via loopback when bound to a wildcard address
+        // (connecting to 0.0.0.0 is not universally routable).
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake {
+                SocketAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+                SocketAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+            });
+        }
+        if TcpStream::connect_timeout(&wake, Duration::from_secs(1)).is_err() {
+            // Could not reach our own listener (local firewalling?):
+            // leave the accept/worker threads parked rather than hang
+            // this join forever; they die with the process.
+            return;
+        }
+        let _ = accept.join();
+        // The accept loop owned the connection sender; with it gone,
+        // workers finish every already-accepted connection and exit.
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // All HTTP threads are gone, so ours is the last strong reference
+        // (barring a caller-held clone of nothing — Shared never leaks).
+        if let Some(shared) = Arc::get_mut(&mut self.shared) {
+            shared.srv.stop();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, tx: mpsc::SyncSender<TcpStream>, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        let Ok(mut stream) = stream else { continue };
+        if shared.draining.load(Ordering::SeqCst) {
+            // Refuse and stop accepting entirely; connections still in the
+            // OS backlog get reset when the listener drops below. The
+            // shutdown wake-up connects and closes without sending a byte
+            // — detect that (peek sees EOF) so it neither pollutes the
+            // refused-client metrics nor gets a pointless 503.
+            let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+            let mut probe = [0u8; 1];
+            let is_wake = matches!(stream.peek(&mut probe), Ok(0));
+            if !is_wake {
+                shared.net.on_refused_draining();
+                shared.net.on_response(503);
+                let _ = error_response(503, "draining", "server is draining", vec![])
+                    .with_close()
+                    .write_to(&mut stream);
+                // Best-effort drain of the request the client already
+                // sent, so closing does not reset away the 503.
+                let _ = std::io::copy(
+                    &mut std::io::Read::take(&stream, 64 << 10),
+                    &mut std::io::sink(),
+                );
+            }
+            break;
+        }
+        shared.net.on_connection();
+        match tx.try_send(stream) {
+            Ok(()) => {}
+            Err(mpsc::TrySendError::Full(mut stream)) => {
+                // Backlog full: shed here rather than queue without
+                // bound. Non-blocking, so the drain wake-up above always
+                // gets through too.
+                shared.net.on_shed_backlog();
+                shared.net.on_response(429);
+                let _ = error_response(
+                    429,
+                    "overloaded",
+                    "connection backlog is full",
+                    vec![],
+                )
+                .with_header("Retry-After", "1".to_string())
+                .with_close()
+                .write_to(&mut stream);
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => break,
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared, keep_alive: Duration) {
+    let _ = stream.set_read_timeout(Some(keep_alive));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut stream = stream;
+    loop {
+        match http::read_request(&mut reader, shared.max_body, shared.read_budget) {
+            Err(HttpError::Eof) | Err(HttpError::Io(_)) => break,
+            Err(HttpError::Bad { status, msg }) => {
+                // Wire-layer rejections carry the same named kinds the
+                // body-level checks use, so clients can branch on
+                // `error.kind` regardless of which layer refused.
+                let kind = match status {
+                    413 => "payload_too_large",
+                    431 => "headers_too_large",
+                    408 => "timeout",
+                    _ => "bad_request",
+                };
+                shared.net.on_response(status);
+                let _ = error_response(status, kind, &msg, vec![])
+                    .with_close()
+                    .write_to(&mut stream);
+                break;
+            }
+            Ok(req) => {
+                let mut resp = route(&req, shared);
+                resp.close = resp.close
+                    || req.wants_close()
+                    || shared.draining.load(Ordering::SeqCst);
+                shared.net.on_response(resp.status);
+                if resp.write_to(&mut stream).is_err() || resp.close {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn route(req: &Request, shared: &Shared) -> Response {
+    const PREDICT_PREFIX: &str = "/v1/models/";
+    const PREDICT_SUFFIX: &str = ":predict";
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => handle_healthz(shared),
+        ("GET", "/metrics") => handle_metrics(shared),
+        ("GET", "/v1/models") => handle_models(shared),
+        (method, path)
+            if path.starts_with(PREDICT_PREFIX) && path.ends_with(PREDICT_SUFFIX) =>
+        {
+            if method != "POST" {
+                return error_response(
+                    405,
+                    "method_not_allowed",
+                    &format!("{method} not allowed; predict is POST"),
+                    vec![],
+                );
+            }
+            let model = &path[PREDICT_PREFIX.len()..path.len() - PREDICT_SUFFIX.len()];
+            handle_predict(model, req, shared)
+        }
+        ("GET" | "POST", _) => {
+            error_response(404, "not_found", &format!("no route for '{}'", req.path), vec![])
+        }
+        (method, _) => {
+            error_response(405, "method_not_allowed", &format!("method {method} not supported"), vec![])
+        }
+    }
+}
+
+fn handle_healthz(shared: &Shared) -> Response {
+    let draining = shared.draining.load(Ordering::SeqCst);
+    let mut m = BTreeMap::new();
+    m.insert(
+        "status".to_string(),
+        Json::Str(if draining { "draining" } else { "ok" }.to_string()),
+    );
+    m.insert(
+        "models".to_string(),
+        Json::Arr(shared.srv.models().iter().map(|n| Json::Str(n.to_string())).collect()),
+    );
+    Response::json(200, Json::Obj(m).to_string())
+}
+
+fn handle_metrics(shared: &Shared) -> Response {
+    let report = shared.srv.report();
+    let text = prom::render(
+        &shared.net.snapshot(),
+        &shared.srv.counters(),
+        &report.pool,
+        shared.draining.load(Ordering::SeqCst),
+    );
+    Response::text(200, text)
+}
+
+fn handle_models(shared: &Shared) -> Response {
+    let models: Vec<Json> = shared
+        .srv
+        .models()
+        .into_iter()
+        .filter_map(|name| shared.srv.model_meta(name).map(|meta| (name, meta)))
+        .map(|(name, meta)| {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(name.to_string()));
+            m.insert("signature".to_string(), Json::Str(meta.signature.clone()));
+            m.insert("input".to_string(), endpoint_json(&meta.input_name, &meta.sample_in_shape, meta.in_elems));
+            m.insert("output".to_string(), endpoint_json(&meta.output_name, &meta.sample_out_shape, meta.out_elems));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("models".to_string(), Json::Arr(models));
+    Response::json(200, Json::Obj(top).to_string())
+}
+
+fn endpoint_json(name: &str, sample_shape: &[usize], elems: usize) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert(
+        "sample_shape".to_string(),
+        Json::Arr(sample_shape.iter().map(|&d| Json::from_usize(d)).collect()),
+    );
+    m.insert("elems".to_string(), Json::from_usize(elems));
+    Json::Obj(m)
+}
+
+fn handle_predict(model: &str, req: &Request, shared: &Shared) -> Response {
+    let Some(meta) = shared.srv.model_meta(model).cloned() else {
+        let served = shared.srv.models();
+        return error_response(
+            404,
+            "unknown_model",
+            &format!("unknown model '{model}' (serving: {served:?})"),
+            vec![(
+                "models",
+                Json::Arr(served.iter().map(|n| Json::Str(n.to_string())).collect()),
+            )],
+        );
+    };
+
+    // 1. Per-tenant quota.
+    let tenant = req.header("x-tenant").unwrap_or("anonymous").to_string();
+    if let Some(limiter) = &shared.limiter {
+        if let Err(retry_after) = limiter.try_acquire(&tenant) {
+            shared.net.on_shed_tenant();
+            return error_response(
+                429,
+                "rate_limited",
+                &format!("tenant '{tenant}' is over its request rate"),
+                vec![("tenant", Json::Str(tenant))],
+            )
+            .with_header("Retry-After", retry_after.to_string());
+        }
+    }
+
+    // 2. Bounded pending gate — held (RAII) until the reply is formed.
+    let Some(_permit) = shared.gate.try_acquire() else {
+        shared.net.on_shed_pending();
+        return error_response(
+            429,
+            "overloaded",
+            &format!("pending-request limit {} reached", shared.gate.max()),
+            vec![],
+        )
+        .with_header("Retry-After", "1".to_string());
+    };
+
+    // 3. Deadline header.
+    let deadline = match req.header("x-deadline-ms") {
+        None => None,
+        Some(v) => match v.parse::<u64>() {
+            Ok(ms) => Some(Deadline::after_ms(shared.clock.as_ref(), ms)),
+            Err(_) => {
+                return error_response(
+                    400,
+                    "bad_request",
+                    &format!("bad X-Deadline-Ms '{v}' (want milliseconds)"),
+                    vec![],
+                )
+            }
+        },
+    };
+
+    // 4. Body → samples.
+    let samples = match parse_predict_body(model, &meta, &req.body, shared.json_limits) {
+        Ok(s) => s,
+        Err(resp) => return *resp,
+    };
+
+    // Admission was charged one token on entry; a batched request pays
+    // for its remaining instances too — atomically, so a failed batch
+    // neither multiplies a tenant's effective rate nor drains its
+    // bucket into livelock.
+    if samples.len() > 1 {
+        if let Some(limiter) = &shared.limiter {
+            match limiter.try_acquire_n(&tenant, samples.len() as u64 - 1) {
+                Ok(()) => {}
+                Err(None) => {
+                    return error_response(
+                        400,
+                        "bad_request",
+                        &format!(
+                            "a batch of {} instances can never fit tenant '{tenant}'s \
+                             burst capacity; split it across requests",
+                            samples.len()
+                        ),
+                        vec![("tenant", Json::Str(tenant))],
+                    )
+                }
+                Err(Some(retry_after)) => {
+                    shared.net.on_shed_tenant();
+                    return error_response(
+                        429,
+                        "rate_limited",
+                        &format!("tenant '{tenant}' is over its request rate (batched instances)"),
+                        vec![("tenant", Json::Str(tenant))],
+                    )
+                    .with_header("Retry-After", retry_after.to_string());
+                }
+            }
+        }
+    }
+
+    // 5. Already past the deadline (queueing, parsing)? Cancel before any
+    // dispatch reaches the pipeline.
+    if let Some(d) = deadline {
+        if d.expired(shared.clock.as_ref()) {
+            shared.net.on_deadline_expired();
+            return error_response(
+                504,
+                "deadline_exceeded",
+                "deadline expired before dispatch; request cancelled",
+                vec![],
+            );
+        }
+    }
+
+    // 6. Dispatch every sample, then collect replies in order.
+    let mut receivers = Vec::with_capacity(samples.len());
+    for sample in samples {
+        match shared.srv.infer_async(model, sample) {
+            Ok(rx) => receivers.push(rx),
+            // Pre-validated against the meta, so any error here is a
+            // pipeline failure, not a client one.
+            Err(e) => return error_response(500, "internal", &e.to_string(), vec![]),
+        }
+    }
+    let mut rows = Vec::with_capacity(receivers.len());
+    for rx in receivers {
+        let reply = match deadline {
+            Some(d) => match rx.recv_timeout(d.remaining(shared.clock.as_ref())) {
+                Ok(r) => r,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    return error_response(
+                        504,
+                        "deadline_exceeded",
+                        "deadline expired waiting for the batch to retire",
+                        vec![],
+                    )
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return error_response(500, "internal", "server dropped request", vec![])
+                }
+            },
+            None => match rx.recv() {
+                Ok(r) => r,
+                Err(_) => {
+                    return error_response(500, "internal", "server dropped request", vec![])
+                }
+            },
+        };
+        match reply {
+            Ok(row) => rows.push(Json::Arr(row.into_iter().map(Json::from_f32).collect())),
+            Err(e) => return error_response(500, "internal", &e.to_string(), vec![]),
+        }
+    }
+
+    let mut body = BTreeMap::new();
+    body.insert("model".to_string(), Json::Str(model.to_string()));
+    body.insert("predictions".to_string(), Json::Arr(rows));
+    Response::json(200, Json::Obj(body).to_string())
+}
+
+/// Decode a predict body into flattened samples, or the exact error
+/// response to send. Boxed because the error side is by far the larger.
+fn parse_predict_body(
+    model: &str,
+    meta: &ModelIoMeta,
+    body: &[u8],
+    limits: JsonLimits,
+) -> std::result::Result<Vec<Vec<f32>>, Box<Response>> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| Box::new(error_response(400, "bad_request", "body is not UTF-8", vec![])))?;
+    let doc = Json::parse_with_limits(text, limits).map_err(|e| {
+        let (status, kind) = match e.kind {
+            JsonErrorKind::TooDeep => (400, "too_deep"),
+            JsonErrorKind::TooLarge => (413, "payload_too_large"),
+            JsonErrorKind::Syntax => (400, "bad_request"),
+        };
+        Box::new(error_response(status, kind, &e.to_string(), vec![]))
+    })?;
+
+    let raw_samples: Vec<&Json> = if let Json::Arr(instances) = doc.get("instances") {
+        if instances.is_empty() {
+            return Err(Box::new(error_response(
+                400,
+                "bad_request",
+                "\"instances\" is empty",
+                vec![],
+            )));
+        }
+        if instances.len() > MAX_INSTANCES_PER_REQUEST {
+            return Err(Box::new(error_response(
+                400,
+                "bad_request",
+                &format!(
+                    "{} instances in one request (limit {MAX_INSTANCES_PER_REQUEST}); \
+                     split the batch across requests",
+                    instances.len()
+                ),
+                vec![],
+            )));
+        }
+        instances.iter().collect()
+    } else if let Json::Obj(inputs) = doc.get("inputs") {
+        // Named endpoint feed: single-input serving signatures take
+        // exactly one, and the name must match the signature's endpoint.
+        match inputs.iter().collect::<Vec<_>>().as_slice() {
+            [(name, sample)] if *name == &meta.input_name => vec![*sample],
+            [(name, _)] => {
+                return Err(Box::new(error_response(
+                    400,
+                    "unknown_endpoint",
+                    &format!(
+                        "model '{model}' signature '{}': no input endpoint '{name}' \
+                         (expected '{}')",
+                        meta.signature, meta.input_name
+                    ),
+                    vec![
+                        ("endpoint", Json::Str(name.to_string())),
+                        ("expected_endpoint", Json::Str(meta.input_name.clone())),
+                    ],
+                )))
+            }
+            _ => {
+                return Err(Box::new(error_response(
+                    400,
+                    "bad_request",
+                    &format!(
+                        "\"inputs\" must feed exactly the endpoint '{}'",
+                        meta.input_name
+                    ),
+                    vec![],
+                )))
+            }
+        }
+    } else {
+        return Err(Box::new(error_response(
+            400,
+            "bad_request",
+            "body must carry \"instances\": [<sample>, ...] or \
+             \"inputs\": {\"<endpoint>\": <sample>}",
+            vec![],
+        )));
+    };
+
+    let mut samples = Vec::with_capacity(raw_samples.len());
+    for (i, raw) in raw_samples.into_iter().enumerate() {
+        let mut flat = Vec::with_capacity(meta.in_elems);
+        flatten_f32(raw, &mut flat).map_err(|msg| {
+            Box::new(error_response(
+                400,
+                "bad_request",
+                &format!("sample {i}: {msg}"),
+                vec![],
+            ))
+        })?;
+        if flat.len() != meta.in_elems {
+            // Same wording the Model facade / serving pipeline uses for
+            // mis-sized feeds, plus machine-readable expected-vs-got meta.
+            return Err(Box::new(error_response(
+                400,
+                "shape_mismatch",
+                &format!(
+                    "model '{model}' input '{}': expected {} f32 values (shape {:?}), got {}",
+                    meta.input_name,
+                    meta.in_elems,
+                    meta.sample_in_shape,
+                    flat.len()
+                ),
+                vec![
+                    ("endpoint", Json::Str(meta.input_name.clone())),
+                    (
+                        "expected_shape",
+                        Json::Arr(meta.sample_in_shape.iter().map(|&d| Json::from_usize(d)).collect()),
+                    ),
+                    ("expected_elems", Json::from_usize(meta.in_elems)),
+                    ("got_elems", Json::from_usize(flat.len())),
+                ],
+            )));
+        }
+        samples.push(flat);
+    }
+    Ok(samples)
+}
+
+/// Flatten arbitrarily nested JSON arrays of numbers into `out`,
+/// row-major.
+fn flatten_f32(v: &Json, out: &mut Vec<f32>) -> std::result::Result<(), String> {
+    match v {
+        Json::Num(n) => {
+            out.push(*n as f32);
+            Ok(())
+        }
+        Json::Arr(items) => {
+            for item in items {
+                flatten_f32(item, out)?;
+            }
+            Ok(())
+        }
+        other => Err(format!("expected numbers/arrays, found {other}")),
+    }
+}
+
+/// Structured error body:
+/// `{"error": {"status": N, "kind": "...", "message": "...", ...extra}}`.
+fn error_response(status: u16, kind: &str, message: &str, extra: Vec<(&str, Json)>) -> Response {
+    let mut e = BTreeMap::new();
+    e.insert("status".to_string(), Json::from_usize(status as usize));
+    e.insert("kind".to_string(), Json::Str(kind.to_string()));
+    e.insert("message".to_string(), Json::Str(message.to_string()));
+    for (k, v) in extra {
+        e.insert(k.to_string(), v);
+    }
+    let mut top = BTreeMap::new();
+    top.insert("error".to_string(), Json::Obj(e));
+    Response::json(status, Json::Obj(top).to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::client::NetClient;
+    use crate::serve::batcher::BatchPolicy;
+    use crate::serve::hosted::ModelSpec;
+    use crate::serve::async_server::AsyncServerConfig;
+    use crate::tf::model::ModelBundle;
+    use crate::tf::session::SessionOptions;
+
+    fn tiny_server(http: HttpServerConfig) -> HttpServer {
+        let srv = AsyncInferenceServer::start(AsyncServerConfig {
+            models: vec![ModelSpec::from_bundle(
+                "tiny",
+                ModelBundle::tiny_fc_demo(4, 16, 4),
+                BatchPolicy { max_batch: 2, max_delay: Duration::from_millis(1) },
+            )],
+            session: SessionOptions { dispatch_workers: 2, ..SessionOptions::native_only() },
+            pipeline_depth: 2,
+        })
+        .expect("inference server");
+        HttpServer::start(srv, http).expect("http server")
+    }
+
+    #[test]
+    fn healthz_models_and_predict_roundtrip() {
+        let mut server = tiny_server(HttpServerConfig::default());
+        let mut client = NetClient::connect(server.local_addr()).unwrap();
+
+        let health = client.get("/healthz").unwrap();
+        assert_eq!(health.status, 200);
+        let doc = health.json().unwrap();
+        assert_eq!(doc.get("status").as_str(), Some("ok"));
+        assert_eq!(doc.get("models").idx(0).as_str(), Some("tiny"));
+
+        let listing = client.get("/v1/models").unwrap();
+        assert_eq!(listing.status, 200);
+        let doc = listing.json().unwrap();
+        let m = doc.get("models").idx(0);
+        assert_eq!(m.get("name").as_str(), Some("tiny"));
+        assert_eq!(m.get("signature").as_str(), Some("serve"));
+        assert_eq!(m.get("input").get("name").as_str(), Some("x"));
+        assert_eq!(m.get("input").get("elems").as_usize(), Some(16));
+        assert_eq!(m.get("output").get("elems").as_usize(), Some(4));
+
+        let sample: Vec<f32> = (0..16).map(|i| i as f32 * 0.1 - 0.8).collect();
+        let resp = client.predict("tiny", &[sample.as_slice()], &[]).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let doc = resp.json().unwrap();
+        let row = doc.get("predictions").idx(0).as_arr().unwrap();
+        assert_eq!(row.len(), 4);
+        drop(client); // free the worker before drain
+        server.shutdown();
+    }
+
+    #[test]
+    fn named_endpoint_feed_and_keep_alive_reuse() {
+        let mut server = tiny_server(HttpServerConfig::default());
+        let mut client = NetClient::connect(server.local_addr()).unwrap();
+        let body = r#"{"inputs": {"x": [0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5]}}"#;
+        for _ in 0..3 {
+            // Same client object: requests 2 and 3 reuse the connection.
+            let resp = client
+                .request("POST", "/v1/models/tiny:predict", &[], Some(body))
+                .unwrap();
+            assert_eq!(resp.status, 200, "{}", resp.body);
+        }
+        assert_eq!(server.net_snapshot().connections, 1, "keep-alive reused");
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_routes_and_methods() {
+        let mut server = tiny_server(HttpServerConfig::default());
+        let mut client = NetClient::connect(server.local_addr()).unwrap();
+        assert_eq!(client.get("/nope").unwrap().status, 404);
+        let r = client.request("GET", "/v1/models/tiny:predict", &[], None).unwrap();
+        assert_eq!(r.status, 405, "predict is POST-only");
+        let r = client.request("DELETE", "/v1/models", &[], None).unwrap();
+        assert_eq!(r.status, 405);
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_counts_responses() {
+        let mut server = tiny_server(HttpServerConfig::default());
+        let mut client = NetClient::connect(server.local_addr()).unwrap();
+        client.get("/healthz").unwrap();
+        client.get("/nope").unwrap();
+        let m = client.get("/metrics").unwrap();
+        assert_eq!(m.status, 200);
+        assert!(m.body.contains("tf_fpga_http_responses_total{code=\"200\"} 1"), "{}", m.body);
+        assert!(m.body.contains("tf_fpga_http_responses_total{code=\"404\"} 1"), "{}", m.body);
+        assert!(m.body.contains("tf_fpga_serve_requests_total 0"), "{}", m.body);
+        assert!(m.body.contains("tf_fpga_agent_dispatches_total{agent="), "{}", m.body);
+        drop(client);
+        server.shutdown();
+    }
+}

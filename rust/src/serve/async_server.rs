@@ -213,6 +213,20 @@ impl AsyncInferenceServer {
         self.metas.get(model)
     }
 
+    /// Names of every hosted model, sorted — the stable iteration order
+    /// the HTTP listing and metrics endpoints rely on.
+    pub fn models(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.metas.keys().map(String::as_str).collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// Point-in-time pipeline counters (includes the live in-flight gauge
+    /// that [`AsyncInferenceServer::report`] does not carry).
+    pub fn counters(&self) -> crate::metrics::counters::CounterSnapshot {
+        self.counters.snapshot()
+    }
+
     /// Submit one flattened input sample to `model`; blocks until its
     /// output row is ready.
     pub fn infer(&self, model: &str, sample: Vec<f32>) -> Result<Vec<f32>> {

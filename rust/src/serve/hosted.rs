@@ -64,8 +64,17 @@ impl ModelSpec {
 }
 
 /// Public per-model I/O meta, for clients that need to size requests.
+/// Carries the served signature and its endpoint *names* as well as the
+/// shapes, so network frontends can validate named feeds and list hosted
+/// models without reaching into the bundle.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelIoMeta {
+    /// Name of the signature this lane serves (usually `"serve"`).
+    pub signature: String,
+    /// Public name of the signature's single input endpoint.
+    pub input_name: String,
+    /// Public name of the signature's single output endpoint.
+    pub output_name: String,
     /// Per-request input shape (the input endpoint's shape minus dim 0).
     pub sample_in_shape: Vec<usize>,
     pub in_elems: usize,
@@ -79,6 +88,11 @@ pub struct ModelIoMeta {
 #[derive(Debug, Clone)]
 pub(crate) struct HostedModel {
     pub name: String,
+    /// Served signature name and its public endpoint names (what remote
+    /// clients feed/fetch by; distinct from the merged node names below).
+    pub signature: String,
+    pub in_ep_name: String,
+    pub out_ep_name: String,
     /// Merged input placeholder node name (`{model}/{node}`).
     pub x_name: String,
     /// Merged output node name.
@@ -101,6 +115,9 @@ pub(crate) struct HostedModel {
 impl HostedModel {
     pub fn io_meta(&self) -> ModelIoMeta {
         ModelIoMeta {
+            signature: self.signature.clone(),
+            input_name: self.in_ep_name.clone(),
+            output_name: self.out_ep_name.clone(),
             sample_in_shape: self.sample_in_shape.clone(),
             in_elems: self.in_elems,
             sample_out_shape: self.sample_out_shape.clone(),
@@ -246,6 +263,9 @@ pub(crate) fn host_model(g: &mut Graph, spec: &ModelSpec) -> Result<HostedModel>
 
     Ok(HostedModel {
         name: spec.name.clone(),
+        signature: spec.signature.clone(),
+        in_ep_name: in_ep.name.clone(),
+        out_ep_name: out_ep.name.clone(),
         x_name: format!("{}/{}", spec.name, in_ep.node),
         out_name: format!("{}/{}", spec.name, out_ep.node),
         max_batch,
@@ -277,6 +297,10 @@ mod tests {
         h.resolve_output(&g).unwrap();
         assert_eq!(h.x_name, "tiny/x");
         assert_eq!(h.out_name, "tiny/y");
+        let meta = h.io_meta();
+        assert_eq!(meta.signature, "serve");
+        assert_eq!(meta.input_name, "x");
+        assert_eq!(meta.output_name, "y");
         assert_eq!(h.full_in_shape, vec![4, 16]);
         assert_eq!(h.in_elems, 16);
         assert_eq!(h.sample_out_shape, vec![4]);

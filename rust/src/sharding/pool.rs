@@ -13,6 +13,34 @@ use crate::fpga::bitstream::Bitstream;
 use std::sync::Arc;
 
 /// N independent FPGA agents with a shared role namespace.
+///
+/// Usually constructed for you via
+/// [`SessionOptions::fpga_pool`](crate::tf::session::SessionOptions);
+/// build one directly when wiring a custom runtime:
+///
+/// ```
+/// use tf_fpga::fpga::device::{ComputeBinding, FpgaConfig};
+/// use tf_fpga::fpga::roles::paper_roles;
+/// use tf_fpga::reconfig::policy::PolicyKind;
+/// use tf_fpga::sharding::FpgaPool;
+/// use tf_fpga::tf::tensor::Tensor;
+/// use std::sync::Arc;
+///
+/// // Two agents, each with its own 2-region PR fabric and LRU policy.
+/// let pool = FpgaPool::new(2, |i| FpgaConfig {
+///     num_regions: 2,
+///     policy: PolicyKind::Lru.build(i as u64),
+///     ..FpgaConfig::default()
+/// });
+/// assert_eq!(pool.len(), 2);
+///
+/// // One registration covers every member under the same kernel id, so
+/// // compiled plans stay valid wherever the router sends them.
+/// let echo = ComputeBinding::Native(Arc::new(|ins: &[Tensor]| Ok(ins.to_vec())));
+/// let kernel = pool.register_role(paper_roles().remove(0), echo);
+/// assert!(pool.agents().iter().all(|a| !a.is_resident(kernel)),
+///         "registration alone reconfigures nothing");
+/// ```
 pub struct FpgaPool {
     agents: Vec<Arc<FpgaAgent>>,
 }
@@ -38,18 +66,23 @@ impl FpgaPool {
         FpgaPool { agents }
     }
 
+    /// Number of agents in the pool (≥ 1).
     pub fn len(&self) -> usize {
         self.agents.len()
     }
 
+    /// Never true — `new` clamps to at least one agent — but provided for
+    /// the `len`/`is_empty` convention.
     pub fn is_empty(&self) -> bool {
         self.agents.is_empty()
     }
 
+    /// All members in index order (the order routing ties break toward).
     pub fn agents(&self) -> &[Arc<FpgaAgent>] {
         &self.agents
     }
 
+    /// Member `i`. Panics when out of range, like slice indexing.
     pub fn agent(&self, i: usize) -> &Arc<FpgaAgent> {
         &self.agents[i]
     }

@@ -26,14 +26,26 @@ use std::sync::{Arc, Mutex};
 /// How the router assigns dispatches to pool agents.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardStrategy {
-    /// Cyclic assignment, blind to load and residency.
+    /// Cyclic assignment, blind to load and residency. Cheapest decision
+    /// (one atomic increment) and perfectly even over any window that is
+    /// a multiple of the pool size — but it reconfigures freely, so a
+    /// working set larger than one agent's PR regions thrashes. The
+    /// baseline the other strategies are measured against.
     RoundRobin,
-    /// Lowest in-flight count wins (ties → lowest agent index).
+    /// Lowest in-flight count wins, ties to the lowest agent index. Best
+    /// when kernels are uniform (any agent serves any dispatch equally
+    /// well) and batch runtimes vary; ignores bitstream residency, so it
+    /// shares `RoundRobin`'s thrashing behaviour for large working sets.
     LeastLoaded,
-    /// Prefer agents already holding the kernel's bitstream (avoids
-    /// reconfiguration churn); cold kernels fall back to least-loaded,
-    /// and hot kernels (queued demand above their replica count) spill
-    /// onto an idle agent, replicating the bitstream there.
+    /// Residency-first routing: prefer agents already holding the
+    /// kernel's bitstream in a PR region (dispatching there reconfigures
+    /// nothing). A *cold* kernel is placed on an agent with a free region
+    /// when one exists — loading there evicts nothing and spreads the
+    /// working set — otherwise on the least-loaded agent. A *hot* kernel
+    /// (queued demand from [`Router::hint_demand`] exceeding its replica
+    /// count while every replica is busy) spills onto an idle agent,
+    /// whose reconfiguration creates a new replica that later affinity
+    /// decisions spread load across. The default for serving.
     KernelAffinity,
 }
 
@@ -71,8 +83,16 @@ struct Slot {
 }
 
 /// Retires one routed dispatch from its agent's in-flight gauge on drop.
-/// Hold it until the dispatch's result is harvested (plan replay keeps it
-/// in the in-flight ring; `PendingRun` carries it to `wait`).
+///
+/// Lifecycle: [`Router::route`] increments the chosen slot's gauge and
+/// hands the guard to whoever owns the dispatch — plan replay holds it in
+/// the in-flight ring until the step's completion signal fires;
+/// `Session::run_async` moves it into the returned `PendingRun`, so the
+/// gauge retires when the caller harvests (or drops) the pending result.
+/// Hold the guard for exactly as long as the dispatch occupies the agent:
+/// dropping early under-reports load (least-loaded routing over-commits
+/// the agent), leaking it pins the agent "busy" forever. The guard only
+/// touches the shared gauge, so it is `Send` and may drop on any thread.
 #[derive(Debug)]
 pub struct RouteGuard {
     inflight: Arc<AtomicU64>,

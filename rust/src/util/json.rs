@@ -9,6 +9,16 @@
 //! any `f32` widened into one, which is what lets model weights embedded
 //! in a bundle survive a save/load cycle bit-for-bit. Written because
 //! `serde`/`serde_json` are not available in the offline vendor set.
+//!
+//! Since the parser also decodes **network-exposed** input (the [`crate::net`]
+//! HTTP frontend feeds request bodies through it), parsing is bounded:
+//! [`JsonLimits`] caps the nesting depth (the parser recurses per nesting
+//! level, so an adversarial `[[[[...` document would otherwise overflow
+//! the stack) and the total payload length. [`Json::parse`] applies
+//! `JsonLimits::default()`; servers pass stricter limits through
+//! [`Json::parse_with_limits`]. Violations surface as named
+//! [`JsonErrorKind`]s so callers can map them to specific wire errors
+//! (HTTP 400 vs 413) instead of string-matching.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -24,18 +34,74 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-/// Parse error with byte offset context.
+/// What a [`JsonError`] is about — named so callers (the HTTP frontend in
+/// particular) can branch on the violation instead of matching message
+/// text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JsonErrorKind {
+    /// Malformed JSON (bad token, truncated document, trailing bytes...).
+    Syntax,
+    /// Nesting exceeded [`JsonLimits::max_depth`]; parsing stopped before
+    /// the recursion could grow the stack any further.
+    TooDeep,
+    /// The document is longer than [`JsonLimits::max_bytes`]; rejected up
+    /// front without parsing anything.
+    TooLarge,
+}
+
+/// Parse error with byte offset context and a named [`JsonErrorKind`].
 #[derive(Debug, thiserror::Error)]
 #[error("json parse error at byte {offset}: {msg}")]
 pub struct JsonError {
     pub offset: usize,
     pub msg: String,
+    pub kind: JsonErrorKind,
+}
+
+/// Hard bounds applied while parsing. `max_depth` counts nested
+/// containers (each object/array level recurses once, so this is also the
+/// parser's stack bound); `max_bytes` caps the whole document length.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JsonLimits {
+    pub max_depth: usize,
+    pub max_bytes: usize,
+}
+
+impl Default for JsonLimits {
+    /// Depth-capped, length-unbounded: the stack hazard applies to every
+    /// parse (so `Json::parse` always carries the depth gate — any real
+    /// `model.json` nests a handful of levels, never 128), but trusted
+    /// local documents (bundles with megabytes of embedded weights) must
+    /// not hit an arbitrary size ceiling. Byte limits are for network
+    /// boundaries, which pass their own [`JsonLimits`] explicitly.
+    fn default() -> JsonLimits {
+        JsonLimits { max_depth: 128, max_bytes: usize::MAX }
+    }
 }
 
 impl Json {
-    /// Parse a complete JSON document (trailing whitespace allowed).
+    /// Parse a complete JSON document (trailing whitespace allowed) under
+    /// `JsonLimits::default()`.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        Json::parse_with_limits(text, JsonLimits::default())
+    }
+
+    /// Parse under explicit [`JsonLimits`] — the entry point for
+    /// network-exposed input, where the caller knows how much nesting and
+    /// payload its protocol legitimately needs.
+    pub fn parse_with_limits(text: &str, limits: JsonLimits) -> Result<Json, JsonError> {
+        if text.len() > limits.max_bytes {
+            return Err(JsonError {
+                offset: 0,
+                msg: format!(
+                    "document is {} bytes, limit {}",
+                    text.len(),
+                    limits.max_bytes
+                ),
+                kind: JsonErrorKind::TooLarge,
+            });
+        }
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0, max_depth: limits.max_depth };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -123,11 +189,28 @@ impl Json {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
+    max_depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: impl Into<String>) -> JsonError {
-        JsonError { offset: self.i, msg: msg.into() }
+        JsonError { offset: self.i, msg: msg.into(), kind: JsonErrorKind::Syntax }
+    }
+
+    /// Entering a container (object/array): bump the depth and refuse to
+    /// recurse past the limit. Errors abort the whole parse, so the
+    /// matching decrement only happens on the success paths.
+    fn descend(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > self.max_depth {
+            return Err(JsonError {
+                offset: self.i,
+                msg: format!("nesting depth exceeds limit {}", self.max_depth),
+                kind: JsonErrorKind::TooDeep,
+            });
+        }
+        Ok(())
     }
 
     fn peek(&self) -> Option<u8> {
@@ -182,11 +265,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -199,18 +284,23 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(m)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(m));
+                }
                 _ => return Err(self.err("expected ',' or '}' in object")),
             }
         }
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
         self.expect(b'[')?;
         let mut a = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(a));
         }
         loop {
@@ -218,7 +308,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(a)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(a));
+                }
                 _ => return Err(self.err("expected ',' or ']' in array")),
             }
         }
@@ -553,6 +646,69 @@ mod tests {
         assert_eq!(Json::parse(&p).unwrap(), v);
         assert!(p.contains("\n  \"a\": [\n"), "pretty form:\n{p}");
         assert!(p.contains("\"c\": {}"), "empty containers stay inline:\n{p}");
+    }
+
+    #[test]
+    fn adversarial_nesting_is_rejected_not_a_stack_overflow() {
+        // 500k open brackets: without the depth gate this recurses 500k
+        // frames deep. With it, parsing stops at the limit with a named
+        // error long before the stack is in danger.
+        let bomb = "[".repeat(500_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert_eq!(err.kind, JsonErrorKind::TooDeep, "{err}");
+        assert!(err.msg.contains("128"), "names the limit: {err}");
+        // Same for objects.
+        let obomb = "{\"k\":".repeat(500_000);
+        let err = Json::parse(&obomb).unwrap_err();
+        assert_eq!(err.kind, JsonErrorKind::TooDeep, "{err}");
+    }
+
+    #[test]
+    fn depth_limit_is_exact() {
+        let limits = JsonLimits { max_depth: 4, max_bytes: 1 << 20 };
+        assert_eq!(
+            Json::parse_with_limits("[[[[1]]]]", limits).unwrap().idx(0).idx(0).idx(0).idx(0),
+            &Json::Num(1.0),
+            "depth exactly at the limit parses"
+        );
+        let err = Json::parse_with_limits("[[[[[1]]]]]", limits).unwrap_err();
+        assert_eq!(err.kind, JsonErrorKind::TooDeep);
+        // Sibling containers do not accumulate: depth is nesting, not count.
+        let wide = format!("[{}]", vec!["[1]"; 1000].join(","));
+        assert!(Json::parse_with_limits(&wide, limits).is_ok(), "wide is not deep");
+    }
+
+    #[test]
+    fn oversized_payload_is_rejected_up_front() {
+        let limits = JsonLimits { max_depth: 8, max_bytes: 16 };
+        assert!(Json::parse_with_limits("[1,2,3]", limits).is_ok());
+        let err = Json::parse_with_limits("[1,2,3,4,5,6,7,8]", limits).unwrap_err();
+        assert_eq!(err.kind, JsonErrorKind::TooLarge);
+        assert!(err.msg.contains("16"), "names the limit: {err}");
+        assert_eq!(err.offset, 0, "rejected before parsing");
+    }
+
+    #[test]
+    fn syntax_errors_keep_the_syntax_kind() {
+        for doc in ["{", "[1,]", "\"unterminated", "{}extra"] {
+            assert_eq!(Json::parse(doc).unwrap_err().kind, JsonErrorKind::Syntax, "{doc}");
+        }
+    }
+
+    #[test]
+    fn default_limits_admit_bundle_shaped_documents() {
+        // Deeply-valued but shallowly-nested, like model.json: a few
+        // levels of objects holding long flat arrays.
+        let weights: Vec<String> = (0..10_000).map(|i| format!("{}.5", i)).collect();
+        let doc = format!(
+            "{{\"graph\":{{\"nodes\":[{{\"w\":[{}]}}]}}}}",
+            weights.join(",")
+        );
+        let v = Json::parse(&doc).unwrap();
+        assert_eq!(
+            v.get("graph").get("nodes").idx(0).get("w").as_arr().unwrap().len(),
+            10_000
+        );
     }
 
     #[test]
