@@ -12,9 +12,14 @@
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+use tf_fpga::bench::{write_and_check, BenchArtifact};
 use tf_fpga::net::{HttpServer, HttpServerConfig, NetClient};
 use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig, BatchPolicy, ModelSpec};
 use tf_fpga::tf::session::SessionOptions;
+
+/// Committed floor values for `--check` (absolute throughput nulled —
+/// machine-dependent — only the overhead factor gates).
+const BASELINE: &str = include_str!("baselines/BENCH_http.json");
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -66,6 +71,10 @@ fn main() {
         "{:<12} {:>14} {:>14} {:>10}   (req/s; http/in-process)",
         "batch size", "in-process", "http", "factor"
     );
+
+    let mut artifact = BenchArtifact::new("http");
+    artifact.set_u64("requests", total as u64);
+    artifact.set_u64("clients", clients as u64);
 
     let mut sane = true;
     for max_batch in [1usize, 8] {
@@ -128,13 +137,36 @@ fn main() {
                 net.connections
             );
             sane &= rep.failed == 0 && net.responses_with(200) as usize == total;
+            let prefix = format!("http.batch_{max_batch}");
+            artifact.set_u64(&format!("{prefix}.p50_us"), rep.latency_us_p50);
+            artifact.set_u64(&format!("{prefix}.p99_us"), rep.latency_us_p99);
+            artifact.set_f64(&format!("{prefix}.batch_fill"), rep.mean_batch_fill);
             drop(server); // graceful drain
             total as f64 / elapsed.as_secs_f64()
         };
 
         let factor = http_rps / inproc_rps;
         sane &= factor > 0.05; // the wire may cost, but not 20x
+        artifact.set_f64(&format!("inprocess.batch_{max_batch}.req_s"), inproc_rps);
+        artifact.set_f64(&format!("http.batch_{max_batch}.req_s"), http_rps);
+        artifact.set_f64(&format!("overhead_factor.batch_{max_batch}"), factor);
         println!("{:<12} {:>14.1} {:>14.1} {:>9.2}x", max_batch, inproc_rps, http_rps, factor);
+    }
+
+    // Artifact + optional baseline gate before the pass/fail logic, so CI
+    // always gets the JSON even on a failing run.
+    match write_and_check(&artifact, BASELINE) {
+        Ok(regs) if regs.is_empty() => {}
+        Ok(regs) => {
+            for r in &regs {
+                println!("REGRESSION: {r}");
+            }
+            std::process::exit(1);
+        }
+        Err(e) => {
+            println!("bench artifact error: {e}");
+            std::process::exit(1);
+        }
     }
 
     if sane {

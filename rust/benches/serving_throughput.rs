@@ -16,11 +16,16 @@
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+use tf_fpga::bench::{write_and_check, BenchArtifact};
 use tf_fpga::serve::{
     AsyncInferenceServer, AsyncServerConfig, BatchPolicy, InferenceServer, ModelSpec,
     ServerConfig,
 };
 use tf_fpga::tf::session::SessionOptions;
+
+/// Committed floor values for `--check` (absolute throughput is nulled
+/// out there — machine-dependent — only scaling ratios gate).
+const BASELINE: &str = include_str!("baselines/BENCH_serving.json");
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -64,6 +69,10 @@ fn main() {
         "{:<12} {:>12} {:>12} {:>9}   (req/s, higher is better)",
         "batch size", "sync", "async", "speedup"
     );
+
+    let mut artifact = BenchArtifact::new("serving");
+    artifact.set_u64("requests", total as u64);
+    artifact.set_u64("clients", clients as u64);
 
     let mut all_faster = true;
     for max_batch in [1usize, 8, 32] {
@@ -110,6 +119,12 @@ fn main() {
                 "  [async b{max_batch}: fill {:.1}, max in-flight {}, p99 {} µs]",
                 rep.mean_batch_fill, rep.max_inflight, rep.latency_us_p99
             );
+            let prefix = format!("async.batch_{max_batch}");
+            artifact.set_f64(&format!("{prefix}.req_s"), rps);
+            artifact.set_u64(&format!("{prefix}.p50_us"), rep.latency_us_p50);
+            artifact.set_u64(&format!("{prefix}.p99_us"), rep.latency_us_p99);
+            artifact.set_f64(&format!("{prefix}.batch_fill"), rep.mean_batch_fill);
+            artifact.set_u64(&format!("{prefix}.reconfigs"), rep.reconfig.misses);
             if let Ok(mut s) = Arc::try_unwrap(srv) {
                 s.stop();
             }
@@ -118,6 +133,8 @@ fn main() {
 
         let speedup = async_rps / sync_rps;
         all_faster &= speedup > 1.0;
+        artifact.set_f64(&format!("sync.batch_{max_batch}.req_s"), sync_rps);
+        artifact.set_f64(&format!("speedup.batch_{max_batch}"), speedup);
         println!(
             "{:<12} {:>12.1} {:>12.1} {:>8.2}x",
             max_batch, sync_rps, async_rps, speedup
@@ -166,9 +183,27 @@ fn main() {
         if pool == 2 {
             pool2_scaling = scaling;
         }
+        artifact.set_f64(&format!("pool_scaling.pool_{pool}.req_s"), rps);
+        artifact.set_f64(&format!("pool_scaling.pool_{pool}.scaling"), scaling);
         println!("{:<12} {:>12.1} {:>8.2}x", pool, rps, scaling);
         if let Ok(mut s) = Arc::try_unwrap(srv) {
             s.stop();
+        }
+    }
+
+    // Artifact + optional baseline gate before the existing pass/fail
+    // logic, so CI always gets the JSON even on a failing run.
+    match write_and_check(&artifact, BASELINE) {
+        Ok(regs) if regs.is_empty() => {}
+        Ok(regs) => {
+            for r in &regs {
+                println!("REGRESSION: {r}");
+            }
+            std::process::exit(1);
+        }
+        Err(e) => {
+            println!("bench artifact error: {e}");
+            std::process::exit(1);
         }
     }
 

@@ -1,0 +1,229 @@
+//! Machine-readable benchmark artifacts (`BENCH_<area>.json`).
+//!
+//! Bench runners assemble a [`BenchArtifact`] — a nested JSON document of
+//! headline numbers (req/s, p50/p99 latency, batch fill, scaling ratios)
+//! — and write it next to the bench (or into `$BENCH_OUT_DIR`), so CI can
+//! upload the file and trend dashboards can diff runs without scraping
+//! stdout tables.
+//!
+//! The companion [`compare_to_baseline`] implements `--check` mode: walk
+//! the current document against a committed baseline and flag any metric
+//! that regressed beyond a tolerance. Two conventions keep the comparison
+//! self-describing:
+//!
+//! * keys ending in `_us` are latencies — **lower** is better; every
+//!   other numeric key is a rate/ratio — **higher** is better;
+//! * a baseline of `null` means "machine-dependent, do not gate" (the
+//!   committed baselines null out absolute throughput and keep only
+//!   scaling ratios, which are hardware-independent floors).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// One bench run's worth of headline metrics, keyed by dotted paths.
+pub struct BenchArtifact {
+    area: String,
+    root: Json,
+}
+
+impl BenchArtifact {
+    /// `area` names the file: `BENCH_<area>.json`.
+    pub fn new(area: &str) -> BenchArtifact {
+        BenchArtifact { area: area.to_string(), root: Json::Obj(BTreeMap::new()) }
+    }
+
+    /// Set a metric at a dotted path (`"serving.batch_8.req_s"`),
+    /// creating intermediate objects as needed. Overwrites on repeat.
+    pub fn set(&mut self, path: &str, value: Json) {
+        let mut node = &mut self.root;
+        let parts: Vec<&str> = path.split('.').collect();
+        for (i, part) in parts.iter().enumerate() {
+            let map = match node {
+                Json::Obj(m) => m,
+                other => {
+                    // A scalar was set where an object now needs to live:
+                    // replace it (last write wins, like the leaves).
+                    *other = Json::Obj(BTreeMap::new());
+                    match other {
+                        Json::Obj(m) => m,
+                        _ => unreachable!(),
+                    }
+                }
+            };
+            if i == parts.len() - 1 {
+                map.insert(part.to_string(), value);
+                return;
+            }
+            node = map
+                .entry(part.to_string())
+                .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        }
+    }
+
+    pub fn set_f64(&mut self, path: &str, v: f64) {
+        self.set(path, Json::Num(v));
+    }
+
+    pub fn set_u64(&mut self, path: &str, v: u64) {
+        self.set(path, Json::Num(v as f64));
+    }
+
+    /// The assembled document.
+    pub fn json(&self) -> &Json {
+        &self.root
+    }
+
+    /// Destination path: `$BENCH_OUT_DIR/BENCH_<area>.json` (the current
+    /// directory when the variable is unset — for `cargo bench` that is
+    /// the crate root, which is what CI uploads).
+    pub fn path(&self) -> PathBuf {
+        let dir = std::env::var_os("BENCH_OUT_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        dir.join(format!("BENCH_{}.json", self.area))
+    }
+
+    /// Write the artifact (pretty-printed, trailing newline) and return
+    /// where it landed.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let path = self.path();
+        std::fs::write(&path, format!("{}\n", self.root.pretty()))?;
+        Ok(path)
+    }
+}
+
+/// Walk `current` against `baseline` and report every metric that
+/// regressed beyond `tolerance` (0.2 = 20%). Keys ending `_us` must not
+/// rise above `baseline * (1 + tolerance)`; all other numeric keys must
+/// not fall below `baseline * (1 - tolerance)`. Baseline `null` leaves
+/// and keys missing from the baseline are not gated; keys present in the
+/// baseline but missing from `current` are reported (a bench silently
+/// dropping a metric should fail `--check`, not pass it).
+pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance: f64) -> Vec<String> {
+    let mut regressions = Vec::new();
+    walk("", current, baseline, tolerance, &mut regressions);
+    regressions
+}
+
+fn walk(path: &str, current: &Json, baseline: &Json, tol: f64, out: &mut Vec<String>) {
+    match baseline {
+        Json::Null => {}
+        Json::Obj(bm) => {
+            for (key, bv) in bm {
+                let child_path = if path.is_empty() {
+                    key.clone()
+                } else {
+                    format!("{path}.{key}")
+                };
+                match current.as_obj().and_then(|cm| cm.get(key)) {
+                    Some(cv) => walk(&child_path, cv, bv, tol, out),
+                    None => {
+                        if *bv != Json::Null {
+                            out.push(format!("{child_path}: missing from current run"));
+                        }
+                    }
+                }
+            }
+        }
+        Json::Num(b) => {
+            let Some(c) = current.as_f64() else {
+                out.push(format!("{path}: expected a number, got {current}"));
+                return;
+            };
+            let key = path.rsplit('.').next().unwrap_or(path);
+            if key.ends_with("_us") {
+                let limit = b * (1.0 + tol);
+                if c > limit {
+                    out.push(format!(
+                        "{path}: {c} exceeds baseline {b} by more than {:.0}%",
+                        tol * 100.0
+                    ));
+                }
+            } else {
+                let floor = b * (1.0 - tol);
+                if c < floor {
+                    out.push(format!(
+                        "{path}: {c} below baseline {b} by more than {:.0}%",
+                        tol * 100.0
+                    ));
+                }
+            }
+        }
+        // Booleans/strings in a baseline are informational, not gated.
+        _ => {}
+    }
+}
+
+/// Shared `--check` driver for bench mains: write the artifact, then — if
+/// `--check` was passed on the command line — compare against the
+/// committed baseline text and return the regression list for the caller
+/// to report and exit nonzero on.
+pub fn write_and_check(
+    artifact: &BenchArtifact,
+    baseline_text: &str,
+) -> std::io::Result<Vec<String>> {
+    let path = artifact.write()?;
+    println!("bench artifact: {}", path.display());
+    if !std::env::args().any(|a| a == "--check") {
+        return Ok(Vec::new());
+    }
+    let baseline = Json::parse(baseline_text).map_err(|e| {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("baseline is not valid JSON: {e}"),
+        )
+    })?;
+    Ok(compare_to_baseline(artifact.json(), &baseline, 0.2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dotted_set_builds_nested_objects() {
+        let mut a = BenchArtifact::new("test");
+        a.set_f64("serving.batch_8.req_s", 1234.5);
+        a.set_u64("serving.batch_8.p99_us", 900);
+        a.set_f64("speedup.batch_8", 3.1);
+        let j = a.json();
+        assert_eq!(j.get("serving").get("batch_8").get("req_s").as_f64(), Some(1234.5));
+        assert_eq!(j.get("serving").get("batch_8").get("p99_us").as_usize(), Some(900));
+        // Round-trips through the writer.
+        let back = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(&back, j);
+    }
+
+    #[test]
+    fn latency_keys_gate_upward_and_rates_gate_downward() {
+        let baseline =
+            Json::parse(r#"{"a":{"p99_us":100,"req_s":1000}}"#).unwrap();
+        // Within tolerance both directions: no regressions.
+        let ok = Json::parse(r#"{"a":{"p99_us":115,"req_s":850}}"#).unwrap();
+        assert!(compare_to_baseline(&ok, &baseline, 0.2).is_empty());
+        // Latency 21% up and throughput 21% down both flag.
+        let bad = Json::parse(r#"{"a":{"p99_us":121,"req_s":790}}"#).unwrap();
+        let regs = compare_to_baseline(&bad, &baseline, 0.2);
+        assert_eq!(regs.len(), 2, "{regs:?}");
+        assert!(regs.iter().any(|r| r.contains("a.p99_us")), "{regs:?}");
+        assert!(regs.iter().any(|r| r.contains("a.req_s")), "{regs:?}");
+        // Faster latency and higher throughput never flag.
+        let better = Json::parse(r#"{"a":{"p99_us":10,"req_s":9000}}"#).unwrap();
+        assert!(compare_to_baseline(&better, &baseline, 0.2).is_empty());
+    }
+
+    #[test]
+    fn null_baselines_are_not_gated_but_missing_metrics_are() {
+        let baseline =
+            Json::parse(r#"{"a":{"req_s":null,"fill":8},"b":null}"#).unwrap();
+        // req_s wildly low and "b" absent: both fine (nulled out).
+        let run = Json::parse(r#"{"a":{"req_s":1,"fill":8}}"#).unwrap();
+        assert!(compare_to_baseline(&run, &baseline, 0.2).is_empty());
+        // But a gated key vanishing from the run is a failure.
+        let dropped = Json::parse(r#"{"a":{"req_s":1}}"#).unwrap();
+        let regs = compare_to_baseline(&dropped, &baseline, 0.2);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("a.fill") && regs[0].contains("missing"), "{regs:?}");
+    }
+}

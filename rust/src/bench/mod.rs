@@ -1,8 +1,10 @@
 //! Benchmark support: timing harness + the paper's table generators
 //! (shared by `rust/benches/*`, the CLI and the integration tests).
 
+pub mod artifact;
 pub mod harness;
 pub mod tables;
 
+pub use artifact::{compare_to_baseline, write_and_check, BenchArtifact};
 pub use harness::{time_n, BenchResult};
 pub use tables::{table1, table2, table3, Table2Measurement, Table3Row};

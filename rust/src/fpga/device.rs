@@ -18,9 +18,85 @@ use crate::reconfig::manager::{LoadOutcome, ReconfigManager, ReconfigStats};
 use crate::reconfig::policy::EvictionPolicy;
 use crate::runtime::pjrt::PjrtHandle;
 use crate::tf::tensor::Tensor;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// A deterministic fault-injection schedule for one agent (test-only
+/// machinery, but compiled in: the chaos suite drives a release-built
+/// server with it). Each dispatch draws a fault decision from a PRNG
+/// seeded with `seed ^ hash(dispatch_index)`, so a given `(plan, index)`
+/// pair always yields the same fault — chaos runs replay bit-identically
+/// for a fixed seed, independent of thread interleaving.
+///
+/// Probabilities are evaluated in order drop → stall → slow against one
+/// uniform draw, so their sum should stay ≤ 1.0.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Probability a dispatch fails immediately with an agent-down error.
+    pub drop_prob: f64,
+    /// Probability a dispatch stalls (sleeps `stall`) *before* doing any
+    /// work — the wedged-agent case health probes must catch.
+    pub stall_prob: f64,
+    pub stall: Duration,
+    /// Probability a dispatch completes correctly but `slow` late.
+    pub slow_prob: f64,
+    pub slow: Duration,
+}
+
+impl FaultPlan {
+    /// A plan that never fires (handy as a mutation base).
+    pub fn none(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            drop_prob: 0.0,
+            stall_prob: 0.0,
+            stall: Duration::ZERO,
+            slow_prob: 0.0,
+            slow: Duration::ZERO,
+        }
+    }
+
+    fn decide(&self, index: u64) -> Option<Fault> {
+        let mut rng = crate::util::prng::Rng::new(
+            self.seed ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let u = rng.f64();
+        if u < self.drop_prob {
+            return Some(Fault::Drop);
+        }
+        if u < self.drop_prob + self.stall_prob {
+            return Some(Fault::Stall(self.stall));
+        }
+        if u < self.drop_prob + self.stall_prob + self.slow_prob {
+            return Some(Fault::Slow(self.slow));
+        }
+        None
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Fault {
+    Drop,
+    Stall(Duration),
+    Slow(Duration),
+}
+
+/// Point-in-time health of one agent, as seen by the router's probe.
+#[derive(Debug, Clone)]
+pub struct AgentHealth {
+    /// False after [`FpgaAgent::kill`] (until revived).
+    pub alive: bool,
+    /// Executions currently inside `execute`.
+    pub executing: u64,
+    /// Time since the last completed execution (None = never completed).
+    pub heartbeat_age: Option<Duration>,
+    /// Age of the oldest execution still inside `execute` (None = idle).
+    /// A wedged agent shows this growing without bound.
+    pub oldest_inflight_age: Option<Duration>,
+}
 
 /// How a role's numerics are computed when it executes.
 #[derive(Clone)]
@@ -96,6 +172,45 @@ pub struct FpgaAgent {
     realtime: bool,
     realtime_scale: f64,
     trace: Option<crate::trace::recorder::TraceRecorder>,
+    // --- fault injection + health (see FaultPlan / AgentHealth) ---
+    /// True after `kill()`: every dispatch fails fast with AgentDown.
+    killed: AtomicBool,
+    fault: Mutex<Option<FaultPlan>>,
+    /// Per-dispatch index feeding `FaultPlan::decide`.
+    fault_seq: AtomicU64,
+    /// Construction instant; health ages are measured against it.
+    started: Instant,
+    /// Microseconds-since-`started` of the last completed execution
+    /// (`u64::MAX` = never — the sentinel keeps the field lock-free).
+    last_beat_us: AtomicU64,
+    exec_seq: AtomicU64,
+    /// Start instant of every execution currently inside `execute`,
+    /// keyed by a monotone token (BTreeMap: the first entry is oldest).
+    executing: Mutex<BTreeMap<u64, Instant>>,
+}
+
+/// Drop guard bracketing one `execute` call: registers the execution on
+/// entry, and on *every* exit path (ok, error, injected drop) removes it
+/// and stamps the heartbeat.
+struct ExecTracker<'a> {
+    agent: &'a FpgaAgent,
+    token: u64,
+}
+
+impl<'a> ExecTracker<'a> {
+    fn begin(agent: &'a FpgaAgent) -> ExecTracker<'a> {
+        let token = agent.exec_seq.fetch_add(1, Ordering::Relaxed);
+        agent.executing.lock().unwrap().insert(token, Instant::now());
+        ExecTracker { agent, token }
+    }
+}
+
+impl Drop for ExecTracker<'_> {
+    fn drop(&mut self) {
+        self.agent.executing.lock().unwrap().remove(&self.token);
+        let us = self.agent.started.elapsed().as_micros() as u64;
+        self.agent.last_beat_us.store(us, Ordering::Release);
+    }
 }
 
 impl FpgaAgent {
@@ -125,6 +240,13 @@ impl FpgaAgent {
             realtime: config.realtime,
             realtime_scale: config.realtime_scale,
             trace: config.trace,
+            killed: AtomicBool::new(false),
+            fault: Mutex::new(None),
+            fault_seq: AtomicU64::new(0),
+            started: Instant::now(),
+            last_beat_us: AtomicU64::new(u64::MAX),
+            exec_seq: AtomicU64::new(0),
+            executing: Mutex::new(BTreeMap::new()),
         })
     }
 
@@ -200,6 +322,74 @@ impl FpgaAgent {
         out
     }
 
+    /// Mark the agent dead: every dispatch from now on fails fast with an
+    /// agent-down error (the packet processor still retires the packet, so
+    /// waiters see the failure instead of hanging). Executions already
+    /// inside `execute` run to completion.
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::Release);
+    }
+
+    /// Bring a killed agent back; dispatches succeed again and the router
+    /// re-admits it on its next health check.
+    pub fn revive(&self) {
+        self.killed.store(false, Ordering::Release);
+    }
+
+    pub fn is_alive(&self) -> bool {
+        !self.killed.load(Ordering::Acquire)
+    }
+
+    /// Install a deterministic fault schedule (replacing any existing one).
+    pub fn inject_faults(&self, plan: FaultPlan) {
+        *self.fault.lock().unwrap() = Some(plan);
+    }
+
+    /// Remove the fault schedule; subsequent dispatches run clean.
+    pub fn clear_faults(&self) {
+        *self.fault.lock().unwrap() = None;
+    }
+
+    fn next_fault(&self) -> Option<Fault> {
+        let plan = self.fault.lock().unwrap().clone()?;
+        let index = self.fault_seq.fetch_add(1, Ordering::Relaxed);
+        plan.decide(index)
+    }
+
+    /// Health probe: liveness, in-flight executions and their ages. Cheap
+    /// enough for the router to call on every probe interval.
+    pub fn health(&self) -> AgentHealth {
+        let now = Instant::now();
+        let (executing, oldest) = {
+            let map = self.executing.lock().unwrap();
+            let oldest = map
+                .values()
+                .min()
+                .map(|start| now.saturating_duration_since(*start));
+            (map.len() as u64, oldest)
+        };
+        let beat = self.last_beat_us.load(Ordering::Acquire);
+        let heartbeat_age = if beat == u64::MAX {
+            None
+        } else {
+            let now_us = self.started.elapsed().as_micros() as u64;
+            Some(Duration::from_micros(now_us.saturating_sub(beat)))
+        };
+        AgentHealth {
+            alive: self.is_alive(),
+            executing,
+            heartbeat_age,
+            oldest_inflight_age: oldest,
+        }
+    }
+
+    /// Age of the oldest execution still in flight (None when idle).
+    pub fn oldest_inflight_age(&self) -> Option<Duration> {
+        let map = self.executing.lock().unwrap();
+        let now = Instant::now();
+        map.values().min().map(|start| now.saturating_duration_since(*start))
+    }
+
     fn sleep_scaled(&self, us: u64) {
         if self.realtime && us > 0 {
             let dur = std::time::Duration::from_micros(
@@ -216,6 +406,29 @@ impl Agent for FpgaAgent {
     }
 
     fn execute(&self, packet: &KernelDispatchPacket) -> Result<()> {
+        if !self.is_alive() {
+            return Err(HsaError::AgentDown(self.info.name.clone()));
+        }
+        // Track the execution for health probes; the guard's Drop also
+        // stamps the heartbeat on every return path below.
+        let _track = ExecTracker::begin(self);
+        let fault = self.next_fault();
+        match fault {
+            Some(Fault::Drop) => {
+                return Err(HsaError::AgentDown(self.info.name.clone()));
+            }
+            Some(Fault::Stall(d)) => {
+                // Stall *before* any work: the in-flight age grows past
+                // the router's threshold while nothing completes — the
+                // wedged-agent signature. If the agent was killed during
+                // the stall, fail like a death mid-execution.
+                std::thread::sleep(d);
+                if !self.is_alive() {
+                    return Err(HsaError::AgentDown(self.info.name.clone()));
+                }
+            }
+            _ => {}
+        }
         let role = {
             let map = self.roles.read().unwrap();
             map.get(&packet.kernel_object)
@@ -288,6 +501,10 @@ impl Agent for FpgaAgent {
                 outcome.region() as u32,
                 (exec_ns / 1000).max(1),
             );
+        }
+
+        if let Some(Fault::Slow(d)) = fault {
+            std::thread::sleep(d);
         }
 
         role.dispatches.fetch_add(1, Ordering::Relaxed);
@@ -382,6 +599,98 @@ mod tests {
         dispatch(&agent, id, vec![t]).unwrap();
         let delta = agent.virtual_time_ns() - after_first;
         assert!(delta < 100_000, "hit dispatch only pays datapath time, got {delta}");
+    }
+
+    #[test]
+    fn killed_agent_fails_fast_and_revives() {
+        let agent = FpgaAgent::with_defaults();
+        let roles = paper_roles();
+        let id = agent.register_role(roles[2].clone(), echo());
+        let t = Tensor::zeros(&[1, 28, 28], crate::tf::dtype::DType::I16);
+        dispatch(&agent, id, vec![t.clone()]).unwrap();
+        agent.kill();
+        assert!(!agent.is_alive());
+        let err = dispatch(&agent, id, vec![t.clone()]).unwrap_err();
+        assert!(err.indicates_agent_down(), "{err}");
+        assert_eq!(err.agent_down_name(), Some("ultra96-pl"));
+        agent.revive();
+        dispatch(&agent, id, vec![t]).unwrap();
+    }
+
+    #[test]
+    fn fault_plan_decisions_are_deterministic_per_index() {
+        let plan = FaultPlan {
+            seed: 42,
+            drop_prob: 0.3,
+            stall_prob: 0.2,
+            stall: Duration::from_millis(1),
+            slow_prob: 0.2,
+            slow: Duration::from_millis(1),
+        };
+        for index in 0..64 {
+            let a = format!("{:?}", plan.decide(index));
+            let b = format!("{:?}", plan.decide(index));
+            assert_eq!(a, b, "decision for index {index} not stable");
+        }
+        // With these probabilities some dispatch in a short window must
+        // fault and some must not (sanity that decide() discriminates).
+        let faults = (0..64).filter(|&i| plan.decide(i).is_some()).count();
+        assert!(faults > 10 && faults < 60, "{faults}/64 faulted");
+    }
+
+    #[test]
+    fn injected_drop_fault_surfaces_as_agent_down() {
+        let agent = FpgaAgent::with_defaults();
+        let roles = paper_roles();
+        let id = agent.register_role(roles[2].clone(), echo());
+        agent.inject_faults(FaultPlan {
+            drop_prob: 1.0,
+            ..FaultPlan::none(7)
+        });
+        let t = Tensor::zeros(&[1, 28, 28], crate::tf::dtype::DType::I16);
+        let err = dispatch(&agent, id, vec![t.clone()]).unwrap_err();
+        assert!(err.indicates_agent_down(), "{err}");
+        agent.clear_faults();
+        dispatch(&agent, id, vec![t]).unwrap();
+    }
+
+    #[test]
+    fn health_probe_tracks_heartbeat_and_inflight() {
+        let agent = FpgaAgent::with_defaults();
+        let h = agent.health();
+        assert!(h.alive);
+        assert_eq!(h.executing, 0);
+        assert!(h.heartbeat_age.is_none(), "no execution yet");
+        assert!(h.oldest_inflight_age.is_none());
+
+        let roles = paper_roles();
+        let id = agent.register_role(roles[2].clone(), echo());
+        let t = Tensor::zeros(&[1, 28, 28], crate::tf::dtype::DType::I16);
+        dispatch(&agent, id, vec![t]).unwrap();
+        let h = agent.health();
+        assert_eq!(h.executing, 0);
+        assert!(h.heartbeat_age.is_some(), "completed execution stamps a beat");
+
+        // A stalled execution shows up as a growing in-flight age.
+        agent.inject_faults(FaultPlan {
+            stall_prob: 1.0,
+            stall: Duration::from_millis(80),
+            ..FaultPlan::none(1)
+        });
+        let agent2 = Arc::clone(&agent);
+        let t2 = Tensor::zeros(&[1, 28, 28], crate::tf::dtype::DType::I16);
+        let handle = std::thread::spawn(move || {
+            let _ = dispatch(&agent2, id, vec![t2]);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let h = agent.health();
+        assert_eq!(h.executing, 1, "stalled dispatch is in flight");
+        assert!(
+            h.oldest_inflight_age.unwrap() >= Duration::from_millis(10),
+            "{h:?}"
+        );
+        handle.join().unwrap();
+        assert_eq!(agent.health().executing, 0);
     }
 
     #[test]

@@ -19,6 +19,9 @@ pub enum HsaError {
     #[error("kernel execution failed: {0}")]
     KernelFailed(String),
 
+    #[error("agent down: {0}")]
+    AgentDown(String),
+
     #[error("tensor error: {0}")]
     Tensor(#[from] TensorError),
 
@@ -27,6 +30,43 @@ pub enum HsaError {
 
     #[error("runtime error: {0}")]
     Runtime(String),
+}
+
+/// Display prefix of [`HsaError::AgentDown`]. Packet processors stringify
+/// agent errors into the kernarg output slot, so by the time a waiter sees
+/// one it is a `KernelFailed(String)` — the prefix is how the retry paths
+/// recognize an agent failure (retryable elsewhere) from a genuine kernel
+/// failure (not retryable).
+pub const AGENT_DOWN_PREFIX: &str = "agent down: ";
+
+/// Whether a kernel-failure message (the stringified error a packet
+/// processor wrote into the output slot) indicates the *agent* died, as
+/// opposed to the kernel itself failing.
+pub fn message_indicates_agent_down(msg: &str) -> bool {
+    msg.starts_with(AGENT_DOWN_PREFIX)
+}
+
+impl HsaError {
+    /// Whether this error means the dispatched-to agent is down (killed or
+    /// fault-injected), so the dispatch is safe to retry on another agent.
+    pub fn indicates_agent_down(&self) -> bool {
+        match self {
+            HsaError::AgentDown(_) => true,
+            HsaError::KernelFailed(msg) => message_indicates_agent_down(msg),
+            _ => false,
+        }
+    }
+
+    /// The name of the downed agent, when this error carries one.
+    pub fn agent_down_name(&self) -> Option<&str> {
+        match self {
+            HsaError::AgentDown(name) => Some(name),
+            HsaError::KernelFailed(msg) => {
+                msg.strip_prefix(AGENT_DOWN_PREFIX).map(|rest| rest.trim())
+            }
+            _ => None,
+        }
+    }
 }
 
 pub type Result<T> = std::result::Result<T, HsaError>;

@@ -592,12 +592,16 @@ fn serve_async(
     );
     for shard in &rep.pool {
         println!(
-            "  {:<14}: {} dispatches, max in-flight {}, hit rate {:.1}%, {} reconfigs",
+            "  {:<14}: {} dispatches, max in-flight {}, hit rate {:.1}%, {} reconfigs, \
+             {} quarantine(s), {} retries{}",
             shard.agent,
             shard.dispatches,
             shard.max_inflight,
             100.0 * shard.reconfig.hit_rate(),
-            shard.reconfig.misses
+            shard.reconfig.misses,
+            shard.quarantines,
+            shard.retries,
+            if shard.quarantined { " [QUARANTINED]" } else { "" }
         );
     }
     drop(srv); // Drop drains the pipeline and shuts the session down.
@@ -678,10 +682,13 @@ fn serve_http(
         );
         for shard in &rep.pool {
             println!(
-                "  {:<14}: {} dispatches, hit rate {:.1}%",
+                "  {:<14}: {} dispatches, hit rate {:.1}%, {} quarantine(s), {} retries{}",
                 shard.agent,
                 shard.dispatches,
-                100.0 * shard.reconfig.hit_rate()
+                100.0 * shard.reconfig.hit_rate(),
+                shard.quarantines,
+                shard.retries,
+                if shard.quarantined { " [QUARANTINED]" } else { "" }
             );
         }
     } else {

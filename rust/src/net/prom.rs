@@ -214,6 +214,72 @@ pub fn render(
             shard.agent, shard.reconfig.reconfig_us_total
         );
     }
+    metric(
+        &mut out,
+        "tf_fpga_agent_quarantined",
+        "gauge",
+        "1 while the agent is quarantined (excluded from routing).",
+    );
+    for shard in pool {
+        let _ = writeln!(
+            out,
+            "tf_fpga_agent_quarantined{{agent=\"{}\"}} {}",
+            shard.agent,
+            u8::from(shard.quarantined)
+        );
+    }
+    metric(
+        &mut out,
+        "tf_fpga_agent_quarantines_total",
+        "counter",
+        "Times the agent entered quarantine.",
+    );
+    for shard in pool {
+        let _ = writeln!(
+            out,
+            "tf_fpga_agent_quarantines_total{{agent=\"{}\"}} {}",
+            shard.agent, shard.quarantines
+        );
+    }
+    metric(
+        &mut out,
+        "tf_fpga_agent_readmissions_total",
+        "counter",
+        "Times the agent was re-admitted to routing after quarantine.",
+    );
+    for shard in pool {
+        let _ = writeln!(
+            out,
+            "tf_fpga_agent_readmissions_total{{agent=\"{}\"}} {}",
+            shard.agent, shard.readmissions
+        );
+    }
+    metric(
+        &mut out,
+        "tf_fpga_agent_retries_total",
+        "counter",
+        "Dispatches abandoned on the agent and retried on an alternate.",
+    );
+    for shard in pool {
+        let _ = writeln!(
+            out,
+            "tf_fpga_agent_retries_total{{agent=\"{}\"}} {}",
+            shard.agent, shard.retries
+        );
+    }
+    metric(
+        &mut out,
+        "tf_fpga_agent_oldest_inflight_us",
+        "gauge",
+        "Age of the agent's oldest still-executing dispatch, microseconds.",
+    );
+    for shard in pool {
+        let _ = writeln!(
+            out,
+            "tf_fpga_agent_oldest_inflight_us{{agent=\"{}\"}} {}",
+            shard.agent, shard.oldest_inflight_us
+        );
+    }
     out
 }
 
@@ -260,6 +326,13 @@ mod tests {
                 inflight: 1,
                 max_inflight: 2,
                 reconfig: ReconfigStats { misses: 2, reconfig_us_total: 9000, ..Default::default() },
+                quarantined: false,
+                quarantines: 0,
+                readmissions: 0,
+                retries: 0,
+                alive: true,
+                heartbeat_age_us: Some(120),
+                oldest_inflight_us: 0,
             },
             ShardAgentReport {
                 agent: "ultra96-pl-1".into(),
@@ -267,6 +340,13 @@ mod tests {
                 inflight: 0,
                 max_inflight: 1,
                 reconfig: ReconfigStats::default(),
+                quarantined: true,
+                quarantines: 2,
+                readmissions: 1,
+                retries: 3,
+                alive: false,
+                heartbeat_age_us: None,
+                oldest_inflight_us: 4200,
             },
         ];
         let text = render(&c.snapshot(), &serve, &pool, true);
@@ -282,6 +362,12 @@ mod tests {
             "tf_fpga_agent_dispatches_total{agent=\"ultra96-pl-0\"} 5",
             "tf_fpga_agent_dispatches_total{agent=\"ultra96-pl-1\"} 4",
             "tf_fpga_agent_reconfig_misses_total{agent=\"ultra96-pl-0\"} 2",
+            "tf_fpga_agent_quarantined{agent=\"ultra96-pl-0\"} 0",
+            "tf_fpga_agent_quarantined{agent=\"ultra96-pl-1\"} 1",
+            "tf_fpga_agent_quarantines_total{agent=\"ultra96-pl-1\"} 2",
+            "tf_fpga_agent_readmissions_total{agent=\"ultra96-pl-1\"} 1",
+            "tf_fpga_agent_retries_total{agent=\"ultra96-pl-1\"} 3",
+            "tf_fpga_agent_oldest_inflight_us{agent=\"ultra96-pl-1\"} 4200",
             "# TYPE tf_fpga_http_responses_total counter",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");

@@ -74,6 +74,12 @@ struct InFlight {
     pending: PendingRun,
     /// Output elements per request row (completer slices the batch).
     out_elems: usize,
+    /// The dispatched input batch plus its feed/fetch names, kept so a
+    /// completer can re-dispatch the batch on an alternate agent if the
+    /// one it landed on dies mid-flight.
+    x: Tensor,
+    x_name: String,
+    out_name: String,
 }
 
 struct StatsInner {
@@ -189,9 +195,10 @@ impl AsyncInferenceServer {
                 let rx = Arc::clone(&inflight_rx);
                 let stats = Arc::clone(&stats);
                 let counters = Arc::clone(&counters);
+                let session = Arc::clone(&session);
                 std::thread::Builder::new()
                     .name(format!("serve-completer-{i}"))
-                    .spawn(move || completer_loop(rx, stats, counters))
+                    .spawn(move || completer_loop(rx, stats, counters, session))
                     .map_err(|e| HsaError::Runtime(format!("spawn completer: {e}")))
             })
             .collect::<Result<Vec<_>>>()?;
@@ -225,6 +232,12 @@ impl AsyncInferenceServer {
     /// that [`AsyncInferenceServer::report`] does not carry).
     pub fn counters(&self) -> crate::metrics::counters::CounterSnapshot {
         self.counters.snapshot()
+    }
+
+    /// The hosting session — chaos/bench harnesses reach the shard router
+    /// and pool agents (fault injection, health probes) through this.
+    pub fn session(&self) -> &Session {
+        &self.session
     }
 
     /// Submit one flattened input sample to `model`; blocks until its
@@ -435,14 +448,20 @@ fn dispatch(
             return;
         }
     };
-    match session.run_async(&[(info.x_name.as_str(), x)], &[info.out_name.as_str()]) {
+    match session.run_async(&[(info.x_name.as_str(), x.clone())], &[info.out_name.as_str()])
+    {
         Ok(pending) => {
             counters.on_batch_dispatch(reqs.len() as u64);
             // Blocks while `pipeline_depth` batches are already in flight
             // — the pipeline's backpressure point.
-            if let Err(mpsc::SendError(inf)) =
-                inflight_tx.send(InFlight { reqs, pending, out_elems: info.out_elems })
-            {
+            if let Err(mpsc::SendError(inf)) = inflight_tx.send(InFlight {
+                reqs,
+                pending,
+                out_elems: info.out_elems,
+                x,
+                x_name: info.x_name.clone(),
+                out_name: info.out_name.clone(),
+            }) {
                 // Completers are gone (server tearing down mid-dispatch).
                 counters.on_batch_complete(0, inf.reqs.len() as u64);
                 fail_requests(inf.reqs, "server stopped");
@@ -465,10 +484,86 @@ fn fail_requests(reqs: Vec<Request>, msg: &str) {
     }
 }
 
+/// Wait out one dispatched batch, retrying it on an alternate agent when
+/// the one it landed on dies mid-flight. The completion signal is probed
+/// in health-policy slices; between slices the router health-checks the
+/// pool, so a wedged agent is quarantined long before the full dispatch
+/// timeout. A dispatch caught on a quarantined agent is abandoned (its
+/// signal + route guard parked as a router zombie, keeping the agent's
+/// load gauge truthful until the stall resolves) and re-dispatched — the
+/// router's eligibility mask steers the retry to a healthy agent. Bounded
+/// by the health policy's retry budget and the overall dispatch deadline.
+fn wait_with_retry(
+    session: &Session,
+    mut pending: PendingRun,
+    x: &Tensor,
+    x_name: &str,
+    out_name: &str,
+) -> Result<Vec<Tensor>> {
+    let deadline = Instant::now() + crate::hsa::runtime::DISPATCH_TIMEOUT;
+    let router = session.router();
+    let policy = router.health_policy().clone();
+    let mut attempts: u32 = 0;
+    loop {
+        let mut wedged = false;
+        if let Some(sig) = pending.signal() {
+            loop {
+                if sig.wait_eq(0, Some(policy.probe_interval)).is_ok() {
+                    break;
+                }
+                router.check_health();
+                if pending.route_slot().is_some_and(|s| router.is_quarantined(s))
+                    && attempts < policy.max_retries
+                    && Instant::now() < deadline
+                {
+                    wedged = true;
+                    break;
+                }
+                if Instant::now() >= deadline {
+                    return Err(HsaError::SignalTimeout(
+                        crate::hsa::runtime::DISPATCH_TIMEOUT,
+                    ));
+                }
+            }
+        }
+        if wedged {
+            if let Some(slot) = pending.route_slot() {
+                router.note_retry(slot);
+            }
+            if let Some((sig, Some(guard))) = pending.abandon_for_retry() {
+                router.park_zombie(sig, guard);
+            }
+        } else {
+            // Signal retired (or the run completed synchronously).
+            match pending.wait(Some(Duration::from_millis(50))) {
+                Ok(outs) => return Ok(outs),
+                Err(e) => {
+                    let retryable = e.indicates_agent_down()
+                        && attempts < policy.max_retries
+                        && Instant::now() < deadline;
+                    if !retryable {
+                        return Err(e);
+                    }
+                    // The agent reported itself down. The sync-fallback
+                    // path does not know its slot, so attribute by name.
+                    if let Some(name) = e.agent_down_name() {
+                        if let Some(slot) = router.quarantine_named(name) {
+                            router.note_retry(slot);
+                        }
+                    }
+                }
+            }
+        }
+        attempts += 1;
+        pending = session.run_async(&[(x_name, x.clone())], &[out_name])?;
+    }
+}
+
 fn completer_loop(
     rx: Arc<Mutex<mpsc::Receiver<InFlight>>>,
     stats: Arc<Mutex<StatsInner>>,
     counters: Arc<ServeCounters>,
+    session: Arc<Session>,
 ) {
     loop {
         // Hold the receiver lock only for the handoff: while this thread
@@ -483,10 +578,10 @@ fn completer_loop(
         };
         let n = inf.reqs.len();
         let out_elems = inf.out_elems;
-        let timeout = Some(crate::hsa::runtime::DISPATCH_TIMEOUT);
-        match inf.pending.wait(timeout).and_then(|outs| {
-            outs[0].as_f32().map(|v| v.to_vec()).map_err(HsaError::from)
-        }) {
+        match wait_with_retry(&session, inf.pending, &inf.x, &inf.x_name, &inf.out_name)
+            .and_then(|outs| {
+                outs[0].as_f32().map(|v| v.to_vec()).map_err(HsaError::from)
+            }) {
             Ok(rows) => {
                 // Account the batch *before* delivering replies, so a
                 // caller who reads `report()` right after its reply

@@ -33,9 +33,27 @@
 //! agent's in-flight gauge on drop, so load balancing sees completions
 //! without any callback plumbing. Per-agent accounting rolls up through
 //! [`Router::report`] / [`Router::rollup`].
+//!
+//! **Fleet resilience.** The router also owns the pool's health state:
+//! [`Router::check_health`] probes every agent (liveness + oldest
+//! in-flight execution age, see
+//! [`FpgaAgent::health`](crate::fpga::device::FpgaAgent::health)) and
+//! **quarantines** unresponsive agents — excluded from every strategy's
+//! candidate set until a later check re-admits them. Dispatch harvesters
+//! (plan replay, the async completer) probe completion signals in
+//! [`HealthPolicy::probe_interval`] slices and, when their agent lands in
+//! quarantine, park the wedged dispatch as a *zombie* (its [`RouteGuard`]
+//! keeps the load gauge truthful until the stall finishes) and retry on
+//! an alternate agent, bounded by [`HealthPolicy::max_retries`] and the
+//! overall dispatch deadline. With zero quarantined agents the masked
+//! candidate sets are identical to the unmasked ones, so healthy-pool
+//! routing is bit-for-bit unchanged (property-pinned).
 
 pub mod pool;
 pub mod router;
 
 pub use pool::FpgaPool;
-pub use router::{RouteGuard, Router, ShardAgentReport, ShardStrategy};
+pub use router::{
+    HealthCheckOutcome, HealthPolicy, RouteGuard, Router, ShardAgentReport,
+    ShardStrategy,
+};

@@ -18,10 +18,47 @@
 use crate::fpga::device::FpgaAgent;
 use crate::hsa::agent::Agent;
 use crate::hsa::queue::Queue;
+use crate::hsa::signal::Signal;
 use crate::reconfig::manager::ReconfigStats;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Health-check tuning for the router's quarantine machinery.
+///
+/// An agent is **quarantined** (excluded from routing) when a health
+/// check finds it killed, or finds an execution stuck inside it for
+/// longer than `stall_threshold`. It is **re-admitted** when a later
+/// check finds it alive with nothing overdue. `probe_interval` is how
+/// long dispatch harvesters wait on a completion signal between health
+/// probes, and `max_retries` bounds how many times one dispatch may be
+/// retried on an alternate agent before its error is surfaced.
+#[derive(Debug, Clone)]
+pub struct HealthPolicy {
+    pub stall_threshold: Duration,
+    pub probe_interval: Duration,
+    pub max_retries: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy {
+            stall_threshold: Duration::from_secs(2),
+            probe_interval: Duration::from_millis(250),
+            max_retries: 2,
+        }
+    }
+}
+
+/// What one [`Router::check_health`] pass changed.
+#[derive(Debug, Clone, Default)]
+pub struct HealthCheckOutcome {
+    /// Slot indices newly quarantined by this pass.
+    pub quarantined: Vec<usize>,
+    /// Slot indices newly re-admitted by this pass.
+    pub readmitted: Vec<usize>,
+}
 
 /// How the router assigns dispatches to pool agents.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -80,6 +117,14 @@ struct Slot {
     inflight: Arc<AtomicU64>,
     dispatches: AtomicU64,
     max_inflight: AtomicU64,
+    /// True while the slot is excluded from routing (see [`HealthPolicy`]).
+    quarantined: AtomicBool,
+    /// Times this slot entered quarantine.
+    quarantines: AtomicU64,
+    /// Times this slot was re-admitted after quarantine.
+    readmissions: AtomicU64,
+    /// Dispatches abandoned on this slot and retried on an alternate.
+    retries: AtomicU64,
 }
 
 /// Retires one routed dispatch from its agent's in-flight gauge on drop.
@@ -116,6 +161,23 @@ pub struct ShardAgentReport {
     pub max_inflight: u64,
     /// The agent's own reconfiguration accounting.
     pub reconfig: ReconfigStats,
+    /// Whether the agent is currently excluded from routing. (In the
+    /// pooled rollup: whether *any* agent is.)
+    pub quarantined: bool,
+    /// Times the agent entered quarantine.
+    pub quarantines: u64,
+    /// Times the agent was re-admitted after quarantine.
+    pub readmissions: u64,
+    /// Dispatches abandoned on this agent and retried on an alternate.
+    pub retries: u64,
+    /// False after [`FpgaAgent::kill`] (rollup: false if any agent dead).
+    pub alive: bool,
+    /// Time since the agent last completed an execution, µs (None =
+    /// never; rollup: the freshest Some across the pool).
+    pub heartbeat_age_us: Option<u64>,
+    /// Age of the oldest execution still inside the agent, µs (0 when
+    /// idle; rollup: the max across the pool).
+    pub oldest_inflight_us: u64,
 }
 
 /// Routes FPGA dispatches across a pool of agents.
@@ -127,6 +189,14 @@ pub struct Router {
     /// consulted by `KernelAffinity` to decide replication. Ordered map so
     /// iteration/debug output is deterministic.
     demand: Mutex<BTreeMap<u64, u64>>,
+    health: HealthPolicy,
+    /// Abandoned-but-still-executing dispatches (a retry left a stall
+    /// behind): the completion signal plus the route guard that keeps the
+    /// slot's in-flight gauge truthful until the stall actually finishes.
+    /// Swept by `check_health`/`report`.
+    zombies: Mutex<Vec<(Signal, RouteGuard)>>,
+    /// Zombies whose late completion has been observed and discarded.
+    zombies_reaped: AtomicU64,
 }
 
 impl Router {
@@ -135,6 +205,15 @@ impl Router {
     pub fn new(
         slots: Vec<(Arc<FpgaAgent>, Queue)>,
         strategy: ShardStrategy,
+    ) -> Router {
+        Router::with_health_policy(slots, strategy, HealthPolicy::default())
+    }
+
+    /// Like [`Router::new`] with explicit health-check tuning.
+    pub fn with_health_policy(
+        slots: Vec<(Arc<FpgaAgent>, Queue)>,
+        strategy: ShardStrategy,
+        health: HealthPolicy,
     ) -> Router {
         assert!(!slots.is_empty(), "router needs at least one agent");
         Router {
@@ -146,12 +225,23 @@ impl Router {
                     inflight: Arc::new(AtomicU64::new(0)),
                     dispatches: AtomicU64::new(0),
                     max_inflight: AtomicU64::new(0),
+                    quarantined: AtomicBool::new(false),
+                    quarantines: AtomicU64::new(0),
+                    readmissions: AtomicU64::new(0),
+                    retries: AtomicU64::new(0),
                 })
                 .collect(),
             strategy,
             rr_next: AtomicUsize::new(0),
             demand: Mutex::new(BTreeMap::new()),
+            health,
+            zombies: Mutex::new(Vec::new()),
+            zombies_reaped: AtomicU64::new(0),
         }
+    }
+
+    pub fn health_policy(&self) -> &HealthPolicy {
+        &self.health
     }
 
     pub fn len(&self) -> usize {
@@ -190,13 +280,36 @@ impl Router {
         )
     }
 
+    /// Whether slot `i` may receive new dispatches. When *every* slot is
+    /// quarantined the mask is void — availability beats purity, and the
+    /// dispatch surfaces its own error if the whole pool really is dead.
+    /// With zero quarantined slots this accepts everything, so routing is
+    /// bit-identical to the mask-free router (regression-pinned by the
+    /// determinism properties).
+    fn eligible(&self, i: usize) -> bool {
+        !self.slots[i].quarantined.load(Ordering::Acquire)
+    }
+
+    fn any_eligible(&self) -> bool {
+        (0..self.slots.len()).any(|i| self.eligible(i))
+    }
+
     fn pick(&self, kernel_object: u64) -> usize {
+        let masked = self.any_eligible();
+        let ok = |i: usize| !masked || self.eligible(i);
         match self.strategy {
             ShardStrategy::RoundRobin => {
-                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.slots.len()
+                // One counter increment per route (quarantined or not), so
+                // the cycle position is a pure function of the call count;
+                // scan forward deterministically past ineligible slots.
+                let start = self.rr_next.fetch_add(1, Ordering::Relaxed);
+                (0..self.slots.len())
+                    .map(|k| (start + k) % self.slots.len())
+                    .find(|&i| ok(i))
+                    .unwrap_or(start % self.slots.len())
             }
-            ShardStrategy::LeastLoaded => self.least_loaded(|_| true),
-            ShardStrategy::KernelAffinity => self.pick_affinity(kernel_object),
+            ShardStrategy::LeastLoaded => self.least_loaded(ok),
+            ShardStrategy::KernelAffinity => self.pick_affinity(kernel_object, &ok),
         }
     }
 
@@ -212,12 +325,16 @@ impl Router {
             .expect("least_loaded over empty eligible set")
     }
 
-    fn pick_affinity(&self, kernel_object: u64) -> usize {
+    fn pick_affinity(&self, kernel_object: u64, ok: &dyn Fn(usize) -> bool) -> usize {
+        // Every candidate set below is filtered through the eligibility
+        // mask. A kernel resident *only* on quarantined agents therefore
+        // looks cold, so the cold path re-replicates it onto a healthy
+        // agent — exactly the failover the quarantine is for.
         let resident: Vec<usize> = self
             .slots
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.agent.is_resident(kernel_object))
+            .filter(|(i, s)| ok(*i) && s.agent.is_resident(kernel_object))
             .map(|(i, _)| i)
             .collect();
         if resident.is_empty() {
@@ -228,13 +345,13 @@ impl Router {
                 .slots
                 .iter()
                 .enumerate()
-                .filter(|(_, s)| s.agent.has_free_region())
+                .filter(|(i, s)| ok(*i) && s.agent.has_free_region())
                 .map(|(i, _)| i)
                 .collect();
             if !free.is_empty() {
                 return self.least_loaded(|i| free.contains(&i));
             }
-            return self.least_loaded(|_| true);
+            return self.least_loaded(ok);
         }
         let best = self.least_loaded(|i| resident.contains(&i));
         // Replication: the kernel is hot (more queued demand than resident
@@ -255,7 +372,9 @@ impl Router {
                 .iter()
                 .enumerate()
                 .find(|(i, s)| {
-                    !resident.contains(i) && s.inflight.load(Ordering::Acquire) == 0
+                    ok(*i)
+                        && !resident.contains(i)
+                        && s.inflight.load(Ordering::Acquire) == 0
                 })
                 .map(|(i, _)| i);
             if let Some(i) = idle {
@@ -263,6 +382,103 @@ impl Router {
             }
         }
         best
+    }
+
+    // ---- health / quarantine ----
+
+    /// Whether slot `i` is currently quarantined.
+    pub fn is_quarantined(&self, i: usize) -> bool {
+        self.slots[i].quarantined.load(Ordering::Acquire)
+    }
+
+    /// Whether any slot is quarantined.
+    pub fn any_quarantined(&self) -> bool {
+        self.slots.iter().any(|s| s.quarantined.load(Ordering::Acquire))
+    }
+
+    /// Quarantine slot `i` (manual; `check_health` does this for killed or
+    /// stalled agents, dispatch retry paths do it on agent-down errors).
+    /// Returns true if the slot was newly quarantined by this call.
+    pub fn quarantine(&self, i: usize) -> bool {
+        let newly = !self.slots[i].quarantined.swap(true, Ordering::AcqRel);
+        if newly {
+            self.slots[i].quarantines.fetch_add(1, Ordering::Relaxed);
+        }
+        newly
+    }
+
+    /// Re-admit slot `i`. Returns true if it was quarantined.
+    pub fn readmit(&self, i: usize) -> bool {
+        let was = self.slots[i].quarantined.swap(false, Ordering::AcqRel);
+        if was {
+            self.slots[i].readmissions.fetch_add(1, Ordering::Relaxed);
+        }
+        was
+    }
+
+    /// Quarantine the slot whose agent carries `name` (how dispatch paths
+    /// that only see an "agent down: <name>" error attribute the failure).
+    pub fn quarantine_named(&self, name: &str) -> Option<usize> {
+        let i = self
+            .slots
+            .iter()
+            .position(|s| s.agent.info().name == name)?;
+        self.quarantine(i);
+        Some(i)
+    }
+
+    /// Account one dispatch abandoned on slot `i` and retried elsewhere.
+    pub fn note_retry(&self, i: usize) {
+        self.slots[i].retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Park an abandoned dispatch: its completion signal plus the guard
+    /// keeping slot gauges truthful. Swept (guard dropped, slot gauge
+    /// retired) when the stalled execution eventually finishes.
+    pub fn park_zombie(&self, signal: Signal, guard: RouteGuard) {
+        self.zombies.lock().unwrap().push((signal, guard));
+    }
+
+    fn sweep_zombies(&self) {
+        let mut zombies = self.zombies.lock().unwrap();
+        let before = zombies.len();
+        zombies.retain(|(sig, _guard)| !sig.is_zero());
+        let reaped = before - zombies.len();
+        if reaped > 0 {
+            self.zombies_reaped.fetch_add(reaped as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Abandoned dispatches whose late completion has been observed.
+    pub fn zombies_reaped(&self) -> u64 {
+        self.sweep_zombies();
+        self.zombies_reaped.load(Ordering::Relaxed)
+    }
+
+    /// Probe every agent and update quarantine state: a killed agent, or
+    /// one with an execution stuck past `HealthPolicy::stall_threshold`,
+    /// is quarantined; an agent that is alive with nothing overdue is
+    /// re-admitted. Also sweeps completed zombies. Safe (and cheap) to
+    /// call from any thread at any rate; dispatch harvesters call it once
+    /// per probe interval while they wait.
+    pub fn check_health(&self) -> HealthCheckOutcome {
+        self.sweep_zombies();
+        let mut outcome = HealthCheckOutcome::default();
+        for i in 0..self.slots.len() {
+            let agent = &self.slots[i].agent;
+            let stalled = agent
+                .oldest_inflight_age()
+                .is_some_and(|age| age > self.health.stall_threshold);
+            let healthy = agent.is_alive() && !stalled;
+            if !healthy {
+                if self.quarantine(i) {
+                    outcome.quarantined.push(i);
+                }
+            } else if self.readmit(i) {
+                outcome.readmitted.push(i);
+            }
+        }
+        outcome
     }
 
     /// Queued-demand hint from the serving layer: `queued` requests are
@@ -291,20 +507,38 @@ impl Router {
 
     /// Per-agent accounting, in agent-index order.
     pub fn report(&self) -> Vec<ShardAgentReport> {
+        self.sweep_zombies();
         self.slots
             .iter()
-            .map(|s| ShardAgentReport {
-                agent: s.agent.info().name.clone(),
-                dispatches: s.dispatches.load(Ordering::Relaxed),
-                inflight: s.inflight.load(Ordering::Acquire),
-                max_inflight: s.max_inflight.load(Ordering::Acquire),
-                reconfig: s.agent.reconfig_stats(),
+            .map(|s| {
+                let health = s.agent.health();
+                ShardAgentReport {
+                    agent: s.agent.info().name.clone(),
+                    dispatches: s.dispatches.load(Ordering::Relaxed),
+                    inflight: s.inflight.load(Ordering::Acquire),
+                    max_inflight: s.max_inflight.load(Ordering::Acquire),
+                    reconfig: s.agent.reconfig_stats(),
+                    quarantined: s.quarantined.load(Ordering::Acquire),
+                    quarantines: s.quarantines.load(Ordering::Relaxed),
+                    readmissions: s.readmissions.load(Ordering::Relaxed),
+                    retries: s.retries.load(Ordering::Relaxed),
+                    alive: health.alive,
+                    heartbeat_age_us: health
+                        .heartbeat_age
+                        .map(|d| d.as_micros() as u64),
+                    oldest_inflight_us: health
+                        .oldest_inflight_age
+                        .map_or(0, |d| d.as_micros() as u64),
+                }
             })
             .collect()
     }
 
     /// Pooled rollup of [`Router::report`]: sums every counter (the
-    /// reconfig stats accumulate field-wise).
+    /// reconfig stats accumulate field-wise); `quarantined` is true if
+    /// any agent is quarantined, `alive` false if any agent is dead,
+    /// `heartbeat_age_us` the freshest beat and `oldest_inflight_us` the
+    /// oldest stuck execution across the pool.
     pub fn rollup(&self) -> ShardAgentReport {
         let mut total = ShardAgentReport {
             agent: "pool".to_string(),
@@ -312,12 +546,29 @@ impl Router {
             inflight: 0,
             max_inflight: 0,
             reconfig: ReconfigStats::default(),
+            quarantined: false,
+            quarantines: 0,
+            readmissions: 0,
+            retries: 0,
+            alive: true,
+            heartbeat_age_us: None,
+            oldest_inflight_us: 0,
         };
         for r in self.report() {
             total.dispatches += r.dispatches;
             total.inflight += r.inflight;
             total.max_inflight += r.max_inflight;
             total.reconfig.accumulate(&r.reconfig);
+            total.quarantined |= r.quarantined;
+            total.quarantines += r.quarantines;
+            total.readmissions += r.readmissions;
+            total.retries += r.retries;
+            total.alive &= r.alive;
+            total.heartbeat_age_us = match (total.heartbeat_age_us, r.heartbeat_age_us) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            total.oldest_inflight_us = total.oldest_inflight_us.max(r.oldest_inflight_us);
         }
         total
     }
@@ -460,6 +711,121 @@ mod tests {
         assert_eq!(router.rollup().inflight, 3);
         drop((g0, g1, g2));
         assert_eq!(router.rollup().inflight, 0);
+    }
+
+    #[test]
+    fn quarantine_excludes_agent_from_every_strategy() {
+        for strategy in ShardStrategy::ALL {
+            let (_pool, router, ids) = mk_router(3, strategy);
+            assert!(router.quarantine(1), "{strategy:?}: newly quarantined");
+            assert!(!router.quarantine(1), "{strategy:?}: already quarantined");
+            for _ in 0..6 {
+                let (i, _, g) = router.route(ids[0]);
+                assert_ne!(i, 1, "{strategy:?} routed to a quarantined agent");
+                drop(g);
+            }
+            assert!(router.is_quarantined(1) && router.any_quarantined());
+            let rep = router.report();
+            assert!(rep[1].quarantined && rep[1].quarantines == 1);
+            assert_eq!(rep[1].dispatches, 0);
+        }
+    }
+
+    #[test]
+    fn all_quarantined_falls_back_to_routing_anyway() {
+        let (_pool, router, ids) = mk_router(2, ShardStrategy::LeastLoaded);
+        router.quarantine(0);
+        router.quarantine(1);
+        // Availability beats purity: the route still lands somewhere.
+        let (i, _, _g) = router.route(ids[0]);
+        assert_eq!(i, 0, "void mask keeps deterministic low-index pick");
+    }
+
+    #[test]
+    fn round_robin_skips_quarantined_deterministically() {
+        let (_pool, router, ids) = mk_router(3, ShardStrategy::RoundRobin);
+        router.quarantine(1);
+        let picks: Vec<usize> =
+            (0..6).map(|_| router.route(ids[0]).0).collect();
+        assert_eq!(picks, [0, 2, 2, 0, 2, 2], "cycle scans past slot 1");
+        router.readmit(1);
+        let picks: Vec<usize> =
+            (0..3).map(|_| router.route(ids[0]).0).collect();
+        assert_eq!(picks, [0, 1, 2], "counter position survived quarantine");
+    }
+
+    #[test]
+    fn affinity_rereplicates_when_resident_agent_is_quarantined() {
+        let (_pool, router, ids) = mk_router(2, ShardStrategy::KernelAffinity);
+        execute_on(&router, 0, ids[0]); // resident only on agent 0
+        let (i, _, g) = router.route(ids[0]);
+        assert_eq!(i, 0, "resident agent preferred while healthy");
+        drop(g);
+        router.quarantine(0);
+        // The only replica is quarantined → the kernel looks cold and
+        // re-replicates onto the healthy agent.
+        let (j, _, _g) = router.route(ids[0]);
+        assert_eq!(j, 1, "quarantined replica ignored; healthy agent loads");
+    }
+
+    #[test]
+    fn check_health_quarantines_killed_agent_and_readmits_after_revive() {
+        let (_pool, router, _ids) = mk_router(2, ShardStrategy::LeastLoaded);
+        assert!(router.check_health().quarantined.is_empty());
+        router.agent(1).kill();
+        let outcome = router.check_health();
+        assert_eq!(outcome.quarantined, vec![1]);
+        assert!(router.is_quarantined(1));
+        let rep = router.report();
+        assert!(!rep[1].alive && rep[1].quarantined);
+        assert!(rep[0].alive && !rep[0].quarantined);
+        router.agent(1).revive();
+        let outcome = router.check_health();
+        assert_eq!(outcome.readmitted, vec![1]);
+        assert!(!router.any_quarantined());
+        let rep = router.report();
+        assert_eq!((rep[1].quarantines, rep[1].readmissions), (1, 1));
+    }
+
+    #[test]
+    fn quarantine_named_attributes_by_agent_name() {
+        let (_pool, router, _ids) = mk_router(3, ShardStrategy::RoundRobin);
+        let name = router.agent(2).info().name.clone();
+        assert_eq!(router.quarantine_named(&name), Some(2));
+        assert!(router.is_quarantined(2));
+        assert_eq!(router.quarantine_named("no-such-agent"), None);
+    }
+
+    #[test]
+    fn parked_zombie_holds_gauge_until_completion() {
+        let (_pool, router, ids) = mk_router(2, ShardStrategy::LeastLoaded);
+        let (i, _, g) = router.route(ids[0]);
+        let sig = Signal::new(1);
+        router.note_retry(i);
+        router.park_zombie(sig.clone(), g);
+        assert_eq!(router.inflight(), 1, "zombie still occupies the gauge");
+        assert_eq!(router.zombies_reaped(), 0);
+        sig.subtract(1); // the stalled execution finally retires
+        assert_eq!(router.zombies_reaped(), 1);
+        assert_eq!(router.inflight(), 0, "sweep dropped the guard");
+        assert_eq!(router.report()[i].retries, 1);
+    }
+
+    #[test]
+    fn rollup_sums_health_counters() {
+        let (_pool, router, _ids) = mk_router(2, ShardStrategy::RoundRobin);
+        router.quarantine(0);
+        router.note_retry(0);
+        router.note_retry(1);
+        let total = router.rollup();
+        assert!(total.quarantined);
+        assert_eq!(total.quarantines, 1);
+        assert_eq!(total.retries, 2);
+        assert!(total.alive);
+        router.readmit(0);
+        let total = router.rollup();
+        assert!(!total.quarantined);
+        assert_eq!(total.readmissions, 1);
     }
 
     #[test]

@@ -107,16 +107,29 @@ impl ExecEnv<'_> {
         device: DeviceType,
         kernel_object: u64,
     ) -> Result<(Queue, Option<crate::sharding::RouteGuard>)> {
+        self.route_indexed(device, kernel_object)
+            .map(|(_, queue, guard)| (queue, guard))
+    }
+
+    /// Like [`ExecEnv::route`], also returning the router slot index the
+    /// dispatch landed on (None for non-routed dispatches). Retry paths
+    /// need the index to attribute failures to (and quarantine) the
+    /// specific agent.
+    pub fn route_indexed(
+        &self,
+        device: DeviceType,
+        kernel_object: u64,
+    ) -> Result<(Option<usize>, Queue, Option<crate::sharding::RouteGuard>)> {
         if device == DeviceType::Fpga {
             if let Some(router) = self.router {
-                let (_, queue, guard) = router.route(kernel_object);
-                return Ok((queue, Some(guard)));
+                let (i, queue, guard) = router.route(kernel_object);
+                return Ok((Some(i), queue, Some(guard)));
             }
         }
         self.queues
             .get(&device)
             .cloned()
-            .map(|q| (q, None))
+            .map(|q| (None, q, None))
             .ok_or_else(|| HsaError::Runtime(format!("no queue for device {device}")))
     }
 }

@@ -28,7 +28,7 @@
 //! executor's strictly serialized walk.
 
 use crate::hsa::agent::DeviceType;
-use crate::hsa::error::{HsaError, Result};
+use crate::hsa::error::{message_indicates_agent_down, HsaError, Result};
 use crate::hsa::packet::KernelArgs;
 use crate::hsa::signal::Signal;
 use crate::tf::dtype::DType;
@@ -549,8 +549,16 @@ impl ExecutionPlan {
             .filter(|&i| self.steps[i].num_deps == 0)
             .collect();
         // In-flight dispatches carry their route guard (if shard-routed)
-        // so the chosen agent's load gauge stays accurate until harvest.
-        type InFlightStep = (usize, Signal, KernelArgs, Option<crate::sharding::RouteGuard>);
+        // so the chosen agent's load gauge stays accurate until harvest,
+        // plus the router slot index so a harvest stuck on a dying agent
+        // can quarantine it and retry the step elsewhere.
+        type InFlightStep = (
+            usize,
+            Signal,
+            KernelArgs,
+            Option<crate::sharding::RouteGuard>,
+            Option<usize>,
+        );
         let mut inflight: VecDeque<InFlightStep> = VecDeque::new();
         let mut done = 0usize;
 
@@ -588,7 +596,8 @@ impl ExecutionPlan {
                     StepOp::Dispatch { device, kernel_object, fused, .. } => {
                         // Shard-routed per step: independent steps of one
                         // replay fan out across the FPGA pool.
-                        let (queue, route) = env.route(*device, *kernel_object)?;
+                        let (slot, queue, route) =
+                            env.route_indexed(*device, *kernel_object)?;
                         stats.dispatches += 1;
                         *stats.dispatches_by_device.entry(*device).or_insert(0) += 1;
                         if *fused {
@@ -596,7 +605,7 @@ impl ExecutionPlan {
                         }
                         let (sig, args) =
                             env.runtime.dispatch_async(&queue, *kernel_object, ins)?;
-                        inflight.push_back((i, sig, args, route));
+                        inflight.push_back((i, sig, args, route, slot));
                     }
                 }
             }
@@ -606,18 +615,102 @@ impl ExecutionPlan {
             // Harvest the oldest in-flight dispatch (the others keep
             // executing on their queues meanwhile). The route guard drops
             // at the end of this harvest, retiring the agent's gauge.
-            let (i, sig, args, _route) = inflight.pop_front().ok_or_else(|| {
-                HsaError::Runtime("plan replay stalled with no work in flight (internal)".into())
-            })?;
-            sig.wait_eq(0, Some(crate::hsa::runtime::DISPATCH_TIMEOUT))?;
-            let outs = match args.take_output() {
-                Some(Ok(outs)) => outs,
-                Some(Err(msg)) => return Err(HsaError::KernelFailed(msg)),
-                None => {
-                    return Err(HsaError::KernelFailed(
-                        "kernel retired without writing outputs".into(),
-                    ))
+            // When the dispatch is shard-routed, harvesting probes the
+            // completion signal in health-policy slices; a dispatch wedged
+            // on (or failed by) a down agent is retried on an alternate
+            // agent, bounded by max_retries and the dispatch deadline.
+            let (i, mut sig, mut args, mut route, mut slot) =
+                inflight.pop_front().ok_or_else(|| {
+                    HsaError::Runtime(
+                        "plan replay stalled with no work in flight (internal)".into(),
+                    )
+                })?;
+            let deadline = Instant::now() + crate::hsa::runtime::DISPATCH_TIMEOUT;
+            let mut attempts: u32 = 0;
+            let outs = loop {
+                let mut retry_stalled = false;
+                match env.router {
+                    Some(router) if slot.is_some() => {
+                        let policy = router.health_policy().clone();
+                        loop {
+                            if sig.wait_eq(0, Some(policy.probe_interval)).is_ok() {
+                                break;
+                            }
+                            router.check_health();
+                            if router.is_quarantined(slot.unwrap())
+                                && attempts < policy.max_retries
+                                && Instant::now() < deadline
+                            {
+                                retry_stalled = true;
+                                break;
+                            }
+                            if Instant::now() >= deadline {
+                                return Err(HsaError::SignalTimeout(
+                                    crate::hsa::runtime::DISPATCH_TIMEOUT,
+                                ));
+                            }
+                        }
+                    }
+                    _ => sig.wait_eq(0, Some(crate::hsa::runtime::DISPATCH_TIMEOUT))?,
                 }
+                if retry_stalled {
+                    // Wedged on a quarantined agent. Park the old dispatch
+                    // as a zombie — its guard keeps the load gauge truthful
+                    // until the stall actually resolves — and fall through
+                    // to re-dispatch.
+                    let router = env.router.unwrap();
+                    if let Some(guard) = route.take() {
+                        router.park_zombie(sig.clone(), guard);
+                    }
+                    router.note_retry(slot.unwrap());
+                } else {
+                    match args.take_output() {
+                        Some(Ok(outs)) => break outs,
+                        Some(Err(msg)) => {
+                            let retryable = env.router.is_some()
+                                && slot.is_some()
+                                && message_indicates_agent_down(&msg)
+                                && attempts
+                                    < env.router.unwrap().health_policy().max_retries
+                                && Instant::now() < deadline;
+                            if !retryable {
+                                return Err(HsaError::KernelFailed(msg));
+                            }
+                            // The agent itself reported down (killed or a
+                            // drop fault): quarantine it immediately so the
+                            // re-route below cannot land back on it.
+                            let router = env.router.unwrap();
+                            router.quarantine(slot.unwrap());
+                            router.note_retry(slot.unwrap());
+                            route = None;
+                        }
+                        None => {
+                            return Err(HsaError::KernelFailed(
+                                "kernel retired without writing outputs".into(),
+                            ))
+                        }
+                    }
+                }
+                attempts += 1;
+                let (device, kernel_object) = match &self.steps[i].op {
+                    StepOp::Dispatch { device, kernel_object, .. } => {
+                        (*device, *kernel_object)
+                    }
+                    _ => {
+                        return Err(HsaError::Runtime(
+                            "non-dispatch step in flight (internal)".into(),
+                        ))
+                    }
+                };
+                let ins = args.inputs.clone();
+                let (new_slot, queue, new_route) =
+                    env.route_indexed(device, kernel_object)?;
+                let (new_sig, new_args) =
+                    env.runtime.dispatch_async(&queue, kernel_object, ins)?;
+                sig = new_sig;
+                args = new_args;
+                route = new_route;
+                slot = new_slot;
             };
             let step = &self.steps[i];
             let out = check_kernel_output(&step.name, &step.out_shape, outs)?;

@@ -86,6 +86,10 @@ pub struct SessionOptions {
     /// policy; agent `i` of a pool derives `seed + i`), so multi-agent
     /// runs are reproducible end to end.
     pub seed: u64,
+    /// Pool health policy: stall detection threshold, completion-probe
+    /// interval and retry budget for dispatches caught on a dying agent.
+    /// Irrelevant at `fpga_pool == 1` (nowhere else to retry).
+    pub health: crate::sharding::HealthPolicy,
 }
 
 impl Default for SessionOptions {
@@ -104,6 +108,7 @@ impl Default for SessionOptions {
             fpga_pool: 1,
             shard_strategy: ShardStrategy::KernelAffinity,
             seed: 0xF06A,
+            health: crate::sharding::HealthPolicy::default(),
         }
     }
 }
@@ -223,6 +228,10 @@ enum PendingState {
         /// Keeps the routed agent's in-flight gauge truthful until the
         /// result is harvested (or the run is dropped unharvested).
         _route: Option<RouteGuard>,
+        /// Router slot index the dispatch landed on (None when not
+        /// shard-routed) — lets harvesters attribute a wedged dispatch to
+        /// its agent and retry elsewhere.
+        route_slot: Option<usize>,
     },
 }
 
@@ -248,12 +257,35 @@ impl PendingRun {
         }
     }
 
+    /// Router slot index of the in-flight dispatch (None when the run was
+    /// satisfied synchronously or was not shard-routed).
+    pub fn route_slot(&self) -> Option<usize> {
+        match &self.state {
+            PendingState::Ready(_) => None,
+            PendingState::InFlight { route_slot, .. } => *route_slot,
+        }
+    }
+
+    /// Abandon the run for a retry elsewhere, yielding its completion
+    /// signal and route guard so the caller can park them as a zombie on
+    /// the router (keeping the dying agent's load gauge truthful until the
+    /// wedged execution actually finishes). None for synchronous runs —
+    /// nothing is in flight.
+    pub fn abandon_for_retry(self) -> Option<(Signal, Option<RouteGuard>)> {
+        match self.state {
+            PendingState::Ready(_) => None,
+            PendingState::InFlight { completion, _route, .. } => {
+                Some((completion, _route))
+            }
+        }
+    }
+
     /// Block until the kernel retires and return the fetched tensors.
     pub fn wait(self, timeout: Option<Duration>) -> Result<Vec<Tensor>> {
         match self.state {
             PendingState::Ready(outputs) => Ok(outputs),
             PendingState::InFlight {
-                completion, args, node_name, expected_shape, _route,
+                completion, args, node_name, expected_shape, _route, ..
             } => {
                 completion.wait_eq(0, timeout)?;
                 let mut outs = match args.take_output() {
@@ -468,7 +500,11 @@ impl Session {
             })
             .collect();
         queues.insert(DeviceType::Fpga, fpga_slots[0].1.clone());
-        let router = Router::new(fpga_slots, opts.shard_strategy);
+        let router = Router::with_health_policy(
+            fpga_slots,
+            opts.shard_strategy,
+            opts.health.clone(),
+        );
         setup.hsa_bringup_us = t_hsa.elapsed().as_micros();
 
         let placement = place(
@@ -698,7 +734,7 @@ impl Session {
             queues: &self.queues,
             router: Some(&self.router),
         };
-        let (queue, route) = env.route(device, kernel_object)?;
+        let (route_slot, queue, route) = env.route_indexed(device, kernel_object)?;
         let (completion, args) = self.runtime.dispatch_async(&queue, kernel_object, inputs)?;
         Ok(Some(PendingRun {
             state: PendingState::InFlight {
@@ -707,6 +743,7 @@ impl Session {
                 node_name: node.name.clone(),
                 expected_shape: node.out_shape.clone(),
                 _route: route,
+                route_slot,
             },
         }))
     }

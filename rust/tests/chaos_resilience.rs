@@ -1,0 +1,280 @@
+//! Chaos suite: agents stalled, killed and revived **mid-eviction-storm**,
+//! with the invariant that the serving pipeline never returns a wrong
+//! answer and never hangs a request.
+//!
+//! The workload is the same layered MNIST storm as
+//! `integration_sharding.rs` — four distinct FPGA kernels per request on a
+//! pool with one PR region per agent, so every request forces
+//! reconfigurations — but here one agent also has deterministic
+//! stall/drop faults injected ([`FaultPlan`]) and another is killed and
+//! later revived by a choreography thread while requests are in flight.
+//! The router's health checks must quarantine the sick agents, the
+//! dispatch retry paths must move wedged work onto healthy agents, and a
+//! revived agent must be re-admitted — all observable in the
+//! `ShardAgentReport` rows.
+//!
+//! Every completed request must be **bitwise** equal to a fault-free
+//! single-agent baseline (identical deterministic weights everywhere), so
+//! a retry that double-executes, half-executes, or crosses replies would
+//! fail loudly.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tf_fpga::fpga::device::{FaultPlan, FpgaAgent};
+use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig, BatchPolicy, ModelSpec};
+use tf_fpga::sharding::{HealthPolicy, ShardStrategy};
+use tf_fpga::tf::model::ModelBundle;
+use tf_fpga::tf::session::SessionOptions;
+use tf_fpga::util::prng::Rng;
+
+const REQUESTS: usize = 12;
+const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+fn layered_spec() -> ModelSpec {
+    // max_batch 1: the layered graph is rank-3 (batch dim must stay 1).
+    ModelSpec::from_bundle(
+        "layers",
+        ModelBundle::mnist_layers_demo(),
+        BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(1) },
+    )
+}
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            (0..784)
+                .map(|p| ((i * 37 + p * 13) % 255) as f32 / 255.0 - 0.5)
+                .collect()
+        })
+        .collect()
+}
+
+/// Aggressive health tuning so a test-scale stall (tens of ms) is
+/// detected and retried within the test's patience.
+fn chaos_health() -> HealthPolicy {
+    HealthPolicy {
+        stall_threshold: Duration::from_millis(50),
+        probe_interval: Duration::from_millis(20),
+        // Generous: while one agent is down and another is dropping, a
+        // retry can land on the dead agent (an all-quarantined pool voids
+        // the eligibility mask) and burn an attempt.
+        max_retries: 5,
+    }
+}
+
+/// Reference logits from a fault-free single-agent server with regions to
+/// spare.
+fn baseline_logits(images: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let mut baseline = AsyncInferenceServer::start(AsyncServerConfig {
+        models: vec![layered_spec()],
+        session: SessionOptions {
+            num_regions: 4,
+            dispatch_workers: 1,
+            ..SessionOptions::native_only()
+        },
+        pipeline_depth: 2,
+    })
+    .expect("baseline server");
+    let want = serve_all(&baseline, images, "baseline");
+    baseline.stop();
+    want
+}
+
+fn chaos_server(pool: usize, strategy: ShardStrategy) -> AsyncInferenceServer {
+    AsyncInferenceServer::start(AsyncServerConfig {
+        models: vec![layered_spec()],
+        session: SessionOptions {
+            fpga_pool: pool,
+            num_regions: 1, // under-provisioned: the eviction storm
+            shard_strategy: strategy,
+            dispatch_workers: 1,
+            health: chaos_health(),
+            ..SessionOptions::native_only()
+        },
+        pipeline_depth: 4,
+    })
+    .expect("chaos server")
+}
+
+/// Submit everything up front, then harvest with a hard deadline: a hung
+/// request fails the test instead of wedging it.
+fn serve_all(
+    srv: &AsyncInferenceServer,
+    images: &[Vec<f32>],
+    tag: &str,
+) -> Vec<Vec<f32>> {
+    let rxs: Vec<_> = images
+        .iter()
+        .map(|im| srv.infer_async("layers", im.clone()).expect("submit"))
+        .collect();
+    rxs.into_iter()
+        .enumerate()
+        .map(|(i, rx)| {
+            rx.recv_timeout(RECV_TIMEOUT)
+                .unwrap_or_else(|_| panic!("{tag}: request {i} hung past deadline"))
+                .unwrap_or_else(|e| panic!("{tag}: request {i} failed: {e}"))
+        })
+        .collect()
+}
+
+/// The headline chaos scenario, fixed seed: pool of three agents, agent 0
+/// fault-injected (stalls past the quarantine threshold + hard drops),
+/// agent 1 killed ~40 ms into the storm and revived ~250 ms later.
+#[test]
+fn chaos_kill_stall_revive_keeps_every_answer_bitwise_correct() {
+    let images = images(REQUESTS);
+    let want = baseline_logits(&images);
+
+    let srv = chaos_server(3, ShardStrategy::KernelAffinity);
+    let router = srv.session().router();
+    router.agent(0).inject_faults(FaultPlan {
+        drop_prob: 0.15,
+        stall_prob: 0.35,
+        stall: Duration::from_millis(120),
+        ..FaultPlan::none(0xC5A0_5EED)
+    });
+    let victim: Arc<FpgaAgent> = Arc::clone(router.agent(1));
+
+    let got = std::thread::scope(|scope| {
+        let choreo = scope.spawn(|| {
+            std::thread::sleep(Duration::from_millis(40));
+            victim.kill();
+            // A health check while the victim is down must quarantine it.
+            std::thread::sleep(Duration::from_millis(30));
+            let outcome = router.check_health();
+            assert!(
+                outcome.quarantined.contains(&1) || router.is_quarantined(1),
+                "killed agent not quarantined: {outcome:?}"
+            );
+            std::thread::sleep(Duration::from_millis(180));
+            victim.revive();
+            router.agent(0).clear_faults();
+        });
+        let got = serve_all(&srv, &images, "chaos");
+        choreo.join().unwrap();
+        got
+    });
+
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(a, b, "request {i} logits diverged under chaos");
+    }
+
+    // Let any abandoned stall finish, then one more health pass so the
+    // revived agent's re-admission is on the books.
+    std::thread::sleep(Duration::from_millis(200));
+    let outcome = srv.session().router().check_health();
+    let rep = srv.report();
+    assert_eq!(rep.completed, REQUESTS as u64, "{rep:?}");
+    assert_eq!(rep.failed, 0, "{rep:?}");
+    assert_eq!(rep.pool.len(), 3);
+    let quarantines: u64 = rep.pool.iter().map(|p| p.quarantines).sum();
+    let readmissions: u64 = rep.pool.iter().map(|p| p.readmissions).sum();
+    assert!(quarantines >= 1, "no quarantine recorded: {:?}", rep.pool);
+    assert!(
+        readmissions >= 1,
+        "no re-admission recorded (outcome {outcome:?}): {:?}",
+        rep.pool
+    );
+    // Every agent healthy again: nothing quarantined, nothing in flight.
+    assert!(
+        rep.pool.iter().all(|p| p.alive && !p.quarantined),
+        "pool did not recover: {:?}",
+        rep.pool
+    );
+    assert_eq!(
+        rep.pool.iter().map(|p| p.inflight).sum::<u64>(),
+        0,
+        "in-flight gauges leaked (zombie not reaped?): {:?}",
+        rep.pool
+    );
+    drop(srv);
+}
+
+/// The same choreography across a sweep of seeds, pool sizes and routing
+/// strategies: whatever the fault timing lands on, zero wrong answers and
+/// zero hung requests.
+#[test]
+fn chaos_seed_sweep_never_returns_a_wrong_answer() {
+    let images = images(6);
+    let want = baseline_logits(&images);
+
+    for seed in 1..=8u64 {
+        let mut rng = Rng::new(seed);
+        let pool = 2 + (rng.below(3) as usize); // 2..=4 agents
+        let strategy = *rng.choose(&ShardStrategy::ALL);
+        let faulty = rng.below(pool as u64) as usize;
+        let victim = (faulty + 1 + rng.below(pool as u64 - 1) as usize) % pool;
+        let tag = format!("seed {seed} pool {pool} {strategy:?} f{faulty} v{victim}");
+
+        let srv = chaos_server(pool, strategy);
+        let router = srv.session().router();
+        router.agent(faulty).inject_faults(FaultPlan {
+            drop_prob: 0.05 + 0.1 * rng.f64(),
+            stall_prob: 0.2 + 0.2 * rng.f64(),
+            stall: Duration::from_millis(60 + rng.below(80)),
+            slow_prob: 0.2,
+            slow: Duration::from_millis(rng.below(20)),
+            ..FaultPlan::none(seed.wrapping_mul(0x9E37_79B9))
+        });
+        let victim_agent: Arc<FpgaAgent> = Arc::clone(router.agent(victim));
+        let kill_at = Duration::from_millis(20 + rng.below(60));
+        let down_for = Duration::from_millis(100 + rng.below(150));
+
+        let got = std::thread::scope(|scope| {
+            let choreo = scope.spawn(|| {
+                std::thread::sleep(kill_at);
+                victim_agent.kill();
+                std::thread::sleep(down_for);
+                victim_agent.revive();
+                router.agent(faulty).clear_faults();
+            });
+            let got = serve_all(&srv, &images, &tag);
+            choreo.join().unwrap();
+            got
+        });
+
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a, b, "{tag}: request {i} logits diverged");
+        }
+        let rep = srv.report();
+        assert_eq!(rep.completed, images.len() as u64, "{tag}: {rep:?}");
+        assert_eq!(rep.failed, 0, "{tag}: {rep:?}");
+        drop(srv);
+    }
+}
+
+/// Quarantine + retry accounting must close over the storm: retries only
+/// happen on quarantined-or-dead agents, and the pooled rollup sums the
+/// per-slot counters.
+#[test]
+fn chaos_report_rollup_sums_resilience_counters() {
+    let images = images(REQUESTS);
+    let srv = chaos_server(2, ShardStrategy::LeastLoaded);
+    let router = srv.session().router();
+    // Pure drop faults: every faulted dispatch fails fast with an
+    // agent-down error, so the retry path (not the stall path) drives
+    // quarantine here.
+    router.agent(0).inject_faults(FaultPlan {
+        drop_prob: 0.5,
+        ..FaultPlan::none(7)
+    });
+    let got = serve_all(&srv, &images, "drop-faults");
+    assert_eq!(got.len(), REQUESTS);
+    router.agent(0).clear_faults();
+
+    let rep = srv.report();
+    assert_eq!(rep.failed, 0, "drops must be retried, not surfaced: {rep:?}");
+    let rollup = router.rollup();
+    let per_slot: u64 = rep.pool.iter().map(|p| p.retries).sum();
+    assert_eq!(rollup.retries, per_slot, "rollup retries mismatch");
+    assert_eq!(
+        rollup.quarantines,
+        rep.pool.iter().map(|p| p.quarantines).sum::<u64>(),
+        "rollup quarantines mismatch"
+    );
+    // With drop_prob 0.5 over ~48 dispatches, at least one drop is
+    // statistically certain (p < 1e-14 otherwise) — and every drop must
+    // have been retried.
+    assert!(per_slot >= 1, "no retry recorded under 50% drop faults: {rep:?}");
+    drop(srv);
+}

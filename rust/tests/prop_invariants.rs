@@ -711,6 +711,316 @@ mod sharding_props {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fleet resilience: fault injection, quarantine, retry-on-alternate
+// ---------------------------------------------------------------------------
+
+mod resilience_props {
+    use std::time::Duration;
+    use tf_fpga::fpga::device::FaultPlan;
+    use tf_fpga::sharding::{HealthPolicy, ShardStrategy};
+    use tf_fpga::tf::session::{Session, SessionOptions};
+    use tf_fpga::tf::tensor::Tensor;
+    use tf_fpga::util::prng::Rng;
+    use tf_fpga::util::quickcheck::forall;
+
+    /// Test-scale health tuning: stalls of tens of ms get detected,
+    /// quarantined and retried within a property iteration.
+    fn aggressive() -> HealthPolicy {
+        HealthPolicy {
+            stall_threshold: Duration::from_millis(20),
+            probe_interval: Duration::from_millis(10),
+            max_retries: 5,
+        }
+    }
+
+    /// Drain parked zombies / in-flight gauges after faults are cleared;
+    /// errors if the pool never settles.
+    fn settle(session: &Session) -> Result<(), String> {
+        for _ in 0..200 {
+            session.router().check_health();
+            if session.router().rollup().inflight == 0 {
+                return Ok(());
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        Err(format!(
+            "in-flight gauge never drained: {:?}",
+            session.router().report()
+        ))
+    }
+
+    /// Quarantine + retry-on-alternate never changes *what* is computed:
+    /// for random graphs on a pool with one agent injected with stall +
+    /// drop faults, replay outputs stay bitwise identical to a fault-free
+    /// single-agent session.
+    #[test]
+    fn prop_quarantine_preserves_bitwise_outputs() {
+        forall(23, 8, &super::plan_equivalence::GraphCase, |(seed, ops)| {
+            let (g, fetches) = super::plan_equivalence::build(*seed, ops);
+            let fetch_refs: Vec<&str> = fetches.iter().map(|s| s.as_str()).collect();
+            let mut xv = vec![0f32; 6];
+            Rng::new(seed ^ 0xFA117).fill_f32_normal(&mut xv, 0.0, 1.0);
+            let x = Tensor::from_f32(&[2, 3], xv).map_err(|e| e.to_string())?;
+            let feeds = [("x", x)];
+
+            let single = Session::new(g.clone(), SessionOptions::native_only())
+                .map_err(|e| format!("single session: {e}"))?;
+            let want = single
+                .run(&feeds, &fetch_refs)
+                .map_err(|e| format!("single run: {e}"))?;
+            single.shutdown();
+
+            let pool = 2 + (seed % 3) as usize;
+            let strategy = ShardStrategy::ALL[(seed >> 8) as usize % 3];
+            let pooled = Session::new(
+                g.clone(),
+                SessionOptions {
+                    fpga_pool: pool,
+                    shard_strategy: strategy,
+                    health: aggressive(),
+                    ..SessionOptions::native_only()
+                },
+            )
+            .map_err(|e| format!("pooled session: {e}"))?;
+
+            // Warm run first: plan *compilation* (constant folding issues
+            // real dispatches) has no retry path — only replay does.
+            let warm = pooled
+                .run(&feeds, &fetch_refs)
+                .map_err(|e| format!("warm run: {e}"))?;
+            if warm != want {
+                return Err("fault-free pooled run diverged".into());
+            }
+
+            let faulty = (seed >> 16) as usize % pool;
+            pooled.router().agent(faulty).inject_faults(FaultPlan {
+                drop_prob: 0.25,
+                stall_prob: 0.25,
+                stall: Duration::from_millis(30),
+                ..FaultPlan::none(*seed)
+            });
+            for round in 0..2 {
+                let got = pooled.run(&feeds, &fetch_refs).map_err(|e| {
+                    format!("pool {pool} {strategy:?} faulted round {round}: {e}")
+                })?;
+                for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                    if a != b {
+                        return Err(format!(
+                            "fetch '{}' diverged under faults (pool {pool} \
+                             {strategy:?} agent {faulty} round {round})",
+                            fetch_refs[k]
+                        ));
+                    }
+                }
+            }
+            pooled.router().agent(faulty).clear_faults();
+            settle(&pooled)?;
+            pooled.shutdown();
+            Ok(())
+        });
+    }
+
+    /// Exactly-once completion under retry-on-alternate: every submitted
+    /// request yields exactly one reply — drops are retried (never
+    /// surfaced as failures) and never double-delivered.
+    #[test]
+    fn prop_retry_never_double_completes() {
+        use tf_fpga::serve::{
+            AsyncInferenceServer, AsyncServerConfig, BatchPolicy, ModelSpec,
+        };
+        use tf_fpga::util::quickcheck::U64Range;
+
+        forall(29, 6, &U64Range(1, u64::MAX >> 2), |&seed| {
+            let mut rng = Rng::new(seed);
+            let pool = 2 + rng.below(2) as usize; // 2..=3 agents
+            let mut srv = AsyncInferenceServer::start(AsyncServerConfig {
+                models: vec![ModelSpec::new(
+                    "mnist",
+                    BatchPolicy {
+                        max_batch: 1 + rng.below(4) as usize,
+                        max_delay: Duration::from_millis(1),
+                    },
+                )],
+                session: SessionOptions {
+                    fpga_pool: pool,
+                    dispatch_workers: 1,
+                    health: aggressive(),
+                    ..SessionOptions::native_only()
+                },
+                pipeline_depth: 2,
+            })
+            .map_err(|e| e.to_string())?;
+            let faulty = rng.below(pool as u64) as usize;
+            srv.session().router().agent(faulty).inject_faults(FaultPlan {
+                drop_prob: 0.35,
+                ..FaultPlan::none(seed)
+            });
+
+            let n = 8usize;
+            let rxs: Vec<_> = (0..n)
+                .map(|i| {
+                    let img: Vec<f32> =
+                        (0..784).map(|j| ((i * 131 + j) % 255) as f32 / 255.0).collect();
+                    srv.infer_async("mnist", img)
+                })
+                .collect::<Result<_, _>>()
+                .map_err(|e| e.to_string())?;
+            for (i, rx) in rxs.iter().enumerate() {
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(Ok(_)) => {}
+                    Ok(Err(e)) => return Err(format!("request {i} failed: {e}")),
+                    Err(_) => return Err(format!("request {i} hung")),
+                }
+                // A second value on the same channel = double completion.
+                if let Ok(extra) = rx.recv_timeout(Duration::from_millis(50)) {
+                    return Err(format!("request {i} completed twice: {extra:?}"));
+                }
+            }
+
+            srv.session().router().agent(faulty).clear_faults();
+            let rep = srv.report();
+            if rep.completed != n as u64 || rep.failed != 0 {
+                return Err(format!(
+                    "counters don't close: completed {} failed {} (want {n}/0)",
+                    rep.completed, rep.failed
+                ));
+            }
+            settle(srv.session())?;
+            srv.stop();
+            Ok(())
+        });
+    }
+
+    /// Routing stays a pure function of the observed call sequence when
+    /// quarantine/readmit events are part of it — and the eligibility
+    /// mask is honored: a route never picks a quarantined slot while an
+    /// eligible one exists (an all-quarantined pool voids the mask).
+    #[test]
+    fn prop_routing_deterministic_under_quarantine() {
+        use std::collections::VecDeque;
+        use std::sync::Arc;
+        use tf_fpga::fpga::device::{ComputeBinding, FpgaConfig};
+        use tf_fpga::fpga::roles::paper_roles;
+        use tf_fpga::hsa::agent::Agent;
+        use tf_fpga::hsa::packet::AqlPacket;
+        use tf_fpga::hsa::queue::Queue;
+        use tf_fpga::hsa::signal::Signal;
+        use tf_fpga::reconfig::policy::PolicyKind;
+        use tf_fpga::sharding::{FpgaPool, RouteGuard, Router};
+        use tf_fpga::util::quickcheck::{U64Range, VecGen};
+
+        struct Harness {
+            router: Router,
+            agents: usize,
+            ids: Vec<u64>,
+            guards: VecDeque<RouteGuard>,
+        }
+
+        impl Harness {
+            fn new(agents: usize, strategy: ShardStrategy) -> Harness {
+                let pool = FpgaPool::new(agents, |i| FpgaConfig {
+                    num_regions: 1,
+                    policy: PolicyKind::Lru.build(i as u64),
+                    realtime: false,
+                    realtime_scale: 1.0,
+                    trace: None,
+                });
+                let echo = ComputeBinding::Native(Arc::new(
+                    |ins: &[tf_fpga::tf::tensor::Tensor]| Ok(ins.to_vec()),
+                ));
+                let ids: Vec<u64> = paper_roles()
+                    .into_iter()
+                    .take(3)
+                    .map(|r| pool.register_role(r, echo.clone()))
+                    .collect();
+                let slots = pool
+                    .agents()
+                    .iter()
+                    .map(|a| (Arc::clone(a), Queue::new(8)))
+                    .collect();
+                Harness {
+                    router: Router::new(slots, strategy),
+                    agents,
+                    ids,
+                    guards: VecDeque::new(),
+                }
+            }
+
+            /// Apply one op; `Some(agent)` when the op was a route.
+            /// Quarantine/readmit come from explicit calls (never the
+            /// wall-clock prober), so twins stay in lockstep.
+            fn apply(&mut self, op: u64) -> Option<usize> {
+                match op % 8 {
+                    0..=2 => {
+                        let ko = self.ids[(op / 8) as usize % self.ids.len()];
+                        let (idx, _q, guard) = self.router.route(ko);
+                        let x = tf_fpga::tf::tensor::Tensor::from_f32(
+                            &[1],
+                            vec![op as f32],
+                        )
+                        .unwrap();
+                        let (pkt, _args) =
+                            AqlPacket::dispatch(ko, vec![x], Signal::new(1));
+                        if let AqlPacket::KernelDispatch(d) = pkt {
+                            self.router.agent(idx).execute(&d).unwrap();
+                        }
+                        self.guards.push_back(guard);
+                        Some(idx)
+                    }
+                    3 => {
+                        self.guards.pop_front(); // retire the oldest
+                        None
+                    }
+                    4 => {
+                        let ko = self.ids[(op / 8) as usize % self.ids.len()];
+                        self.router.hint_demand(ko, op % 7);
+                        None
+                    }
+                    5 => {
+                        self.router.quarantine((op / 8) as usize % self.agents);
+                        None
+                    }
+                    6 => {
+                        self.router.readmit((op / 8) as usize % self.agents);
+                        None
+                    }
+                    _ => None,
+                }
+            }
+        }
+
+        let gen = VecGen { inner: U64Range(0, 1 << 24), min_len: 1, max_len: 120 };
+        forall(31, 40, &gen, |ops| {
+            let agents = 2 + (ops.len() % 3); // 2..=4
+            let strategy = ShardStrategy::ALL[ops.iter().sum::<u64>() as usize % 3];
+            let mut a = Harness::new(agents, strategy);
+            let mut b = Harness::new(agents, strategy);
+            for (step, &op) in ops.iter().enumerate() {
+                let pa = a.apply(op);
+                let pb = b.apply(op);
+                if pa != pb {
+                    return Err(format!(
+                        "placement diverged at step {step}: {pa:?} vs {pb:?} \
+                         ({strategy:?}, {agents} agents)"
+                    ));
+                }
+                if let Some(idx) = pa {
+                    let eligible_exists =
+                        (0..agents).any(|i| !a.router.is_quarantined(i));
+                    if eligible_exists && a.router.is_quarantined(idx) {
+                        return Err(format!(
+                            "step {step}: routed to quarantined agent {idx} \
+                             while eligible agents existed ({strategy:?})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
 #[test]
 fn prop_native_conv_matches_brute_force() {
     // Independent re-derivation of conv semantics: brute-force i64
