@@ -1,13 +1,22 @@
 //! Closed-loop loopback benchmark of the HTTP serving frontend:
 //! in-process `AsyncInferenceServer::infer` vs the same pipeline behind
-//! `net::HttpServer` + `NetClient` keep-alive connections, at batch sizes
-//! 1 and 8. `cargo bench --bench http_serving`.
+//! `net::HttpServer` + `NetClient` keep-alive connections — over both the
+//! JSON `:predict` route and the binary `:predict-bin` tensor route — at
+//! batch sizes 1 and 8. `cargo bench --bench http_serving`.
 //!
-//! The interesting number is the *overhead factor* — how much of the
-//! pipeline's throughput survives the JSON + TCP round trip. A closed
-//! loop (every client blocks on its reply) keeps the comparison honest:
-//! both sides see identical offered concurrency. Environment knobs:
-//! `HTTP_N` total requests per configuration (default 256),
+//! Two headline ratios:
+//!
+//! * *overhead factor* — how much of the pipeline's throughput survives
+//!   the JSON + TCP round trip;
+//! * *json_vs_binary_overhead_factor* — binary-route req/s over JSON
+//!   req/s at batch 8. The binary wire path skips JSON number
+//!   formatting/tokenising on both ends and decodes rows straight into
+//!   the batch lane's staging buffer, so the factor must stay above 1.0
+//!   (gated by `--check` via the committed baseline).
+//!
+//! A closed loop (every client blocks on its reply) keeps the comparison
+//! honest: all sides see identical offered concurrency. Environment
+//! knobs: `HTTP_N` total requests per configuration (default 256),
 //! `HTTP_CLIENTS` concurrent clients (default 8).
 
 use std::sync::Arc;
@@ -18,7 +27,7 @@ use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig, BatchPolicy, Model
 use tf_fpga::tf::session::SessionOptions;
 
 /// Committed floor values for `--check` (absolute throughput nulled —
-/// machine-dependent — only the overhead factor gates).
+/// machine-dependent — only the scaling ratios gate).
 const BASELINE: &str = include_str!("baselines/BENCH_http.json");
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -61,6 +70,82 @@ fn drive(clients: usize, total: usize, infer: impl Fn(usize, Vec<f32>) + Send + 
     t0.elapsed()
 }
 
+/// One closed-loop run over a fresh HTTP server — JSON `:predict` or the
+/// binary `:predict-bin` route — recording latency/fill metrics under
+/// `http.batch_N` / `http_bin.batch_N`. Returns req/s.
+fn run_http(
+    max_batch: usize,
+    clients: usize,
+    total: usize,
+    binary: bool,
+    artifact: &mut BenchArtifact,
+    sane: &mut bool,
+) -> f64 {
+    let srv = AsyncInferenceServer::start(config(max_batch)).expect("server");
+    let server = HttpServer::start(
+        srv,
+        HttpServerConfig {
+            workers: clients,
+            max_pending: total.max(64),
+            ..HttpServerConfig::default()
+        },
+    )
+    .expect("http server");
+    let addr = server.local_addr();
+    let per_client = total / clients;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = NetClient::connect(addr).expect("connect");
+                for i in 0..per_client {
+                    let s = sample(c * per_client + i);
+                    if binary {
+                        let resp = client
+                            .predict_bin("mnist", &[1, 28, 28], &[s.as_slice()], &[])
+                            .expect("predict-bin io");
+                        assert_eq!(resp.status, 200);
+                    } else {
+                        let resp = client
+                            .predict("mnist", &[s.as_slice()], &[])
+                            .expect("predict io");
+                        assert_eq!(resp.status, 200, "{}", resp.body);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let elapsed = t0.elapsed();
+    let rep = server.report();
+    let net = server.net_snapshot();
+    let label = if binary { "bin" } else { "json" };
+    println!(
+        "  [{label} b{max_batch}: fill {:.2}, late joins {}, bytes copied {}, \
+         p99 {} µs, shed {}, {} connections]",
+        rep.batch_fill_ratio,
+        rep.late_joins,
+        rep.bytes_copied,
+        rep.latency_us_p99,
+        net.shed_pending + net.shed_tenant,
+        net.connections
+    );
+    *sane &= rep.failed == 0 && net.responses_with(200) as usize == total;
+    let prefix = if binary {
+        format!("http_bin.batch_{max_batch}")
+    } else {
+        format!("http.batch_{max_batch}")
+    };
+    artifact.set_u64(&format!("{prefix}.p50_us"), rep.latency_us_p50);
+    artifact.set_u64(&format!("{prefix}.p99_us"), rep.latency_us_p99);
+    artifact.set_f64(&format!("{prefix}.batch_fill"), rep.mean_batch_fill);
+    artifact.set_f64(&format!("{prefix}.fill_ratio"), rep.batch_fill_ratio);
+    drop(server); // graceful drain
+    total as f64 / elapsed.as_secs_f64()
+}
+
 fn main() {
     let total = env_usize("HTTP_N", 256);
     let clients = env_usize("HTTP_CLIENTS", 8);
@@ -68,8 +153,8 @@ fn main() {
 
     println!("http_serving: {total} requests, {clients} closed-loop clients\n");
     println!(
-        "{:<12} {:>14} {:>14} {:>10}   (req/s; http/in-process)",
-        "batch size", "in-process", "http", "factor"
+        "{:<12} {:>14} {:>14} {:>14} {:>10}   (req/s; factor = http json/in-process)",
+        "batch size", "in-process", "http json", "http bin", "factor"
     );
 
     let mut artifact = BenchArtifact::new("http");
@@ -77,6 +162,8 @@ fn main() {
     artifact.set_u64("clients", clients as u64);
 
     let mut sane = true;
+    let mut json_rps_at_8 = f64::NAN;
+    let mut bin_rps_at_8 = f64::NAN;
     for max_batch in [1usize, 8] {
         // --- in-process baseline: same pipeline, no network ---
         let inproc_rps = {
@@ -92,66 +179,34 @@ fn main() {
             rps
         };
 
-        // --- over the wire: one keep-alive connection per client ---
-        let http_rps = {
-            let srv = AsyncInferenceServer::start(config(max_batch)).expect("server");
-            let server = HttpServer::start(
-                srv,
-                HttpServerConfig {
-                    workers: clients,
-                    max_pending: total.max(64),
-                    ..HttpServerConfig::default()
-                },
-            )
-            .expect("http server");
-            let addr = server.local_addr();
-            let per_client = total / clients;
-            let t0 = Instant::now();
-            let handles: Vec<_> = (0..clients)
-                .map(|c| {
-                    std::thread::spawn(move || {
-                        let mut client = NetClient::connect(addr).expect("connect");
-                        for i in 0..per_client {
-                            let s = sample(c * per_client + i);
-                            let resp = client
-                                .predict("mnist", &[s.as_slice()], &[])
-                                .expect("predict io");
-                            assert_eq!(resp.status, 200, "{}", resp.body);
-                        }
-                    })
-                })
-                .collect();
-            for h in handles {
-                h.join().unwrap();
-            }
-            let elapsed = t0.elapsed();
-            let rep = server.report();
-            let net = server.net_snapshot();
-            println!(
-                "  [http b{max_batch}: fill {:.1}, max in-flight {}, p99 {} µs, \
-                 shed {}, {} connections]",
-                rep.mean_batch_fill,
-                rep.max_inflight,
-                rep.latency_us_p99,
-                net.shed_pending + net.shed_tenant,
-                net.connections
-            );
-            sane &= rep.failed == 0 && net.responses_with(200) as usize == total;
-            let prefix = format!("http.batch_{max_batch}");
-            artifact.set_u64(&format!("{prefix}.p50_us"), rep.latency_us_p50);
-            artifact.set_u64(&format!("{prefix}.p99_us"), rep.latency_us_p99);
-            artifact.set_f64(&format!("{prefix}.batch_fill"), rep.mean_batch_fill);
-            drop(server); // graceful drain
-            total as f64 / elapsed.as_secs_f64()
-        };
+        // --- over the wire: the JSON tier, then the binary tensor route ---
+        let http_rps = run_http(max_batch, clients, total, false, &mut artifact, &mut sane);
+        let bin_rps = run_http(max_batch, clients, total, true, &mut artifact, &mut sane);
 
         let factor = http_rps / inproc_rps;
         sane &= factor > 0.05; // the wire may cost, but not 20x
         artifact.set_f64(&format!("inprocess.batch_{max_batch}.req_s"), inproc_rps);
         artifact.set_f64(&format!("http.batch_{max_batch}.req_s"), http_rps);
+        artifact.set_f64(&format!("http_bin.batch_{max_batch}.req_s"), bin_rps);
         artifact.set_f64(&format!("overhead_factor.batch_{max_batch}"), factor);
-        println!("{:<12} {:>14.1} {:>14.1} {:>9.2}x", max_batch, inproc_rps, http_rps, factor);
+        if max_batch == 8 {
+            json_rps_at_8 = http_rps;
+            bin_rps_at_8 = bin_rps;
+        }
+        println!(
+            "{:<12} {:>14.1} {:>14.1} {:>14.1} {:>9.2}x",
+            max_batch, inproc_rps, http_rps, bin_rps, factor
+        );
     }
+
+    // The point of the binary wire path: req/s it buys over the JSON tier
+    // at batch 8. The committed baseline gates this above 1.0 in `--check`
+    // mode; here we only sanity-check it is a real positive ratio (single
+    // unchecked runs on loaded machines are too noisy for a hard gate).
+    let bin_factor = bin_rps_at_8 / json_rps_at_8;
+    sane &= bin_factor.is_finite() && bin_factor > 0.0;
+    artifact.set_f64("json_vs_binary_overhead_factor", bin_factor);
+    println!("\njson_vs_binary_overhead_factor (batch 8): {bin_factor:.2}x");
 
     // Artifact + optional baseline gate before the pass/fail logic, so CI
     // always gets the JSON even on a failing run.

@@ -124,6 +124,7 @@ fn main() {
             artifact.set_u64(&format!("{prefix}.p50_us"), rep.latency_us_p50);
             artifact.set_u64(&format!("{prefix}.p99_us"), rep.latency_us_p99);
             artifact.set_f64(&format!("{prefix}.batch_fill"), rep.mean_batch_fill);
+            artifact.set_f64(&format!("{prefix}.fill_ratio"), rep.batch_fill_ratio);
             artifact.set_u64(&format!("{prefix}.reconfigs"), rep.reconfig.misses);
             if let Ok(mut s) = Arc::try_unwrap(srv) {
                 s.stop();

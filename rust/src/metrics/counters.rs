@@ -14,6 +14,16 @@ pub struct ServeCounters {
     batches: AtomicU64,
     /// Sum of batch fills, for mean-fill reporting.
     fill_sum: AtomicU64,
+    /// Sum of compiled batch capacities over the same dispatches — the
+    /// denominator of the batch fill *ratio* (fill_sum / fill_capacity).
+    fill_capacity: AtomicU64,
+    /// Requests that joined a lane after its flush had already begun
+    /// (continuous batching's mid-flush admission window).
+    late_joins: AtomicU64,
+    /// Bytes that took an extra host-memory hop on the way into a batch
+    /// tensor (legacy owned-`Vec` submits, overflow tail moves). The
+    /// zero-copy wire paths record nothing here — that is the point.
+    bytes_copied: AtomicU64,
     /// Batches dispatched but not yet retired.
     inflight: AtomicU64,
     max_inflight: AtomicU64,
@@ -32,6 +42,9 @@ pub struct CounterSnapshot {
     pub failed: u64,
     pub batches: u64,
     pub fill_sum: u64,
+    pub fill_capacity: u64,
+    pub late_joins: u64,
+    pub bytes_copied: u64,
     pub inflight: u64,
     pub max_inflight: u64,
     pub plan_compile_us: u64,
@@ -46,6 +59,16 @@ impl CounterSnapshot {
         }
     }
 
+    /// Fraction of dispatched batch capacity that carried real requests
+    /// (1.0 = every batch left fully packed; 0.0 before any dispatch).
+    pub fn batch_fill_ratio(&self) -> f64 {
+        if self.fill_capacity == 0 {
+            0.0
+        } else {
+            self.fill_sum as f64 / self.fill_capacity as f64
+        }
+    }
+
     /// Field-wise accumulation for pooled rollups (per-agent or
     /// per-pipeline counters summed into one view). Gauges add too:
     /// the pool's in-flight total is the sum of its members', and the
@@ -57,6 +80,9 @@ impl CounterSnapshot {
         self.failed += other.failed;
         self.batches += other.batches;
         self.fill_sum += other.fill_sum;
+        self.fill_capacity += other.fill_capacity;
+        self.late_joins += other.late_joins;
+        self.bytes_copied += other.bytes_copied;
         self.inflight += other.inflight;
         self.max_inflight += other.max_inflight;
         self.plan_compile_us += other.plan_compile_us;
@@ -83,13 +109,30 @@ impl ServeCounters {
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// A batch of `fill` requests was dispatched; bumps the in-flight
-    /// gauge and folds it into the high-water mark.
-    pub fn on_batch_dispatch(&self, fill: u64) {
+    /// A batch of `fill` requests was dispatched into a lane compiled for
+    /// `capacity` rows; bumps the in-flight gauge and folds it into the
+    /// high-water mark.
+    pub fn on_batch_dispatch(&self, fill: u64, capacity: u64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.fill_sum.fetch_add(fill, Ordering::Relaxed);
+        self.fill_capacity.fetch_add(capacity, Ordering::Relaxed);
         let now = self.inflight.fetch_add(1, Ordering::AcqRel) + 1;
         self.max_inflight.fetch_max(now, Ordering::AcqRel);
+    }
+
+    /// `n` requests were admitted into a batch whose flush had already
+    /// begun (they ride the in-flight batch instead of waiting a cycle).
+    pub fn on_late_joins(&self, n: u64) {
+        if n > 0 {
+            self.late_joins.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// `n` bytes took an extra host-memory copy on the ingestion path.
+    pub fn on_bytes_copied(&self, n: u64) {
+        if n > 0 {
+            self.bytes_copied.fetch_add(n, Ordering::Relaxed);
+        }
     }
 
     /// A batch retired; `completed` of its requests succeeded, `failed`
@@ -123,6 +166,9 @@ impl ServeCounters {
             failed: self.failed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             fill_sum: self.fill_sum.load(Ordering::Relaxed),
+            fill_capacity: self.fill_capacity.load(Ordering::Relaxed),
+            late_joins: self.late_joins.load(Ordering::Relaxed),
+            bytes_copied: self.bytes_copied.load(Ordering::Relaxed),
             inflight: self.inflight.load(Ordering::Acquire),
             max_inflight: self.max_inflight.load(Ordering::Acquire),
             plan_compile_us: self.plan_compile_us.load(Ordering::Relaxed),
@@ -140,8 +186,8 @@ mod tests {
         for _ in 0..5 {
             c.on_submit();
         }
-        c.on_batch_dispatch(3);
-        c.on_batch_dispatch(2);
+        c.on_batch_dispatch(3, 4);
+        c.on_batch_dispatch(2, 4);
         assert_eq!(c.inflight(), 2);
         c.on_batch_complete(3, 0);
         c.on_batch_complete(1, 1);
@@ -153,19 +199,21 @@ mod tests {
         assert_eq!(s.inflight, 0);
         assert_eq!(s.max_inflight, 2);
         assert!((s.mean_batch_fill() - 2.5).abs() < 1e-9);
+        assert!((s.batch_fill_ratio() - 5.0 / 8.0).abs() < 1e-9);
     }
 
     #[test]
     fn high_water_mark_survives_drain() {
         let c = ServeCounters::new();
         for _ in 0..4 {
-            c.on_batch_dispatch(1);
+            c.on_batch_dispatch(1, 1);
         }
         for _ in 0..4 {
             c.on_batch_complete(1, 0);
         }
         assert_eq!(c.inflight(), 0);
         assert_eq!(c.snapshot().max_inflight, 4);
+        assert_eq!(c.snapshot().batch_fill_ratio(), 1.0);
     }
 
     #[test]
@@ -183,28 +231,48 @@ mod tests {
         let s = c.snapshot();
         assert_eq!(s.failed, 3);
         assert_eq!((s.batches, s.inflight, s.max_inflight), (0, 0, 0));
+        assert_eq!(s.batch_fill_ratio(), 0.0);
+    }
+
+    #[test]
+    fn late_joins_and_bytes_copied_accumulate() {
+        let c = ServeCounters::new();
+        c.on_late_joins(0); // no-op
+        c.on_late_joins(2);
+        c.on_late_joins(1);
+        c.on_bytes_copied(0); // no-op
+        c.on_bytes_copied(4096);
+        let s = c.snapshot();
+        assert_eq!(s.late_joins, 3);
+        assert_eq!(s.bytes_copied, 4096);
     }
 
     #[test]
     fn rollup_sums_field_wise() {
         let a = ServeCounters::new();
         a.on_submit();
-        a.on_batch_dispatch(3);
+        a.on_batch_dispatch(3, 8);
         a.on_batch_complete(3, 0);
         a.on_plan_compile(100);
+        a.on_late_joins(1);
+        a.on_bytes_copied(64);
         let b = ServeCounters::new();
         b.on_submit();
         b.on_submit();
-        b.on_batch_dispatch(2);
+        b.on_batch_dispatch(2, 8);
         let total = CounterSnapshot::rollup([a.snapshot(), b.snapshot()].iter());
         assert_eq!(total.submitted, 3);
         assert_eq!(total.completed, 3);
         assert_eq!(total.batches, 2);
         assert_eq!(total.fill_sum, 5);
+        assert_eq!(total.fill_capacity, 16);
+        assert_eq!(total.late_joins, 1);
+        assert_eq!(total.bytes_copied, 64);
         assert_eq!(total.inflight, 1, "b's batch is still in flight");
         assert_eq!(total.max_inflight, 2, "pool-wide upper bound");
         assert_eq!(total.plan_compile_us, 100);
         assert!((total.mean_batch_fill() - 2.5).abs() < 1e-9);
+        assert!((total.batch_fill_ratio() - 5.0 / 16.0).abs() < 1e-9);
     }
 
     #[test]
@@ -212,6 +280,7 @@ mod tests {
         let s = ServeCounters::new().snapshot();
         assert_eq!(s, CounterSnapshot::default());
         assert_eq!(s.mean_batch_fill(), 0.0);
+        assert_eq!(s.batch_fill_ratio(), 0.0);
     }
 
     #[test]
@@ -224,7 +293,7 @@ mod tests {
                 std::thread::spawn(move || {
                     for _ in 0..1000 {
                         c.on_submit();
-                        c.on_batch_dispatch(1);
+                        c.on_batch_dispatch(1, 1);
                         c.on_batch_complete(1, 0);
                     }
                 })

@@ -4,10 +4,36 @@
 //! default, with one transparent reconnect when a reused connection turns
 //! out to be stale (server recycled it on idle timeout or drain).
 
+use crate::net::wire;
 use crate::util::json::{Json, JsonError};
 use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
+
+/// A parsed HTTP response with the body left as raw bytes — what the
+/// binary tensor endpoints return. Header names are lowercased.
+#[derive(Debug)]
+pub struct RawResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl RawResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn closes(&self) -> bool {
+        self.header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+}
 
 /// A parsed HTTP response. Header names are lowercased.
 #[derive(Debug)]
@@ -29,6 +55,11 @@ impl HttpResponse {
     /// Parse the body as JSON.
     pub fn json(&self) -> Result<Json, JsonError> {
         Json::parse(&self.body)
+    }
+
+    fn from_raw(raw: RawResponse) -> io::Result<HttpResponse> {
+        let body = String::from_utf8(raw.body).map_err(|_| bad_data("non-UTF-8 body"))?;
+        Ok(HttpResponse { status: raw.status, headers: raw.headers, body })
     }
 
     fn closes(&self) -> bool {
@@ -87,6 +118,19 @@ impl NetClient {
         headers: &[(&str, &str)],
         body: Option<&str>,
     ) -> io::Result<HttpResponse> {
+        let raw = self.request_bytes(method, path, headers, body.map(|b| b.as_bytes()))?;
+        HttpResponse::from_raw(raw)
+    }
+
+    /// [`NetClient::request`] without the UTF-8 assumption on either
+    /// side: the byte path the binary tensor endpoints ride.
+    pub fn request_bytes(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: Option<&[u8]>,
+    ) -> io::Result<RawResponse> {
         let reused = self.stream.is_some();
         match self.try_request(method, path, headers, body) {
             Ok(resp) => Ok(resp),
@@ -103,8 +147,8 @@ impl NetClient {
         method: &str,
         path: &str,
         headers: &[(&str, &str)],
-        body: Option<&str>,
-    ) -> io::Result<HttpResponse> {
+        body: Option<&[u8]>,
+    ) -> io::Result<RawResponse> {
         if self.stream.is_none() {
             self.reconnect()?;
         }
@@ -114,15 +158,15 @@ impl NetClient {
             for (name, value) in headers {
                 head.push_str(&format!("{name}: {value}\r\n"));
             }
-            let body = body.unwrap_or("");
+            let body = body.unwrap_or(&[]);
             head.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
             {
                 let stream = reader.get_mut();
                 stream.write_all(head.as_bytes())?;
-                stream.write_all(body.as_bytes())?;
+                stream.write_all(body)?;
                 stream.flush()?;
             }
-            read_response(reader)
+            read_response_bytes(reader)
         })();
         match result {
             Ok(resp) => {
@@ -155,6 +199,26 @@ impl NetClient {
         let body = predict_body(samples);
         self.request("POST", &format!("/v1/models/{model}:predict"), headers, Some(&body))
     }
+
+    /// `POST /v1/models/{model}:predict-bin` with a binary tensor body
+    /// (`sample_shape` is one sample's shape, batch dim excluded); the
+    /// reply body is the mirrored binary encoding — decode it with
+    /// [`decode_predictions_bin`].
+    pub fn predict_bin(
+        &mut self,
+        model: &str,
+        sample_shape: &[usize],
+        samples: &[&[f32]],
+        headers: &[(&str, &str)],
+    ) -> io::Result<RawResponse> {
+        let body = wire::encode_rows(sample_shape, samples);
+        self.request_bytes(
+            "POST",
+            &format!("/v1/models/{model}:predict-bin"),
+            headers,
+            Some(&body),
+        )
+    }
 }
 
 /// Build an `{"instances": [...]}` predict body from flat samples.
@@ -166,6 +230,22 @@ pub fn predict_body(samples: &[&[f32]]) -> String {
     let mut top = std::collections::BTreeMap::new();
     top.insert("instances".to_string(), Json::Arr(instances));
     Json::Obj(top).to_string()
+}
+
+/// Decode a 200 `:predict-bin` response (a binary tensor body) into rows
+/// of f32 — bit-exact by construction, the payload *is* the raw bits.
+pub fn decode_predictions_bin(resp: &RawResponse) -> Result<Vec<Vec<f32>>, String> {
+    let h = wire::decode_header(&resp.body)?;
+    let payload = h.payload(&resp.body);
+    let row_bytes = h.row_bytes();
+    Ok((0..h.rows)
+        .map(|i| {
+            payload[i * row_bytes..(i + 1) * row_bytes]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        })
+        .collect())
 }
 
 /// Decode a 200 predict response into rows of f32 (exact bits, thanks to
@@ -229,6 +309,10 @@ fn bad_data(msg: impl Into<String>) -> io::Error {
 }
 
 fn read_response<S: Read>(reader: &mut BufReader<S>) -> io::Result<HttpResponse> {
+    HttpResponse::from_raw(read_response_bytes(reader)?)
+}
+
+fn read_response_bytes<S: Read>(reader: &mut BufReader<S>) -> io::Result<RawResponse> {
     let mut line = String::new();
     if reader.read_line(&mut line)? == 0 {
         return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "connection closed"));
@@ -267,8 +351,7 @@ fn read_response<S: Read>(reader: &mut BufReader<S>) -> io::Result<HttpResponse>
         .ok_or_else(|| bad_data("response without Content-Length"))?;
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
-    let body = String::from_utf8(body).map_err(|_| bad_data("non-UTF-8 body"))?;
-    Ok(HttpResponse { status, headers, body })
+    Ok(RawResponse { status, headers, body })
 }
 
 #[cfg(test)]
@@ -283,6 +366,26 @@ mod tests {
         let row = doc.get("instances").idx(0).as_arr().unwrap();
         for (want, got) in samples.iter().zip(row) {
             assert_eq!(want.to_bits(), got.as_f32().unwrap().to_bits());
+        }
+    }
+
+    #[test]
+    fn binary_response_bodies_survive_the_byte_path() {
+        let row: Vec<f32> = vec![0.0, -0.0, 1.0e-40, 3.5];
+        let payload = wire::encode_rows(&[4], &[row.as_slice()]);
+        let mut doc = format!(
+            "HTTP/1.1 200 OK\r\nContent-Type: application/x-tf-fpga-tensor\r\n\
+             Content-Length: {}\r\n\r\n",
+            payload.len()
+        )
+        .into_bytes();
+        doc.extend_from_slice(&payload);
+        let resp = read_response_bytes(&mut BufReader::new(doc.as_slice())).unwrap();
+        assert_eq!(resp.status, 200);
+        let got = decode_predictions_bin(&resp).unwrap();
+        assert_eq!(got.len(), 1);
+        for (g, w) in got[0].iter().zip(&row) {
+            assert_eq!(g.to_bits(), w.to_bits(), "binary body must be bit-exact");
         }
     }
 

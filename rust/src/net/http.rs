@@ -251,6 +251,18 @@ impl Response {
         }
     }
 
+    /// Binary tensor responses (`application/x-tf-fpga-tensor` bodies,
+    /// mirroring a binary request's encoding).
+    pub fn binary(status: u16, body: Vec<u8>) -> Response {
+        Response {
+            status,
+            content_type: crate::net::wire::TENSOR_CONTENT_TYPE,
+            body,
+            extra_headers: Vec::new(),
+            close: false,
+        }
+    }
+
     /// Prometheus/text responses.
     pub fn text(status: u16, body: impl Into<String>) -> Response {
         Response {

@@ -18,9 +18,13 @@
 //!   ([`admission::PendingGate`]) that sheds with `429` + `Retry-After`,
 //!   and pre-dispatch [`admission::Deadline`] cancellation, all over an
 //!   injected [`admission::Clock`].
-//! * [`server`] — [`HttpServer`]: routes (`:predict`, `/v1/models`,
-//!   `/healthz`, `/metrics`), structured JSON error bodies, graceful
-//!   drain on [`HttpServer::shutdown`].
+//! * [`server`] — [`HttpServer`]: routes (`:predict`, `:predict-bin`,
+//!   `/v1/models`, `/healthz`, `/metrics`), structured JSON error bodies,
+//!   graceful drain on [`HttpServer::shutdown`].
+//! * [`wire`] — the binary tensor format (`application/x-tf-fpga-tensor`):
+//!   fixed header + raw little-endian f32 payload, decoded straight into
+//!   the batch lane's staging buffer. A base64 raw-f32 tier
+//!   (`instances_b64`) rides inside the JSON API as the middle ground.
 //! * [`prom`] — frontend counters and the Prometheus text rendering.
 //! * [`client`] — [`NetClient`], the blocking loopback client the
 //!   integration tests and the `http_serving` bench drive the server
@@ -44,8 +48,13 @@ pub mod client;
 pub mod http;
 pub mod prom;
 pub mod server;
+pub mod wire;
 
 pub use admission::{Clock, Deadline, ManualClock, PendingGate, RateLimiter, SystemClock};
-pub use client::{decode_predictions, one_shot, predict_body, HttpResponse, NetClient};
+pub use client::{
+    decode_predictions, decode_predictions_bin, one_shot, predict_body, HttpResponse, NetClient,
+    RawResponse,
+};
 pub use prom::{NetCounters, NetSnapshot};
 pub use server::{HttpServer, HttpServerConfig};
+pub use wire::TENSOR_CONTENT_TYPE;

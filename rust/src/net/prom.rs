@@ -166,6 +166,27 @@ pub fn render(
         "Batches dispatched but not yet retired.",
     );
     let _ = writeln!(out, "tf_fpga_serve_inflight_batches {}", serve.inflight);
+    metric(
+        &mut out,
+        "tf_fpga_serve_late_joins_total",
+        "counter",
+        "Requests admitted into a batch whose flush had already begun.",
+    );
+    let _ = writeln!(out, "tf_fpga_serve_late_joins_total {}", serve.late_joins);
+    metric(
+        &mut out,
+        "tf_fpga_serve_bytes_copied_total",
+        "counter",
+        "Bytes that took an extra host-memory copy on the ingestion path.",
+    );
+    let _ = writeln!(out, "tf_fpga_serve_bytes_copied_total {}", serve.bytes_copied);
+    metric(
+        &mut out,
+        "tf_fpga_serve_batch_fill_ratio",
+        "gauge",
+        "Fraction of dispatched batch capacity carrying real requests.",
+    );
+    let _ = writeln!(out, "tf_fpga_serve_batch_fill_ratio {}", serve.batch_fill_ratio());
 
     metric(
         &mut out,
@@ -318,7 +339,17 @@ mod tests {
         c.on_response(200);
         c.on_response(429);
         c.on_shed_pending();
-        let serve = CounterSnapshot { submitted: 7, completed: 6, failed: 1, batches: 3, ..Default::default() };
+        let serve = CounterSnapshot {
+            submitted: 7,
+            completed: 6,
+            failed: 1,
+            batches: 3,
+            fill_sum: 6,
+            fill_capacity: 12,
+            late_joins: 2,
+            bytes_copied: 128,
+            ..Default::default()
+        };
         let pool = vec![
             ShardAgentReport {
                 agent: "ultra96-pl-0".into(),
@@ -359,6 +390,9 @@ mod tests {
             "tf_fpga_http_draining 1",
             "tf_fpga_serve_requests_total 7",
             "tf_fpga_serve_completed_total 6",
+            "tf_fpga_serve_late_joins_total 2",
+            "tf_fpga_serve_bytes_copied_total 128",
+            "tf_fpga_serve_batch_fill_ratio 0.5",
             "tf_fpga_agent_dispatches_total{agent=\"ultra96-pl-0\"} 5",
             "tf_fpga_agent_dispatches_total{agent=\"ultra96-pl-1\"} 4",
             "tf_fpga_agent_reconfig_misses_total{agent=\"ultra96-pl-0\"} 2",

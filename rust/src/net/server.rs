@@ -21,7 +21,12 @@
 //!   nested) arrays flattened row-major and validated against the model's
 //!   [`ModelIoMeta`]. Replies `{"model": ..., "predictions": [<row>, ...]}`
 //!   with bit-exact f32 round-trip (the JSON writer prints shortest
-//!   round-trip forms).
+//!   round-trip forms). Two faster tiers ride the same route:
+//!   `{"instances_b64": "<base64 of raw LE f32 rows>"}` (replying
+//!   `"predictions_b64"`), and a full binary tensor body selected by
+//!   `Content-Type: application/x-tf-fpga-tensor` (see [`crate::net::wire`]).
+//! * `POST /v1/models/{name}:predict-bin` — the binary tensor body without
+//!   needing the content type; the reply mirrors the request's encoding.
 //! * `GET /v1/models` — hosted models with signature and I/O meta.
 //! * `GET /healthz` — liveness (`"ok"`, or `"draining"` during shutdown).
 //! * `GET /metrics` — Prometheus text (see [`crate::net::prom`]).
@@ -34,9 +39,13 @@ use crate::hsa::error::{HsaError, Result};
 use crate::net::admission::{Clock, Deadline, PendingGate, RateLimiter, SystemClock};
 use crate::net::http::{self, HttpError, Request, Response};
 use crate::net::prom::{self, NetCounters};
+use crate::net::wire;
 use crate::serve::async_server::AsyncInferenceServer;
+use crate::serve::batcher::TensorWriter;
 use crate::serve::hosted::ModelIoMeta;
+use crate::util::b64;
 use crate::util::json::{Json, JsonErrorKind, JsonLimits};
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -351,12 +360,14 @@ fn handle_connection(stream: TcpStream, shared: &Shared, keep_alive: Duration) {
 fn route(req: &Request, shared: &Shared) -> Response {
     const PREDICT_PREFIX: &str = "/v1/models/";
     const PREDICT_SUFFIX: &str = ":predict";
+    const PREDICT_BIN_SUFFIX: &str = ":predict-bin";
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => handle_healthz(shared),
         ("GET", "/metrics") => handle_metrics(shared),
         ("GET", "/v1/models") => handle_models(shared),
         (method, path)
-            if path.starts_with(PREDICT_PREFIX) && path.ends_with(PREDICT_SUFFIX) =>
+            if path.starts_with(PREDICT_PREFIX)
+                && (path.ends_with(PREDICT_SUFFIX) || path.ends_with(PREDICT_BIN_SUFFIX)) =>
         {
             if method != "POST" {
                 return error_response(
@@ -366,8 +377,14 @@ fn route(req: &Request, shared: &Shared) -> Response {
                     vec![],
                 );
             }
-            let model = &path[PREDICT_PREFIX.len()..path.len() - PREDICT_SUFFIX.len()];
-            handle_predict(model, req, shared)
+            // `:predict-bin` forces the binary tensor body; `:predict`
+            // accepts it too when the content type selects it.
+            let (model, binary_route) = if path.ends_with(PREDICT_BIN_SUFFIX) {
+                (&path[PREDICT_PREFIX.len()..path.len() - PREDICT_BIN_SUFFIX.len()], true)
+            } else {
+                (&path[PREDICT_PREFIX.len()..path.len() - PREDICT_SUFFIX.len()], false)
+            };
+            handle_predict(model, req, shared, binary_route)
         }
         ("GET" | "POST", _) => {
             error_response(404, "not_found", &format!("no route for '{}'", req.path), vec![])
@@ -434,7 +451,7 @@ fn endpoint_json(name: &str, sample_shape: &[usize], elems: usize) -> Json {
     Json::Obj(m)
 }
 
-fn handle_predict(model: &str, req: &Request, shared: &Shared) -> Response {
+fn handle_predict(model: &str, req: &Request, shared: &Shared, binary_route: bool) -> Response {
     let Some(meta) = shared.srv.model_meta(model).cloned() else {
         let served = shared.srv.models();
         return error_response(
@@ -491,9 +508,22 @@ fn handle_predict(model: &str, req: &Request, shared: &Shared) -> Response {
         },
     };
 
-    // 4. Body → samples.
-    let samples = match parse_predict_body(model, &meta, &req.body, shared.json_limits) {
-        Ok(s) => s,
+    // 4. Body → rows, in whichever of the three encodings the client
+    // chose (JSON instances/inputs, base64 raw-f32 tier, binary tensor).
+    let binary = binary_route
+        || req.header("content-type").is_some_and(|ct| {
+            ct.split(';').next().unwrap_or("").trim().eq_ignore_ascii_case(wire::TENSOR_CONTENT_TYPE)
+        });
+    let mut json_doc = None;
+    let parsed = match parse_predict_request(
+        model,
+        &meta,
+        &req.body,
+        binary,
+        shared.json_limits,
+        &mut json_doc,
+    ) {
+        Ok(p) => p,
         Err(resp) => return *resp,
     };
 
@@ -501,9 +531,9 @@ fn handle_predict(model: &str, req: &Request, shared: &Shared) -> Response {
     // for its remaining instances too — atomically, so a failed batch
     // neither multiplies a tenant's effective rate nor drains its
     // bucket into livelock.
-    if samples.len() > 1 {
+    if parsed.rows > 1 {
         if let Some(limiter) = &shared.limiter {
-            match limiter.try_acquire_n(&tenant, samples.len() as u64 - 1) {
+            match limiter.try_acquire_n(&tenant, parsed.rows as u64 - 1) {
                 Ok(()) => {}
                 Err(None) => {
                     return error_response(
@@ -512,7 +542,7 @@ fn handle_predict(model: &str, req: &Request, shared: &Shared) -> Response {
                         &format!(
                             "a batch of {} instances can never fit tenant '{tenant}'s \
                              burst capacity; split it across requests",
-                            samples.len()
+                            parsed.rows
                         ),
                         vec![("tenant", Json::Str(tenant))],
                     )
@@ -545,17 +575,40 @@ fn handle_predict(model: &str, req: &Request, shared: &Shared) -> Response {
         }
     }
 
-    // 6. Dispatch every sample, then collect replies in order.
-    let mut receivers = Vec::with_capacity(samples.len());
-    for sample in samples {
-        match shared.srv.infer_async(model, sample) {
-            Ok(rx) => receivers.push(rx),
-            // Pre-validated against the meta, so any error here is a
-            // pipeline failure, not a client one.
-            Err(e) => return error_response(500, "internal", &e.to_string(), vec![]),
+    // 6. Dispatch every row straight into its batch lane's staging
+    // buffer, then collect replies in order. The binary and base64 tiers
+    // copy raw little-endian rows through [`wire::copy_row_into`]; JSON
+    // samples flatten their (pre-validated) number tree directly into the
+    // lane's writer — neither path builds an intermediate `Vec<f32>`.
+    let mut receivers = Vec::with_capacity(parsed.rows);
+    match &parsed.body {
+        ParsedBody::Json(samples) => {
+            for raw in samples {
+                match shared.srv.infer_async_with(model, |w: &mut TensorWriter<'_>| {
+                    flatten_into(raw, w)
+                }) {
+                    Ok(rx) => receivers.push(rx),
+                    // Pre-validated against the meta, so any error here is
+                    // a pipeline failure, not a client one.
+                    Err(e) => return error_response(500, "internal", &e.to_string(), vec![]),
+                }
+            }
+        }
+        ParsedBody::Raw(data) => {
+            let row_bytes = meta.in_elems * 4;
+            for i in 0..parsed.rows {
+                let row = &data[i * row_bytes..(i + 1) * row_bytes];
+                match shared.srv.infer_async_with(model, |w: &mut TensorWriter<'_>| {
+                    wire::copy_row_into(row, w);
+                    Ok(())
+                }) {
+                    Ok(rx) => receivers.push(rx),
+                    Err(e) => return error_response(500, "internal", &e.to_string(), vec![]),
+                }
+            }
         }
     }
-    let mut rows = Vec::with_capacity(receivers.len());
+    let mut out_rows: Vec<Vec<f32>> = Vec::with_capacity(receivers.len());
     for rx in receivers {
         let reply = match deadline {
             Some(d) => match rx.recv_timeout(d.remaining(shared.clock.as_ref())) {
@@ -580,25 +633,130 @@ fn handle_predict(model: &str, req: &Request, shared: &Shared) -> Response {
             },
         };
         match reply {
-            Ok(row) => rows.push(Json::Arr(row.into_iter().map(Json::from_f32).collect())),
+            Ok(row) => out_rows.push(row),
             Err(e) => return error_response(500, "internal", &e.to_string(), vec![]),
         }
     }
 
-    let mut body = BTreeMap::new();
-    body.insert("model".to_string(), Json::Str(model.to_string()));
-    body.insert("predictions".to_string(), Json::Arr(rows));
-    Response::json(200, Json::Obj(body).to_string())
+    // The reply mirrors the request's encoding.
+    match parsed.reply {
+        ReplyEncoding::Binary => {
+            let mut flat = Vec::with_capacity(out_rows.len() * meta.out_elems);
+            for r in &out_rows {
+                flat.extend_from_slice(r);
+            }
+            Response::binary(
+                200,
+                wire::encode_flat(&meta.sample_out_shape, out_rows.len(), &flat),
+            )
+        }
+        ReplyEncoding::B64 => {
+            let mut bytes = Vec::with_capacity(out_rows.len() * meta.out_elems * 4);
+            for r in &out_rows {
+                for v in r {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            let mut body = BTreeMap::new();
+            body.insert("model".to_string(), Json::Str(model.to_string()));
+            body.insert("predictions_b64".to_string(), Json::Str(b64::encode(&bytes)));
+            body.insert("rows".to_string(), Json::from_usize(out_rows.len()));
+            Response::json(200, Json::Obj(body).to_string())
+        }
+        ReplyEncoding::Json => {
+            let rows = out_rows
+                .into_iter()
+                .map(|r| Json::Arr(r.into_iter().map(Json::from_f32).collect()))
+                .collect();
+            let mut body = BTreeMap::new();
+            body.insert("model".to_string(), Json::Str(model.to_string()));
+            body.insert("predictions".to_string(), Json::Arr(rows));
+            Response::json(200, Json::Obj(body).to_string())
+        }
+    }
 }
 
-/// Decode a predict body into flattened samples, or the exact error
+/// What a predict body parsed to: how many rows, how to encode the
+/// reply, and where the dispatchable row data lives.
+struct ParsedPredict<'a> {
+    rows: usize,
+    reply: ReplyEncoding,
+    body: ParsedBody<'a>,
+}
+
+/// Reply encoding, mirroring the request's.
+enum ReplyEncoding {
+    Json,
+    B64,
+    Binary,
+}
+
+enum ParsedBody<'a> {
+    /// JSON tier: borrowed, pre-validated samples still in tree form —
+    /// flattened straight into the batch lane at dispatch.
+    Json(Vec<&'a Json>),
+    /// Raw little-endian f32 rows: borrowed in place from a binary body,
+    /// or owned when decoded out of the base64 tier.
+    Raw(Cow<'a, [u8]>),
+}
+
+/// Decode a predict body into dispatch-ready rows, or the exact error
 /// response to send. Boxed because the error side is by far the larger.
-fn parse_predict_body(
+///
+/// Three encodings, chosen by the client:
+///
+/// * binary (the `:predict-bin` route, or `:predict` with the
+///   `application/x-tf-fpga-tensor` content type): a [`wire`] tensor
+///   body whose payload rows are borrowed in place — nothing is parsed
+///   or copied here;
+/// * `{"instances_b64": "<base64>"}`: raw little-endian f32 rows inside
+///   the JSON API; the row count follows from the decoded length;
+/// * `{"instances": [...]}` / `{"inputs": {...}}`: the JSON tier;
+///   samples are only *counted* here (shape validation), then flattened
+///   directly into the lane's staging buffer at dispatch.
+///
+/// `json_doc` is the caller's slot keeping a parsed JSON body alive for
+/// the borrows the `Json` variant returns.
+fn parse_predict_request<'a>(
     model: &str,
     meta: &ModelIoMeta,
-    body: &[u8],
+    body: &'a [u8],
+    binary: bool,
     limits: JsonLimits,
-) -> std::result::Result<Vec<Vec<f32>>, Box<Response>> {
+    json_doc: &'a mut Option<Json>,
+) -> std::result::Result<ParsedPredict<'a>, Box<Response>> {
+    if binary {
+        let h = wire::decode_header(body).map_err(|msg| {
+            Box::new(error_response(
+                400,
+                "bad_request",
+                &format!("binary tensor body: {msg}"),
+                vec![],
+            ))
+        })?;
+        if h.rows == 0 {
+            return Err(Box::new(error_response(
+                400,
+                "bad_request",
+                "binary tensor body has zero rows",
+                vec![],
+            )));
+        }
+        if h.rows > MAX_INSTANCES_PER_REQUEST {
+            return Err(Box::new(too_many_rows(h.rows)));
+        }
+        // Lenient on the exact per-sample shape (clients may flatten),
+        // strict on the element count the model actually consumes.
+        if h.elems_per_row() != meta.in_elems {
+            return Err(Box::new(shape_mismatch(model, meta, h.elems_per_row())));
+        }
+        return Ok(ParsedPredict {
+            rows: h.rows,
+            reply: ReplyEncoding::Binary,
+            body: ParsedBody::Raw(Cow::Borrowed(h.payload(body))),
+        });
+    }
+
     let text = std::str::from_utf8(body)
         .map_err(|_| Box::new(error_response(400, "bad_request", "body is not UTF-8", vec![])))?;
     let doc = Json::parse_with_limits(text, limits).map_err(|e| {
@@ -609,6 +767,47 @@ fn parse_predict_body(
         };
         Box::new(error_response(status, kind, &e.to_string(), vec![]))
     })?;
+    let doc = &*json_doc.insert(doc);
+
+    if let Json::Str(encoded) = doc.get("instances_b64") {
+        let data = b64::decode(encoded).map_err(|msg| {
+            Box::new(error_response(
+                400,
+                "bad_request",
+                &format!("\"instances_b64\": {msg}"),
+                vec![],
+            ))
+        })?;
+        let row_bytes = meta.in_elems * 4;
+        if data.is_empty() || data.len() % row_bytes != 0 {
+            return Err(Box::new(error_response(
+                400,
+                "shape_mismatch",
+                &format!(
+                    "model '{model}' input '{}': \"instances_b64\" decodes to {} bytes, \
+                     want a positive multiple of {row_bytes} ({} f32 values per row, \
+                     shape {:?})",
+                    meta.input_name,
+                    data.len(),
+                    meta.in_elems,
+                    meta.sample_in_shape
+                ),
+                vec![
+                    ("endpoint", Json::Str(meta.input_name.clone())),
+                    ("expected_elems", Json::from_usize(meta.in_elems)),
+                ],
+            )));
+        }
+        let rows = data.len() / row_bytes;
+        if rows > MAX_INSTANCES_PER_REQUEST {
+            return Err(Box::new(too_many_rows(rows)));
+        }
+        return Ok(ParsedPredict {
+            rows,
+            reply: ReplyEncoding::B64,
+            body: ParsedBody::Raw(Cow::Owned(data)),
+        });
+    }
 
     let raw_samples: Vec<&Json> = if let Json::Arr(instances) = doc.get("instances") {
         if instances.is_empty() {
@@ -668,16 +867,15 @@ fn parse_predict_body(
         return Err(Box::new(error_response(
             400,
             "bad_request",
-            "body must carry \"instances\": [<sample>, ...] or \
+            "body must carry \"instances\": [<sample>, ...], \
+             \"instances_b64\": \"<base64>\" or \
              \"inputs\": {\"<endpoint>\": <sample>}",
             vec![],
         )));
     };
 
-    let mut samples = Vec::with_capacity(raw_samples.len());
-    for (i, raw) in raw_samples.into_iter().enumerate() {
-        let mut flat = Vec::with_capacity(meta.in_elems);
-        flatten_f32(raw, &mut flat).map_err(|msg| {
+    for (i, raw) in raw_samples.iter().enumerate() {
+        let n = count_elems(raw).map_err(|msg| {
             Box::new(error_response(
                 400,
                 "bad_request",
@@ -685,46 +883,76 @@ fn parse_predict_body(
                 vec![],
             ))
         })?;
-        if flat.len() != meta.in_elems {
-            // Same wording the Model facade / serving pipeline uses for
-            // mis-sized feeds, plus machine-readable expected-vs-got meta.
-            return Err(Box::new(error_response(
-                400,
-                "shape_mismatch",
-                &format!(
-                    "model '{model}' input '{}': expected {} f32 values (shape {:?}), got {}",
-                    meta.input_name,
-                    meta.in_elems,
-                    meta.sample_in_shape,
-                    flat.len()
-                ),
-                vec![
-                    ("endpoint", Json::Str(meta.input_name.clone())),
-                    (
-                        "expected_shape",
-                        Json::Arr(meta.sample_in_shape.iter().map(|&d| Json::from_usize(d)).collect()),
-                    ),
-                    ("expected_elems", Json::from_usize(meta.in_elems)),
-                    ("got_elems", Json::from_usize(flat.len())),
-                ],
-            )));
+        if n != meta.in_elems {
+            return Err(Box::new(shape_mismatch(model, meta, n)));
         }
-        samples.push(flat);
     }
-    Ok(samples)
+    Ok(ParsedPredict {
+        rows: raw_samples.len(),
+        reply: ReplyEncoding::Json,
+        body: ParsedBody::Json(raw_samples),
+    })
 }
 
-/// Flatten arbitrarily nested JSON arrays of numbers into `out`,
-/// row-major.
-fn flatten_f32(v: &Json, out: &mut Vec<f32>) -> std::result::Result<(), String> {
+/// The structured shape-mismatch error every encoding shares. Same
+/// wording the Model facade / serving pipeline uses for mis-sized feeds,
+/// plus machine-readable expected-vs-got meta.
+fn shape_mismatch(model: &str, meta: &ModelIoMeta, got_elems: usize) -> Response {
+    error_response(
+        400,
+        "shape_mismatch",
+        &format!(
+            "model '{model}' input '{}': expected {} f32 values (shape {:?}), got {}",
+            meta.input_name, meta.in_elems, meta.sample_in_shape, got_elems
+        ),
+        vec![
+            ("endpoint", Json::Str(meta.input_name.clone())),
+            (
+                "expected_shape",
+                Json::Arr(meta.sample_in_shape.iter().map(|&d| Json::from_usize(d)).collect()),
+            ),
+            ("expected_elems", Json::from_usize(meta.in_elems)),
+            ("got_elems", Json::from_usize(got_elems)),
+        ],
+    )
+}
+
+/// The per-request row cap, worded like the JSON tier's `instances` cap.
+fn too_many_rows(rows: usize) -> Response {
+    error_response(
+        400,
+        "bad_request",
+        &format!(
+            "{rows} rows in one request (limit {MAX_INSTANCES_PER_REQUEST}); \
+             split the batch across requests"
+        ),
+        vec![],
+    )
+}
+
+/// Count the numbers in an arbitrarily nested JSON sample — the
+/// validation pass that lets dispatch flatten straight into the batch
+/// lane's staging buffer without an intermediate `Vec<f32>`.
+fn count_elems(v: &Json) -> std::result::Result<usize, String> {
+    match v {
+        Json::Num(_) => Ok(1),
+        Json::Arr(items) => {
+            items.iter().try_fold(0usize, |acc, item| Ok(acc + count_elems(item)?))
+        }
+        other => Err(format!("expected numbers/arrays, found {other}")),
+    }
+}
+
+/// Flatten a pre-validated sample row-major into a batch lane's writer.
+fn flatten_into(v: &Json, w: &mut TensorWriter<'_>) -> std::result::Result<(), String> {
     match v {
         Json::Num(n) => {
-            out.push(*n as f32);
+            w.push(*n as f32);
             Ok(())
         }
         Json::Arr(items) => {
             for item in items {
-                flatten_f32(item, out)?;
+                flatten_into(item, w)?;
             }
             Ok(())
         }
@@ -750,7 +978,7 @@ fn error_response(status: u16, kind: &str, message: &str, extra: Vec<(&str, Json
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::client::NetClient;
+    use crate::net::client::{decode_predictions, decode_predictions_bin, NetClient};
     use crate::serve::batcher::BatchPolicy;
     use crate::serve::hosted::ModelSpec;
     use crate::serve::async_server::AsyncServerConfig;
@@ -828,6 +1056,91 @@ mod tests {
         assert_eq!(r.status, 405, "predict is POST-only");
         let r = client.request("DELETE", "/v1/models", &[], None).unwrap();
         assert_eq!(r.status, 405);
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn binary_and_b64_tiers_match_the_json_tier_bitwise() {
+        let mut server = tiny_server(HttpServerConfig::default());
+        let mut client = NetClient::connect(server.local_addr()).unwrap();
+        let sample: Vec<f32> = (0..16).map(|i| i as f32 * 0.37 - 2.5).collect();
+
+        // JSON tier is the reference.
+        let resp = client.predict("tiny", &[sample.as_slice()], &[]).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let json_rows = decode_predictions(&resp).unwrap();
+
+        // Binary route, binary reply.
+        let resp = client.predict_bin("tiny", &[16], &[sample.as_slice()], &[]).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("content-type"), Some(wire::TENSOR_CONTENT_TYPE));
+        let bin_rows = decode_predictions_bin(&resp).unwrap();
+
+        // Same binary body on the plain `:predict` route via content type.
+        let body = wire::encode_rows(&[16], &[sample.as_slice()]);
+        let resp = client
+            .request_bytes(
+                "POST",
+                "/v1/models/tiny:predict",
+                &[("Content-Type", wire::TENSOR_CONTENT_TYPE)],
+                Some(&body),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        let ct_rows = decode_predictions_bin(&resp).unwrap();
+
+        // Base64 tier inside the JSON API, base64 reply.
+        let mut raw = Vec::new();
+        for v in &sample {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        let body = format!("{{\"instances_b64\": \"{}\"}}", b64::encode(&raw));
+        let resp = client.request("POST", "/v1/models/tiny:predict", &[], Some(&body)).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let doc = resp.json().unwrap();
+        assert_eq!(doc.get("rows").as_usize(), Some(1));
+        let bytes = b64::decode(doc.get("predictions_b64").as_str().unwrap()).unwrap();
+        let b64_row: Vec<f32> =
+            bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+
+        for (got, name) in [(&bin_rows[0], "binary"), (&ct_rows[0], "content-type"), (&b64_row, "b64")] {
+            assert_eq!(got.len(), json_rows[0].len(), "{name} row length");
+            for (g, w) in got.iter().zip(&json_rows[0]) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{name} tier diverged from JSON");
+            }
+        }
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_binary_bodies_get_structured_errors() {
+        let mut server = tiny_server(HttpServerConfig::default());
+        let mut client = NetClient::connect(server.local_addr()).unwrap();
+
+        // Bad magic.
+        let mut body = wire::encode_rows(&[16], &[&[0.5f32; 16]]);
+        body[0] = b'X';
+        let resp = client
+            .request_bytes("POST", "/v1/models/tiny:predict-bin", &[], Some(&body))
+            .unwrap();
+        assert_eq!(resp.status, 400);
+        let text = String::from_utf8(resp.body).unwrap();
+        assert!(text.contains("magic"), "{text}");
+
+        // Wrong per-row element count: the same structured shape_mismatch
+        // the JSON tier produces.
+        let body = wire::encode_rows(&[3], &[&[0.5f32; 3]]);
+        let resp = client
+            .request_bytes("POST", "/v1/models/tiny:predict-bin", &[], Some(&body))
+            .unwrap();
+        assert_eq!(resp.status, 400);
+        let doc = Json::parse(&String::from_utf8(resp.body).unwrap()).unwrap();
+        let e = doc.get("error");
+        assert_eq!(e.get("kind").as_str(), Some("shape_mismatch"));
+        assert_eq!(e.get("expected_elems").as_usize(), Some(16));
+        assert_eq!(e.get("got_elems").as_usize(), Some(3));
         drop(client);
         server.shutdown();
     }

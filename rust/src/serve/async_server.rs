@@ -6,37 +6,45 @@
 //! server decouples the three stages so they overlap:
 //!
 //! ```text
-//! clients ──▶ submit queue ──▶ batcher thread ──▶ AQL queue (multi-
-//!             (mpsc)           per-model lanes,    processor: kernels
-//!                              size/deadline       run concurrently
-//!                              flush,              across PR regions)
-//!                              run_async ──▶ in-flight channel (bounded =
-//!                                            pipeline depth, backpressure)
+//! clients ──▶ LaneSet (shape-bucketed ──▶ batcher thread ──▶ AQL queue
+//!             continuous lanes: callers    closes due lanes,  (multi-
+//!             decode rows in place via     acquires a          processor:
+//!             TensorWriter, wake the       pipeline slot,      kernels run
+//!             batcher over an mpsc)        *then* seals the    concurrently
+//!                                          batch — arrivals    across PR
+//!                                          in between ride     regions)
+//!                                          it as late joins
+//!                                          run_async ──▶ in-flight channel
 //!                                               │
 //!                              completer pool ◀─┘  wait on completion
 //!                              signals, deliver rows to each caller's
-//!                              reply channel — in whatever order batches
-//!                              retire
+//!                              reply channel, recycle the staging buffer,
+//!                              release the pipeline slot — in whatever
+//!                              order batches retire
 //! ```
 //!
 //! The batcher never blocks on kernel execution: `Session::run_async`
 //! returns as soon as the packet is enqueued, so while batch *n* computes,
 //! batch *n+1* is being formed and batch *n-1*'s replies are being
-//! delivered. Before each dispatch the batcher publishes per-kernel queue
-//! depths to the FPGA eviction policy ([`Session::hint_demand`]), so a
-//! `queue-aware` policy won't evict a role the queues are about to need.
+//! delivered. Backpressure is a slot semaphore sized `pipeline_depth`:
+//! when the pipeline is full the batcher parks *between* marking a lane
+//! closing and sealing its tensor, so the lane keeps admitting same-bucket
+//! rows right up to the moment of dispatch (the late-join window).
+//! Before each dispatch the batcher publishes per-kernel queue depths to
+//! the FPGA eviction policy ([`Session::hint_demand`]), so a `queue-aware`
+//! policy won't evict a role the queues are about to need.
 
 use crate::hsa::error::{HsaError, Result};
 use crate::metrics::counters::ServeCounters;
 use crate::metrics::histogram::Histogram;
-use crate::serve::batcher::{BatchPolicy, Batcher};
+use crate::serve::batcher::{BatchPolicy, BucketKey, LaneSet, TakenBatch, TensorWriter};
 use crate::serve::hosted::{host_model, HostedModel, ModelIoMeta, ModelSpec};
 use crate::tf::dtype::DType;
 use crate::tf::graph::Graph;
 use crate::tf::session::{PendingRun, Session, SessionOptions};
 use crate::tf::tensor::Tensor;
 use std::collections::HashMap;
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -44,9 +52,9 @@ use std::time::{Duration, Instant};
 pub struct AsyncServerConfig {
     pub models: Vec<ModelSpec>,
     pub session: SessionOptions,
-    /// Max batches in flight past the batcher (bounded in-flight channel +
-    /// completer pool size). The batcher blocks when the pipeline is full —
-    /// the serving-side backpressure.
+    /// Max batches in flight past the batcher (pipeline slot semaphore +
+    /// completer pool size). The batcher parks when the pipeline is full —
+    /// the serving-side backpressure, and the late-join window.
     pub pipeline_depth: usize,
 }
 
@@ -60,9 +68,10 @@ impl Default for AsyncServerConfig {
     }
 }
 
+/// Per-request bookkeeping queued in a lane. The input row itself lives
+/// in the lane's staging buffer, not here — submitters already decoded it
+/// in place through a [`TensorWriter`].
 struct Request {
-    /// One flattened input sample (`ModelIoMeta::in_elems` f32 values).
-    sample: Vec<f32>,
     enqueued: Instant,
     /// Receives one flattened output row (`ModelIoMeta::out_elems` values).
     reply: mpsc::SyncSender<Result<Vec<f32>>>,
@@ -80,6 +89,36 @@ struct InFlight {
     x: Tensor,
     x_name: String,
     out_name: String,
+    /// Lane the staging buffer came from (for recycling on retire).
+    lane: usize,
+}
+
+/// Counting semaphore bounding batches in flight. Unlike the old bounded
+/// in-flight channel, acquisition happens *before* the batch tensor is
+/// sealed — which is what holds the late-join window open under
+/// backpressure.
+struct Slots {
+    avail: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Slots {
+    fn new(n: usize) -> Slots {
+        Slots { avail: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut avail = self.avail.lock().unwrap();
+        while *avail == 0 {
+            avail = self.cv.wait(avail).unwrap();
+        }
+        *avail -= 1;
+    }
+
+    fn release(&self) {
+        *self.avail.lock().unwrap() += 1;
+        self.cv.notify_one();
+    }
 }
 
 struct StatsInner {
@@ -94,6 +133,16 @@ pub struct AsyncServeReport {
     pub failed: u64,
     pub batches: u64,
     pub mean_batch_fill: f64,
+    /// Fraction of dispatched batch capacity that carried real requests
+    /// (fill_sum / fill_capacity over every dispatch).
+    pub batch_fill_ratio: f64,
+    /// Requests admitted into a lane after its flush had already begun —
+    /// they rode the in-flight batch instead of waiting a cycle.
+    pub late_joins: u64,
+    /// Bytes that took an extra host-memory copy on the way into a batch
+    /// tensor (owned-`Vec` submits, overflow tail moves). The wire paths
+    /// decode straight into the staging buffer and record nothing here.
+    pub bytes_copied: u64,
     /// High-water mark of batches simultaneously in flight — >1 proves
     /// the pipeline actually overlapped dispatches.
     pub max_inflight: u64,
@@ -114,9 +163,16 @@ pub struct AsyncServeReport {
     pub pool: Vec<crate::sharding::ShardAgentReport>,
 }
 
+enum Msg {
+    /// Something changed (row admitted): scan lanes for due batches.
+    Wake,
+    Stop,
+}
+
 /// A running asynchronous inference server.
 pub struct AsyncInferenceServer {
-    tx: mpsc::Sender<Option<(String, Request)>>,
+    tx: mpsc::Sender<Msg>,
+    lanes: Arc<LaneSet<Request>>,
     batcher: Option<JoinHandle<()>>,
     completers: Vec<JoinHandle<()>>,
     session: Arc<Session>,
@@ -134,7 +190,7 @@ impl AsyncInferenceServer {
         }
         let mut g = Graph::new();
         let mut infos: HashMap<String, HostedModel> = HashMap::new();
-        let mut lanes = Batcher::new();
+        let mut lanes: LaneSet<Request> = LaneSet::new();
         for spec in &config.models {
             if infos.contains_key(&spec.name) {
                 return Err(HsaError::Runtime(format!(
@@ -143,8 +199,13 @@ impl AsyncInferenceServer {
                 )));
             }
             let hosted = host_model(&mut g, spec)?;
+            lanes.add_lane(
+                spec.name.clone(),
+                BucketKey::new(&spec.name, &hosted.signature, &hosted.sample_in_shape),
+                spec.batch,
+                hosted.in_elems,
+            );
             infos.insert(spec.name.clone(), hosted);
-            lanes.add_model(spec.name.clone(), spec.batch);
         }
         g.finalize()?;
         for info in infos.values_mut() {
@@ -153,9 +214,11 @@ impl AsyncInferenceServer {
         let metas: HashMap<String, ModelIoMeta> =
             infos.iter().map(|(name, info)| (name.clone(), info.io_meta())).collect();
         let session = Arc::new(Session::new(g, config.session)?);
+        let lanes = Arc::new(lanes);
 
         let depth = config.pipeline_depth.max(1);
-        let (tx, submit_rx) = mpsc::channel::<Option<(String, Request)>>();
+        let slots = Arc::new(Slots::new(depth));
+        let (tx, submit_rx) = mpsc::channel::<Msg>();
         let (inflight_tx, inflight_rx) = mpsc::sync_channel::<InFlight>(depth);
         let inflight_rx = Arc::new(Mutex::new(inflight_rx));
         let stats = Arc::new(Mutex::new(StatsInner { latency: Histogram::new() }));
@@ -183,10 +246,20 @@ impl AsyncInferenceServer {
         let batcher = {
             let session = Arc::clone(&session);
             let counters = Arc::clone(&counters);
+            let lanes = Arc::clone(&lanes);
+            let slots = Arc::clone(&slots);
             std::thread::Builder::new()
                 .name("serve-batcher".into())
                 .spawn(move || {
-                    batcher_loop(submit_rx, inflight_tx, session, counters, lanes, infos)
+                    batcher_loop(
+                        submit_rx,
+                        inflight_tx,
+                        session,
+                        counters,
+                        lanes,
+                        infos,
+                        slots,
+                    )
                 })
                 .map_err(|e| HsaError::Runtime(format!("spawn batcher: {e}")))?
         };
@@ -196,15 +269,20 @@ impl AsyncInferenceServer {
                 let stats = Arc::clone(&stats);
                 let counters = Arc::clone(&counters);
                 let session = Arc::clone(&session);
+                let lanes = Arc::clone(&lanes);
+                let slots = Arc::clone(&slots);
                 std::thread::Builder::new()
                     .name(format!("serve-completer-{i}"))
-                    .spawn(move || completer_loop(rx, stats, counters, session))
+                    .spawn(move || {
+                        completer_loop(rx, stats, counters, session, lanes, slots)
+                    })
                     .map_err(|e| HsaError::Runtime(format!("spawn completer: {e}")))
             })
             .collect::<Result<Vec<_>>>()?;
 
         Ok(AsyncInferenceServer {
             tx,
+            lanes,
             batcher: Some(batcher),
             completers,
             session,
@@ -250,6 +328,11 @@ impl AsyncInferenceServer {
     /// Non-blocking submit: returns a receiver that yields the flattened
     /// output row whenever the request's batch retires (completion order,
     /// not submission order).
+    ///
+    /// This is the *copy-through* convenience path: the owned `sample` is
+    /// copied into the lane staging buffer (and the copy is recorded in
+    /// the bytes-copied counter). Wire handlers that can decode in place
+    /// use [`AsyncInferenceServer::infer_async_with`] instead.
     pub fn infer_async(
         &self,
         model: &str,
@@ -269,13 +352,46 @@ impl AsyncInferenceServer {
                 sample.len()
             )));
         }
+        self.counters
+            .on_bytes_copied((sample.len() * std::mem::size_of::<f32>()) as u64);
+        self.infer_async_with(model, move |w| {
+            w.extend_from_slice(&sample);
+            Ok(())
+        })
+    }
+
+    /// Zero-copy submit: `fill` receives a [`TensorWriter`] positioned at
+    /// the tail of `model`'s lane staging buffer — the very allocation
+    /// that becomes the dispatched batch tensor — and must write exactly
+    /// the model's per-sample element count. On a fill error the lane
+    /// rolls back and the error string is surfaced verbatim, so wire
+    /// decoders can report protocol problems through it.
+    ///
+    /// If the lane's flush has already begun, the row still rides the
+    /// outgoing batch (a *late join*) rather than waiting a full cycle.
+    pub fn infer_async_with(
+        &self,
+        model: &str,
+        fill: impl FnOnce(&mut TensorWriter<'_>) -> std::result::Result<(), String>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        if !self.metas.contains_key(model) {
+            let known: Vec<&str> = self.metas.keys().map(String::as_str).collect();
+            return Err(HsaError::Runtime(format!(
+                "unknown model '{model}' (serving: {known:?})"
+            )));
+        }
         let (reply, rx) = mpsc::sync_channel(1);
+        let now = Instant::now();
+        let receipt = self
+            .lanes
+            .submit(model, now, Request { enqueued: now, reply }, fill)
+            .map_err(HsaError::Runtime)?;
         self.counters.on_submit();
+        if receipt.late_join {
+            self.counters.on_late_joins(1);
+        }
         self.tx
-            .send(Some((
-                model.to_string(),
-                Request { sample, enqueued: Instant::now(), reply },
-            )))
+            .send(Msg::Wake)
             .map_err(|_| HsaError::Runtime("server stopped".into()))?;
         Ok(rx)
     }
@@ -289,6 +405,9 @@ impl AsyncInferenceServer {
             failed: c.failed,
             batches: c.batches,
             mean_batch_fill: c.mean_batch_fill(),
+            batch_fill_ratio: c.batch_fill_ratio(),
+            late_joins: c.late_joins,
+            bytes_copied: c.bytes_copied,
             max_inflight: c.max_inflight,
             latency_us_p50: s.latency.quantile(0.50),
             latency_us_p99: s.latency.quantile(0.99),
@@ -304,7 +423,7 @@ impl AsyncInferenceServer {
     /// Drain the pipeline (queued lanes flush, in-flight batches retire,
     /// replies deliver), then stop every thread and shut the session down.
     pub fn stop(&mut self) {
-        let _ = self.tx.send(None);
+        let _ = self.tx.send(Msg::Stop);
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
         }
@@ -323,45 +442,36 @@ impl Drop for AsyncInferenceServer {
     }
 }
 
-enum Msg {
-    Req(String, Request),
-    Tick,
-    Stop,
-}
-
+#[allow(clippy::too_many_arguments)]
 fn batcher_loop(
-    rx: mpsc::Receiver<Option<(String, Request)>>,
+    rx: mpsc::Receiver<Msg>,
     inflight_tx: mpsc::SyncSender<InFlight>,
     session: Arc<Session>,
     counters: Arc<ServeCounters>,
-    mut lanes: Batcher<Request>,
+    lanes: Arc<LaneSet<Request>>,
     infos: HashMap<String, HostedModel>,
+    slots: Arc<Slots>,
 ) {
     loop {
         let msg = match lanes.next_deadline() {
             None => match rx.recv() {
-                Ok(Some((m, r))) => Msg::Req(m, r),
-                Ok(None) | Err(_) => Msg::Stop,
+                Ok(m) => m,
+                Err(_) => Msg::Stop,
             },
             Some(left) => match rx.recv_timeout(left.max(Duration::from_micros(50))) {
-                Ok(Some((m, r))) => Msg::Req(m, r),
-                Ok(None) => Msg::Stop,
-                Err(mpsc::RecvTimeoutError::Timeout) => Msg::Tick,
+                Ok(m) => m,
+                Err(mpsc::RecvTimeoutError::Timeout) => Msg::Wake, // deadline tick
                 Err(mpsc::RecvTimeoutError::Disconnected) => Msg::Stop,
             },
         };
         match msg {
-            Msg::Req(model, req) => {
-                // Unknown models were rejected at submit; push cannot fail.
-                let _ = lanes.push(&model, req);
-                flush_ready(&mut lanes, &infos, &session, &counters, &inflight_tx);
-            }
-            Msg::Tick => {
-                flush_ready(&mut lanes, &infos, &session, &counters, &inflight_tx);
+            Msg::Wake => {
+                flush_ready(&lanes, &infos, &session, &counters, &inflight_tx, &slots);
             }
             Msg::Stop => {
-                for (model, reqs) in lanes.drain() {
-                    dispatch(&model, reqs, &infos, &session, &counters, &inflight_tx);
+                for batch in lanes.drain() {
+                    slots.acquire();
+                    dispatch(batch, &infos, &session, &counters, &inflight_tx, &slots);
                 }
                 // Lanes are empty now; clear any outstanding demand hints.
                 publish_demand(&lanes, &infos, &session);
@@ -377,18 +487,31 @@ fn batcher_loop(
 /// reconfigure) and re-published after it — the second pass reports the
 /// drained lanes as 0, clearing stale hints so an idle role does not stay
 /// artificially protected forever.
+///
+/// Per lane the order is: mark closing → acquire a pipeline slot → seal.
+/// The acquire is the backpressure point, and because the lane is sealed
+/// *after* it, every row admitted while the pipeline was full rides this
+/// very batch (late joins) instead of waiting out another flush cycle.
 fn flush_ready(
-    lanes: &mut Batcher<Request>,
+    lanes: &LaneSet<Request>,
     infos: &HashMap<String, HostedModel>,
     session: &Arc<Session>,
     counters: &Arc<ServeCounters>,
     inflight_tx: &mpsc::SyncSender<InFlight>,
+    slots: &Slots,
 ) {
     publish_demand(lanes, infos, session);
     let mut flushed = false;
-    while let Some((model, reqs)) = lanes.ready() {
-        dispatch(&model, reqs, infos, session, counters, inflight_tx);
-        flushed = true;
+    while let Some(idx) = lanes.ready() {
+        lanes.begin_close(idx);
+        slots.acquire();
+        match lanes.take(idx) {
+            Some(batch) => {
+                dispatch(batch, infos, session, counters, inflight_tx, slots);
+                flushed = true;
+            }
+            None => slots.release(),
+        }
     }
     if flushed {
         publish_demand(lanes, infos, session);
@@ -400,7 +523,7 @@ fn flush_ready(
 /// (each is dispatched once per batch); the hint no-ops for kernels with
 /// no FPGA implementation.
 fn publish_demand(
-    lanes: &Batcher<Request>,
+    lanes: &LaneSet<Request>,
     infos: &HashMap<String, HostedModel>,
     session: &Session,
 ) {
@@ -421,29 +544,39 @@ fn publish_demand(
     }
 }
 
+/// Seal one taken batch into its tensor and push it down the pipeline.
+/// Holds the pipeline slot the caller acquired: on success its ownership
+/// transfers to the completer that retires the batch; every failure path
+/// releases it here.
 fn dispatch(
-    model: &str,
-    reqs: Vec<Request>,
+    batch: TakenBatch<Request>,
     infos: &HashMap<String, HostedModel>,
     session: &Arc<Session>,
     counters: &Arc<ServeCounters>,
     inflight_tx: &mpsc::SyncSender<InFlight>,
+    slots: &Slots,
 ) {
-    let info = match infos.get(model) {
+    let TakenBatch { lane, model, capacity, items, mut data, bytes_copied, .. } = batch;
+    // Overflow tails moved back to staging are real copies: surface them.
+    counters.on_bytes_copied(bytes_copied);
+    let reqs: Vec<Request> = items.into_iter().map(|(r, _)| r).collect();
+    let info = match infos.get(&model) {
         Some(i) => i,
         None => {
+            slots.release();
             fail_all(reqs, "model vanished", counters);
             return;
         }
     };
-    // Pad the final partial batch to the compiled batch dimension.
-    let mut data = vec![0f32; info.max_batch * info.in_elems];
-    for (i, r) in reqs.iter().enumerate() {
-        data[i * info.in_elems..(i + 1) * info.in_elems].copy_from_slice(&r.sample);
-    }
+    // Pad the final partial batch to the compiled batch dimension. The
+    // rows themselves were decoded straight into `data` by the
+    // submitters' TensorWriters — this is the first and only time the
+    // batch's memory is touched by the serving pipeline.
+    data.resize(capacity * info.in_elems, 0.0);
     let x = match Tensor::from_f32(&info.full_in_shape, data) {
         Ok(t) => t,
         Err(e) => {
+            slots.release();
             fail_all(reqs, &e.to_string(), counters);
             return;
         }
@@ -451,9 +584,9 @@ fn dispatch(
     match session.run_async(&[(info.x_name.as_str(), x.clone())], &[info.out_name.as_str()])
     {
         Ok(pending) => {
-            counters.on_batch_dispatch(reqs.len() as u64);
-            // Blocks while `pipeline_depth` batches are already in flight
-            // — the pipeline's backpressure point.
+            counters.on_batch_dispatch(reqs.len() as u64, capacity as u64);
+            // The slot semaphore admits at most `depth` batches past this
+            // point, so the send never blocks (channel capacity == depth).
             if let Err(mpsc::SendError(inf)) = inflight_tx.send(InFlight {
                 reqs,
                 pending,
@@ -461,13 +594,18 @@ fn dispatch(
                 x,
                 x_name: info.x_name.clone(),
                 out_name: info.out_name.clone(),
+                lane,
             }) {
                 // Completers are gone (server tearing down mid-dispatch).
+                slots.release();
                 counters.on_batch_complete(0, inf.reqs.len() as u64);
                 fail_requests(inf.reqs, "server stopped");
             }
         }
-        Err(e) => fail_all(reqs, &e.to_string(), counters),
+        Err(e) => {
+            slots.release();
+            fail_all(reqs, &e.to_string(), counters);
+        }
     }
 }
 
@@ -564,6 +702,8 @@ fn completer_loop(
     stats: Arc<Mutex<StatsInner>>,
     counters: Arc<ServeCounters>,
     session: Arc<Session>,
+    lanes: Arc<LaneSet<Request>>,
+    slots: Arc<Slots>,
 ) {
     loop {
         // Hold the receiver lock only for the handoff: while this thread
@@ -576,33 +716,39 @@ fn completer_loop(
                 Err(_) => break,
             }
         };
-        let n = inf.reqs.len();
-        let out_elems = inf.out_elems;
-        match wait_with_retry(&session, inf.pending, &inf.x, &inf.x_name, &inf.out_name)
-            .and_then(|outs| {
-                outs[0].as_f32().map(|v| v.to_vec()).map_err(HsaError::from)
-            }) {
+        let InFlight { reqs, pending, out_elems, x, x_name, out_name, lane } = inf;
+        let n = reqs.len();
+        match wait_with_retry(&session, pending, &x, &x_name, &out_name).and_then(|outs| {
+            outs[0].as_f32().map(|v| v.to_vec()).map_err(HsaError::from)
+        }) {
             Ok(rows) => {
                 // Account the batch *before* delivering replies, so a
                 // caller who reads `report()` right after its reply
                 // arrives sees itself counted.
                 {
                     let mut s = stats.lock().unwrap();
-                    for r in &inf.reqs {
+                    for r in &reqs {
                         s.latency.record(r.enqueued.elapsed().as_micros() as u64);
                     }
                 }
                 counters.on_batch_complete(n as u64, 0);
-                for (i, r) in inf.reqs.into_iter().enumerate() {
+                for (i, r) in reqs.into_iter().enumerate() {
                     let row = rows[i * out_elems..(i + 1) * out_elems].to_vec();
                     let _ = r.reply.send(Ok(row));
                 }
             }
             Err(e) => {
                 counters.on_batch_complete(0, n as u64);
-                fail_requests(inf.reqs, &e.to_string());
+                fail_requests(reqs, &e.to_string());
             }
         }
+        // The batch retired: if nothing else still references the input
+        // tensor's storage, hand the allocation back to its lane so the
+        // next batch decodes into warm memory instead of a fresh alloc.
+        if let Some(buf) = x.try_take_f32() {
+            lanes.recycle(lane, buf);
+        }
+        slots.release();
     }
 }
 
@@ -636,6 +782,7 @@ mod tests {
         assert_eq!(rep.requests, 1);
         assert_eq!(rep.completed, 1);
         assert_eq!(rep.batches, 1, "partial batch flushed by deadline");
+        assert!((rep.batch_fill_ratio - 1.0 / 8.0).abs() < 1e-9, "{rep:?}");
         assert!(
             rep.plan_compile_us > 0,
             "startup prewarm must surface plan compile time: {rep:?}"
@@ -662,6 +809,49 @@ mod tests {
         assert_eq!(rep.requests, 16);
         assert_eq!(rep.batches, 2, "16 requests = two full batches of 8");
         assert!((rep.mean_batch_fill - 8.0).abs() < 1e-9, "{rep:?}");
+        assert!((rep.batch_fill_ratio - 1.0).abs() < 1e-9, "{rep:?}");
+        srv.stop();
+    }
+
+    #[test]
+    fn copy_through_submit_records_bytes_copied() {
+        let mut srv = single_model(8, 2, 2);
+        srv.infer("mnist", vec![0.25; 784]).unwrap();
+        let rep = srv.report();
+        assert!(
+            rep.bytes_copied >= 784 * 4,
+            "owned-Vec submit must surface its copy: {rep:?}"
+        );
+        srv.stop();
+    }
+
+    #[test]
+    fn zero_copy_submit_writes_in_place() {
+        let mut srv = single_model(4, 2, 2);
+        let rx = srv
+            .infer_async_with("mnist", |w| {
+                assert_eq!(w.expected(), 784);
+                for i in 0..784 {
+                    w.push(i as f32 / 784.0);
+                }
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap().len(), 10);
+        let rep = srv.report();
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.bytes_copied, 0, "in-place decode must not copy: {rep:?}");
+        // Wrong arity rolls back and surfaces the writer error.
+        let err = srv
+            .infer_async_with("mnist", |w| {
+                w.push(1.0);
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("784"), "{err}");
+        // Unknown models are still named with the serving list.
+        let err = srv.infer_async_with("nope", |_| Ok(())).unwrap_err();
+        assert!(err.to_string().contains("serving"), "{err}");
         srv.stop();
     }
 

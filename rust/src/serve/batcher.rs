@@ -2,18 +2,30 @@
 //! (size-triggered flush) or the oldest request has waited `max_delay`
 //! (deadline-triggered flush).
 //!
-//! Two layers:
+//! Three layers:
 //!
 //! * [`Batch`] — one accumulating batch with its arrival clock; the
-//!   single-model building block.
+//!   single-model building block used by the synchronous server.
 //! * [`Batcher`] — a set of independent per-model *lanes*, each a
-//!   [`Batch`] with its own [`BatchPolicy`]. The serving loop pushes
-//!   requests into lanes, sleeps until [`Batcher::next_deadline`], and
-//!   flushes whatever [`Batcher::ready`] hands back. Lane queue depths
-//!   ([`Batcher::queued_by_model`]) double as the demand hints fed to the
-//!   queue-aware eviction policy.
+//!   [`Batch`] with its own [`BatchPolicy`].
+//! * [`LaneSet`] — the *continuous* batcher behind the async pipeline:
+//!   shape-bucketed lanes (keyed by [`BucketKey`]) whose staging buffers
+//!   are written in place by submitters through a [`TensorWriter`], and
+//!   which keep admitting same-bucket requests while a flush is already
+//!   under way (the "late join" window). The serving loop sleeps until
+//!   [`LaneSet::next_deadline`], closes whatever [`LaneSet::ready`] hands
+//!   back, and takes the batch at the last possible moment — every row
+//!   that arrived in between rides the in-flight batch instead of
+//!   waiting a full flush cycle.
+//!
+//! Deadlines arm from each request's *arrival* time, never from push
+//! time: a request that sat out a backpressure stall does not get its
+//! wait silently restarted (see [`Batch::push_at`] and
+//! [`LaneSet::take`]'s re-arm from the oldest remaining waiter).
 
 use crate::hsa::error::{HsaError, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Batching policy knobs.
@@ -45,11 +57,21 @@ impl<T> Batch<T> {
         Batch { items: Vec::with_capacity(policy.max_batch), oldest: None, policy }
     }
 
-    /// Add an item; returns true if the batch is now full.
+    /// Add an item that arrived now; returns true if the batch is full.
     pub fn push(&mut self, item: T) -> bool {
-        if self.items.is_empty() {
-            self.oldest = Some(Instant::now());
-        }
+        self.push_at(item, Instant::now())
+    }
+
+    /// Add an item that arrived at `arrived` — possibly in the past, e.g.
+    /// it waited in a submit queue while the pipeline was backpressured.
+    /// The lane deadline arms from the *oldest arrival*, not from push
+    /// time, so a backpressure stall cannot silently re-arm the deadline
+    /// and extend tail latency. Returns true if the batch is now full.
+    pub fn push_at(&mut self, item: T, arrived: Instant) -> bool {
+        self.oldest = Some(match self.oldest {
+            Some(o) => o.min(arrived),
+            None => arrived,
+        });
         self.items.push(item);
         self.items.len() >= self.policy.max_batch
     }
@@ -215,6 +237,401 @@ impl<T> Batcher<T> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Continuous shape-bucketed batching
+// ---------------------------------------------------------------------------
+
+/// The identity of a continuous batch lane: requests that agree on both
+/// components share one lane and batch together along dim 0.
+///
+/// * `signature` — the *model-qualified* served signature (e.g.
+///   `"mnist/serve"`). Qualifying by model name guarantees two different
+///   models never merge into one batch even when their tensor geometry
+///   matches; a future model serving several signatures with the same
+///   per-sample geometry still gets one lane per signature.
+/// * `sample_shape` — the input shape *minus dim 0* (the batch dim), so
+///   `[1, 28, 28]` for an MNIST image lane. Two requests bucket together
+///   exactly when their per-sample tensors are layout-compatible.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct BucketKey {
+    /// Model-qualified signature name, `"{model}/{signature}"`.
+    pub signature: String,
+    /// Per-sample input shape (input shape with the batch dim stripped).
+    pub sample_shape: Vec<usize>,
+}
+
+impl BucketKey {
+    /// Build the key for `model` serving `signature` with per-sample
+    /// input shape `sample_shape`.
+    pub fn new(model: &str, signature: &str, sample_shape: &[usize]) -> BucketKey {
+        BucketKey {
+            signature: format!("{model}/{signature}"),
+            sample_shape: sample_shape.to_vec(),
+        }
+    }
+}
+
+/// In-place sink for one decoded tensor row.
+///
+/// A submitter obtains a `TensorWriter` positioned at the tail of its
+/// lane's staging buffer (the very `Vec<f32>` that becomes the dispatched
+/// batch tensor) and decodes its request body straight into it — binary
+/// wire payloads, base64 tiers and JSON number arrays all land in the
+/// batch allocation with **no intermediate per-sample `Vec<f32>`**. If
+/// decoding fails or writes the wrong number of elements, the lane rolls
+/// the buffer back to where the row began and the lane is untouched.
+#[derive(Debug)]
+pub struct TensorWriter<'a> {
+    dst: &'a mut Vec<f32>,
+    start: usize,
+    expected: usize,
+}
+
+#[cfg(test)]
+impl<'a> TensorWriter<'a> {
+    /// Test-only constructor over a plain `Vec` (used by the wire-format
+    /// unit tests; production writers are only handed out by a lane).
+    pub(crate) fn for_tests(dst: &'a mut Vec<f32>, expected: usize) -> TensorWriter<'a> {
+        let start = dst.len();
+        TensorWriter { dst, start, expected }
+    }
+}
+
+impl TensorWriter<'_> {
+    /// Append one element of the row.
+    pub fn push(&mut self, v: f32) {
+        self.dst.push(v);
+    }
+
+    /// Append a run of elements (the copy-through path for callers that
+    /// already own a decoded buffer).
+    pub fn extend_from_slice(&mut self, vs: &[f32]) {
+        self.dst.extend_from_slice(vs);
+    }
+
+    /// Elements written so far for this row.
+    pub fn written(&self) -> usize {
+        self.dst.len() - self.start
+    }
+
+    /// Elements the row must contain in total (the lane's per-sample
+    /// element count).
+    pub fn expected(&self) -> usize {
+        self.expected
+    }
+}
+
+/// Outcome of a successful [`LaneSet::submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubmitReceipt {
+    /// The lane reached its compiled capacity with this row — the caller
+    /// should wake the flush loop.
+    pub became_full: bool,
+    /// The row joined a lane whose flush had already begun; it rides the
+    /// in-flight batch instead of waiting a full cycle.
+    pub late_join: bool,
+}
+
+/// One flushed batch handed from [`LaneSet::take`] to the dispatcher.
+#[derive(Debug)]
+pub struct TakenBatch<T> {
+    /// Index of the lane this batch came from (for buffer recycling).
+    pub lane: usize,
+    /// The lane's model name.
+    pub model: String,
+    /// The lane's compiled batch capacity (fill-ratio denominator).
+    pub capacity: usize,
+    /// Items with their arrival instants, in admission order.
+    pub items: Vec<(T, Instant)>,
+    /// The staging buffer: `items.len() * in_elems` f32 values, written
+    /// in place by the submitters' [`TensorWriter`]s. The dispatcher pads
+    /// it to `capacity * in_elems` and wraps it into the batch tensor —
+    /// no further copies.
+    pub data: Vec<f32>,
+    /// Rows that were admitted after the flush began.
+    pub late_joins: u64,
+    /// Bytes moved to carve an over-full lane's tail back into staging
+    /// (only non-zero under overload, when arrivals outran the flusher).
+    pub bytes_copied: u64,
+}
+
+struct LaneInner<T> {
+    items: Vec<(T, Instant)>,
+    data: Vec<f32>,
+    oldest: Option<Instant>,
+    /// A flush has begun (the dispatcher is acquiring a pipeline slot);
+    /// rows admitted now are late joins and still ride this batch.
+    closing: bool,
+    late_joins: u64,
+    /// Retired staging buffers handed back via [`LaneSet::recycle`].
+    spare: Vec<Vec<f32>>,
+}
+
+struct ContinuousLane<T> {
+    model: String,
+    key: BucketKey,
+    policy: BatchPolicy,
+    in_elems: usize,
+    inner: Mutex<LaneInner<T>>,
+}
+
+/// The continuous batcher: shape-bucketed lanes whose staging buffers are
+/// written in place by concurrent submitters, flushed by a single serving
+/// loop. Unlike [`Batcher`], a lane keeps admitting rows *while its flush
+/// is in progress* — the taking of the batch is deferred to the moment
+/// the pipeline actually accepts it, so arrivals during a backpressure
+/// stall ride the outgoing batch ("late joins") instead of waiting out
+/// another whole flush cycle.
+pub struct LaneSet<T> {
+    lanes: Vec<ContinuousLane<T>>,
+    /// Rotating scan start so one hot lane cannot starve the others.
+    cursor: AtomicUsize,
+}
+
+impl<T> Default for LaneSet<T> {
+    fn default() -> Self {
+        LaneSet::new()
+    }
+}
+
+impl<T> LaneSet<T> {
+    pub fn new() -> LaneSet<T> {
+        LaneSet { lanes: Vec::new(), cursor: AtomicUsize::new(0) }
+    }
+
+    /// Register a lane for `model` under bucket `key`; `in_elems` is the
+    /// per-sample element count every row must write. Returns the lane
+    /// index. Call before serving starts (lanes are fixed thereafter —
+    /// that is what lets submitters share `&LaneSet` without an outer
+    /// lock).
+    pub fn add_lane(
+        &mut self,
+        model: impl Into<String>,
+        key: BucketKey,
+        policy: BatchPolicy,
+        in_elems: usize,
+    ) -> usize {
+        let model = model.into();
+        self.lanes.push(ContinuousLane {
+            model,
+            key,
+            policy,
+            in_elems,
+            inner: Mutex::new(LaneInner {
+                items: Vec::with_capacity(policy.max_batch),
+                data: Vec::with_capacity(policy.max_batch * in_elems),
+                oldest: None,
+                closing: false,
+                late_joins: 0,
+                spare: Vec::new(),
+            }),
+        });
+        self.lanes.len() - 1
+    }
+
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Index of the lane serving `model` (today: one lane per model; a
+    /// multi-signature model would search by [`BucketKey`] instead).
+    pub fn lane_for(&self, model: &str) -> Option<usize> {
+        self.lanes.iter().position(|l| l.model == model)
+    }
+
+    /// The bucket key of lane `idx`.
+    pub fn key(&self, idx: usize) -> &BucketKey {
+        &self.lanes[idx].key
+    }
+
+    /// Admit one row into `model`'s lane. `fill` receives a
+    /// [`TensorWriter`] positioned at the staging buffer's tail and must
+    /// write exactly the lane's per-sample element count; on any error
+    /// the buffer is rolled back and the lane is untouched. `arrived` is
+    /// the request's true arrival instant — deadlines arm from it, so a
+    /// row delayed upstream keeps its age.
+    pub fn submit(
+        &self,
+        model: &str,
+        arrived: Instant,
+        item: T,
+        fill: impl FnOnce(&mut TensorWriter<'_>) -> std::result::Result<(), String>,
+    ) -> std::result::Result<SubmitReceipt, String> {
+        let idx = self
+            .lane_for(model)
+            .ok_or_else(|| format!("unknown model '{model}'"))?;
+        let lane = &self.lanes[idx];
+        let mut inner = lane.inner.lock().unwrap();
+        let start = inner.data.len();
+        let mut w = TensorWriter { dst: &mut inner.data, start, expected: lane.in_elems };
+        let outcome = fill(&mut w).and_then(|()| {
+            if w.written() == lane.in_elems {
+                Ok(())
+            } else {
+                Err(format!(
+                    "input row must be {} f32 values, wrote {}",
+                    lane.in_elems,
+                    w.written()
+                ))
+            }
+        });
+        if let Err(e) = outcome {
+            inner.data.truncate(start);
+            return Err(e);
+        }
+        inner.items.push((item, arrived));
+        inner.oldest = Some(match inner.oldest {
+            Some(o) => o.min(arrived),
+            None => arrived,
+        });
+        let late_join = inner.closing;
+        if late_join {
+            inner.late_joins += 1;
+        }
+        Ok(SubmitReceipt {
+            became_full: inner.items.len() >= lane.policy.max_batch,
+            late_join,
+        })
+    }
+
+    /// Next lane due for dispatch — size-triggered (full) lanes first,
+    /// then deadline-expired ones, scanning from a rotating cursor.
+    /// Returns the lane index; `None` when nothing is due yet.
+    pub fn ready(&self) -> Option<usize> {
+        let n = self.lanes.len();
+        if n == 0 {
+            return None;
+        }
+        let cursor = self.cursor.load(Ordering::Relaxed);
+        for pass in [true, false] {
+            for off in 0..n {
+                let i = (cursor + off) % n;
+                let lane = &self.lanes[i];
+                let inner = lane.inner.lock().unwrap();
+                if inner.closing {
+                    continue;
+                }
+                let due = if pass {
+                    inner.items.len() >= lane.policy.max_batch
+                } else {
+                    match inner.oldest {
+                        Some(t) => {
+                            !inner.items.is_empty()
+                                && t.elapsed() >= lane.policy.max_delay
+                        }
+                        None => false,
+                    }
+                };
+                if due {
+                    self.cursor.store((i + 1) % n, Ordering::Relaxed);
+                    return Some(i);
+                }
+            }
+        }
+        None
+    }
+
+    /// Mark lane `idx` as flushing: from now until [`LaneSet::take`],
+    /// admitted rows count as late joins (and still ride the batch).
+    pub fn begin_close(&self, idx: usize) {
+        self.lanes[idx].inner.lock().unwrap().closing = true;
+    }
+
+    /// Seal and take up to `max_batch` rows from lane `idx` — the last
+    /// moment of the late-join window. An over-full lane's tail stays
+    /// queued with its arrival times intact, and the deadline re-arms
+    /// from the **oldest remaining waiter's arrival** (not from now), so
+    /// rows left behind by a backpressured flush keep their age instead
+    /// of silently waiting another full `max_delay`.
+    pub fn take(&self, idx: usize) -> Option<TakenBatch<T>> {
+        let lane = &self.lanes[idx];
+        let mut inner = lane.inner.lock().unwrap();
+        inner.closing = false;
+        if inner.items.is_empty() {
+            inner.late_joins = 0;
+            return None;
+        }
+        let cap = lane.policy.max_batch;
+        let mut items = std::mem::take(&mut inner.items);
+        let spare = inner
+            .spare
+            .pop()
+            .unwrap_or_else(|| Vec::with_capacity(cap * lane.in_elems));
+        let mut data = std::mem::replace(&mut inner.data, spare);
+        let mut bytes_copied = 0u64;
+        if items.len() > cap {
+            let tail = items.split_off(cap);
+            let tail_data = &data[cap * lane.in_elems..];
+            bytes_copied = (tail_data.len() * std::mem::size_of::<f32>()) as u64;
+            inner.data.extend_from_slice(tail_data);
+            data.truncate(cap * lane.in_elems);
+            inner.items = tail;
+        }
+        // Flush-deadline drift fix: re-arm from the oldest waiter left
+        // behind, not from the wall clock.
+        inner.oldest = inner.items.first().map(|(_, arrived)| *arrived);
+        let late_joins = std::mem::take(&mut inner.late_joins);
+        Some(TakenBatch {
+            lane: idx,
+            model: lane.model.clone(),
+            capacity: cap,
+            items,
+            data,
+            late_joins,
+            bytes_copied,
+        })
+    }
+
+    /// Hand a retired staging buffer back to lane `idx` for reuse (the
+    /// dispatcher recovers it from the batch tensor once the batch
+    /// retires). Keeps at most a couple spares per lane.
+    pub fn recycle(&self, idx: usize, mut buf: Vec<f32>) {
+        buf.clear();
+        let mut inner = self.lanes[idx].inner.lock().unwrap();
+        if inner.spare.len() < 2 {
+            inner.spare.push(buf);
+        }
+    }
+
+    /// Take every queued batch regardless of triggers (shutdown path).
+    pub fn drain(&self) -> Vec<TakenBatch<T>> {
+        let mut out = Vec::new();
+        for idx in 0..self.lanes.len() {
+            while let Some(b) = self.take(idx) {
+                out.push(b);
+            }
+        }
+        out
+    }
+
+    /// Time until the earliest lane deadline (None when all lanes are
+    /// empty) — how long the serving loop may sleep.
+    pub fn next_deadline(&self) -> Option<Duration> {
+        self.lanes
+            .iter()
+            .filter_map(|l| {
+                let inner = l.inner.lock().unwrap();
+                inner
+                    .oldest
+                    .map(|t| l.policy.max_delay.saturating_sub(t.elapsed()))
+            })
+            .min()
+    }
+
+    /// Rows currently queued across all lanes.
+    pub fn total_queued(&self) -> usize {
+        self.lanes.iter().map(|l| l.inner.lock().unwrap().items.len()).sum()
+    }
+
+    /// Per-model queue depths — the demand hints for the eviction policy.
+    pub fn queued_by_model(&self) -> Vec<(String, usize)> {
+        self.lanes
+            .iter()
+            .map(|l| (l.model.clone(), l.inner.lock().unwrap().items.len()))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +676,23 @@ mod tests {
         assert!(!b.deadline_expired());
         b.push(2);
         assert!(!b.deadline_expired(), "fresh deadline for the new batch");
+    }
+
+    #[test]
+    fn push_at_arms_deadline_from_arrival_not_push_time() {
+        // Regression: an item that arrived before a backpressure stall
+        // must not have its deadline silently re-armed when it is finally
+        // pushed — the batch is already overdue.
+        let mut b = Batch::new(policy(10, 50));
+        let arrived = Instant::now() - Duration::from_millis(100);
+        b.push_at(1, arrived);
+        assert!(
+            b.deadline_expired(),
+            "deadline arms from the 100 ms-old arrival, not from now"
+        );
+        // A second, younger item does not un-expire the batch.
+        b.push_at(2, Instant::now());
+        assert!(b.deadline_expired());
     }
 
     #[test]
@@ -318,5 +752,186 @@ mod tests {
         flushed.sort_by(|x, y| x.0.cmp(&y.0));
         assert_eq!(flushed, vec![("a".into(), vec![1]), ("b".into(), vec![2, 3])]);
         assert_eq!(b.total_queued(), 0);
+    }
+
+    // --- continuous lanes -------------------------------------------------
+
+    fn tiny_lanes(max_batch: usize, ms: u64, in_elems: usize) -> LaneSet<u32> {
+        let mut lanes = LaneSet::new();
+        lanes.add_lane(
+            "m",
+            BucketKey::new("m", "serve", &[in_elems]),
+            policy(max_batch, ms),
+            in_elems,
+        );
+        lanes
+    }
+
+    fn put(lanes: &LaneSet<u32>, tag: u32, row: &[f32]) -> SubmitReceipt {
+        lanes
+            .submit("m", Instant::now(), tag, |w| {
+                w.extend_from_slice(row);
+                Ok(())
+            })
+            .unwrap()
+    }
+
+    #[test]
+    fn bucket_key_separates_models_and_shapes() {
+        let a = BucketKey::new("mnist", "serve", &[1, 28, 28]);
+        let b = BucketKey::new("tiny", "serve", &[1, 28, 28]);
+        let c = BucketKey::new("mnist", "serve", &[784]);
+        assert_eq!(a, BucketKey::new("mnist", "serve", &[1, 28, 28]));
+        assert_ne!(a, b, "same geometry, different model: distinct buckets");
+        assert_ne!(a, c, "same model, different per-sample shape");
+        assert_eq!(a.signature, "mnist/serve");
+        assert_eq!(a.sample_shape, vec![1, 28, 28]);
+    }
+
+    #[test]
+    fn laneset_rows_land_in_staging_in_order() {
+        let lanes = tiny_lanes(4, 1000, 2);
+        assert!(!put(&lanes, 1, &[1.0, 2.0]).became_full);
+        assert!(!put(&lanes, 2, &[3.0, 4.0]).became_full);
+        let r = put(&lanes, 3, &[5.0, 6.0]);
+        assert!(!r.became_full && !r.late_join);
+        assert_eq!(lanes.total_queued(), 3);
+        assert!(lanes.ready().is_none(), "not full, deadline far out");
+        let b = lanes.take(0).unwrap();
+        assert_eq!(b.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(b.items.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!((b.capacity, b.late_joins, b.bytes_copied), (4, 0, 0));
+    }
+
+    #[test]
+    fn laneset_submit_rolls_back_bad_rows() {
+        let lanes = tiny_lanes(4, 1000, 3);
+        let err = lanes
+            .submit("m", Instant::now(), 7u32, |w| {
+                w.push(1.0); // one of three
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(err.contains('3') && err.contains('1'), "{err}");
+        let err = lanes
+            .submit("m", Instant::now(), 8u32, |w| {
+                w.push(1.0);
+                Err("decode failed".into())
+            })
+            .unwrap_err();
+        assert_eq!(err, "decode failed");
+        assert_eq!(lanes.total_queued(), 0, "failed rows leave no residue");
+        // The staging buffer rolled back: a good row lands at offset 0.
+        put(&lanes, 9, &[1.0, 2.0, 3.0]);
+        let b = lanes.take(0).unwrap();
+        assert_eq!(b.data, vec![1.0, 2.0, 3.0]);
+        assert!(lanes.submit("nope", Instant::now(), 0, |_| Ok(())).is_err());
+    }
+
+    #[test]
+    fn laneset_full_lane_is_ready_and_take_caps_at_capacity() {
+        let lanes = tiny_lanes(2, 10_000, 1);
+        put(&lanes, 1, &[1.0]);
+        assert!(lanes.ready().is_none());
+        assert!(put(&lanes, 2, &[2.0]).became_full);
+        // Overflow past capacity queues for the next batch.
+        put(&lanes, 3, &[3.0]);
+        assert_eq!(lanes.ready(), Some(0));
+        let b = lanes.take(0).unwrap();
+        assert_eq!(b.data, vec![1.0, 2.0]);
+        assert_eq!(b.items.len(), 2);
+        assert_eq!(b.bytes_copied, 4, "one f32 tail row moved back to staging");
+        assert_eq!(lanes.total_queued(), 1, "tail stays queued");
+        let b2 = lanes.take(0).unwrap();
+        assert_eq!(b2.data, vec![3.0]);
+    }
+
+    #[test]
+    fn laneset_late_joins_ride_the_closing_batch() {
+        let lanes = tiny_lanes(8, 10_000, 1);
+        put(&lanes, 1, &[1.0]);
+        lanes.begin_close(0);
+        let r = put(&lanes, 2, &[2.0]);
+        assert!(r.late_join, "row admitted mid-flush is a late join");
+        assert!(lanes.ready().is_none(), "closing lane is not re-offered");
+        let b = lanes.take(0).unwrap();
+        assert_eq!(b.data, vec![1.0, 2.0], "late joiner rides the batch");
+        assert_eq!(b.late_joins, 1);
+        // The window closed with the take.
+        put(&lanes, 3, &[3.0]);
+        let b2 = lanes.take(0).unwrap();
+        assert_eq!(b2.late_joins, 0);
+    }
+
+    #[test]
+    fn laneset_deadline_rearms_from_oldest_waiter() {
+        // Regression for the flush-deadline drift: rows left behind by a
+        // backpressured flush keep their original arrival age.
+        let lanes = tiny_lanes(2, 50, 1);
+        let old = Instant::now() - Duration::from_millis(100);
+        for tag in 0..3u32 {
+            lanes
+                .submit("m", old, tag, |w| {
+                    w.push(tag as f32);
+                    Ok(())
+                })
+                .unwrap();
+        }
+        let b = lanes.take(0).unwrap();
+        assert_eq!(b.items.len(), 2);
+        // The tail row arrived 100 ms ago with a 50 ms deadline: the lane
+        // must be immediately due again, not re-armed for another 50 ms.
+        assert_eq!(lanes.next_deadline(), Some(Duration::ZERO));
+        assert_eq!(lanes.ready(), Some(0), "aged tail flushes without extra wait");
+    }
+
+    #[test]
+    fn laneset_recycled_buffers_are_clean() {
+        let lanes = tiny_lanes(2, 1000, 1);
+        put(&lanes, 1, &[1.5]);
+        let b = lanes.take(0).unwrap();
+        lanes.recycle(0, b.data);
+        put(&lanes, 2, &[2.5]);
+        let b2 = lanes.take(0).unwrap();
+        assert_eq!(b2.data, vec![2.5], "recycled buffer holds no stale rows");
+    }
+
+    #[test]
+    fn laneset_drain_empties_every_lane() {
+        let mut lanes: LaneSet<u32> = LaneSet::new();
+        lanes.add_lane("a", BucketKey::new("a", "serve", &[1]), policy(2, 1000), 1);
+        lanes.add_lane("b", BucketKey::new("b", "serve", &[1]), policy(2, 1000), 1);
+        for (model, tag) in [("a", 1u32), ("b", 2), ("b", 3), ("b", 4)] {
+            lanes
+                .submit(model, Instant::now(), tag, |w| {
+                    w.push(tag as f32);
+                    Ok(())
+                })
+                .unwrap();
+        }
+        let batches = lanes.drain();
+        assert_eq!(batches.len(), 3, "a×1, b at capacity 2 drains in two takes");
+        assert_eq!(lanes.total_queued(), 0);
+        assert_eq!(lanes.next_deadline(), None);
+    }
+
+    #[test]
+    fn laneset_queue_depths_by_model() {
+        let mut lanes: LaneSet<u32> = LaneSet::new();
+        lanes.add_lane("a", BucketKey::new("a", "serve", &[1]), policy(4, 1000), 1);
+        lanes.add_lane("b", BucketKey::new("b", "serve", &[1]), policy(4, 1000), 1);
+        lanes
+            .submit("a", Instant::now(), 1, |w| {
+                w.push(0.0);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(
+            lanes.queued_by_model(),
+            vec![("a".to_string(), 1), ("b".to_string(), 0)]
+        );
+        assert_eq!(lanes.lane_for("b"), Some(1));
+        assert_eq!(lanes.key(0).signature, "a/serve");
+        assert_eq!(lanes.lane_count(), 2);
     }
 }

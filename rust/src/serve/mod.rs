@@ -6,8 +6,11 @@
 //! Four pieces:
 //!
 //! * [`batcher`] — adaptive micro-batching: a single-model [`Batch`] with
-//!   size- and deadline-triggered flush, and the per-model multi-lane
-//!   [`Batcher`] on top of it.
+//!   size- and deadline-triggered flush, the per-model multi-lane
+//!   [`Batcher`] on top of it, and the *continuous* [`LaneSet`] — shape-
+//!   bucketed lanes (keyed by [`BucketKey`]) whose staging buffers are
+//!   written in place through a [`TensorWriter`] and which keep admitting
+//!   rows while their flush is already under way (late joins).
 //! * [`hosted`] — bundle hosting: a [`ModelSpec`] names a loaded
 //!   [`crate::tf::model::ModelBundle`] plus its batching policy; the
 //!   bundle's graph is merged into the shared serving session and batched
@@ -33,6 +36,9 @@ pub mod hosted;
 pub mod server;
 
 pub use async_server::{AsyncInferenceServer, AsyncServeReport, AsyncServerConfig};
-pub use batcher::{Batch, BatchPolicy, Batcher};
+pub use batcher::{
+    Batch, BatchPolicy, Batcher, BucketKey, LaneSet, SubmitReceipt, TakenBatch,
+    TensorWriter,
+};
 pub use hosted::{ModelIoMeta, ModelSpec};
 pub use server::{InferenceServer, ServeReport, ServerConfig};

@@ -233,7 +233,11 @@ fn batcher_loop(
         };
         match msg {
             Msg::Req(r) => {
-                let full = batch.push(r);
+                // Arm the deadline from the request's true arrival (it may
+                // have queued in the submit channel while a batch ran) so
+                // channel dwell time cannot silently extend tail latency.
+                let arrived = r.enqueued;
+                let full = batch.push_at(r, arrived);
                 if full || batch.deadline_expired() {
                     flush(&mut batch, &session, &shared, &info);
                 }

@@ -59,8 +59,14 @@ impl Default for PlanOptions {
 /// What a step does when replayed.
 #[derive(Debug, Clone)]
 pub enum StepOp {
-    /// Copy a fed placeholder tensor into the step's slot (validating
-    /// shape and dtype against the graph's declaration).
+    /// Bind a fed placeholder tensor to the step's slot (validating shape
+    /// and dtype against the graph's declaration). The bind is an Arc
+    /// clone of the tensor's storage, never a data copy — which makes it
+    /// the last link of the serving path's zero-copy chain: the HTTP
+    /// worker decodes request rows straight into a batch lane's staging
+    /// `Vec<f32>` (`serve::TensorWriter`), the batcher wraps that buffer
+    /// into a [`Tensor`] without copying (`Tensor::from_f32`), and the
+    /// feed here shares it with the executor by reference count alone.
     Feed { placeholder: String, shape: Vec<usize>, dtype: DType },
     /// Inline reshape (Arc'd storage: no data copy).
     Reshape { shape: Vec<usize> },

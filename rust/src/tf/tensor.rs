@@ -117,6 +117,18 @@ impl Tensor {
         }
     }
 
+    /// Reclaim the f32 buffer if this tensor holds the *only* reference
+    /// to it (no live clones in feeds, plans or pending dispatches).
+    /// `None` for shared storage or non-f32 tensors. The serving pipeline
+    /// uses this to recycle a retired batch's staging buffer back into
+    /// its lane instead of allocating fresh memory per batch.
+    pub fn try_take_f32(self) -> Option<Vec<f32>> {
+        match self.storage {
+            Storage::F32(arc) => Arc::try_unwrap(arc).ok(),
+            _ => None,
+        }
+    }
+
     /// Same data, new shape (element counts must match).
     pub fn reshape(&self, shape: &[usize]) -> Result<Tensor, TensorError> {
         let to_n: usize = shape.iter().product();
@@ -201,6 +213,16 @@ mod tests {
     fn byte_len_counts_dtype_size() {
         assert_eq!(Tensor::zeros(&[10], DType::I16).byte_len(), 20);
         assert_eq!(Tensor::zeros(&[10], DType::F32).byte_len(), 40);
+    }
+
+    #[test]
+    fn try_take_recovers_unique_buffers_only() {
+        let t = Tensor::from_f32(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let shared = t.clone();
+        assert_eq!(t.try_take_f32(), None, "clone still holds the storage");
+        assert_eq!(shared.try_take_f32(), Some(vec![1.0, 2.0, 3.0]));
+        let i = Tensor::from_i32(&[1], vec![7]).unwrap();
+        assert_eq!(i.try_take_f32(), None, "wrong dtype");
     }
 
     #[test]

@@ -1,0 +1,133 @@
+//! Standard-alphabet base64 (RFC 4648, with `=` padding) — encoder and
+//! strict decoder, implemented here because no third-party codec is in
+//! the offline vendor set.
+//!
+//! Used by the wire layer's middle tier: raw little-endian f32 tensor
+//! payloads carried as `instances_b64` / `predictions_b64` strings inside
+//! the JSON API, skipping per-number text round-trips while staying
+//! JSON-transportable.
+
+const ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode `data` as standard base64 with padding.
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let triple = (b0 << 16) | (b1 << 8) | b2;
+        out.push(ALPHABET[(triple >> 18) as usize & 0x3f] as char);
+        out.push(ALPHABET[(triple >> 12) as usize & 0x3f] as char);
+        out.push(if chunk.len() > 1 {
+            ALPHABET[(triple >> 6) as usize & 0x3f] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 {
+            ALPHABET[triple as usize & 0x3f] as char
+        } else {
+            '='
+        });
+    }
+    out
+}
+
+fn decode_sym(c: u8) -> Option<u32> {
+    match c {
+        b'A'..=b'Z' => Some((c - b'A') as u32),
+        b'a'..=b'z' => Some((c - b'a' + 26) as u32),
+        b'0'..=b'9' => Some((c - b'0' + 52) as u32),
+        b'+' => Some(62),
+        b'/' => Some(63),
+        _ => None,
+    }
+}
+
+/// Strictly decode standard base64: length must be a multiple of 4,
+/// padding only at the end, no whitespace or alternate alphabets.
+pub fn decode(s: &str) -> Result<Vec<u8>, String> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return Err(format!("base64 length {} is not a multiple of 4", bytes.len()));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (i, quad) in bytes.chunks(4).enumerate() {
+        let last = (i + 1) * 4 == bytes.len();
+        let pad = quad.iter().rev().take_while(|&&c| c == b'=').count();
+        if pad > 2 || (pad > 0 && !last) {
+            return Err("base64 padding only allowed at the end".into());
+        }
+        let mut triple: u32 = 0;
+        for &c in &quad[..4 - pad] {
+            let v = decode_sym(c).ok_or_else(|| {
+                format!("invalid base64 character {:?}", c as char)
+            })?;
+            triple = (triple << 6) | v;
+        }
+        triple <<= 6 * pad as u32;
+        out.push((triple >> 16) as u8);
+        if pad < 2 {
+            out.push((triple >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(triple as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc4648_vectors() {
+        for (plain, enc) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(encode(plain.as_bytes()), enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn round_trips_all_byte_values() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        for len in [0, 1, 2, 3, 4, 63, 255, 256] {
+            let slice = &data[..len.min(data.len())];
+            assert_eq!(decode(&encode(slice)).unwrap(), slice, "len {len}");
+        }
+    }
+
+    #[test]
+    fn strict_decode_rejects_malformed_input() {
+        assert!(decode("Zg=").is_err(), "length not multiple of 4");
+        assert!(decode("Zg==Zg==").is_err(), "padding mid-stream");
+        assert!(decode("Z===").is_err(), "three padding chars");
+        assert!(decode("Zm 9").is_err(), "whitespace");
+        assert!(decode("Zm9\n").is_err(), "newline");
+        assert!(decode("Zm9-").is_err(), "url-safe alphabet rejected");
+    }
+
+    #[test]
+    fn f32_le_payload_round_trips_bitwise() {
+        let vals = [0.0f32, -0.0, 1.5, f32::MIN_POSITIVE / 2.0, -1.0e-40, 3.4e38];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let back = decode(&encode(&bytes)).unwrap();
+        for (i, v) in vals.iter().enumerate() {
+            let got = f32::from_le_bytes(back[i * 4..i * 4 + 4].try_into().unwrap());
+            assert_eq!(got.to_bits(), v.to_bits(), "value {i} not bit-exact");
+        }
+    }
+}

@@ -2,6 +2,8 @@
 //! offline beyond `xla`/`anyhow`/`thiserror`/`once_cell`, so JSON parsing,
 //! PRNG, statistics and property testing are implemented here).
 //!
+//! * [`b64`] — standard-alphabet base64 for the wire layer's raw-f32
+//!   tensor tier inside the JSON API;
 //! * [`config`] — key=value config files that desugar into
 //!   `SessionOptions` (the CLI's `--config` flag);
 //! * [`json`] — a minimal JSON parser for the artifact manifest and the
@@ -16,6 +18,7 @@
 //!   loops (spinning on a single core only delays the thread being
 //!   waited for).
 
+pub mod b64;
 pub mod config;
 pub mod json;
 pub mod prng;

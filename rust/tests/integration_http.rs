@@ -7,7 +7,11 @@
 
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
-use tf_fpga::net::{one_shot, decode_predictions, HttpServer, HttpServerConfig, NetClient};
+use tf_fpga::fpga::device::FaultPlan;
+use tf_fpga::net::{
+    decode_predictions, decode_predictions_bin, one_shot, HttpServer, HttpServerConfig, NetClient,
+    TENSOR_CONTENT_TYPE,
+};
 use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig, BatchPolicy, ModelSpec};
 use tf_fpga::sharding::ShardStrategy;
 use tf_fpga::tf::model::{Model, ModelBundle};
@@ -445,6 +449,138 @@ fn graceful_drain_completes_inflight_and_refuses_new_connections() {
     let rep = server.report();
     assert_eq!(rep.completed, 1, "the in-flight request completed");
     assert_eq!(rep.failed, 0, "nothing was dropped by the drain");
+}
+
+// ---------------------------------------------------------------------------
+// Continuous batching (tentpole): a request arriving while its bucket's
+// batch is mid-flush — sealed but blocked acquiring a pipeline slot —
+// rides that in-flight batch instead of waiting out a full flush cycle.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn late_arrival_rides_the_mid_flush_batch() {
+    // One pipeline slot, and an agent whose every dispatch stalls 700 ms:
+    // a plug request dispatches and holds the slot, the next flush seals
+    // its batch and blocks on the slot, and a request arriving in that
+    // window must late-join the sealed batch.
+    let srv = AsyncInferenceServer::start(AsyncServerConfig {
+        models: vec![ModelSpec::from_bundle(
+            "tiny",
+            ModelBundle::tiny_fc_demo(8, 16, 4),
+            policy(8, 15),
+        )],
+        session: SessionOptions { dispatch_workers: 1, ..SessionOptions::native_only() },
+        pipeline_depth: 1,
+    })
+    .expect("inference server");
+    srv.session().router().agent(0).inject_faults(FaultPlan {
+        stall_prob: 1.0,
+        stall: Duration::from_millis(700),
+        ..FaultPlan::none(0x1A7E_301B)
+    });
+    let mut server = HttpServer::start(srv, HttpServerConfig::default()).expect("http server");
+    let addr = server.local_addr();
+
+    let samples: Vec<Vec<f32>> = (0..3)
+        .map(|i| (0..16).map(|j| (i * 5 + j) as f32 * 0.11 - 0.9).collect())
+        .collect();
+    let want = tiny_reference(&samples);
+
+    let handles: Vec<_> = samples
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let s = s.clone();
+            std::thread::spawn(move || {
+                // 0 = the plug (flushes alone at 15 ms and stalls on the
+                // agent), 1 = seals the next batch at ~215 ms and blocks
+                // mid-flush, 2 = arrives inside that window.
+                std::thread::sleep(Duration::from_millis([0, 200, 400][i]));
+                let mut client = NetClient::connect(addr).expect("connect");
+                client.predict("tiny", &[s.as_slice()], &[]).expect("predict io")
+            })
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let rows = decode_predictions(&resp).expect("decode");
+        assert_bitwise(&rows[0], &want[i], &format!("request {i}"));
+    }
+
+    let mut client = NetClient::connect(addr).unwrap();
+    let text = client.get("/metrics").unwrap().body;
+    assert_eq!(
+        metric_value(&text, "tf_fpga_serve_late_joins_total"),
+        Some(1),
+        "request 2 must join request 1's sealed batch:\n{text}"
+    );
+    assert_eq!(
+        metric_value(&text, "tf_fpga_serve_batches_total"),
+        Some(2),
+        "three requests, two batches:\n{text}"
+    );
+    drop(client);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Binary wire path (tentpole): `:predict-bin` answers the exact bits the
+// JSON tier and the Model facade produce, and no request bytes are ever
+// copied between the socket and the batch tensor.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn binary_wire_path_is_bitwise_equal_and_copy_free() {
+    let mut server = start_http(
+        vec![ModelSpec::from_bundle(
+            "tiny",
+            ModelBundle::tiny_fc_demo(4, 16, 4),
+            policy(4, 2),
+        )],
+        SessionOptions { dispatch_workers: 2, ..SessionOptions::native_only() },
+        2,
+        HttpServerConfig::default(),
+    );
+    let addr = server.local_addr();
+    let mut client = NetClient::connect(addr).unwrap();
+
+    let samples: Vec<Vec<f32>> = (0..4)
+        .map(|i| (0..16).map(|j| ((i * 7 + j) as f32).sin()).collect())
+        .collect();
+    let want = tiny_reference(&samples);
+    let refs: Vec<&[f32]> = samples.iter().map(|s| s.as_slice()).collect();
+
+    // One 4-row binary request; the reply mirrors the binary encoding.
+    let resp = client.predict_bin("tiny", &[16], &refs, &[]).unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("content-type"), Some(TENSOR_CONTENT_TYPE));
+    let bin_rows = decode_predictions_bin(&resp).unwrap();
+    assert_eq!(bin_rows.len(), 4);
+    for (i, row) in bin_rows.iter().enumerate() {
+        assert_bitwise(row, &want[i], &format!("binary row {i}"));
+    }
+
+    // The JSON tier answers the same bits.
+    let resp = client.predict("tiny", &refs, &[]).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let json_rows = decode_predictions(&resp).unwrap();
+    assert_eq!(json_rows.len(), 4);
+    for (i, row) in json_rows.iter().enumerate() {
+        assert_bitwise(row, &want[i], &format!("json row {i}"));
+    }
+
+    // Every HTTP tier decodes rows straight into the lane's staging
+    // buffer — the serving pipeline never copied request bytes.
+    let text = client.get("/metrics").unwrap().body;
+    assert_eq!(
+        metric_value(&text, "tf_fpga_serve_bytes_copied_total"),
+        Some(0),
+        "zero-copy ingestion:\n{text}"
+    );
+    assert_eq!(metric_value(&text, "tf_fpga_serve_requests_total"), Some(8));
+    drop(client);
+    server.shutdown();
 }
 
 // ---------------------------------------------------------------------------

@@ -1021,6 +1021,110 @@ mod resilience_props {
     }
 }
 
+mod wire_props {
+    use std::cell::RefCell;
+    use std::time::Duration;
+    use tf_fpga::net::{
+        decode_predictions, decode_predictions_bin, HttpServer, HttpServerConfig, NetClient,
+    };
+    use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig, BatchPolicy, ModelSpec};
+    use tf_fpga::tf::model::{Model, ModelBundle};
+    use tf_fpga::tf::session::SessionOptions;
+    use tf_fpga::tf::tensor::Tensor;
+    use tf_fpga::util::prng::Rng;
+    use tf_fpga::util::quickcheck::{forall, Gen};
+
+    /// One 16-element sample skewed toward f32 edge cases: negative zero,
+    /// denormals, and random bit patterns coerced finite.
+    struct SampleGen;
+    impl Gen for SampleGen {
+        type Value = Vec<f32>;
+        fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+            (0..16)
+                .map(|_| match rng.below(5) {
+                    0 => -0.0,
+                    1 => f32::from_bits(rng.below(0x0080_0000) as u32),
+                    2 => -f32::from_bits(1 + rng.below(0x007F_FFFF) as u32),
+                    _ => {
+                        let v = f32::from_bits(rng.next_u64() as u32);
+                        if v.is_finite() { v } else { rng.below(1000) as f32 - 500.0 }
+                    }
+                })
+                .collect()
+        }
+    }
+
+    /// Binary wire path ≡ JSON path ≡ `Model::invoke`, bitwise, for
+    /// adversarial f32 inputs. Non-finite values are out of scope by
+    /// construction: the JSON number grammar cannot carry NaN/Inf, so the
+    /// generator only emits finite bit patterns (the binary tier would
+    /// pass them through untouched).
+    #[test]
+    fn prop_binary_and_json_paths_are_bitwise_identical() {
+        let srv = AsyncInferenceServer::start(AsyncServerConfig {
+            models: vec![ModelSpec::from_bundle(
+                "tiny",
+                ModelBundle::tiny_fc_demo(2, 16, 4),
+                BatchPolicy { max_batch: 2, max_delay: Duration::from_millis(1) },
+            )],
+            session: SessionOptions { dispatch_workers: 2, ..SessionOptions::native_only() },
+            pipeline_depth: 2,
+        })
+        .expect("inference server");
+        let mut server = HttpServer::start(srv, HttpServerConfig::default()).expect("http server");
+        let reference = Model::from_bundle(
+            ModelBundle::tiny_fc_demo(1, 16, 4),
+            SessionOptions::native_only(),
+        )
+        .expect("reference model");
+        let client = RefCell::new(NetClient::connect(server.local_addr()).unwrap());
+
+        forall(41, 24, &SampleGen, |sample| {
+            let mut client = client.borrow_mut();
+            // Reference bits straight through the Model facade.
+            let x = Tensor::from_f32(&[1, 16], sample.clone()).map_err(|e| e.to_string())?;
+            let out = reference.invoke("serve", &[("x", x)]).map_err(|e| e.to_string())?;
+            let want: Vec<f32> = out[0].as_f32().map_err(|e| e.to_string())?.to_vec();
+
+            let resp = client
+                .predict("tiny", &[sample.as_slice()], &[])
+                .map_err(|e| e.to_string())?;
+            if resp.status != 200 {
+                return Err(format!("json status {}: {}", resp.status, resp.body));
+            }
+            let json_rows = decode_predictions(&resp)?;
+
+            let resp = client
+                .predict_bin("tiny", &[16], &[sample.as_slice()], &[])
+                .map_err(|e| e.to_string())?;
+            if resp.status != 200 {
+                return Err(format!("binary status {}", resp.status));
+            }
+            let bin_rows = decode_predictions_bin(&resp)?;
+
+            for (name, row) in [("json", &json_rows[0]), ("binary", &bin_rows[0])] {
+                if row.len() != want.len() {
+                    return Err(format!("{name}: row length {} vs {}", row.len(), want.len()));
+                }
+                for (i, (g, w)) in row.iter().zip(&want).enumerate() {
+                    if g.to_bits() != w.to_bits() {
+                        return Err(format!(
+                            "{name} element {i}: {g:?} ({:#010x}) vs {w:?} ({:#010x}) \
+                             for sample {sample:?}",
+                            g.to_bits(),
+                            w.to_bits()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+
+        reference.shutdown();
+        server.shutdown();
+    }
+}
+
 #[test]
 fn prop_native_conv_matches_brute_force() {
     // Independent re-derivation of conv semantics: brute-force i64
