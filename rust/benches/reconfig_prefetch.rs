@@ -1,0 +1,178 @@
+//! Reconfiguration-storm bench: reactive (dispatch-time) reconfiguration
+//! vs the predictive prefetch path, on the deterministic virtual clock.
+//! `cargo bench --bench reconfig_prefetch [-- --check]`.
+//!
+//! The storm is the worst case for an LRU fabric: a cyclic working set
+//! one-plus-larger than the two PR regions, so the reactive path misses
+//! on *every* dispatch and pays the full ~7.4 ms ICAP transfer on the
+//! critical path each time. The prefetch run replays the same dispatch
+//! trace but mirrors the scheduler's pump between dispatches: while one
+//! region computes, the ICAP streams the next role into the other region
+//! (eviction-safety mask protecting the in-flight kernel), so in steady
+//! state every dispatch lands on an already-resident role.
+//!
+//! Everything runs on the manager's virtual clock — no wall-clock noise —
+//! so the gated ratios (stall reduction, prefetch hit rate, overlap
+//! ratio) are bit-stable across machines; absolute `_us` numbers are
+//! nulled in the committed baseline. `RECONFIG_N` overrides the dispatch
+//! count per series (default 64).
+
+use tf_fpga::bench::{write_and_check, BenchArtifact};
+use tf_fpga::fpga::roles::{fused_paper_roles, paper_roles};
+use tf_fpga::fpga::{Bitstream, Shell};
+use tf_fpga::reconfig::policy::Lru;
+use tf_fpga::reconfig::{ReconfigManager, ReconfigStats};
+
+const BASELINE: &str = include_str!("baselines/BENCH_reconfig.json");
+
+/// Regions on the bench fabric (half the largest working set).
+const REGIONS: usize = 2;
+/// Scheduler lookahead mirrored by the pump below.
+const DEPTH: usize = 2;
+/// Modeled compute time per dispatch, µs — longer than one ~950 KB role
+/// transfer (~7.4 ms), so a prefetch issued at dispatch N is resident by
+/// dispatch N+1. That is the paper's overlap budget: conv layers run for
+/// milliseconds while the ICAP streams the next role.
+const EXEC_US: u64 = 8_000;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn mk_manager() -> ReconfigManager {
+    let shell = Shell::ultra96(REGIONS);
+    ReconfigManager::new(shell.regions, Box::new(Lru), shell.icap)
+}
+
+/// The eight distinct roles the series draw from: the four paper roles
+/// plus their ReLU-fused variants (fresh ids, same footprint).
+fn role_set() -> Vec<Bitstream> {
+    let mut roles = paper_roles();
+    roles.extend(fused_paper_roles());
+    roles
+}
+
+/// Reactive baseline: every reconfiguration happens at dispatch time, on
+/// the critical path.
+fn run_reactive(roles: &[Bitstream], n: usize) -> ReconfigStats {
+    let mut m = mk_manager();
+    for i in 0..n {
+        m.ensure_loaded(&roles[i % roles.len()]).expect("reactive load");
+        m.advance_clock(EXEC_US);
+    }
+    m.stats()
+}
+
+/// Predictive run: the same dispatch trace, with the scheduler's pump
+/// mirrored between dispatches — walk the cyclic horizon up to `DEPTH`
+/// ahead, protect the in-flight role and everything needed sooner, and
+/// let the transfer stream while the current kernel computes.
+fn run_prefetched(roles: &[Bitstream], n: usize) -> ReconfigStats {
+    let mut m = mk_manager();
+    for i in 0..n {
+        let current = &roles[i % roles.len()];
+        m.ensure_loaded(current).expect("prefetched load");
+        let mut protected = vec![current.id];
+        for d in 1..=DEPTH {
+            let next = &roles[(i + d) % roles.len()];
+            if !protected.contains(&next.id) {
+                m.try_prefetch(next, &protected, 0, d as u64);
+                protected.push(next.id);
+            }
+        }
+        m.advance_clock(EXEC_US);
+    }
+    m.stats()
+}
+
+fn main() {
+    let n = env_usize("RECONFIG_N", 64).max(8);
+
+    println!("reconfig_prefetch: {n} dispatches, {REGIONS} PR regions, depth {DEPTH}\n");
+    println!(
+        "{:<5} {:>14} {:>14} {:>10} {:>9} {:>9}   (virtual µs)",
+        "ws", "reactive stall", "prefetch stall", "reduction", "hit rate", "overlap"
+    );
+
+    let roles = role_set();
+    let mut artifact = BenchArtifact::new("reconfig");
+    artifact.set_u64("dispatches", n as u64);
+    artifact.set_u64("regions", REGIONS as u64);
+
+    let mut worst_reduction = f64::INFINITY;
+    for ws in [3usize, 4, 6] {
+        let reactive = run_reactive(&roles[..ws], n);
+        let prefetched = run_prefetched(&roles[..ws], n);
+
+        let reduction =
+            reactive.stall_us as f64 / prefetched.stall_us.max(1) as f64;
+        let hit_rate = prefetched.prefetch_hit_rate();
+        let overlap = if prefetched.reconfig_us_total == 0 {
+            0.0
+        } else {
+            prefetched.overlapped_us as f64 / prefetched.reconfig_us_total as f64
+        };
+        worst_reduction = worst_reduction.min(reduction);
+
+        let prefix = format!("ws_{ws}");
+        artifact.set_u64(&format!("{prefix}.reactive.stall_us"), reactive.stall_us);
+        artifact.set_u64(&format!("{prefix}.reactive.misses"), reactive.misses);
+        artifact.set_u64(&format!("{prefix}.prefetch.stall_us"), prefetched.stall_us);
+        artifact
+            .set_u64(&format!("{prefix}.prefetch.overlapped_us"), prefetched.overlapped_us);
+        artifact.set_f64(&format!("{prefix}.prefetch.hit_rate"), hit_rate);
+        artifact.set_f64(&format!("{prefix}.prefetch.overlap_ratio"), overlap);
+        artifact.set_f64(&format!("{prefix}.stall_reduction"), reduction);
+
+        println!(
+            "{:<5} {:>14} {:>14} {:>9.1}x {:>8.0}% {:>8.0}%",
+            ws,
+            reactive.stall_us,
+            prefetched.stall_us,
+            reduction,
+            hit_rate * 100.0,
+            overlap * 100.0
+        );
+
+        // The storm preconditions must hold or the ratios are vacuous.
+        assert_eq!(
+            reactive.misses as usize, n,
+            "ws {ws}: reactive run should miss on every dispatch"
+        );
+        assert_eq!(
+            prefetched.hits + prefetched.misses,
+            prefetched.dispatches,
+            "ws {ws}: accounting broke: {prefetched:?}"
+        );
+        assert!(
+            prefetched.prefetch_hits + prefetched.prefetch_wasted
+                <= prefetched.prefetches,
+            "ws {ws}: more prefetch outcomes than prefetches: {prefetched:?}"
+        );
+    }
+
+    match write_and_check(&artifact, BASELINE) {
+        Ok(regs) if regs.is_empty() => {}
+        Ok(regs) => {
+            for r in &regs {
+                println!("REGRESSION: {r}");
+            }
+            std::process::exit(1);
+        }
+        Err(e) => {
+            println!("bench artifact error: {e}");
+            std::process::exit(1);
+        }
+    }
+
+    if worst_reduction >= 2.0 {
+        println!(
+            "\nreconfig_prefetch: OK (worst stall reduction {worst_reduction:.1}x >= 2x)"
+        );
+    } else {
+        println!(
+            "\nreconfig_prefetch: WARNING — stall reduction {worst_reduction:.1}x < 2x"
+        );
+        std::process::exit(1);
+    }
+}

@@ -14,8 +14,10 @@ use crate::fpga::shell::Shell;
 use crate::hsa::agent::{Agent, AgentInfo, DeviceType};
 use crate::hsa::error::{HsaError, Result};
 use crate::hsa::packet::KernelDispatchPacket;
+use crate::fpga::bitstream::RoleId;
 use crate::reconfig::manager::{LoadOutcome, ReconfigManager, ReconfigStats};
 use crate::reconfig::policy::EvictionPolicy;
+use crate::reconfig::scheduler::{CostClass, Prefetch};
 use crate::runtime::pjrt::PjrtHandle;
 use crate::tf::tensor::Tensor;
 use std::collections::{BTreeMap, HashMap};
@@ -308,6 +310,63 @@ impl FpgaAgent {
         }
     }
 
+    /// Whether this agent's single ICAP port is mid-transaction (a
+    /// background prefetch still streaming on the virtual clock). The
+    /// router treats such agents as expensive for non-resident kernels.
+    pub fn icap_busy(&self) -> bool {
+        self.manager.lock().unwrap().icap_busy()
+    }
+
+    /// Coarse reconfiguration-cost probe for the router: what would
+    /// dispatching `kernel_object` here cost right now? Cheapest first
+    /// (see [`CostClass`]); unknown kernels rank as [`CostClass::MustEvict`]
+    /// — the router never routes unregistered kernels anyway.
+    pub fn reconfig_cost(&self, kernel_object: u64) -> CostClass {
+        let role = {
+            let map = self.roles.read().unwrap();
+            map.get(&kernel_object).map(|r| r.bitstream.id)
+        };
+        match role {
+            Some(id) => self.manager.lock().unwrap().cost_of(id),
+            None => CostClass::MustEvict,
+        }
+    }
+
+    /// Non-blocking background load of `kernel_object`'s bitstream (see
+    /// [`ReconfigManager::try_prefetch`]). `protected` lists kernel
+    /// objects that must not be evicted — the in-flight dispatch and
+    /// everything the horizon needs sooner than this one.
+    pub fn try_prefetch(
+        &self,
+        kernel_object: u64,
+        protected: &[u64],
+        min_free_regions: usize,
+        deadline_hint: u64,
+    ) -> Prefetch {
+        let bitstream = {
+            let map = self.roles.read().unwrap();
+            map.get(&kernel_object).map(|r| r.bitstream.clone())
+        };
+        let Some(bitstream) = bitstream else {
+            return Prefetch::UnknownKernel;
+        };
+        // Kernel objects are role ids (see register_role), so the
+        // protected set maps directly.
+        let protected: Vec<RoleId> = protected.iter().map(|&k| RoleId(k)).collect();
+        self.manager.lock().unwrap().try_prefetch(
+            &bitstream,
+            &protected,
+            min_free_regions,
+            deadline_hint,
+        )
+    }
+
+    /// Age the eviction policy's queued-demand hints by one retired
+    /// serving batch (see `EvictionPolicy::decay_demand`).
+    pub fn decay_demand(&self) {
+        self.manager.lock().unwrap().decay_demand();
+    }
+
     /// Dispatch counts per registered role (diagnostics). Sorted by role
     /// name so multi-agent comparisons are order-stable.
     pub fn role_dispatches(&self) -> Vec<(String, u64)> {
@@ -443,17 +502,20 @@ impl Agent for FpgaAgent {
             let mut mgr = self.manager.lock().unwrap();
             mgr.ensure_loaded(&role.bitstream)?
         };
-        let reconfig_us = outcome.reconfig_us();
-        if reconfig_us > 0 {
-            self.virtual_ns.fetch_add(reconfig_us * 1000, Ordering::Relaxed);
-            self.sleep_scaled(reconfig_us);
+        // Only the *exposed* ICAP time lands on the dispatch: a full
+        // reconfiguration on a reactive miss, the residual transfer on a
+        // hit whose prefetch is still streaming, nothing on a clean hit.
+        let stall_us = outcome.stall_us();
+        if stall_us > 0 {
+            self.virtual_ns.fetch_add(stall_us * 1000, Ordering::Relaxed);
+            self.sleep_scaled(stall_us);
             if let Some(tr) = &self.trace {
                 tr.record_ending_now(
                     crate::trace::recorder::EventKind::Reconfig,
                     format!("reconfig:{}", role.bitstream.name),
                     "fpga-pl",
                     outcome.region() as u32,
-                    reconfig_us,
+                    stall_us,
                 );
             }
         }
@@ -493,6 +555,13 @@ impl Agent for FpgaAgent {
         let exec_ns = spec.exec_ns(&op);
         self.virtual_ns.fetch_add(exec_ns, Ordering::Relaxed);
         self.sleep_scaled(exec_ns / 1000);
+        // Advance the manager's virtual ICAP clock by the modeled compute
+        // time: a background prefetch on another region progresses while
+        // this one executes — that is the overlap the scheduler buys.
+        self.manager
+            .lock()
+            .unwrap()
+            .advance_clock((exec_ns / 1000).max(1));
         if let Some(tr) = &self.trace {
             tr.record_ending_now(
                 crate::trace::recorder::EventKind::KernelExec,

@@ -6,7 +6,39 @@
 //! quarter-device PR region bitstream of ~950 KB, reconfiguration lands at
 //! the paper's measured 7.4 ms.
 
+use crate::fpga::bitstream::RoleId;
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One in-flight programming transaction on the single configuration
+/// port.
+///
+/// The real PCAP serializes transfers, so the reconfiguration manager
+/// holds at most one of these at a time per agent. Completion is modeled
+/// against the manager's virtual clock: the transfer is done once the
+/// clock reaches `ready_at_us`. Dispatches on *other* regions proceed
+/// while the transaction is pending — that overlap is exactly what the
+/// prefetch scheduler buys (`reconfig::scheduler`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IcapTransaction {
+    /// Role being streamed in.
+    pub role: RoleId,
+    /// Destination PR region.
+    pub region: usize,
+    /// Modeled transfer duration (setup + bytes/bandwidth).
+    pub reconfig_us: u64,
+    /// Virtual-clock timestamp at which the region becomes `Ready`.
+    pub ready_at_us: u64,
+    /// Scheduler's deadline hint: how many dispatches away the need is
+    /// (0 = needed immediately). Observability only.
+    pub deadline_hint: u64,
+}
+
+impl IcapTransaction {
+    /// Remaining transfer time at virtual time `now_us` (0 if done).
+    pub fn remaining_us(&self, now_us: u64) -> u64 {
+        self.ready_at_us.saturating_sub(now_us)
+    }
+}
 
 /// Configuration port model. One reconfiguration at a time (the real PCAP
 /// serializes too) — callers hold the shell lock across `reconfigure`.
@@ -94,6 +126,21 @@ mod tests {
     fn setup_cost_added() {
         let icap = Icap::new(100.0, 42);
         assert_eq!(icap.reconfig_time_us(0), 42);
+    }
+
+    #[test]
+    fn transaction_remaining_counts_down_and_clamps() {
+        let txn = IcapTransaction {
+            role: RoleId(1),
+            region: 0,
+            reconfig_us: 100,
+            ready_at_us: 250,
+            deadline_hint: 2,
+        };
+        assert_eq!(txn.remaining_us(150), 100);
+        assert_eq!(txn.remaining_us(249), 1);
+        assert_eq!(txn.remaining_us(250), 0);
+        assert_eq!(txn.remaining_us(9000), 0, "never underflows");
     }
 
     #[test]

@@ -52,6 +52,13 @@ impl PrRegion {
         self.loaded.is_none()
     }
 
+    /// PCAP transfer still in flight (set by the reconfiguration
+    /// manager for background prefetches; such a region must never be
+    /// chosen as an eviction victim until the transfer settles).
+    pub fn is_configuring(&self) -> bool {
+        self.state == RegionState::Configuring
+    }
+
     /// Install a role (the shell has already modeled the PCAP time).
     pub fn load(&mut self, role: RoleId, tick: u64) {
         self.loaded = Some(role);

@@ -39,6 +39,14 @@ pub struct AgentInfo {
 
 /// An agent executes kernel-dispatch packets. Implementations:
 /// [`crate::cpu::CpuAgent`], [`crate::fpga::FpgaAgent`].
+///
+/// The trait stays deliberately minimal — device-specific capability
+/// probes live on the concrete types. In particular the FPGA's
+/// reconfiguration-cost probes (`FpgaAgent::reconfig_cost`,
+/// `FpgaAgent::icap_busy`, `FpgaAgent::try_prefetch`) are not part of the
+/// HSA surface: the shard router holds `Arc<FpgaAgent>` directly and
+/// queries them when picking a dispatch target, while generic HSA callers
+/// see only dispatch execution and virtual time.
 pub trait Agent: Send + Sync {
     fn info(&self) -> &AgentInfo;
 

@@ -85,6 +85,7 @@ fn main() -> Result<()> {
             flag_usize(&flags, "workers", 2),
             flag_usize(&flags, "fpga-pool", 1),
             shard_strategy_from_flags(&flags)?,
+            flag_usize(&flags, "prefetch-depth", 0),
             flags.get("model").cloned(),
         ),
         "serve"
@@ -102,6 +103,7 @@ fn main() -> Result<()> {
                 flag_usize(&flags, "workers", 2),
                 flag_usize(&flags, "fpga-pool", 1),
                 strategy,
+                flag_usize(&flags, "prefetch-depth", 0),
                 flags.get("model").cloned(),
             )
         }
@@ -151,6 +153,10 @@ commands:
   serve --fpga-pool N [--shard-strategy S ...]
                            shard the async pipeline across N FPGA agents
                            (S: round-robin | least-loaded | kernel-affinity)
+  serve --prefetch-depth N [...]
+                           predictive reconfiguration: prefetch the next N
+                           upcoming roles onto idle PR regions so ICAP
+                           transfers overlap compute (0 = off, the default)
   serve --http [ADDR] [--max-pending N --tenant-rps R --http-workers W
                 --serve-secs T --model DIR ...]
                            HTTP/1.1 frontend (default 127.0.0.1:8080) over the
@@ -196,6 +202,16 @@ fn flag_usize(flags: &HashMap<String, String>, name: &str, default: usize) -> us
         .get(name)
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// `--prefetch-depth N` → predictive-reconfiguration policy (0 keeps the
+/// paper's reactive behaviour — prefetch off).
+fn prefetch_from_depth(depth: usize) -> tf_fpga::reconfig::PrefetchPolicy {
+    if depth == 0 {
+        tf_fpga::reconfig::PrefetchPolicy::default()
+    } else {
+        tf_fpga::reconfig::PrefetchPolicy::with_depth(depth)
+    }
 }
 
 fn shard_strategy_from_flags(
@@ -508,6 +524,7 @@ fn serve_async(
     workers: usize,
     fpga_pool: usize,
     shard_strategy: tf_fpga::sharding::ShardStrategy,
+    prefetch_depth: usize,
     model_dir: Option<String>,
 ) -> Result<()> {
     use std::sync::Arc;
@@ -531,6 +548,7 @@ fn serve_async(
             dispatch_workers: workers,
             fpga_pool,
             shard_strategy,
+            prefetch: prefetch_from_depth(prefetch_depth),
             ..SessionOptions::default()
         },
         pipeline_depth,
@@ -603,6 +621,19 @@ fn serve_async(
             shard.retries,
             if shard.quarantined { " [QUARANTINED]" } else { "" }
         );
+        if shard.reconfig.prefetches > 0 {
+            println!(
+                "  {:<14}  prefetch: {} issued, {} hits ({:.0}%), {} wasted, \
+                 stall {} µs, overlapped {} µs",
+                "",
+                shard.reconfig.prefetches,
+                shard.reconfig.prefetch_hits,
+                100.0 * shard.reconfig.prefetch_hit_rate(),
+                shard.reconfig.prefetch_wasted,
+                shard.reconfig.stall_us,
+                shard.reconfig.overlapped_us
+            );
+        }
     }
     drop(srv); // Drop drains the pipeline and shuts the session down.
     Ok(())
@@ -624,6 +655,7 @@ fn serve_http(
     workers: usize,
     fpga_pool: usize,
     shard_strategy: tf_fpga::sharding::ShardStrategy,
+    prefetch_depth: usize,
     model_dir: Option<String>,
 ) -> Result<()> {
     use tf_fpga::net::{HttpServer, HttpServerConfig};
@@ -644,6 +676,7 @@ fn serve_http(
             dispatch_workers: workers,
             fpga_pool,
             shard_strategy,
+            prefetch: prefetch_from_depth(prefetch_depth),
             ..SessionOptions::default()
         },
         pipeline_depth,
@@ -690,6 +723,18 @@ fn serve_http(
                 shard.retries,
                 if shard.quarantined { " [QUARANTINED]" } else { "" }
             );
+            if shard.reconfig.prefetches > 0 {
+                println!(
+                    "  {:<14}  prefetch: {} hits / {} issued, {} wasted, \
+                     stall {} µs, overlapped {} µs",
+                    "",
+                    shard.reconfig.prefetch_hits,
+                    shard.reconfig.prefetches,
+                    shard.reconfig.prefetch_wasted,
+                    shard.reconfig.stall_us,
+                    shard.reconfig.overlapped_us
+                );
+            }
         }
     } else {
         // Serve until the process is killed; Ctrl-C tears the sockets

@@ -237,6 +237,58 @@ pub fn render(
     }
     metric(
         &mut out,
+        "tf_fpga_reconfig_prefetch_hits_total",
+        "counter",
+        "Dispatches that found their role already loaded (or loading) by the prefetch scheduler.",
+    );
+    for shard in pool {
+        let _ = writeln!(
+            out,
+            "tf_fpga_reconfig_prefetch_hits_total{{agent=\"{}\"}} {}",
+            shard.agent, shard.reconfig.prefetch_hits
+        );
+    }
+    metric(
+        &mut out,
+        "tf_fpga_reconfig_prefetch_wasted_total",
+        "counter",
+        "Prefetched roles evicted before any dispatch used them.",
+    );
+    for shard in pool {
+        let _ = writeln!(
+            out,
+            "tf_fpga_reconfig_prefetch_wasted_total{{agent=\"{}\"}} {}",
+            shard.agent, shard.reconfig.prefetch_wasted
+        );
+    }
+    metric(
+        &mut out,
+        "tf_fpga_reconfig_stall_us_total",
+        "counter",
+        "Modeled microseconds dispatches spent waiting on ICAP transfers.",
+    );
+    for shard in pool {
+        let _ = writeln!(
+            out,
+            "tf_fpga_reconfig_stall_us_total{{agent=\"{}\"}} {}",
+            shard.agent, shard.reconfig.stall_us
+        );
+    }
+    metric(
+        &mut out,
+        "tf_fpga_reconfig_overlapped_us_total",
+        "counter",
+        "Modeled ICAP transfer microseconds hidden behind compute by prefetching.",
+    );
+    for shard in pool {
+        let _ = writeln!(
+            out,
+            "tf_fpga_reconfig_overlapped_us_total{{agent=\"{}\"}} {}",
+            shard.agent, shard.reconfig.overlapped_us
+        );
+    }
+    metric(
+        &mut out,
         "tf_fpga_agent_quarantined",
         "gauge",
         "1 while the agent is quarantined (excluded from routing).",
@@ -356,7 +408,15 @@ mod tests {
                 dispatches: 5,
                 inflight: 1,
                 max_inflight: 2,
-                reconfig: ReconfigStats { misses: 2, reconfig_us_total: 9000, ..Default::default() },
+                reconfig: ReconfigStats {
+                    misses: 2,
+                    reconfig_us_total: 9000,
+                    prefetch_hits: 3,
+                    prefetch_wasted: 1,
+                    stall_us: 7000,
+                    overlapped_us: 2000,
+                    ..Default::default()
+                },
                 quarantined: false,
                 quarantines: 0,
                 readmissions: 0,
@@ -396,6 +456,11 @@ mod tests {
             "tf_fpga_agent_dispatches_total{agent=\"ultra96-pl-0\"} 5",
             "tf_fpga_agent_dispatches_total{agent=\"ultra96-pl-1\"} 4",
             "tf_fpga_agent_reconfig_misses_total{agent=\"ultra96-pl-0\"} 2",
+            "tf_fpga_reconfig_prefetch_hits_total{agent=\"ultra96-pl-0\"} 3",
+            "tf_fpga_reconfig_prefetch_wasted_total{agent=\"ultra96-pl-0\"} 1",
+            "tf_fpga_reconfig_stall_us_total{agent=\"ultra96-pl-0\"} 7000",
+            "tf_fpga_reconfig_overlapped_us_total{agent=\"ultra96-pl-0\"} 2000",
+            "tf_fpga_reconfig_prefetch_hits_total{agent=\"ultra96-pl-1\"} 0",
             "tf_fpga_agent_quarantined{agent=\"ultra96-pl-0\"} 0",
             "tf_fpga_agent_quarantined{agent=\"ultra96-pl-1\"} 1",
             "tf_fpga_agent_quarantines_total{agent=\"ultra96-pl-1\"} 2",

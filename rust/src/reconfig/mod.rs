@@ -7,10 +7,15 @@
 //! [`policy`] provides the eviction schemes (LRU as shipped in the paper,
 //! plus FIFO / Random / MRU / a Belady oracle for the ablation study);
 //! [`manager`] binds roles to regions, accounts hits/misses/evictions and
-//! reconfiguration time.
+//! reconfiguration time; [`scheduler`] makes the whole layer anticipatory
+//! — a prefetch scheduler that programs upcoming roles in the background
+//! (plan horizon + demand hints) so ICAP latency overlaps compute instead
+//! of stalling dispatches.
 
 pub mod manager;
 pub mod policy;
+pub mod scheduler;
 
 pub use manager::{LoadOutcome, ReconfigManager, ReconfigStats};
 pub use policy::{BeladyOracle, EvictionPolicy, Fifo, Lru, Mru, PolicyKind, RandomEvict};
+pub use scheduler::{CostClass, KernelHorizon, Prefetch, PrefetchPolicy, PrefetchScheduler};

@@ -32,6 +32,12 @@ pub trait EvictionPolicy: Send {
     /// currently waiting on `role` (0 clears the hint). Policies that do
     /// not model queued demand ignore it.
     fn on_demand(&mut self, _role: RoleId, _queued: u64) {}
+    /// Aging hook: a serving batch retired, so queued-demand hints are a
+    /// batch staler. Demand-blind policies ignore it. Without decay a
+    /// signature that spiked once would stay protected from eviction
+    /// forever (the hint is only overwritten while its lane still gets
+    /// requests — a lane that goes quiet never publishes the zero).
+    fn decay_demand(&mut self) {}
 }
 
 /// Least-recently-used — the paper's shipped policy.
@@ -193,6 +199,17 @@ impl EvictionPolicy for QueueAwareLru {
         }
     }
 
+    /// Halve every hint, dropping the ones that reach zero. Live lanes
+    /// re-publish absolute depths before every flush, so decay only ever
+    /// erodes *stale* entries; a dead signature's protection is gone
+    /// within a few batches instead of pinning its region forever.
+    fn decay_demand(&mut self) {
+        self.demand.retain(|_, q| {
+            *q /= 2;
+            *q > 0
+        });
+    }
+
     fn pick_victim(&mut self, candidates: &[RegionView]) -> usize {
         candidates
             .iter()
@@ -337,6 +354,27 @@ mod tests {
         p.on_demand(RoleId(2), 2);
         let c = [view(0, 1, 0, 1), view(1, 2, 0, 9)];
         assert_eq!(p.pick_victim(&c), 1, "fewest queued requests goes");
+    }
+
+    #[test]
+    fn queue_aware_demand_decays_instead_of_pinning_forever() {
+        let mut p = QueueAwareLru::new();
+        // A one-off spike on role 1, then its lane goes quiet (no more
+        // publishes, so no explicit zero ever arrives).
+        p.on_demand(RoleId(1), 4);
+        let c = [view(0, 1, 0, 1), view(1, 2, 0, 9)];
+        assert_eq!(p.pick_victim(&c), 1, "fresh hint protects role 1");
+        // 4 -> 2 -> 1 -> 0: after three retired batches the stale hint
+        // is gone and plain LRU resumes (role 1 is coldest).
+        p.decay_demand();
+        p.decay_demand();
+        assert_eq!(p.pick_victim(&c), 1, "hint still protecting at 1");
+        p.decay_demand();
+        assert_eq!(p.demand_for(RoleId(1)), 0, "stale hint fully decayed");
+        assert_eq!(p.pick_victim(&c), 0, "LRU order restored");
+        // Decay on an already-empty table is a no-op.
+        p.decay_demand();
+        assert_eq!(p.pick_victim(&c), 0);
     }
 
     #[test]

@@ -1,0 +1,433 @@
+//! Predictive reconfiguration: prefetch bitstreams like a cache
+//! prefetcher instead of paying the ICAP on the dispatch critical path.
+//!
+//! The reactive path (`ReconfigManager::ensure_loaded`) programs a PR
+//! region only when a dispatch already needs it, so every miss exposes
+//! the full ICAP latency to the request. But the serving stack *knows
+//! the future*: a compiled [`crate::tf::plan::ExecutionPlan`] states the
+//! exact upcoming kernel sequence, and the batcher publishes per-kernel
+//! queue depths. This module spends that knowledge:
+//!
+//! * [`KernelHorizon`] — the upcoming FPGA kernel/role sequence, derived
+//!   once at plan-compile time and indexed by a replay cursor.
+//! * [`PrefetchScheduler`] — walks the horizon (or the demand table)
+//!   ahead of the cursor and issues non-blocking
+//!   [`crate::reconfig::manager::ReconfigManager::try_prefetch`] loads
+//!   onto free or evictable regions, so programming overlaps compute.
+//! * [`CostClass`] — the router's per-agent reconfiguration-cost probe
+//!   ([`crate::fpga::device::FpgaAgent::reconfig_cost`]), letting
+//!   `KernelAffinity`/`LeastLoaded` steer around agents mid-reprogram.
+//!
+//! **Eviction safety.** A prefetch may never displace a role the replay
+//! needs *sooner* than the prefetched one, nor the role that was just
+//! dispatched (its execution may still be in flight). The scheduler
+//! builds that protected set from the horizon — the previous cursor
+//! entry plus every window entry closer than the prefetch target — and
+//! the manager additionally refuses to touch a region that is still
+//! `Configuring`. Single-ICAP-port serialization is preserved: at most
+//! one programming transaction is outstanding per agent, and a second
+//! prefetch attempt simply reports [`Prefetch::IcapBusy`].
+//!
+//! Everything here is deterministic: agents are probed in slot-index
+//! order, horizons are fixed at compile time, and completion is modeled
+//! on the manager's virtual ICAP clock — twin sessions fed the same call
+//! sequence make identical prefetch decisions (property-pinned in
+//! `tests/prop_invariants.rs`).
+
+use crate::sharding::router::Router;
+
+/// Tuning knobs for the prefetch scheduler, carried on
+/// [`crate::tf::session::SessionOptions`].
+///
+/// `enabled` defaults to `false`: prefetching deliberately changes the
+/// miss/hit accounting that several regression tests pin, so it is an
+/// explicit opt-in (`--prefetch-depth N` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefetchPolicy {
+    /// How many horizon entries ahead of the cursor to consider.
+    pub depth: usize,
+    /// Leave at least this many regions unoccupied: a prefetch that
+    /// would drop the free-region count to `min_free_regions` or below
+    /// must evict instead of claiming a free region (and eviction has
+    /// its own safety mask). Keeps headroom for unplanned kernels.
+    pub min_free_regions: usize,
+    /// Master switch; when false every pump is a no-op.
+    pub enabled: bool,
+}
+
+impl Default for PrefetchPolicy {
+    fn default() -> Self {
+        PrefetchPolicy { depth: 4, min_free_regions: 0, enabled: false }
+    }
+}
+
+impl PrefetchPolicy {
+    /// The default policy with prefetching off (explicit spelling).
+    pub fn disabled() -> Self {
+        PrefetchPolicy::default()
+    }
+
+    /// Enabled policy looking `depth` kernels ahead (clamped to >= 1).
+    pub fn with_depth(depth: usize) -> Self {
+        PrefetchPolicy { depth: depth.max(1), min_free_regions: 0, enabled: true }
+    }
+}
+
+/// The upcoming FPGA kernel sequence of one compiled execution plan, in
+/// step-emission (topological) order.
+///
+/// Built once by `tf::plan::compile` from the plan's FPGA dispatch
+/// steps; during replay a cursor counts issued FPGA dispatches and the
+/// scheduler looks at `window(cursor, depth)` — the next `depth` kernel
+/// objects the replay will need. For plans with parallel branches the
+/// cursor is an approximation (replay may issue independent steps in a
+/// different order), which only ever makes a prefetch early or late,
+/// never incorrect: correctness comes from the manager, not the horizon.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct KernelHorizon {
+    entries: Vec<u64>,
+}
+
+impl KernelHorizon {
+    pub fn new(entries: Vec<u64>) -> Self {
+        KernelHorizon { entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The full kernel-object sequence.
+    pub fn entries(&self) -> &[u64] {
+        &self.entries
+    }
+
+    /// The next `depth` kernel objects at `cursor` (clamped to the end).
+    pub fn window(&self, cursor: usize, depth: usize) -> &[u64] {
+        let lo = cursor.min(self.entries.len());
+        let hi = cursor.saturating_add(depth).min(self.entries.len());
+        &self.entries[lo..hi]
+    }
+}
+
+/// What dispatching a given role on a given agent would cost, as a
+/// coarse class the router can rank without locking the world.
+///
+/// Returned by `FpgaAgent::reconfig_cost`; ordering is cheapest first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CostClass {
+    /// Role already resident (or its prefetch is the pending ICAP
+    /// transaction on this agent): dispatch pays at most the residual
+    /// programming time, usually nothing.
+    Resident,
+    /// Not resident, but a free region is available: dispatch pays one
+    /// full reconfiguration with no eviction.
+    FreeRegion,
+    /// Not resident and every region is occupied: dispatch pays a full
+    /// reconfiguration plus evicts someone.
+    MustEvict,
+    /// The agent's single ICAP port is mid-transaction for a *different*
+    /// role: any reconfiguration queues behind it. Routing here while a
+    /// resident replica exists elsewhere is the worst choice.
+    IcapBusy,
+}
+
+impl CostClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CostClass::Resident => "resident",
+            CostClass::FreeRegion => "free-region",
+            CostClass::MustEvict => "must-evict",
+            CostClass::IcapBusy => "icap-busy",
+        }
+    }
+}
+
+/// Outcome of one non-blocking prefetch attempt
+/// (`ReconfigManager::try_prefetch` / `FpgaAgent::try_prefetch`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Prefetch {
+    /// Already resident — nothing to do.
+    Resident,
+    /// This role's programming transaction is already in flight.
+    InFlight,
+    /// Another transaction occupies the single ICAP port; try later.
+    IcapBusy,
+    /// No free region and every eviction candidate is protected
+    /// (in-flight, sooner-needed, still configuring, or reserved by
+    /// `min_free_regions`).
+    NoSafeRegion,
+    /// The agent has no bitstream registered for this kernel object.
+    UnknownKernel,
+    /// Programming started in the background on `region`; it completes
+    /// `reconfig_us` of virtual time later, overlapped with compute.
+    Started { region: usize, reconfig_us: u64 },
+}
+
+/// Walks a [`KernelHorizon`] (or the router's demand table) and issues
+/// background bitstream loads ahead of the replay cursor.
+///
+/// One scheduler instance serves one replay (plan path) or one pump
+/// call (demand path); its only state is the policy plus issue/decline
+/// counters for observability. All decisions are delegated to
+/// `FpgaAgent::try_prefetch`, which owns the eviction-safety and
+/// ICAP-serialization rules.
+#[derive(Debug)]
+pub struct PrefetchScheduler {
+    policy: PrefetchPolicy,
+    issued: u64,
+    declined: u64,
+}
+
+impl PrefetchScheduler {
+    pub fn new(policy: PrefetchPolicy) -> Self {
+        PrefetchScheduler { policy, issued: 0, declined: 0 }
+    }
+
+    pub fn policy(&self) -> PrefetchPolicy {
+        self.policy
+    }
+
+    /// Prefetch transactions started over this scheduler's lifetime.
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+
+    /// Horizon entries that could not be prefetched anywhere (no safe
+    /// region / ICAP busy on every agent).
+    pub fn declined(&self) -> u64 {
+        self.declined
+    }
+
+    /// Plan-cursor pump: look `depth` entries past `cursor` and start
+    /// loads for any kernel not resident anywhere in the pool.
+    ///
+    /// The protected set for the entry at window offset `k` is the
+    /// previous cursor entry (just dispatched, possibly still
+    /// executing) plus window entries `0..k` (needed sooner). Agents
+    /// are probed in slot-index order; the first that accepts wins.
+    pub fn pump(&mut self, router: &Router, horizon: &KernelHorizon, cursor: usize) {
+        if !self.policy.enabled {
+            return;
+        }
+        let window = horizon.window(cursor, self.policy.depth);
+        let mut protected: Vec<u64> = Vec::with_capacity(window.len() + 1);
+        if cursor > 0 {
+            protected.push(horizon.entries()[cursor - 1]);
+        }
+        for (off, &kernel_object) in window.iter().enumerate() {
+            // Deadline hint: how many dispatches away the need is.
+            let placed = self.place(router, kernel_object, &protected, off as u64);
+            if !placed {
+                self.declined += 1;
+            }
+            // Whatever happens to this entry, anything later in the
+            // window must not evict it.
+            protected.push(kernel_object);
+        }
+    }
+
+    /// Demand pump: prefetch hot signatures first, using the batcher's
+    /// queue-depth hints (`Router::hint_demand`) as the priority order.
+    ///
+    /// Used by the serving prewarm paths where no plan cursor exists
+    /// (server startup, between batches). Every demanded kernel is
+    /// protected from eviction by every other, so warming one hot
+    /// signature never cannibalizes another.
+    pub fn pump_demand(&mut self, router: &Router) {
+        if !self.policy.enabled {
+            return;
+        }
+        let mut demand = router.demand_snapshot();
+        // Hottest first; kernel-object id breaks ties for determinism.
+        demand.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let protected: Vec<u64> = demand.iter().map(|d| d.0).collect();
+        for &(kernel_object, queued) in demand.iter().take(self.policy.depth.max(1)) {
+            if queued == 0 {
+                continue;
+            }
+            if !self.place(router, kernel_object, &protected, 0) {
+                self.declined += 1;
+            }
+        }
+    }
+
+    /// Try to get `kernel_object` resident (or in flight) somewhere in
+    /// the pool. Returns true if it is resident, already being
+    /// programmed, or a new transaction was started.
+    fn place(
+        &mut self,
+        router: &Router,
+        kernel_object: u64,
+        protected: &[u64],
+        deadline_hint: u64,
+    ) -> bool {
+        for agent in router.agents() {
+            if agent.is_resident(kernel_object) {
+                return true;
+            }
+        }
+        for agent in router.agents() {
+            match agent.try_prefetch(
+                kernel_object,
+                protected,
+                self.policy.min_free_regions,
+                deadline_hint,
+            ) {
+                Prefetch::Started { .. } => {
+                    self.issued += 1;
+                    return true;
+                }
+                Prefetch::Resident | Prefetch::InFlight => return true,
+                Prefetch::IcapBusy
+                | Prefetch::NoSafeRegion
+                | Prefetch::UnknownKernel => {}
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::{ComputeBinding, FpgaConfig};
+    use crate::fpga::roles::paper_roles;
+    use crate::hsa::queue::Queue;
+    use crate::reconfig::policy::PolicyKind;
+    use crate::sharding::pool::FpgaPool;
+    use crate::sharding::router::ShardStrategy;
+    use crate::tf::tensor::Tensor;
+    use std::sync::Arc;
+
+    fn mk_pool(
+        agents: usize,
+        regions: usize,
+        roles: usize,
+    ) -> (FpgaPool, Router, Vec<u64>) {
+        let pool = FpgaPool::new(agents, |i| FpgaConfig {
+            num_regions: regions,
+            policy: PolicyKind::QueueAware.build(i as u64),
+            realtime: false,
+            realtime_scale: 1.0,
+            trace: None,
+        });
+        let echo = ComputeBinding::Native(Arc::new(|ins: &[Tensor]| Ok(ins.to_vec())));
+        let ids: Vec<u64> = paper_roles()
+            .into_iter()
+            .take(roles)
+            .map(|r| pool.register_role(r, echo.clone()))
+            .collect();
+        let slots = pool
+            .agents()
+            .iter()
+            .map(|a| (Arc::clone(a), Queue::new(8)))
+            .collect();
+        let router = Router::new(slots, ShardStrategy::KernelAffinity);
+        (pool, router, ids)
+    }
+
+    #[test]
+    fn horizon_window_clamps_at_the_end() {
+        let h = KernelHorizon::new(vec![1, 2, 3]);
+        assert_eq!(h.window(0, 2), &[1, 2]);
+        assert_eq!(h.window(2, 4), &[3]);
+        assert_eq!(h.window(3, 4), &[] as &[u64]);
+        assert_eq!(h.window(9, 1), &[] as &[u64]);
+        assert!(KernelHorizon::default().is_empty());
+    }
+
+    #[test]
+    fn disabled_policy_pumps_nothing() {
+        let (_pool, router, ids) = mk_pool(1, 2, 2);
+        let horizon = KernelHorizon::new(vec![ids[0], ids[1]]);
+        let mut sched = PrefetchScheduler::new(PrefetchPolicy::disabled());
+        sched.pump(&router, &horizon, 0);
+        assert_eq!(sched.issued(), 0);
+        assert_eq!(router.agent(0).reconfig_stats().prefetches, 0);
+    }
+
+    #[test]
+    fn pump_loads_upcoming_roles_onto_free_regions() {
+        let (_pool, router, ids) = mk_pool(1, 2, 2);
+        let horizon = KernelHorizon::new(vec![ids[0], ids[1]]);
+        let mut sched = PrefetchScheduler::new(PrefetchPolicy::with_depth(2));
+        sched.pump(&router, &horizon, 0);
+        // Single ICAP port: only the first window entry starts.
+        assert_eq!(sched.issued(), 1);
+        assert!(router.agent(0).is_resident(ids[0]));
+        assert!(!router.agent(0).is_resident(ids[1]));
+        let stats = router.agent(0).reconfig_stats();
+        assert_eq!(stats.prefetches, 1);
+        assert_eq!(stats.misses, 0, "prefetch is not a dispatch miss");
+    }
+
+    #[test]
+    fn pump_never_evicts_sooner_needed_roles() {
+        let (_pool, router, ids) = mk_pool(1, 1, 2);
+        let horizon = KernelHorizon::new(vec![ids[0], ids[1]]);
+        let mut sched = PrefetchScheduler::new(PrefetchPolicy::with_depth(2));
+        // Cursor 0: window is [ids0, ids1]. ids0 claims the only
+        // region; ids1 must NOT evict it (sooner-needed).
+        sched.pump(&router, &horizon, 0);
+        assert_eq!(sched.issued(), 1);
+        assert!(router.agent(0).is_resident(ids[0]));
+        assert_eq!(sched.declined(), 1, "ids1 had no safe region");
+    }
+
+    #[test]
+    fn pump_spills_to_the_next_agent_when_first_is_busy() {
+        let (_pool, router, ids) = mk_pool(2, 1, 2);
+        let horizon = KernelHorizon::new(vec![ids[0], ids[1]]);
+        let mut sched = PrefetchScheduler::new(PrefetchPolicy::with_depth(2));
+        sched.pump(&router, &horizon, 0);
+        // Agent 0's ICAP takes ids0; ids1 lands on agent 1.
+        assert_eq!(sched.issued(), 2);
+        assert!(router.agent(0).is_resident(ids[0]));
+        assert!(router.agent(1).is_resident(ids[1]));
+    }
+
+    #[test]
+    fn demand_pump_warms_hottest_signature_first() {
+        let (_pool, router, ids) = mk_pool(1, 1, 2);
+        router.hint_demand(ids[0], 1);
+        router.hint_demand(ids[1], 9);
+        let mut sched = PrefetchScheduler::new(PrefetchPolicy::with_depth(4));
+        sched.pump_demand(&router);
+        // One region, one ICAP: only the hottest kernel fits.
+        assert!(router.agent(0).is_resident(ids[1]));
+        assert!(!router.agent(0).is_resident(ids[0]));
+        assert_eq!(sched.issued(), 1);
+    }
+
+    #[test]
+    fn twin_schedulers_make_identical_decisions() {
+        let mk = || {
+            let (pool, router, ids) = mk_pool(2, 2, 4);
+            let horizon =
+                KernelHorizon::new(vec![ids[0], ids[1], ids[2], ids[3], ids[0]]);
+            (pool, router, horizon)
+        };
+        let (_p1, r1, h1) = mk();
+        let (_p2, r2, h2) = mk();
+        let mut s1 = PrefetchScheduler::new(PrefetchPolicy::with_depth(3));
+        let mut s2 = PrefetchScheduler::new(PrefetchPolicy::with_depth(3));
+        for cursor in 0..h1.len() {
+            s1.pump(&r1, &h1, cursor);
+            s2.pump(&r2, &h2, cursor);
+        }
+        assert_eq!(s1.issued(), s2.issued());
+        assert_eq!(s1.declined(), s2.declined());
+        for i in 0..r1.len() {
+            assert_eq!(
+                r1.agent(i).reconfig_stats(),
+                r2.agent(i).reconfig_stats(),
+                "agent {i} diverged"
+            );
+        }
+    }
+}

@@ -542,6 +542,10 @@ fn publish_demand(
     for (kernel, queued) in per_kernel {
         session.hint_demand(kernel, queued);
     }
+    // With prefetch enabled, the freshly published queue depths double as
+    // a prefetch signal: start background loads for the hottest roles so
+    // the batches now waiting in the lanes dispatch onto warm regions.
+    session.prefetch_hot();
 }
 
 /// Seal one taken batch into its tensor and push it down the pipeline.
@@ -748,6 +752,10 @@ fn completer_loop(
         if let Some(buf) = x.try_take_f32() {
             lanes.recycle(lane, buf);
         }
+        // Decay queued-demand hints now that a batch retired, so roles
+        // that were hot a thousand batches ago stop outranking the roles
+        // the current traffic actually needs.
+        session.note_batch_retired();
         slots.release();
     }
 }

@@ -98,6 +98,23 @@ impl FpgaPool {
         }
         id
     }
+
+    /// How many pool members currently hold `kernel_object` in a PR
+    /// region. The prefetch scheduler skips roles with at least one
+    /// replica; benches use the count to check replication spread.
+    pub fn resident_replicas(&self, kernel_object: u64) -> usize {
+        self.agents.iter().filter(|a| a.is_resident(kernel_object)).count()
+    }
+
+    /// Age every member's queued-demand hints by one retired batch (see
+    /// `EvictionPolicy::decay_demand`). Custom runtimes wired without a
+    /// [`super::Router`] call this directly; sessions go through
+    /// `Router::decay_demand`.
+    pub fn decay_demand(&self) {
+        for agent in &self.agents {
+            agent.decay_demand();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -171,5 +188,27 @@ mod tests {
         assert!(!pool.agent(1).is_resident(id), "peer agent untouched");
         assert_eq!(pool.agent(0).reconfig_stats().misses, 1);
         assert_eq!(pool.agent(1).reconfig_stats().dispatches, 0);
+    }
+
+    #[test]
+    fn resident_replicas_counts_only_agents_holding_the_role() {
+        use crate::hsa::packet::AqlPacket;
+        use crate::hsa::signal::Signal;
+        let pool = FpgaPool::new(3, |i| config(i as u64));
+        let id = pool.register_role(paper_roles().remove(0), echo());
+        assert_eq!(pool.resident_replicas(id), 0);
+        let x = Tensor::from_f32(&[1, 2], vec![1.0, 2.0]).unwrap();
+        for agent in &pool.agents()[..2] {
+            let (pkt, _args) =
+                AqlPacket::dispatch(id, vec![x.clone()], Signal::new(1));
+            if let AqlPacket::KernelDispatch(d) = pkt {
+                agent.execute(&d).unwrap();
+            }
+        }
+        assert_eq!(pool.resident_replicas(id), 2);
+        assert_eq!(pool.resident_replicas(0xDEAD_BEEF), 0, "unknown kernel");
+        // Demand decay broadcast is a no-op for demand-blind LRU members.
+        pool.decay_demand();
+        assert_eq!(pool.resident_replicas(id), 2);
     }
 }

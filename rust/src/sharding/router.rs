@@ -315,12 +315,21 @@ impl Router {
 
     /// Index of the least-loaded slot among those passing `eligible`
     /// (lowest index on ties). `eligible` must accept at least one slot.
+    ///
+    /// Reconfiguration cost is a routing input: at equal in-flight load
+    /// an agent whose ICAP is mid-transaction ranks behind an idle one —
+    /// a non-resident kernel dispatched there queues behind the transfer.
+    /// With prefetching off no ICAP is ever busy in the background, so
+    /// the key degenerates to `(inflight, index)` and routing stays
+    /// bit-identical (regression-pinned by the determinism properties).
     fn least_loaded(&self, eligible: impl Fn(usize) -> bool) -> usize {
         self.slots
             .iter()
             .enumerate()
             .filter(|(i, _)| eligible(*i))
-            .min_by_key(|(i, s)| (s.inflight.load(Ordering::Acquire), *i))
+            .min_by_key(|(i, s)| {
+                (s.inflight.load(Ordering::Acquire), s.agent.icap_busy(), *i)
+            })
             .map(|(i, _)| i)
             .expect("least_loaded over empty eligible set")
     }
@@ -337,6 +346,19 @@ impl Router {
             .filter(|(i, s)| ok(*i) && s.agent.is_resident(kernel_object))
             .map(|(i, _)| i)
             .collect();
+        // Cost-aware refinement: among resident replicas, prefer agents
+        // whose ICAP is idle — one mid-reprogram is about to take on the
+        // prefetched role's traffic, and anything queued behind its
+        // transfer waits. Only a tie-break: if *every* replica is
+        // mid-reprogram the full set stands (never route a resident
+        // kernel cold just to dodge a busy ICAP). Inert with prefetch
+        // off (no background transaction ever exists).
+        let ready: Vec<usize> = resident
+            .iter()
+            .copied()
+            .filter(|&i| !self.slots[i].agent.icap_busy())
+            .collect();
+        let resident = if ready.is_empty() { resident } else { ready };
         if resident.is_empty() {
             // Cold kernel: prefer an agent with a free PR region (loading
             // there evicts nothing, and spreads the working set across
@@ -497,6 +519,22 @@ impl Router {
         }
         for slot in &self.slots {
             slot.agent.hint_demand(kernel_object, queued);
+        }
+    }
+
+    /// Snapshot of the queued-demand table as `(kernel_object, queued)`
+    /// pairs in kernel-object order — the prefetch scheduler's priority
+    /// input (`PrefetchScheduler::pump_demand` sorts hottest-first).
+    pub fn demand_snapshot(&self) -> Vec<(u64, u64)> {
+        self.demand.lock().unwrap().iter().map(|(&k, &v)| (k, v)).collect()
+    }
+
+    /// Age every agent's queued-demand hints by one retired serving
+    /// batch (see `EvictionPolicy::decay_demand`): a signature that
+    /// spiked once must not stay protected from eviction forever.
+    pub fn decay_demand(&self) {
+        for slot in &self.slots {
+            slot.agent.decay_demand();
         }
     }
 
@@ -834,5 +872,93 @@ mod tests {
             assert_eq!(ShardStrategy::parse(s.name()), Some(s));
         }
         assert_eq!(ShardStrategy::parse("zipf"), None);
+    }
+
+    /// Like `mk_router` but with two PR regions per agent, so an agent
+    /// can host a resident role *and* stream a background prefetch.
+    fn mk_router2(n: usize, strategy: ShardStrategy) -> (FpgaPool, Router, Vec<u64>) {
+        let pool = FpgaPool::new(n, |i| FpgaConfig {
+            num_regions: 2,
+            policy: PolicyKind::Lru.build(i as u64),
+            realtime: false,
+            realtime_scale: 1.0,
+            trace: None,
+        });
+        let echo = ComputeBinding::Native(std::sync::Arc::new(
+            |ins: &[Tensor]| Ok(ins.to_vec()),
+        ));
+        let ids: Vec<u64> = paper_roles()
+            .into_iter()
+            .take(3)
+            .map(|r| pool.register_role(r, echo.clone()))
+            .collect();
+        let slots = pool
+            .agents()
+            .iter()
+            .map(|a| (std::sync::Arc::clone(a), Queue::new(8)))
+            .collect();
+        let router = Router::new(slots, strategy);
+        (pool, router, ids)
+    }
+
+    #[test]
+    fn least_loaded_breaks_ties_away_from_busy_icap() {
+        use crate::reconfig::scheduler::Prefetch;
+        let (_pool, router, ids) = mk_router2(2, ShardStrategy::LeastLoaded);
+        assert!(matches!(
+            router.agent(0).try_prefetch(ids[1], &[], 0, 0),
+            Prefetch::Started { .. }
+        ));
+        assert!(router.agent(0).icap_busy());
+        let (i, _, _g) = router.route(ids[0]);
+        assert_eq!(i, 1, "equal load: the idle ICAP wins the tie");
+    }
+
+    #[test]
+    fn affinity_avoids_resident_replica_mid_reprogram() {
+        use crate::reconfig::scheduler::{CostClass, Prefetch};
+        let (_pool, router, ids) = mk_router2(2, ShardStrategy::KernelAffinity);
+        execute_on(&router, 0, ids[0]);
+        execute_on(&router, 1, ids[0]); // resident on both agents
+        let (i, _, g) = router.route(ids[0]);
+        assert_eq!(i, 0, "both replicas idle: lowest index");
+        drop(g);
+        // Agent 0 starts streaming a different role in the background.
+        assert!(matches!(
+            router.agent(0).try_prefetch(ids[2], &[], 0, 0),
+            Prefetch::Started { .. }
+        ));
+        assert_eq!(router.agent(0).reconfig_cost(ids[1]), CostClass::IcapBusy);
+        assert_eq!(
+            router.agent(0).reconfig_cost(ids[0]),
+            CostClass::Resident,
+            "already-resident roles are unaffected by the transfer"
+        );
+        let (j, _, g2) = router.route(ids[0]);
+        assert_eq!(j, 1, "replica mid-reprogram loses to the idle replica");
+        drop(g2);
+        // The sole replica mid-reprogram still beats going cold.
+        let (_pool2, solo, ids2) = mk_router2(2, ShardStrategy::KernelAffinity);
+        execute_on(&solo, 0, ids2[0]);
+        assert!(matches!(
+            solo.agent(0).try_prefetch(ids2[2], &[], 0, 0),
+            Prefetch::Started { .. }
+        ));
+        let (k, _, _g3) = solo.route(ids2[0]);
+        assert_eq!(k, 0, "never route a resident kernel cold to dodge the ICAP");
+    }
+
+    #[test]
+    fn demand_snapshot_orders_by_kernel_object() {
+        let (_pool, router, ids) = mk_router(2, ShardStrategy::KernelAffinity);
+        router.hint_demand(ids[1], 7);
+        router.hint_demand(ids[0], 3);
+        let mut expect = vec![(ids[0], 3), (ids[1], 7)];
+        expect.sort();
+        assert_eq!(router.demand_snapshot(), expect);
+        router.hint_demand(ids[1], 0);
+        assert_eq!(router.demand_snapshot(), vec![(ids[0], 3)]);
+        router.decay_demand(); // demand-blind Lru agents: a quiet no-op
+        assert_eq!(router.demand_snapshot(), vec![(ids[0], 3)]);
     }
 }

@@ -31,6 +31,7 @@ use crate::hsa::agent::DeviceType;
 use crate::hsa::error::{message_indicates_agent_down, HsaError, Result};
 use crate::hsa::packet::KernelArgs;
 use crate::hsa::signal::Signal;
+use crate::reconfig::scheduler::{KernelHorizon, PrefetchPolicy, PrefetchScheduler};
 use crate::tf::dtype::DType;
 use crate::tf::executor::{check_feed, check_kernel_output, ExecEnv, RunStats};
 use crate::tf::fusion;
@@ -130,6 +131,9 @@ pub struct ExecutionPlan {
     num_slots: usize,
     /// `(slot, value id)` per fetch, in fetch order.
     fetch_slots: Vec<(usize, usize)>,
+    /// FPGA kernel objects in step order — the prefetch scheduler's
+    /// compile-time view of what the replay is about to dispatch.
+    horizon: KernelHorizon,
     stats: PlanStats,
 }
 
@@ -144,6 +148,14 @@ impl ExecutionPlan {
 
     pub fn num_slots(&self) -> usize {
         self.num_slots
+    }
+
+    /// The FPGA dispatch sequence this plan will replay, in step order.
+    /// Derived once at compile time; [`Self::replay_prefetched`] walks it
+    /// with a cursor so the prefetch scheduler always knows which roles
+    /// come next.
+    pub fn horizon(&self) -> &KernelHorizon {
+        &self.horizon
     }
 
     /// Compile the graph for one fetch set. `env` is used only at compile
@@ -469,6 +481,19 @@ impl ExecutionPlan {
 
         let dispatch_steps =
             steps.iter().filter(|s| matches!(s.op, StepOp::Dispatch { .. })).count();
+        let horizon = KernelHorizon::new(
+            steps
+                .iter()
+                .filter_map(|s| match &s.op {
+                    StepOp::Dispatch { device, kernel_object, .. }
+                        if *device == DeviceType::Fpga =>
+                    {
+                        Some(*kernel_object)
+                    }
+                    _ => None,
+                })
+                .collect(),
+        );
         let plan = ExecutionPlan {
             stats: PlanStats {
                 graph_nodes: graph.len(),
@@ -485,6 +510,7 @@ impl ExecutionPlan {
             consts,
             num_slots,
             fetch_slots,
+            horizon,
         };
         plan.validate().map_err(|e| {
             HsaError::Runtime(format!("plan failed self-validation (internal): {e}"))
@@ -539,7 +565,30 @@ impl ExecutionPlan {
         env: &ExecEnv<'_>,
         feeds: &HashMap<String, Tensor>,
     ) -> Result<(Vec<Tensor>, RunStats)> {
+        self.replay_prefetched(env, feeds, PrefetchPolicy::disabled())
+    }
+
+    /// [`replay`](ExecutionPlan::replay) plus predictive reconfiguration:
+    /// after each FPGA dispatch issues, the prefetch scheduler walks the
+    /// plan's [`KernelHorizon`] from the current cursor and starts
+    /// background ICAP loads for upcoming roles (see
+    /// [`PrefetchScheduler::pump`]). With the policy disabled (the
+    /// default) or no shard router in the env, this is byte-for-byte the
+    /// plain replay. The cursor counts *issued* FPGA dispatches, which for
+    /// plans with parallel branches is an approximation of the horizon
+    /// position — prefetching a role slightly early or late is a
+    /// performance wobble, never a correctness issue (the scheduler never
+    /// evicts the role at or just before the cursor).
+    pub fn replay_prefetched(
+        &self,
+        env: &ExecEnv<'_>,
+        feeds: &HashMap<String, Tensor>,
+        prefetch: PrefetchPolicy,
+    ) -> Result<(Vec<Tensor>, RunStats)> {
         let t0 = Instant::now();
+        let mut prefetcher = (prefetch.enabled && env.router.is_some())
+            .then(|| PrefetchScheduler::new(prefetch));
+        let mut fpga_cursor = 0usize;
         // Note: constants are *preloaded*, not executed, so they do not
         // count toward `inline_ops` — replay reports only the structural
         // work it actually performs (feeds and reshapes). The interpreter
@@ -612,6 +661,14 @@ impl ExecutionPlan {
                         let (sig, args) =
                             env.runtime.dispatch_async(&queue, *kernel_object, ins)?;
                         inflight.push_back((i, sig, args, route, slot));
+                        if *device == DeviceType::Fpga {
+                            fpga_cursor += 1;
+                            if let (Some(p), Some(router)) =
+                                (prefetcher.as_mut(), env.router)
+                            {
+                                p.pump(router, &self.horizon, fpga_cursor);
+                            }
+                        }
                     }
                 }
             }

@@ -33,6 +33,7 @@ use crate::hsa::runtime::HsaRuntime;
 use crate::hsa::signal::Signal;
 use crate::reconfig::manager::ReconfigStats;
 use crate::reconfig::policy::PolicyKind;
+use crate::reconfig::scheduler::{PrefetchPolicy, PrefetchScheduler};
 use crate::runtime::artifact::ArtifactStore;
 use crate::runtime::pjrt::PjrtService;
 use crate::sharding::{FpgaPool, RouteGuard, Router, ShardAgentReport, ShardStrategy};
@@ -90,6 +91,12 @@ pub struct SessionOptions {
     /// interval and retry budget for dispatches caught on a dying agent.
     /// Irrelevant at `fpga_pool == 1` (nowhere else to retry).
     pub health: crate::sharding::HealthPolicy,
+    /// Predictive reconfiguration: prefetch upcoming roles onto idle PR
+    /// regions during replay (plan horizon) and between batches (queued
+    /// demand). Disabled by default — prefetch never changes outputs, but
+    /// it does change reconfiguration accounting, so opting in is
+    /// explicit (`tf-fpga serve --prefetch-depth N`).
+    pub prefetch: PrefetchPolicy,
 }
 
 impl Default for SessionOptions {
@@ -109,6 +116,7 @@ impl Default for SessionOptions {
             shard_strategy: ShardStrategy::KernelAffinity,
             seed: 0xF06A,
             health: crate::sharding::HealthPolicy::default(),
+            prefetch: PrefetchPolicy::default(),
         }
     }
 }
@@ -384,6 +392,9 @@ pub struct Session {
     plan_compiles: AtomicU64,
     plan_hits: AtomicU64,
     plan_compile_us: AtomicU64,
+    /// Predictive-reconfiguration policy applied to every plan replay and
+    /// to the demand-driven warm paths (see [`Session::prefetch_hot`]).
+    prefetch: PrefetchPolicy,
 }
 
 impl Session {
@@ -534,6 +545,7 @@ impl Session {
             plan_compiles: AtomicU64::new(0),
             plan_hits: AtomicU64::new(0),
             plan_compile_us: AtomicU64::new(0),
+            prefetch: opts.prefetch,
         })
     }
 
@@ -580,7 +592,7 @@ impl Session {
             feeds.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
         let plan = self.cached_plan(&feeds, fetches)?;
         let env = ExecEnv { runtime: &self.runtime, queues: &self.queues, router: Some(&self.router) };
-        plan.replay(&env, &feeds)
+        plan.replay_prefetched(&env, &feeds, self.prefetch)
     }
 
     /// The legacy interpreted path: topological walk, one blocking dispatch
@@ -661,8 +673,36 @@ impl Session {
         let feeds: HashMap<String, Tensor> =
             feeds.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
         let t0 = Instant::now();
-        self.cached_plan(&feeds, fetches)?;
+        let plan = self.cached_plan(&feeds, fetches)?;
+        // Prewarm routes through the scheduler: with prefetch enabled, the
+        // plan's first roles start loading now, so the first real request
+        // finds them resident (or mid-transfer) instead of cold.
+        if self.prefetch.enabled {
+            let mut scheduler = PrefetchScheduler::new(self.prefetch);
+            scheduler.pump(&self.router, plan.horizon(), 0);
+        }
         Ok((t0.elapsed().as_micros() as u64).max(1))
+    }
+
+    /// Demand-driven prefetch: walk the router's queued-demand hints
+    /// (hottest kernel first) and start background loads for the hot roles
+    /// that are not resident anywhere. The serving frontend calls this
+    /// after publishing batch-queue depths (`hint_demand`), turning the
+    /// admission queue into a prefetch signal. No-op when prefetch is
+    /// disabled.
+    pub fn prefetch_hot(&self) {
+        if self.prefetch.enabled {
+            let mut scheduler = PrefetchScheduler::new(self.prefetch);
+            scheduler.pump_demand(&self.router);
+        }
+    }
+
+    /// Tell the eviction policies a batch round completed: queued-demand
+    /// hints decay (instead of pinning stale-hot roles forever — see
+    /// `QueueAwareLru::decay_demand`). The async server calls this as its
+    /// completer retires batches.
+    pub fn note_batch_retired(&self) {
+        self.router.decay_demand();
     }
 
     /// Plan-cache accounting: entries, compiles (misses), replay hits and

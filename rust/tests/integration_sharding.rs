@@ -135,6 +135,70 @@ fn eviction_storm_on_undersized_pool_stays_correct_and_live() {
     }
 }
 
+/// Predictive reconfiguration under the same storm: a single agent whose
+/// two PR regions are half the four-kernel working set, with the prefetch
+/// scheduler walking the plan horizon. Prefetching reorders *when* ICAP
+/// transfers happen, never *what* the kernels compute — logits must stay
+/// bitwise identical to the reactive baseline — and the new accounting
+/// must close: every dispatch is still a hit or a miss, and prefetch
+/// outcomes (hit / wasted) never exceed prefetches issued.
+#[test]
+fn prefetch_keeps_outputs_bitwise_identical_under_region_pressure() {
+    use tf_fpga::reconfig::PrefetchPolicy;
+    let images = images();
+
+    let mut baseline = AsyncInferenceServer::start(AsyncServerConfig {
+        models: vec![layered_spec()],
+        session: SessionOptions {
+            num_regions: 2, // half the 4-kernel working set
+            dispatch_workers: 1,
+            ..SessionOptions::native_only()
+        },
+        pipeline_depth: 2,
+    })
+    .expect("reactive baseline server");
+    let want = serve_all(&baseline, &images, "prefetch-baseline");
+    baseline.stop();
+
+    let mut srv = AsyncInferenceServer::start(AsyncServerConfig {
+        models: vec![layered_spec()],
+        session: SessionOptions {
+            num_regions: 2,
+            dispatch_workers: 1,
+            prefetch: PrefetchPolicy::with_depth(2),
+            ..SessionOptions::native_only()
+        },
+        pipeline_depth: 2,
+    })
+    .expect("prefetching server");
+    let got = serve_all(&srv, &images, "prefetch");
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(a, b, "prefetch: request {i} logits diverged from reactive run");
+    }
+
+    let rep = srv.report();
+    assert_eq!(rep.completed, REQUESTS as u64, "{rep:?}");
+    assert_eq!(rep.failed, 0, "{rep:?}");
+    let rc = &rep.reconfig;
+    assert!(rc.dispatches > 0, "nothing reached the FPGA: {rc:?}");
+    assert_eq!(rc.hits + rc.misses, rc.dispatches, "accounting broke: {rc:?}");
+    assert!(
+        rc.prefetches > 0,
+        "scheduler never issued a prefetch under region pressure: {rc:?}"
+    );
+    assert!(
+        rc.prefetch_hits + rc.prefetch_wasted <= rc.prefetches,
+        "more prefetch outcomes than prefetches issued: {rc:?}"
+    );
+    assert_eq!(
+        rep.pool.iter().map(|p| p.inflight).sum::<u64>(),
+        0,
+        "in-flight leaked: {:?}",
+        rep.pool
+    );
+    srv.stop();
+}
+
 /// The same storm at pool sizes 1..=3 under kernel-affinity routing:
 /// adding agents must never *increase* total reconfiguration misses for
 /// the same request trace (more total regions → the affinity router can

@@ -605,6 +605,211 @@ mod sharding_props {
         });
     }
 
+    /// Predictive reconfiguration is invisible to the numerics: for
+    /// random graphs, any pool size (including the paper's single
+    /// device) and every shard strategy, replay with the prefetch
+    /// scheduler enabled is bitwise identical to a plain single-agent
+    /// session — prefetching moves ICAP transfers off the critical
+    /// path, never changes what a kernel computes — and the
+    /// reconfiguration accounting still closes exactly once per
+    /// dispatch.
+    #[test]
+    fn prop_prefetch_preserves_bitwise_outputs() {
+        use tf_fpga::reconfig::PrefetchPolicy;
+        forall(37, 10, &super::plan_equivalence::GraphCase, |(seed, ops)| {
+            let (g, fetches) = super::plan_equivalence::build(*seed, ops);
+            let fetch_refs: Vec<&str> = fetches.iter().map(|s| s.as_str()).collect();
+            let mut xv = vec![0f32; 6];
+            Rng::new(seed ^ 0x9F27).fill_f32_normal(&mut xv, 0.0, 1.0);
+            let x = Tensor::from_f32(&[2, 3], xv).map_err(|e| e.to_string())?;
+            let feeds = [("x", x)];
+
+            let single = Session::new(g.clone(), SessionOptions::native_only())
+                .map_err(|e| format!("single session: {e}"))?;
+            let want = single
+                .run(&feeds, &fetch_refs)
+                .map_err(|e| format!("single run: {e}"))?;
+            single.shutdown();
+
+            let pool_size = 1 + (seed % 4) as usize; // 1..=4 agents
+            let depth = 1 + (seed >> 4) as usize % 3; // 1..=3 ahead
+            for strategy in ShardStrategy::ALL {
+                let opts = SessionOptions {
+                    fpga_pool: pool_size,
+                    shard_strategy: strategy,
+                    prefetch: PrefetchPolicy::with_depth(depth),
+                    ..SessionOptions::native_only()
+                };
+                let prefetching = Session::new(g.clone(), opts)
+                    .map_err(|e| format!("prefetch session: {e}"))?;
+                // Two replays: the second runs against prefetched /
+                // mid-transfer residency instead of a cold fabric.
+                for round in 0..2 {
+                    let got = prefetching
+                        .run(&feeds, &fetch_refs)
+                        .map_err(|e| format!("{strategy:?} prefetch run: {e}"))?;
+                    for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                        if a != b {
+                            return Err(format!(
+                                "fetch '{}' diverged with prefetch depth {depth} \
+                                 (pool {pool_size}, {strategy:?}, round {round})",
+                                fetch_refs[k]
+                            ));
+                        }
+                    }
+                }
+                let rc = prefetching.reconfig_stats();
+                if rc.hits + rc.misses != rc.dispatches {
+                    return Err(format!(
+                        "{strategy:?}: dispatch accounting broke under prefetch: {rc:?}"
+                    ));
+                }
+                if rc.prefetch_hits + rc.prefetch_wasted > rc.prefetches {
+                    return Err(format!(
+                        "{strategy:?}: more prefetch outcomes than prefetches: {rc:?}"
+                    ));
+                }
+                if prefetching.router().rollup().inflight != 0 {
+                    return Err(format!("{strategy:?}: in-flight gauge leaked"));
+                }
+                prefetching.shutdown();
+            }
+            Ok(())
+        });
+    }
+
+    /// The prefetch scheduler is a pure function of the observed call
+    /// sequence: twin pools fed the identical interleaving of
+    /// dispatch-execute, horizon pumps and demand pumps end with
+    /// identical placements, identical prefetch decisions and identical
+    /// per-agent reconfiguration accounting. (Single-threaded on
+    /// purpose: this pins the decision logic, not thread scheduling.)
+    #[test]
+    fn prop_prefetch_decisions_are_deterministic() {
+        use std::sync::Arc;
+        use tf_fpga::fpga::device::{ComputeBinding, FpgaConfig};
+        use tf_fpga::fpga::roles::paper_roles;
+        use tf_fpga::hsa::agent::Agent;
+        use tf_fpga::hsa::packet::AqlPacket;
+        use tf_fpga::hsa::queue::Queue;
+        use tf_fpga::hsa::signal::Signal;
+        use tf_fpga::reconfig::policy::PolicyKind;
+        use tf_fpga::reconfig::{KernelHorizon, PrefetchPolicy, PrefetchScheduler};
+        use tf_fpga::sharding::{FpgaPool, Router};
+        use tf_fpga::util::quickcheck::{U64Range, VecGen};
+
+        struct Harness {
+            router: Router,
+            scheduler: PrefetchScheduler,
+            horizon: KernelHorizon,
+            ids: Vec<u64>,
+        }
+
+        impl Harness {
+            fn new(agents: usize) -> Harness {
+                let pool = FpgaPool::new(agents, |i| FpgaConfig {
+                    num_regions: 2,
+                    policy: PolicyKind::QueueAware.build(i as u64),
+                    realtime: false,
+                    realtime_scale: 1.0,
+                    trace: None,
+                });
+                let echo = ComputeBinding::Native(Arc::new(
+                    |ins: &[tf_fpga::tf::tensor::Tensor]| Ok(ins.to_vec()),
+                ));
+                let ids: Vec<u64> = paper_roles()
+                    .into_iter()
+                    .map(|r| pool.register_role(r, echo.clone()))
+                    .collect();
+                let slots = pool
+                    .agents()
+                    .iter()
+                    .map(|a| (Arc::clone(a), Queue::new(8)))
+                    .collect();
+                let horizon =
+                    KernelHorizon::new(ids.iter().cycle().take(12).copied().collect());
+                Harness {
+                    router: Router::new(slots, ShardStrategy::KernelAffinity),
+                    scheduler: PrefetchScheduler::new(PrefetchPolicy::with_depth(2)),
+                    horizon,
+                    ids,
+                }
+            }
+
+            /// Apply one op; `Some(agent)` when the op was a routed
+            /// dispatch (executed immediately, so residency and the
+            /// virtual ICAP clock advance deterministically).
+            fn apply(&mut self, op: u64) -> Option<usize> {
+                match op % 4 {
+                    0 | 1 => {
+                        let ko = self.ids[(op / 4) as usize % self.ids.len()];
+                        let (idx, _q, _guard) = self.router.route(ko);
+                        let x = tf_fpga::tf::tensor::Tensor::from_f32(
+                            &[1],
+                            vec![op as f32],
+                        )
+                        .unwrap();
+                        let (pkt, _args) =
+                            AqlPacket::dispatch(ko, vec![x], Signal::new(1));
+                        if let AqlPacket::KernelDispatch(d) = pkt {
+                            self.router.agent(idx).execute(&d).unwrap();
+                        }
+                        Some(idx)
+                    }
+                    2 => {
+                        let cursor = (op / 4) as usize % (self.horizon.len() + 1);
+                        self.scheduler.pump(&self.router, &self.horizon, cursor);
+                        None
+                    }
+                    _ => {
+                        let ko = self.ids[(op / 4) as usize % self.ids.len()];
+                        self.router.hint_demand(ko, op % 7);
+                        self.scheduler.pump_demand(&self.router);
+                        None
+                    }
+                }
+            }
+        }
+
+        let gen = VecGen { inner: U64Range(0, 1 << 22), min_len: 1, max_len: 100 };
+        forall(43, 30, &gen, |ops| {
+            let agents = 1 + (ops.len() % 3); // 1..=3
+            let mut a = Harness::new(agents);
+            let mut b = Harness::new(agents);
+            for (step, &op) in ops.iter().enumerate() {
+                let pa = a.apply(op);
+                let pb = b.apply(op);
+                if pa != pb {
+                    return Err(format!(
+                        "placement diverged at step {step}: {pa:?} vs {pb:?} \
+                         ({agents} agents)"
+                    ));
+                }
+            }
+            if a.scheduler.issued() != b.scheduler.issued()
+                || a.scheduler.declined() != b.scheduler.declined()
+            {
+                return Err(format!(
+                    "prefetch decisions diverged: {}/{} vs {}/{}",
+                    a.scheduler.issued(),
+                    a.scheduler.declined(),
+                    b.scheduler.issued(),
+                    b.scheduler.declined()
+                ));
+            }
+            for i in 0..agents {
+                let (sa, sb) = (
+                    a.router.agent(i).reconfig_stats(),
+                    b.router.agent(i).reconfig_stats(),
+                );
+                if sa != sb {
+                    return Err(format!("agent {i} accounting diverged: {sa:?} vs {sb:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
     /// Kernel-affinity routing is a pure function of the observed call
     /// sequence: two routers fed the identical interleaving of route /
     /// retire / demand-hint calls make identical placements.
