@@ -1,0 +1,404 @@
+"""Deterministic ONNX fixture generator for the Rust importer tests.
+
+Builds small TinyML-class ONNX models (a ResNet-8-style classifier plus two
+tiny coverage models) *without* the ``onnx`` package: the protobuf wire
+format is hand-encoded here, mirroring the hand-rolled decoder in
+``rust/src/tf/onnx.rs``. Alongside each ``.onnx`` file an
+``.expected.json`` golden records a deterministic input and the float32
+logits computed by a NumPy reference forward pass (BatchNormalization
+evaluated *unfolded*, so the goldens also pin down the importer's BN-fold
+arithmetic).
+
+Usage::
+
+    python -m compile.onnx_fixture [out_dir]   # default rust/tests/fixtures/onnx
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import zlib
+from pathlib import Path
+
+import numpy as np
+
+SEED = 0x5EED_1027  # project number 16ES1027, per the paper's acknowledgment
+
+
+def _rng_stable(tag: str) -> np.random.Generator:
+    return np.random.default_rng([SEED, zlib.crc32(tag.encode())])
+
+
+# ---------------------------------------------------------------------------
+# Protobuf wire-format encoder (the subset ONNX needs).
+# ---------------------------------------------------------------------------
+
+
+def _varint(v: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def _key(field: int, wire: int) -> bytes:
+    return _varint((field << 3) | wire)
+
+
+def _ld(field: int, payload: bytes) -> bytes:
+    return _key(field, 2) + _varint(len(payload)) + payload
+
+
+def _s(field: int, text: str) -> bytes:
+    return _ld(field, text.encode())
+
+
+def _i(field: int, v: int) -> bytes:
+    return _key(field, 0) + _varint(v & 0xFFFFFFFFFFFFFFFF)
+
+
+def _f(field: int, v: float) -> bytes:
+    return _key(field, 5) + np.float32(v).tobytes()
+
+
+def tensor_f32(name: str, array: np.ndarray) -> bytes:
+    """TensorProto with FLOAT raw_data (the common exporter layout)."""
+    a = np.ascontiguousarray(array, dtype=np.float32)
+    b = b"".join(_i(1, d) for d in a.shape)
+    b += _i(2, 1)  # data_type FLOAT
+    b += _s(8, name)
+    b += _ld(9, a.tobytes())  # raw_data, little-endian
+    return b
+
+
+def tensor_i64(name: str, values: list[int]) -> bytes:
+    b = _i(1, len(values))
+    b += _i(2, 7)  # data_type INT64
+    b += _s(8, name)
+    b += _ld(9, np.asarray(values, dtype="<i8").tobytes())
+    return b
+
+
+def attr_int(name: str, v: int) -> bytes:
+    return _s(1, name) + _i(3, v) + _i(20, 2)
+
+
+def attr_float(name: str, v: float) -> bytes:
+    return _s(1, name) + _f(2, v) + _i(20, 1)
+
+
+def attr_ints(name: str, values: list[int]) -> bytes:
+    return _s(1, name) + b"".join(_i(8, v) for v in values) + _i(20, 7)
+
+
+def onnx_node(op: str, inputs: list[str], outputs: list[str], attrs: list[bytes] = ()) -> bytes:
+    b = b"".join(_s(1, i) for i in inputs)
+    b += b"".join(_s(2, o) for o in outputs)
+    b += _s(4, op)
+    b += b"".join(_ld(5, a) for a in attrs)
+    return b
+
+
+def value_info(name: str, dims: list[int]) -> bytes:
+    shape = b"".join(_ld(1, _i(1, d)) for d in dims)
+    tensor_type = _i(1, 1) + _ld(2, shape)  # elem_type FLOAT + shape
+    return _s(1, name) + _ld(2, _ld(1, tensor_type))
+
+
+def onnx_model(nodes, initializers, inputs, outputs) -> bytes:
+    g = b"".join(_ld(1, n) for n in nodes)
+    g += b"".join(_ld(5, t) for t in initializers)
+    g += b"".join(_ld(11, i) for i in inputs)
+    g += b"".join(_ld(12, o) for o in outputs)
+    opset = _s(1, "") + _i(2, 13)
+    return _i(1, 8) + _ld(7, g) + _ld(8, opset)  # ir_version 8, opset 13
+
+
+# ---------------------------------------------------------------------------
+# NumPy float32 reference semantics (BN evaluated unfolded).
+# ---------------------------------------------------------------------------
+
+
+def ref_conv(x, w, b, pad):
+    """NCHW-without-N conv: x (C,H,W), w (F,C,KH,KW), stride 1."""
+    c, h, wd = x.shape
+    f, _, kh, kw = w.shape
+    xp = np.zeros((c, h + 2 * pad, wd + 2 * pad), dtype=np.float32)
+    xp[:, pad : pad + h, pad : pad + wd] = x
+    oh, ow = xp.shape[1] - kh + 1, xp.shape[2] - kw + 1
+    out = np.empty((f, oh, ow), dtype=np.float32)
+    for fi in range(f):
+        for oy in range(oh):
+            for ox in range(ow):
+                acc = np.float32(b[fi])
+                patch = xp[:, oy : oy + kh, ox : ox + kw]
+                acc = np.float32(acc + np.sum(patch.astype(np.float32) * w[fi], dtype=np.float32))
+                out[fi, oy, ox] = acc
+    return out
+
+
+def ref_bn(x, scale, beta, mean, var, eps):
+    k = (scale / np.sqrt(var + np.float32(eps), dtype=np.float32)).astype(np.float32)
+    return ((x - mean[:, None, None]) * k[:, None, None] + beta[:, None, None]).astype(np.float32)
+
+
+def ref_maxpool2(x):
+    c, h, w = x.shape
+    return x[:, : h // 2 * 2, : w // 2 * 2].reshape(c, h // 2, 2, w // 2, 2).max(axis=(2, 4))
+
+
+def ref_gap(x):
+    c, h, w = x.shape
+    inv = np.float32(1.0) / np.float32(h * w)
+    return (x.reshape(c, -1).sum(axis=1, dtype=np.float32) * inv).reshape(c, 1, 1).astype(np.float32)
+
+
+def relu(x):
+    return np.maximum(x, np.float32(0.0))
+
+
+def softmax(x):
+    m = x.max()
+    e = np.exp(x - m, dtype=np.float32)
+    return (e / e.sum(dtype=np.float32)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fixture models.
+# ---------------------------------------------------------------------------
+
+
+def _bn_params(tag: str, ch: int):
+    g = _rng_stable(tag)
+    scale = g.uniform(0.5, 1.5, ch).astype(np.float32)
+    beta = g.uniform(-0.2, 0.2, ch).astype(np.float32)
+    mean = g.uniform(-0.5, 0.5, ch).astype(np.float32)
+    var = g.uniform(0.5, 2.0, ch).astype(np.float32)
+    return scale, beta, mean, var
+
+
+def _conv_w(tag: str, f: int, c: int, k: int):
+    g = _rng_stable(tag)
+    w = (g.standard_normal((f, c, k, k)) * (1.5 / np.sqrt(c * k * k))).astype(np.float32)
+    b = g.uniform(-0.1, 0.1, f).astype(np.float32)
+    return w, b
+
+
+def resnet8():
+    """ResNet-8-class TinyML classifier: stem + 2 residual stages + head.
+
+    Input (1,3,8,8) → logits (1,10). Exercises Conv+BN+Relu folding,
+    residual Add (identity and 1x1-conv projection skips), MaxPool,
+    GlobalAveragePool, Flatten and Gemm.
+    """
+    nodes, inits = [], []
+    eps = 1e-5
+
+    def conv_bn(tag, x_name, out, f, c, k, pad, bn=True):
+        w, b = _conv_w(f"{tag}_w", f, c, k)
+        inits.append(tensor_f32(f"{tag}.w", w))
+        inits.append(tensor_f32(f"{tag}.b", b))
+        conv_out = f"{out}_conv" if bn else out
+        nodes.append(
+            onnx_node(
+                "Conv",
+                [x_name, f"{tag}.w", f"{tag}.b"],
+                [conv_out],
+                [attr_ints("pads", [pad] * 4), attr_ints("strides", [1, 1]), attr_int("group", 1)],
+            )
+        )
+        params = None
+        if bn:
+            params = _bn_params(f"{tag}_bn", f)
+            for suffix, arr in zip(("scale", "beta", "mean", "var"), params):
+                inits.append(tensor_f32(f"{tag}.{suffix}", arr))
+            nodes.append(
+                onnx_node(
+                    "BatchNormalization",
+                    [conv_out, f"{tag}.scale", f"{tag}.beta", f"{tag}.mean", f"{tag}.var"],
+                    [out],
+                    [attr_float("epsilon", eps)],
+                )
+            )
+        return (w, b, params)
+
+    def fwd_conv_bn(x, p, pad):
+        w, b, params = p
+        y = ref_conv(x, w, b, pad)
+        if params is not None:
+            y = ref_bn(y, *params, eps)
+        return y
+
+    # Stem: 3 → 8 channels.
+    stem = conv_bn("stem", "x", "stem_bn", 8, 3, 3, 1)
+    nodes.append(onnx_node("Relu", ["stem_bn"], ["stem_r"]))
+    # Stage 1: identity-skip residual block at 8 channels.
+    s1a = conv_bn("s1a", "stem_r", "s1a_bn", 8, 8, 3, 1)
+    nodes.append(onnx_node("Relu", ["s1a_bn"], ["s1a_r"]))
+    s1b = conv_bn("s1b", "s1a_r", "s1b_bn", 8, 8, 3, 1)
+    nodes.append(onnx_node("Add", ["s1b_bn", "stem_r"], ["s1_sum"]))
+    nodes.append(onnx_node("Relu", ["s1_sum"], ["s1_r"]))
+    nodes.append(
+        onnx_node(
+            "MaxPool",
+            ["s1_r"],
+            ["p1"],
+            [attr_ints("kernel_shape", [2, 2]), attr_ints("strides", [2, 2])],
+        )
+    )
+    # Stage 2: projection-skip residual block, 8 → 16 channels.
+    s2a = conv_bn("s2a", "p1", "s2a_bn", 16, 8, 3, 1)
+    nodes.append(onnx_node("Relu", ["s2a_bn"], ["s2a_r"]))
+    s2b = conv_bn("s2b", "s2a_r", "s2b_bn", 16, 16, 3, 1)
+    s2p = conv_bn("s2p", "p1", "s2_proj", 16, 8, 1, 0, bn=False)
+    nodes.append(onnx_node("Add", ["s2b_bn", "s2_proj"], ["s2_sum"]))
+    nodes.append(onnx_node("Relu", ["s2_sum"], ["s2_r"]))
+    nodes.append(
+        onnx_node(
+            "MaxPool",
+            ["s2_r"],
+            ["p2"],
+            [attr_ints("kernel_shape", [2, 2]), attr_ints("strides", [2, 2])],
+        )
+    )
+    # Stage 3: plain Conv+BN+Relu at 32 channels, then the head.
+    s3 = conv_bn("s3", "p2", "s3_bn", 32, 16, 3, 1)
+    nodes.append(onnx_node("Relu", ["s3_bn"], ["s3_r"]))
+    nodes.append(onnx_node("GlobalAveragePool", ["s3_r"], ["gap"]))
+    nodes.append(onnx_node("Flatten", ["gap"], ["flat"], [attr_int("axis", 1)]))
+    g = _rng_stable("head_fc")
+    fc_w = (g.standard_normal((32, 10)) * 0.3).astype(np.float32)
+    fc_b = g.uniform(-0.1, 0.1, 10).astype(np.float32)
+    inits.append(tensor_f32("head.w", fc_w))
+    inits.append(tensor_f32("head.b", fc_b))
+    nodes.append(onnx_node("Gemm", ["flat", "head.w", "head.b"], ["logits"], [attr_int("transB", 0)]))
+
+    model = onnx_model(nodes, inits, [value_info("x", [1, 3, 8, 8])], [value_info("logits", [1, 10])])
+
+    x = _rng_stable("resnet8_input").uniform(-1.0, 1.0, (3, 8, 8)).astype(np.float32)
+    h = relu(fwd_conv_bn(x, stem, 1))
+    a = relu(fwd_conv_bn(h, s1a, 1))
+    b = fwd_conv_bn(a, s1b, 1)
+    h = ref_maxpool2(relu((b + h).astype(np.float32)))
+    a = relu(fwd_conv_bn(h, s2a, 1))
+    b = fwd_conv_bn(a, s2b, 1)
+    p = fwd_conv_bn(h, s2p, 0)
+    h = ref_maxpool2(relu((b + p).astype(np.float32)))
+    h = relu(fwd_conv_bn(h, s3, 1))
+    flat = ref_gap(h).reshape(1, 32)
+    logits = (flat @ fc_w + fc_b).astype(np.float32)
+    return model, x.reshape(1, 3, 8, 8), logits
+
+
+def tiny_convnet():
+    """Conv(pad 0) → Relu → MaxPool → Flatten → Gemm(transB=1)."""
+    w, b = _conv_w("tiny_conv", 4, 1, 3)
+    g = _rng_stable("tiny_fc_t")
+    fc_wt = (g.standard_normal((5, 16)) * 0.4).astype(np.float32)  # stored (N,K)
+    fc_b = g.uniform(-0.2, 0.2, 5).astype(np.float32)
+    nodes = [
+        onnx_node("Conv", ["x", "c.w", "c.b"], ["c1"], [attr_ints("pads", [0, 0, 0, 0])]),
+        onnx_node("Relu", ["c1"], ["r1"]),
+        onnx_node(
+            "MaxPool",
+            ["r1"],
+            ["p1"],
+            [attr_ints("kernel_shape", [2, 2]), attr_ints("strides", [2, 2])],
+        ),
+        onnx_node("Flatten", ["p1"], ["flat"], [attr_int("axis", 1)]),
+        onnx_node("Gemm", ["flat", "f.w", "f.b"], ["logits"], [attr_int("transB", 1)]),
+    ]
+    inits = [
+        tensor_f32("c.w", w),
+        tensor_f32("c.b", b),
+        tensor_f32("f.w", fc_wt),
+        tensor_f32("f.b", fc_b),
+    ]
+    model = onnx_model(nodes, inits, [value_info("x", [1, 1, 6, 6])], [value_info("logits", [1, 5])])
+
+    x = _rng_stable("tiny_convnet_input").uniform(-1.0, 1.0, (1, 6, 6)).astype(np.float32)
+    h = ref_maxpool2(relu(ref_conv(x, w, b, 0)))
+    logits = (h.reshape(1, 16) @ fc_wt.T + fc_b).astype(np.float32)
+    return model, x.reshape(1, 1, 6, 6), logits
+
+
+def tiny_concat_bn():
+    """Two conv branches (one BN-folded) → channel Concat → GAP → MatMul → Softmax."""
+    wa, ba = _conv_w("cat_a", 3, 2, 1)
+    wb, bb = _conv_w("cat_b", 3, 2, 3)
+    bn = _bn_params("cat_bn", 3)
+    eps = 1e-3
+    g = _rng_stable("cat_fc")
+    fc_w = (g.standard_normal((6, 4)) * 0.5).astype(np.float32)
+    nodes = [
+        onnx_node("Conv", ["x", "a.w", "a.b"], ["a1"]),
+        onnx_node(
+            "BatchNormalization",
+            ["a1", "bn.scale", "bn.beta", "bn.mean", "bn.var"],
+            ["a_bn"],
+            [attr_float("epsilon", eps)],
+        ),
+        onnx_node("Relu", ["a_bn"], ["a_r"]),
+        onnx_node("Conv", ["x", "b.w", "b.b"], ["b1"], [attr_ints("pads", [1, 1, 1, 1])]),
+        onnx_node("Relu", ["b1"], ["b_r"]),
+        onnx_node("Concat", ["a_r", "b_r"], ["cat"], [attr_int("axis", 1)]),
+        onnx_node("GlobalAveragePool", ["cat"], ["gap"]),
+        onnx_node("Flatten", ["gap"], ["flat"]),
+        onnx_node("MatMul", ["flat", "f.w"], ["logits"]),
+        onnx_node("Softmax", ["logits"], ["probs"], [attr_int("axis", -1)]),
+    ]
+    inits = [
+        tensor_f32("a.w", wa),
+        tensor_f32("a.b", ba),
+        tensor_f32("bn.scale", bn[0]),
+        tensor_f32("bn.beta", bn[1]),
+        tensor_f32("bn.mean", bn[2]),
+        tensor_f32("bn.var", bn[3]),
+        tensor_f32("b.w", wb),
+        tensor_f32("b.b", bb),
+        tensor_f32("f.w", fc_w),
+    ]
+    model = onnx_model(nodes, inits, [value_info("x", [1, 2, 4, 4])], [value_info("probs", [1, 4])])
+
+    x = _rng_stable("tiny_concat_input").uniform(-1.0, 1.0, (2, 4, 4)).astype(np.float32)
+    a = relu(ref_bn(ref_conv(x, wa, ba, 0), *bn, eps))
+    b = relu(ref_conv(x, wb, bb, 1))
+    h = ref_gap(np.concatenate([a, b], axis=0))
+    probs = softmax((h.reshape(1, 6) @ fc_w).astype(np.float32))
+    return model, x.reshape(1, 2, 4, 4), probs
+
+
+FIXTURES = {
+    "resnet8": resnet8,
+    "tiny_convnet": tiny_convnet,
+    "tiny_concat_bn": tiny_concat_bn,
+}
+
+
+def write_fixtures(out_dir: Path) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name, build in FIXTURES.items():
+        model, x, y = build()
+        (out_dir / f"{name}.onnx").write_bytes(model)
+        golden = {
+            "input": {"shape": list(x.shape), "data": [float(v) for v in x.reshape(-1)]},
+            "output": {"shape": list(y.shape), "data": [float(v) for v in y.reshape(-1)]},
+        }
+        (out_dir / f"{name}.expected.json").write_text(json.dumps(golden, indent=1) + "\n")
+        print(f"wrote {out_dir / name}.onnx ({len(model)} bytes), output shape {list(y.shape)}")
+
+
+def main() -> None:
+    default = Path(__file__).resolve().parents[2] / "rust" / "tests" / "fixtures" / "onnx"
+    out = Path(sys.argv[1]) if len(sys.argv) > 1 else default
+    write_fixtures(out)
+
+
+if __name__ == "__main__":
+    main()

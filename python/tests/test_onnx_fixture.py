@@ -1,0 +1,86 @@
+"""The ONNX fixture generator must be deterministic and well-framed.
+
+A minimal protobuf walker (mirroring the Rust decoder's framing rules)
+checks the emitted bytes; byte-for-byte determinism is what lets CI
+regenerate the fixtures and diff them against the committed files.
+"""
+
+import numpy as np
+import pytest
+
+from compile import onnx_fixture as fx
+
+
+def _varint(b, i):
+    v = s = 0
+    while True:
+        x = b[i]
+        i += 1
+        v |= (x & 0x7F) << s
+        if not x & 0x80:
+            return v, i
+        s += 7
+
+
+def _walk(b):
+    i = 0
+    fields = {}
+    while i < len(b):
+        k, i = _varint(b, i)
+        f, w = k >> 3, k & 7
+        if w == 0:
+            v, i = _varint(b, i)
+        elif w == 2:
+            n, i = _varint(b, i)
+            v = b[i : i + n]
+            i += n
+        elif w == 5:
+            v = b[i : i + 4]
+            i += 4
+        else:
+            raise AssertionError(f"unexpected wire type {w}")
+        fields.setdefault(f, []).append(v)
+    return fields
+
+
+@pytest.mark.parametrize("name", sorted(fx.FIXTURES))
+def test_fixture_bytes_are_deterministic(name):
+    a_model, a_x, a_y = fx.FIXTURES[name]()
+    b_model, b_x, b_y = fx.FIXTURES[name]()
+    assert a_model == b_model
+    np.testing.assert_array_equal(a_x, b_x)
+    np.testing.assert_array_equal(a_y, b_y)
+
+
+@pytest.mark.parametrize("name", sorted(fx.FIXTURES))
+def test_fixture_protobuf_framing(name):
+    model_bytes, x, y = fx.FIXTURES[name]()
+    m = _walk(model_bytes)
+    assert 7 in m, "ModelProto must carry a GraphProto (field 7)"
+    g = _walk(m[7][0])
+    assert g[1], "graph must have nodes"
+    assert len(g[11]) == 1, "exactly one data input"
+    assert len(g[12]) == 1, "exactly one output"
+    # Every node must parse and carry an op_type.
+    for n in g[1]:
+        node = _walk(n)
+        assert node[4][0].decode(), "op_type"
+    # Every initializer must carry FLOAT or INT64 raw data matching dims.
+    for t in g[5]:
+        tp = _walk(t)
+        dims = tp.get(1, [])
+        numel = int(np.prod(dims)) if dims else 1
+        dtype = tp[2][0]
+        width = 4 if dtype == 1 else 8
+        assert len(tp[9][0]) == numel * width, tp[8][0]
+    assert x.dtype == np.float32 and y.dtype == np.float32
+
+
+def test_resnet8_has_batchnorm_to_fold():
+    model_bytes, _, _ = fx.FIXTURES["resnet8"]()
+    g = _walk(_walk(model_bytes)[7][0])
+    ops = [_walk(n)[4][0].decode() for n in g[1]]
+    assert ops.count("BatchNormalization") == 6
+    assert ops.count("Conv") == 7
+    assert ops.count("Add") == 2  # one identity skip, one projection skip
+    assert "Gemm" in ops and "GlobalAveragePool" in ops and "MaxPool" in ops

@@ -12,6 +12,7 @@
 //! tf-fpga crossover                 # reconfiguration amortization point
 //! tf-fpga run-mnist [--batches 32]  # end-to-end CNN inference
 //! tf-fpga export-demo [dir]         # write demo model bundles
+//! tf-fpga import-onnx m.onnx out/   # import an ONNX model as a bundle
 //! tf-fpga serve --model <dir>       # serve an exported bundle (async)
 //! tf-fpga serve --fpga-pool 2       # shard serving across an FPGA pool
 //! tf-fpga serve --http 0.0.0.0:8080 # HTTP frontend with admission control
@@ -23,10 +24,13 @@ use std::collections::HashMap;
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, flags, positional) = parse(&args)?;
-    // Only export-demo takes a positional argument (one: the output
-    // directory); any other stray token is almost certainly a typo'd
-    // flag (e.g. `serve async`).
-    let allowed_positionals = usize::from(cmd == "export-demo");
+    // Most commands take no positional arguments; a stray token is almost
+    // certainly a typo'd flag (e.g. `serve async`).
+    let allowed_positionals = match cmd.as_str() {
+        "export-demo" => 1,            // output directory
+        "import-onnx" => 2,            // model.onnx + bundle directory
+        _ => 0,
+    };
     if let Some(stray) = positional.get(allowed_positionals) {
         bail!("unexpected argument '{stray}' (try `tf-fpga help`)");
     }
@@ -121,6 +125,12 @@ fn main() -> Result<()> {
                 .or_else(|| flags.get("out").map(String::as_str))
                 .unwrap_or("demo-bundles"),
         ),
+        "import-onnx" => {
+            let (Some(model), Some(dir)) = (positional.first(), positional.get(1)) else {
+                bail!("usage: tf-fpga import-onnx <model.onnx> <bundle-dir>");
+            };
+            import_onnx(model, dir)
+        }
         "ablate-hls" => ablate_hls(),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -168,6 +178,11 @@ commands:
                            gracefully after T seconds (0 = run until killed)
   export-demo [DIR]        write the built-in demo model bundles to DIR
                            (mnist, mnist_layers, tiny_fc; default ./demo-bundles)
+  import-onnx FILE DIR     import an ONNX model (Conv/BN/Relu/MaxPool/Add/
+                           Concat/GlobalAveragePool/Gemm/Softmax subset) as a
+                           serveable bundle; BatchNormalization is folded into
+                           the preceding Conv/Gemm weights at import time.
+                           Serve it with `serve --model DIR [--http ...]`
   ablate-hls               pre-synthesized vs online-synthesis (OpenCL) flow costs
 ";
 
@@ -767,6 +782,26 @@ fn export_demo(dir: &str) -> Result<()> {
         );
     }
     println!("\nserve one with: tf-fpga serve --model {dir}/tiny_fc");
+    Ok(())
+}
+
+/// Import an ONNX model and write it out as a serveable bundle directory
+/// (the same `model.json` format `export-demo` produces).
+fn import_onnx(model: &str, dir: &str) -> Result<()> {
+    let bundle = tf_fpga::tf::onnx::import_onnx_file(model).map_err(|e| anyhow::anyhow!("{e}"))?;
+    bundle.save(dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let sig = &bundle.signatures[0];
+    println!(
+        "imported '{}' -> {} ({} graph nodes)",
+        bundle.name,
+        std::path::Path::new(dir).join("model.json").display(),
+        bundle.graph.len(),
+    );
+    println!(
+        "  serve signature: {} {:?} -> {} {:?}",
+        sig.inputs[0].name, sig.inputs[0].shape, sig.outputs[0].name, sig.outputs[0].shape
+    );
+    println!("  serve it with: tf-fpga serve --model {dir} --http 127.0.0.1:8080");
     Ok(())
 }
 

@@ -28,6 +28,14 @@ pub fn softmax_f32(x: &Tensor) -> Result<Tensor> {
     for i in 0..m {
         let row = &d[i * n..(i + 1) * n];
         let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        if max == f32::NEG_INFINITY {
+            // Every logit is -inf: `v - max` would be NaN for the whole
+            // row. All entries are equally (in)finitely unlikely, so the
+            // limit distribution is uniform — same as equal finite logits.
+            let u = 1.0 / n as f32;
+            out[i * n..(i + 1) * n].fill(u);
+            continue;
+        }
         let mut sum = 0f32;
         for (j, &v) in row.iter().enumerate() {
             let e = (v - max).exp();
@@ -79,6 +87,48 @@ mod tests {
         let x = Tensor::from_f32(&[1, 3], vec![1000.0, 1001.0, 1002.0]).unwrap();
         let y = softmax_f32(&x).unwrap();
         assert!(y.as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn softmax_all_neg_inf_row_is_uniform_not_nan() {
+        // One all--inf row between two ordinary rows: the degenerate row
+        // must come back uniform, and must not contaminate its neighbors.
+        let x = Tensor::from_f32(
+            &[3, 4],
+            vec![
+                1.0,
+                2.0,
+                3.0,
+                4.0,
+                f32::NEG_INFINITY,
+                f32::NEG_INFINITY,
+                f32::NEG_INFINITY,
+                f32::NEG_INFINITY,
+                -1.0,
+                0.0,
+                1.0,
+                2.0,
+            ],
+        )
+        .unwrap();
+        let y = softmax_f32(&x).unwrap();
+        let rows: Vec<&[f32]> = y.as_f32().unwrap().chunks(4).collect();
+        assert!(rows[1].iter().all(|&v| v == 0.25), "degenerate row uniform: {:?}", rows[1]);
+        for r in [rows[0], rows[2]] {
+            assert!(r.iter().all(|v| v.is_finite()), "neighbor row finite: {r:?}");
+            let s: f32 = r.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_partial_neg_inf_row_stays_well_defined() {
+        // -inf logits in an otherwise finite row get probability 0.
+        let x = Tensor::from_f32(&[1, 3], vec![f32::NEG_INFINITY, 0.0, 0.0]).unwrap();
+        let y = softmax_f32(&x).unwrap();
+        let r = y.as_f32().unwrap();
+        assert_eq!(r[0], 0.0);
+        assert!((r[1] - 0.5).abs() < 1e-6 && (r[2] - 0.5).abs() < 1e-6, "{r:?}");
     }
 
     #[test]

@@ -137,6 +137,80 @@ pub fn conv2d_fixed_f32_relu(
     crate::ops::relu_f32(&conv2d_fixed_f32(x, weights, f, c, kh, kw)?)
 }
 
+/// Generic float32 conv with weights and bias as *tensors* (graph inputs,
+/// not baked-in role weights): `x (C,H,W)`, `w (F,C,KH,KW)`, `b (F)`,
+/// symmetric zero padding `pad` on both spatial axes, stride 1 —
+/// `(F, H+2p-KH+1, W+2p-KW+1)`. This is the landing op for imported ONNX
+/// `Conv` nodes, whose weights arrive as graph constants rather than
+/// pre-registered WeightBank entries.
+pub fn conv2d_f32(x: &Tensor, w: &Tensor, b: &Tensor, pad: usize) -> Result<Tensor> {
+    let xs = x.shape();
+    let ws = w.shape();
+    let bs = b.shape();
+    if xs.len() != 3 {
+        return Err(HsaError::KernelFailed(format!("conv2d input rank {} != 3", xs.len())));
+    }
+    if ws.len() != 4 {
+        return Err(HsaError::KernelFailed(format!("conv2d weight rank {} != 4", ws.len())));
+    }
+    let (c, h, wi) = (xs[0], xs[1], xs[2]);
+    let (f, wc, kh, kw) = (ws[0], ws[1], ws[2], ws[3]);
+    if wc != c {
+        return Err(HsaError::KernelFailed(format!(
+            "conv2d weight expects {wc} channels, input has {c}"
+        )));
+    }
+    if bs != [f] {
+        return Err(HsaError::KernelFailed(format!(
+            "conv2d bias shape {bs:?} != [{f}]"
+        )));
+    }
+    if h + 2 * pad < kh || wi + 2 * pad < kw {
+        return Err(HsaError::KernelFailed(format!(
+            "padded input {}x{} smaller than filter {kh}x{kw}",
+            h + 2 * pad,
+            wi + 2 * pad
+        )));
+    }
+    let (oh, ow) = (h + 2 * pad - kh + 1, wi + 2 * pad - kw + 1);
+    let xd = x.as_f32()?;
+    let wd = w.as_f32()?;
+    let bd = b.as_f32()?;
+    let mut out = vec![0f32; f * oh * ow];
+    for fi in 0..f {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = bd[fi];
+                for ci in 0..c {
+                    for a in 0..kh {
+                        // Input row oy + a - pad; skip rows in the zero border.
+                        let iy = (oy + a).wrapping_sub(pad);
+                        if iy >= h {
+                            continue;
+                        }
+                        let wbase = ((fi * c + ci) * kh + a) * kw;
+                        for bk in 0..kw {
+                            let ix = (ox + bk).wrapping_sub(pad);
+                            if ix >= wi {
+                                continue;
+                            }
+                            acc += xd[ci * h * wi + iy * wi + ix] * wd[wbase + bk];
+                        }
+                    }
+                }
+                out[fi * oh * ow + oy * ow + ox] = acc;
+            }
+        }
+    }
+    Ok(Tensor::from_f32(&[f, oh, ow], out)?)
+}
+
+/// Fused generic conv + ReLU (`relu_f32 ∘ conv2d_f32`, bitwise identical
+/// to the unfused pair by construction).
+pub fn conv2d_f32_relu(x: &Tensor, w: &Tensor, b: &Tensor, pad: usize) -> Result<Tensor> {
+    crate::ops::relu_f32(&conv2d_f32(x, w, b, pad)?)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,6 +283,74 @@ mod tests {
         let seqf = crate::ops::relu_f32(&conv2d_fixed_f32(&xf, &wf, 1, 1, 2, 2).unwrap())
             .unwrap();
         assert_eq!(fusedf, seqf);
+    }
+
+    #[test]
+    fn conv2d_f32_matches_fixed_conv_when_unpadded_zero_bias() {
+        let x = Tensor::from_f32(&[2, 4, 4], (0..32).map(|v| v as f32 * 0.5 - 3.0).collect())
+            .unwrap();
+        let wdata: Vec<f32> = (0..2 * 2 * 3 * 3).map(|v| (v as f32 - 8.0) * 0.25).collect();
+        let w = Tensor::from_f32(&[2, 2, 3, 3], wdata.clone()).unwrap();
+        let b = Tensor::from_f32(&[2], vec![0.0, 0.0]).unwrap();
+        let y = conv2d_f32(&x, &w, &b, 0).unwrap();
+        let want = conv2d_fixed_f32(&x, &wdata, 2, 2, 3, 3).unwrap();
+        assert_eq!(y.shape(), want.shape());
+        for (a, g) in want.as_f32().unwrap().iter().zip(y.as_f32().unwrap()) {
+            assert!((a - g).abs() < 1e-5, "{a} vs {g}");
+        }
+    }
+
+    #[test]
+    fn conv2d_f32_same_padding_keeps_spatial_dims() {
+        // 3x3 filter, pad 1: output spatial dims equal input's. A 1x1
+        // all-ones filter with pad 0 plus bias checks the bias add.
+        let x = Tensor::from_f32(&[1, 3, 3], (1..=9).map(|v| v as f32).collect()).unwrap();
+        let w = Tensor::from_f32(&[1, 1, 3, 3], vec![0., 0., 0., 0., 1., 0., 0., 0., 0.])
+            .unwrap();
+        let b = Tensor::from_f32(&[1], vec![10.0]).unwrap();
+        let y = conv2d_f32(&x, &w, &b, 1).unwrap();
+        assert_eq!(y.shape(), &[1, 3, 3]);
+        // Center-tap identity + bias: y = x + 10, padding contributed zeros.
+        let got = y.as_f32().unwrap();
+        for (i, &v) in got.iter().enumerate() {
+            assert_eq!(v, (i + 1) as f32 + 10.0);
+        }
+    }
+
+    #[test]
+    fn conv2d_f32_padding_border_sums() {
+        // 2x2 all-ones filter over a 2x2 ones image with pad 1: corner
+        // outputs see 1 input cell, edges 2, center 4.
+        let x = Tensor::from_f32(&[1, 2, 2], vec![1.0; 4]).unwrap();
+        let w = Tensor::from_f32(&[1, 1, 2, 2], vec![1.0; 4]).unwrap();
+        let b = Tensor::from_f32(&[1], vec![0.0]).unwrap();
+        let y = conv2d_f32(&x, &w, &b, 1).unwrap();
+        assert_eq!(y.shape(), &[1, 3, 3]);
+        assert_eq!(y.as_f32().unwrap(), &[1., 2., 1., 2., 4., 2., 1., 2., 1.]);
+    }
+
+    #[test]
+    fn conv2d_f32_fused_relu_matches_sequential() {
+        let x = Tensor::from_f32(&[1, 3, 3], (0..9).map(|v| v as f32 - 4.0).collect())
+            .unwrap();
+        let w = Tensor::from_f32(&[1, 1, 2, 2], vec![1.0, -1.0, -1.0, 1.0]).unwrap();
+        let b = Tensor::from_f32(&[1], vec![-0.5]).unwrap();
+        let fused = conv2d_f32_relu(&x, &w, &b, 1).unwrap();
+        let seq = crate::ops::relu_f32(&conv2d_f32(&x, &w, &b, 1).unwrap()).unwrap();
+        assert_eq!(fused, seq);
+    }
+
+    #[test]
+    fn conv2d_f32_shape_mismatches_rejected() {
+        let x = Tensor::zeros(&[2, 4, 4], crate::tf::dtype::DType::F32);
+        let w = Tensor::zeros(&[1, 3, 3, 3], crate::tf::dtype::DType::F32);
+        let b = Tensor::zeros(&[1], crate::tf::dtype::DType::F32);
+        assert!(conv2d_f32(&x, &w, &b, 0).is_err(), "channel mismatch");
+        let w = Tensor::zeros(&[1, 2, 3, 3], crate::tf::dtype::DType::F32);
+        let b2 = Tensor::zeros(&[2], crate::tf::dtype::DType::F32);
+        assert!(conv2d_f32(&x, &w, &b2, 0).is_err(), "bias length mismatch");
+        let tiny = Tensor::zeros(&[2, 2, 2], crate::tf::dtype::DType::F32);
+        assert!(conv2d_f32(&tiny, &w, &b, 0).is_err(), "input smaller than filter");
     }
 
     #[test]

@@ -39,9 +39,87 @@ pub fn bias_add_f32(x: &Tensor, b: &Tensor) -> Result<Tensor> {
     Ok(Tensor::from_f32(x.shape(), out)?)
 }
 
+/// Concatenate f32 tensors along `axis`. All inputs must share rank and
+/// every dimension except `axis` (ONNX `Concat` semantics on our
+/// batchless layouts).
+pub fn concat_f32(inputs: &[&Tensor], axis: usize) -> Result<Tensor> {
+    let first = inputs.first().ok_or_else(|| {
+        HsaError::KernelFailed("concat needs at least one input".into())
+    })?;
+    let rank = first.rank();
+    if axis >= rank {
+        return Err(HsaError::KernelFailed(format!(
+            "concat axis {axis} out of range for rank {rank}"
+        )));
+    }
+    let mut out_shape = first.shape().to_vec();
+    out_shape[axis] = 0;
+    for t in inputs {
+        let s = t.shape();
+        if s.len() != rank {
+            return Err(HsaError::KernelFailed(format!(
+                "concat rank mismatch {} vs {rank}",
+                s.len()
+            )));
+        }
+        for (d, (&a, &b)) in s.iter().zip(first.shape()).enumerate() {
+            if d != axis && a != b {
+                return Err(HsaError::KernelFailed(format!(
+                    "concat dim {d} mismatch: {s:?} vs {:?} (axis {axis})",
+                    first.shape()
+                )));
+            }
+        }
+        out_shape[axis] += s[axis];
+    }
+    // Row-major: copy per "outer block". outer = product of dims before
+    // axis; each input contributes a contiguous run of axis*inner elements
+    // per outer block.
+    let outer: usize = first.shape()[..axis].iter().product();
+    let inner: usize = first.shape()[axis + 1..].iter().product();
+    let mut out = Vec::with_capacity(out_shape.iter().product());
+    let data: Vec<&[f32]> = inputs.iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+    for o in 0..outer {
+        for (t, d) in inputs.iter().zip(&data) {
+            let run = t.shape()[axis] * inner;
+            out.extend_from_slice(&d[o * run..(o + 1) * run]);
+        }
+    }
+    Ok(Tensor::from_f32(&out_shape, out)?)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn concat_axis0_stacks_channels() {
+        let a = Tensor::from_f32(&[1, 2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_f32(&[2, 2, 2], (5..13).map(|v| v as f32).collect()).unwrap();
+        let y = concat_f32(&[&a, &b], 0).unwrap();
+        assert_eq!(y.shape(), &[3, 2, 2]);
+        assert_eq!(y.as_f32().unwrap(), &(1..13).map(|v| v as f32).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn concat_inner_axis_interleaves_blocks() {
+        let a = Tensor::from_f32(&[2, 1], vec![1., 3.]).unwrap();
+        let b = Tensor::from_f32(&[2, 2], vec![10., 11., 30., 31.]).unwrap();
+        let y = concat_f32(&[&a, &b], 1).unwrap();
+        assert_eq!(y.shape(), &[2, 3]);
+        assert_eq!(y.as_f32().unwrap(), &[1., 10., 11., 3., 30., 31.]);
+    }
+
+    #[test]
+    fn concat_mismatches_rejected() {
+        let a = Tensor::zeros(&[1, 2, 2], crate::tf::dtype::DType::F32);
+        let b = Tensor::zeros(&[1, 3, 2], crate::tf::dtype::DType::F32);
+        assert!(concat_f32(&[&a, &b], 0).is_err(), "non-axis dim mismatch");
+        let c = Tensor::zeros(&[2, 2], crate::tf::dtype::DType::F32);
+        assert!(concat_f32(&[&a, &c], 0).is_err(), "rank mismatch");
+        assert!(concat_f32(&[&a], 3).is_err(), "axis out of range");
+        assert!(concat_f32(&[], 0).is_err(), "empty input list");
+    }
 
     #[test]
     fn add_elementwise() {

@@ -11,8 +11,11 @@ pub mod pool;
 pub mod quant;
 
 pub use activation::{relu_f32, relu_i16, softmax_f32};
-pub use conv2d::{conv2d_fixed_f32, conv2d_fixed_f32_relu, conv2d_fixed_i16, conv2d_fixed_i16_relu};
-pub use elementwise::{add_f32, bias_add_f32};
+pub use conv2d::{
+    conv2d_f32, conv2d_f32_relu, conv2d_fixed_f32, conv2d_fixed_f32_relu, conv2d_fixed_i16,
+    conv2d_fixed_i16_relu,
+};
+pub use elementwise::{add_f32, bias_add_f32, concat_f32};
 pub use matmul::{fc_f32, fc_relu_f32, matmul_f32};
-pub use pool::maxpool2_f32;
+pub use pool::{global_avgpool_f32, maxpool2_f32};
 pub use quant::{dequantize_i16_to_f32, quantize_f32_to_i16};

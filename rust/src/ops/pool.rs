@@ -29,9 +29,52 @@ pub fn maxpool2_f32(x: &Tensor) -> Result<Tensor> {
     Ok(Tensor::from_f32(&[c, h2, w2], out)?)
 }
 
+/// Global average pool over `(C,H,W)` f32 → `(C,1,1)` (ONNX
+/// `GlobalAveragePool` semantics, keeping the spatial rank). Each channel
+/// averages in row-major order, so the reduction is deterministic.
+pub fn global_avgpool_f32(x: &Tensor) -> Result<Tensor> {
+    let s = x.shape();
+    if s.len() != 3 {
+        return Err(HsaError::KernelFailed(format!(
+            "global_avgpool rank {} != 3",
+            s.len()
+        )));
+    }
+    let (c, h, w) = (s[0], s[1], s[2]);
+    if h * w == 0 {
+        return Err(HsaError::KernelFailed("global_avgpool over empty spatial dims".into()));
+    }
+    let d = x.as_f32()?;
+    let mut out = vec![0f32; c];
+    let inv = 1.0 / (h * w) as f32;
+    for ci in 0..c {
+        let mut sum = 0f32;
+        for &v in &d[ci * h * w..(ci + 1) * h * w] {
+            sum += v;
+        }
+        out[ci] = sum * inv;
+    }
+    Ok(Tensor::from_f32(&[c, 1, 1], out)?)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn global_avgpool_averages_each_channel() {
+        let x = Tensor::from_f32(&[2, 2, 2], vec![1., 2., 3., 4., 10., 20., 30., 40.])
+            .unwrap();
+        let y = global_avgpool_f32(&x).unwrap();
+        assert_eq!(y.shape(), &[2, 1, 1]);
+        assert_eq!(y.as_f32().unwrap(), &[2.5, 25.0]);
+    }
+
+    #[test]
+    fn global_avgpool_wrong_rank_rejected() {
+        let x = Tensor::zeros(&[4, 4], crate::tf::dtype::DType::F32);
+        assert!(global_avgpool_f32(&x).is_err());
+    }
 
     #[test]
     fn pools_max_of_each_window() {

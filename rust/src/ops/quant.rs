@@ -4,20 +4,30 @@
 //! saturated; dequantization divides back. `frac_bits` pairs with the conv
 //! roles' accumulator shift.
 
-use crate::hsa::error::Result;
+use crate::hsa::error::{HsaError, Result};
 use crate::tf::tensor::Tensor;
 
+/// Quantize, saturating at the i16 range. Non-finite inputs are rejected
+/// with a named error: NaN would otherwise slip through `clamp` (which
+/// propagates NaN) and be silently zeroed by the saturating `as i16` cast,
+/// turning a poisoned activation into a confident mid-scale value.
 pub fn quantize_f32_to_i16(x: &Tensor, frac_bits: u32) -> Result<Tensor> {
     let scale = (1i64 << frac_bits) as f32;
     let d = x.as_f32()?;
-    let out: Vec<i16> = d
-        .iter()
-        .map(|&v| {
+    let mut out = Vec::with_capacity(d.len());
+    for (i, &v) in d.iter().enumerate() {
+        if !v.is_finite() {
+            return Err(HsaError::KernelFailed(format!(
+                "quantize: non-finite input {v} at index {i} (frac_bits {frac_bits}); \
+                 quantization requires finite f32 values"
+            )));
+        }
+        out.push(
             (v * scale)
                 .round()
-                .clamp(i16::MIN as f32, i16::MAX as f32) as i16
-        })
-        .collect();
+                .clamp(i16::MIN as f32, i16::MAX as f32) as i16,
+        );
+    }
     Ok(Tensor::from_i16(x.shape(), out)?)
 }
 
@@ -47,6 +57,17 @@ mod tests {
         let x = Tensor::from_f32(&[2], vec![1e6, -1e6]).unwrap();
         let q = quantize_f32_to_i16(&x, 8).unwrap();
         assert_eq!(q.as_i16().unwrap(), &[32767, -32768]);
+    }
+
+    #[test]
+    fn non_finite_inputs_are_rejected_not_zeroed() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let x = Tensor::from_f32(&[3], vec![0.5, bad, 0.25]).unwrap();
+            let err = quantize_f32_to_i16(&x, 8).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("non-finite"), "{msg}");
+            assert!(msg.contains("index 1"), "names the offending index: {msg}");
+        }
     }
 
     #[test]

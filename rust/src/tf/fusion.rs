@@ -39,6 +39,7 @@ pub fn fusible_with_relu(op: &OpKind) -> bool {
             | OpKind::Conv3x3I16
             | OpKind::ConvFixedF32 { .. }
             | OpKind::FcFixed { .. }
+            | OpKind::Conv2dF32 { .. }
     )
 }
 
@@ -203,6 +204,28 @@ mod tests {
         let f = find_relu_fusions(&g, &p, &reg, &all(&g, true), &all(&g, false), &fetched);
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].producer, y);
+    }
+
+    #[test]
+    fn conv2d_relu_pair_fuses_under_its_padded_kernel_name() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 4, 4], DType::F32).unwrap();
+        let w = g.constant("w", Tensor::zeros(&[2, 1, 3, 3], DType::F32)).unwrap();
+        let b = g.constant("b", Tensor::zeros(&[2], DType::F32)).unwrap();
+        let c = g.add("c", OpKind::Conv2dF32 { pad: 1 }, &[x, w, b]).unwrap();
+        let r = g.add("r", OpKind::Relu, &[c]).unwrap();
+        g.finalize().unwrap();
+        let mut reg = KernelRegistry::new();
+        reg.register("conv2d:p1", DeviceType::Cpu, 1);
+        reg.register("relu", DeviceType::Cpu, 2);
+        reg.register(fused_relu_name("conv2d:p1"), DeviceType::Cpu, 3);
+        let p = place(&g, &reg, PlacerOptions::default()).unwrap();
+        let mut fetched = all(&g, false);
+        fetched[r.0] = true;
+        let f = find_relu_fusions(&g, &p, &reg, &all(&g, true), &all(&g, false), &fetched);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].producer, f[0].activation), (c, r));
+        assert_eq!(f[0].kernel, "conv2d:p1+relu");
     }
 
     #[test]

@@ -32,10 +32,20 @@ pub enum OpKind {
     ConvFixedF32 { weights: String, filters: usize, cin: usize, kh: usize, kw: usize },
     /// Named fixed-weight fully connected (x only; w/b from artifacts).
     FcFixed { weights_w: String, weights_b: String, out_width: usize },
+    /// Generic f32 conv with weights/bias as graph inputs (x, w, b) and
+    /// symmetric zero padding — the landing op for imported ONNX `Conv`
+    /// nodes. `pad` is baked into the kernel name (`conv2d:p{pad}`), so
+    /// each distinct padding registers its own kernel variant.
+    Conv2dF32 { pad: usize },
     Relu,
     /// Softmax over the last axis (rank-2 f32).
     Softmax,
     MaxPool2,
+    /// Global average pool `(C,H,W)` → `(C,1,1)` (ONNX `GlobalAveragePool`).
+    GlobalAvgPool,
+    /// Concatenate along `axis` (variadic; ONNX `Concat` with the batch
+    /// dim already stripped). Axis is baked into the kernel name.
+    Concat { axis: usize },
     Reshape { shape: Vec<usize> },
     Add,
     Quantize { frac_bits: u32 },
@@ -59,9 +69,12 @@ impl OpKind {
             OpKind::Conv3x3I16 => Some("conv3x3_i16".into()),
             OpKind::ConvFixedF32 { weights, .. } => Some(format!("convf32:{weights}")),
             OpKind::FcFixed { weights_w, .. } => Some(format!("fcfixed:{weights_w}")),
+            OpKind::Conv2dF32 { pad } => Some(format!("conv2d:p{pad}")),
             OpKind::Relu => Some("relu".into()),
             OpKind::Softmax => Some("softmax".into()),
             OpKind::MaxPool2 => Some("maxpool2".into()),
+            OpKind::GlobalAvgPool => Some("global_avgpool".into()),
+            OpKind::Concat { axis } => Some(format!("concat:a{axis}")),
             OpKind::Add => Some("add".into()),
             OpKind::Quantize { .. } => Some("quantize".into()),
             OpKind::Dequantize { .. } => Some("dequantize".into()),
@@ -74,9 +87,9 @@ impl OpKind {
     pub fn arity(&self) -> Option<usize> {
         match self {
             OpKind::Placeholder { .. } | OpKind::Constant(_) => Some(0),
-            OpKind::FullyConnected | OpKind::FcBarrier => Some(3),
+            OpKind::FullyConnected | OpKind::FcBarrier | OpKind::Conv2dF32 { .. } => Some(3),
             OpKind::Add => Some(2),
-            OpKind::Custom { .. } => None,
+            OpKind::Custom { .. } | OpKind::Concat { .. } => None,
             _ => Some(1),
         }
     }
@@ -112,6 +125,29 @@ impl OpKind {
                 }
                 Ok((vec![x.0[0], *out_width], DType::F32))
             }
+            OpKind::Conv2dF32 { pad } => {
+                let (x, w, b) = (&inputs[0], &inputs[1], &inputs[2]);
+                if x.0.len() != 3 || w.0.len() != 4 || x.1 != DType::F32 || w.1 != DType::F32
+                {
+                    return bad(format!("conv2d wants (C,H,W) f32 x (F,C,KH,KW) f32, got {:?} {} / {:?} {}", x.0, x.1, w.0, w.1));
+                }
+                let (c, h, wi) = (x.0[0], x.0[1], x.0[2]);
+                let (f, wc, kh, kw) = (w.0[0], w.0[1], w.0[2], w.0[3]);
+                if wc != c {
+                    return bad(format!("conv2d weight channels {wc} != input {c}"));
+                }
+                if b.0 != vec![f] || b.1 != DType::F32 {
+                    return bad(format!("conv2d bias {:?} {} != [{f}] f32", b.0, b.1));
+                }
+                if h + 2 * pad < kh || wi + 2 * pad < kw {
+                    return bad(format!(
+                        "conv2d padded input {}x{} smaller than filter {kh}x{kw}",
+                        h + 2 * pad,
+                        wi + 2 * pad
+                    ));
+                }
+                Ok((vec![f, h + 2 * pad - kh + 1, wi + 2 * pad - kw + 1], DType::F32))
+            }
             OpKind::Relu => Ok(inputs[0].clone()),
             OpKind::Softmax => {
                 let (s, dt) = &inputs[0];
@@ -126,6 +162,46 @@ impl OpKind {
                     return bad(format!("maxpool rank {}", s.len()));
                 }
                 Ok((vec![s[0], s[1] / 2, s[2] / 2], *dt))
+            }
+            OpKind::GlobalAvgPool => {
+                let (s, dt) = &inputs[0];
+                if s.len() != 3 || *dt != DType::F32 {
+                    return bad(format!("global_avgpool wants rank-3 f32, got {s:?} {dt}"));
+                }
+                if s[1] * s[2] == 0 {
+                    return bad("global_avgpool over empty spatial dims".into());
+                }
+                Ok((vec![s[0], 1, 1], DType::F32))
+            }
+            OpKind::Concat { axis } => {
+                let first = match inputs.first() {
+                    Some(f) => f,
+                    None => return bad("concat needs at least one input".into()),
+                };
+                let rank = first.0.len();
+                if *axis >= rank {
+                    return bad(format!("concat axis {axis} out of range for rank {rank}"));
+                }
+                let mut shape = first.0.clone();
+                shape[*axis] = 0;
+                for (s, dt) in inputs {
+                    if *dt != DType::F32 {
+                        return bad(format!("concat wants f32, got {dt}"));
+                    }
+                    if s.len() != rank {
+                        return bad(format!("concat rank mismatch {} vs {rank}", s.len()));
+                    }
+                    for d in 0..rank {
+                        if d != *axis && s[d] != first.0[d] {
+                            return bad(format!(
+                                "concat dim {d} mismatch: {s:?} vs {:?}",
+                                first.0
+                            ));
+                        }
+                    }
+                    shape[*axis] += s[*axis];
+                }
+                Ok((shape, DType::F32))
             }
             OpKind::Reshape { shape } => {
                 let (s, dt) = &inputs[0];
@@ -385,6 +461,33 @@ mod tests {
         g.finalize().unwrap();
         assert_eq!(g.node(c5).out_shape, vec![1, 24, 24]);
         assert_eq!(g.node(c3).out_shape, vec![2, 26, 26]);
+    }
+
+    #[test]
+    fn conv2d_pad_gap_concat_shapes() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[3, 8, 8], DType::F32).unwrap();
+        let w = g.constant("w", Tensor::zeros(&[4, 3, 3, 3], DType::F32)).unwrap();
+        let b = g.constant("b", Tensor::zeros(&[4], DType::F32)).unwrap();
+        let c = g.add("c", OpKind::Conv2dF32 { pad: 1 }, &[x, w, b]).unwrap();
+        let gap = g.add("gap", OpKind::GlobalAvgPool, &[c]).unwrap();
+        let cat = g.add("cat", OpKind::Concat { axis: 0 }, &[c, c]).unwrap();
+        g.finalize().unwrap();
+        assert_eq!(g.node(c).out_shape, vec![4, 8, 8], "same padding keeps dims");
+        assert_eq!(g.node(gap).out_shape, vec![4, 1, 1]);
+        assert_eq!(g.node(cat).out_shape, vec![8, 8, 8]);
+        assert_eq!(g.node(c).op.kernel_name().unwrap(), "conv2d:p1");
+        assert_eq!(g.node(cat).op.kernel_name().unwrap(), "concat:a0");
+    }
+
+    #[test]
+    fn conv2d_channel_mismatch_fails_at_finalize() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[2, 8, 8], DType::F32).unwrap();
+        let w = g.constant("w", Tensor::zeros(&[4, 3, 3, 3], DType::F32)).unwrap();
+        let b = g.constant("b", Tensor::zeros(&[4], DType::F32)).unwrap();
+        g.add("c", OpKind::Conv2dF32 { pad: 0 }, &[x, w, b]).unwrap();
+        assert!(g.finalize().is_err());
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub mod fusion;
 pub mod graph;
 pub mod kernel;
 pub mod model;
+pub mod onnx;
 pub mod placer;
 pub mod plan;
 pub mod session;

@@ -173,9 +173,12 @@ fn op_to_json(m: &mut BTreeMap<String, Json>, op: &OpKind) {
         OpKind::Conv3x3I16 => "conv3x3_i16",
         OpKind::ConvFixedF32 { .. } => "conv_fixed_f32",
         OpKind::FcFixed { .. } => "fc_fixed",
+        OpKind::Conv2dF32 { .. } => "conv2d",
         OpKind::Relu => "relu",
         OpKind::Softmax => "softmax",
         OpKind::MaxPool2 => "maxpool2",
+        OpKind::GlobalAvgPool => "global_avgpool",
+        OpKind::Concat { .. } => "concat",
         OpKind::Reshape { .. } => "reshape",
         OpKind::Add => "add",
         OpKind::Quantize { .. } => "quantize",
@@ -203,6 +206,12 @@ fn op_to_json(m: &mut BTreeMap<String, Json>, op: &OpKind) {
             m.insert("weights_w".to_string(), Json::Str(weights_w.clone()));
             m.insert("weights_b".to_string(), Json::Str(weights_b.clone()));
             m.insert("out_width".to_string(), Json::from_usize(*out_width));
+        }
+        OpKind::Conv2dF32 { pad } => {
+            m.insert("pad".to_string(), Json::from_usize(*pad));
+        }
+        OpKind::Concat { axis } => {
+            m.insert("axis".to_string(), Json::from_usize(*axis));
         }
         OpKind::Reshape { shape } => {
             m.insert("shape".to_string(), shape_to_json(shape));
@@ -261,9 +270,12 @@ fn op_from_json(name: &str, v: &Json) -> Result<OpKind> {
             weights_b: sfield("weights_b")?,
             out_width: ufield("out_width")?,
         },
+        "conv2d" => OpKind::Conv2dF32 { pad: ufield("pad")? },
         "relu" => OpKind::Relu,
         "softmax" => OpKind::Softmax,
         "maxpool2" => OpKind::MaxPool2,
+        "global_avgpool" => OpKind::GlobalAvgPool,
+        "concat" => OpKind::Concat { axis: ufield("axis")? },
         "reshape" => OpKind::Reshape { shape: shape_from_json(&ctx, v.get("shape"))? },
         "add" => OpKind::Add,
         "quantize" => OpKind::Quantize { frac_bits: ufield("frac_bits")? as u32 },

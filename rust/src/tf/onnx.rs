@@ -1,0 +1,1742 @@
+//! ONNX front door: a minimal, dependency-free ONNX importer.
+//!
+//! Parses the ONNX protobuf wire format by hand (the repo vendors no
+//! protobuf crate), maps the op subset real TinyML models actually use
+//! onto [`OpKind`], folds `BatchNormalization` into the weights of the
+//! preceding Conv/Gemm at import time, and emits a validated
+//! [`ModelBundle`] the serving stack hosts exactly like a Python-exported
+//! bundle.
+//!
+//! Supported ops: `Conv` (stride 1, symmetric pads), `Relu`, `MaxPool`
+//! (2x2 stride 2, floor mode — the exact semantics of `maxpool2_f32`'s
+//! drop-trailing behavior), `Add` (residual), `BatchNormalization`
+//! (folded away), `Gemm`, `MatMul`, `Flatten`, `Reshape` (to rank 2),
+//! `GlobalAveragePool`, `Concat`, `Softmax`, `Identity`.
+//!
+//! Error contract: every failure is a named `onnx import:` error that
+//! says which node and which constraint — the transparent-acceleration
+//! story is "run it, or say exactly why not", never silently degrade.
+//!
+//! Shape convention: ONNX models are batch-leading (`NCHW` / `NxK`). Our
+//! graphs serve batches along dim 0 of a rank-2 tensor, and convolutions
+//! operate on rank-3 `(C, H, W)` activations. A rank-4 ONNX input
+//! `(1, C, H, W)` therefore becomes a `[1, C, H, W]` placeholder followed
+//! by a `Reshape` to `[C, H, W]` (node `{input}/chw`), served at
+//! `max_batch = 1`; a rank-2 input `(1, N)` maps directly.
+
+use crate::hsa::error::{HsaError, Result};
+use crate::tf::dtype::DType;
+use crate::tf::graph::{Graph, NodeId, OpKind};
+use crate::tf::model::{Endpoint, ModelBundle, Signature, SERVE_SIGNATURE};
+use crate::tf::tensor::Tensor;
+use std::collections::HashMap;
+use std::path::Path;
+
+fn err(msg: impl Into<String>) -> HsaError {
+    HsaError::Runtime(format!("onnx import: {}", msg.into()))
+}
+
+// ---------------------------------------------------------------------------
+// Protobuf wire-format reader.
+// ---------------------------------------------------------------------------
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, i: 0 }
+    }
+
+    fn done(&self) -> bool {
+        self.i >= self.b.len()
+    }
+
+    fn byte(&mut self) -> Result<u8> {
+        let v = *self.b.get(self.i).ok_or_else(|| err("truncated protobuf"))?;
+        self.i += 1;
+        Ok(v)
+    }
+
+    fn varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        for shift in (0..64).step_by(7) {
+            let byte = self.byte()?;
+            v |= u64::from(byte & 0x7f) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(err("varint longer than 10 bytes"))
+    }
+
+    fn tag(&mut self) -> Result<(u64, u8)> {
+        let v = self.varint()?;
+        Ok((v >> 3, (v & 7) as u8))
+    }
+
+    fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.varint()? as usize;
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| err("length-delimited field overruns buffer"))?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn fixed32(&mut self) -> Result<u32> {
+        let mut a = [0u8; 4];
+        for slot in &mut a {
+            *slot = self.byte()?;
+        }
+        Ok(u32::from_le_bytes(a))
+    }
+
+    fn fixed64(&mut self) -> Result<u64> {
+        let mut a = [0u8; 8];
+        for slot in &mut a {
+            *slot = self.byte()?;
+        }
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn skip(&mut self, wire: u8) -> Result<()> {
+        match wire {
+            0 => {
+                self.varint()?;
+            }
+            1 => {
+                self.fixed64()?;
+            }
+            2 => {
+                self.bytes()?;
+            }
+            5 => {
+                self.fixed32()?;
+            }
+            w => return Err(err(format!("unsupported wire type {w} (groups are not supported)"))),
+        }
+        Ok(())
+    }
+}
+
+fn utf8(b: &[u8]) -> Result<String> {
+    String::from_utf8(b.to_vec()).map_err(|_| err("non-UTF-8 string field"))
+}
+
+/// Repeated int64: accepts both packed (wire 2) and unpacked (wire 0).
+fn varints(r: &mut Reader, wire: u8, out: &mut Vec<i64>) -> Result<()> {
+    match wire {
+        0 => out.push(r.varint()? as i64),
+        2 => {
+            let mut p = Reader::new(r.bytes()?);
+            while !p.done() {
+                out.push(p.varint()? as i64);
+            }
+        }
+        w => return Err(err(format!("bad wire type {w} for repeated varint field"))),
+    }
+    Ok(())
+}
+
+/// Repeated float: accepts both packed (wire 2) and unpacked (wire 5).
+fn fixed32s(r: &mut Reader, wire: u8, out: &mut Vec<f32>) -> Result<()> {
+    match wire {
+        5 => out.push(f32::from_bits(r.fixed32()?)),
+        2 => {
+            let mut p = Reader::new(r.bytes()?);
+            while !p.done() {
+                out.push(f32::from_bits(p.fixed32()?));
+            }
+        }
+        w => return Err(err(format!("bad wire type {w} for repeated float field"))),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The ONNX proto subset we understand.
+// ---------------------------------------------------------------------------
+
+const DT_FLOAT: i64 = 1;
+const DT_INT64: i64 = 7;
+
+#[derive(Default, Clone)]
+struct TensorProto {
+    name: String,
+    dims: Vec<i64>,
+    data_type: i64,
+    floats: Vec<f32>,
+    ints: Vec<i64>,
+    raw: Vec<u8>,
+}
+
+fn parse_tensor(b: &[u8]) -> Result<TensorProto> {
+    let mut t = TensorProto::default();
+    let mut r = Reader::new(b);
+    while !r.done() {
+        let (field, wire) = r.tag()?;
+        match field {
+            1 => varints(&mut r, wire, &mut t.dims)?,
+            2 => t.data_type = r.varint()? as i64,
+            4 => fixed32s(&mut r, wire, &mut t.floats)?,
+            7 => varints(&mut r, wire, &mut t.ints)?,
+            8 => t.name = utf8(r.bytes()?)?,
+            9 => t.raw = r.bytes()?.to_vec(),
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(t)
+}
+
+impl TensorProto {
+    fn shape(&self) -> Result<Vec<usize>> {
+        self.dims
+            .iter()
+            .map(|&d| {
+                usize::try_from(d)
+                    .map_err(|_| err(format!("initializer '{}' has negative dim {d}", self.name)))
+            })
+            .collect()
+    }
+
+    fn numel(&self) -> usize {
+        self.dims.iter().map(|&d| d.max(0) as usize).product()
+    }
+
+    /// FLOAT payload: `float_data` if present, else little-endian `raw_data`.
+    fn f32_data(&self) -> Result<Vec<f32>> {
+        if self.data_type != DT_FLOAT {
+            return Err(err(format!(
+                "initializer '{}' has data_type {} where FLOAT (1) is required",
+                self.name, self.data_type
+            )));
+        }
+        let vals: Vec<f32> = if !self.floats.is_empty() {
+            self.floats.clone()
+        } else {
+            if self.raw.len() % 4 != 0 {
+                return Err(err(format!(
+                    "initializer '{}' raw_data length {} is not a multiple of 4",
+                    self.name,
+                    self.raw.len()
+                )));
+            }
+            self.raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        };
+        if vals.len() != self.numel() {
+            return Err(err(format!(
+                "initializer '{}' carries {} values for shape {:?}",
+                self.name,
+                vals.len(),
+                self.dims
+            )));
+        }
+        Ok(vals)
+    }
+
+    /// INT64 payload: `int64_data` if present, else little-endian `raw_data`.
+    fn i64_data(&self) -> Result<Vec<i64>> {
+        if self.data_type != DT_INT64 {
+            return Err(err(format!(
+                "initializer '{}' has data_type {} where INT64 (7) is required",
+                self.name, self.data_type
+            )));
+        }
+        let vals: Vec<i64> = if !self.ints.is_empty() {
+            self.ints.clone()
+        } else {
+            if self.raw.len() % 8 != 0 {
+                return Err(err(format!(
+                    "initializer '{}' raw_data length {} is not a multiple of 8",
+                    self.name,
+                    self.raw.len()
+                )));
+            }
+            self.raw
+                .chunks_exact(8)
+                .map(|c| i64::from_le_bytes(c.try_into().expect("chunk of 8")))
+                .collect()
+        };
+        if vals.len() != self.numel() {
+            return Err(err(format!(
+                "initializer '{}' carries {} values for shape {:?}",
+                self.name,
+                vals.len(),
+                self.dims
+            )));
+        }
+        Ok(vals)
+    }
+}
+
+#[derive(Default, Clone)]
+struct AttrProto {
+    name: String,
+    f: f32,
+    i: i64,
+    s: Vec<u8>,
+    ints: Vec<i64>,
+}
+
+fn parse_attr(b: &[u8]) -> Result<AttrProto> {
+    let mut a = AttrProto::default();
+    let mut r = Reader::new(b);
+    while !r.done() {
+        let (field, wire) = r.tag()?;
+        match field {
+            1 => a.name = utf8(r.bytes()?)?,
+            2 => a.f = f32::from_bits(r.fixed32()?),
+            3 => a.i = r.varint()? as i64,
+            4 => a.s = r.bytes()?.to_vec(),
+            8 => varints(&mut r, wire, &mut a.ints)?,
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(a)
+}
+
+#[derive(Default, Clone)]
+struct NodeProto {
+    name: String,
+    op_type: String,
+    inputs: Vec<String>,
+    outputs: Vec<String>,
+    attrs: Vec<AttrProto>,
+}
+
+fn parse_node(b: &[u8]) -> Result<NodeProto> {
+    let mut n = NodeProto::default();
+    let mut r = Reader::new(b);
+    while !r.done() {
+        let (field, wire) = r.tag()?;
+        match field {
+            1 => n.inputs.push(utf8(r.bytes()?)?),
+            2 => n.outputs.push(utf8(r.bytes()?)?),
+            3 => n.name = utf8(r.bytes()?)?,
+            4 => n.op_type = utf8(r.bytes()?)?,
+            5 => n.attrs.push(parse_attr(r.bytes()?)?),
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(n)
+}
+
+impl NodeProto {
+    /// Human-readable node label for error messages.
+    fn label(&self) -> String {
+        let out = self.outputs.first().map(String::as_str).unwrap_or("?");
+        if self.name.is_empty() {
+            format!("{}('{}')", self.op_type, out)
+        } else {
+            format!("{}('{}')", self.op_type, self.name)
+        }
+    }
+
+    fn attr(&self, name: &str) -> Option<&AttrProto> {
+        self.attrs.iter().find(|a| a.name == name)
+    }
+
+    fn attr_i(&self, name: &str, default: i64) -> i64 {
+        self.attr(name).map(|a| a.i).unwrap_or(default)
+    }
+
+    fn attr_f(&self, name: &str, default: f32) -> f32 {
+        self.attr(name).map(|a| a.f).unwrap_or(default)
+    }
+
+    fn attr_ints(&self, name: &str) -> Option<&[i64]> {
+        self.attr(name).map(|a| a.ints.as_slice())
+    }
+
+    fn attr_s(&self, name: &str) -> Option<String> {
+        self.attr(name).and_then(|a| String::from_utf8(a.s.clone()).ok())
+    }
+}
+
+#[derive(Default, Clone)]
+struct ValueInfo {
+    name: String,
+    elem_type: i64,
+    /// Declared dims; `-1` stands for a symbolic (`dim_param`) dimension.
+    dims: Vec<i64>,
+}
+
+fn parse_dim(b: &[u8]) -> Result<i64> {
+    let mut r = Reader::new(b);
+    let mut v: i64 = -1;
+    while !r.done() {
+        let (field, wire) = r.tag()?;
+        match field {
+            1 => v = r.varint()? as i64,
+            2 => {
+                r.bytes()?; // dim_param: symbolic, normalized to -1
+                v = -1;
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(v)
+}
+
+fn parse_value_info(b: &[u8]) -> Result<ValueInfo> {
+    let mut vi = ValueInfo::default();
+    let mut r = Reader::new(b);
+    while !r.done() {
+        let (field, wire) = r.tag()?;
+        match field {
+            1 => vi.name = utf8(r.bytes()?)?,
+            2 => {
+                // TypeProto → tensor_type (field 1) → {elem_type=1, shape=2}
+                let mut tr = Reader::new(r.bytes()?);
+                while !tr.done() {
+                    let (tf, tw) = tr.tag()?;
+                    if tf != 1 {
+                        tr.skip(tw)?;
+                        continue;
+                    }
+                    let mut tt = Reader::new(tr.bytes()?);
+                    while !tt.done() {
+                        let (f, w) = tt.tag()?;
+                        match f {
+                            1 => vi.elem_type = tt.varint()? as i64,
+                            2 => {
+                                // TensorShapeProto → repeated dim (field 1)
+                                let mut sr = Reader::new(tt.bytes()?);
+                                while !sr.done() {
+                                    let (sf, sw) = sr.tag()?;
+                                    if sf == 1 {
+                                        vi.dims.push(parse_dim(sr.bytes()?)?);
+                                    } else {
+                                        sr.skip(sw)?;
+                                    }
+                                }
+                            }
+                            _ => tt.skip(w)?,
+                        }
+                    }
+                }
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(vi)
+}
+
+#[derive(Default)]
+struct GraphProto {
+    nodes: Vec<NodeProto>,
+    initializers: Vec<TensorProto>,
+    inputs: Vec<ValueInfo>,
+    outputs: Vec<ValueInfo>,
+}
+
+fn parse_graph(b: &[u8]) -> Result<GraphProto> {
+    let mut g = GraphProto::default();
+    let mut r = Reader::new(b);
+    while !r.done() {
+        let (field, wire) = r.tag()?;
+        match field {
+            1 => g.nodes.push(parse_node(r.bytes()?)?),
+            5 => g.initializers.push(parse_tensor(r.bytes()?)?),
+            11 => g.inputs.push(parse_value_info(r.bytes()?)?),
+            12 => g.outputs.push(parse_value_info(r.bytes()?)?),
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(g)
+}
+
+fn parse_model(b: &[u8]) -> Result<GraphProto> {
+    let mut graph = None;
+    let mut r = Reader::new(b);
+    while !r.done() {
+        let (field, wire) = r.tag()?;
+        match field {
+            7 => graph = Some(parse_graph(r.bytes()?)?),
+            _ => r.skip(wire)?,
+        }
+    }
+    graph.ok_or_else(|| err("ModelProto carries no GraphProto (is this an ONNX file?)"))
+}
+
+// ---------------------------------------------------------------------------
+// Import: pending IR, BatchNorm folding, graph emission.
+// ---------------------------------------------------------------------------
+
+/// One imported op, held mutable until emission so BatchNormalization can
+/// fold into Conv/Fc weights in place.
+enum Pend {
+    Conv { x: String, w: Vec<f32>, f: usize, c: usize, kh: usize, kw: usize, b: Vec<f32>, pad: usize },
+    Fc { x: String, w: Vec<f32>, k: usize, n: usize, b: Vec<f32> },
+    Relu { x: String },
+    MaxPool2 { x: String },
+    Gap { x: String },
+    Softmax { x: String },
+    Add { a: String, b: String },
+    Concat { xs: Vec<String>, axis: usize },
+    Reshape { x: String, shape: Vec<usize> },
+}
+
+struct Importer<'a> {
+    inits: HashMap<&'a str, &'a TensorProto>,
+    /// value name → canonical producer value name (Identity / folded BN /
+    /// no-op Flatten chains collapse here).
+    aliases: HashMap<String, String>,
+    /// canonical value name → our-shape (batch dim dropped for rank-4).
+    shapes: HashMap<String, Vec<usize>>,
+    /// canonical value name → index into `pending`.
+    index: HashMap<String, usize>,
+    pending: Vec<(String, Pend)>,
+    /// raw value name → number of consumers (node inputs + graph outputs).
+    consumers: HashMap<&'a str, usize>,
+    input_name: String,
+    /// Placeholder shape as served: `[1, C, H, W]` or `[1, N]`.
+    input_ph_shape: Vec<usize>,
+    input_rank4: bool,
+}
+
+impl<'a> Importer<'a> {
+    fn new(gp: &'a GraphProto) -> Result<Importer<'a>> {
+        let mut inits: HashMap<&str, &TensorProto> = HashMap::new();
+        for t in &gp.initializers {
+            inits.insert(t.name.as_str(), t);
+        }
+        let mut consumers: HashMap<&str, usize> = HashMap::new();
+        for node in &gp.nodes {
+            for i in &node.inputs {
+                if !i.is_empty() {
+                    *consumers.entry(i.as_str()).or_insert(0) += 1;
+                }
+            }
+        }
+        for o in &gp.outputs {
+            *consumers.entry(o.name.as_str()).or_insert(0) += 1;
+        }
+
+        // Exactly one data input (graph inputs minus initializers; older
+        // exporters list initializers as inputs too).
+        let data: Vec<&ValueInfo> =
+            gp.inputs.iter().filter(|vi| !inits.contains_key(vi.name.as_str())).collect();
+        if data.len() != 1 {
+            return Err(err(format!(
+                "expected exactly 1 graph input after excluding initializers, found {}",
+                data.len()
+            )));
+        }
+        let vi = data[0];
+        if vi.elem_type != DT_FLOAT {
+            return Err(err(format!(
+                "graph input '{}' has elem_type {} where FLOAT (1) is required",
+                vi.name, vi.elem_type
+            )));
+        }
+        let mut dims = vi.dims.clone();
+        if dims.is_empty() {
+            return Err(err(format!("graph input '{}' declares no shape", vi.name)));
+        }
+        // The leading (batch) dim may be symbolic or 1; we serve at batch 1.
+        if dims[0] == -1 {
+            dims[0] = 1;
+        }
+        if dims[0] != 1 {
+            return Err(err(format!(
+                "graph input '{}' has batch dim {}; only batch 1 (or symbolic) is supported",
+                vi.name, dims[0]
+            )));
+        }
+        if dims[1..].iter().any(|&d| d <= 0) {
+            return Err(err(format!(
+                "graph input '{}' has non-positive or symbolic non-batch dims {:?}",
+                vi.name, vi.dims
+            )));
+        }
+        let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        let (ph_shape, our_shape, rank4) = match udims.len() {
+            4 => (udims.clone(), udims[1..].to_vec(), true),
+            2 => (udims.clone(), udims.clone(), false),
+            r => {
+                return Err(err(format!(
+                    "graph input '{}' has rank {r}; only rank-2 (N,K) and rank-4 (NCHW) inputs are supported",
+                    vi.name
+                )))
+            }
+        };
+        let mut shapes = HashMap::new();
+        shapes.insert(vi.name.clone(), our_shape);
+        Ok(Importer {
+            inits,
+            aliases: HashMap::new(),
+            shapes,
+            index: HashMap::new(),
+            pending: Vec::new(),
+            consumers,
+            input_name: vi.name.clone(),
+            input_ph_shape: ph_shape,
+            input_rank4: rank4,
+        })
+    }
+
+    fn resolve(&self, name: &str) -> String {
+        let mut cur = name;
+        while let Some(next) = self.aliases.get(cur) {
+            cur = next;
+        }
+        cur.to_string()
+    }
+
+    /// Resolve `raw` to a canonical activation produced earlier in the
+    /// graph (the data input or a pending op's output).
+    fn activation(&self, node: &NodeProto, raw: &str) -> Result<String> {
+        let canon = self.resolve(raw);
+        if self.inits.contains_key(canon.as_str()) {
+            return Err(err(format!(
+                "{}: input '{raw}' must be an activation, not an initializer",
+                node.label()
+            )));
+        }
+        if !self.shapes.contains_key(&canon) {
+            return Err(err(format!(
+                "{}: input '{raw}' is not produced by any earlier node",
+                node.label()
+            )));
+        }
+        Ok(canon)
+    }
+
+    fn shape_of(&self, canon: &str) -> &[usize] {
+        self.shapes.get(canon).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    fn initializer(&self, node: &NodeProto, raw: &str) -> Result<&'a TensorProto> {
+        self.inits.get(raw).copied().ok_or_else(|| {
+            err(format!("{}: input '{raw}' must be a graph initializer", node.label()))
+        })
+    }
+
+    fn push(&mut self, out: String, op: Pend, shape: Vec<usize>) -> Result<()> {
+        if self.shapes.contains_key(&out) || self.inits.contains_key(out.as_str()) {
+            return Err(err(format!("value '{out}' is defined more than once")));
+        }
+        self.index.insert(out.clone(), self.pending.len());
+        self.shapes.insert(out.clone(), shape);
+        self.pending.push((out, op));
+        Ok(())
+    }
+
+    fn sole_output(&self, node: &NodeProto) -> Result<String> {
+        let outs: Vec<&String> = node.outputs.iter().filter(|o| !o.is_empty()).collect();
+        if outs.len() != 1 {
+            return Err(err(format!(
+                "{}: expected exactly 1 output, found {}",
+                node.label(),
+                outs.len()
+            )));
+        }
+        Ok(outs[0].clone())
+    }
+
+    fn node(&mut self, node: &NodeProto) -> Result<()> {
+        if node.inputs.is_empty() {
+            return Err(err(format!("{}: node has no inputs", node.label())));
+        }
+        match node.op_type.as_str() {
+            "Conv" => self.conv(node),
+            "Relu" => {
+                let out = self.sole_output(node)?;
+                let x = self.activation(node, &node.inputs[0])?;
+                let shape = self.shape_of(&x).to_vec();
+                self.push(out, Pend::Relu { x }, shape)
+            }
+            "MaxPool" => self.maxpool(node),
+            "GlobalAveragePool" => {
+                let out = self.sole_output(node)?;
+                let x = self.activation(node, &node.inputs[0])?;
+                let s = self.shape_of(&x).to_vec();
+                if s.len() != 3 {
+                    return Err(err(format!(
+                        "{}: GlobalAveragePool needs a rank-3 (C,H,W) activation, got {s:?}",
+                        node.label()
+                    )));
+                }
+                self.push(out, Pend::Gap { x }, vec![s[0], 1, 1])
+            }
+            "Add" => {
+                let out = self.sole_output(node)?;
+                if node.inputs.len() != 2 {
+                    return Err(err(format!("{}: Add needs 2 inputs", node.label())));
+                }
+                let a = self.activation(node, &node.inputs[0])?;
+                let b = self.activation(node, &node.inputs[1])?;
+                let (sa, sb) = (self.shape_of(&a).to_vec(), self.shape_of(&b).to_vec());
+                if sa != sb {
+                    return Err(err(format!(
+                        "{}: Add operand shapes {sa:?} vs {sb:?} differ (broadcasting is not supported)",
+                        node.label()
+                    )));
+                }
+                self.push(out, Pend::Add { a, b }, sa)
+            }
+            "BatchNormalization" => self.batchnorm(node),
+            "Gemm" => self.gemm(node),
+            "MatMul" => self.matmul(node),
+            "Flatten" => self.flatten(node),
+            "Reshape" => self.reshape(node),
+            "Concat" => self.concat(node),
+            "Softmax" => {
+                let out = self.sole_output(node)?;
+                let x = self.activation(node, &node.inputs[0])?;
+                let s = self.shape_of(&x).to_vec();
+                if s.len() != 2 {
+                    return Err(err(format!(
+                        "{}: Softmax needs a rank-2 activation, got {s:?}",
+                        node.label()
+                    )));
+                }
+                let axis = node.attr_i("axis", -1);
+                if axis != -1 && axis != 1 {
+                    return Err(err(format!(
+                        "{}: Softmax axis {axis} is not the last axis of a rank-2 tensor",
+                        node.label()
+                    )));
+                }
+                self.push(out, Pend::Softmax { x }, s)
+            }
+            "Identity" => {
+                let out = self.sole_output(node)?;
+                let x = self.activation(node, &node.inputs[0])?;
+                self.aliases.insert(out, x);
+                Ok(())
+            }
+            other => Err(err(format!(
+                "unsupported op '{other}' at {}; supported ops: Add, BatchNormalization, Concat, \
+                 Conv, Flatten, Gemm, GlobalAveragePool, Identity, MatMul, MaxPool, Relu, \
+                 Reshape, Softmax",
+                node.label()
+            ))),
+        }
+    }
+
+    fn conv(&mut self, node: &NodeProto) -> Result<()> {
+        let out = self.sole_output(node)?;
+        if node.inputs.len() < 2 {
+            return Err(err(format!("{}: Conv needs at least X and W inputs", node.label())));
+        }
+        let x = self.activation(node, &node.inputs[0])?;
+        let xs = self.shape_of(&x).to_vec();
+        if xs.len() != 3 {
+            return Err(err(format!(
+                "{}: Conv needs a rank-3 (C,H,W) activation, got {xs:?}",
+                node.label()
+            )));
+        }
+        let wt = self.initializer(node, &node.inputs[1])?;
+        let wdims = wt.shape()?;
+        if wdims.len() != 4 {
+            return Err(err(format!(
+                "{}: Conv weight '{}' must be rank-4 (F,C,KH,KW), got {wdims:?}",
+                node.label(),
+                wt.name
+            )));
+        }
+        let (f, c, kh, kw) = (wdims[0], wdims[1], wdims[2], wdims[3]);
+        if c != xs[0] {
+            return Err(err(format!(
+                "{}: Conv weight expects {c} input channels but activation has {}",
+                node.label(),
+                xs[0]
+            )));
+        }
+        if let Some(s) = node.attr_s("auto_pad") {
+            if !s.is_empty() && s != "NOTSET" {
+                return Err(err(format!(
+                    "{}: auto_pad '{s}' is not supported; export with explicit pads",
+                    node.label()
+                )));
+            }
+        }
+        if node.attr_i("group", 1) != 1 {
+            return Err(err(format!("{}: only group=1 convolutions are supported", node.label())));
+        }
+        for name in ["strides", "dilations"] {
+            if let Some(v) = node.attr_ints(name) {
+                if v.iter().any(|&d| d != 1) {
+                    return Err(err(format!(
+                        "{}: only {name} of all 1s are supported, got {v:?}",
+                        node.label()
+                    )));
+                }
+            }
+        }
+        if let Some(ks) = node.attr_ints("kernel_shape") {
+            if ks != [kh as i64, kw as i64] {
+                return Err(err(format!(
+                    "{}: kernel_shape {ks:?} disagrees with weight dims ({kh},{kw})",
+                    node.label()
+                )));
+            }
+        }
+        let pad = match node.attr_ints("pads") {
+            None => 0,
+            Some(p) => {
+                if p.len() != 4 || p.iter().any(|&v| v != p[0]) || p[0] < 0 {
+                    return Err(err(format!(
+                        "{}: only symmetric pads [p,p,p,p] are supported, got {p:?}",
+                        node.label()
+                    )));
+                }
+                p[0] as usize
+            }
+        };
+        let (h, wi) = (xs[1] + 2 * pad, xs[2] + 2 * pad);
+        if h < kh || wi < kw {
+            return Err(err(format!(
+                "{}: padded input ({h}x{wi}) is smaller than the {kh}x{kw} filter",
+                node.label()
+            )));
+        }
+        let w = wt.f32_data()?;
+        let b = if node.inputs.len() >= 3 && !node.inputs[2].is_empty() {
+            let bt = self.initializer(node, &node.inputs[2])?;
+            let b = bt.f32_data()?;
+            if b.len() != f {
+                return Err(err(format!(
+                    "{}: Conv bias '{}' has {} values for {f} filters",
+                    node.label(),
+                    bt.name,
+                    b.len()
+                )));
+            }
+            b
+        } else {
+            vec![0.0; f]
+        };
+        let shape = vec![f, h - kh + 1, wi - kw + 1];
+        self.push(out, Pend::Conv { x, w, f, c, kh, kw, b, pad }, shape)
+    }
+
+    fn maxpool(&mut self, node: &NodeProto) -> Result<()> {
+        let out = self.sole_output(node)?;
+        let x = self.activation(node, &node.inputs[0])?;
+        let s = self.shape_of(&x).to_vec();
+        if s.len() != 3 {
+            return Err(err(format!(
+                "{}: MaxPool needs a rank-3 (C,H,W) activation, got {s:?}",
+                node.label()
+            )));
+        }
+        // `maxpool2_f32` implements exactly ONNX's floor-mode 2x2/2 pooling
+        // (trailing odd row/column dropped); everything else is refused.
+        let constraint = |ok: bool, what: String| -> Result<()> {
+            if ok {
+                Ok(())
+            } else {
+                Err(err(format!(
+                    "{}: {what}; only 2x2 stride-2 floor-mode unpadded MaxPool maps onto maxpool2",
+                    node.label()
+                )))
+            }
+        };
+        let ks = node.attr_ints("kernel_shape").unwrap_or(&[]);
+        constraint(ks == [2, 2], format!("kernel_shape {ks:?} != [2,2]"))?;
+        let st = node.attr_ints("strides").unwrap_or(&[1, 1]);
+        constraint(st == [2, 2], format!("strides {st:?} != [2,2]"))?;
+        if let Some(p) = node.attr_ints("pads") {
+            constraint(p.iter().all(|&v| v == 0), format!("pads {p:?} != 0"))?;
+        }
+        if let Some(d) = node.attr_ints("dilations") {
+            constraint(d.iter().all(|&v| v == 1), format!("dilations {d:?} != 1"))?;
+        }
+        constraint(node.attr_i("ceil_mode", 0) == 0, "ceil_mode=1".to_string())?;
+        constraint(node.attr_i("storage_order", 0) == 0, "storage_order=1".to_string())?;
+        if let Some(s) = node.attr_s("auto_pad") {
+            constraint(s.is_empty() || s == "NOTSET", format!("auto_pad '{s}'"))?;
+        }
+        constraint(s[1] >= 2 && s[2] >= 2, format!("spatial dims {s:?} below 2x2"))?;
+        let shape = vec![s[0], s[1] / 2, s[2] / 2];
+        self.push(out, Pend::MaxPool2 { x }, shape)
+    }
+
+    fn batchnorm(&mut self, node: &NodeProto) -> Result<()> {
+        let out = self.sole_output(node)?;
+        if node.inputs.len() < 5 {
+            return Err(err(format!(
+                "{}: BatchNormalization needs X, scale, B, mean, var inputs",
+                node.label()
+            )));
+        }
+        let raw = node.inputs[0].as_str();
+        let x = self.activation(node, raw)?;
+        let idx = *self.index.get(&x).ok_or_else(|| {
+            err(format!(
+                "{}: BatchNormalization folds into a producing Conv/Gemm/MatMul, but '{raw}' is the graph input",
+                node.label()
+            ))
+        })?;
+        let uses = self
+            .consumers
+            .get(raw)
+            .copied()
+            .unwrap_or(0)
+            .max(self.consumers.get(x.as_str()).copied().unwrap_or(0));
+        if uses != 1 {
+            return Err(err(format!(
+                "{}: cannot fold — '{raw}' has {uses} consumers; folding requires the \
+                 BatchNormalization to be its producer's only consumer",
+                node.label()
+            )));
+        }
+        let ch = match &self.pending[idx].1 {
+            Pend::Conv { f, .. } => *f,
+            Pend::Fc { n, .. } => *n,
+            _ => {
+                return Err(err(format!(
+                    "{}: BatchNormalization can only fold into Conv/Gemm/MatMul, but '{raw}' \
+                     is produced by a different op",
+                    node.label()
+                )))
+            }
+        };
+        let eps = node.attr_f("epsilon", 1e-5);
+        let mut params = Vec::with_capacity(4);
+        for raw_p in &node.inputs[1..5] {
+            let t = self.initializer(node, raw_p)?;
+            let v = t.f32_data()?;
+            if v.len() != ch {
+                return Err(err(format!(
+                    "{}: parameter '{}' has {} values for {ch} channels",
+                    node.label(),
+                    t.name,
+                    v.len()
+                )));
+            }
+            params.push(v);
+        }
+        let (scale, beta, mean, var) = (&params[0], &params[1], &params[2], &params[3]);
+        let mut k = Vec::with_capacity(ch);
+        for i in 0..ch {
+            let denom = var[i] + eps;
+            if denom <= 0.0 {
+                return Err(err(format!(
+                    "{}: var[{i}] + epsilon = {denom} is not positive",
+                    node.label()
+                )));
+            }
+            k.push(scale[i] / denom.sqrt());
+        }
+        match &mut self.pending[idx].1 {
+            Pend::Conv { w, b, c, kh, kw, .. } => {
+                let row = *c * *kh * *kw;
+                for fi in 0..ch {
+                    for v in &mut w[fi * row..(fi + 1) * row] {
+                        *v *= k[fi];
+                    }
+                    b[fi] = (b[fi] - mean[fi]) * k[fi] + beta[fi];
+                }
+            }
+            Pend::Fc { w, n, b, .. } => {
+                let n = *n;
+                for (i, v) in w.iter_mut().enumerate() {
+                    *v *= k[i % n];
+                }
+                for j in 0..n {
+                    b[j] = (b[j] - mean[j]) * k[j] + beta[j];
+                }
+            }
+            _ => unreachable!("checked above"),
+        }
+        self.aliases.insert(out, x);
+        Ok(())
+    }
+
+    fn gemm(&mut self, node: &NodeProto) -> Result<()> {
+        let out = self.sole_output(node)?;
+        if node.inputs.len() < 2 {
+            return Err(err(format!("{}: Gemm needs at least A and B inputs", node.label())));
+        }
+        let a = self.activation(node, &node.inputs[0])?;
+        let ash = self.shape_of(&a).to_vec();
+        if ash.len() != 2 {
+            return Err(err(format!(
+                "{}: Gemm input must be rank-2, got {ash:?}",
+                node.label()
+            )));
+        }
+        for (name, want) in [("alpha", 1.0f32), ("beta", 1.0)] {
+            let v = node.attr_f(name, 1.0);
+            if v != want {
+                return Err(err(format!("{}: only {name}=1 is supported, got {v}", node.label())));
+            }
+        }
+        if node.attr_i("transA", 0) != 0 {
+            return Err(err(format!("{}: transA=1 is not supported", node.label())));
+        }
+        let wt = self.initializer(node, &node.inputs[1])?;
+        let wdims = wt.shape()?;
+        if wdims.len() != 2 {
+            return Err(err(format!(
+                "{}: Gemm weight '{}' must be rank-2, got {wdims:?}",
+                node.label(),
+                wt.name
+            )));
+        }
+        let wraw = wt.f32_data()?;
+        let trans_b = node.attr_i("transB", 0);
+        let (k, n, w) = match trans_b {
+            0 => (wdims[0], wdims[1], wraw),
+            1 => {
+                // Stored (N, K); our FullyConnected wants (K, N).
+                let (n, k) = (wdims[0], wdims[1]);
+                let mut t = vec![0.0f32; k * n];
+                for j in 0..n {
+                    for i in 0..k {
+                        t[i * n + j] = wraw[j * k + i];
+                    }
+                }
+                (k, n, t)
+            }
+            v => {
+                return Err(err(format!("{}: transB={v} is not a valid flag", node.label())));
+            }
+        };
+        if ash[1] != k {
+            return Err(err(format!(
+                "{}: Gemm inner dims disagree — activation {ash:?} vs weight (K={k}, N={n})",
+                node.label()
+            )));
+        }
+        let b = if node.inputs.len() >= 3 && !node.inputs[2].is_empty() {
+            let bt = self.initializer(node, &node.inputs[2])?;
+            let b = bt.f32_data()?;
+            if b.len() != n {
+                return Err(err(format!(
+                    "{}: Gemm bias '{}' has {} values for N={n}",
+                    node.label(),
+                    bt.name,
+                    b.len()
+                )));
+            }
+            b
+        } else {
+            vec![0.0; n]
+        };
+        self.push(out, Pend::Fc { x: a, w, k, n, b }, vec![ash[0], n])
+    }
+
+    fn matmul(&mut self, node: &NodeProto) -> Result<()> {
+        let out = self.sole_output(node)?;
+        if node.inputs.len() != 2 {
+            return Err(err(format!("{}: MatMul needs 2 inputs", node.label())));
+        }
+        let a = self.activation(node, &node.inputs[0])?;
+        let ash = self.shape_of(&a).to_vec();
+        if ash.len() != 2 {
+            return Err(err(format!(
+                "{}: MatMul input must be rank-2, got {ash:?}",
+                node.label()
+            )));
+        }
+        let wt = self.initializer(node, &node.inputs[1])?;
+        let wdims = wt.shape()?;
+        if wdims.len() != 2 || wdims[0] != ash[1] {
+            return Err(err(format!(
+                "{}: MatMul weight '{}' of shape {wdims:?} does not compose with {ash:?}",
+                node.label(),
+                wt.name
+            )));
+        }
+        let (k, n) = (wdims[0], wdims[1]);
+        let w = wt.f32_data()?;
+        self.push(out, Pend::Fc { x: a, w, k, n, b: vec![0.0; n] }, vec![ash[0], n])
+    }
+
+    fn flatten(&mut self, node: &NodeProto) -> Result<()> {
+        let out = self.sole_output(node)?;
+        let x = self.activation(node, &node.inputs[0])?;
+        let axis = node.attr_i("axis", 1);
+        if axis != 1 {
+            return Err(err(format!("{}: only Flatten axis=1 is supported", node.label())));
+        }
+        let s = self.shape_of(&x).to_vec();
+        match s.len() {
+            3 => {
+                let k: usize = s.iter().product();
+                self.push(out, Pend::Reshape { x, shape: vec![1, k] }, vec![1, k])
+            }
+            2 => {
+                // (1, N) flattened over axis 1 is itself.
+                self.aliases.insert(out, x);
+                Ok(())
+            }
+            r => Err(err(format!("{}: cannot flatten a rank-{r} activation", node.label()))),
+        }
+    }
+
+    fn reshape(&mut self, node: &NodeProto) -> Result<()> {
+        let out = self.sole_output(node)?;
+        if node.inputs.len() != 2 {
+            return Err(err(format!("{}: Reshape needs data and shape inputs", node.label())));
+        }
+        let x = self.activation(node, &node.inputs[0])?;
+        let st = self.initializer(node, &node.inputs[1])?;
+        let target = st.i64_data()?;
+        let numel: usize = self.shape_of(&x).iter().product();
+        if target.len() != 2 {
+            return Err(err(format!(
+                "{}: only rank-2 reshape targets are supported, got {target:?}",
+                node.label()
+            )));
+        }
+        let holes = target.iter().filter(|&&d| d == -1).count();
+        if holes > 1 || target.iter().any(|&d| d == 0 || d < -1) {
+            return Err(err(format!(
+                "{}: reshape target {target:?} is not a concrete rank-2 shape",
+                node.label()
+            )));
+        }
+        let known: usize = target.iter().filter(|&&d| d > 0).map(|&d| d as usize).product();
+        let shape: Vec<usize> = if holes == 1 {
+            if known == 0 || numel % known != 0 {
+                return Err(err(format!(
+                    "{}: cannot infer -1 in {target:?} from {numel} elements",
+                    node.label()
+                )));
+            }
+            target
+                .iter()
+                .map(|&d| if d == -1 { numel / known } else { d as usize })
+                .collect()
+        } else {
+            target.iter().map(|&d| d as usize).collect()
+        };
+        if shape.iter().product::<usize>() != numel {
+            return Err(err(format!(
+                "{}: reshape target {shape:?} does not preserve {numel} elements",
+                node.label()
+            )));
+        }
+        self.push(out, Pend::Reshape { x, shape: shape.clone() }, shape)
+    }
+
+    fn concat(&mut self, node: &NodeProto) -> Result<()> {
+        let out = self.sole_output(node)?;
+        if node.inputs.is_empty() {
+            return Err(err(format!("{}: Concat needs at least 1 input", node.label())));
+        }
+        let mut xs = Vec::with_capacity(node.inputs.len());
+        for i in &node.inputs {
+            xs.push(self.activation(node, i)?);
+        }
+        let first = self.shape_of(&xs[0]).to_vec();
+        let rank = first.len();
+        // ONNX axes count the batch dim; our rank-3 activations dropped it.
+        let onnx_rank = if rank == 3 { 4 } else { rank } as i64;
+        let mut axis = node
+            .attr("axis")
+            .map(|a| a.i)
+            .ok_or_else(|| err(format!("{}: Concat requires an axis attribute", node.label())))?;
+        if axis < 0 {
+            axis += onnx_rank;
+        }
+        let our_axis = if rank == 3 {
+            if axis < 1 || axis > 3 {
+                return Err(err(format!(
+                    "{}: Concat axis {axis} is out of range for NCHW inputs (batch concat is not supported)",
+                    node.label()
+                )));
+            }
+            (axis - 1) as usize
+        } else {
+            if axis != 1 {
+                return Err(err(format!(
+                    "{}: Concat axis {axis} must be 1 for rank-2 inputs",
+                    node.label()
+                )));
+            }
+            1
+        };
+        let mut shape = first.clone();
+        shape[our_axis] = 0;
+        for x in &xs {
+            let s = self.shape_of(x);
+            if s.len() != rank {
+                return Err(err(format!(
+                    "{}: Concat inputs have mixed ranks ({rank} vs {})",
+                    node.label(),
+                    s.len()
+                )));
+            }
+            for (d, (&a, &b)) in s.iter().zip(first.iter()).enumerate() {
+                if d != our_axis && a != b {
+                    return Err(err(format!(
+                        "{}: Concat inputs disagree on non-axis dim {d} ({a} vs {b})",
+                        node.label()
+                    )));
+                }
+            }
+            shape[our_axis] += s[our_axis];
+        }
+        self.push(out, Pend::Concat { xs, axis: our_axis }, shape)
+    }
+
+    /// Emit the pending IR into a [`Graph`] and wrap it in a serving bundle.
+    fn emit(self, model_name: &str, gp: &GraphProto) -> Result<ModelBundle> {
+        if gp.outputs.len() != 1 {
+            return Err(err(format!(
+                "expected exactly 1 graph output, found {}",
+                gp.outputs.len()
+            )));
+        }
+        let out_name = self.resolve(&gp.outputs[0].name);
+        if !self.shapes.contains_key(&out_name) {
+            return Err(err(format!(
+                "graph output '{}' is not produced by any node",
+                gp.outputs[0].name
+            )));
+        }
+
+        let mut g = Graph::new();
+        let mut ids: HashMap<&str, NodeId> = HashMap::new();
+        let ph = g.placeholder(self.input_name.as_str(), &self.input_ph_shape, DType::F32)?;
+        if self.input_rank4 {
+            let chw = self.input_ph_shape[1..].to_vec();
+            let r = g.add(format!("{}/chw", self.input_name), OpKind::Reshape { shape: chw }, &[ph])?;
+            ids.insert(self.input_name.as_str(), r);
+        } else {
+            ids.insert(self.input_name.as_str(), ph);
+        }
+
+        let lookup = |ids: &HashMap<&str, NodeId>, name: &str| -> Result<NodeId> {
+            ids.get(name)
+                .copied()
+                .ok_or_else(|| err(format!("internal: value '{name}' emitted out of order")))
+        };
+        for (out, op) in &self.pending {
+            let id = match op {
+                Pend::Conv { x, w, f, c, kh, kw, b, pad } => {
+                    let xi = lookup(&ids, x)?;
+                    let wt = Tensor::from_f32(&[*f, *c, *kh, *kw], w.clone())?;
+                    let bt = Tensor::from_f32(&[*f], b.clone())?;
+                    let wi = g.constant(format!("{out}/w"), wt)?;
+                    let bi = g.constant(format!("{out}/b"), bt)?;
+                    g.add(out.as_str(), OpKind::Conv2dF32 { pad: *pad }, &[xi, wi, bi])?
+                }
+                Pend::Fc { x, w, k, n, b } => {
+                    let xi = lookup(&ids, x)?;
+                    let wt = Tensor::from_f32(&[*k, *n], w.clone())?;
+                    let bt = Tensor::from_f32(&[*n], b.clone())?;
+                    let wi = g.constant(format!("{out}/w"), wt)?;
+                    let bi = g.constant(format!("{out}/b"), bt)?;
+                    g.add(out.as_str(), OpKind::FullyConnected, &[xi, wi, bi])?
+                }
+                Pend::Relu { x } => g.add(out.as_str(), OpKind::Relu, &[lookup(&ids, x)?])?,
+                Pend::MaxPool2 { x } => g.add(out.as_str(), OpKind::MaxPool2, &[lookup(&ids, x)?])?,
+                Pend::Gap { x } => g.add(out.as_str(), OpKind::GlobalAvgPool, &[lookup(&ids, x)?])?,
+                Pend::Softmax { x } => g.add(out.as_str(), OpKind::Softmax, &[lookup(&ids, x)?])?,
+                Pend::Add { a, b } => {
+                    let ai = lookup(&ids, a)?;
+                    let bi = lookup(&ids, b)?;
+                    g.add(out.as_str(), OpKind::Add, &[ai, bi])?
+                }
+                Pend::Concat { xs, axis } => {
+                    let mut ins = Vec::with_capacity(xs.len());
+                    for x in xs {
+                        ins.push(lookup(&ids, x)?);
+                    }
+                    g.add(out.as_str(), OpKind::Concat { axis: *axis }, &ins)?
+                }
+                Pend::Reshape { x, shape } => {
+                    g.add(out.as_str(), OpKind::Reshape { shape: shape.clone() }, &[lookup(&ids, x)?])?
+                }
+            };
+            ids.insert(out.as_str(), id);
+        }
+
+        g.finalize()?;
+        let out_id = lookup(&ids, &out_name)?;
+        let out_shape = g.node(out_id).out_shape.clone();
+        let signature = Signature {
+            name: SERVE_SIGNATURE.to_string(),
+            inputs: vec![Endpoint::new("x", self.input_name.as_str(), &self.input_ph_shape, DType::F32)],
+            outputs: vec![Endpoint::new("y", out_name.as_str(), &out_shape, DType::F32)],
+        };
+        ModelBundle::new(model_name, g, vec![signature])
+    }
+}
+
+/// Import an ONNX model from raw protobuf bytes.
+pub fn import_onnx_bytes(bytes: &[u8], model_name: &str) -> Result<ModelBundle> {
+    let gp = parse_model(bytes)?;
+    let mut imp = Importer::new(&gp)?;
+    for node in &gp.nodes {
+        imp.node(node)?;
+    }
+    imp.emit(model_name, &gp)
+}
+
+/// Import an ONNX model from a file; the bundle is named after the file stem.
+pub fn import_onnx_file(path: impl AsRef<Path>) -> Result<ModelBundle> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .map_err(|e| err(format!("cannot read {}: {e}", path.display())))?;
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("model");
+    import_onnx_bytes(&bytes, name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -- a tiny protobuf *encoder*, test-only, to build ONNX bytes in-memory --
+
+    fn pv(buf: &mut Vec<u8>, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                buf.push(b);
+                break;
+            }
+            buf.push(b | 0x80);
+        }
+    }
+
+    fn key(buf: &mut Vec<u8>, field: u64, wire: u8) {
+        pv(buf, (field << 3) | u64::from(wire));
+    }
+
+    fn pb(buf: &mut Vec<u8>, field: u64, bytes: &[u8]) {
+        key(buf, field, 2);
+        pv(buf, bytes.len() as u64);
+        buf.extend_from_slice(bytes);
+    }
+
+    fn ps(buf: &mut Vec<u8>, field: u64, s: &str) {
+        pb(buf, field, s.as_bytes());
+    }
+
+    fn pi(buf: &mut Vec<u8>, field: u64, v: i64) {
+        key(buf, field, 0);
+        pv(buf, v as u64);
+    }
+
+    fn tensor_f32(name: &str, dims: &[i64], vals: &[f32]) -> Vec<u8> {
+        let mut b = Vec::new();
+        for &d in dims {
+            pi(&mut b, 1, d); // unpacked dims: exercises the wire-0 path
+        }
+        pi(&mut b, 2, DT_FLOAT);
+        let mut payload = Vec::new();
+        for &v in vals {
+            payload.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        pb(&mut b, 4, &payload); // packed float_data: exercises the wire-2 path
+        ps(&mut b, 8, name);
+        b
+    }
+
+    fn tensor_i64_raw(name: &str, dims: &[i64], vals: &[i64]) -> Vec<u8> {
+        let mut b = Vec::new();
+        for &d in dims {
+            pi(&mut b, 1, d);
+        }
+        pi(&mut b, 2, DT_INT64);
+        ps(&mut b, 8, name);
+        let mut raw = Vec::new();
+        for &v in vals {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        pb(&mut b, 9, &raw); // raw_data path
+        b
+    }
+
+    fn a_int(name: &str, v: i64) -> Vec<u8> {
+        let mut b = Vec::new();
+        ps(&mut b, 1, name);
+        pi(&mut b, 3, v);
+        pi(&mut b, 20, 2); // AttributeProto.Type INT
+        b
+    }
+
+    fn a_float(name: &str, v: f32) -> Vec<u8> {
+        let mut b = Vec::new();
+        ps(&mut b, 1, name);
+        key(&mut b, 2, 5);
+        b.extend_from_slice(&v.to_bits().to_le_bytes());
+        pi(&mut b, 20, 1); // FLOAT
+        b
+    }
+
+    fn a_ints(name: &str, vals: &[i64]) -> Vec<u8> {
+        let mut b = Vec::new();
+        ps(&mut b, 1, name);
+        for &v in vals {
+            pi(&mut b, 8, v); // unpacked repeated ints
+        }
+        pi(&mut b, 20, 7); // INTS
+        b
+    }
+
+    fn node(op: &str, inputs: &[&str], outputs: &[&str], attrs: &[Vec<u8>]) -> Vec<u8> {
+        let mut b = Vec::new();
+        for i in inputs {
+            ps(&mut b, 1, i);
+        }
+        for o in outputs {
+            ps(&mut b, 2, o);
+        }
+        ps(&mut b, 4, op);
+        for a in attrs {
+            pb(&mut b, 5, a);
+        }
+        b
+    }
+
+    fn vinfo(name: &str, dims: &[i64]) -> Vec<u8> {
+        let mut shape = Vec::new();
+        for &d in dims {
+            let mut dim = Vec::new();
+            pi(&mut dim, 1, d);
+            pb(&mut shape, 1, &dim);
+        }
+        let mut tt = Vec::new();
+        pi(&mut tt, 1, DT_FLOAT);
+        pb(&mut tt, 2, &shape);
+        let mut ty = Vec::new();
+        pb(&mut ty, 1, &tt);
+        let mut b = Vec::new();
+        ps(&mut b, 1, name);
+        pb(&mut b, 2, &ty);
+        b
+    }
+
+    fn model(
+        nodes: &[Vec<u8>],
+        inits: &[Vec<u8>],
+        inputs: &[Vec<u8>],
+        outputs: &[Vec<u8>],
+    ) -> Vec<u8> {
+        let mut g = Vec::new();
+        for n in nodes {
+            pb(&mut g, 1, n);
+        }
+        for t in inits {
+            pb(&mut g, 5, t);
+        }
+        for i in inputs {
+            pb(&mut g, 11, i);
+        }
+        for o in outputs {
+            pb(&mut g, 12, o);
+        }
+        let mut m = Vec::new();
+        pi(&mut m, 1, 8); // ir_version, skipped by the parser
+        pb(&mut m, 7, &g);
+        m
+    }
+
+    fn const_f32(bundle: &ModelBundle, name: &str) -> Vec<f32> {
+        let n = bundle
+            .graph
+            .nodes()
+            .iter()
+            .find(|n| n.name == name)
+            .unwrap_or_else(|| panic!("no node named {name}"));
+        match &n.op {
+            OpKind::Constant(t) => t.as_f32().unwrap().to_vec(),
+            other => panic!("{name} is {other:?}, not a constant"),
+        }
+    }
+
+    // ---------------------------------------------------------------------
+
+    #[test]
+    fn parser_reads_packed_unpacked_and_raw_payloads() {
+        let t = parse_tensor(&tensor_f32("w", &[2, 2], &[1.0, -2.5, 3.0, 0.25])).unwrap();
+        assert_eq!(t.name, "w");
+        assert_eq!(t.dims, vec![2, 2]);
+        assert_eq!(t.f32_data().unwrap(), vec![1.0, -2.5, 3.0, 0.25]);
+
+        let t = parse_tensor(&tensor_i64_raw("shape", &[2], &[1, -1])).unwrap();
+        assert_eq!(t.i64_data().unwrap(), vec![1, -1]);
+
+        // Unknown fields must be skipped, not rejected.
+        let mut b = tensor_f32("w", &[1], &[4.0]);
+        pi(&mut b, 14, 99); // doc_string-ish unknown varint field
+        assert_eq!(parse_tensor(&b).unwrap().f32_data().unwrap(), vec![4.0]);
+    }
+
+    #[test]
+    fn varint_overlong_and_truncated_inputs_are_errors() {
+        let mut r = Reader::new(&[0x80; 11]);
+        assert!(r.varint().is_err());
+        let mut r = Reader::new(&[0x80]);
+        assert!(r.varint().is_err());
+        // Group wire type (3) is unsupported.
+        assert!(parse_tensor(&[0x0b]).is_err());
+    }
+
+    /// Conv(pad 1) → Relu → GlobalAveragePool → Flatten → Gemm → Softmax,
+    /// the spine of every TinyML classifier.
+    fn convnet_bytes() -> Vec<u8> {
+        let conv_w = tensor_f32("cw", &[2, 1, 3, 3], &[0.5; 18]);
+        let conv_b = tensor_f32("cb", &[2], &[0.0, 1.0]);
+        let fc_w = tensor_f32("fw", &[2, 3], &[1., 2., 3., 4., 5., 6.]);
+        let fc_b = tensor_f32("fb", &[3], &[0.1, 0.2, 0.3]);
+        let nodes = vec![
+            node(
+                "Conv",
+                &["x", "cw", "cb"],
+                &["c1"],
+                &[a_ints("pads", &[1, 1, 1, 1]), a_ints("strides", &[1, 1])],
+            ),
+            node("Relu", &["c1"], &["r1"], &[]),
+            node("GlobalAveragePool", &["r1"], &["g1"], &[]),
+            node("Flatten", &["g1"], &["f1"], &[a_int("axis", 1)]),
+            node("Gemm", &["f1", "fw", "fb"], &["l"], &[a_int("transB", 0)]),
+            node("Softmax", &["l"], &["y"], &[a_int("axis", -1)]),
+        ];
+        model(
+            &nodes,
+            &[conv_w, conv_b, fc_w, fc_b],
+            &[vinfo("x", &[1, 1, 4, 4])],
+            &[vinfo("y", &[1, 3])],
+        )
+    }
+
+    #[test]
+    fn imports_a_convnet_end_to_end() {
+        let bundle = import_onnx_bytes(&convnet_bytes(), "tiny").unwrap();
+        assert_eq!(bundle.name, "tiny");
+        let g = &bundle.graph;
+        // Rank-4 input → [1,C,H,W] placeholder + /chw reshape.
+        let ph = g.nodes().iter().find(|n| n.name == "x").unwrap();
+        assert_eq!(ph.out_shape, vec![1, 1, 4, 4]);
+        assert!(g.nodes().iter().any(|n| n.name == "x/chw"));
+        let conv = g.nodes().iter().find(|n| n.name == "c1").unwrap();
+        assert!(matches!(conv.op, OpKind::Conv2dF32 { pad: 1 }));
+        assert_eq!(conv.out_shape, vec![2, 4, 4]);
+        let out = g.nodes().iter().find(|n| n.name == "y").unwrap();
+        assert_eq!(out.out_shape, vec![1, 3]);
+        let sig = &bundle.signatures[0];
+        assert_eq!(sig.name, SERVE_SIGNATURE);
+        assert_eq!(sig.input("x").unwrap().node, "x");
+        assert_eq!(sig.output("y").unwrap().shape, vec![1, 3]);
+    }
+
+    #[test]
+    fn batchnorm_folds_into_conv_with_exact_arithmetic() {
+        // eps=0, var=4, scale=3 → k = 3/√4 = 1.5: every value is f32-exact,
+        // so the fold must reproduce them bit-for-bit.
+        let conv_w = tensor_f32("cw", &[1, 1, 1, 1], &[2.0]);
+        let conv_b = tensor_f32("cb", &[1], &[1.0]);
+        let scale = tensor_f32("s", &[1], &[3.0]);
+        let beta = tensor_f32("o", &[1], &[0.5]);
+        let mean = tensor_f32("m", &[1], &[2.0]);
+        let var = tensor_f32("v", &[1], &[4.0]);
+        let nodes = vec![
+            node("Conv", &["x", "cw", "cb"], &["c"], &[]),
+            node(
+                "BatchNormalization",
+                &["c", "s", "o", "m", "v"],
+                &["bn"],
+                &[a_float("epsilon", 0.0)],
+            ),
+            node("GlobalAveragePool", &["bn"], &["g"], &[]),
+            node("Flatten", &["g"], &["y"], &[]),
+        ];
+        let m = model(
+            &nodes,
+            &[conv_w, conv_b, scale, beta, mean, var],
+            &[vinfo("x", &[1, 1, 2, 2])],
+            &[vinfo("y", &[1, 1])],
+        );
+        let bundle = import_onnx_bytes(&m, "bnfold").unwrap();
+        // w' = 2·1.5 = 3;  b' = (1−2)·1.5 + 0.5 = −1.
+        assert_eq!(const_f32(&bundle, "c/w"), vec![3.0]);
+        assert_eq!(const_f32(&bundle, "c/b"), vec![-1.0]);
+        // The BN node itself vanished: 'bn' aliases to 'c'.
+        assert!(!bundle.graph.nodes().iter().any(|n| n.name == "bn"));
+    }
+
+    #[test]
+    fn batchnorm_fold_refused_when_conv_has_more_consumers() {
+        let conv_w = tensor_f32("cw", &[1, 1, 1, 1], &[2.0]);
+        let scale = tensor_f32("s", &[1], &[1.0]);
+        let beta = tensor_f32("o", &[1], &[0.0]);
+        let mean = tensor_f32("m", &[1], &[0.0]);
+        let var = tensor_f32("v", &[1], &[1.0]);
+        let nodes = vec![
+            node("Conv", &["x", "cw"], &["c"], &[]),
+            node("BatchNormalization", &["c", "s", "o", "m", "v"], &["bn"], &[]),
+            // Second consumer of the conv output: folding would corrupt it.
+            node("Relu", &["c"], &["r"], &[]),
+            node("Add", &["bn", "r"], &["y"], &[]),
+        ];
+        let m = model(
+            &nodes,
+            &[conv_w, scale, beta, mean, var],
+            &[vinfo("x", &[1, 1, 2, 2])],
+            &[vinfo("y", &[1, 1, 2, 2])],
+        );
+        let e = import_onnx_bytes(&m, "nofold").unwrap_err().to_string();
+        assert!(e.contains("onnx import:"), "{e}");
+        assert!(e.contains("consumers"), "{e}");
+    }
+
+    #[test]
+    fn bn_fold_matches_unfolded_reference_within_one_ulp() {
+        use crate::tf::session::{Session, SessionOptions};
+        // All values are chosen f32-exact (integer weights/activations,
+        // k = scale/√var ∈ {1.5, 3.0}) so folded and unfolded evaluation
+        // orders cannot diverge by more than reassociation noise.
+        let wv: Vec<f32> = (0..18).map(|i| ((i % 5) as f32) - 2.0).collect();
+        let bv = [1.0f32, -2.0];
+        let (scale, beta, mean, var) =
+            ([3.0f32, 1.5], [0.5f32, -0.25], [2.0f32, 1.0], [4.0f32, 0.25]);
+        let nodes = vec![
+            node("Conv", &["x", "cw", "cb"], &["c"], &[a_ints("pads", &[1, 1, 1, 1])]),
+            node(
+                "BatchNormalization",
+                &["c", "s", "o", "m", "v"],
+                &["bn"],
+                &[a_float("epsilon", 0.0)],
+            ),
+            node("Relu", &["bn"], &["y"], &[]),
+        ];
+        let m = model(
+            &nodes,
+            &[
+                tensor_f32("cw", &[2, 1, 3, 3], &wv),
+                tensor_f32("cb", &[2], &bv),
+                tensor_f32("s", &[2], &scale),
+                tensor_f32("o", &[2], &beta),
+                tensor_f32("m", &[2], &mean),
+                tensor_f32("v", &[2], &var),
+            ],
+            &[vinfo("x", &[1, 1, 4, 4])],
+            &[vinfo("y", &[1, 2, 4, 4])],
+        );
+        let bundle = import_onnx_bytes(&m, "ulp").unwrap();
+        let sess = Session::new(bundle.graph.clone(), SessionOptions::native_only()).unwrap();
+        let xv: Vec<f32> = (0..16).map(|i| i as f32 - 8.0).collect();
+        let xt = Tensor::from_f32(&[1, 1, 4, 4], xv.clone()).unwrap();
+        let (got, _) = sess.run_interpreted(&[("x", xt)], &["y"]).unwrap();
+
+        // Unfolded reference: conv, then the BN affine, then relu.
+        let xr = Tensor::from_f32(&[1, 4, 4], xv).unwrap();
+        let wt = Tensor::from_f32(&[2, 1, 3, 3], wv).unwrap();
+        let bt = Tensor::from_f32(&[2], bv.to_vec()).unwrap();
+        let conv = crate::ops::conv2d_f32(&xr, &wt, &bt, 1).unwrap();
+        let mut want = conv.as_f32().unwrap().to_vec();
+        for (i, v) in want.iter_mut().enumerate() {
+            let f = i / 16; // 4x4 spatial per filter
+            let k = scale[f] / var[f].sqrt();
+            *v = ((*v - mean[f]) * k + beta[f]).max(0.0);
+        }
+        let got = got[0].as_f32().unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(want.iter()) {
+            let ulp = if a == b {
+                0
+            } else {
+                (i64::from(a.to_bits()) - i64::from(b.to_bits())).unsigned_abs()
+            };
+            assert!(ulp <= 1, "folded {a} vs unfolded {b} differ by {ulp} ulp");
+        }
+    }
+
+    #[test]
+    fn gemm_transb_weights_are_transposed_at_import() {
+        // Stored (N=2, K=3) rows [1,2,3],[4,5,6] → our (K=3, N=2) layout.
+        let fc_w = tensor_f32("fw", &[2, 3], &[1., 2., 3., 4., 5., 6.]);
+        let nodes = vec![node("Gemm", &["x", "fw"], &["y"], &[a_int("transB", 1)])];
+        let m = model(&nodes, &[fc_w], &[vinfo("x", &[1, 3])], &[vinfo("y", &[1, 2])]);
+        let bundle = import_onnx_bytes(&m, "gemm").unwrap();
+        assert_eq!(const_f32(&bundle, "y/w"), vec![1., 4., 2., 5., 3., 6.]);
+        assert_eq!(const_f32(&bundle, "y/b"), vec![0.0, 0.0]);
+        // Rank-2 input: no /chw reshape, the placeholder is the activation.
+        assert!(!bundle.graph.nodes().iter().any(|n| n.name == "x/chw"));
+    }
+
+    #[test]
+    fn residual_add_concat_and_identity_map_through() {
+        let conv_w = tensor_f32("cw", &[2, 2, 3, 3], &[0.1; 36]);
+        let nodes = vec![
+            node("Conv", &["x", "cw"], &["c"], &[a_ints("pads", &[1, 1, 1, 1])]),
+            node("Identity", &["x"], &["skip"], &[]),
+            node("Add", &["c", "skip"], &["sum"], &[]),
+            // NCHW channel concat (onnx axis 1 → our axis 0): 2+2 channels.
+            node("Concat", &["sum", "c"], &["cat"], &[a_int("axis", 1)]),
+        ];
+        let m = model(
+            &nodes,
+            &[conv_w],
+            &[vinfo("x", &[1, 2, 4, 4])],
+            &[vinfo("cat", &[1, 4, 4, 4])],
+        );
+        let bundle = import_onnx_bytes(&m, "residual").unwrap();
+        let cat = bundle.graph.nodes().iter().find(|n| n.name == "cat").unwrap();
+        assert!(matches!(cat.op, OpKind::Concat { axis: 0 }));
+        assert_eq!(cat.out_shape, vec![4, 4, 4]);
+    }
+
+    #[test]
+    fn unsupported_op_and_maxpool_mismatch_are_named_errors() {
+        let nodes = vec![node("LeakyRelu", &["x"], &["y"], &[])];
+        let m = model(&nodes, &[], &[vinfo("x", &[1, 4])], &[vinfo("y", &[1, 4])]);
+        let e = import_onnx_bytes(&m, "bad").unwrap_err().to_string();
+        assert!(e.contains("unsupported op 'LeakyRelu'"), "{e}");
+        assert!(e.contains("supported ops:"), "{e}");
+
+        // 3x3 pooling window: not maxpool2's contract, must be refused.
+        let nodes = vec![node(
+            "MaxPool",
+            &["x"],
+            &["y"],
+            &[a_ints("kernel_shape", &[3, 3]), a_ints("strides", &[2, 2])],
+        )];
+        let m = model(&nodes, &[], &[vinfo("x", &[1, 1, 8, 8])], &[vinfo("y", &[1, 1, 3, 3])]);
+        let e = import_onnx_bytes(&m, "pool").unwrap_err().to_string();
+        assert!(e.contains("kernel_shape"), "{e}");
+
+        // Ceil mode changes trailing-window semantics vs maxpool2: refused.
+        let nodes = vec![node(
+            "MaxPool",
+            &["x"],
+            &["y"],
+            &[
+                a_ints("kernel_shape", &[2, 2]),
+                a_ints("strides", &[2, 2]),
+                a_int("ceil_mode", 1),
+            ],
+        )];
+        let m = model(&nodes, &[], &[vinfo("x", &[1, 1, 8, 8])], &[vinfo("y", &[1, 1, 4, 4])]);
+        let e = import_onnx_bytes(&m, "pool2").unwrap_err().to_string();
+        assert!(e.contains("ceil_mode"), "{e}");
+    }
+
+    #[test]
+    fn reshape_resolves_minus_one_against_element_count() {
+        let shape = tensor_i64_raw("shape", &[2], &[1, -1]);
+        let nodes = vec![node("Reshape", &["x", "shape"], &["y"], &[])];
+        let m = model(&nodes, &[shape], &[vinfo("x", &[1, 3, 2, 2])], &[vinfo("y", &[1, 12])]);
+        let bundle = import_onnx_bytes(&m, "reshape").unwrap();
+        let y = bundle.graph.nodes().iter().find(|n| n.name == "y").unwrap();
+        assert_eq!(y.out_shape, vec![1, 12]);
+    }
+
+    #[test]
+    fn not_an_onnx_file_is_a_clean_error() {
+        let e = import_onnx_bytes(b"{\"json\": true}", "x").unwrap_err().to_string();
+        assert!(e.contains("onnx import:"), "{e}");
+    }
+}

@@ -479,6 +479,7 @@ impl Session {
             store.as_ref(),
             &mut registry,
         );
+        register_graph_kernels(&graph, &cpu, &pool, &mut registry);
 
         let runtime = HsaRuntime::builder()
             .with_agent(cpu.clone())
@@ -1101,6 +1102,15 @@ fn register_cpu_kernels(
         },
     );
     reg(
+        "global_avgpool",
+        CpuKernel {
+            name: "global_avgpool".into(),
+            func: Arc::new(|ins| Ok(vec![crate::ops::global_avgpool_f32(&ins[0])?])),
+            class: CpuKernelClass::Memory,
+            op_template: None,
+        },
+    );
+    reg(
         "add",
         CpuKernel {
             name: "add".into(),
@@ -1428,6 +1438,118 @@ fn register_fpga_roles(
     registry.register("mnist_cnn", DeviceType::Fpga, id);
 }
 
+/// Register kernels whose identity depends on the *graph* rather than on
+/// the fixed paper roles. Imported ONNX graphs carry attribute-bearing ops
+/// whose attributes are baked into the kernel name (`conv2d:p{pad}`,
+/// `concat:a{axis}`), so the set of kernels to register is only known once
+/// the finalized graph is in hand. Each distinct conv padding gets a CPU
+/// kernel, an FPGA role variant and both fused `+relu` forms — imported
+/// graphs place onto PR regions exactly like the built-in roles. Concat is
+/// a pure data-movement op and registers CPU-only.
+fn register_graph_kernels(
+    graph: &Graph,
+    cpu: &Arc<CpuAgent>,
+    fpga: &FpgaPool,
+    registry: &mut KernelRegistry,
+) {
+    use std::collections::{BTreeMap, BTreeSet};
+    // The role's nominal workload (cost model only, not numerics) comes
+    // from the first conv in the graph using that padding.
+    let mut conv_pads: BTreeMap<usize, RoleOp> = BTreeMap::new();
+    let mut concat_axes: BTreeSet<usize> = BTreeSet::new();
+    for node in graph.nodes() {
+        match &node.op {
+            OpKind::Conv2dF32 { pad } => {
+                conv_pads.entry(*pad).or_insert_with(|| {
+                    let xs = &graph.node(node.inputs[0]).out_shape;
+                    let ws = &graph.node(node.inputs[1]).out_shape;
+                    RoleOp::ConvI16 {
+                        cin: xs[0],
+                        h: xs[1] + 2 * pad,
+                        w: xs[2] + 2 * pad,
+                        kh: ws[2],
+                        kw: ws[3],
+                        filters: ws[0],
+                    }
+                });
+            }
+            OpKind::Concat { axis } => {
+                concat_axes.insert(*axis);
+            }
+            _ => {}
+        }
+    }
+
+    for (pad, op_template) in conv_pads {
+        let mk_bitstream = |name: String| {
+            crate::fpga::bitstream::Bitstream::new(
+                name,
+                roles::ROLE_BITSTREAM_BYTES,
+                crate::fpga::synthesis::estimate(&roles::role3_components()),
+                crate::fpga::datapath::DatapathSpec {
+                    name: "conv2d",
+                    op: op_template,
+                    macs_per_cycle: 16,
+                    ii: 1,
+                    pipeline_depth: 32,
+                    burst_bytes: 4096,
+                    burst_overhead_cycles: 8,
+                    barriers_per_pass: 0,
+                    barrier_stall_cycles: 0,
+                    clock_mhz: roles::PL_CLOCK_MHZ,
+                },
+            )
+        };
+        let base = format!("conv2d:p{pad}");
+        let native: NativeFn = Arc::new(move |ins| {
+            Ok(vec![crate::ops::conv2d_f32(&ins[0], &ins[1], &ins[2], pad)?])
+        });
+        let native_relu: NativeFn = Arc::new(move |ins| {
+            Ok(vec![crate::ops::conv2d_f32_relu(&ins[0], &ins[1], &ins[2], pad)?])
+        });
+
+        let id = cpu.register_kernel(CpuKernel {
+            name: base.clone(),
+            func: Arc::clone(&native),
+            class: CpuKernelClass::ConvI16Large,
+            op_template: Some(op_template),
+        });
+        registry.register(&base, DeviceType::Cpu, id);
+        let id = cpu.register_kernel(CpuKernel {
+            name: fused_relu_name(&base),
+            func: Arc::clone(&native_relu),
+            class: CpuKernelClass::ConvI16Large,
+            op_template: Some(op_template),
+        });
+        registry.register(fused_relu_name(&base), DeviceType::Cpu, id);
+
+        let id = fpga.register_role(
+            mk_bitstream(format!("conv2d_p{pad}")),
+            ComputeBinding::Native(native),
+        );
+        registry.register(&base, DeviceType::Fpga, id);
+        let id = fpga.register_role(
+            mk_bitstream(format!("conv2d_p{pad}_relu")),
+            ComputeBinding::Native(native_relu),
+        );
+        registry.register(fused_relu_name(&base), DeviceType::Fpga, id);
+    }
+
+    for axis in concat_axes {
+        let name = format!("concat:a{axis}");
+        let id = cpu.register_kernel(CpuKernel {
+            name: name.clone(),
+            func: Arc::new(move |ins| {
+                let refs: Vec<&Tensor> = ins.iter().collect();
+                Ok(vec![crate::ops::concat_f32(&refs, axis)?])
+            }),
+            class: CpuKernelClass::Memory,
+            op_template: None,
+        });
+        registry.register(&name, DeviceType::Cpu, id);
+    }
+}
+
 /// Wait helper re-exported for examples.
 pub const DISPATCH_TIMEOUT: Duration = crate::hsa::runtime::DISPATCH_TIMEOUT;
 
@@ -1567,6 +1689,43 @@ mod tests {
         assert_eq!(plan_stats.fused_dispatches, 1);
         assert_eq!(interp_stats.dispatches, 2, "the interpreter never fuses");
         assert!(plan_stats.dispatches < interp_stats.dispatches);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn graph_driven_conv2d_kernels_register_fuse_and_place_on_fpga() {
+        // The ONNX-import graph shape: attribute-bearing ops whose kernels
+        // (`conv2d:p1`, `concat:a0`) exist only because the graph demands
+        // them. Conv+ReLU must fuse, the conv must land on a PR region,
+        // and plan replay must match the interpreter bitwise.
+        let mut g = Graph::new();
+        let x = g.placeholder("x", &[1, 6, 6], DType::F32).unwrap();
+        let w = g
+            .constant(
+                "w",
+                Tensor::from_f32(&[2, 1, 3, 3], (0..18).map(|v| v as f32 * 0.1 - 0.8).collect())
+                    .unwrap(),
+            )
+            .unwrap();
+        let b = g.constant("b", Tensor::from_f32(&[2], vec![0.1, -0.2]).unwrap()).unwrap();
+        let c = g.add("c", OpKind::Conv2dF32 { pad: 1 }, &[x, w, b]).unwrap();
+        let r = g.add("r", OpKind::Relu, &[c]).unwrap();
+        let gap = g.add("gap", OpKind::GlobalAvgPool, &[r]).unwrap();
+        g.add("out", OpKind::Concat { axis: 0 }, &[gap, gap]).unwrap();
+
+        let sess = Session::new(g, SessionOptions::native_only()).unwrap();
+        let x = Tensor::from_f32(&[1, 6, 6], (0..36).map(|v| v as f32 * 0.21 - 3.5).collect())
+            .unwrap();
+        let (outs, plan_stats) = sess.run_with_stats(&[("x", x.clone())], &["out"]).unwrap();
+        let (ref_outs, _) = sess.run_interpreted(&[("x", x)], &["out"]).unwrap();
+        assert_eq!(outs[0], ref_outs[0], "plan replay must be bitwise identical");
+        assert_eq!(outs[0].shape(), &[4, 1, 1]);
+        assert!(plan_stats.fused_dispatches >= 1, "conv2d+relu fused: {plan_stats:?}");
+        assert!(
+            plan_stats.dispatches_by_device.get(&DeviceType::Fpga).copied().unwrap_or(0) >= 1,
+            "conv2d placed on a PR region: {:?}",
+            plan_stats.dispatches_by_device
+        );
         sess.shutdown();
     }
 
