@@ -4,7 +4,7 @@
 //! JSON `:predict` route and the binary `:predict-bin` tensor route — at
 //! batch sizes 1 and 8. `cargo bench --bench http_serving`.
 //!
-//! Two headline ratios:
+//! Three headline ratios:
 //!
 //! * *overhead factor* — how much of the pipeline's throughput survives
 //!   the JSON + TCP round trip;
@@ -12,7 +12,10 @@
 //!   req/s at batch 8. The binary wire path skips JSON number
 //!   formatting/tokenising on both ends and decodes rows straight into
 //!   the batch lane's staging buffer, so the factor must stay above 1.0
-//!   (gated by `--check` via the committed baseline).
+//!   (gated by `--check` via the committed baseline);
+//! * *tracing_overhead_factor* — untraced over traced JSON req/s at
+//!   batch 8 (best of 3 each): what the always-on request spans cost.
+//!   `--check` gates it at 1.05x.
 //!
 //! A closed loop (every client blocks on its reply) keeps the comparison
 //! honest: all sides see identical offered concurrency. Environment
@@ -78,6 +81,7 @@ fn run_http(
     clients: usize,
     total: usize,
     binary: bool,
+    trace_requests: bool,
     artifact: &mut BenchArtifact,
     sane: &mut bool,
 ) -> f64 {
@@ -87,6 +91,7 @@ fn run_http(
         HttpServerConfig {
             workers: clients,
             max_pending: total.max(64),
+            trace_requests,
             ..HttpServerConfig::default()
         },
     )
@@ -121,7 +126,13 @@ fn run_http(
     let elapsed = t0.elapsed();
     let rep = server.report();
     let net = server.net_snapshot();
-    let label = if binary { "bin" } else { "json" };
+    let label = if binary {
+        "bin"
+    } else if trace_requests {
+        "json"
+    } else {
+        "json-untraced"
+    };
     println!(
         "  [{label} b{max_batch}: fill {:.2}, late joins {}, bytes copied {}, \
          p99 {} µs, shed {}, {} connections]",
@@ -133,10 +144,10 @@ fn run_http(
         net.connections
     );
     *sane &= rep.failed == 0 && net.responses_with(200) as usize == total;
-    let prefix = if binary {
-        format!("http_bin.batch_{max_batch}")
-    } else {
-        format!("http.batch_{max_batch}")
+    let prefix = match (binary, trace_requests) {
+        (true, _) => format!("http_bin.batch_{max_batch}"),
+        (false, true) => format!("http.batch_{max_batch}"),
+        (false, false) => format!("http_untraced.batch_{max_batch}"),
     };
     artifact.set_u64(&format!("{prefix}.p50_us"), rep.latency_us_p50);
     artifact.set_u64(&format!("{prefix}.p99_us"), rep.latency_us_p99);
@@ -180,8 +191,8 @@ fn main() {
         };
 
         // --- over the wire: the JSON tier, then the binary tensor route ---
-        let http_rps = run_http(max_batch, clients, total, false, &mut artifact, &mut sane);
-        let bin_rps = run_http(max_batch, clients, total, true, &mut artifact, &mut sane);
+        let http_rps = run_http(max_batch, clients, total, false, true, &mut artifact, &mut sane);
+        let bin_rps = run_http(max_batch, clients, total, true, true, &mut artifact, &mut sane);
 
         let factor = http_rps / inproc_rps;
         sane &= factor > 0.05; // the wire may cost, but not 20x
@@ -207,6 +218,26 @@ fn main() {
     sane &= bin_factor.is_finite() && bin_factor > 0.0;
     artifact.set_f64("json_vs_binary_overhead_factor", bin_factor);
     println!("\njson_vs_binary_overhead_factor (batch 8): {bin_factor:.2}x");
+
+    // --- tracing overhead: the same JSON batch-8 run with request spans
+    // disabled. The factor is untraced/traced req/s (>1 means tracing
+    // costs throughput); best-of-3 on both sides damps the noise a
+    // single closed-loop run carries. `--check` gates it at 1.05x —
+    // request-scoped tracing must stay within 5% of free.
+    let traced_rps = (0..2)
+        .map(|_| run_http(8, clients, total, false, true, &mut artifact, &mut sane))
+        .fold(json_rps_at_8, f64::max);
+    let untraced_rps = (0..3)
+        .map(|_| run_http(8, clients, total, false, false, &mut artifact, &mut sane))
+        .fold(f64::NAN, f64::max);
+    let tracing_factor = untraced_rps / traced_rps;
+    sane &= tracing_factor.is_finite() && tracing_factor > 0.0;
+    artifact.set_f64("tracing_overhead_factor", tracing_factor);
+    println!("tracing_overhead_factor (batch 8, untraced/traced): {tracing_factor:.3}x");
+    if std::env::args().any(|a| a == "--check") && tracing_factor > 1.05 {
+        println!("REGRESSION: tracing_overhead_factor {tracing_factor:.3} exceeds the 1.05x budget");
+        std::process::exit(1);
+    }
 
     // Artifact + optional baseline gate before the pass/fail logic, so CI
     // always gets the JSON even on a failing run.

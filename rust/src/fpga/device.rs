@@ -512,7 +512,11 @@ impl Agent for FpgaAgent {
             if let Some(tr) = &self.trace {
                 tr.record_ending_now(
                     crate::trace::recorder::EventKind::Reconfig,
-                    format!("reconfig:{}", role.bitstream.name),
+                    format!(
+                        "reconfig[{}]:{}",
+                        outcome.attribution(),
+                        role.bitstream.name
+                    ),
                     "fpga-pl",
                     outcome.region() as u32,
                     stall_us,

@@ -91,6 +91,7 @@ fn main() -> Result<()> {
             shard_strategy_from_flags(&flags)?,
             flag_usize(&flags, "prefetch-depth", 0),
             flags.get("model").cloned(),
+            flag_usize(&flags, "slow-request-ms", 1000),
         ),
         "serve"
             if flags.contains_key("async")
@@ -168,14 +169,20 @@ commands:
                            upcoming roles onto idle PR regions so ICAP
                            transfers overlap compute (0 = off, the default)
   serve --http [ADDR] [--max-pending N --tenant-rps R --http-workers W
-                --serve-secs T --model DIR ...]
+                --serve-secs T --slow-request-ms MS --model DIR ...]
                            HTTP/1.1 frontend (default 127.0.0.1:8080) over the
                            async pipeline: POST /v1/models/<name>:predict,
                            GET /v1/models | /healthz | /metrics (Prometheus).
                            Sheds load with 429 + Retry-After past N pending
                            requests; rate-limits per X-Tenant header at R req/s
                            (0 = unlimited); honors X-Deadline-Ms; drains
-                           gracefully after T seconds (0 = run until killed)
+                           gracefully after T seconds (0 = run until killed).
+                           Every request is traced accept-to-retire: X-Request-Id
+                           minted/echoed, per-stage histograms on /metrics,
+                           GET /v1/debug/trace?last_ms=N dumps the flight
+                           recorder as Perfetto-ready Chrome-trace JSON, and
+                           requests over MS milliseconds (default 1000) log
+                           their stage breakdown
   export-demo [DIR]        write the built-in demo model bundles to DIR
                            (mnist, mnist_layers, tiny_fc; default ./demo-bundles)
   import-onnx FILE DIR     import an ONNX model (Conv/BN/Relu/MaxPool/Add/
@@ -672,10 +679,12 @@ fn serve_http(
     shard_strategy: tf_fpga::sharding::ShardStrategy,
     prefetch_depth: usize,
     model_dir: Option<String>,
+    slow_request_ms: usize,
 ) -> Result<()> {
     use tf_fpga::net::{HttpServer, HttpServerConfig};
     use tf_fpga::serve::{AsyncInferenceServer, AsyncServerConfig, BatchPolicy, ModelSpec};
     use tf_fpga::tf::session::SessionOptions;
+    use tf_fpga::trace::TraceRecorder;
 
     let policy = BatchPolicy {
         max_batch,
@@ -685,6 +694,11 @@ fn serve_http(
         Some(dir) => ModelSpec::from_dir(dir, policy).map_err(|e| anyhow::anyhow!("{e}"))?,
         None => ModelSpec::new("mnist", policy),
     };
+    // One flight recorder for the whole stack: the session threads it
+    // through plan replay / routing / reconfiguration, the HTTP frontend
+    // (which adopts the session's recorder) adds the per-request spans,
+    // and GET /v1/debug/trace reads it back out.
+    let flight = TraceRecorder::new();
     let srv = AsyncInferenceServer::start(AsyncServerConfig {
         models: vec![spec],
         session: SessionOptions {
@@ -692,6 +706,7 @@ fn serve_http(
             fpga_pool,
             shard_strategy,
             prefetch: prefetch_from_depth(prefetch_depth),
+            trace: Some(flight),
             ..SessionOptions::default()
         },
         pipeline_depth,
@@ -705,6 +720,7 @@ fn serve_http(
             workers: http_workers,
             max_pending,
             tenant_rps: tenant_rps as u64,
+            slow_request: std::time::Duration::from_millis(slow_request_ms as u64),
             ..HttpServerConfig::default()
         },
     )
@@ -719,6 +735,7 @@ fn serve_http(
     println!("  GET  http://{bound}/v1/models");
     println!("  GET  http://{bound}/healthz   |   GET http://{bound}/metrics");
     println!("  POST http://{bound}/v1/models/<name>:predict  {{\"instances\": [[...]]}}");
+    println!("  GET  http://{bound}/v1/debug/trace?last_ms=5000  (Perfetto-ready flight recorder)");
     if serve_secs > 0 {
         std::thread::sleep(std::time::Duration::from_secs(serve_secs as u64));
         println!("\n--serve-secs elapsed; draining...");

@@ -72,6 +72,47 @@ impl Histogram {
         self.max
     }
 
+    /// Total of all recorded values (same unit the caller recorded in).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Raw per-bucket counts; bucket `i` covers `[2^i, 2^(i+1))`, with the
+    /// values 0 and 1 both landing in bucket 0. Exposed for cumulative
+    /// Prometheus `_bucket` exposition.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Percentile estimate (`p` in `[0, 100]`) with intra-bucket linear
+    /// interpolation: the p-th sample's bucket is located by cumulative
+    /// count, then the estimate is placed proportionally between the
+    /// bucket's bounds and clamped to the observed min/max (so a
+    /// single-sample histogram answers that sample exactly instead of a
+    /// bucket edge). Returns 0.0 on an empty histogram.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi = (1u128 << (i + 1)) as f64;
+                let into = (target - seen) as f64 / c as f64;
+                let est = lo + (hi - lo) * into;
+                return est.clamp(self.min as f64, self.max as f64);
+            }
+            seen += c;
+        }
+        self.max as f64
+    }
+
     /// Merge another histogram in.
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
@@ -136,5 +177,69 @@ mod tests {
         assert_eq!(h.quantile(0.5), 0);
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.min(), 0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.sum(), 0);
+    }
+
+    #[test]
+    fn percentile_single_bucket_answers_the_sample() {
+        // One sample: every percentile is that sample, not a bucket edge.
+        let mut h = Histogram::new();
+        h.record(5);
+        assert_eq!(h.percentile(0.0), 5.0);
+        assert_eq!(h.percentile(50.0), 5.0);
+        assert_eq!(h.percentile(99.9), 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates_within_a_bucket() {
+        // 100 samples spread across bucket 6 ([64, 128)): p50 should land
+        // near the bucket middle, strictly between the bounds, and stay
+        // monotone in p.
+        let mut h = Histogram::new();
+        for v in 0..100u64 {
+            h.record(64 + (v * 63) / 99);
+        }
+        let p50 = h.percentile(50.0);
+        assert!(p50 > 64.0 && p50 < 128.0, "p50 = {p50}");
+        assert!((p50 - 96.0).abs() < 16.0, "p50 = {p50} should be near mid-bucket");
+        assert!(h.percentile(10.0) <= h.percentile(50.0));
+        assert!(h.percentile(50.0) <= h.percentile(99.0));
+    }
+
+    #[test]
+    fn percentile_after_merge_spans_both_sources() {
+        // Per-lane histograms rolled up into a pool-wide view: percentiles
+        // of the merged histogram must cover both sources' ranges.
+        let mut a = Histogram::new();
+        for _ in 0..90 {
+            a.record(10);
+        }
+        let mut b = Histogram::new();
+        for _ in 0..10 {
+            b.record(5000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        let p50 = a.percentile(50.0);
+        assert!(p50 < 64.0, "p50 = {p50} should sit in the low cluster");
+        let p99 = a.percentile(99.0);
+        assert!(p99 >= 4096.0, "p99 = {p99} should reach the slow cluster");
+        assert!(p99 <= 5000.0, "p99 = {p99} clamped to observed max");
+    }
+
+    #[test]
+    fn bucket_counts_expose_log2_layout() {
+        let mut h = Histogram::new();
+        h.record(0);
+        h.record(1);
+        h.record(2);
+        h.record(1000);
+        let b = h.bucket_counts();
+        assert_eq!(b.len(), 64);
+        assert_eq!(b[0], 2, "0 and 1 share bucket 0");
+        assert_eq!(b[1], 1, "2 lands in [2,4)");
+        assert_eq!(b[9], 1, "1000 lands in [512,1024)");
+        assert_eq!(h.sum(), 1003);
     }
 }

@@ -1,12 +1,15 @@
 //! Measurement and reporting utilities: the log2-bucketed latency
 //! [`Histogram`] and paper-style [`Table`] rendering, plus the lock-free
 //! [`ServeCounters`] the async serving pipeline shares across its submit,
-//! batcher and completer threads.
+//! batcher and completer threads, and the per-stage latency
+//! [`StageHistograms`] behind the request-scoped observability story.
 
 pub mod counters;
 pub mod histogram;
 pub mod report;
+pub mod stages;
 
 pub use counters::{CounterSnapshot, ServeCounters};
 pub use histogram::Histogram;
 pub use report::Table;
+pub use stages::StageHistograms;

@@ -1,0 +1,100 @@
+//! Per-stage latency histograms: one log2 [`Histogram`] per pipeline
+//! [`Stage`], shared across the HTTP workers and the serving pipeline
+//! threads. The `/metrics` endpoint renders these as real Prometheus
+//! histograms (`_bucket`/`_sum`/`_count`), giving every stage of the
+//! request path an attribution story without collecting raw samples.
+
+use crate::metrics::histogram::Histogram;
+use crate::trace::span::{SpanCtx, Stage};
+use std::sync::Mutex;
+
+/// Thread-safe per-stage histogram set.
+#[derive(Debug)]
+pub struct StageHistograms {
+    inner: Mutex<Vec<Histogram>>,
+}
+
+impl Default for StageHistograms {
+    fn default() -> Self {
+        StageHistograms::new()
+    }
+}
+
+impl StageHistograms {
+    pub fn new() -> StageHistograms {
+        StageHistograms {
+            inner: Mutex::new(vec![Histogram::new(); Stage::ALL.len()]),
+        }
+    }
+
+    fn idx(stage: Stage) -> usize {
+        Stage::ALL
+            .iter()
+            .position(|s| *s == stage)
+            .expect("Stage::ALL covers every variant")
+    }
+
+    /// Record one observation (µs) for `stage`.
+    pub fn record(&self, stage: Stage, dur_us: u64) {
+        self.inner.lock().unwrap()[Self::idx(stage)].record(dur_us);
+    }
+
+    /// Fold a finished request span's whole breakdown in.
+    pub fn record_span(&self, span: &SpanCtx) {
+        let stages = span.stages();
+        if stages.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for (stage, dur_us) in stages {
+            inner[Self::idx(stage)].record(dur_us);
+        }
+    }
+
+    /// Clone-out snapshot, in [`Stage::ALL`] order, for exposition.
+    pub fn snapshot(&self) -> Vec<(Stage, Histogram)> {
+        let inner = self.inner.lock().unwrap();
+        Stage::ALL
+            .iter()
+            .copied()
+            .zip(inner.iter().cloned())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::recorder::TraceRecorder;
+
+    #[test]
+    fn records_per_stage_and_snapshots() {
+        let h = StageHistograms::new();
+        h.record(Stage::BatchWait, 100);
+        h.record(Stage::BatchWait, 200);
+        h.record(Stage::KernelExec, 50);
+        let snap = h.snapshot();
+        assert_eq!(snap.len(), Stage::ALL.len());
+        let batch = snap.iter().find(|(s, _)| *s == Stage::BatchWait).unwrap();
+        assert_eq!(batch.1.count(), 2);
+        assert_eq!(batch.1.sum(), 300);
+        let kernel = snap.iter().find(|(s, _)| *s == Stage::KernelExec).unwrap();
+        assert_eq!(kernel.1.count(), 1);
+        let route = snap.iter().find(|(s, _)| *s == Stage::Route).unwrap();
+        assert_eq!(route.1.count(), 0);
+    }
+
+    #[test]
+    fn folds_a_span_breakdown() {
+        let span = SpanCtx::new("r", TraceRecorder::new());
+        span.record_stage(Stage::AdmissionWait, 3);
+        span.record_stage(Stage::ReplySerialize, 9);
+        let h = StageHistograms::new();
+        h.record_span(&span);
+        let snap = h.snapshot();
+        let adm = snap.iter().find(|(s, _)| *s == Stage::AdmissionWait).unwrap();
+        assert_eq!(adm.1.count(), 1);
+        let reply = snap.iter().find(|(s, _)| *s == Stage::ReplySerialize).unwrap();
+        assert_eq!(reply.1.sum(), 9);
+    }
+}

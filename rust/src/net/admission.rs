@@ -201,6 +201,28 @@ impl PendingGate {
         }
     }
 
+    /// [`PendingGate::try_acquire`] annotated onto a request span: the
+    /// gate's admission decision — the pending level at entry, or the
+    /// rejection — lands on the request's trace track. Observational:
+    /// admission itself is identical to the unspanned call.
+    pub fn try_acquire_spanned(
+        &self,
+        span: &crate::trace::SpanCtx,
+    ) -> Option<PendingPermit> {
+        let permit = self.try_acquire();
+        if span.enabled() {
+            match &permit {
+                Some(_) => span.annotate(format!(
+                    "admitted (pending {}/{})",
+                    self.pending(),
+                    self.max
+                )),
+                None => span.annotate(format!("shed: pending gate full ({})", self.max)),
+            }
+        }
+        permit
+    }
+
     /// Requests currently holding a permit. May transiently read up to
     /// one above `max` per concurrent caller: `try_acquire` increments
     /// optimistically and undoes on rejection, so treat this as a

@@ -28,6 +28,11 @@ impl RawResponse {
             .map(|(_, v)| v.as_str())
     }
 
+    /// The server-assigned (or echoed) `X-Request-Id`.
+    pub fn request_id(&self) -> Option<&str> {
+        self.header("x-request-id")
+    }
+
     fn closes(&self) -> bool {
         self.header("connection")
             .map(|v| v.eq_ignore_ascii_case("close"))
@@ -55,6 +60,27 @@ impl HttpResponse {
     /// Parse the body as JSON.
     pub fn json(&self) -> Result<Json, JsonError> {
         Json::parse(&self.body)
+    }
+
+    /// The server-assigned (or echoed) `X-Request-Id`.
+    pub fn request_id(&self) -> Option<&str> {
+        self.header("x-request-id")
+    }
+
+    /// The `X-Timing` stage breakdown (requires sending
+    /// `X-Debug-Timing: 1`): `(stage, microseconds)` pairs in the
+    /// server's `stage=us;...;total=us` order, `total` included as its
+    /// own pair.
+    pub fn timing(&self) -> Option<Vec<(String, u64)>> {
+        let raw = self.header("x-timing")?;
+        Some(
+            raw.split(';')
+                .filter_map(|kv| {
+                    let (k, v) = kv.split_once('=')?;
+                    Some((k.to_string(), v.parse().ok()?))
+                })
+                .collect(),
+        )
     }
 
     fn from_raw(raw: RawResponse) -> io::Result<HttpResponse> {
@@ -387,6 +413,30 @@ mod tests {
         for (g, w) in got[0].iter().zip(&row) {
             assert_eq!(g.to_bits(), w.to_bits(), "binary body must be bit-exact");
         }
+    }
+
+    #[test]
+    fn timing_header_parses_into_stage_pairs() {
+        let resp = HttpResponse {
+            status: 200,
+            headers: vec![
+                ("x-request-id".to_string(), "r-0000002a".to_string()),
+                (
+                    "x-timing".to_string(),
+                    "admission_wait=120;batch_wait=950;kernel_exec=80;total=1400".to_string(),
+                ),
+            ],
+            body: String::new(),
+        };
+        assert_eq!(resp.request_id(), Some("r-0000002a"));
+        let timing = resp.timing().unwrap();
+        assert_eq!(timing[0], ("admission_wait".to_string(), 120));
+        assert_eq!(timing.last().unwrap(), &("total".to_string(), 1400));
+        assert_eq!(timing.len(), 4);
+
+        let bare = HttpResponse { status: 200, headers: vec![], body: String::new() };
+        assert!(bare.timing().is_none());
+        assert!(bare.request_id().is_none());
     }
 
     #[test]

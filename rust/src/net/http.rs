@@ -29,6 +29,9 @@ pub struct Request {
     pub method: String,
     /// Request target with any `?query` suffix split off.
     pub path: String,
+    /// The raw query string (bytes after `?`, without it); empty when the
+    /// target carried none.
+    pub query: String,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
     /// `HTTP/1.0` requests (and `Connection: close`) disable keep-alive.
@@ -44,6 +47,15 @@ impl Request {
             .iter()
             .find(|(k, _)| *k == name)
             .map(|(_, v)| v.as_str())
+    }
+
+    /// First value of a `k=v` query parameter (no percent-decoding — the
+    /// debug endpoints using this take only simple numerics).
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query.split('&').find_map(|kv| {
+            let (k, v) = kv.split_once('=')?;
+            (k == name).then_some(v)
+        })
     }
 
     /// Whether the client asked for the connection to end after this
@@ -224,8 +236,11 @@ pub fn read_request(
         off = end;
     }
 
-    let path = target.split('?').next().unwrap_or(&target).to_string();
-    Ok(Request { method, path, headers, body, http10 })
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    Ok(Request { method, path, query, headers, body, http10 })
 }
 
 /// An HTTP response about to be written. Always carries an explicit
@@ -349,6 +364,9 @@ mod tests {
         .unwrap();
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/v1/models/mnist:predict", "query split off");
+        assert_eq!(req.query, "verbose=1", "query preserved separately");
+        assert_eq!(req.query_param("verbose"), Some("1"));
+        assert_eq!(req.query_param("missing"), None);
         assert_eq!(req.header("x-tenant"), Some("alice"));
         assert_eq!(req.header("X-TENANT"), Some("alice"));
         assert_eq!(req.body, b"abcd");

@@ -19,8 +19,12 @@
 //!   and pre-dispatch [`admission::Deadline`] cancellation, all over an
 //!   injected [`admission::Clock`].
 //! * [`server`] — [`HttpServer`]: routes (`:predict`, `:predict-bin`,
-//!   `/v1/models`, `/healthz`, `/metrics`), structured JSON error bodies,
-//!   graceful drain on [`HttpServer::shutdown`].
+//!   `/v1/models`, `/healthz`, `/metrics`, `/v1/debug/trace`), structured
+//!   JSON error bodies, graceful drain on [`HttpServer::shutdown`].
+//!   Every predict request carries an `X-Request-Id` (minted or echoed)
+//!   and a [`crate::trace::SpanCtx`] that follows it from accept to
+//!   kernel retire; per-stage latencies feed the `/metrics` histograms
+//!   and the always-on flight recorder behind `/v1/debug/trace`.
 //! * [`wire`] — the binary tensor format (`application/x-tf-fpga-tensor`):
 //!   fixed header + raw little-endian f32 payload, decoded straight into
 //!   the batch lane's staging buffer. A base64 raw-f32 tier

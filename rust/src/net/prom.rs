@@ -4,12 +4,17 @@
 //! [`NetCounters`] accounts what happens at the HTTP boundary
 //! (connections, responses by status code, sheds by reason, deadline
 //! cancellations); [`render`] merges a snapshot of those with the serving
-//! pipeline's [`CounterSnapshot`] and the per-agent
-//! [`ShardAgentReport`] rows into the Prometheus text format (version
-//! 0.0.4 — `# HELP`/`# TYPE` preambles, `name{labels} value` samples).
+//! pipeline's [`CounterSnapshot`], the per-agent [`ShardAgentReport`]
+//! rows, and the per-stage request-latency [`Histogram`]s into the
+//! Prometheus text format (version 0.0.4 — `# HELP`/`# TYPE` preambles,
+//! `name{labels} value` samples; stage latencies use the native
+//! histogram exposition: cumulative `_bucket{le=...}` plus `_sum` and
+//! `_count`).
 
 use crate::metrics::counters::CounterSnapshot;
+use crate::metrics::histogram::Histogram;
 use crate::sharding::ShardAgentReport;
+use crate::trace::Stage;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -102,12 +107,15 @@ fn metric(out: &mut String, name: &str, kind: &str, help: &str) {
 }
 
 /// Render the full `/metrics` document: HTTP-boundary counters, serving
-/// pipeline counters, and one labelled sample per pool agent.
+/// pipeline counters, one labelled sample per pool agent, the per-stage
+/// request-latency histograms, and the flight recorder's drop counter.
 pub fn render(
     net: &NetSnapshot,
     serve: &CounterSnapshot,
     pool: &[ShardAgentReport],
     draining: bool,
+    stages: &[(Stage, Histogram)],
+    trace_dropped: u64,
 ) -> String {
     let mut out = String::with_capacity(2048);
 
@@ -353,6 +361,47 @@ pub fn render(
             shard.agent, shard.oldest_inflight_us
         );
     }
+
+    // Per-stage request latency: the log2 ring of [`Histogram`] maps to
+    // cumulative Prometheus buckets with `le = 2^(i+1)` (every value in
+    // bucket `i` is `< 2^(i+1)`). Buckets past the highest occupied one
+    // are elided — `+Inf` always closes the series.
+    metric(
+        &mut out,
+        "tf_fpga_stage_latency_us",
+        "histogram",
+        "Per-request pipeline stage latency, microseconds.",
+    );
+    for (stage, hist) in stages {
+        let name = stage.name();
+        let counts = hist.bucket_counts();
+        let mut cum = 0u64;
+        if let Some(hi) = counts.iter().rposition(|&c| c > 0) {
+            for (i, &c) in counts.iter().enumerate().take(hi + 1) {
+                cum += c;
+                let le = 1u128 << (i + 1);
+                let _ = writeln!(
+                    out,
+                    "tf_fpga_stage_latency_us_bucket{{stage=\"{name}\",le=\"{le}\"}} {cum}"
+                );
+            }
+        }
+        let _ = writeln!(
+            out,
+            "tf_fpga_stage_latency_us_bucket{{stage=\"{name}\",le=\"+Inf\"}} {}",
+            hist.count()
+        );
+        let _ = writeln!(out, "tf_fpga_stage_latency_us_sum{{stage=\"{name}\"}} {}", hist.sum());
+        let _ = writeln!(out, "tf_fpga_stage_latency_us_count{{stage=\"{name}\"}} {}", hist.count());
+    }
+
+    metric(
+        &mut out,
+        "tf_fpga_trace_events_dropped_total",
+        "counter",
+        "Trace events evicted from the flight-recorder ring since start.",
+    );
+    let _ = writeln!(out, "tf_fpga_trace_events_dropped_total {trace_dropped}");
     out
 }
 
@@ -440,7 +489,12 @@ mod tests {
                 oldest_inflight_us: 4200,
             },
         ];
-        let text = render(&c.snapshot(), &serve, &pool, true);
+        let mut admission = Histogram::new();
+        admission.record(3); // bucket 1 (le 4)
+        admission.record(5); // bucket 2 (le 8)
+        admission.record(6); // bucket 2 (le 8)
+        let stages = vec![(Stage::AdmissionWait, admission), (Stage::KernelExec, Histogram::new())];
+        let text = render(&c.snapshot(), &serve, &pool, true, &stages, 17);
         for needle in [
             "tf_fpga_http_responses_total{code=\"200\"} 1",
             "tf_fpga_http_responses_total{code=\"429\"} 1",
@@ -468,8 +522,22 @@ mod tests {
             "tf_fpga_agent_retries_total{agent=\"ultra96-pl-1\"} 3",
             "tf_fpga_agent_oldest_inflight_us{agent=\"ultra96-pl-1\"} 4200",
             "# TYPE tf_fpga_http_responses_total counter",
+            "# TYPE tf_fpga_stage_latency_us histogram",
+            "tf_fpga_stage_latency_us_bucket{stage=\"admission_wait\",le=\"2\"} 0",
+            "tf_fpga_stage_latency_us_bucket{stage=\"admission_wait\",le=\"4\"} 1",
+            "tf_fpga_stage_latency_us_bucket{stage=\"admission_wait\",le=\"8\"} 3",
+            "tf_fpga_stage_latency_us_bucket{stage=\"admission_wait\",le=\"+Inf\"} 3",
+            "tf_fpga_stage_latency_us_sum{stage=\"admission_wait\"} 14",
+            "tf_fpga_stage_latency_us_count{stage=\"admission_wait\"} 3",
+            "tf_fpga_stage_latency_us_bucket{stage=\"kernel_exec\",le=\"+Inf\"} 0",
+            "tf_fpga_stage_latency_us_count{stage=\"kernel_exec\"} 0",
+            "tf_fpga_trace_events_dropped_total 17",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }
+        // Cumulative buckets never decrease and the elision stops at the
+        // highest occupied bucket: no admission_wait bucket past le="8"
+        // other than +Inf.
+        assert!(!text.contains("stage=\"admission_wait\",le=\"16\""), "{text}");
     }
 }

@@ -30,6 +30,18 @@
 //! * `GET /v1/models` — hosted models with signature and I/O meta.
 //! * `GET /healthz` — liveness (`"ok"`, or `"draining"` during shutdown).
 //! * `GET /metrics` — Prometheus text (see [`crate::net::prom`]).
+//! * `GET /v1/debug/trace?last_ms=N` — flight-recorder dump: Chrome-trace
+//!   JSON for the last `N` milliseconds (whole ring when omitted), ready
+//!   for Perfetto / `chrome://tracing`.
+//!
+//! Every predict request is traced end to end: the server mints (or
+//! honors, via the `X-Request-Id` header) a request id, threads a
+//! [`SpanCtx`] through admission → batching → routing → kernel retire,
+//! and echoes the id back on the reply. `X-Debug-Timing: 1` opts the
+//! reply into an `X-Timing` header with the per-stage breakdown in
+//! microseconds; requests slower than `HttpServerConfig::slow_request`
+//! log the same breakdown to stderr. Per-stage latencies also feed the
+//! Prometheus histograms on `/metrics`.
 //!
 //! [`HttpServer::shutdown`] drains gracefully: stop accepting, let every
 //! admitted request finish and flush its reply, then stop the inference
@@ -40,19 +52,21 @@ use crate::net::admission::{Clock, Deadline, PendingGate, RateLimiter, SystemClo
 use crate::net::http::{self, HttpError, Request, Response};
 use crate::net::prom::{self, NetCounters};
 use crate::net::wire;
+use crate::metrics::StageHistograms;
 use crate::serve::async_server::AsyncInferenceServer;
 use crate::serve::batcher::TensorWriter;
 use crate::serve::hosted::ModelIoMeta;
+use crate::trace::{SpanCtx, Stage, TraceRecorder};
 use crate::util::b64;
 use crate::util::json::{Json, JsonErrorKind, JsonLimits};
 use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Frontend configuration. The admission knobs mirror the CLI:
 /// `--max-pending` bounds admitted-but-unanswered requests, and
@@ -94,6 +108,19 @@ pub struct HttpServerConfig {
     /// Time source for rate limiting and deadlines; swap in a manual
     /// clock for deterministic tests.
     pub clock: Arc<dyn Clock>,
+    /// Flight recorder for request spans and the `/v1/debug/trace`
+    /// endpoint. `None` (the default) shares the session's recorder when
+    /// the pipeline has one, else spins up a fresh bounded ring — the
+    /// recorder is always on.
+    pub trace: Option<TraceRecorder>,
+    /// Requests slower than this log their full span breakdown to
+    /// stderr. `Duration::ZERO` disables the slow log.
+    pub slow_request: Duration,
+    /// Per-request span tracing (on by default). Off, requests still get
+    /// ids but record no stage spans — the knob the `http_serving` bench
+    /// uses to price the tracing path, and an escape hatch if it ever
+    /// shows up in a profile.
+    pub trace_requests: bool,
 }
 
 impl Default for HttpServerConfig {
@@ -109,6 +136,9 @@ impl Default for HttpServerConfig {
             keep_alive: Duration::from_secs(5),
             request_read_budget: Duration::from_secs(10),
             clock: Arc::new(SystemClock::new()),
+            trace: None,
+            slow_request: Duration::from_secs(1),
+            trace_requests: true,
         }
     }
 }
@@ -128,6 +158,15 @@ struct Shared {
     max_body: usize,
     read_budget: Duration,
     json_limits: JsonLimits,
+    /// Always-on flight recorder; request spans and pipeline events land
+    /// here, `/v1/debug/trace` reads it back out.
+    trace: TraceRecorder,
+    /// Per-stage latency histograms exported on `/metrics`.
+    stages: StageHistograms,
+    /// Monotonic source for minted request ids.
+    req_seq: AtomicU64,
+    slow_request: Duration,
+    trace_requests: bool,
 }
 
 /// A running HTTP frontend. Dropping it (or calling
@@ -152,6 +191,15 @@ impl HttpServer {
             let burst = if config.tenant_burst > 0 { config.tenant_burst } else { config.tenant_rps };
             RateLimiter::new(config.tenant_rps, burst, Arc::clone(&config.clock))
         });
+        // One recorder serves both halves: request spans from this
+        // frontend and pipeline events (plan replay, router picks,
+        // reconfigurations) from the session, so `/v1/debug/trace` shows
+        // them on a shared clock.
+        let trace = config
+            .trace
+            .clone()
+            .or_else(|| srv.session().trace().cloned())
+            .unwrap_or_default();
         let shared = Arc::new(Shared {
             srv,
             gate: PendingGate::new(config.max_pending as u64),
@@ -165,6 +213,11 @@ impl HttpServer {
                 max_depth: config.max_json_depth,
                 max_bytes: config.max_body_bytes,
             },
+            trace,
+            stages: StageHistograms::new(),
+            req_seq: AtomicU64::new(0),
+            slow_request: config.slow_request,
+            trace_requests: config.trace_requests,
         });
 
         // Bounded connection backlog: enough for every worker plus a
@@ -223,6 +276,16 @@ impl HttpServer {
     /// Frontend counters (responses by code, sheds, deadline cancels).
     pub fn net_snapshot(&self) -> prom::NetSnapshot {
         self.shared.net.snapshot()
+    }
+
+    /// The flight recorder backing request spans and `/v1/debug/trace`.
+    pub fn trace(&self) -> &TraceRecorder {
+        &self.shared.trace
+    }
+
+    /// Per-stage latency histograms (what `/metrics` exports).
+    pub fn stage_snapshot(&self) -> Vec<(Stage, crate::metrics::histogram::Histogram)> {
+        self.shared.stages.snapshot()
     }
 
     /// Graceful drain: stop accepting, refuse new connections with `503`,
@@ -365,6 +428,7 @@ fn route(req: &Request, shared: &Shared) -> Response {
         ("GET", "/healthz") => handle_healthz(shared),
         ("GET", "/metrics") => handle_metrics(shared),
         ("GET", "/v1/models") => handle_models(shared),
+        ("GET", "/v1/debug/trace") => handle_debug_trace(req, shared),
         (method, path)
             if path.starts_with(PREDICT_PREFIX)
                 && (path.ends_with(PREDICT_SUFFIX) || path.ends_with(PREDICT_BIN_SUFFIX)) =>
@@ -416,8 +480,31 @@ fn handle_metrics(shared: &Shared) -> Response {
         &shared.srv.counters(),
         &report.pool,
         shared.draining.load(Ordering::SeqCst),
+        &shared.stages.snapshot(),
+        shared.trace.dropped(),
     );
     Response::text(200, text)
+}
+
+/// `GET /v1/debug/trace?last_ms=N` — dump the flight recorder as
+/// Chrome-trace JSON, windowed to the last `N` milliseconds (the whole
+/// ring when `last_ms` is omitted).
+fn handle_debug_trace(req: &Request, shared: &Shared) -> Response {
+    let cutoff_us = match req.query_param("last_ms") {
+        None => 0,
+        Some(v) => match v.parse::<u64>() {
+            Ok(ms) => shared.trace.now_us().saturating_sub(ms.saturating_mul(1000)),
+            Err(_) => {
+                return error_response(
+                    400,
+                    "bad_request",
+                    &format!("bad last_ms '{v}' (want milliseconds)"),
+                    vec![],
+                )
+            }
+        },
+    };
+    Response::json(200, shared.trace.to_chrome_trace_since(cutoff_us))
 }
 
 fn handle_models(shared: &Shared) -> Response {
@@ -451,7 +538,78 @@ fn endpoint_json(name: &str, sample_shape: &[usize], elems: usize) -> Json {
     Json::Obj(m)
 }
 
+/// Predict entry point: mints the request id, opens the span, runs the
+/// actual handler, then stamps observability headers on whatever came
+/// back — `X-Request-Id` always, `X-Timing` when the client sent
+/// `X-Debug-Timing: 1` — feeds the per-stage histograms, and logs slow
+/// requests with their full breakdown.
 fn handle_predict(model: &str, req: &Request, shared: &Shared, binary_route: bool) -> Response {
+    let started = Instant::now();
+    let req_id = request_id(req, shared);
+    let span = if shared.trace_requests {
+        SpanCtx::new(req_id.clone(), shared.trace.clone())
+    } else {
+        SpanCtx::disabled()
+    };
+    let mut resp = predict_inner(model, req, shared, binary_route, &span, started);
+    let total_us = started.elapsed().as_micros() as u64;
+    shared.stages.record_span(&span);
+    if req.header("x-debug-timing").is_some_and(|v| v.trim() == "1") {
+        resp = resp.with_header("X-Timing", timing_header(&span, total_us));
+    }
+    if !shared.slow_request.is_zero() && started.elapsed() >= shared.slow_request {
+        eprintln!(
+            "[http] slow request {req_id}: model={model} status={} {}",
+            resp.status,
+            timing_header(&span, total_us),
+        );
+    }
+    resp.with_header("X-Request-Id", req_id)
+}
+
+/// The inbound `X-Request-Id` (sanitized to header-safe characters,
+/// capped at 64) when the client sent one, else a freshly minted
+/// `r-<n>` id unique within this server.
+fn request_id(req: &Request, shared: &Shared) -> String {
+    if let Some(v) = req.header("x-request-id") {
+        let clean: String = v
+            .chars()
+            .filter(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.' | ':'))
+            .take(64)
+            .collect();
+        if !clean.is_empty() {
+            return clean;
+        }
+    }
+    format!("r-{:08x}", shared.req_seq.fetch_add(1, Ordering::Relaxed) + 1)
+}
+
+/// `stage=us;...;total=us` — the `X-Timing` header value. A multi-row
+/// request records one entry per row for the batched stages; rows ride
+/// the pipeline concurrently, so the wall-clock contribution reported
+/// here is the per-stage maximum, not the sum.
+fn timing_header(span: &SpanCtx, total_us: u64) -> String {
+    use std::fmt::Write;
+    let stages = span.stages();
+    let mut out = String::new();
+    for stage in Stage::ALL {
+        let max = stages.iter().filter(|(s, _)| *s == stage).map(|&(_, us)| us).max();
+        if let Some(us) = max {
+            let _ = write!(out, "{}={us};", stage.name());
+        }
+    }
+    let _ = write!(out, "total={total_us}");
+    out
+}
+
+fn predict_inner(
+    model: &str,
+    req: &Request,
+    shared: &Shared,
+    binary_route: bool,
+    span: &SpanCtx,
+    started: Instant,
+) -> Response {
     let Some(meta) = shared.srv.model_meta(model).cloned() else {
         let served = shared.srv.models();
         return error_response(
@@ -481,7 +639,7 @@ fn handle_predict(model: &str, req: &Request, shared: &Shared, binary_route: boo
     }
 
     // 2. Bounded pending gate — held (RAII) until the reply is formed.
-    let Some(_permit) = shared.gate.try_acquire() else {
+    let Some(_permit) = shared.gate.try_acquire_spanned(span) else {
         shared.net.on_shed_pending();
         return error_response(
             429,
@@ -575,6 +733,11 @@ fn handle_predict(model: &str, req: &Request, shared: &Shared, binary_route: boo
         }
     }
 
+    // Everything up to dispatch — rate limiting, the pending gate,
+    // deadline parsing, body decode/validation — is the request's
+    // admission window.
+    span.record_stage(Stage::AdmissionWait, started.elapsed().as_micros() as u64);
+
     // 6. Dispatch every row straight into its batch lane's staging
     // buffer, then collect replies in order. The binary and base64 tiers
     // copy raw little-endian rows through [`wire::copy_row_into`]; JSON
@@ -584,7 +747,7 @@ fn handle_predict(model: &str, req: &Request, shared: &Shared, binary_route: boo
     match &parsed.body {
         ParsedBody::Json(samples) => {
             for raw in samples {
-                match shared.srv.infer_async_with(model, |w: &mut TensorWriter<'_>| {
+                match shared.srv.infer_async_spanned(model, span.clone(), |w: &mut TensorWriter<'_>| {
                     flatten_into(raw, w)
                 }) {
                     Ok(rx) => receivers.push(rx),
@@ -598,7 +761,7 @@ fn handle_predict(model: &str, req: &Request, shared: &Shared, binary_route: boo
             let row_bytes = meta.in_elems * 4;
             for i in 0..parsed.rows {
                 let row = &data[i * row_bytes..(i + 1) * row_bytes];
-                match shared.srv.infer_async_with(model, |w: &mut TensorWriter<'_>| {
+                match shared.srv.infer_async_spanned(model, span.clone(), |w: &mut TensorWriter<'_>| {
                     wire::copy_row_into(row, w);
                     Ok(())
                 }) {
@@ -639,7 +802,8 @@ fn handle_predict(model: &str, req: &Request, shared: &Shared, binary_route: boo
     }
 
     // The reply mirrors the request's encoding.
-    match parsed.reply {
+    let ser_start = Instant::now();
+    let resp = match parsed.reply {
         ReplyEncoding::Binary => {
             let mut flat = Vec::with_capacity(out_rows.len() * meta.out_elems);
             for r in &out_rows {
@@ -673,7 +837,9 @@ fn handle_predict(model: &str, req: &Request, shared: &Shared, binary_route: boo
             body.insert("predictions".to_string(), Json::Arr(rows));
             Response::json(200, Json::Obj(body).to_string())
         }
-    }
+    };
+    span.record_stage(Stage::ReplySerialize, ser_start.elapsed().as_micros() as u64);
+    resp
 }
 
 /// What a predict body parsed to: how many rows, how to encode the
@@ -1146,6 +1312,45 @@ mod tests {
     }
 
     #[test]
+    fn request_ids_timing_header_and_debug_trace() {
+        let mut server = tiny_server(HttpServerConfig::default());
+        let mut client = NetClient::connect(server.local_addr()).unwrap();
+        let sample: Vec<f32> = (0..16).map(|i| i as f32 * 0.25).collect();
+
+        // Inbound id is honored and echoed; X-Debug-Timing opts into the
+        // stage breakdown header.
+        let resp = client
+            .predict(
+                "tiny",
+                &[sample.as_slice()],
+                &[("X-Request-Id", "abc-123"), ("X-Debug-Timing", "1")],
+            )
+            .unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        assert_eq!(resp.header("x-request-id"), Some("abc-123"));
+        let timing = resp.header("x-timing").expect("X-Timing header").to_string();
+        for key in ["admission_wait=", "batch_wait=", "kernel_exec=", "reply_serialize=", "total="] {
+            assert!(timing.contains(key), "missing {key} in '{timing}'");
+        }
+
+        // No inbound id → a minted one; no X-Debug-Timing → no header.
+        let resp = client.predict("tiny", &[sample.as_slice()], &[]).unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(resp.header("x-request-id").unwrap().starts_with("r-"));
+        assert!(resp.header("x-timing").is_none());
+
+        // The flight recorder serves the traced request's track.
+        let t = client.get("/v1/debug/trace").unwrap();
+        assert_eq!(t.status, 200);
+        assert!(t.body.contains("req:abc-123"), "{}", t.body);
+        Json::parse(&t.body).expect("debug trace is valid JSON");
+        assert_eq!(client.get("/v1/debug/trace?last_ms=abc").unwrap().status, 400);
+
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
     fn metrics_counts_responses() {
         let mut server = tiny_server(HttpServerConfig::default());
         let mut client = NetClient::connect(server.local_addr()).unwrap();
@@ -1157,6 +1362,14 @@ mod tests {
         assert!(m.body.contains("tf_fpga_http_responses_total{code=\"404\"} 1"), "{}", m.body);
         assert!(m.body.contains("tf_fpga_serve_requests_total 0"), "{}", m.body);
         assert!(m.body.contains("tf_fpga_agent_dispatches_total{agent="), "{}", m.body);
+        // Stage histograms and the recorder drop counter are always
+        // exposed, even before any predict request.
+        assert!(
+            m.body.contains("tf_fpga_stage_latency_us_count{stage=\"admission_wait\"} 0"),
+            "{}",
+            m.body
+        );
+        assert!(m.body.contains("tf_fpga_trace_events_dropped_total 0"), "{}", m.body);
         drop(client);
         server.shutdown();
     }

@@ -47,6 +47,19 @@ impl LoadOutcome {
             LoadOutcome::Miss { reconfig_us, .. } => reconfig_us,
         }
     }
+
+    /// Stall attribution for trace events and the slow-request log:
+    /// `"hit"` (resident, nothing waited), `"prefetch-wait"` (resident
+    /// but its own prefetch was still streaming — the stall is the
+    /// residual transfer), `"miss"` (reactive reconfiguration on the
+    /// dispatch critical path).
+    pub fn attribution(&self) -> &'static str {
+        match *self {
+            LoadOutcome::Hit { wait_us: 0, .. } => "hit",
+            LoadOutcome::Hit { .. } => "prefetch-wait",
+            LoadOutcome::Miss { .. } => "miss",
+        }
+    }
 }
 
 /// Aggregated counters.

@@ -43,6 +43,7 @@ use crate::tf::dtype::DType;
 use crate::tf::graph::Graph;
 use crate::tf::session::{PendingRun, Session, SessionOptions};
 use crate::tf::tensor::Tensor;
+use crate::trace::span::{SpanCtx, Stage};
 use std::collections::HashMap;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -73,6 +74,11 @@ impl Default for AsyncServerConfig {
 /// in place through a [`TensorWriter`].
 struct Request {
     enqueued: Instant,
+    /// Request-scoped span handle: pipeline stages record their slice of
+    /// the latency onto it as the request moves through the batcher, the
+    /// router and the completer. `SpanCtx::disabled()` for untraced
+    /// submits — every recording call is then a no-op branch.
+    span: SpanCtx,
     /// Receives one flattened output row (`ModelIoMeta::out_elems` values).
     reply: mpsc::SyncSender<Result<Vec<f32>>>,
 }
@@ -91,6 +97,12 @@ struct InFlight {
     out_name: String,
     /// Lane the staging buffer came from (for recycling on retire).
     lane: usize,
+    /// When `run_async` accepted the batch — the start of every member's
+    /// `kernel_exec` window (dispatch to retire).
+    dispatched_at: Instant,
+    /// Pool-wide reconfiguration stall total at dispatch time; the delta
+    /// at completion attributes ICAP stall time to this batch's spans.
+    stall_us_base: u64,
 }
 
 /// Counting semaphore bounding batches in flight. Unlike the old bounded
@@ -374,6 +386,21 @@ impl AsyncInferenceServer {
         model: &str,
         fill: impl FnOnce(&mut TensorWriter<'_>) -> std::result::Result<(), String>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        self.infer_async_spanned(model, SpanCtx::disabled(), fill)
+    }
+
+    /// [`AsyncInferenceServer::infer_async_with`] carrying a request span:
+    /// the batcher, router and completer record `batch_wait`,
+    /// `batch_assembly`, `route`, `reconfig_stall` and `kernel_exec`
+    /// stages onto it as the request moves through the pipeline. The
+    /// caller keeps its own clone of the span — the breakdown is complete
+    /// by the time the reply receiver yields.
+    pub fn infer_async_spanned(
+        &self,
+        model: &str,
+        span: SpanCtx,
+        fill: impl FnOnce(&mut TensorWriter<'_>) -> std::result::Result<(), String>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
         if !self.metas.contains_key(model) {
             let known: Vec<&str> = self.metas.keys().map(String::as_str).collect();
             return Err(HsaError::Runtime(format!(
@@ -382,13 +409,15 @@ impl AsyncInferenceServer {
         }
         let (reply, rx) = mpsc::sync_channel(1);
         let now = Instant::now();
+        let late_marker = span.clone();
         let receipt = self
             .lanes
-            .submit(model, now, Request { enqueued: now, reply }, fill)
+            .submit(model, now, Request { enqueued: now, span, reply }, fill)
             .map_err(HsaError::Runtime)?;
         self.counters.on_submit();
         if receipt.late_join {
             self.counters.on_late_joins(1);
+            late_marker.annotate("late_join");
         }
         self.tx
             .send(Msg::Wake)
@@ -560,10 +589,24 @@ fn dispatch(
     inflight_tx: &mpsc::SyncSender<InFlight>,
     slots: &Slots,
 ) {
-    let TakenBatch { lane, model, capacity, items, mut data, bytes_copied, .. } = batch;
+    let TakenBatch { lane, model, capacity, items, mut data, bytes_copied, taken_at, .. } =
+        batch;
     // Overflow tails moved back to staging are real copies: surface them.
     counters.on_bytes_copied(bytes_copied);
-    let reqs: Vec<Request> = items.into_iter().map(|(r, _)| r).collect();
+    // Each member's batch_wait is its own arrival → the batch seal; the
+    // arrival instants are consumed here, so this is the last place the
+    // per-request queue wait can be attributed.
+    let reqs: Vec<Request> = items
+        .into_iter()
+        .map(|(r, arrived)| {
+            r.span.record_stage(
+                Stage::BatchWait,
+                taken_at.saturating_duration_since(arrived).as_micros() as u64,
+            );
+            r
+        })
+        .collect();
+    let traced = reqs.iter().any(|r| r.span.enabled());
     let info = match infos.get(&model) {
         Some(i) => i,
         None => {
@@ -576,6 +619,7 @@ fn dispatch(
     // rows themselves were decoded straight into `data` by the
     // submitters' TensorWriters — this is the first and only time the
     // batch's memory is touched by the serving pipeline.
+    let assembly_start = Instant::now();
     data.resize(capacity * info.in_elems, 0.0);
     let x = match Tensor::from_f32(&info.full_in_shape, data) {
         Ok(t) => t,
@@ -585,9 +629,25 @@ fn dispatch(
             return;
         }
     };
+    let assembly_us = assembly_start.elapsed().as_micros() as u64;
+    for r in &reqs {
+        r.span.record_stage(Stage::BatchAssembly, assembly_us);
+    }
+    let stall_us_base = if traced { session.reconfig_stats().stall_us } else { 0 };
+    let route_start = Instant::now();
     match session.run_async(&[(info.x_name.as_str(), x.clone())], &[info.out_name.as_str()])
     {
         Ok(pending) => {
+            let route_us = route_start.elapsed().as_micros() as u64;
+            let route_slot = pending.route_slot();
+            for r in &reqs {
+                r.span.record_stage(Stage::Route, route_us);
+                if r.span.enabled() {
+                    if let Some(slot) = route_slot {
+                        r.span.annotate(format!("route -> fpga agent {slot}"));
+                    }
+                }
+            }
             counters.on_batch_dispatch(reqs.len() as u64, capacity as u64);
             // The slot semaphore admits at most `depth` batches past this
             // point, so the send never blocks (channel capacity == depth).
@@ -599,6 +659,8 @@ fn dispatch(
                 x_name: info.x_name.clone(),
                 out_name: info.out_name.clone(),
                 lane,
+                dispatched_at: Instant::now(),
+                stall_us_base,
             }) {
                 // Completers are gone (server tearing down mid-dispatch).
                 slots.release();
@@ -720,12 +782,38 @@ fn completer_loop(
                 Err(_) => break,
             }
         };
-        let InFlight { reqs, pending, out_elems, x, x_name, out_name, lane } = inf;
+        let InFlight {
+            reqs,
+            pending,
+            out_elems,
+            x,
+            x_name,
+            out_name,
+            lane,
+            dispatched_at,
+            stall_us_base,
+        } = inf;
         let n = reqs.len();
         match wait_with_retry(&session, pending, &x, &x_name, &out_name).and_then(|outs| {
             outs[0].as_f32().map(|v| v.to_vec()).map_err(HsaError::from)
         }) {
             Ok(rows) => {
+                // Attribute the dispatch→retire window to the batch's
+                // spans: the whole window is kernel_exec, and the pool's
+                // stall-total delta over it is the (overlapping) ICAP
+                // reconfiguration share. Always emitted — a clean hit
+                // shows reconfig_stall = 0 rather than no span at all.
+                if reqs.iter().any(|r| r.span.enabled()) {
+                    let kernel_us = dispatched_at.elapsed().as_micros() as u64;
+                    let stall_us = session
+                        .reconfig_stats()
+                        .stall_us
+                        .saturating_sub(stall_us_base);
+                    for r in &reqs {
+                        r.span.record_stage(Stage::ReconfigStall, stall_us.min(kernel_us));
+                        r.span.record_stage(Stage::KernelExec, kernel_us);
+                    }
+                }
                 // Account the batch *before* delivering replies, so a
                 // caller who reads `report()` right after its reply
                 // arrives sees itself counted.

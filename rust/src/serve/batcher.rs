@@ -353,6 +353,10 @@ pub struct TakenBatch<T> {
     /// Bytes moved to carve an over-full lane's tail back into staging
     /// (only non-zero under overload, when arrivals outran the flusher).
     pub bytes_copied: u64,
+    /// When the batch was sealed — the end of every member's `batch_wait`
+    /// window (each row's is `taken_at - arrived`) and the start of batch
+    /// assembly.
+    pub taken_at: Instant,
 }
 
 struct LaneInner<T> {
@@ -579,6 +583,7 @@ impl<T> LaneSet<T> {
             data,
             late_joins,
             bytes_copied,
+            taken_at: Instant::now(),
         })
     }
 

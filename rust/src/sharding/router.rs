@@ -20,6 +20,7 @@ use crate::hsa::agent::Agent;
 use crate::hsa::queue::Queue;
 use crate::hsa::signal::Signal;
 use crate::reconfig::manager::ReconfigStats;
+use crate::trace::{EventKind, TraceRecorder};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -197,6 +198,10 @@ pub struct Router {
     zombies: Mutex<Vec<(Signal, RouteGuard)>>,
     /// Zombies whose late completion has been observed and discarded.
     zombies_reaped: AtomicU64,
+    /// Optional recorder for routing-decision annotations. Purely
+    /// observational: [`Router::pick`] never consults it, so tracing can
+    /// never perturb the (property-pinned) routing determinism.
+    trace: Option<TraceRecorder>,
 }
 
 impl Router {
@@ -237,7 +242,16 @@ impl Router {
             health,
             zombies: Mutex::new(Vec::new()),
             zombies_reaped: AtomicU64::new(0),
+            trace: None,
         }
+    }
+
+    /// Attach a trace recorder: every routing decision emits an
+    /// instantaneous annotation (strategy, chosen agent, quarantine skips)
+    /// onto the `router` track. Observational only — the decision itself
+    /// is made before the event is recorded and never depends on it.
+    pub fn set_trace(&mut self, trace: TraceRecorder) {
+        self.trace = Some(trace);
     }
 
     pub fn health_policy(&self) -> &HealthPolicy {
@@ -273,6 +287,24 @@ impl Router {
         slot.dispatches.fetch_add(1, Ordering::Relaxed);
         let now = slot.inflight.fetch_add(1, Ordering::AcqRel) + 1;
         slot.max_inflight.fetch_max(now, Ordering::AcqRel);
+        if let Some(tr) = &self.trace {
+            let skipped = self
+                .slots
+                .iter()
+                .filter(|s| s.quarantined.load(Ordering::Acquire))
+                .count();
+            let agent = &slot.agent.info().name;
+            let name = if skipped > 0 {
+                format!(
+                    "route[{}] -> {agent} (skipped {skipped} quarantined)",
+                    self.strategy.name(),
+                )
+            } else {
+                format!("route[{}] -> {agent}", self.strategy.name())
+            };
+            let ts = tr.now_us();
+            tr.record(EventKind::Dispatch, name, "router", i as u32, ts, 0);
+        }
         (
             i,
             slot.queue.clone(),

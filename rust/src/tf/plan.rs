@@ -585,6 +585,21 @@ impl ExecutionPlan {
         feeds: &HashMap<String, Tensor>,
         prefetch: PrefetchPolicy,
     ) -> Result<(Vec<Tensor>, RunStats)> {
+        self.replay_traced(env, feeds, prefetch, None)
+    }
+
+    /// [`replay_prefetched`](ExecutionPlan::replay_prefetched) plus
+    /// per-step dispatch tracing: with `trace` set to a recorder and a
+    /// track name, every placed dispatch emits one Chrome-trace event
+    /// (issue → harvest window, lane = the routed agent slot) onto that
+    /// track. `None` is byte-for-byte the untraced replay.
+    pub fn replay_traced(
+        &self,
+        env: &ExecEnv<'_>,
+        feeds: &HashMap<String, Tensor>,
+        prefetch: PrefetchPolicy,
+        trace: Option<(&crate::trace::TraceRecorder, &str)>,
+    ) -> Result<(Vec<Tensor>, RunStats)> {
         let t0 = Instant::now();
         let mut prefetcher = (prefetch.enabled && env.router.is_some())
             .then(|| PrefetchScheduler::new(prefetch));
@@ -613,6 +628,9 @@ impl ExecutionPlan {
             KernelArgs,
             Option<crate::sharding::RouteGuard>,
             Option<usize>,
+            // Issue timestamp (recorder-epoch µs; 0 when untraced) for the
+            // per-step dispatch event emitted at harvest.
+            u64,
         );
         let mut inflight: VecDeque<InFlightStep> = VecDeque::new();
         let mut done = 0usize;
@@ -660,7 +678,8 @@ impl ExecutionPlan {
                         }
                         let (sig, args) =
                             env.runtime.dispatch_async(&queue, *kernel_object, ins)?;
-                        inflight.push_back((i, sig, args, route, slot));
+                        let issued_us = trace.map_or(0, |(tr, _)| tr.now_us());
+                        inflight.push_back((i, sig, args, route, slot, issued_us));
                         if *device == DeviceType::Fpga {
                             fpga_cursor += 1;
                             if let (Some(p), Some(router)) =
@@ -682,7 +701,7 @@ impl ExecutionPlan {
             // completion signal in health-policy slices; a dispatch wedged
             // on (or failed by) a down agent is retried on an alternate
             // agent, bounded by max_retries and the dispatch deadline.
-            let (i, mut sig, mut args, mut route, mut slot) =
+            let (i, mut sig, mut args, mut route, mut slot, issued_us) =
                 inflight.pop_front().ok_or_else(|| {
                     HsaError::Runtime(
                         "plan replay stalled with no work in flight (internal)".into(),
@@ -776,6 +795,17 @@ impl ExecutionPlan {
                 slot = new_slot;
             };
             let step = &self.steps[i];
+            if let Some((tr, track)) = trace {
+                let now = tr.now_us();
+                tr.record(
+                    crate::trace::EventKind::Dispatch,
+                    step.name.clone(),
+                    track,
+                    slot.map_or(0, |s| s as u32),
+                    issued_us,
+                    now.saturating_sub(issued_us).max(1),
+                );
+            }
             let out = check_kernel_output(&step.name, &step.out_shape, outs)?;
             values[step.out_slot] = Some(out);
             complete(i, &self.steps, &mut remaining, &mut ready, &mut done);

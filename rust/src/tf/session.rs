@@ -395,6 +395,10 @@ pub struct Session {
     /// Predictive-reconfiguration policy applied to every plan replay and
     /// to the demand-driven warm paths (see [`Session::prefetch_hot`]).
     prefetch: PrefetchPolicy,
+    /// The recorder the session (and the FPGA agents, via `FpgaConfig`)
+    /// emits onto — request spans, plan dispatches and device events
+    /// share this one timeline.
+    trace: Option<crate::trace::TraceRecorder>,
 }
 
 impl Session {
@@ -512,11 +516,14 @@ impl Session {
             })
             .collect();
         queues.insert(DeviceType::Fpga, fpga_slots[0].1.clone());
-        let router = Router::with_health_policy(
+        let mut router = Router::with_health_policy(
             fpga_slots,
             opts.shard_strategy,
             opts.health.clone(),
         );
+        if let Some(tr) = &opts.trace {
+            router.set_trace(tr.clone());
+        }
         setup.hsa_bringup_us = t_hsa.elapsed().as_micros();
 
         let placement = place(
@@ -547,6 +554,7 @@ impl Session {
             plan_hits: AtomicU64::new(0),
             plan_compile_us: AtomicU64::new(0),
             prefetch: opts.prefetch,
+            trace: opts.trace.clone(),
         })
     }
 
@@ -593,7 +601,7 @@ impl Session {
             feeds.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
         let plan = self.cached_plan(&feeds, fetches)?;
         let env = ExecEnv { runtime: &self.runtime, queues: &self.queues, router: Some(&self.router) };
-        plan.replay_prefetched(&env, &feeds, self.prefetch)
+        plan.replay_traced(&env, &feeds, self.prefetch, self.trace.as_ref().map(|t| (t, "plan")))
     }
 
     /// The legacy interpreted path: topological walk, one blocking dispatch
@@ -861,6 +869,13 @@ impl Session {
     /// The FPGA dispatch router (pool membership, strategy, rollups).
     pub fn router(&self) -> &Router {
         &self.router
+    }
+
+    /// The session's trace recorder, when tracing is on — the shared
+    /// timeline that request spans, plan dispatches and device events
+    /// (reconfigurations, kernel executions) all land on.
+    pub fn trace(&self) -> Option<&crate::trace::TraceRecorder> {
+        self.trace.as_ref()
     }
 
     pub fn graph(&self) -> &Graph {

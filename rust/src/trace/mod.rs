@@ -12,10 +12,19 @@
 //! `TraceRecorder::to_chrome_trace` (or `write_to`) and load the file in
 //! Perfetto.
 //!
-//! Recording is lock-light (one mutex around an append-only event vec)
-//! and cheap enough to leave on in the serving path; it is opt-in per
-//! session regardless.
+//! Request-scoped spans ride the same recorder: the HTTP frontend mints a
+//! [`SpanCtx`] per request and the pipeline stages record their slice of
+//! the latency onto a `req:<id>` track, so requests and devices share one
+//! timeline (see [`span`]).
+//!
+//! Recording is lock-light (one mutex around a bounded ring) and cheap
+//! enough to leave on in the serving path as an always-on flight
+//! recorder: the ring caps memory, a dropped counter accounts for evicted
+//! events, and `TraceRecorder::to_chrome_trace_since` exports a recent
+//! window for `GET /v1/debug/trace?last_ms=N`.
 
 pub mod recorder;
+pub mod span;
 
 pub use recorder::{EventKind, TraceRecorder};
+pub use span::{SpanCtx, Stage};

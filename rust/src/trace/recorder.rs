@@ -3,11 +3,28 @@
 //! Events use the Trace Event Format's complete events (`"ph":"X"`): a
 //! name, a category, a start timestamp (µs) and a duration. Tracks map to
 //! the simulated devices ("pid" = device, "tid" = region/queue), so a
-//! reconfiguration appears as a block on its PR region's track.
+//! reconfiguration appears as a block on its PR region's track. Request
+//! spans land on per-request tracks (`req:<id>`) alongside the device
+//! lanes, so Perfetto shows each request aligned with the hardware
+//! timeline it rode on.
+//!
+//! The recorder doubles as an always-on flight recorder: storage is a
+//! bounded ring (capacity fixed at construction), so it can stay enabled
+//! under serving load indefinitely — the oldest events fall off the back
+//! and a dropped counter records how many did. Time-windowed export
+//! ([`TraceRecorder::to_chrome_trace_since`]) backs the
+//! `GET /v1/debug/trace?last_ms=N` endpoint.
 
+use std::collections::VecDeque;
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Default ring capacity. At the ~6 events a traced request emits, this
+/// holds the last ~10k requests — hours of low-qps serving, minutes of a
+/// load test — in a few MB.
+pub const DEFAULT_CAPACITY: usize = 65_536;
 
 /// Event categories.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,7 +67,9 @@ pub struct TraceRecorder {
 #[derive(Debug)]
 struct Inner {
     epoch: Instant,
-    events: Mutex<Vec<Event>>,
+    capacity: usize,
+    events: Mutex<VecDeque<Event>>,
+    dropped: AtomicU64,
 }
 
 impl Default for TraceRecorder {
@@ -61,14 +80,37 @@ impl Default for TraceRecorder {
 
 impl TraceRecorder {
     pub fn new() -> TraceRecorder {
+        TraceRecorder::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// Recorder whose ring holds at most `capacity` events (min 1). Once
+    /// full, each new event evicts the oldest and bumps the dropped
+    /// counter.
+    pub fn with_capacity(capacity: usize) -> TraceRecorder {
+        let capacity = capacity.max(1);
         TraceRecorder {
-            inner: Arc::new(Inner { epoch: Instant::now(), events: Mutex::new(Vec::new()) }),
+            inner: Arc::new(Inner {
+                epoch: Instant::now(),
+                capacity,
+                events: Mutex::new(VecDeque::with_capacity(capacity.min(1024))),
+                dropped: AtomicU64::new(0),
+            }),
         }
     }
 
     /// Current timestamp in µs since the recorder's epoch.
     pub fn now_us(&self) -> u64 {
         self.inner.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Ring capacity (events retained before the oldest are evicted).
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Events evicted from the ring since construction.
+    pub fn dropped(&self) -> u64 {
+        self.inner.dropped.load(Ordering::Relaxed)
     }
 
     /// Record a complete event with explicit timing.
@@ -81,7 +123,12 @@ impl TraceRecorder {
         start_us: u64,
         dur_us: u64,
     ) {
-        self.inner.events.lock().unwrap().push(Event {
+        let mut events = self.inner.events.lock().unwrap();
+        if events.len() >= self.inner.capacity {
+            events.pop_front();
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        events.push_back(Event {
             name: name.into(),
             kind,
             track: track.into(),
@@ -114,9 +161,22 @@ impl TraceRecorder {
 
     /// Export as Chrome Trace Event Format JSON.
     pub fn to_chrome_trace(&self) -> String {
+        self.to_chrome_trace_since(0)
+    }
+
+    /// Chrome-trace export restricted to events still running at or after
+    /// `cutoff_us` (recorder-epoch µs): an event is kept when
+    /// `start_us + dur_us >= cutoff_us`. Track pids stay stable within one
+    /// export (sorted track order), and metadata is only emitted for
+    /// tracks that survive the window.
+    pub fn to_chrome_trace_since(&self, cutoff_us: u64) -> String {
         let events = self.inner.events.lock().unwrap();
+        let window: Vec<&Event> = events
+            .iter()
+            .filter(|e| e.start_us.saturating_add(e.dur_us) >= cutoff_us)
+            .collect();
         // Stable pid mapping per track name.
-        let mut tracks: Vec<&str> = events.iter().map(|e| e.track.as_str()).collect();
+        let mut tracks: Vec<&str> = window.iter().map(|e| e.track.as_str()).collect();
         tracks.sort();
         tracks.dedup();
         let pid_of = |t: &str| tracks.iter().position(|x| *x == t).unwrap() + 1;
@@ -133,7 +193,7 @@ impl TraceRecorder {
                 crate::util::json::Json::Str(t.to_string())
             );
         }
-        for e in events.iter() {
+        for e in &window {
             let _ = write!(
                 out,
                 ",{{\"ph\":\"X\",\"pid\":{},\"tid\":{},\"ts\":{},\"dur\":{},\"cat\":\"{}\",\"name\":{}}}",
@@ -167,6 +227,7 @@ mod tests {
         tr.record(EventKind::Dispatch, "fc", "fpga", 0, 10, 5);
         tr.record(EventKind::Reconfig, "role3", "fpga", 1, 15, 7425);
         assert_eq!(tr.len(), 2);
+        assert_eq!(tr.dropped(), 0);
     }
 
     #[test]
@@ -239,5 +300,91 @@ mod tests {
         }
         assert_eq!(tr.len(), 400);
         Json::parse(&tr.to_chrome_trace()).expect("valid json");
+    }
+
+    #[test]
+    fn ring_caps_memory_and_counts_drops() {
+        // Regression for unbounded growth under serving load: flood well
+        // past the cap and check that the ring holds exactly `cap` events,
+        // every older event was counted as dropped, and the survivors are
+        // the newest ones.
+        let cap = 64;
+        let tr = TraceRecorder::with_capacity(cap);
+        for i in 0..1000u64 {
+            tr.record(EventKind::Custom, format!("e{i}"), "t", 0, i, 1);
+        }
+        assert_eq!(tr.len(), cap);
+        assert_eq!(tr.dropped(), 1000 - cap as u64);
+        assert_eq!(tr.capacity(), cap);
+        let doc = Json::parse(&tr.to_chrome_trace()).unwrap();
+        let starts: Vec<usize> = doc
+            .get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .map(|e| e.get("ts").as_usize().unwrap())
+            .collect();
+        assert_eq!(starts.len(), cap);
+        assert_eq!(*starts.iter().min().unwrap(), 1000 - cap);
+        assert_eq!(*starts.iter().max().unwrap(), 999);
+    }
+
+    #[test]
+    fn windowed_export_keeps_only_recent_events() {
+        let tr = TraceRecorder::new();
+        tr.record(EventKind::Custom, "old", "t", 0, 0, 10); // ends at 10
+        tr.record(EventKind::Custom, "recent", "t", 0, 500, 10); // ends at 510
+        let doc = Json::parse(&tr.to_chrome_trace_since(100)).unwrap();
+        let names: Vec<&str> = doc
+            .get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .filter_map(|e| e.get("name").as_str())
+            .collect();
+        assert_eq!(names, vec!["recent"]);
+        // An event still running at the cutoff is kept.
+        let doc = Json::parse(&tr.to_chrome_trace_since(505)).unwrap();
+        let n = doc
+            .get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .count();
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn names_with_escapes_and_control_chars_stay_parseable() {
+        // The util::json parser is the oracle: every hostile name must
+        // round-trip through the Chrome-trace export.
+        let hostile = [
+            "back\\slash",
+            "quote\"inside",
+            "newline\nhere",
+            "tab\there",
+            "ctrl\u{1}char",
+            "mixed \"\\\n\t\u{2} soup",
+        ];
+        let tr = TraceRecorder::new();
+        for (i, name) in hostile.iter().enumerate() {
+            tr.record(EventKind::Custom, *name, "t", i as u32, i as u64, 1);
+        }
+        let doc = Json::parse(&tr.to_chrome_trace()).expect("hostile names must stay valid JSON");
+        let names: Vec<String> = doc
+            .get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .filter_map(|e| e.get("name").as_str().map(|s| s.to_string()))
+            .collect();
+        assert_eq!(names.len(), hostile.len());
+        for (got, want) in names.iter().zip(hostile.iter()) {
+            assert_eq!(got, want, "name must round-trip exactly");
+        }
     }
 }

@@ -1,0 +1,265 @@
+//! Request-scoped span context: the thread that connects one inference —
+//! from HTTP accept to kernel retire — across the admission gate, the
+//! batcher, the router, and the completer.
+//!
+//! A [`SpanCtx`] is a cheap clone-and-share handle (an `Arc` around the
+//! request id, a [`TraceRecorder`] and the accumulated stage timings).
+//! Pipeline stages call [`SpanCtx::record_stage`] as they finish their
+//! part of the work; each call both appends to the span's private stage
+//! list (for the `X-Timing` header and the slow-request log) and emits a
+//! Chrome-trace event on the request's own track (`req:<id>`), so a
+//! Perfetto load shows the request as a lane aligned with the device
+//! timeline the same recorder carries.
+//!
+//! `SpanCtx::disabled()` is a no-op handle: every method is a cheap
+//! branch on `None`, so untraced paths (internal warmup, benches with
+//! tracing off) pay a single pointer-sized `Option` per request.
+
+use crate::trace::recorder::{EventKind, TraceRecorder};
+use std::sync::{Arc, Mutex};
+
+/// The per-request pipeline stages the serving stack attributes latency
+/// to. Names are the Prometheus/`X-Timing` identifiers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Admission-control time: rate-limiter + pending-gate + request
+    /// parse, before the request enters a batching lane.
+    AdmissionWait,
+    /// Arrival in a lane until the batch containing this request was
+    /// taken for dispatch (queue + deadline wait; late joins shorten it).
+    BatchWait,
+    /// Sealing the taken batch: padding, tensor construction.
+    BatchAssembly,
+    /// Submitting the sealed batch to the session (placement + shard
+    /// routing + async dispatch).
+    Route,
+    /// ICAP reconfiguration time exposed on this request's critical path
+    /// (a subset of [`Stage::KernelExec`]'s window, 0 on a clean hit).
+    ReconfigStall,
+    /// Dispatch to completion: kernel execution plus completion wait.
+    KernelExec,
+    /// Encoding the reply body (JSON / base64 / binary tensor).
+    ReplySerialize,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 7] = [
+        Stage::AdmissionWait,
+        Stage::BatchWait,
+        Stage::BatchAssembly,
+        Stage::Route,
+        Stage::ReconfigStall,
+        Stage::KernelExec,
+        Stage::ReplySerialize,
+    ];
+
+    /// Stable snake_case identifier (Prometheus metric suffix, `X-Timing`
+    /// key, trace event name).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::AdmissionWait => "admission_wait",
+            Stage::BatchWait => "batch_wait",
+            Stage::BatchAssembly => "batch_assembly",
+            Stage::Route => "route",
+            Stage::ReconfigStall => "reconfig_stall",
+            Stage::KernelExec => "kernel_exec",
+            Stage::ReplySerialize => "reply_serialize",
+        }
+    }
+
+    /// Whether the stage is a disjoint slice of the request's wall time.
+    /// `ReconfigStall` overlaps `KernelExec` (it attributes a subset of
+    /// that window), so end-to-end reconciliation sums only the disjoint
+    /// stages.
+    pub fn disjoint(self) -> bool {
+        !matches!(self, Stage::ReconfigStall)
+    }
+
+    fn kind(self) -> EventKind {
+        match self {
+            Stage::KernelExec => EventKind::KernelExec,
+            Stage::ReconfigStall => EventKind::Reconfig,
+            _ => EventKind::Custom,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct SpanInner {
+    id: String,
+    track: String,
+    recorder: TraceRecorder,
+    stages: Mutex<Vec<(Stage, u64)>>,
+}
+
+/// Shared per-request span handle; see the module docs. `Default` is the
+/// disabled no-op handle.
+#[derive(Debug, Clone, Default)]
+pub struct SpanCtx {
+    inner: Option<Arc<SpanInner>>,
+}
+
+impl SpanCtx {
+    /// A no-op handle: all recording methods return immediately.
+    pub fn disabled() -> SpanCtx {
+        SpanCtx { inner: None }
+    }
+
+    /// A live span for request `id`, emitting onto `recorder`.
+    pub fn new(id: impl Into<String>, recorder: TraceRecorder) -> SpanCtx {
+        let id = id.into();
+        let track = format!("req:{id}");
+        SpanCtx {
+            inner: Some(Arc::new(SpanInner {
+                id,
+                track,
+                recorder,
+                stages: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    pub fn id(&self) -> Option<&str> {
+        self.inner.as_deref().map(|i| i.id.as_str())
+    }
+
+    /// The request's trace track name (`req:<id>`).
+    pub fn track(&self) -> Option<&str> {
+        self.inner.as_deref().map(|i| i.track.as_str())
+    }
+
+    /// Recorder-epoch timestamp, or 0 when disabled.
+    pub fn now_us(&self) -> u64 {
+        self.inner.as_deref().map_or(0, |i| i.recorder.now_us())
+    }
+
+    /// Record a stage that ends now and lasted `dur_us`: appends to the
+    /// span's breakdown and emits a trace event on the request track.
+    pub fn record_stage(&self, stage: Stage, dur_us: u64) {
+        if let Some(inner) = &self.inner {
+            inner.stages.lock().unwrap().push((stage, dur_us));
+            inner
+                .recorder
+                .record_ending_now(stage.kind(), stage.name(), inner.track.clone(), 0, dur_us);
+        }
+    }
+
+    /// Record a stage with an explicit start (recorder-epoch µs) — for
+    /// stages whose window was captured earlier than it is reported.
+    pub fn record_stage_at(&self, stage: Stage, start_us: u64, dur_us: u64) {
+        if let Some(inner) = &self.inner {
+            inner.stages.lock().unwrap().push((stage, dur_us));
+            inner
+                .recorder
+                .record(stage.kind(), stage.name(), inner.track.clone(), 0, start_us, dur_us);
+        }
+    }
+
+    /// Drop an instantaneous annotation (e.g. the routing decision) onto
+    /// the request track without contributing to the stage breakdown.
+    pub fn annotate(&self, name: impl Into<String>) {
+        if let Some(inner) = &self.inner {
+            let now = inner.recorder.now_us();
+            inner
+                .recorder
+                .record(EventKind::Custom, name, inner.track.clone(), 0, now, 0);
+        }
+    }
+
+    /// Snapshot of the stage breakdown recorded so far, in record order.
+    pub fn stages(&self) -> Vec<(Stage, u64)> {
+        self.inner
+            .as_deref()
+            .map_or_else(Vec::new, |i| i.stages.lock().unwrap().clone())
+    }
+
+    /// Sum of all disjoint stage durations (see [`Stage::disjoint`]).
+    pub fn stage_total_us(&self) -> u64 {
+        self.stages()
+            .iter()
+            .filter(|(s, _)| s.disjoint())
+            .map(|(_, d)| d)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn disabled_span_is_inert() {
+        let span = SpanCtx::disabled();
+        assert!(!span.enabled());
+        assert_eq!(span.id(), None);
+        span.record_stage(Stage::Route, 10);
+        span.annotate("route -> agent 0");
+        assert!(span.stages().is_empty());
+        assert_eq!(span.stage_total_us(), 0);
+    }
+
+    #[test]
+    fn stages_accumulate_and_emit_on_the_request_track() {
+        let tr = TraceRecorder::new();
+        let span = SpanCtx::new("req-1", tr.clone());
+        span.record_stage(Stage::AdmissionWait, 5);
+        span.record_stage(Stage::BatchWait, 100);
+        span.record_stage(Stage::ReconfigStall, 40);
+        span.record_stage(Stage::KernelExec, 60);
+        assert_eq!(span.stages().len(), 4);
+        // reconfig_stall overlaps kernel_exec, so it is excluded from the
+        // disjoint total.
+        assert_eq!(span.stage_total_us(), 165);
+        let doc = Json::parse(&tr.to_chrome_trace()).unwrap();
+        let events = doc.get("traceEvents").as_arr().unwrap().clone();
+        let on_track = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("M"))
+            .filter_map(|e| e.get("args").get("name").as_str())
+            .any(|n| n == "req:req-1");
+        assert!(on_track, "request track metadata must be present");
+        let names: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .filter_map(|e| e.get("name").as_str())
+            .collect();
+        assert!(names.contains(&"admission_wait"));
+        assert!(names.contains(&"kernel_exec"));
+    }
+
+    #[test]
+    fn clones_share_the_breakdown() {
+        // The HTTP handler's clone must see stages the pipeline threads
+        // recorded on theirs.
+        let span = SpanCtx::new("req-2", TraceRecorder::new());
+        let pipeline_side = span.clone();
+        std::thread::spawn(move || {
+            pipeline_side.record_stage(Stage::KernelExec, 77);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(span.stages(), vec![(Stage::KernelExec, 77)]);
+    }
+
+    #[test]
+    fn stage_names_are_stable_identifiers() {
+        let names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "admission_wait",
+                "batch_wait",
+                "batch_assembly",
+                "route",
+                "reconfig_stall",
+                "kernel_exec",
+                "reply_serialize",
+            ]
+        );
+    }
+}

@@ -689,3 +689,121 @@ fn structured_error_bodies_name_endpoint_and_meta() {
     drop(client);
     server.shutdown();
 }
+
+// ---------------------------------------------------------------------------
+// Request-scoped tracing acceptance: one traced predict yields an echoed
+// request id, a flight-recorder window whose stage spans account for the
+// measured end-to-end latency, and non-zero per-stage Prometheus
+// histograms on /metrics.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn traced_request_spans_cover_e2e_latency_and_feed_histograms() {
+    use tf_fpga::util::json::Json;
+
+    // A batch window wide enough that batch_wait dominates the request:
+    // a lone request sits out the full max_delay in its lane, so most of
+    // the end-to-end latency is time the span breakdown must account for.
+    let mut server = start_http(
+        vec![ModelSpec::from_bundle("tiny", ModelBundle::tiny_fc_demo(4, 16, 4), policy(4, 25))],
+        SessionOptions { dispatch_workers: 2, ..SessionOptions::native_only() },
+        2,
+        HttpServerConfig {
+            // Exercise the slow-request log path too: every request over
+            // 1ms logs its breakdown to stderr.
+            slow_request: Duration::from_millis(1),
+            ..HttpServerConfig::default()
+        },
+    );
+    let addr = server.local_addr();
+    let mut client = NetClient::connect(addr).unwrap();
+
+    let sample: Vec<f32> = (0..16).map(|i| i as f32 * 0.11 - 0.9).collect();
+    let started = Instant::now();
+    let resp = client
+        .predict(
+            "tiny",
+            &[sample.as_slice()],
+            &[("X-Request-Id", "trace-me-1"), ("X-Debug-Timing", "1")],
+        )
+        .unwrap();
+    let e2e_us = started.elapsed().as_micros() as u64;
+    assert_eq!(resp.status, 200, "{}", resp.body);
+
+    // (a) The inbound id is echoed, and the opt-in X-Timing header
+    // carries a per-stage breakdown ending in the total.
+    assert_eq!(resp.request_id(), Some("trace-me-1"));
+    let timing = resp.timing().expect("X-Timing header");
+    let total = timing.iter().find(|(k, _)| k == "total").expect("total entry").1;
+    assert!(total <= e2e_us, "server total {total}us inside client e2e {e2e_us}us");
+    for stage in ["admission_wait", "batch_wait", "kernel_exec", "reply_serialize"] {
+        assert!(timing.iter().any(|(k, _)| k == stage), "missing {stage} in {timing:?}");
+    }
+
+    // (b) The flight recorder holds the request's track with every
+    // pipeline stage; the disjoint stages sum to within 20% of the
+    // measured end-to-end latency.
+    let trace = client.get("/v1/debug/trace").unwrap();
+    assert_eq!(trace.status, 200);
+    let doc = Json::parse(&trace.body).expect("chrome-trace JSON parses");
+    let events = doc.get("traceEvents").as_arr().expect("traceEvents array");
+    let req_pid = events
+        .iter()
+        .find(|e| {
+            e.get("ph").as_str() == Some("M")
+                && e.get("args").get("name").as_str() == Some("req:trace-me-1")
+        })
+        .and_then(|e| e.get("pid").as_usize())
+        .expect("request track registered");
+    let spans: Vec<(&str, u64)> = events
+        .iter()
+        .filter(|e| {
+            e.get("ph").as_str() == Some("X") && e.get("pid").as_usize() == Some(req_pid)
+        })
+        .filter_map(|e| Some((e.get("name").as_str()?, e.get("dur").as_usize()? as u64)))
+        .collect();
+    let disjoint = [
+        "admission_wait",
+        "batch_wait",
+        "batch_assembly",
+        "route",
+        "kernel_exec",
+        "reply_serialize",
+    ];
+    for stage in disjoint.iter().chain(&["reconfig_stall"]) {
+        assert!(spans.iter().any(|(n, _)| n == stage), "missing {stage} span in {spans:?}");
+    }
+    let span_sum: u64 = spans
+        .iter()
+        .filter(|(n, _)| disjoint.contains(n))
+        .map(|&(_, dur)| dur)
+        .sum();
+    let (lo, hi) = ((e2e_us as f64 * 0.8) as u64, (e2e_us as f64 * 1.2) as u64);
+    assert!(
+        (lo..=hi).contains(&span_sum),
+        "disjoint span sum {span_sum}us outside 20% of e2e {e2e_us}us ({spans:?})"
+    );
+
+    // (c) The per-stage Prometheus histograms saw the request.
+    let metrics = client.get("/metrics").unwrap();
+    assert_eq!(metrics.status, 200);
+    for stage in ["admission_wait", "batch_wait", "kernel_exec", "reply_serialize"] {
+        let prefix = format!("tf_fpga_stage_latency_us_count{{stage=\"{stage}\"}}");
+        let count = metric_value(&metrics.body, &prefix).unwrap_or(0);
+        assert!(count >= 1, "{prefix} is zero:\n{}", metrics.body);
+    }
+    assert!(
+        metrics.body.contains("tf_fpga_stage_latency_us_bucket{stage=\"batch_wait\",le=\"+Inf\"}"),
+        "{}",
+        metrics.body
+    );
+
+    // A zero-width window (`last_ms=0`) still parses; completed spans
+    // fall outside it.
+    let windowed = client.get("/v1/debug/trace?last_ms=0").unwrap();
+    assert_eq!(windowed.status, 200);
+    Json::parse(&windowed.body).expect("windowed export parses");
+
+    drop(client);
+    server.shutdown();
+}
